@@ -1,0 +1,76 @@
+//! Web-crawl reachability: BFS-based frontier analysis on a uniform random
+//! graph, comparing all three distributed BFS engines plus weighted SSSP
+//! (latency-weighted crawl cost).
+//!
+//! ```bash
+//! cargo run --release --example web_crawl_bfs
+//! ```
+
+use nwgraph_hpx::algorithms::{bfs, sssp};
+use nwgraph_hpx::amt::SimConfig;
+use nwgraph_hpx::graph::{generators, DistGraph};
+
+fn main() {
+    let g = generators::urand(13, 8, 99);
+    let dist = DistGraph::block(&g, 8);
+    let sim = SimConfig::default();
+    let root = 0;
+
+    println!("crawl graph: urand13 — n={} m={}", g.n(), g.m());
+
+    // Frontier profile from the level-synchronous engine (true BFS levels).
+    let res = bfs::level_sync::run(&dist, root, sim.clone());
+    let levels = bfs::tree_levels(root, &res.parents);
+    let max_lvl = levels.iter().cloned().max().unwrap_or(0);
+    println!("\nfrontier profile (the irregular workload of paper §4.1):");
+    for lvl in 0..=max_lvl {
+        let count = levels.iter().filter(|&&l| l == lvl).count();
+        let bar = "#".repeat((count * 60 / g.n()).max(usize::from(count > 0)));
+        println!("  level {lvl:>2}: {count:>7} {bar}");
+    }
+    let unreached = levels.iter().filter(|&&l| l < 0).count();
+    println!("  unreachable: {unreached}");
+
+    // Engine comparison on the same traversal.
+    println!("\nengine comparison (8 localities):");
+    let hpx_sim = SimConfig {
+        aggregate_sends: true,
+        coalesce_window_us: 5.0,
+        ..SimConfig::default()
+    };
+    let a = bfs::async_hpx::run(&dist, root, hpx_sim);
+    let b = bfs::level_sync::run(&dist, root, sim.clone());
+    let (d, td, bu) = bfs::direction_opt::run_with_params(&dist, root, sim.clone(), 14.0, 24.0);
+    for (name, r) in [("async (HPX)", &a), ("level-sync (BGL)", &b), ("direction-opt", &d)] {
+        println!(
+            "  {name:<18} {:>9.2} ms  msgs={:<8} envs={:<6} barriers={}",
+            r.report.makespan_us / 1e3,
+            r.report.net.messages,
+            r.report.net.envelopes,
+            r.report.barriers
+        );
+    }
+    println!("  direction-opt rounds: {td} top-down, {bu} bottom-up");
+    for r in [&a, &b, &d] {
+        bfs::validate_parents(&g, root, &r.parents).expect("invalid BFS tree");
+    }
+
+    // Latency-weighted crawl: SSSP with random per-link latencies.
+    let gw = generators::with_random_weights(&g, 5.0, 150.0, 7);
+    let s = sssp::run_async(&gw, &dist, root, sim);
+    let reachable: Vec<f32> = s.dist.iter().cloned().filter(|d| d.is_finite()).collect();
+    let mean = reachable.iter().sum::<f32>() / reachable.len() as f32;
+    let max = reachable.iter().cloned().fold(0.0f32, f32::max);
+    println!(
+        "\nlatency-weighted crawl (SSSP): mean cost {mean:.1}, max {max:.1}, \
+         modeled {:.2} ms",
+        s.report.makespan_us / 1e3
+    );
+    let want = sssp::dijkstra(&gw, root);
+    assert!(s
+        .dist
+        .iter()
+        .zip(&want)
+        .all(|(a, b)| (a.is_infinite() && b.is_infinite()) || (a - b).abs() < 1e-3));
+    println!("SSSP validated against Dijkstra oracle");
+}

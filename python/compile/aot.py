@@ -1,0 +1,105 @@
+"""AOT: lower the L2 jax functions to HLO *text* artifacts for the rust runtime.
+
+Interchange format is HLO text, NOT a serialized ``HloModuleProto``: jax
+>= 0.5 emits protos with 64-bit instruction ids which the ``xla`` crate's
+bundled xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``).  The text
+parser reassigns ids and round-trips cleanly (see /opt/xla-example).
+
+Each (kind, n_global, n_rows, max_deg) config becomes one self-contained
+module ``artifacts/<kind>_g<G>_r<R>_d<D>.hlo.txt``; ``artifacts/manifest.txt``
+lists them all and is the rust side's discovery point
+(``runtime::artifact::Manifest``).
+
+Run as ``python -m compile.aot --out-dir ../artifacts`` (the Makefile does).
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+
+from jax._src.lib import xla_client as xc
+
+from compile import model
+
+# Shape registry — every config the rust coordinator may request.  The
+# kernel-offload path pads a shard to the smallest covering config; the
+# plain rust path has no shape constraint.  Keep this list in sync with
+# rust/src/runtime/artifact.rs expectations (parsed from the manifest, so
+# adding configs here is enough).
+PAGERANK_CONFIGS = [
+    # (n_global, n_rows, max_deg)
+    (1024, 1024, 16),
+    (4096, 4096, 32),
+    (4096, 2048, 32),
+    (4096, 1024, 32),
+    (16384, 16384, 32),
+    (16384, 8192, 32),
+    (16384, 4096, 32),
+    (16384, 2048, 32),
+    (65536, 65536, 32),
+    (65536, 32768, 32),
+    (65536, 16384, 32),
+    (65536, 8192, 32),
+]
+
+BFS_CONFIGS = [
+    (1024, 1024, 16),
+    (4096, 4096, 32),
+    (4096, 2048, 32),
+    (4096, 1024, 32),
+    (16384, 16384, 32),
+    (16384, 8192, 32),
+    (16384, 4096, 32),
+    (16384, 2048, 32),
+]
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO MLIR -> XlaComputation -> HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def emit(out_dir: str) -> None:
+    os.makedirs(out_dir, exist_ok=True)
+    manifest_lines = [
+        "# kind n_global n_rows max_deg tile_rows file",
+    ]
+
+    def one(kind, lower_fn, g, r, d):
+        tile = model._pick_tile_rows(r)
+        name = f"{kind}_g{g}_r{r}_d{d}.hlo.txt"
+        path = os.path.join(out_dir, name)
+        text = to_hlo_text(lower_fn(g, r, d))
+        with open(path, "w") as f:
+            f.write(text)
+        manifest_lines.append(f"{kind} {g} {r} {d} {tile} {name}")
+        print(f"  {name}: {len(text)} chars", flush=True)
+
+    print("lowering pagerank configs...", flush=True)
+    for g, r, d in PAGERANK_CONFIGS:
+        one("pagerank", model.lower_pagerank, g, r, d)
+    print("lowering bfs configs...", flush=True)
+    for g, r, d in BFS_CONFIGS:
+        one("bfs", model.lower_bfs, g, r, d)
+
+    with open(os.path.join(out_dir, "manifest.txt"), "w") as f:
+        f.write("\n".join(manifest_lines) + "\n")
+    print(f"wrote {len(manifest_lines) - 1} artifacts to {out_dir}")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts",
+                    help="artifact output directory")
+    args = ap.parse_args()
+    emit(args.out_dir)
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,86 @@
+"""L1 Pallas kernel: bitmap frontier expansion for level-synchronous BFS.
+
+The BSP/PBGL-style baseline expands a whole frontier level at once.  Per
+locality and per level the work is: for every owned vertex ``u`` not yet
+visited, check whether any in-neighbor is in the current frontier; if so,
+``u`` joins the next frontier and records one frontier neighbor as parent.
+
+With the shard in the same masked-ELL layout as the PageRank kernel this is
+a gather + masked-reduce over the slot axis:
+
+    hit[i, j]  = frontier[cols[i, j]] * mask[i, j]
+    next[i]    = (max_j hit[i, j] > 0) && !visited[i]
+    parent[i]  = cols[i, argmax_j hit[i, j]]        (only valid when next[i])
+
+Everything is carried as f32/i32 bitmaps so a single HLO module covers the
+level step.  interpret=True for CPU-PJRT executability (see pagerank_ell).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_TILE_ROWS = 1024
+
+
+def _frontier_kernel(frontier_ref, visited_ref, cols_ref, mask_ref,
+                     next_ref, parent_ref):
+    frontier = frontier_ref[...]        # (n_global,) f32 bitmap
+    visited = visited_ref[...]          # (tile_rows,) f32 bitmap
+    cols = cols_ref[...]                # (tile_rows, max_deg) i32
+    mask = mask_ref[...]                # (tile_rows, max_deg) f32
+    hit = frontier[cols] * mask         # (tile_rows, max_deg)
+    any_hit = jnp.max(hit, axis=1)      # > 0 iff some frontier in-neighbor
+    nxt = jnp.where(any_hit > 0.0, 1.0, 0.0) * (1.0 - visited)
+    # Parent = the column of the first maximal hit; -1 when not discovered.
+    best = jnp.argmax(hit, axis=1)
+    parent = jnp.take_along_axis(cols, best[:, None], axis=1)[:, 0]
+    parent_ref[...] = jnp.where(nxt > 0.0, parent, -1).astype(jnp.int32)
+    next_ref[...] = nxt
+
+
+@functools.partial(jax.jit, static_argnames=("tile_rows",))
+def frontier_expand(frontier, visited, cols, mask, *,
+                    tile_rows=DEFAULT_TILE_ROWS):
+    """One BFS level for one shard.
+
+    Args:
+      frontier: f32[n_global] current-frontier bitmap (global index space).
+      visited:  f32[n_rows] visited bitmap for the owned vertices.
+      cols:     i32[n_rows, max_deg] in-neighbor ELL columns (global ids).
+      mask:     f32[n_rows, max_deg] slot validity.
+      tile_rows: grid tile height; must divide n_rows.
+
+    Returns:
+      (next_frontier: f32[n_rows], parent: i32[n_rows]) — next-frontier
+      bitmap over owned vertices and the discovered parent (-1 when the
+      vertex was not discovered at this level).
+    """
+    n_rows, max_deg = cols.shape
+    if n_rows % tile_rows != 0:
+        raise ValueError(f"n_rows={n_rows} not divisible by tile_rows={tile_rows}")
+    n_global = frontier.shape[0]
+    grid = (n_rows // tile_rows,)
+    return pl.pallas_call(
+        _frontier_kernel,
+        out_shape=(
+            jax.ShapeDtypeStruct((n_rows,), jnp.float32),
+            jax.ShapeDtypeStruct((n_rows,), jnp.int32),
+        ),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((n_global,), lambda i: (0,)),
+            pl.BlockSpec((tile_rows,), lambda i: (i,)),
+            pl.BlockSpec((tile_rows, max_deg), lambda i: (i, 0)),
+            pl.BlockSpec((tile_rows, max_deg), lambda i: (i, 0)),
+        ],
+        out_specs=(
+            pl.BlockSpec((tile_rows,), lambda i: (i,)),
+            pl.BlockSpec((tile_rows,), lambda i: (i,)),
+        ),
+        interpret=True,
+    )(frontier, visited, cols, mask)

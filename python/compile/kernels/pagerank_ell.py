@@ -1,0 +1,118 @@
+"""L1 Pallas kernel: masked-ELL gather-accumulate for PageRank.
+
+The per-locality hot loop of distributed PageRank is the rank-update phase
+(paper §4.2): after contributions ``contrib[v] = rank[v] / out_deg[v]`` have
+been exchanged, each locality computes, for every owned vertex ``u``,
+
+    z[u] = sum_{v in N_in(u)} contrib[v]
+
+i.e. an SpMV with the transposed local adjacency shard.  For static HLO
+shapes the shard is stored in ELLPACK form: every row-tile has a fixed
+``max_deg`` slot count, padded entries carry ``mask == 0`` and point at
+column 0.
+
+The kernel is blocked over row tiles: one grid step loads one
+``(TILE_ROWS, MAX_DEG)`` tile of column indices + mask into VMEM together
+with the full contribution vector slice, gathers, masks, and reduces along
+the slot axis.  On a real TPU this schedule keeps the index tile + gathered
+values VMEM-resident (BlockSpec below expresses exactly that HBM->VMEM
+movement); the multiply-accumulate maps onto the VPU.  ``interpret=True``
+is mandatory here: the CPU PJRT client cannot execute Mosaic custom-calls,
+and interpret mode lowers to plain HLO that round-trips through the rust
+runtime (see /opt/xla-example/README.md).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Default tile geometry.  TILE_ROWS is sized so that
+#   cols tile  (TILE_ROWS * MAX_DEG * 4 B)
+# + mask tile  (TILE_ROWS * MAX_DEG * 4 B)
+# + gathered   (TILE_ROWS * MAX_DEG * 4 B)
+# stays well under ~16 MiB VMEM even at MAX_DEG=64 (3 MiB at 4096x64).
+DEFAULT_TILE_ROWS = 1024
+
+
+def _ell_gather_kernel(contrib_ref, cols_ref, mask_ref, z_ref):
+    """One row-tile: z[i] = sum_j contrib[cols[i, j]] * mask[i, j]."""
+    contrib = contrib_ref[...]          # (n_global,) f32, VMEM-resident slice
+    cols = cols_ref[...]                # (tile_rows, max_deg) i32
+    mask = mask_ref[...]                # (tile_rows, max_deg) f32 in {0, 1}
+    gathered = contrib[cols]            # advanced indexing == gather
+    z_ref[...] = jnp.sum(gathered * mask, axis=1)
+
+
+@functools.partial(jax.jit, static_argnames=("tile_rows",))
+def ell_gather(contrib, cols, mask, *, tile_rows=DEFAULT_TILE_ROWS):
+    """Masked ELL SpMV: z = (A_ell @ contrib) with A given as (cols, mask).
+
+    Args:
+      contrib: f32[n_global] global contribution vector (zero-padded).
+      cols:    i32[n_rows, max_deg] column indices, padded slots -> 0.
+      mask:    f32[n_rows, max_deg] 1.0 for real slots, 0.0 for padding.
+      tile_rows: grid tile height; must divide n_rows.
+
+    Returns:
+      f32[n_rows] accumulated in-neighbor contributions.
+    """
+    n_rows, max_deg = cols.shape
+    if n_rows % tile_rows != 0:
+        raise ValueError(f"n_rows={n_rows} not divisible by tile_rows={tile_rows}")
+    n_global = contrib.shape[0]
+    grid = (n_rows // tile_rows,)
+    return pl.pallas_call(
+        _ell_gather_kernel,
+        out_shape=jax.ShapeDtypeStruct((n_rows,), jnp.float32),
+        grid=grid,
+        in_specs=[
+            # Contribution vector: whole thing every grid step (the gather
+            # may touch any global vertex).
+            pl.BlockSpec((n_global,), lambda i: (0,)),
+            pl.BlockSpec((tile_rows, max_deg), lambda i: (i, 0)),
+            pl.BlockSpec((tile_rows, max_deg), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((tile_rows,), lambda i: (i,)),
+        interpret=True,  # CPU PJRT cannot run Mosaic custom-calls.
+    )(contrib, cols, mask)
+
+
+def _rank_update_kernel(z_ref, old_ref, base_ref, alpha_ref, new_ref, delta_ref):
+    """rank_new = base + alpha * z;  delta = sum |rank_new - rank_old|."""
+    z = z_ref[...]
+    old = old_ref[...]
+    base = base_ref[0]
+    alpha = alpha_ref[0]
+    new = base + alpha * z
+    new_ref[...] = new
+    delta_ref[0] = jnp.sum(jnp.abs(new - old))
+
+
+@jax.jit
+def rank_update(z, rank_old, base, alpha):
+    """Damped rank update + L1 convergence delta for one shard.
+
+    Args:
+      z:        f32[n_rows] in-contribution sums (from :func:`ell_gather`).
+      rank_old: f32[n_rows] previous ranks for the owned vertices.
+      base:     f32[1] teleport term (1 - alpha) / n_total, broadcast.
+      alpha:    f32[1] damping factor.
+
+    Returns:
+      (rank_new: f32[n_rows], delta: f32[1]) — delta is the shard-local L1
+      difference used for the distributed convergence test (paper §4.2,
+      "Error Computation").
+    """
+    n_rows = z.shape[0]
+    return pl.pallas_call(
+        _rank_update_kernel,
+        out_shape=(
+            jax.ShapeDtypeStruct((n_rows,), jnp.float32),
+            jax.ShapeDtypeStruct((1,), jnp.float32),
+        ),
+        interpret=True,
+    )(z, rank_old, base, alpha)

@@ -1,0 +1,104 @@
+"""L2: JAX compute graph for the per-locality phases, calling the L1 kernels.
+
+Distributed PageRank and level-synchronous BFS both decompose into
+(a) a *coordination* layer — routing contributions / frontier updates between
+localities, owned by the rust L3 — and (b) a *local compute* phase over the
+locality's shard, which is what gets AOT-lowered here.  Each function below
+is a pure jax function over statically-shaped arrays; ``aot.py`` lowers a
+small registry of shapes to HLO text that the rust runtime loads via PJRT.
+
+Shard layout contract (shared with rust `graph::distributed`):
+  * the shard's in-adjacency is masked ELL: ``cols: i32[n_rows, max_deg]``
+    global column ids (padding -> 0), ``mask: f32[n_rows, max_deg]``;
+  * ``n_rows`` is the padded owned-vertex count, ``n_global`` the padded
+    global vertex count; both fixed per artifact;
+  * bitmaps/ranks are f32.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels import bfs_frontier, pagerank_ell
+
+
+def pagerank_step(contrib, rank_old, cols, mask, row_map, base, alpha,
+                  *, tile_rows=None):
+    """One full local rank-update: gather + row-fold + damped update + delta.
+
+    This fuses the paper's three per-iteration phases (§4.2) for the local
+    shard into a single HLO module: contribution accumulation over the
+    in-ELL, rank update ``rank = base + alpha * z``, and the shard-local
+    error term.  The cross-locality contribution exchange happens before
+    this in rust.
+
+    ``row_map`` handles *virtual-row splitting*: shard rows wider than
+    ``max_deg`` are split across several ELL rows (rust
+    ``graph::distributed::Shard::in_ell``); the scatter-add below folds the
+    per-virtual-row partial sums back onto owned rows.  Padding virtual
+    rows carry ``mask == 0`` (so ``z_virt == 0``) and may map anywhere.
+    Padding *owned* rows must arrive with ``rank_old == base`` so they
+    contribute nothing to the delta.
+
+    Returns (rank_new: f32[n_rows], delta: f32[1]).
+    """
+    kw = {}
+    if tile_rows is not None:
+        kw["tile_rows"] = tile_rows
+    z_virt = pagerank_ell.ell_gather(contrib, cols, mask, **kw)
+    z = jnp.zeros_like(z_virt).at[row_map].add(z_virt)
+    return pagerank_ell.rank_update(z, rank_old, base, alpha)
+
+
+def bfs_level(frontier, visited, cols, mask, *, tile_rows=None):
+    """One local BFS level expansion (see kernels/bfs_frontier.py).
+
+    Returns (next_frontier: f32[n_rows], parent: i32[n_rows]).
+    """
+    kw = {}
+    if tile_rows is not None:
+        kw["tile_rows"] = tile_rows
+    return bfs_frontier.frontier_expand(frontier, visited, cols, mask, **kw)
+
+
+def _pick_tile_rows(n_rows):
+    """Largest power-of-two tile <= n_rows, capped at the default."""
+    t = 1
+    while t * 2 <= n_rows and t * 2 <= pagerank_ell.DEFAULT_TILE_ROWS:
+        t *= 2
+    return t
+
+
+def lower_pagerank(n_global, n_rows, max_deg):
+    """jax.jit(...).lower(...) for a (n_global, n_rows, max_deg) config."""
+    tile = _pick_tile_rows(n_rows)
+
+    def fn(contrib, rank_old, cols, mask, row_map, base, alpha):
+        return pagerank_step(contrib, rank_old, cols, mask, row_map, base,
+                             alpha, tile_rows=tile)
+
+    return jax.jit(fn).lower(
+        jax.ShapeDtypeStruct((n_global,), jnp.float32),
+        jax.ShapeDtypeStruct((n_rows,), jnp.float32),
+        jax.ShapeDtypeStruct((n_rows, max_deg), jnp.int32),
+        jax.ShapeDtypeStruct((n_rows, max_deg), jnp.float32),
+        jax.ShapeDtypeStruct((n_rows,), jnp.int32),
+        jax.ShapeDtypeStruct((1,), jnp.float32),
+        jax.ShapeDtypeStruct((1,), jnp.float32),
+    )
+
+
+def lower_bfs(n_global, n_rows, max_deg):
+    """jax.jit(...).lower(...) for the BFS level step."""
+    tile = _pick_tile_rows(n_rows)
+
+    def fn(frontier, visited, cols, mask):
+        return bfs_level(frontier, visited, cols, mask, tile_rows=tile)
+
+    return jax.jit(fn).lower(
+        jax.ShapeDtypeStruct((n_global,), jnp.float32),
+        jax.ShapeDtypeStruct((n_rows,), jnp.float32),
+        jax.ShapeDtypeStruct((n_rows, max_deg), jnp.int32),
+        jax.ShapeDtypeStruct((n_rows, max_deg), jnp.float32),
+    )

@@ -1,0 +1,162 @@
+"""Kernel-vs-reference correctness: the CORE signal for the L1 layer.
+
+hypothesis sweeps shapes/seeds/densities; every property asserts
+allclose between the Pallas kernel (interpret=True) and the pure-jnp
+oracle in kernels/ref.py.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import bfs_frontier, pagerank_ell, ref
+
+# Keep shapes in the small regime: interpret-mode Pallas is slow, and the
+# tiling logic is exercised as soon as n_rows > tile_rows.
+TILE = 8
+
+
+def _case(seed, n_global, n_tiles, max_deg, density):
+    rng = np.random.default_rng(seed)
+    n_rows = TILE * n_tiles
+    contrib = rng.random(n_global, dtype=np.float32)
+    cols = rng.integers(0, n_global, (n_rows, max_deg)).astype(np.int32)
+    mask = (rng.random((n_rows, max_deg)) < density).astype(np.float32)
+    return contrib, cols, mask
+
+
+shape_strategy = st.tuples(
+    st.integers(0, 2**31 - 1),       # seed
+    st.sampled_from([8, 32, 100, 257]),  # n_global (incl. non-powers of two)
+    st.integers(1, 4),               # n_tiles
+    st.integers(1, 9),               # max_deg
+    st.sampled_from([0.0, 0.3, 1.0]),  # mask density (incl. all-padding)
+)
+
+
+class TestEllGather:
+    @settings(max_examples=25, deadline=None)
+    @given(shape_strategy)
+    def test_matches_ref(self, params):
+        seed, n_global, n_tiles, max_deg, density = params
+        contrib, cols, mask = _case(seed, n_global, n_tiles, max_deg, density)
+        got = pagerank_ell.ell_gather(
+            jnp.asarray(contrib), jnp.asarray(cols), jnp.asarray(mask),
+            tile_rows=TILE)
+        want = ref.ell_gather_ref(
+            jnp.asarray(contrib), jnp.asarray(cols), jnp.asarray(mask))
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=1e-5, atol=1e-6)
+
+    def test_all_padding_is_zero(self):
+        contrib, cols, mask = _case(1, 64, 2, 4, 0.0)
+        got = pagerank_ell.ell_gather(
+            jnp.asarray(contrib), jnp.asarray(cols), jnp.asarray(mask),
+            tile_rows=TILE)
+        np.testing.assert_array_equal(np.asarray(got), 0.0)
+
+    def test_single_full_row(self):
+        # Row gathering every vertex once == sum(contrib).
+        n = 16
+        contrib = np.arange(n, dtype=np.float32)
+        cols = np.tile(np.arange(n, dtype=np.int32), (TILE, 1))
+        mask = np.ones((TILE, n), dtype=np.float32)
+        got = pagerank_ell.ell_gather(
+            jnp.asarray(contrib), jnp.asarray(cols), jnp.asarray(mask),
+            tile_rows=TILE)
+        np.testing.assert_allclose(np.asarray(got), contrib.sum() * np.ones(TILE))
+
+    def test_rejects_non_divisible_rows(self):
+        contrib, cols, mask = _case(0, 32, 1, 4, 1.0)
+        with pytest.raises(ValueError, match="not divisible"):
+            pagerank_ell.ell_gather(
+                jnp.asarray(contrib), jnp.asarray(cols[:-1]),
+                jnp.asarray(mask[:-1]), tile_rows=TILE)
+
+
+class TestRankUpdate:
+    @settings(max_examples=25, deadline=None)
+    @given(st.integers(0, 2**31 - 1), st.integers(1, 5),
+           st.floats(0.0, 1.0), st.floats(0.0, 1.0))
+    def test_matches_ref(self, seed, n_tiles, base, alpha):
+        rng = np.random.default_rng(seed)
+        n = TILE * n_tiles
+        z = rng.random(n, dtype=np.float32)
+        old = rng.random(n, dtype=np.float32)
+        b = jnp.asarray([base], dtype=jnp.float32)
+        a = jnp.asarray([alpha], dtype=jnp.float32)
+        new, delta = pagerank_ell.rank_update(jnp.asarray(z), jnp.asarray(old), b, a)
+        new_r, delta_r = ref.rank_update_ref(jnp.asarray(z), jnp.asarray(old), b, a)
+        np.testing.assert_allclose(np.asarray(new), np.asarray(new_r), rtol=1e-6)
+        np.testing.assert_allclose(np.asarray(delta), np.asarray(delta_r),
+                                   rtol=1e-4, atol=1e-6)
+
+    def test_zero_alpha_gives_base(self):
+        z = np.ones(TILE, dtype=np.float32) * 7.0
+        old = np.zeros(TILE, dtype=np.float32)
+        new, delta = pagerank_ell.rank_update(
+            jnp.asarray(z), jnp.asarray(old),
+            jnp.asarray([0.25], jnp.float32), jnp.asarray([0.0], jnp.float32))
+        np.testing.assert_allclose(np.asarray(new), 0.25)
+        np.testing.assert_allclose(np.asarray(delta), 0.25 * TILE, rtol=1e-6)
+
+
+class TestFrontierExpand:
+    @settings(max_examples=25, deadline=None)
+    @given(shape_strategy, st.sampled_from([0.0, 0.2, 1.0]),
+           st.sampled_from([0.0, 0.5, 1.0]))
+    def test_matches_ref(self, params, frontier_density, visited_density):
+        seed, n_global, n_tiles, max_deg, density = params
+        contrib, cols, mask = _case(seed, n_global, n_tiles, max_deg, density)
+        rng = np.random.default_rng(seed ^ 0xABCDEF)
+        n_rows = cols.shape[0]
+        frontier = (rng.random(n_global) < frontier_density).astype(np.float32)
+        visited = (rng.random(n_rows) < visited_density).astype(np.float32)
+        got_f, got_p = bfs_frontier.frontier_expand(
+            jnp.asarray(frontier), jnp.asarray(visited),
+            jnp.asarray(cols), jnp.asarray(mask), tile_rows=TILE)
+        want_f, want_p = ref.frontier_expand_ref(
+            jnp.asarray(frontier), jnp.asarray(visited),
+            jnp.asarray(cols), jnp.asarray(mask))
+        np.testing.assert_array_equal(np.asarray(got_f), np.asarray(want_f))
+        np.testing.assert_array_equal(np.asarray(got_p), np.asarray(want_p))
+
+    def test_empty_frontier_discovers_nothing(self):
+        _, cols, mask = _case(3, 64, 2, 4, 1.0)
+        frontier = np.zeros(64, dtype=np.float32)
+        visited = np.zeros(cols.shape[0], dtype=np.float32)
+        nf, par = bfs_frontier.frontier_expand(
+            jnp.asarray(frontier), jnp.asarray(visited),
+            jnp.asarray(cols), jnp.asarray(mask), tile_rows=TILE)
+        np.testing.assert_array_equal(np.asarray(nf), 0.0)
+        np.testing.assert_array_equal(np.asarray(par), -1)
+
+    def test_visited_never_rediscovered(self):
+        _, cols, mask = _case(4, 64, 2, 4, 1.0)
+        frontier = np.ones(64, dtype=np.float32)
+        visited = np.ones(cols.shape[0], dtype=np.float32)
+        nf, par = bfs_frontier.frontier_expand(
+            jnp.asarray(frontier), jnp.asarray(visited),
+            jnp.asarray(cols), jnp.asarray(mask), tile_rows=TILE)
+        np.testing.assert_array_equal(np.asarray(nf), 0.0)
+        np.testing.assert_array_equal(np.asarray(par), -1)
+
+    def test_parent_is_a_frontier_neighbor(self):
+        rng = np.random.default_rng(5)
+        contrib, cols, mask = _case(5, 64, 2, 6, 0.7)
+        frontier = (rng.random(64) < 0.4).astype(np.float32)
+        visited = np.zeros(cols.shape[0], dtype=np.float32)
+        nf, par = bfs_frontier.frontier_expand(
+            jnp.asarray(frontier), jnp.asarray(visited),
+            jnp.asarray(cols), jnp.asarray(mask), tile_rows=TILE)
+        nf, par = np.asarray(nf), np.asarray(par)
+        for i in range(cols.shape[0]):
+            if nf[i] > 0:
+                assert par[i] >= 0
+                assert frontier[par[i]] == 1.0
+                # parent must be one of i's masked in-neighbors
+                slots = cols[i][mask[i] > 0]
+                assert par[i] in slots
+            else:
+                assert par[i] == -1

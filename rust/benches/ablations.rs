@@ -1,0 +1,62 @@
+//! Bench: DESIGN.md ablations.
+//!
+//! * **A1** — HPX parcel aggregation in async BFS (on/off): quantifies why
+//!   coalescing is load-bearing for fine-grained asynchrony.
+//! * **A2** — executor chunking policies on the PageRank update loop,
+//!   including the paper §6 `adaptive_core_chunk_size`.
+//! * **A3** — partition policy: block vs edge-balanced cuts on a skewed
+//!   kron graph (load imbalance, paper §2).
+//!
+//! `cargo bench --bench ablations`
+
+use nwgraph_hpx::algorithms::bfs;
+use nwgraph_hpx::amt::SimConfig;
+use nwgraph_hpx::config::Config;
+use nwgraph_hpx::coordinator::{experiment, report::Table};
+use nwgraph_hpx::graph::{generators, DistGraph, Partition1D};
+
+fn main() {
+    let reps: u32 = std::env::var("BENCH_REPS").ok().and_then(|s| s.parse().ok()).unwrap_or(3);
+
+    let mut cfg = Config::default();
+    cfg.scale = 13;
+    cfg.degree = 8;
+    cfg.reps = reps;
+    cfg.localities = vec![2, 4, 8, 16, 32];
+    print!("{}", experiment::ablation_aggregation(&cfg).expect("A1 failed").render());
+
+    cfg.iterations = 20;
+    cfg.generator = "urand-directed".into();
+    print!("{}", experiment::ablation_adaptive_chunk(&cfg).expect("A2 failed").render());
+
+    // A3: block vs edge-balanced partitions on a skewed graph.
+    let g = generators::kron(13, 8, 3);
+    let mut t = Table::new(
+        "Ablation A3 — partition policy on kron13 (async BFS)",
+        &["nodes", "block time", "balanced time", "block edge-imb", "balanced edge-imb"],
+    );
+    for p in [4u32, 8, 16, 32] {
+        let block = Partition1D::block(g.n(), p);
+        let bal = Partition1D::edge_balanced(&g, p);
+        let mut best = [f64::INFINITY; 2];
+        for _ in 0..reps {
+            for (i, part) in [(0, &block), (1, &bal)] {
+                let dist = DistGraph::build(&g, part);
+                let r = bfs::async_hpx::run(
+                    &dist,
+                    0,
+                    SimConfig { aggregate_sends: true, coalesce_window_us: 5.0, ..SimConfig::default() },
+                );
+                best[i] = best[i].min(r.report.makespan_us);
+            }
+        }
+        t.row(vec![
+            p.to_string(),
+            format!("{:.2}ms", best[0] / 1e3),
+            format!("{:.2}ms", best[1] / 1e3),
+            format!("{:.2}", block.edge_imbalance(&g)),
+            format!("{:.2}", bal.edge_imbalance(&g)),
+        ]);
+    }
+    print!("{}", t.render());
+}

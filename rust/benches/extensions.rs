@@ -1,0 +1,20 @@
+//! Bench: §6 extension algorithms (SSSP, connected components, triangle
+//! counting) across locality counts — the "systematic benchmark suite"
+//! the paper's future work calls for.
+//!
+//! `cargo bench --bench extensions`
+
+use nwgraph_hpx::config::Config;
+use nwgraph_hpx::coordinator::experiment;
+
+fn main() {
+    let mut cfg = Config::default();
+    cfg.scale = 13;
+    cfg.degree = 8;
+    cfg.localities = vec![1, 2, 4, 8, 16, 32];
+    print!("{}", experiment::extensions(&cfg).expect("extensions failed").render());
+
+    // Also on a skewed graph.
+    cfg.generator = "kron".into();
+    print!("{}", experiment::extensions(&cfg).expect("extensions failed").render());
+}

@@ -1,0 +1,37 @@
+//! Bench: regenerate the paper's **Figure 1** — distributed BFS speedup
+//! (HPX async vs Boost/BSP) over locality count, on GAP `urand` graphs.
+//!
+//! `cargo bench --bench fig1_bfs` (criterion is unavailable offline; this
+//! is a plain harness printing the paper-style table per graph size).
+//! Override the scales with `BENCH_SCALES=12,14` and reps with
+//! `BENCH_REPS=n`.
+
+use nwgraph_hpx::config::Config;
+use nwgraph_hpx::coordinator::experiment;
+
+fn main() {
+    let scales: Vec<u32> = std::env::var("BENCH_SCALES")
+        .map(|s| s.split(',').map(|x| x.trim().parse().unwrap()).collect())
+        .unwrap_or_else(|_| vec![12, 14, 16]);
+    let reps: u32 = std::env::var("BENCH_REPS").ok().and_then(|s| s.parse().ok()).unwrap_or(3);
+
+    for scale in scales {
+        let mut cfg = Config::default();
+        cfg.scale = scale;
+        cfg.degree = 8;
+        cfg.reps = reps;
+        cfg.localities = vec![1, 2, 4, 8, 16, 32];
+        let (table, points) = experiment::fig1_bfs(&cfg).expect("fig1 failed");
+        print!("{}", table.render());
+        // Shape summary: where does HPX overtake Boost?
+        let crossover = cfg.localities.iter().find(|&&p| {
+            let h = points.iter().find(|x| x.engine == "HPX" && x.p == p).unwrap();
+            let b = points.iter().find(|x| x.engine == "Boost" && x.p == p).unwrap();
+            h.speedup > b.speedup
+        });
+        match crossover {
+            Some(p) => println!("HPX overtakes Boost at p={p} (paper: HPX ahead at scale)\n"),
+            None => println!("HPX never overtakes Boost — check the cost model\n"),
+        }
+    }
+}

@@ -1,0 +1,37 @@
+//! Bench: regenerate the paper's **Figure 2** — distributed PageRank
+//! (HPX naive / HPX optimized / Boost BSP) over locality count.
+//!
+//! `cargo bench --bench fig2_pagerank`. Overrides: `BENCH_SCALES`,
+//! `BENCH_REPS`.
+
+use nwgraph_hpx::config::Config;
+use nwgraph_hpx::coordinator::experiment;
+
+fn main() {
+    let scales: Vec<u32> = std::env::var("BENCH_SCALES")
+        .map(|s| s.split(',').map(|x| x.trim().parse().unwrap()).collect())
+        .unwrap_or_else(|_| vec![12, 14]);
+    let reps: u32 = std::env::var("BENCH_REPS").ok().and_then(|s| s.parse().ok()).unwrap_or(3);
+
+    for scale in scales {
+        let mut cfg = Config::default();
+        cfg.scale = scale;
+        cfg.degree = 8;
+        cfg.generator = "urand-directed".into();
+        cfg.reps = reps;
+        cfg.iterations = 20;
+        cfg.localities = vec![1, 2, 4, 8, 16, 32];
+        let (table, points) = experiment::fig2_pagerank(&cfg).expect("fig2 failed");
+        print!("{}", table.render());
+        // Shape summary at the largest locality count.
+        let p = *cfg.localities.last().unwrap();
+        let get = |e: &str| points.iter().find(|x| x.engine == e && x.p == p).unwrap().makespan_us;
+        let (naive, opt, boost) = (get("HPX-naive"), get("HPX-opt"), get("Boost"));
+        println!(
+            "at p={p}: naive/boost = {:.1}x, opt/boost = {:.2}x \
+             (paper: naive far behind, optimized close but still behind)\n",
+            naive / boost,
+            opt / boost
+        );
+    }
+}

@@ -1,0 +1,185 @@
+//! Asynchronous distributed BFS — the paper's Listing 1.2.
+//!
+//! The message-driven form of `bfs_2`: discovering a remote vertex issues
+//! an asynchronous remote action (`hpx::async(bfs_2, dst, ...)`) on its
+//! owner; locally-owned discoveries are expanded immediately from a local
+//! queue. Parent updates go through the atomic `set_parent` CAS on the
+//! shared partitioned parent vector. There are **no global barriers**:
+//! termination is network quiescence, which the discrete-event engine
+//! detects exactly (the paper relies on `hpx::wait_all` over the recursive
+//! future tree for the same effect).
+
+use std::sync::Arc;
+
+use crate::amt::sim::{Actor, Ctx, LocalityId, Message, SimConfig, SimRuntime};
+use crate::amt::AtomicLongVector;
+use crate::graph::{DistGraph, Shard, VertexId};
+
+use super::BfsResult;
+
+/// A `Visit(v, parent, level)` remote action.
+#[derive(Debug, Clone)]
+pub struct Visit {
+    /// Vertex to visit (owned by the receiving locality).
+    pub v: VertexId,
+    /// Proposed parent.
+    pub parent: VertexId,
+    /// Tree level of `v` if this visit wins.
+    pub level: u32,
+}
+
+impl Message for Visit {
+    fn wire_bytes(&self) -> usize {
+        12 // v + parent + level
+    }
+}
+
+/// Per-locality actor state.
+pub struct AsyncBfsActor {
+    shard: Arc<Shard>,
+    dist: Arc<DistGraph>,
+    parents: AtomicLongVector,
+    root: VertexId,
+    /// Local duplicate-suppression filter: remote vertices this locality
+    /// has already issued a `Visit` for. This is knowledge a real locality
+    /// legitimately has (its own send history) — unlike the remote parent
+    /// array, which only the owner may read.
+    sent: Vec<u64>,
+}
+
+impl AsyncBfsActor {
+    fn already_sent(&mut self, v: VertexId) -> bool {
+        let (w, b) = (v as usize / 64, v as usize % 64);
+        let hit = self.sent[w] & (1 << b) != 0;
+        self.sent[w] |= 1 << b;
+        hit
+    }
+}
+
+impl AsyncBfsActor {
+    /// The paper's `set_parent`: atomic first-touch via compare-exchange.
+    fn set_parent(&self, v: VertexId, parent: VertexId) -> bool {
+        self.parents.cas(v as usize, -1, parent as i64)
+    }
+
+    /// Expand the local queue seeded by a winning visit (the inner loop of
+    /// Listing 1.2: local discoveries stay in `q1`/`q2`, remote ones become
+    /// async actions).
+    fn expand_from(&mut self, ctx: &mut Ctx<Visit>, v: VertexId, level: u32) {
+        let here = ctx.locality();
+        let shard = Arc::clone(&self.shard);
+        let mut queue: Vec<(VertexId, u32)> = vec![(v, level)];
+        while let Some((u, lvl)) = queue.pop() {
+            let lu = shard.local_index(u);
+            for &w in shard.out_neighbors(lu) {
+                let dst = self.dist.owner(w);
+                if dst == here {
+                    if self.set_parent(w, u) {
+                        queue.push((w, lvl + 1));
+                    }
+                } else if !self.already_sent(w) {
+                    // Remote: async action on the owner, which performs the
+                    // atomic set_parent (CAS races are resolved there).
+                    ctx.send(dst, Visit { v: w, parent: u, level: lvl + 1 });
+                }
+            }
+        }
+    }
+}
+
+impl Actor for AsyncBfsActor {
+    type Msg = Visit;
+
+    fn on_start(&mut self, ctx: &mut Ctx<Visit>) {
+        if self.dist.owner(self.root) == ctx.locality() {
+            let root = self.root;
+            if self.set_parent(root, root) {
+                self.expand_from(ctx, root, 0);
+            }
+        }
+    }
+
+    fn on_message(&mut self, ctx: &mut Ctx<Visit>, _from: LocalityId, msg: Visit) {
+        if self.set_parent(msg.v, msg.parent) {
+            self.expand_from(ctx, msg.v, msg.level);
+        }
+    }
+}
+
+/// Run asynchronous distributed BFS over `dist` from `root`.
+pub fn run(dist: &DistGraph, root: VertexId, cfg: SimConfig) -> BfsResult {
+    let dist = Arc::new(dist.clone());
+    let parents = AtomicLongVector::new(dist.n(), dist.p(), -1);
+    let actors: Vec<AsyncBfsActor> = dist
+        .shards
+        .iter()
+        .map(|s| AsyncBfsActor {
+            shard: Arc::new(s.clone()),
+            dist: Arc::clone(&dist),
+            parents: parents.clone(),
+            root,
+            sent: vec![0u64; dist.n().div_ceil(64)],
+        })
+        .collect();
+    let (_, report) = SimRuntime::new(cfg).run(actors);
+    BfsResult { parents: parents.to_vec(), report }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algorithms::bfs::{sequential, validate_parents};
+    use crate::amt::NetConfig;
+    use crate::graph::generators;
+
+    fn check(g: &crate::graph::Csr, p: u32, root: VertexId) {
+        let dist = DistGraph::block(g, p);
+        let res = run(&dist, root, SimConfig::deterministic(NetConfig::default()));
+        validate_parents(g, root, &res.parents).unwrap();
+        // Reachable set must match the sequential oracle.
+        let seq = sequential::bfs(g, root);
+        for v in 0..g.n() {
+            assert_eq!(res.parents[v] >= 0, seq[v] >= 0, "vertex {v}");
+        }
+    }
+
+    #[test]
+    fn matches_oracle_on_random_graphs() {
+        for (scale, p) in [(6u32, 1u32), (6, 2), (6, 4), (7, 8)] {
+            let g = generators::urand(scale, 4, scale as u64 + p as u64);
+            check(&g, p, 0);
+        }
+    }
+
+    #[test]
+    fn works_on_skewed_graphs() {
+        let g = generators::kron(7, 6, 9);
+        check(&g, 4, 0);
+    }
+
+    #[test]
+    fn works_when_root_not_on_locality_zero() {
+        let g = generators::urand(6, 4, 11);
+        check(&g, 4, (g.n() - 1) as VertexId);
+    }
+
+    #[test]
+    fn disconnected_graph_terminates() {
+        let mut el = crate::graph::EdgeList::new(10);
+        el.push(0, 1);
+        el.push(1, 0);
+        let g = crate::graph::Csr::from_edge_list(&el);
+        let dist = DistGraph::block(&g, 3);
+        let res = run(&dist, 0, SimConfig::deterministic(NetConfig::default()));
+        assert_eq!(res.parents[1], 0);
+        assert!(res.parents[2..].iter().all(|&p| p == -1));
+    }
+
+    #[test]
+    fn no_barriers_in_async_bfs() {
+        let g = generators::urand(7, 4, 13);
+        let dist = DistGraph::block(&g, 4);
+        let res = run(&dist, 0, SimConfig::deterministic(NetConfig::default()));
+        assert_eq!(res.report.barriers, 0);
+    }
+}

@@ -1,0 +1,410 @@
+//! Direction-optimizing distributed BFS (Beamer-style), as a BSP extension.
+//!
+//! The paper's future work (§6) calls for broader algorithm coverage and
+//! runtime adaptivity; direction optimization is the classic example for
+//! BFS. Top-down supersteps behave like [`level_sync`](super::level_sync);
+//! when the frontier becomes edge-heavy (`m_frontier > m_unvisited / alpha`)
+//! the traversal switches to bottom-up supersteps, where every locality
+//! scans its *unvisited* vertices against a replicated frontier bitmap —
+//! eliminating per-discovery remote traffic at the price of an extra
+//! bitmap-allgather barrier per switch/round. It switches back when the
+//! frontier shrinks below `n / beta`.
+
+use std::sync::Arc;
+
+use crate::amt::sim::{Actor, Ctx, LocalityId, Message, SimConfig, SimRuntime};
+use crate::amt::AtomicLongVector;
+use crate::graph::{DistGraph, Shard, VertexId};
+
+use super::BfsResult;
+
+/// Beamer's alpha (top-down -> bottom-up threshold).
+pub const DEFAULT_ALPHA: f64 = 14.0;
+/// Beamer's beta (bottom-up -> top-down threshold).
+pub const DEFAULT_BETA: f64 = 24.0;
+
+/// Messages for the direction-optimizing traversal.
+#[derive(Debug, Clone)]
+pub enum DirMsg {
+    /// Batched top-down remote discoveries `(vertex, parent)`.
+    Visits(Vec<(VertexId, VertexId)>),
+    /// Per-round stats for the coordinator's direction decision.
+    Stats {
+        /// Discoveries + sends this round.
+        activity: u64,
+        /// |next frontier| on this locality.
+        frontier_vertices: u64,
+        /// Sum of out-degrees over the next frontier.
+        frontier_edges: u64,
+        /// Sum of out-degrees over still-unvisited owned vertices.
+        unvisited_edges: u64,
+    },
+    /// Coordinator verdict: continue? bottom-up next round?
+    Decision {
+        /// Keep traversing?
+        go: bool,
+        /// Use a bottom-up superstep next?
+        bottom_up: bool,
+    },
+    /// Frontier-bitmap allgather fragment for bottom-up rounds. Wire size
+    /// models a compressed bitmap slice (n/8/P bytes), which is how real
+    /// implementations ship it.
+    Bitmap {
+        /// Frontier vertex ids on the sending locality.
+        ids: Vec<VertexId>,
+        /// Modeled wire size (bitmap slice).
+        bitmap_bytes: usize,
+    },
+}
+
+impl Message for DirMsg {
+    fn wire_bytes(&self) -> usize {
+        match self {
+            DirMsg::Visits(v) => 8 * v.len(),
+            DirMsg::Stats { .. } => 32,
+            DirMsg::Decision { .. } => 2,
+            DirMsg::Bitmap { bitmap_bytes, .. } => *bitmap_bytes,
+        }
+    }
+
+    fn item_count(&self) -> usize {
+        match self {
+            DirMsg::Visits(v) => v.len(),
+            // A bitmap is applied with word-level ops, not per-vertex.
+            _ => 1,
+        }
+    }
+}
+
+#[derive(PartialEq, Clone, Copy, Debug)]
+enum Phase {
+    AfterExpand,
+    AwaitDecision,
+    AfterBitmap,
+}
+
+/// Per-locality direction-optimizing BFS state.
+pub struct DirOptBfsActor {
+    shard: Arc<Shard>,
+    dist: Arc<DistGraph>,
+    parents: AtomicLongVector,
+    root: VertexId,
+    alpha: f64,
+    beta: f64,
+    frontier: Vec<VertexId>,
+    inbox: Vec<(VertexId, VertexId)>,
+    visited: Vec<bool>, // owned vertices, local index
+    global_frontier_bitmap: Vec<u64>,
+    // coordinator (locality 0) reduction state
+    stats_seen: u32,
+    act_sum: u64,
+    fv_sum: u64,
+    fe_sum: u64,
+    ue_sum: u64,
+    decision_go: bool,
+    decision_bottom_up: bool,
+    bottom_up_now: bool,
+    phase: Phase,
+    /// Bottom-up supersteps taken (reporting).
+    pub bu_rounds: u32,
+    /// Top-down supersteps taken (reporting).
+    pub td_rounds: u32,
+}
+
+impl DirOptBfsActor {
+    fn set_parent(&self, v: VertexId, parent: VertexId) -> bool {
+        self.parents.cas(v as usize, -1, parent as i64)
+    }
+
+    fn mark_visited(&mut self, v: VertexId) {
+        let l = self.shard.local_index(v);
+        self.visited[l] = true;
+    }
+
+    fn send_stats(&mut self, ctx: &mut Ctx<DirMsg>, activity: u64) {
+        let fv = self.frontier.len() as u64;
+        let fe: u64 = self
+            .frontier
+            .iter()
+            .map(|&v| self.shard.out_degree[self.shard.local_index(v)] as u64)
+            .sum();
+        let ue: u64 = (0..self.shard.n_local())
+            .filter(|&l| !self.visited[l])
+            .map(|l| self.shard.out_degree[l] as u64)
+            .sum();
+        ctx.send(0, DirMsg::Stats {
+            activity,
+            frontier_vertices: fv,
+            frontier_edges: fe,
+            unvisited_edges: ue,
+        });
+        self.phase = Phase::AfterExpand;
+        ctx.request_barrier();
+    }
+
+    /// Top-down superstep (same as the level-synchronous baseline).
+    fn expand_top_down(&mut self, ctx: &mut Ctx<DirMsg>) {
+        self.td_rounds += 1;
+        let here = ctx.locality();
+        let p = ctx.n_localities() as usize;
+        let mut next: Vec<VertexId> = Vec::new();
+        let mut outgoing: Vec<Vec<(VertexId, VertexId)>> = vec![Vec::new(); p];
+        let mut activity: u64 = 0;
+        let frontier = std::mem::take(&mut self.frontier);
+        let shard = Arc::clone(&self.shard);
+        for &u in &frontier {
+            let lu = shard.local_index(u);
+            for &w in shard.out_neighbors(lu) {
+                let dst = self.dist.owner(w);
+                if dst == here {
+                    if self.set_parent(w, u) {
+                        self.mark_visited(w);
+                        next.push(w);
+                        activity += 1;
+                    }
+                } else {
+                    outgoing[dst as usize].push((w, u));
+                    activity += 1;
+                }
+            }
+        }
+        for (dst, batch) in outgoing.into_iter().enumerate() {
+            if !batch.is_empty() {
+                ctx.send(dst as LocalityId, DirMsg::Visits(batch));
+            }
+        }
+        self.frontier = next;
+        self.send_stats(ctx, activity);
+    }
+
+    /// Bottom-up superstep: scan unvisited owned vertices against the
+    /// replicated frontier bitmap; discoveries are purely local.
+    fn expand_bottom_up(&mut self, ctx: &mut Ctx<DirMsg>) {
+        self.bu_rounds += 1;
+        let mut next: Vec<VertexId> = Vec::new();
+        let mut activity: u64 = 0;
+        for l in 0..self.shard.n_local() {
+            if self.visited[l] {
+                continue;
+            }
+            let v = self.shard.global_id(l);
+            for &u in self.shard.in_neighbors(l) {
+                let (w, b) = (u as usize / 64, u as usize % 64);
+                if self.global_frontier_bitmap[w] & (1 << b) != 0 {
+                    if self.set_parent(v, u) {
+                        self.visited[l] = true;
+                        next.push(v);
+                        activity += 1;
+                    }
+                    break;
+                }
+            }
+        }
+        self.frontier = next;
+        self.send_stats(ctx, activity);
+    }
+
+    fn broadcast_bitmap(&mut self, ctx: &mut Ctx<DirMsg>) {
+        let n = self.dist.n();
+        let p = ctx.n_localities();
+        let slice_bytes = n.div_ceil(8).div_ceil(p as usize).max(1);
+        for l in 0..p {
+            if l != ctx.locality() {
+                ctx.send(l, DirMsg::Bitmap {
+                    ids: self.frontier.clone(),
+                    bitmap_bytes: slice_bytes,
+                });
+            }
+        }
+        // Own frontier goes straight into the bitmap.
+        self.global_frontier_bitmap = vec![0u64; n.div_ceil(64)];
+        for &v in &self.frontier {
+            self.global_frontier_bitmap[v as usize / 64] |= 1 << (v as usize % 64);
+        }
+        self.phase = Phase::AfterBitmap;
+        ctx.request_barrier();
+    }
+}
+
+impl Actor for DirOptBfsActor {
+    type Msg = DirMsg;
+
+    fn on_start(&mut self, ctx: &mut Ctx<DirMsg>) {
+        if self.dist.owner(self.root) == ctx.locality() && self.set_parent(self.root, self.root)
+        {
+            self.mark_visited(self.root);
+            self.frontier.push(self.root);
+        }
+        self.expand_top_down(ctx);
+    }
+
+    fn on_message(&mut self, _ctx: &mut Ctx<DirMsg>, _from: LocalityId, msg: DirMsg) {
+        match msg {
+            DirMsg::Visits(batch) => self.inbox.extend(batch),
+            DirMsg::Stats { activity, frontier_vertices, frontier_edges, unvisited_edges } => {
+                self.stats_seen += 1;
+                self.act_sum += activity;
+                self.fv_sum += frontier_vertices;
+                self.fe_sum += frontier_edges;
+                self.ue_sum += unvisited_edges;
+            }
+            DirMsg::Decision { go, bottom_up } => {
+                self.decision_go = go;
+                self.decision_bottom_up = bottom_up;
+            }
+            DirMsg::Bitmap { ids, .. } => {
+                for v in ids {
+                    self.global_frontier_bitmap[v as usize / 64] |= 1 << (v as usize % 64);
+                }
+            }
+        }
+    }
+
+    fn on_barrier(&mut self, ctx: &mut Ctx<DirMsg>, _epoch: u64) {
+        match self.phase {
+            Phase::AfterExpand => {
+                // Fold top-down remote discoveries (no-op after bottom-up).
+                let inbox = std::mem::take(&mut self.inbox);
+                for (v, parent) in inbox {
+                    if self.set_parent(v, parent) {
+                        self.mark_visited(v);
+                        self.frontier.push(v);
+                    }
+                }
+                if ctx.locality() == 0 {
+                    debug_assert_eq!(self.stats_seen, ctx.n_localities());
+                    let go = self.act_sum > 0;
+                    // Beamer heuristic on global counts.
+                    let bottom_up = if !self.bottom_up_now {
+                        (self.fe_sum as f64) > (self.ue_sum as f64) / self.alpha
+                    } else {
+                        (self.fv_sum as f64) >= (self.dist.n() as f64) / self.beta
+                    };
+                    self.act_sum = 0;
+                    self.fv_sum = 0;
+                    self.fe_sum = 0;
+                    self.ue_sum = 0;
+                    self.stats_seen = 0;
+                    for l in 0..ctx.n_localities() {
+                        ctx.send(l, DirMsg::Decision { go, bottom_up });
+                    }
+                }
+                self.phase = Phase::AwaitDecision;
+                ctx.request_barrier();
+            }
+            Phase::AwaitDecision => {
+                if !self.decision_go {
+                    return; // quiesce
+                }
+                self.bottom_up_now = self.decision_bottom_up;
+                if self.bottom_up_now {
+                    self.broadcast_bitmap(ctx);
+                } else {
+                    self.expand_top_down(ctx);
+                }
+            }
+            Phase::AfterBitmap => {
+                self.expand_bottom_up(ctx);
+            }
+        }
+    }
+}
+
+/// Run direction-optimizing BSP BFS; returns the result plus
+/// `(top_down_rounds, bottom_up_rounds)`.
+pub fn run_with_params(
+    dist: &DistGraph,
+    root: VertexId,
+    cfg: SimConfig,
+    alpha: f64,
+    beta: f64,
+) -> (BfsResult, u32, u32) {
+    let dist = Arc::new(dist.clone());
+    let parents = AtomicLongVector::new(dist.n(), dist.p(), -1);
+    let actors: Vec<DirOptBfsActor> = dist
+        .shards
+        .iter()
+        .map(|s| DirOptBfsActor {
+            shard: Arc::new(s.clone()),
+            dist: Arc::clone(&dist),
+            parents: parents.clone(),
+            root,
+            alpha,
+            beta,
+            frontier: Vec::new(),
+            inbox: Vec::new(),
+            visited: vec![false; s.n_local()],
+            global_frontier_bitmap: vec![0u64; dist.n().div_ceil(64)],
+            stats_seen: 0,
+            act_sum: 0,
+            fv_sum: 0,
+            fe_sum: 0,
+            ue_sum: 0,
+            decision_go: false,
+            decision_bottom_up: false,
+            bottom_up_now: false,
+            phase: Phase::AfterExpand,
+            bu_rounds: 0,
+            td_rounds: 0,
+        })
+        .collect();
+    let (actors, report) = SimRuntime::new(cfg).run(actors);
+    let td = actors.iter().map(|a| a.td_rounds).max().unwrap_or(0);
+    let bu = actors.iter().map(|a| a.bu_rounds).max().unwrap_or(0);
+    (BfsResult { parents: parents.to_vec(), report }, td, bu)
+}
+
+/// Run with the standard Beamer parameters.
+pub fn run(dist: &DistGraph, root: VertexId, cfg: SimConfig) -> BfsResult {
+    run_with_params(dist, root, cfg, DEFAULT_ALPHA, DEFAULT_BETA).0
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algorithms::bfs::{sequential, validate_parents};
+    use crate::amt::NetConfig;
+    use crate::graph::generators;
+
+    #[test]
+    fn matches_oracle_reachability() {
+        for (scale, p) in [(6u32, 2u32), (7, 4), (8, 8)] {
+            let g = generators::urand(scale, 8, 500 + scale as u64 + p as u64);
+            let dist = DistGraph::block(&g, p);
+            let res = run(&dist, 0, SimConfig::deterministic(NetConfig::default()));
+            validate_parents(&g, 0, &res.parents).unwrap();
+            let seq = sequential::bfs(&g, 0);
+            for v in 0..g.n() {
+                assert_eq!(res.parents[v] >= 0, seq[v] >= 0, "vertex {v}");
+            }
+        }
+    }
+
+    #[test]
+    fn dense_graph_triggers_bottom_up() {
+        // urand with degree 16 has a huge middle frontier.
+        let g = generators::urand(9, 16, 77);
+        let dist = DistGraph::block(&g, 4);
+        let (res, td, bu) =
+            run_with_params(&dist, 0, SimConfig::deterministic(NetConfig::default()), 14.0, 24.0);
+        validate_parents(&g, 0, &res.parents).unwrap();
+        assert!(bu >= 1, "expected bottom-up rounds on a dense graph (td={td} bu={bu})");
+    }
+
+    #[test]
+    fn forced_top_down_equals_level_sync_semantics() {
+        // Beamer switches TD->BU when m_frontier > m_unvisited / alpha, so
+        // alpha -> 0 makes the threshold infinite and disables bottom-up.
+        let g = generators::kron(7, 6, 31);
+        let dist = DistGraph::block(&g, 4);
+        let (res, _, bu) = run_with_params(
+            &dist,
+            0,
+            SimConfig::deterministic(NetConfig::default()),
+            0.0,
+            24.0,
+        );
+        assert_eq!(bu, 0);
+        validate_parents(&g, 0, &res.parents).unwrap();
+    }
+}

@@ -1,0 +1,244 @@
+//! Level-synchronous BSP BFS — the distributed-BGL (PBGL) baseline.
+//!
+//! PBGL's BFS processes the frontier in supersteps: every locality expands
+//! its local frontier slice, remote discoveries are buffered into
+//! per-destination combiners and shipped as batched messages, and a global
+//! barrier separates levels. Termination is a count reduction (here: an
+//! activity count sent to locality 0, which broadcasts the verdict), so
+//! each level costs **two global barriers** — the synchronization overhead
+//! the paper's asynchronous variant eliminates (Fig. 1 discussion).
+
+use std::sync::Arc;
+
+use crate::amt::sim::{Actor, Ctx, LocalityId, Message, SimConfig, SimRuntime};
+use crate::amt::AtomicLongVector;
+use crate::graph::{DistGraph, Shard, VertexId};
+
+use super::BfsResult;
+
+/// BSP BFS messages.
+#[derive(Debug, Clone)]
+pub enum BspMsg {
+    /// Batched remote discoveries: `(vertex, parent)` pairs.
+    Visits(Vec<(VertexId, VertexId)>),
+    /// Superstep activity count, reduced at locality 0.
+    Count(u64),
+    /// Locality 0's verdict: keep going?
+    Continue(bool),
+}
+
+impl Message for BspMsg {
+    fn wire_bytes(&self) -> usize {
+        match self {
+            BspMsg::Visits(v) => 8 * v.len(),
+            BspMsg::Count(_) => 8,
+            BspMsg::Continue(_) => 1,
+        }
+    }
+
+    fn item_count(&self) -> usize {
+        // PBGL's distributed queue marshals each discovery individually;
+        // batching amortizes envelopes, not per-vertex work.
+        match self {
+            BspMsg::Visits(v) => v.len(),
+            _ => 1,
+        }
+    }
+}
+
+#[derive(PartialEq)]
+enum Phase {
+    AfterExpand,
+    AwaitDecision,
+}
+
+/// Per-locality BSP BFS state.
+pub struct BspBfsActor {
+    shard: Arc<Shard>,
+    dist: Arc<DistGraph>,
+    parents: AtomicLongVector,
+    root: VertexId,
+    frontier: Vec<VertexId>,
+    inbox: Vec<(VertexId, VertexId)>,
+    counts_seen: u32,
+    counts_sum: u64,
+    continue_flag: bool,
+    phase: Phase,
+    /// Levels completed (for reporting).
+    pub levels: u32,
+}
+
+impl BspBfsActor {
+    fn set_parent(&self, v: VertexId, parent: VertexId) -> bool {
+        self.parents.cas(v as usize, -1, parent as i64)
+    }
+
+    /// Expand the current frontier one level: local discoveries feed the
+    /// next frontier directly; remote ones go to per-destination combiners
+    /// shipped as one batched message per destination (PBGL's buffering).
+    fn expand_and_report(&mut self, ctx: &mut Ctx<BspMsg>) {
+        let here = ctx.locality();
+        let p = ctx.n_localities();
+        let mut next: Vec<VertexId> = Vec::new();
+        let mut outgoing: Vec<Vec<(VertexId, VertexId)>> = vec![Vec::new(); p as usize];
+        let mut activity: u64 = 0;
+        let frontier = std::mem::take(&mut self.frontier);
+        for &u in &frontier {
+            let lu = self.shard.local_index(u);
+            for &w in self.shard.out_neighbors(lu) {
+                let dst = self.dist.owner(w);
+                if dst == here {
+                    if self.set_parent(w, u) {
+                        next.push(w);
+                        activity += 1;
+                    }
+                } else {
+                    outgoing[dst as usize].push((w, u));
+                    activity += 1;
+                }
+            }
+        }
+        for (dst, batch) in outgoing.into_iter().enumerate() {
+            if !batch.is_empty() {
+                ctx.send(dst as LocalityId, BspMsg::Visits(batch));
+            }
+        }
+        self.frontier = next;
+        ctx.send(0, BspMsg::Count(activity));
+        self.phase = Phase::AfterExpand;
+        ctx.request_barrier();
+    }
+}
+
+impl Actor for BspBfsActor {
+    type Msg = BspMsg;
+
+    fn on_start(&mut self, ctx: &mut Ctx<BspMsg>) {
+        if self.dist.owner(self.root) == ctx.locality() && self.set_parent(self.root, self.root)
+        {
+            self.frontier.push(self.root);
+        }
+        self.expand_and_report(ctx);
+    }
+
+    fn on_message(&mut self, _ctx: &mut Ctx<BspMsg>, _from: LocalityId, msg: BspMsg) {
+        match msg {
+            BspMsg::Visits(batch) => self.inbox.extend(batch),
+            BspMsg::Count(c) => {
+                self.counts_seen += 1;
+                self.counts_sum += c;
+            }
+            BspMsg::Continue(b) => self.continue_flag = b,
+        }
+    }
+
+    fn on_barrier(&mut self, ctx: &mut Ctx<BspMsg>, _epoch: u64) {
+        match self.phase {
+            Phase::AfterExpand => {
+                // Fold remote discoveries into the next frontier.
+                let inbox = std::mem::take(&mut self.inbox);
+                for (v, parent) in inbox {
+                    if self.set_parent(v, parent) {
+                        self.frontier.push(v);
+                    }
+                }
+                if ctx.locality() == 0 {
+                    debug_assert_eq!(self.counts_seen, ctx.n_localities());
+                    let go = self.counts_sum > 0;
+                    self.counts_sum = 0;
+                    self.counts_seen = 0;
+                    for l in 0..ctx.n_localities() {
+                        ctx.send(l, BspMsg::Continue(go));
+                    }
+                }
+                self.phase = Phase::AwaitDecision;
+                ctx.request_barrier();
+            }
+            Phase::AwaitDecision => {
+                if self.continue_flag {
+                    self.levels += 1;
+                    self.expand_and_report(ctx);
+                }
+                // else: quiesce — no sends, no barrier request.
+            }
+        }
+    }
+}
+
+/// Run level-synchronous BSP BFS over `dist` from `root`.
+pub fn run(dist: &DistGraph, root: VertexId, cfg: SimConfig) -> BfsResult {
+    let dist = Arc::new(dist.clone());
+    let parents = AtomicLongVector::new(dist.n(), dist.p(), -1);
+    let actors: Vec<BspBfsActor> = dist
+        .shards
+        .iter()
+        .map(|s| BspBfsActor {
+            shard: Arc::new(s.clone()),
+            dist: Arc::clone(&dist),
+            parents: parents.clone(),
+            root,
+            frontier: Vec::new(),
+            inbox: Vec::new(),
+            counts_seen: 0,
+            counts_sum: 0,
+            continue_flag: false,
+            phase: Phase::AfterExpand,
+            levels: 0,
+        })
+        .collect();
+    let (_, report) = SimRuntime::new(cfg).run(actors);
+    BfsResult { parents: parents.to_vec(), report }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algorithms::bfs::{sequential, tree_levels, validate_parents};
+    use crate::amt::NetConfig;
+    use crate::graph::generators;
+
+    fn check(g: &crate::graph::Csr, p: u32, root: VertexId) -> BfsResult {
+        let dist = DistGraph::block(g, p);
+        let res = run(&dist, root, SimConfig::deterministic(NetConfig::default()));
+        validate_parents(g, root, &res.parents).unwrap();
+        res
+    }
+
+    #[test]
+    fn matches_oracle_reachability() {
+        for (scale, p) in [(6u32, 1u32), (6, 3), (7, 4), (7, 8)] {
+            let g = generators::urand(scale, 4, 100 + scale as u64 + p as u64);
+            let res = check(&g, p, 0);
+            let seq = sequential::bfs(&g, 0);
+            for v in 0..g.n() {
+                assert_eq!(res.parents[v] >= 0, seq[v] >= 0, "vertex {v}");
+            }
+        }
+    }
+
+    #[test]
+    fn level_sync_trees_are_minimal_depth() {
+        // Unlike async BFS, level-synchronous BFS produces true BFS levels.
+        let g = generators::kron(8, 6, 21);
+        let res = check(&g, 4, 0);
+        let lv = tree_levels(0, &res.parents);
+        let d = sequential::distances(&g, 0);
+        assert_eq!(lv, d);
+    }
+
+    #[test]
+    fn barrier_count_is_two_per_level() {
+        let g = generators::path(9); // 8 levels from vertex 0
+        let dist = DistGraph::block(&g, 3);
+        let res = run(&dist, 0, SimConfig::deterministic(NetConfig::default()));
+        // levels+1 rounds (last round discovers nothing), 2 barriers each.
+        assert_eq!(res.report.barriers, 2 * (8 + 1));
+    }
+
+    #[test]
+    fn empty_graph_single_vertex() {
+        let g = generators::path(1);
+        let res = check(&g, 1, 0);
+        assert_eq!(res.parents, vec![0]);
+    }
+}

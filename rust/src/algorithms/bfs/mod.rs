@@ -1,0 +1,144 @@
+//! Breadth-First Search: sequential oracle, asynchronous HPX-style
+//! distributed version (paper Listing 1.2), level-synchronous BSP baseline
+//! (distributed BGL stand-in), and a direction-optimizing extension.
+
+pub mod async_hpx;
+pub mod direction_opt;
+pub mod level_sync;
+pub mod sequential;
+
+use crate::amt::SimReport;
+use crate::graph::{Csr, VertexId};
+
+/// Result of a distributed BFS run.
+#[derive(Debug)]
+pub struct BfsResult {
+    /// `parents[v]` = BFS-tree parent of `v`, `parents[root] == root`,
+    /// `-1` for unreachable vertices.
+    pub parents: Vec<i64>,
+    /// Timing/traffic report from the simulated runtime.
+    pub report: SimReport,
+}
+
+/// Validate a parent array against the graph, GAP-benchmark style:
+///
+/// 1. the root is its own parent;
+/// 2. exactly the vertices reachable from `root` have parents;
+/// 3. every tree edge `(parents[v], v)` exists in the graph;
+/// 4. walking parents from any reached vertex terminates at the root
+///    (tree, no cycles);
+/// 5. tree levels are consistent with true BFS distances: a vertex at
+///    true distance `d` has a parent at true distance `>= d - 1`
+///    (asynchronous BFS may produce non-minimal trees, which the paper's
+///    CAS-based `set_parent` permits; minimality is NOT required).
+pub fn validate_parents(g: &Csr, root: VertexId, parents: &[i64]) -> Result<(), String> {
+    let n = g.n();
+    if parents.len() != n {
+        return Err(format!("parents length {} != n {}", parents.len(), n));
+    }
+    if parents[root as usize] != root as i64 {
+        return Err(format!("root parent is {}, not itself", parents[root as usize]));
+    }
+    let dist = sequential::distances(g, root);
+    for v in 0..n {
+        let reached = parents[v] >= 0;
+        let reachable = dist[v] >= 0;
+        if reached != reachable {
+            return Err(format!(
+                "vertex {v}: parent={} but true distance={}",
+                parents[v], dist[v]
+            ));
+        }
+        if reached && v != root as usize {
+            let p = parents[v] as VertexId;
+            if !g.has_edge(p, v as VertexId) {
+                return Err(format!("tree edge {p}->{v} not in graph"));
+            }
+        }
+    }
+    // Walk up from every reached vertex; path lengths bounded by n.
+    for v in 0..n {
+        if parents[v] < 0 {
+            continue;
+        }
+        let mut cur = v;
+        let mut steps = 0usize;
+        while cur != root as usize {
+            cur = parents[cur] as usize;
+            steps += 1;
+            if steps > n {
+                return Err(format!("cycle in parent chain starting at {v}"));
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Derive per-vertex tree levels from a parent array (-1 = unreachable).
+pub fn tree_levels(root: VertexId, parents: &[i64]) -> Vec<i64> {
+    let n = parents.len();
+    let mut levels = vec![-1i64; n];
+    levels[root as usize] = 0;
+    for v in 0..n {
+        if parents[v] < 0 || levels[v] >= 0 {
+            continue;
+        }
+        // Walk up until a labelled ancestor, then unwind.
+        let mut chain = vec![v];
+        let mut cur = parents[v] as usize;
+        while levels[cur] < 0 {
+            chain.push(cur);
+            cur = parents[cur] as usize;
+        }
+        let mut lvl = levels[cur];
+        for &u in chain.iter().rev() {
+            lvl += 1;
+            levels[u] = lvl;
+        }
+    }
+    levels
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generators;
+
+    #[test]
+    fn validate_accepts_sequential_tree() {
+        let g = generators::urand(7, 4, 8);
+        let parents = sequential::bfs(&g, 0);
+        validate_parents(&g, 0, &parents).unwrap();
+    }
+
+    #[test]
+    fn validate_rejects_fake_edge() {
+        let g = generators::path(4);
+        // claim 3's parent is 0 (no edge 0-3)
+        let parents = vec![0i64, 0, 1, 0];
+        assert!(validate_parents(&g, 0, &parents).is_err());
+    }
+
+    #[test]
+    fn validate_rejects_unreachable_marked_reached() {
+        let mut el = crate::graph::EdgeList::new(3);
+        el.push(0, 1);
+        let g = Csr::from_edge_list(&el);
+        let parents = vec![0i64, 0, 1]; // 2 is not reachable
+        assert!(validate_parents(&g, 0, &parents).is_err());
+    }
+
+    #[test]
+    fn validate_rejects_cycle() {
+        let g = generators::cycle(4);
+        // 1 and 2 point at each other
+        let parents = vec![0i64, 2, 1, 0];
+        assert!(validate_parents(&g, 0, &parents).is_err());
+    }
+
+    #[test]
+    fn tree_levels_on_path() {
+        let parents = vec![0i64, 0, 1, 2];
+        assert_eq!(tree_levels(0, &parents), vec![0, 1, 2, 3]);
+    }
+}

@@ -1,0 +1,92 @@
+//! Sequential BFS — the paper's Listing 1.1, the correctness oracle and the
+//! "fastest sequential implementation" that Figure 1 normalizes against.
+
+use std::collections::VecDeque;
+
+use crate::graph::{Csr, VertexId};
+
+/// Naïve generic sequential BFS (Listing 1.1): returns the parent array,
+/// `parents[root] == root`, `-1` for unreachable.
+pub fn bfs(g: &Csr, root: VertexId) -> Vec<i64> {
+    let mut parents = vec![-1i64; g.n()];
+    if g.n() == 0 {
+        return parents;
+    }
+    parents[root as usize] = root as i64;
+    let mut frontier = VecDeque::new();
+    frontier.push_back(root);
+    while let Some(u) = frontier.pop_front() {
+        for &v in g.neighbors(u) {
+            if parents[v as usize] == -1 {
+                parents[v as usize] = u as i64;
+                frontier.push_back(v);
+            }
+        }
+    }
+    parents
+}
+
+/// BFS distances from `root` (`-1` unreachable).
+pub fn distances(g: &Csr, root: VertexId) -> Vec<i64> {
+    let mut dist = vec![-1i64; g.n()];
+    if g.n() == 0 {
+        return dist;
+    }
+    dist[root as usize] = 0;
+    let mut frontier = VecDeque::new();
+    frontier.push_back(root);
+    while let Some(u) = frontier.pop_front() {
+        for &v in g.neighbors(u) {
+            if dist[v as usize] == -1 {
+                dist[v as usize] = dist[u as usize] + 1;
+                frontier.push_back(v);
+            }
+        }
+    }
+    dist
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generators;
+
+    #[test]
+    fn path_distances() {
+        let g = generators::path(6);
+        assert_eq!(distances(&g, 0), vec![0, 1, 2, 3, 4, 5]);
+        assert_eq!(bfs(&g, 0), vec![0, 0, 1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn star_is_one_hop() {
+        let g = generators::star(5);
+        assert_eq!(distances(&g, 0), vec![0, 1, 1, 1, 1]);
+        assert_eq!(distances(&g, 3), vec![1, 2, 2, 0, 2]);
+    }
+
+    #[test]
+    fn disconnected_vertices_stay_unreached() {
+        let mut el = crate::graph::EdgeList::new(4);
+        el.push(0, 1);
+        el.push(1, 0);
+        let g = crate::graph::Csr::from_edge_list(&el);
+        let d = distances(&g, 0);
+        assert_eq!(d, vec![0, 1, -1, -1]);
+        let p = bfs(&g, 0);
+        assert_eq!(p[2], -1);
+        assert_eq!(p[3], -1);
+    }
+
+    #[test]
+    fn parents_are_one_level_up() {
+        let g = generators::kron(8, 8, 1);
+        let p = bfs(&g, 0);
+        let d = distances(&g, 0);
+        for v in 0..g.n() {
+            if p[v] >= 0 && v != 0 {
+                assert_eq!(d[v], d[p[v] as usize] + 1, "v={v}");
+            }
+        }
+    }
+}

@@ -1,0 +1,275 @@
+//! Connected components — §6 future-work extension.
+//!
+//! Sequential oracle: union-find. Distributed: min-label propagation in
+//! BSP supersteps (each vertex adopts the smallest label seen; remote
+//! updates batched per destination) — the standard Shiloach-Vishkin-flavored
+//! formulation frameworks like Pregel ship.
+
+use std::sync::Arc;
+
+use crate::amt::sim::{Actor, Ctx, LocalityId, Message, SimConfig, SimRuntime};
+use crate::amt::SimReport;
+use crate::graph::{Csr, DistGraph, Shard, VertexId};
+
+/// Result of a distributed CC run.
+#[derive(Debug)]
+pub struct CcResult {
+    /// Component label per vertex (smallest vertex id in the component).
+    pub labels: Vec<VertexId>,
+    /// Runtime report.
+    pub report: SimReport,
+}
+
+/// Sequential union-find oracle; labels are canonical minimum vertex ids.
+pub fn union_find(g: &Csr) -> Vec<VertexId> {
+    let n = g.n();
+    let mut parent: Vec<u32> = (0..n as u32).collect();
+    fn find(parent: &mut [u32], x: u32) -> u32 {
+        let mut r = x;
+        while parent[r as usize] != r {
+            r = parent[r as usize];
+        }
+        let mut c = x;
+        while parent[c as usize] != r {
+            let next = parent[c as usize];
+            parent[c as usize] = r;
+            c = next;
+        }
+        r
+    }
+    for u in 0..n as VertexId {
+        for &v in g.neighbors(u) {
+            let (ru, rv) = (find(&mut parent, u), find(&mut parent, v));
+            if ru != rv {
+                // union by smaller id to get canonical min labels
+                if ru < rv {
+                    parent[rv as usize] = ru;
+                } else {
+                    parent[ru as usize] = rv;
+                }
+            }
+        }
+    }
+    (0..n as u32).map(|v| find(&mut parent, v)).collect()
+}
+
+/// Number of distinct components in a label vector.
+pub fn component_count(labels: &[VertexId]) -> usize {
+    let mut sorted = labels.to_vec();
+    sorted.sort_unstable();
+    sorted.dedup();
+    sorted.len()
+}
+
+/// Label-propagation messages.
+#[derive(Debug, Clone)]
+pub enum CcMsg {
+    /// Batched label updates `(vertex, label)`.
+    Labels(Vec<(VertexId, VertexId)>),
+    /// Activity reduction.
+    Count(u64),
+    /// Coordinator verdict.
+    Continue(bool),
+}
+
+impl Message for CcMsg {
+    fn wire_bytes(&self) -> usize {
+        match self {
+            CcMsg::Labels(v) => 8 * v.len(),
+            CcMsg::Count(_) => 8,
+            CcMsg::Continue(_) => 1,
+        }
+    }
+
+    fn item_count(&self) -> usize {
+        match self {
+            CcMsg::Labels(v) => v.len(),
+            _ => 1,
+        }
+    }
+}
+
+#[derive(PartialEq)]
+enum Phase {
+    AfterPropagate,
+    AwaitDecision,
+}
+
+struct CcActor {
+    shard: Arc<Shard>,
+    dist: Arc<DistGraph>,
+    labels: Vec<VertexId>,
+    active: Vec<u32>, // local indices with changed labels
+    in_active: Vec<bool>,
+    inbox: Vec<(VertexId, VertexId)>,
+    counts_sum: u64,
+    continue_flag: bool,
+    phase: Phase,
+}
+
+impl CcActor {
+    fn propagate(&mut self, ctx: &mut Ctx<CcMsg>) {
+        let here = ctx.locality();
+        let p = ctx.n_localities() as usize;
+        let mut outgoing: Vec<Vec<(VertexId, VertexId)>> = vec![Vec::new(); p];
+        let mut activity = 0u64;
+        let active = std::mem::take(&mut self.active);
+        for &lu in &active {
+            self.in_active[lu as usize] = false;
+        }
+        let mut next: Vec<u32> = Vec::new();
+        for &lu in &active {
+            let label = self.labels[lu as usize];
+            for &w in self.shard.out_neighbors(lu as usize) {
+                let dst = self.dist.owner(w);
+                if dst == here {
+                    let lw = (w as usize - self.shard.range.start) as u32;
+                    if label < self.labels[lw as usize] {
+                        self.labels[lw as usize] = label;
+                        if !self.in_active[lw as usize] {
+                            self.in_active[lw as usize] = true;
+                            next.push(lw);
+                        }
+                        activity += 1;
+                    }
+                } else {
+                    outgoing[dst as usize].push((w, label));
+                    activity += 1;
+                }
+            }
+        }
+        self.active = next;
+        for (dst, batch) in outgoing.into_iter().enumerate() {
+            if !batch.is_empty() {
+                ctx.send(dst as LocalityId, CcMsg::Labels(batch));
+            }
+        }
+        ctx.send(0, CcMsg::Count(activity));
+        self.phase = Phase::AfterPropagate;
+        ctx.request_barrier();
+    }
+}
+
+impl Actor for CcActor {
+    type Msg = CcMsg;
+
+    fn on_start(&mut self, ctx: &mut Ctx<CcMsg>) {
+        // Everyone starts active with their own id as label.
+        self.active = (0..self.shard.n_local() as u32).collect();
+        self.in_active = vec![true; self.shard.n_local()];
+        self.propagate(ctx);
+    }
+
+    fn on_message(&mut self, _ctx: &mut Ctx<CcMsg>, _from: LocalityId, msg: CcMsg) {
+        match msg {
+            CcMsg::Labels(batch) => self.inbox.extend(batch),
+            CcMsg::Count(c) => self.counts_sum += c,
+            CcMsg::Continue(b) => self.continue_flag = b,
+        }
+    }
+
+    fn on_barrier(&mut self, ctx: &mut Ctx<CcMsg>, _epoch: u64) {
+        match self.phase {
+            Phase::AfterPropagate => {
+                let inbox = std::mem::take(&mut self.inbox);
+                for (v, label) in inbox {
+                    let lv = (v as usize - self.shard.range.start) as u32;
+                    if label < self.labels[lv as usize] {
+                        self.labels[lv as usize] = label;
+                        if !self.in_active[lv as usize] {
+                            self.in_active[lv as usize] = true;
+                            self.active.push(lv);
+                        }
+                    }
+                }
+                if ctx.locality() == 0 {
+                    let go = self.counts_sum > 0;
+                    self.counts_sum = 0;
+                    for l in 0..ctx.n_localities() {
+                        ctx.send(l, CcMsg::Continue(go));
+                    }
+                }
+                self.phase = Phase::AwaitDecision;
+                ctx.request_barrier();
+            }
+            Phase::AwaitDecision => {
+                if self.continue_flag {
+                    self.propagate(ctx);
+                }
+            }
+        }
+    }
+}
+
+/// Run BSP min-label propagation CC.
+pub fn run(dist: &DistGraph, cfg: SimConfig) -> CcResult {
+    let dist = Arc::new(dist.clone());
+    let actors: Vec<CcActor> = dist
+        .shards
+        .iter()
+        .map(|s| CcActor {
+            shard: Arc::new(s.clone()),
+            dist: Arc::clone(&dist),
+            labels: (s.range.start as VertexId..s.range.end as VertexId).collect(),
+            active: Vec::new(),
+            in_active: Vec::new(),
+            inbox: Vec::new(),
+            counts_sum: 0,
+            continue_flag: false,
+            phase: Phase::AfterPropagate,
+        })
+        .collect();
+    let (actors, report) = SimRuntime::new(cfg).run(actors);
+    let mut labels = vec![0 as VertexId; dist.n()];
+    for a in &actors {
+        labels[a.shard.range.clone()].copy_from_slice(&a.labels);
+    }
+    CcResult { labels, report }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::amt::NetConfig;
+    use crate::graph::generators;
+
+    #[test]
+    fn matches_union_find() {
+        for p in [1u32, 2, 4, 8] {
+            let g = generators::urand(6, 2, 41 + p as u64); // sparse -> many components
+            let want = union_find(&g);
+            let d = DistGraph::block(&g, p);
+            let res = run(&d, SimConfig::deterministic(NetConfig::default()));
+            assert_eq!(res.labels, want, "p={p}");
+        }
+    }
+
+    #[test]
+    fn connected_graph_has_one_component() {
+        let g = generators::grid(8, 8);
+        let d = DistGraph::block(&g, 4);
+        let res = run(&d, SimConfig::deterministic(NetConfig::default()));
+        assert_eq!(component_count(&res.labels), 1);
+        assert!(res.labels.iter().all(|&l| l == 0));
+    }
+
+    #[test]
+    fn isolated_vertices_keep_own_label() {
+        let el = crate::graph::EdgeList::new(5);
+        let g = Csr::from_edge_list(&el);
+        let d = DistGraph::block(&g, 2);
+        let res = run(&d, SimConfig::deterministic(NetConfig::default()));
+        assert_eq!(res.labels, vec![0, 1, 2, 3, 4]);
+        assert_eq!(component_count(&res.labels), 5);
+    }
+
+    #[test]
+    fn union_find_two_triangles() {
+        let g = crate::graph::builder::GraphBuilder::new(6)
+            .edges([(0, 1), (1, 2), (2, 0), (3, 4), (4, 5), (5, 3)])
+            .symmetrize()
+            .build();
+        let labels = union_find(&g);
+        assert_eq!(labels, vec![0, 0, 0, 3, 3, 3]);
+    }
+}

@@ -1,0 +1,24 @@
+//! Graph algorithms in both of the paper's execution models.
+//!
+//! Every distributed algorithm is an [`Actor`](crate::amt::Actor) over the
+//! simulated AMT runtime and comes in (at least) two flavors:
+//!
+//! * **`async_*`** — the paper's HPX style: eager fine-grained messages,
+//!   no global barriers (or only per-iteration ones), computation and
+//!   communication overlapped;
+//! * **`bsp_*` / `level_sync`** — the PBGL/Boost baseline style:
+//!   supersteps, batched per-destination combiners, global barriers.
+//!
+//! [`bfs`] and [`pagerank`] are the paper's two evaluated algorithms
+//! (Figures 1 and 2); [`sssp`], [`cc`] and [`triangle`] are the §6
+//! future-work extensions ("broaden the scope of algorithms ... traversal,
+//! centrality, and pattern-matching").
+
+pub mod bfs;
+pub mod cc;
+pub mod pagerank;
+pub mod sssp;
+pub mod triangle;
+
+/// Damping factor the paper (and Brin & Page) use.
+pub const DEFAULT_ALPHA: f32 = 0.85;

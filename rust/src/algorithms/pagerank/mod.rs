@@ -1,0 +1,67 @@
+//! PageRank: sequential oracle, BSP/PBGL baseline, asynchronous HPX-style
+//! variants (naive + optimized, paper §4.2), and the kernel-offloaded
+//! variant that runs the local rank-update phase on the AOT-compiled
+//! Pallas/XLA module.
+//!
+//! All distributed variants run a fixed iteration count (GAP-benchmark
+//! convention) with one global barrier per iteration separating the
+//! contribution exchange from the rank update — the paper's
+//! "synchronization across iterations". They differ *only* in how
+//! contributions travel:
+//!
+//! | variant       | remote contributions                     | applied      |
+//! |---------------|------------------------------------------|--------------|
+//! | `bsp`         | per-destination combiner, 1 envelope/dst | at barrier   |
+//! | `async naive` | one message per remote edge              | on arrival   |
+//! | `async opt`   | chunked combiner flushes (overlap knob)  | on arrival   |
+//! | `kernel`      | contribution-slice allgather             | local kernel |
+
+pub mod async_hpx;
+pub mod bsp;
+pub mod kernel;
+pub mod sequential;
+
+use crate::amt::SimReport;
+
+/// Result of a distributed PageRank run.
+#[derive(Debug)]
+pub struct PrResult {
+    /// Final ranks in global vertex order.
+    pub ranks: Vec<f32>,
+    /// Per-iteration global L1 deltas (convergence trace).
+    pub deltas: Vec<f32>,
+    /// Timing/traffic report.
+    pub report: SimReport,
+}
+
+/// Shared PageRank parameters.
+#[derive(Debug, Clone, Copy)]
+pub struct PrParams {
+    /// Damping factor (paper: 0.85).
+    pub alpha: f32,
+    /// Fixed iteration count.
+    pub iterations: u32,
+}
+
+impl Default for PrParams {
+    fn default() -> Self {
+        PrParams { alpha: super::DEFAULT_ALPHA, iterations: 20 }
+    }
+}
+
+/// Compare two rank vectors with an L∞ tolerance.
+pub fn max_abs_diff(a: &[f32], b: &[f32]) -> f32 {
+    assert_eq!(a.len(), b.len());
+    a.iter().zip(b).map(|(x, y)| (x - y).abs()).fold(0.0, f32::max)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn max_abs_diff_basics() {
+        assert_eq!(max_abs_diff(&[1.0, 2.0], &[1.5, 2.0]), 0.5);
+        assert_eq!(max_abs_diff(&[], &[]), 0.0);
+    }
+}

@@ -1,0 +1,422 @@
+//! Single-source shortest paths — §6 future-work extension.
+//!
+//! Sequential oracle: binary-heap Dijkstra. Distributed: asynchronous
+//! *label-correcting* relaxation (the natural HPX formulation — an improved
+//! tentative distance triggers eager remote relaxations, termination is
+//! network quiescence) and a BSP Bellman-Ford-style superstep baseline with
+//! per-destination combiners, mirroring the BFS/PageRank pairing.
+
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
+
+use crate::amt::sim::{Actor, Ctx, LocalityId, Message, SimConfig, SimRuntime};
+use crate::amt::SimReport;
+use crate::graph::{Csr, DistGraph, Partition1D, VertexId};
+
+/// Result of a distributed SSSP run.
+#[derive(Debug)]
+pub struct SsspResult {
+    /// Tentative distances (`f32::INFINITY` = unreachable).
+    pub dist: Vec<f32>,
+    /// Runtime report.
+    pub report: SimReport,
+}
+
+/// Sequential Dijkstra oracle (non-negative weights).
+pub fn dijkstra(g: &Csr, source: VertexId) -> Vec<f32> {
+    let n = g.n();
+    let mut dist = vec![f32::INFINITY; n];
+    if n == 0 {
+        return dist;
+    }
+    dist[source as usize] = 0.0;
+    // (ordered-dist, vertex) min-heap via Reverse on bit-ordered f32.
+    let mut heap: BinaryHeap<Reverse<(u32, VertexId)>> = BinaryHeap::new();
+    heap.push(Reverse((0f32.to_bits(), source)));
+    while let Some(Reverse((db, u))) = heap.pop() {
+        let d = f32::from_bits(db);
+        if d > dist[u as usize] {
+            continue;
+        }
+        for (v, w) in g.neighbors_weighted(u) {
+            let nd = d + w;
+            if nd < dist[v as usize] {
+                dist[v as usize] = nd;
+                heap.push(Reverse((nd.to_bits(), v)));
+            }
+        }
+    }
+    dist
+}
+
+/// Relaxation message: `v` may be reachable at distance `d`.
+#[derive(Debug, Clone)]
+pub struct Relax {
+    /// Target vertex (owned by receiver).
+    pub v: VertexId,
+    /// Proposed distance.
+    pub d: f32,
+}
+
+impl Message for Relax {
+    fn wire_bytes(&self) -> usize {
+        8
+    }
+}
+
+/// Weighted shard view (weights parallel to `Shard::out_neighbors` order).
+struct WeightedShard {
+    range: std::ops::Range<usize>,
+    offsets: Vec<usize>,
+    targets: Vec<VertexId>,
+    weights: Vec<f32>,
+}
+
+impl WeightedShard {
+    fn build(g: &Csr, partition: &Partition1D, l: LocalityId) -> Self {
+        let range = partition.range_of(l);
+        let mut offsets = vec![0usize];
+        let mut targets = Vec::new();
+        let mut weights = Vec::new();
+        for v in range.clone() {
+            if g.is_weighted() {
+                for (t, w) in g.neighbors_weighted(v as VertexId) {
+                    targets.push(t);
+                    weights.push(w);
+                }
+            } else {
+                // Unweighted graphs get unit weights (SSSP == hop count).
+                for &t in g.neighbors(v as VertexId) {
+                    targets.push(t);
+                    weights.push(1.0);
+                }
+            }
+            offsets.push(targets.len());
+        }
+        WeightedShard { range, offsets, targets, weights }
+    }
+
+    fn edges(&self, local: usize) -> impl Iterator<Item = (VertexId, f32)> + '_ {
+        let r = self.offsets[local]..self.offsets[local + 1];
+        self.targets[r.clone()].iter().cloned().zip(self.weights[r].iter().cloned())
+    }
+}
+
+/// Asynchronous label-correcting SSSP actor.
+struct AsyncSsspActor {
+    shard: WeightedShard,
+    partition: Partition1D,
+    source: VertexId,
+    /// Owned tentative distances.
+    dist: Vec<f32>,
+    /// Best distance already *sent* per remote vertex — legitimate local
+    /// knowledge (our own send history) that prunes the label-correcting
+    /// flood: re-sending a no-better relaxation is pure waste.
+    best_sent: Vec<f32>,
+}
+
+impl AsyncSsspActor {
+    /// Cascade a relaxation through the local shard in (approximate)
+    /// priority order — a per-locality Dijkstra wavefront, the standard
+    /// trick that keeps unordered label-correcting from re-relaxing
+    /// whole subtrees (re-relaxation factor drops from O(diameter) to
+    /// ~1 on random weights).
+    fn relax_from(&mut self, ctx: &mut Ctx<Relax>, v: VertexId, d: f32) {
+        let here = ctx.locality();
+        let mut heap: BinaryHeap<Reverse<(u32, VertexId)>> = BinaryHeap::new();
+        heap.push(Reverse((d.to_bits(), v)));
+        while let Some(Reverse((db, u))) = heap.pop() {
+            let du = f32::from_bits(db);
+            let lu = u as usize - self.shard.range.start;
+            if du >= self.dist[lu] {
+                continue;
+            }
+            self.dist[lu] = du;
+            for (w, wt) in self.shard.edges(lu) {
+                let nd = du + wt;
+                let dst = self.partition.owner(w);
+                if dst == here {
+                    if nd < self.dist[w as usize - self.shard.range.start] {
+                        heap.push(Reverse((nd.to_bits(), w)));
+                    }
+                } else if nd < self.best_sent[w as usize] {
+                    self.best_sent[w as usize] = nd;
+                    ctx.send(dst, Relax { v: w, d: nd });
+                }
+            }
+        }
+    }
+}
+
+impl Actor for AsyncSsspActor {
+    type Msg = Relax;
+
+    fn on_start(&mut self, ctx: &mut Ctx<Relax>) {
+        if self.partition.owner(self.source) == ctx.locality() {
+            let s = self.source;
+            self.relax_from(ctx, s, 0.0);
+        }
+    }
+
+    fn on_message(&mut self, ctx: &mut Ctx<Relax>, _from: LocalityId, msg: Relax) {
+        self.relax_from(ctx, msg.v, msg.d);
+    }
+}
+
+/// Run asynchronous label-correcting SSSP (requires a weighted graph).
+pub fn run_async(g: &Csr, dist_graph: &DistGraph, source: VertexId, cfg: SimConfig) -> SsspResult {
+    let p = dist_graph.p();
+    let actors: Vec<AsyncSsspActor> = (0..p)
+        .map(|l| AsyncSsspActor {
+            shard: WeightedShard::build(g, &dist_graph.partition, l),
+            partition: dist_graph.partition.clone(),
+            source,
+            dist: vec![f32::INFINITY; dist_graph.partition.len_of(l)],
+            best_sent: vec![f32::INFINITY; dist_graph.n()],
+        })
+        .collect();
+    let (actors, report) = SimRuntime::new(cfg).run(actors);
+    let mut dist = vec![f32::INFINITY; dist_graph.n()];
+    for a in &actors {
+        dist[a.shard.range.clone()].copy_from_slice(&a.dist);
+    }
+    SsspResult { dist, report }
+}
+
+/// BSP SSSP messages.
+#[derive(Debug, Clone)]
+pub enum BspSsspMsg {
+    /// Batched relaxations `(vertex, distance)`.
+    Relaxations(Vec<(VertexId, f32)>),
+    /// Activity count for the termination reduction.
+    Count(u64),
+    /// Coordinator verdict.
+    Continue(bool),
+}
+
+impl Message for BspSsspMsg {
+    fn wire_bytes(&self) -> usize {
+        match self {
+            BspSsspMsg::Relaxations(v) => 8 * v.len(),
+            BspSsspMsg::Count(_) => 8,
+            BspSsspMsg::Continue(_) => 1,
+        }
+    }
+
+    fn item_count(&self) -> usize {
+        match self {
+            BspSsspMsg::Relaxations(v) => v.len(),
+            _ => 1,
+        }
+    }
+}
+
+#[derive(PartialEq)]
+enum Phase {
+    AfterRelax,
+    AwaitDecision,
+}
+
+/// BSP Bellman-Ford-style actor: relax the active set each superstep.
+struct BspSsspActor {
+    shard: WeightedShard,
+    partition: Partition1D,
+    source: VertexId,
+    dist: Vec<f32>,
+    active: Vec<VertexId>,
+    /// O(1) membership test for `active` (local index space).
+    in_active: Vec<bool>,
+    inbox: Vec<(VertexId, f32)>,
+    counts_seen: u32,
+    counts_sum: u64,
+    continue_flag: bool,
+    phase: Phase,
+}
+
+impl BspSsspActor {
+    fn relax_round(&mut self, ctx: &mut Ctx<BspSsspMsg>) {
+        let here = ctx.locality();
+        let p = ctx.n_localities() as usize;
+        let mut outgoing: Vec<Vec<(VertexId, f32)>> = vec![Vec::new(); p];
+        let mut activity = 0u64;
+        let mut next: Vec<VertexId> = Vec::new();
+        let active = std::mem::take(&mut self.active);
+        for &u in &active {
+            self.in_active[u as usize - self.shard.range.start] = false;
+        }
+        for &u in &active {
+            let lu = u as usize - self.shard.range.start;
+            let du = self.dist[lu];
+            for (w, wt) in self.shard.edges(lu) {
+                let nd = du + wt;
+                let dst = self.partition.owner(w);
+                if dst == here {
+                    let lw = w as usize - self.shard.range.start;
+                    if nd < self.dist[lw] {
+                        self.dist[lw] = nd;
+                        if !self.in_active[lw] {
+                            self.in_active[lw] = true;
+                            next.push(w);
+                        }
+                        activity += 1;
+                    }
+                } else {
+                    outgoing[dst as usize].push((w, nd));
+                    activity += 1;
+                }
+            }
+        }
+        self.active = next;
+        for (dst, batch) in outgoing.into_iter().enumerate() {
+            if !batch.is_empty() {
+                ctx.send(dst as LocalityId, BspSsspMsg::Relaxations(batch));
+            }
+        }
+        ctx.send(0, BspSsspMsg::Count(activity));
+        self.phase = Phase::AfterRelax;
+        ctx.request_barrier();
+    }
+}
+
+impl Actor for BspSsspActor {
+    type Msg = BspSsspMsg;
+
+    fn on_start(&mut self, ctx: &mut Ctx<BspSsspMsg>) {
+        if self.partition.owner(self.source) == ctx.locality() {
+            let ls = self.source as usize - self.shard.range.start;
+            self.dist[ls] = 0.0;
+            self.in_active[ls] = true;
+            self.active.push(self.source);
+        }
+        self.relax_round(ctx);
+    }
+
+    fn on_message(&mut self, _ctx: &mut Ctx<BspSsspMsg>, _from: LocalityId, msg: BspSsspMsg) {
+        match msg {
+            BspSsspMsg::Relaxations(batch) => self.inbox.extend(batch),
+            BspSsspMsg::Count(c) => {
+                self.counts_seen += 1;
+                self.counts_sum += c;
+            }
+            BspSsspMsg::Continue(b) => self.continue_flag = b,
+        }
+    }
+
+    fn on_barrier(&mut self, ctx: &mut Ctx<BspSsspMsg>, _epoch: u64) {
+        match self.phase {
+            Phase::AfterRelax => {
+                let inbox = std::mem::take(&mut self.inbox);
+                for (v, d) in inbox {
+                    let lv = v as usize - self.shard.range.start;
+                    if d < self.dist[lv] {
+                        self.dist[lv] = d;
+                        if !self.in_active[lv] {
+                            self.in_active[lv] = true;
+                            self.active.push(v);
+                        }
+                    }
+                }
+                if ctx.locality() == 0 {
+                    let go = self.counts_sum > 0;
+                    self.counts_sum = 0;
+                    self.counts_seen = 0;
+                    for l in 0..ctx.n_localities() {
+                        ctx.send(l, BspSsspMsg::Continue(go));
+                    }
+                }
+                self.phase = Phase::AwaitDecision;
+                ctx.request_barrier();
+            }
+            Phase::AwaitDecision => {
+                if self.continue_flag {
+                    self.relax_round(ctx);
+                }
+            }
+        }
+    }
+}
+
+/// Run BSP Bellman-Ford-style SSSP (requires a weighted graph).
+pub fn run_bsp(g: &Csr, dist_graph: &DistGraph, source: VertexId, cfg: SimConfig) -> SsspResult {
+    let p = dist_graph.p();
+    let actors: Vec<BspSsspActor> = (0..p)
+        .map(|l| BspSsspActor {
+            shard: WeightedShard::build(g, &dist_graph.partition, l),
+            partition: dist_graph.partition.clone(),
+            source,
+            dist: vec![f32::INFINITY; dist_graph.partition.len_of(l)],
+            active: Vec::new(),
+            in_active: vec![false; dist_graph.partition.len_of(l)],
+            inbox: Vec::new(),
+            counts_seen: 0,
+            counts_sum: 0,
+            continue_flag: false,
+            phase: Phase::AfterRelax,
+        })
+        .collect();
+    let (actors, report) = SimRuntime::new(cfg).run(actors);
+    let mut dist = vec![f32::INFINITY; dist_graph.n()];
+    for a in &actors {
+        dist[a.shard.range.clone()].copy_from_slice(&a.dist);
+    }
+    SsspResult { dist, report }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::amt::NetConfig;
+    use crate::graph::generators;
+
+    fn weighted_graph(scale: u32, seed: u64) -> Csr {
+        generators::with_random_weights(&generators::urand(scale, 4, seed), 1.0, 10.0, seed + 1)
+    }
+
+    fn close(a: &[f32], b: &[f32]) -> bool {
+        a.iter().zip(b).all(|(x, y)| {
+            (x.is_infinite() && y.is_infinite()) || (x - y).abs() < 1e-3
+        })
+    }
+
+    #[test]
+    fn async_matches_dijkstra() {
+        for p in [1u32, 2, 4, 8] {
+            let g = weighted_graph(6, 31 + p as u64);
+            let want = dijkstra(&g, 0);
+            let d = DistGraph::block(&g, p);
+            let res = run_async(&g, &d, 0, SimConfig::deterministic(NetConfig::default()));
+            assert!(close(&res.dist, &want), "p={p}");
+        }
+    }
+
+    #[test]
+    fn bsp_matches_dijkstra() {
+        for p in [1u32, 3, 4] {
+            let g = weighted_graph(6, 77 + p as u64);
+            let want = dijkstra(&g, 0);
+            let d = DistGraph::block(&g, p);
+            let res = run_bsp(&g, &d, 0, SimConfig::deterministic(NetConfig::default()));
+            assert!(close(&res.dist, &want), "p={p}");
+        }
+    }
+
+    #[test]
+    fn dijkstra_path_graph() {
+        let g = generators::with_random_weights(&generators::path(5), 1.0, 1.0 + 1e-6, 1);
+        let d = dijkstra(&g, 0);
+        for (i, x) in d.iter().enumerate() {
+            assert!((x - i as f32).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn unreachable_is_infinite() {
+        let mut el = crate::graph::EdgeList::new(3);
+        el.push_weighted(0, 1, 1.0);
+        let g = Csr::from_edge_list(&el);
+        let d = DistGraph::block(&g, 2);
+        let res = run_async(&g, &d, 0, SimConfig::deterministic(NetConfig::default()));
+        assert_eq!(res.dist[1], 1.0);
+        assert!(res.dist[2].is_infinite());
+    }
+}

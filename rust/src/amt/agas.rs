@@ -1,0 +1,207 @@
+//! AGAS-style global address resolution.
+//!
+//! HPX's Active Global Address Space lets a program hold a *global* id and
+//! resolve it to (locality, local address) at runtime, so distributed data
+//! structures can be addressed uniformly. Our equivalent is deliberately
+//! small: block-distributed objects register their [`super::sim::LocalityId`]
+//! mapping here, and algorithms resolve global indices through it instead of
+//! hard-coding partition arithmetic.
+
+use super::sim::LocalityId;
+
+/// Resolved global address: which locality owns the element and at what
+/// local offset it lives.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct GlobalAddress {
+    /// Owning locality.
+    pub locality: LocalityId,
+    /// Offset within that locality's segment.
+    pub offset: usize,
+}
+
+/// Block-cyclic-free 1-D block resolver: element `i` of a length-`len`
+/// object distributed over `n_localities` in contiguous blocks.
+///
+/// The block sizes follow HPX's `container_layout` convention: the first
+/// `len % n` localities get `ceil(len / n)` elements, the rest get
+/// `floor(len / n)`.
+#[derive(Debug, Clone)]
+pub struct BlockMap {
+    len: usize,
+    n_localities: u32,
+    big: usize,   // ceil(len / n)
+    small: usize, // floor(len / n)
+    n_big: usize, // how many localities carry `big`
+}
+
+impl BlockMap {
+    /// Create a block map for `len` elements over `n_localities`.
+    pub fn new(len: usize, n_localities: u32) -> Self {
+        assert!(n_localities > 0, "need at least one locality");
+        let n = n_localities as usize;
+        let small = len / n;
+        let n_big = len % n;
+        let big = small + usize::from(n_big > 0);
+        BlockMap { len, n_localities, big, small, n_big }
+    }
+
+    /// Total element count.
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    /// True when the map covers no elements.
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Number of localities.
+    pub fn n_localities(&self) -> u32 {
+        self.n_localities
+    }
+
+    /// Resolve a global index to its owner + offset.
+    pub fn resolve(&self, index: usize) -> GlobalAddress {
+        debug_assert!(index < self.len, "index {index} out of bounds {}", self.len);
+        let big_span = self.n_big * self.big;
+        if index < big_span {
+            GlobalAddress {
+                locality: (index / self.big) as LocalityId,
+                offset: index % self.big,
+            }
+        } else {
+            let rest = index - big_span;
+            GlobalAddress {
+                locality: (self.n_big + rest / self.small.max(1)) as LocalityId,
+                offset: rest % self.small.max(1),
+            }
+        }
+    }
+
+    /// Owning locality of a global index.
+    pub fn owner(&self, index: usize) -> LocalityId {
+        self.resolve(index).locality
+    }
+
+    /// Half-open global index range owned by `locality`.
+    pub fn range_of(&self, locality: LocalityId) -> std::ops::Range<usize> {
+        let l = locality as usize;
+        assert!(l < self.n_localities as usize);
+        if l < self.n_big {
+            let start = l * self.big;
+            start..start + self.big
+        } else {
+            let start = self.n_big * self.big + (l - self.n_big) * self.small;
+            start..start + self.small
+        }
+    }
+
+    /// Number of elements owned by `locality`.
+    pub fn segment_len(&self, locality: LocalityId) -> usize {
+        let r = self.range_of(locality);
+        r.end - r.start
+    }
+
+    /// Convert a (locality, offset) pair back to the global index.
+    pub fn global_index(&self, addr: GlobalAddress) -> usize {
+        self.range_of(addr.locality).start + addr.offset
+    }
+}
+
+/// A tiny AGAS registry: names distributed objects and returns their block
+/// maps. Algorithms that hold several distributed vectors (parents, ranks,
+/// contributions) register them once and resolve through the handle.
+#[derive(Debug, Default)]
+pub struct Agas {
+    objects: Vec<(String, BlockMap)>,
+}
+
+/// Handle to a registered distributed object.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct AgasHandle(usize);
+
+impl Agas {
+    /// Create an empty registry.
+    pub fn new() -> Self {
+        Agas::default()
+    }
+
+    /// Register a distributed object layout under `name`.
+    pub fn register(&mut self, name: &str, map: BlockMap) -> AgasHandle {
+        self.objects.push((name.to_string(), map));
+        AgasHandle(self.objects.len() - 1)
+    }
+
+    /// Resolve `index` within the object behind `handle`.
+    pub fn resolve(&self, handle: AgasHandle, index: usize) -> GlobalAddress {
+        self.objects[handle.0].1.resolve(index)
+    }
+
+    /// Look up a handle by registration name.
+    pub fn lookup(&self, name: &str) -> Option<AgasHandle> {
+        self.objects.iter().position(|(n, _)| n == name).map(AgasHandle)
+    }
+
+    /// The block map behind a handle.
+    pub fn map(&self, handle: AgasHandle) -> &BlockMap {
+        &self.objects[handle.0].1
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn even_split() {
+        let m = BlockMap::new(12, 4);
+        assert_eq!(m.segment_len(0), 3);
+        assert_eq!(m.segment_len(3), 3);
+        assert_eq!(m.owner(0), 0);
+        assert_eq!(m.owner(11), 3);
+        assert_eq!(m.range_of(2), 6..9);
+    }
+
+    #[test]
+    fn uneven_split_front_loads_remainder() {
+        let m = BlockMap::new(10, 4); // 3,3,2,2
+        assert_eq!(m.segment_len(0), 3);
+        assert_eq!(m.segment_len(1), 3);
+        assert_eq!(m.segment_len(2), 2);
+        assert_eq!(m.segment_len(3), 2);
+        let total: usize = (0..4).map(|l| m.segment_len(l)).sum();
+        assert_eq!(total, 10);
+    }
+
+    #[test]
+    fn resolve_roundtrips_with_global_index() {
+        for (len, n) in [(1usize, 1u32), (10, 3), (17, 5), (100, 7), (5, 8)] {
+            let m = BlockMap::new(len, n);
+            for i in 0..len {
+                let a = m.resolve(i);
+                assert_eq!(m.global_index(a), i, "len={len} n={n} i={i}");
+                assert!(m.range_of(a.locality).contains(&i));
+            }
+        }
+    }
+
+    #[test]
+    fn more_localities_than_elements() {
+        let m = BlockMap::new(3, 8);
+        // 3 localities get 1 element each, the rest get 0.
+        let total: usize = (0..8).map(|l| m.segment_len(l)).sum();
+        assert_eq!(total, 3);
+        assert_eq!(m.owner(2), 2);
+        assert_eq!(m.segment_len(7), 0);
+    }
+
+    #[test]
+    fn agas_registry_named_lookup() {
+        let mut agas = Agas::new();
+        let h = agas.register("parents", BlockMap::new(100, 4));
+        assert_eq!(agas.lookup("parents"), Some(h));
+        assert_eq!(agas.lookup("missing"), None);
+        let a = agas.resolve(h, 99);
+        assert_eq!(a.locality, 3);
+    }
+}

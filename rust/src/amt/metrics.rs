@@ -1,0 +1,161 @@
+//! Run reports and timing helpers for the simulated runtime and benches.
+
+use super::net::NetStats;
+
+/// Outcome of one simulated run: the modeled makespan plus the quantities
+/// the paper's analysis hinges on (per-locality busy time → load balance,
+/// barrier count → synchronization cost, traffic → communication overhead).
+#[derive(Debug, Clone)]
+pub struct SimReport {
+    /// Localities simulated.
+    pub n_localities: u32,
+    /// Modeled end-to-end time, us (max over locality timelines).
+    pub makespan_us: f64,
+    /// Per-locality accumulated compute+overhead charge, us.
+    pub busy_us: Vec<f64>,
+    /// Completed global barriers.
+    pub barriers: u64,
+    /// Events processed by the engine.
+    pub events: u64,
+    /// Aggregate interconnect traffic.
+    pub net: NetStats,
+    /// Traffic broken down by source locality.
+    pub per_locality_net: Vec<NetStats>,
+}
+
+impl SimReport {
+    /// Mean per-locality busy time, us.
+    pub fn mean_busy_us(&self) -> f64 {
+        if self.busy_us.is_empty() {
+            0.0
+        } else {
+            self.busy_us.iter().sum::<f64>() / self.busy_us.len() as f64
+        }
+    }
+
+    /// Load-imbalance factor: max busy / mean busy (1.0 == perfectly
+    /// balanced). The paper attributes BSP BFS slowdowns to exactly this
+    /// quantity under skewed frontiers.
+    pub fn load_imbalance(&self) -> f64 {
+        let mean = self.mean_busy_us();
+        if mean == 0.0 {
+            1.0
+        } else {
+            self.busy_us.iter().cloned().fold(0.0_f64, f64::max) / mean
+        }
+    }
+
+    /// Fraction of the makespan the average locality spent busy.
+    pub fn utilization(&self) -> f64 {
+        if self.makespan_us == 0.0 {
+            1.0
+        } else {
+            self.mean_busy_us() / self.makespan_us
+        }
+    }
+}
+
+/// Simple online mean/min/max/stddev accumulator for bench repetitions.
+#[derive(Debug, Clone, Default)]
+pub struct Stats {
+    n: u64,
+    mean: f64,
+    m2: f64,
+    min: f64,
+    max: f64,
+}
+
+impl Stats {
+    /// Create an empty accumulator.
+    pub fn new() -> Self {
+        Stats { n: 0, mean: 0.0, m2: 0.0, min: f64::INFINITY, max: f64::NEG_INFINITY }
+    }
+
+    /// Add one observation (Welford update).
+    pub fn add(&mut self, x: f64) {
+        self.n += 1;
+        let d = x - self.mean;
+        self.mean += d / self.n as f64;
+        self.m2 += d * (x - self.mean);
+        self.min = self.min.min(x);
+        self.max = self.max.max(x);
+    }
+
+    /// Number of observations.
+    pub fn count(&self) -> u64 {
+        self.n
+    }
+
+    /// Sample mean.
+    pub fn mean(&self) -> f64 {
+        self.mean
+    }
+
+    /// Smallest observation.
+    pub fn min(&self) -> f64 {
+        self.min
+    }
+
+    /// Largest observation.
+    pub fn max(&self) -> f64 {
+        self.max
+    }
+
+    /// Sample standard deviation.
+    pub fn stddev(&self) -> f64 {
+        if self.n < 2 {
+            0.0
+        } else {
+            (self.m2 / (self.n - 1) as f64).sqrt()
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stats_mean_min_max() {
+        let mut s = Stats::new();
+        for x in [2.0, 4.0, 6.0] {
+            s.add(x);
+        }
+        assert_eq!(s.count(), 3);
+        assert!((s.mean() - 4.0).abs() < 1e-12);
+        assert_eq!(s.min(), 2.0);
+        assert_eq!(s.max(), 6.0);
+        assert!((s.stddev() - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn report_load_imbalance() {
+        let r = SimReport {
+            n_localities: 2,
+            makespan_us: 100.0,
+            busy_us: vec![100.0, 50.0],
+            barriers: 0,
+            events: 0,
+            net: NetStats::default(),
+            per_locality_net: vec![],
+        };
+        assert!((r.mean_busy_us() - 75.0).abs() < 1e-12);
+        assert!((r.load_imbalance() - 100.0 / 75.0).abs() < 1e-12);
+        assert!((r.utilization() - 0.75).abs() < 1e-12);
+    }
+
+    #[test]
+    fn empty_report_is_balanced() {
+        let r = SimReport {
+            n_localities: 0,
+            makespan_us: 0.0,
+            busy_us: vec![],
+            barriers: 0,
+            events: 0,
+            net: NetStats::default(),
+            per_locality_net: vec![],
+        };
+        assert_eq!(r.load_imbalance(), 1.0);
+        assert_eq!(r.utilization(), 1.0);
+    }
+}

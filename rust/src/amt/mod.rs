@@ -1,0 +1,36 @@
+//! HPX-equivalent asynchronous many-task (AMT) substrate.
+//!
+//! The paper runs on HPX: lightweight tasks, futures, an active global
+//! address space (AGAS), `hpx::partitioned_vector`, and an MPI-backed
+//! parcelport across 32 cluster nodes. We do not have a cluster, so this
+//! module provides the same *execution model* over two cooperating pieces
+//! (substitution table in DESIGN.md §4):
+//!
+//! * **[`sim`]** — a discrete-event simulated multi-locality runtime. Each
+//!   locality is an actor with real Rust state; handlers execute real code
+//!   and are charged wall-clock compute, while inter-locality messages are
+//!   charged through a parameterized latency/bandwidth/overhead model
+//!   ([`net`]). Asynchronous (eager, fine-grained, overlap-friendly) and
+//!   BSP (superstep + barrier + batched delivery) styles are both
+//!   expressible, which is exactly the HPX-vs-PBGL contrast the paper
+//!   evaluates.
+//! * **[`executor`]** — real threaded parallel-for executors for
+//!   *intra*-locality parallelism (the paper's nodes have 64 cores),
+//!   including the `adaptive_core_chunk_size` policy of §6.
+//!
+//! [`agas`] and [`partitioned_vector`] round out the HPX surface the
+//! algorithms program against.
+
+pub mod agas;
+pub mod executor;
+pub mod metrics;
+pub mod net;
+pub mod partitioned_vector;
+pub mod sim;
+
+pub use agas::{Agas, GlobalAddress};
+pub use executor::{ChunkPolicy, Executor};
+pub use metrics::SimReport;
+pub use net::{NetConfig, NetStats};
+pub use partitioned_vector::{AtomicLongVector, PartitionedVector};
+pub use sim::{Actor, Ctx, LocalityId, SimConfig, SimRuntime, SimTime};

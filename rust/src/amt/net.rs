@@ -1,0 +1,158 @@
+//! Interconnect cost model for the simulated multi-locality runtime.
+//!
+//! The paper's testbed is a 32-node Intel Ice Lake cluster; HPX parcels ride
+//! an MPI parcelport. We model that interconnect with the standard
+//! latency/bandwidth (alpha-beta) decomposition plus per-message CPU
+//! overheads:
+//!
+//! ```text
+//! wire(msg)   = latency_us + (overhead_bytes + payload_bytes) / bandwidth
+//! sender CPU  = send_cpu_us          (serialization, parcel dispatch)
+//! receiver CPU= recv_cpu_us          (deserialization, action scheduling)
+//! ```
+//!
+//! The CPU terms are what make fine-grained asynchronous messaging *not*
+//! free — the effect behind the paper's PageRank result, where per-edge
+//! remote actions lose to PBGL's batched supersteps. Message aggregation
+//! (the "optimized" HPX variant) amortizes the latency and CPU terms over
+//! an envelope of messages to the same destination; see
+//! [`sim::Ctx::send`](super::sim::Ctx::send).
+
+/// Interconnect parameters. Defaults approximate a commodity cluster fabric
+/// (HDR-ish InfiniBand with MPI software overheads): 2 us one-way latency,
+/// 12.5 GB/s effective bandwidth, ~0.5 us of CPU per message on each side.
+#[derive(Debug, Clone)]
+pub struct NetConfig {
+    /// One-way wire latency per message (or per aggregated envelope), in us.
+    pub latency_us: f64,
+    /// Effective point-to-point bandwidth in bytes/us (12_500.0 == 12.5 GB/s).
+    pub bandwidth_bytes_per_us: f64,
+    /// Fixed per-envelope header bytes (parcel framing).
+    pub overhead_bytes: usize,
+    /// Sender-side CPU charge per envelope, in us.
+    pub send_cpu_us: f64,
+    /// Receiver-side CPU charge per envelope, in us.
+    pub recv_cpu_us: f64,
+    /// Per-item CPU charge inside an envelope (marshalling each action).
+    pub per_item_cpu_us: f64,
+}
+
+impl Default for NetConfig {
+    fn default() -> Self {
+        NetConfig {
+            latency_us: 2.0,
+            bandwidth_bytes_per_us: 12_500.0,
+            overhead_bytes: 64,
+            send_cpu_us: 0.5,
+            recv_cpu_us: 0.5,
+            per_item_cpu_us: 0.05,
+        }
+    }
+}
+
+impl NetConfig {
+    /// An idealized zero-cost network (useful for isolating compute effects
+    /// in tests and ablations).
+    pub fn zero() -> Self {
+        NetConfig {
+            latency_us: 0.0,
+            bandwidth_bytes_per_us: f64::INFINITY,
+            overhead_bytes: 0,
+            send_cpu_us: 0.0,
+            recv_cpu_us: 0.0,
+            per_item_cpu_us: 0.0,
+        }
+    }
+
+    /// Wire transit time for an envelope carrying `payload_bytes` across
+    /// `items` aggregated messages.
+    pub fn wire_us(&self, payload_bytes: usize) -> f64 {
+        self.latency_us + (self.overhead_bytes + payload_bytes) as f64 / self.bandwidth_bytes_per_us
+    }
+
+    /// Sender CPU charge for an envelope of `items` messages.
+    pub fn send_cpu(&self, items: usize) -> f64 {
+        self.send_cpu_us + self.per_item_cpu_us * items as f64
+    }
+
+    /// Receiver CPU charge for an envelope of `items` messages.
+    pub fn recv_cpu(&self, items: usize) -> f64 {
+        self.recv_cpu_us + self.per_item_cpu_us * items as f64
+    }
+}
+
+/// Per-run interconnect accounting (per source locality).
+#[derive(Debug, Clone, Default)]
+pub struct NetStats {
+    /// Envelopes put on the wire.
+    pub envelopes: u64,
+    /// Application messages carried (>= envelopes when aggregating).
+    pub messages: u64,
+    /// Payload bytes carried (excluding per-envelope overhead).
+    pub payload_bytes: u64,
+    /// Total wire time accumulated, in us.
+    pub wire_us: f64,
+}
+
+impl NetStats {
+    /// Merge another stats block into this one.
+    pub fn merge(&mut self, other: &NetStats) {
+        self.envelopes += other.envelopes;
+        self.messages += other.messages;
+        self.payload_bytes += other.payload_bytes;
+        self.wire_us += other.wire_us;
+    }
+
+    /// Mean messages per envelope (aggregation factor).
+    pub fn aggregation_factor(&self) -> f64 {
+        if self.envelopes == 0 {
+            0.0
+        } else {
+            self.messages as f64 / self.envelopes as f64
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn wire_time_is_latency_plus_bytes_over_bandwidth() {
+        let net = NetConfig {
+            latency_us: 2.0,
+            bandwidth_bytes_per_us: 100.0,
+            overhead_bytes: 50,
+            ..NetConfig::default()
+        };
+        let t = net.wire_us(150); // (50 + 150) / 100 = 2.0 + latency 2.0
+        assert!((t - 4.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn zero_network_is_free() {
+        let net = NetConfig::zero();
+        assert_eq!(net.wire_us(1_000_000), 0.0);
+        assert_eq!(net.send_cpu(1000), 0.0);
+        assert_eq!(net.recv_cpu(1000), 0.0);
+    }
+
+    #[test]
+    fn aggregation_factor_counts_messages_per_envelope() {
+        let mut s = NetStats::default();
+        s.envelopes = 4;
+        s.messages = 64;
+        assert_eq!(s.aggregation_factor(), 16.0);
+    }
+
+    #[test]
+    fn merge_accumulates() {
+        let mut a = NetStats { envelopes: 1, messages: 2, payload_bytes: 3, wire_us: 4.0 };
+        let b = NetStats { envelopes: 10, messages: 20, payload_bytes: 30, wire_us: 40.0 };
+        a.merge(&b);
+        assert_eq!(a.envelopes, 11);
+        assert_eq!(a.messages, 22);
+        assert_eq!(a.payload_bytes, 33);
+        assert!((a.wire_us - 44.0).abs() < 1e-9);
+    }
+}

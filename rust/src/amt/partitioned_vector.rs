@@ -1,0 +1,218 @@
+//! `hpx::partitioned_vector` equivalents.
+//!
+//! The paper leans on `hpx::partitioned_vector` as the drop-in distributed
+//! replacement for `std::vector` in NWGraph's algorithms (§4.1). Two
+//! flavors are provided:
+//!
+//! * [`PartitionedVector<T>`] — a block-distributed vector with local-slice
+//!   access and owner queries, for data that each locality reads/writes only
+//!   in its own segment (ranks, contributions).
+//! * [`AtomicLongVector`] — an `i64` vector with per-element
+//!   compare-exchange, the substrate for the paper's `set_parent`
+//!   (Listing 1.2: "the parent update must now occur atomically ... using
+//!   compare_exchange"). It is shared (`Arc`) across the simulated
+//!   localities and safe under the real threaded executors too.
+
+use std::sync::atomic::{AtomicI64, Ordering};
+use std::sync::Arc;
+
+use super::agas::BlockMap;
+use super::sim::LocalityId;
+
+/// Block-distributed vector. Segment `l` lives with locality `l`; remote
+/// access goes through messages in the simulated runtime (the type itself
+/// only hands out local views and owner information).
+#[derive(Debug, Clone)]
+pub struct PartitionedVector<T> {
+    map: BlockMap,
+    segments: Vec<Vec<T>>,
+}
+
+impl<T: Clone> PartitionedVector<T> {
+    /// Create with every element set to `init`.
+    pub fn new(len: usize, n_localities: u32, init: T) -> Self {
+        let map = BlockMap::new(len, n_localities);
+        let segments = (0..n_localities)
+            .map(|l| vec![init.clone(); map.segment_len(l)])
+            .collect();
+        PartitionedVector { map, segments }
+    }
+
+    /// Total length.
+    pub fn len(&self) -> usize {
+        self.map.len()
+    }
+
+    /// True when empty.
+    pub fn is_empty(&self) -> bool {
+        self.map.is_empty()
+    }
+
+    /// The layout map.
+    pub fn map(&self) -> &BlockMap {
+        &self.map
+    }
+
+    /// Owner of global index `i`.
+    pub fn owner(&self, i: usize) -> LocalityId {
+        self.map.owner(i)
+    }
+
+    /// Immutable view of a locality's segment.
+    pub fn segment(&self, l: LocalityId) -> &[T] {
+        &self.segments[l as usize]
+    }
+
+    /// Mutable view of a locality's segment.
+    pub fn segment_mut(&mut self, l: LocalityId) -> &mut [T] {
+        &mut self.segments[l as usize]
+    }
+
+    /// Read element at global index (any locality — used by sequential
+    /// oracles and result collection, not by the distributed hot paths).
+    pub fn get(&self, i: usize) -> &T {
+        let a = self.map.resolve(i);
+        &self.segments[a.locality as usize][a.offset]
+    }
+
+    /// Write element at global index.
+    pub fn set(&mut self, i: usize, value: T) {
+        let a = self.map.resolve(i);
+        self.segments[a.locality as usize][a.offset] = value;
+    }
+
+    /// Flatten into a plain `Vec` in global index order.
+    pub fn to_vec(&self) -> Vec<T> {
+        let mut out = Vec::with_capacity(self.len());
+        for seg in &self.segments {
+            out.extend(seg.iter().cloned());
+        }
+        out
+    }
+}
+
+/// Shared atomic `i64` vector with block distribution — the `parents`
+/// array of the distributed BFS. `cas` mirrors HPX's remote
+/// `compare_exchange` action; in the simulation the *time* of a remote CAS
+/// is charged by the message that triggers it, while the data effect goes
+/// through this shared structure.
+#[derive(Debug, Clone)]
+pub struct AtomicLongVector {
+    map: BlockMap,
+    data: Arc<Vec<AtomicI64>>,
+}
+
+impl AtomicLongVector {
+    /// Create with every element set to `init`.
+    pub fn new(len: usize, n_localities: u32, init: i64) -> Self {
+        let data = (0..len).map(|_| AtomicI64::new(init)).collect::<Vec<_>>();
+        AtomicLongVector { map: BlockMap::new(len, n_localities), data: Arc::new(data) }
+    }
+
+    /// Total length.
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    /// True when empty.
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    /// The layout map.
+    pub fn map(&self) -> &BlockMap {
+        &self.map
+    }
+
+    /// Owner of global index `i`.
+    pub fn owner(&self, i: usize) -> LocalityId {
+        self.map.owner(i)
+    }
+
+    /// Atomic load.
+    pub fn load(&self, i: usize) -> i64 {
+        self.data[i].load(Ordering::Acquire)
+    }
+
+    /// Atomic store.
+    pub fn store(&self, i: usize, v: i64) {
+        self.data[i].store(v, Ordering::Release);
+    }
+
+    /// Compare-exchange: returns `true` when `i` still held `expected` and
+    /// was updated to `new` (the paper's `set_parent` primitive).
+    pub fn cas(&self, i: usize, expected: i64, new: i64) -> bool {
+        self.data[i]
+            .compare_exchange(expected, new, Ordering::AcqRel, Ordering::Acquire)
+            .is_ok()
+    }
+
+    /// Snapshot into a plain `Vec<i64>`.
+    pub fn to_vec(&self) -> Vec<i64> {
+        self.data.iter().map(|a| a.load(Ordering::Acquire)).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn partitioned_vector_get_set_roundtrip() {
+        let mut v = PartitionedVector::new(10, 3, 0i32);
+        for i in 0..10 {
+            v.set(i, i as i32 * 10);
+        }
+        for i in 0..10 {
+            assert_eq!(*v.get(i), i as i32 * 10);
+        }
+        assert_eq!(v.to_vec(), (0..10).map(|i| i * 10).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn segments_partition_the_whole_vector() {
+        let v = PartitionedVector::new(11, 4, 0u8);
+        let total: usize = (0..4).map(|l| v.segment(l).len()).sum();
+        assert_eq!(total, 11);
+    }
+
+    #[test]
+    fn segment_mut_writes_through() {
+        let mut v = PartitionedVector::new(6, 2, 0i32);
+        v.segment_mut(1)[0] = 42;
+        let first_of_seg1 = v.map().range_of(1).start;
+        assert_eq!(*v.get(first_of_seg1), 42);
+    }
+
+    #[test]
+    fn atomic_cas_set_parent_semantics() {
+        let parents = AtomicLongVector::new(8, 2, -1);
+        assert!(parents.cas(3, -1, 7), "first discovery wins");
+        assert!(!parents.cas(3, -1, 9), "second discovery must fail");
+        assert_eq!(parents.load(3), 7);
+    }
+
+    #[test]
+    fn atomic_vector_is_shared_across_clones() {
+        let a = AtomicLongVector::new(4, 2, 0);
+        let b = a.clone();
+        a.store(2, 5);
+        assert_eq!(b.load(2), 5);
+    }
+
+    #[test]
+    fn concurrent_cas_has_exactly_one_winner() {
+        let v = AtomicLongVector::new(1, 1, -1);
+        let winners: usize = std::thread::scope(|s| {
+            let handles: Vec<_> = (0..8)
+                .map(|t| {
+                    let v = v.clone();
+                    s.spawn(move || usize::from(v.cas(0, -1, t as i64)))
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().unwrap()).sum()
+        });
+        assert_eq!(winners, 1);
+        assert!(v.load(0) >= 0);
+    }
+}

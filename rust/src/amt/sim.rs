@@ -1,0 +1,744 @@
+//! Discrete-event simulated multi-locality AMT runtime.
+//!
+//! This is the distributed-execution substrate standing in for "HPX across
+//! 32 cluster nodes" (DESIGN.md §4). Each *locality* is an [`Actor`] with
+//! real Rust state whose handlers execute real code; what is *modeled* is
+//! time:
+//!
+//! * **compute** — handlers are charged their measured wall-clock time
+//!   (scaled by [`SimConfig::compute_scale`]) plus any explicit
+//!   [`Ctx::charge_us`] charges;
+//! * **communication** — inter-locality messages pay the
+//!   latency/bandwidth/CPU-overhead model of [`NetConfig`];
+//! * **synchronization** — global barriers pay a tree-barrier cost and
+//!   complete only when every locality has requested one and the network
+//!   has drained.
+//!
+//! The virtual clock advances per locality (`avail[l]` = time locality `l`
+//! next becomes free), so a run over P simulated localities on one physical
+//! machine still produces the P-way-parallel makespan: it is the *maximum*
+//! of per-locality timelines, not their sum. Both execution styles in the
+//! paper map directly:
+//!
+//! * **asynchronous HPX style** — send eagerly from handlers, let delivery
+//!   trigger work, never request a barrier; termination is network
+//!   quiescence (exactly the active-message termination of AM++/PBGL 2.0).
+//! * **BSP / PBGL style** — buffer incoming messages, request a barrier,
+//!   do the superstep's work in [`Actor::on_barrier`].
+
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
+use std::time::Instant;
+
+use super::metrics::SimReport;
+use super::net::{NetConfig, NetStats};
+
+/// Identifies one simulated locality (paper: one cluster node).
+pub type LocalityId = u32;
+
+/// Simulated time, in microseconds.
+pub type SimTime = f64;
+
+/// Wire-size trait for application messages; drives the bandwidth term of
+/// the network model.
+pub trait Message {
+    /// Serialized payload size in bytes.
+    fn wire_bytes(&self) -> usize;
+
+    /// Number of application-level actions this message carries (a batched
+    /// message of k vertex updates counts k). Drives the per-item CPU term
+    /// so batching amortizes envelope costs but never hides marshalling
+    /// work.
+    fn item_count(&self) -> usize {
+        1
+    }
+}
+
+/// A per-locality algorithm state machine.
+pub trait Actor {
+    /// Message type exchanged between localities.
+    type Msg: Message;
+
+    /// Called once at t=0 on every locality.
+    fn on_start(&mut self, ctx: &mut Ctx<Self::Msg>);
+
+    /// Called when a message from `from` is delivered.
+    fn on_message(&mut self, ctx: &mut Ctx<Self::Msg>, from: LocalityId, msg: Self::Msg);
+
+    /// Called when a requested global barrier completes (`epoch` counts
+    /// completed barriers, starting at 1).
+    fn on_barrier(&mut self, _ctx: &mut Ctx<Self::Msg>, _epoch: u64) {}
+}
+
+/// Simulation parameters.
+#[derive(Debug, Clone)]
+pub struct SimConfig {
+    /// Interconnect model.
+    pub net: NetConfig,
+    /// Global barrier cost in us; `None` derives a tree barrier:
+    /// `2 * latency * ceil(log2 P)`.
+    pub barrier_latency_us: Option<f64>,
+    /// Charge handlers their measured wall time (disable for deterministic
+    /// unit tests that use only explicit charges).
+    pub measure_compute: bool,
+    /// Multiplier applied to measured handler wall time. `1/64.0` would
+    /// approximate the paper's 64-core nodes if handlers were serial
+    /// whole-node work; algorithms here instead express intra-locality
+    /// parallelism explicitly, so the default is 1.0.
+    pub compute_scale: f64,
+    /// Coalesce all sends to the same destination within one handler into
+    /// one envelope (the paper's "optimized" aggregating variant).
+    pub aggregate_sends: bool,
+    /// HPX-style parcel coalescing: sends to the same destination are
+    /// buffered for up to this many us (across handler boundaries) and
+    /// flushed as one envelope. `0.0` disables. This is the
+    /// `hpx::plugins::parcel::coalescing` behaviour the paper's runtime
+    /// ships with, and what keeps fine-grained asynchronous algorithms
+    /// from paying one envelope per remote action.
+    pub coalesce_window_us: f64,
+    /// Hard cap on processed events (runaway guard).
+    pub max_events: u64,
+}
+
+impl Default for SimConfig {
+    fn default() -> Self {
+        SimConfig {
+            net: NetConfig::default(),
+            barrier_latency_us: None,
+            measure_compute: true,
+            compute_scale: 1.0,
+            aggregate_sends: false,
+            coalesce_window_us: 0.0,
+            max_events: u64::MAX,
+        }
+    }
+}
+
+impl SimConfig {
+    /// Deterministic config for unit tests: no wall-clock measurement,
+    /// explicit charges only.
+    pub fn deterministic(net: NetConfig) -> Self {
+        SimConfig { net, measure_compute: false, ..SimConfig::default() }
+    }
+
+    fn barrier_cost(&self, n: u32) -> f64 {
+        self.barrier_latency_us.unwrap_or_else(|| {
+            let stages = (n.max(2) as f64).log2().ceil();
+            2.0 * self.net.latency_us * stages
+        })
+    }
+}
+
+enum Payload<M> {
+    Start,
+    Envelope { from: LocalityId, items: Vec<M> },
+    BarrierDone { epoch: u64 },
+    /// Parcel-coalescing flush: the event's `dst` is the *sender* (the
+    /// flush runs on its timeline); `to` is the wire destination.
+    Flush { to: LocalityId },
+}
+
+struct Event<M> {
+    time: SimTime,
+    seq: u64,
+    dst: LocalityId,
+    payload: Payload<M>,
+}
+
+impl<M> PartialEq for Event<M> {
+    fn eq(&self, other: &Self) -> bool {
+        self.seq == other.seq
+    }
+}
+impl<M> Eq for Event<M> {}
+impl<M> PartialOrd for Event<M> {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl<M> Ord for Event<M> {
+    fn cmp(&self, other: &Self) -> Ordering {
+        // BinaryHeap is a max-heap; reverse for earliest-first, tie-break
+        // on sequence number for determinism.
+        other
+            .time
+            .total_cmp(&self.time)
+            .then_with(|| other.seq.cmp(&self.seq))
+    }
+}
+
+/// Handler-side interface to the runtime: clock, sends, charges, barriers.
+pub struct Ctx<'a, M> {
+    locality: LocalityId,
+    n_localities: u32,
+    now: SimTime,
+    epoch: u64,
+    explicit_charge_us: f64,
+    barrier_requested: &'a mut bool,
+    outbox: Vec<(LocalityId, M)>,
+}
+
+impl<'a, M: Message> Ctx<'a, M> {
+    /// This locality's id.
+    pub fn locality(&self) -> LocalityId {
+        self.locality
+    }
+
+    /// Number of localities in the run.
+    pub fn n_localities(&self) -> u32 {
+        self.n_localities
+    }
+
+    /// Simulated time at which this handler started.
+    pub fn now(&self) -> SimTime {
+        self.now
+    }
+
+    /// Completed-barrier count so far.
+    pub fn epoch(&self) -> u64 {
+        self.epoch
+    }
+
+    /// Queue a message. Messages depart when the handler finishes
+    /// (HPX parcels are dispatched by the scheduler, not inline). Sends to
+    /// `self` become local task-queue events with zero network cost — this
+    /// is the `hpx::async`-on-same-locality case.
+    pub fn send(&mut self, dst: LocalityId, msg: M) {
+        debug_assert!(dst < self.n_localities, "send to unknown locality {dst}");
+        self.outbox.push((dst, msg));
+    }
+
+    /// Add an explicit compute charge (model-based costing; used by tests
+    /// and by phases whose cost is computed rather than measured).
+    pub fn charge_us(&mut self, us: f64) {
+        debug_assert!(us >= 0.0);
+        self.explicit_charge_us += us;
+    }
+
+    /// Request participation in a global barrier. The barrier completes —
+    /// triggering [`Actor::on_barrier`] everywhere — once every locality
+    /// has an outstanding request and all in-flight messages have drained.
+    pub fn request_barrier(&mut self) {
+        *self.barrier_requested = true;
+    }
+}
+
+/// The discrete-event engine. See module docs.
+pub struct SimRuntime {
+    cfg: SimConfig,
+}
+
+impl SimRuntime {
+    /// Create a runtime with the given configuration.
+    pub fn new(cfg: SimConfig) -> Self {
+        SimRuntime { cfg }
+    }
+
+    /// Run `actors` (one per locality) to quiescence; returns the final
+    /// actor states plus the timing/traffic report.
+    pub fn run<A: Actor>(&self, mut actors: Vec<A>) -> (Vec<A>, SimReport) {
+        let n = actors.len() as u32;
+        assert!(n > 0, "need at least one locality");
+        let barrier_cost = self.cfg.barrier_cost(n);
+
+        let mut heap: BinaryHeap<Event<A::Msg>> = BinaryHeap::new();
+        let mut seq: u64 = 0;
+        let mut avail: Vec<SimTime> = vec![0.0; n as usize];
+        let mut busy: Vec<f64> = vec![0.0; n as usize];
+        let mut waiting: Vec<bool> = vec![false; n as usize];
+        let mut net_stats: Vec<NetStats> = vec![NetStats::default(); n as usize];
+        let mut epoch: u64 = 0;
+        let mut events_processed: u64 = 0;
+        let mut messages_pending: u64 = 0; // Start/Envelope/Flush events in heap
+        // Parcel-coalescing buffers: (src, dst) -> queued items.
+        let mut pending: std::collections::HashMap<(LocalityId, LocalityId), Vec<A::Msg>> =
+            std::collections::HashMap::new();
+        let coalesce = self.cfg.coalesce_window_us > 0.0;
+
+        for l in 0..n {
+            heap.push(Event { time: 0.0, seq, dst: l, payload: Payload::Start });
+            seq += 1;
+            messages_pending += 1;
+        }
+
+        while let Some(ev) = heap.pop() {
+            events_processed += 1;
+            assert!(
+                events_processed <= self.cfg.max_events,
+                "simulation exceeded max_events={} (runaway?)",
+                self.cfg.max_events
+            );
+            let l = ev.dst as usize;
+            let start = if ev.time > avail[l] { ev.time } else { avail[l] };
+
+            // Coalescing flush: not an actor handler — take the buffer,
+            // charge the sender's send CPU, put one envelope on the wire.
+            if let Payload::Flush { to } = ev.payload {
+                messages_pending -= 1;
+                let items = pending.remove(&(ev.dst, to)).unwrap_or_default();
+                if !items.is_empty() {
+                    let n_items: usize = items.iter().map(|m| m.item_count()).sum();
+                    let payload_bytes: usize = items.iter().map(|m| m.wire_bytes()).sum();
+                    let scpu = self.cfg.net.send_cpu(n_items);
+                    let wire = self.cfg.net.wire_us(payload_bytes);
+                    let st = &mut net_stats[l];
+                    st.envelopes += 1;
+                    st.messages += n_items as u64;
+                    st.payload_bytes += payload_bytes as u64;
+                    st.wire_us += wire;
+                    avail[l] = start + scpu;
+                    busy[l] += scpu;
+                    heap.push(Event {
+                        time: avail[l] + wire,
+                        seq,
+                        dst: to,
+                        payload: Payload::Envelope { from: ev.dst, items },
+                    });
+                    seq += 1;
+                    messages_pending += 1;
+                }
+                // Barrier check below still applies after a flush.
+                if messages_pending == 0 && waiting.iter().all(|w| *w) {
+                    epoch += 1;
+                    let fire = avail.iter().cloned().fold(0.0_f64, f64::max) + barrier_cost;
+                    for d in 0..n {
+                        waiting[d as usize] = false;
+                        avail[d as usize] = fire;
+                        heap.push(Event {
+                            time: fire,
+                            seq,
+                            dst: d,
+                            payload: Payload::BarrierDone { epoch },
+                        });
+                        seq += 1;
+                    }
+                }
+                continue;
+            }
+
+            let mut barrier_requested = waiting[ev.dst as usize];
+            let mut ctx = Ctx {
+                locality: ev.dst,
+                n_localities: n,
+                now: start,
+                epoch,
+                explicit_charge_us: 0.0,
+                barrier_requested: &mut barrier_requested,
+                outbox: Vec::new(),
+            };
+
+            let wall = Instant::now();
+            let mut recv_charge = 0.0;
+            match ev.payload {
+                Payload::Start => {
+                    messages_pending -= 1;
+                    actors[l].on_start(&mut ctx);
+                }
+                Payload::Envelope { from, items } => {
+                    messages_pending -= 1;
+                    if from != ev.dst {
+                        let n_items: usize = items.iter().map(|m| m.item_count()).sum();
+                        recv_charge = self.cfg.net.recv_cpu(n_items);
+                    }
+                    for msg in items {
+                        actors[l].on_message(&mut ctx, from, msg);
+                    }
+                }
+                Payload::BarrierDone { epoch: e } => {
+                    actors[l].on_barrier(&mut ctx, e);
+                }
+                Payload::Flush { .. } => unreachable!("handled above"),
+            }
+            let measured = if self.cfg.measure_compute {
+                wall.elapsed().as_secs_f64() * 1e6 * self.cfg.compute_scale
+            } else {
+                0.0
+            };
+
+            let explicit = ctx.explicit_charge_us;
+            let outbox = std::mem::take(&mut ctx.outbox);
+            drop(ctx);
+            waiting[l] = barrier_requested;
+
+            let mut charge = measured + explicit + recv_charge;
+
+            // Dispatch outbox: aggregate per destination if configured.
+            let depart_base = start;
+            let mut send_cpu_total = 0.0;
+            let groups = group_outbox(outbox, self.cfg.aggregate_sends);
+            for (dst, items) in groups {
+                let n_items: usize = items.iter().map(|m| m.item_count()).sum();
+                if dst == ev.dst {
+                    // Local spawn: no network, delivered when we are free.
+                    heap.push(Event {
+                        time: depart_base + charge + send_cpu_total,
+                        seq,
+                        dst,
+                        payload: Payload::Envelope { from: ev.dst, items },
+                    });
+                    seq += 1;
+                    messages_pending += 1;
+                    continue;
+                }
+                if coalesce {
+                    // Buffer into the (src, dst) parcel; schedule a flush
+                    // if this is the first item since the last flush.
+                    let buf = pending.entry((ev.dst, dst)).or_default();
+                    let first = buf.is_empty();
+                    buf.extend(items);
+                    if first {
+                        heap.push(Event {
+                            time: depart_base + charge + self.cfg.coalesce_window_us,
+                            seq,
+                            dst: ev.dst, // flush runs on the sender
+                            payload: Payload::Flush { to: dst },
+                        });
+                        seq += 1;
+                        messages_pending += 1;
+                    }
+                    continue;
+                }
+                let payload_bytes: usize = items.iter().map(|m| m.wire_bytes()).sum();
+                let scpu = self.cfg.net.send_cpu(n_items);
+                send_cpu_total += scpu;
+                let depart = depart_base + charge + send_cpu_total;
+                let wire = self.cfg.net.wire_us(payload_bytes);
+                let st = &mut net_stats[l];
+                st.envelopes += 1;
+                st.messages += n_items as u64;
+                st.payload_bytes += payload_bytes as u64;
+                st.wire_us += wire;
+                heap.push(Event {
+                    time: depart + wire,
+                    seq,
+                    dst,
+                    payload: Payload::Envelope { from: ev.dst, items },
+                });
+                seq += 1;
+                messages_pending += 1;
+            }
+            charge += send_cpu_total;
+            avail[l] = start + charge;
+            busy[l] += charge;
+
+            // Barrier completion: everyone waiting + network drained.
+            if messages_pending == 0 && waiting.iter().all(|w| *w) {
+                epoch += 1;
+                let fire = avail.iter().cloned().fold(0.0_f64, f64::max) + barrier_cost;
+                for d in 0..n {
+                    waiting[d as usize] = false;
+                    avail[d as usize] = fire;
+                    heap.push(Event {
+                        time: fire,
+                        seq,
+                        dst: d,
+                        payload: Payload::BarrierDone { epoch },
+                    });
+                    seq += 1;
+                }
+            }
+        }
+
+        let stuck: Vec<_> = waiting
+            .iter()
+            .enumerate()
+            .filter(|(_, w)| **w)
+            .map(|(i, _)| i)
+            .collect();
+        assert!(
+            stuck.is_empty(),
+            "deadlock: localities {stuck:?} waiting on a barrier that can never \
+             complete (not all localities requested one)"
+        );
+
+        let makespan = avail.iter().cloned().fold(0.0_f64, f64::max);
+        let mut total_net = NetStats::default();
+        for s in &net_stats {
+            total_net.merge(s);
+        }
+        let report = SimReport {
+            n_localities: n,
+            makespan_us: makespan,
+            busy_us: busy,
+            barriers: epoch,
+            events: events_processed,
+            net: total_net,
+            per_locality_net: net_stats,
+        };
+        (actors, report)
+    }
+}
+
+fn group_outbox<M>(outbox: Vec<(LocalityId, M)>, aggregate: bool) -> Vec<(LocalityId, Vec<M>)> {
+    if !aggregate {
+        return outbox.into_iter().map(|(d, m)| (d, vec![m])).collect();
+    }
+    // Preserve first-appearance destination order for determinism.
+    let mut order: Vec<LocalityId> = Vec::new();
+    let mut buckets: std::collections::HashMap<LocalityId, Vec<M>> =
+        std::collections::HashMap::new();
+    for (d, m) in outbox {
+        buckets
+            .entry(d)
+            .or_insert_with(|| {
+                order.push(d);
+                Vec::new()
+            })
+            .push(m);
+    }
+    order
+        .into_iter()
+        .map(|d| {
+            let items = buckets.remove(&d).unwrap();
+            (d, items)
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[derive(Clone)]
+    struct Ping(u32);
+    impl Message for Ping {
+        fn wire_bytes(&self) -> usize {
+            4
+        }
+    }
+
+    /// Each locality pings the next one `hops` times around a ring.
+    struct RingActor {
+        hops_left: u32,
+        received: u32,
+    }
+    impl Actor for RingActor {
+        type Msg = Ping;
+        fn on_start(&mut self, ctx: &mut Ctx<Ping>) {
+            if ctx.locality() == 0 && self.hops_left > 0 {
+                ctx.send(1 % ctx.n_localities(), Ping(self.hops_left));
+            }
+        }
+        fn on_message(&mut self, ctx: &mut Ctx<Ping>, _from: LocalityId, msg: Ping) {
+            self.received += 1;
+            if msg.0 > 1 {
+                let next = (ctx.locality() + 1) % ctx.n_localities();
+                ctx.send(next, Ping(msg.0 - 1));
+            }
+        }
+    }
+
+    #[test]
+    fn ring_of_pings_terminates_and_charges_latency() {
+        let net = NetConfig { latency_us: 10.0, ..NetConfig::zero() };
+        let cfg = SimConfig::deterministic(net);
+        let actors = (0..4).map(|_| RingActor { hops_left: 8, received: 0 }).collect();
+        let (actors, report) = SimRuntime::new(cfg).run(actors);
+        let total: u32 = actors.iter().map(|a| a.received).sum();
+        assert_eq!(total, 8);
+        // 8 hops, 10 us each, no compute.
+        assert!((report.makespan_us - 80.0).abs() < 1e-6, "{}", report.makespan_us);
+        assert_eq!(report.net.messages, 8);
+        assert_eq!(report.net.envelopes, 8);
+    }
+
+    #[test]
+    fn explicit_charges_advance_the_clock() {
+        struct Worker;
+        #[derive(Clone)]
+        struct Nop;
+        impl Message for Nop {
+            fn wire_bytes(&self) -> usize {
+                0
+            }
+        }
+        impl Actor for Worker {
+            type Msg = Nop;
+            fn on_start(&mut self, ctx: &mut Ctx<Nop>) {
+                ctx.charge_us(123.0);
+            }
+            fn on_message(&mut self, _: &mut Ctx<Nop>, _: LocalityId, _: Nop) {}
+        }
+        let cfg = SimConfig::deterministic(NetConfig::zero());
+        let (_, report) = SimRuntime::new(cfg).run(vec![Worker, Worker]);
+        assert!((report.makespan_us - 123.0).abs() < 1e-9);
+        assert!((report.busy_us[0] - 123.0).abs() < 1e-9);
+        assert!((report.busy_us[1] - 123.0).abs() < 1e-9);
+    }
+
+    /// BSP-style: everyone requests a barrier in on_start; counts epochs.
+    struct BspActor {
+        rounds: u64,
+    }
+    #[derive(Clone)]
+    struct Nothing;
+    impl Message for Nothing {
+        fn wire_bytes(&self) -> usize {
+            0
+        }
+    }
+    impl Actor for BspActor {
+        type Msg = Nothing;
+        fn on_start(&mut self, ctx: &mut Ctx<Nothing>) {
+            ctx.request_barrier();
+        }
+        fn on_message(&mut self, _: &mut Ctx<Nothing>, _: LocalityId, _: Nothing) {}
+        fn on_barrier(&mut self, ctx: &mut Ctx<Nothing>, epoch: u64) {
+            if epoch < self.rounds {
+                ctx.request_barrier();
+            }
+        }
+    }
+
+    #[test]
+    fn barriers_complete_and_cost_time() {
+        let net = NetConfig { latency_us: 5.0, ..NetConfig::zero() };
+        let cfg = SimConfig {
+            barrier_latency_us: Some(7.0),
+            ..SimConfig::deterministic(net)
+        };
+        let actors = (0..3).map(|_| BspActor { rounds: 4 }).collect();
+        let (_, report) = SimRuntime::new(cfg).run(actors);
+        assert_eq!(report.barriers, 4);
+        assert!((report.makespan_us - 28.0).abs() < 1e-9, "{}", report.makespan_us);
+    }
+
+    #[test]
+    fn aggregation_reduces_envelopes_but_not_messages() {
+        struct Fanout;
+        impl Actor for Fanout {
+            type Msg = Ping;
+            fn on_start(&mut self, ctx: &mut Ctx<Ping>) {
+                if ctx.locality() == 0 {
+                    for i in 0..10 {
+                        ctx.send(1, Ping(i));
+                    }
+                }
+            }
+            fn on_message(&mut self, _: &mut Ctx<Ping>, _: LocalityId, _: Ping) {}
+        }
+        let run = |aggregate| {
+            let cfg = SimConfig {
+                aggregate_sends: aggregate,
+                ..SimConfig::deterministic(NetConfig::default())
+            };
+            SimRuntime::new(cfg).run(vec![Fanout, Fanout]).1
+        };
+        let loose = run(false);
+        let packed = run(true);
+        assert_eq!(loose.net.messages, 10);
+        assert_eq!(packed.net.messages, 10);
+        assert_eq!(loose.net.envelopes, 10);
+        assert_eq!(packed.net.envelopes, 1);
+        assert!(packed.makespan_us < loose.makespan_us);
+    }
+
+    #[test]
+    fn coalescing_merges_sends_across_handlers() {
+        // Locality 0 self-spawns 5 tasks; each sends one Ping to 1. With a
+        // coalescing window larger than the spawn spacing, all 5 ride one
+        // envelope.
+        struct Spray {
+            left: u32,
+        }
+        impl Actor for Spray {
+            type Msg = Ping;
+            fn on_start(&mut self, ctx: &mut Ctx<Ping>) {
+                if ctx.locality() == 0 {
+                    ctx.send(0, Ping(self.left));
+                }
+            }
+            fn on_message(&mut self, ctx: &mut Ctx<Ping>, _: LocalityId, msg: Ping) {
+                if ctx.locality() == 0 {
+                    ctx.send(1, Ping(msg.0));
+                    if msg.0 > 1 {
+                        ctx.send(0, Ping(msg.0 - 1));
+                    }
+                }
+            }
+        }
+        let cfg = SimConfig {
+            coalesce_window_us: 50.0,
+            ..SimConfig::deterministic(NetConfig::default())
+        };
+        let (_, report) = SimRuntime::new(cfg).run(vec![Spray { left: 5 }, Spray { left: 5 }]);
+        assert_eq!(report.net.messages, 5);
+        assert_eq!(report.net.envelopes, 1, "coalescing must merge all 5 sends");
+
+        let cfg0 = SimConfig::deterministic(NetConfig::default());
+        let (_, loose) = SimRuntime::new(cfg0).run(vec![Spray { left: 5 }, Spray { left: 5 }]);
+        assert_eq!(loose.net.envelopes, 5);
+    }
+
+    #[test]
+    fn coalescing_preserves_barrier_semantics() {
+        // A BSP round with coalescing on: messages must still drain before
+        // the barrier fires.
+        struct OneShot {
+            got: u32,
+        }
+        impl Actor for OneShot {
+            type Msg = Ping;
+            fn on_start(&mut self, ctx: &mut Ctx<Ping>) {
+                let next = (ctx.locality() + 1) % ctx.n_localities();
+                ctx.send(next, Ping(1));
+                ctx.request_barrier();
+            }
+            fn on_message(&mut self, _: &mut Ctx<Ping>, _: LocalityId, _: Ping) {
+                self.got += 1;
+            }
+            fn on_barrier(&mut self, _: &mut Ctx<Ping>, _: u64) {
+                assert_eq!(self.got, 1, "barrier fired before coalesced delivery");
+            }
+        }
+        let cfg = SimConfig {
+            coalesce_window_us: 25.0,
+            ..SimConfig::deterministic(NetConfig::default())
+        };
+        let (actors, report) =
+            SimRuntime::new(cfg).run(vec![OneShot { got: 0 }, OneShot { got: 0 }, OneShot { got: 0 }]);
+        assert_eq!(report.barriers, 1);
+        assert!(actors.iter().all(|a| a.got == 1));
+    }
+
+    #[test]
+    #[should_panic(expected = "deadlock")]
+    fn partial_barrier_is_a_deadlock() {
+        struct OnlyZeroWaits;
+        impl Actor for OnlyZeroWaits {
+            type Msg = Nothing;
+            fn on_start(&mut self, ctx: &mut Ctx<Nothing>) {
+                if ctx.locality() == 0 {
+                    ctx.request_barrier();
+                }
+            }
+            fn on_message(&mut self, _: &mut Ctx<Nothing>, _: LocalityId, _: Nothing) {}
+        }
+        let cfg = SimConfig::deterministic(NetConfig::zero());
+        SimRuntime::new(cfg).run(vec![OnlyZeroWaits, OnlyZeroWaits]);
+    }
+
+    #[test]
+    fn self_sends_are_free_local_tasks() {
+        struct SelfSpawn {
+            seen: u32,
+        }
+        impl Actor for SelfSpawn {
+            type Msg = Ping;
+            fn on_start(&mut self, ctx: &mut Ctx<Ping>) {
+                ctx.send(ctx.locality(), Ping(3));
+            }
+            fn on_message(&mut self, ctx: &mut Ctx<Ping>, _: LocalityId, msg: Ping) {
+                self.seen += 1;
+                if msg.0 > 1 {
+                    ctx.send(ctx.locality(), Ping(msg.0 - 1));
+                }
+            }
+        }
+        let cfg = SimConfig::deterministic(NetConfig::default());
+        let (actors, report) = SimRuntime::new(cfg).run(vec![SelfSpawn { seen: 0 }]);
+        assert_eq!(actors[0].seen, 3);
+        assert_eq!(report.net.messages, 0, "self-sends must not hit the network");
+        assert_eq!(report.makespan_us, 0.0);
+    }
+}

@@ -1,0 +1,152 @@
+//! Minimal CLI argument parser (clap is unavailable offline).
+//!
+//! Grammar: `nwgraph-hpx <subcommand> [--flag value]... [--switch]...
+//! [key=value overrides]...`. Flags starting with `--` take a value unless
+//! registered as boolean switches; bare `key=value` tokens become config
+//! overrides passed to [`crate::config::Config::load`].
+
+use std::collections::BTreeMap;
+
+use crate::Result;
+
+/// Parsed command line.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    /// First positional token (subcommand).
+    pub command: String,
+    /// `--flag value` pairs (switches map to "true").
+    pub flags: BTreeMap<String, String>,
+    /// `key=value` config overrides, in order.
+    pub overrides: Vec<String>,
+}
+
+/// Boolean switches that take no value.
+const SWITCHES: &[&str] = &["help", "aggregate", "quiet", "validate"];
+
+impl Args {
+    /// Parse from raw tokens (without argv[0]).
+    pub fn parse(tokens: &[String]) -> Result<Args> {
+        let mut args = Args::default();
+        let mut it = tokens.iter().peekable();
+        if let Some(first) = it.peek() {
+            if !first.starts_with('-') && !first.contains('=') {
+                args.command = it.next().unwrap().clone();
+            }
+        }
+        while let Some(tok) = it.next() {
+            if let Some(name) = tok.strip_prefix("--") {
+                if SWITCHES.contains(&name) {
+                    args.flags.insert(name.to_string(), "true".to_string());
+                } else {
+                    let val = it
+                        .next()
+                        .ok_or_else(|| anyhow::anyhow!("flag --{name} needs a value"))?;
+                    args.flags.insert(name.to_string(), val.clone());
+                }
+            } else if tok.contains('=') {
+                args.overrides.push(tok.clone());
+            } else {
+                anyhow::bail!("unexpected positional argument `{tok}`");
+            }
+        }
+        Ok(args)
+    }
+
+    /// Parse from the process environment.
+    pub fn from_env() -> Result<Args> {
+        let tokens: Vec<String> = std::env::args().skip(1).collect();
+        Args::parse(&tokens)
+    }
+
+    /// Flag lookup.
+    pub fn flag(&self, name: &str) -> Option<&str> {
+        self.flags.get(name).map(|s| s.as_str())
+    }
+
+    /// Boolean switch lookup.
+    pub fn switch(&self, name: &str) -> bool {
+        self.flags.get(name).map(|v| v == "true").unwrap_or(false)
+    }
+
+    /// Typed flag with default.
+    pub fn flag_or<T: std::str::FromStr>(&self, name: &str, default: T) -> Result<T>
+    where
+        T::Err: std::fmt::Display,
+    {
+        match self.flags.get(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|e| anyhow::anyhow!("flag --{name}={v}: {e}")),
+        }
+    }
+}
+
+/// Top-level usage text.
+pub const USAGE: &str = "\
+nwgraph-hpx — distributed graph algorithms on an AMT runtime (paper repro)
+
+USAGE:
+    nwgraph-hpx <COMMAND> [--flag value]... [key=value]...
+
+COMMANDS:
+    bfs         run one distributed BFS (--engine async|bsp|diropt)
+    pagerank    run one distributed PageRank (--engine async|async-naive|bsp|kernel)
+    fig1        regenerate Figure 1 (BFS speedup sweep, HPX vs Boost/BSP)
+    fig2        regenerate Figure 2 (PageRank sweep, HPX naive/opt vs Boost/BSP)
+    ablations   run the DESIGN.md ablation suite (A1 aggregation, A2 chunking)
+    info        print graph statistics for the configured generator
+    help        show this message
+
+CONFIG OVERRIDES (key=value):
+    scale, degree, generator (urand|urand-directed|kron), seed,
+    localities (comma list), alpha, iterations, root, reps, aggregate,
+    net.latency_us, net.bandwidth_gbps, net.send_cpu_us, net.recv_cpu_us,
+    net.per_item_cpu_us, net.overhead_bytes, artifact_dir
+
+FLAGS:
+    --config <file>    key=value config file (overrides applied after)
+    --engine <name>    algorithm engine (see per-command lists above)
+    --out <file>       write the result table as CSV
+    --validate         validate results against the sequential oracle
+";
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toks(s: &str) -> Vec<String> {
+        s.split_whitespace().map(String::from).collect()
+    }
+
+    #[test]
+    fn parses_command_flags_overrides() {
+        let a = Args::parse(&toks("fig1 --engine async scale=12 net.latency_us=3")).unwrap();
+        assert_eq!(a.command, "fig1");
+        assert_eq!(a.flag("engine"), Some("async"));
+        assert_eq!(a.overrides, vec!["scale=12", "net.latency_us=3"]);
+    }
+
+    #[test]
+    fn switches_take_no_value() {
+        let a = Args::parse(&toks("bfs --validate --engine bsp")).unwrap();
+        assert!(a.switch("validate"));
+        assert_eq!(a.flag("engine"), Some("bsp"));
+    }
+
+    #[test]
+    fn missing_value_is_an_error() {
+        assert!(Args::parse(&toks("bfs --engine")).is_err());
+    }
+
+    #[test]
+    fn unexpected_positional_is_an_error() {
+        assert!(Args::parse(&toks("bfs extra")).is_err());
+    }
+
+    #[test]
+    fn typed_flag_default() {
+        let a = Args::parse(&toks("bfs")).unwrap();
+        assert_eq!(a.flag_or("p", 4u32).unwrap(), 4);
+    }
+}

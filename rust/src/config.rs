@@ -1,0 +1,196 @@
+//! Experiment configuration: key=value files + CLI overrides.
+//!
+//! No serde offline, so the format is deliberately simple: one `key =
+//! value` per line, `#` comments. Every knob has a default matching the
+//! paper's setup (urand graphs, alpha = 0.85, locality sweep 1..32).
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use crate::amt::NetConfig;
+use crate::Result;
+
+/// Full experiment configuration.
+#[derive(Debug, Clone)]
+pub struct Config {
+    /// Graph scale: n = 2^scale (GAP `urandN` naming).
+    pub scale: u32,
+    /// Average degree of the generated graph.
+    pub degree: usize,
+    /// Generator: "urand", "urand-directed", or "kron".
+    pub generator: String,
+    /// PRNG seed.
+    pub seed: u64,
+    /// Locality counts to sweep.
+    pub localities: Vec<u32>,
+    /// PageRank damping factor.
+    pub alpha: f32,
+    /// PageRank iterations.
+    pub iterations: u32,
+    /// BFS root vertex.
+    pub root: u32,
+    /// Repetitions per data point.
+    pub reps: u32,
+    /// Interconnect model.
+    pub net: NetConfig,
+    /// Aggregate same-destination sends per handler (optimized variant).
+    pub aggregate: bool,
+    /// Artifact directory for the kernel path.
+    pub artifact_dir: String,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        Config {
+            scale: 14,
+            degree: 8,
+            generator: "urand".into(),
+            seed: 42,
+            localities: vec![1, 2, 4, 8, 16, 32],
+            alpha: 0.85,
+            iterations: 20,
+            root: 0,
+            reps: 3,
+            net: NetConfig::default(),
+            aggregate: false,
+            artifact_dir: "artifacts".into(),
+        }
+    }
+}
+
+impl Config {
+    /// Parse a config file, then apply `key=value` overrides in order.
+    pub fn load(path: Option<&Path>, overrides: &[String]) -> Result<Config> {
+        let mut kv = BTreeMap::new();
+        if let Some(p) = path {
+            let text = std::fs::read_to_string(p)?;
+            parse_kv(&text, &mut kv)?;
+        }
+        for ov in overrides {
+            let (k, v) = ov
+                .split_once('=')
+                .ok_or_else(|| anyhow::anyhow!("override `{ov}` is not key=value"))?;
+            kv.insert(k.trim().to_string(), v.trim().to_string());
+        }
+        Config::from_kv(&kv)
+    }
+
+    /// Build from a key/value map (unknown keys are an error — typo guard).
+    pub fn from_kv(kv: &BTreeMap<String, String>) -> Result<Config> {
+        let mut c = Config::default();
+        for (k, v) in kv {
+            match k.as_str() {
+                "scale" => c.scale = v.parse()?,
+                "degree" => c.degree = v.parse()?,
+                "generator" => c.generator = v.clone(),
+                "seed" => c.seed = v.parse()?,
+                "localities" => {
+                    c.localities = v
+                        .split(',')
+                        .map(|s| s.trim().parse::<u32>())
+                        .collect::<std::result::Result<_, _>>()?;
+                }
+                "alpha" => c.alpha = v.parse()?,
+                "iterations" => c.iterations = v.parse()?,
+                "root" => c.root = v.parse()?,
+                "reps" => c.reps = v.parse()?,
+                "aggregate" => c.aggregate = v.parse()?,
+                "artifact_dir" => c.artifact_dir = v.clone(),
+                "net.latency_us" => c.net.latency_us = v.parse()?,
+                "net.bandwidth_gbps" => {
+                    c.net.bandwidth_bytes_per_us = v.parse::<f64>()? * 1000.0
+                }
+                "net.send_cpu_us" => c.net.send_cpu_us = v.parse()?,
+                "net.recv_cpu_us" => c.net.recv_cpu_us = v.parse()?,
+                "net.per_item_cpu_us" => c.net.per_item_cpu_us = v.parse()?,
+                "net.overhead_bytes" => c.net.overhead_bytes = v.parse()?,
+                _ => anyhow::bail!("unknown config key `{k}`"),
+            }
+        }
+        Ok(c)
+    }
+
+    /// Build the configured graph.
+    pub fn build_graph(&self) -> Result<crate::graph::Csr> {
+        use crate::graph::generators as gen;
+        Ok(match self.generator.as_str() {
+            "urand" => gen::urand(self.scale, self.degree, self.seed),
+            "urand-directed" => gen::urand_directed(self.scale, self.degree, self.seed),
+            "kron" => gen::kron(self.scale, self.degree, self.seed),
+            other => anyhow::bail!("unknown generator `{other}`"),
+        })
+    }
+
+    /// Graph name in GAP style (`urand14`, `kron16`, ...).
+    pub fn graph_name(&self) -> String {
+        let base = match self.generator.as_str() {
+            "urand-directed" => "urand",
+            g => g,
+        };
+        format!("{base}{}", self.scale)
+    }
+}
+
+fn parse_kv(text: &str, kv: &mut BTreeMap<String, String>) -> Result<()> {
+    for (no, line) in text.lines().enumerate() {
+        let s = line.trim();
+        if s.is_empty() || s.starts_with('#') {
+            continue;
+        }
+        let (k, v) = s
+            .split_once('=')
+            .ok_or_else(|| anyhow::anyhow!("config line {}: expected key = value", no + 1))?;
+        kv.insert(k.trim().to_string(), v.trim().to_string());
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_are_paper_like() {
+        let c = Config::default();
+        assert_eq!(c.alpha, 0.85);
+        assert_eq!(c.localities, vec![1, 2, 4, 8, 16, 32]);
+    }
+
+    #[test]
+    fn file_plus_overrides() {
+        let mut kv = BTreeMap::new();
+        parse_kv("# comment\nscale = 10\nlocalities = 1,2,4\n", &mut kv).unwrap();
+        kv.insert("degree".into(), "16".into());
+        let c = Config::from_kv(&kv).unwrap();
+        assert_eq!(c.scale, 10);
+        assert_eq!(c.degree, 16);
+        assert_eq!(c.localities, vec![1, 2, 4]);
+    }
+
+    #[test]
+    fn unknown_key_is_an_error() {
+        let mut kv = BTreeMap::new();
+        kv.insert("scle".into(), "10".into());
+        assert!(Config::from_kv(&kv).is_err());
+    }
+
+    #[test]
+    fn net_keys_parse() {
+        let mut kv = BTreeMap::new();
+        kv.insert("net.latency_us".into(), "5.5".into());
+        kv.insert("net.bandwidth_gbps".into(), "100".into());
+        let c = Config::from_kv(&kv).unwrap();
+        assert_eq!(c.net.latency_us, 5.5);
+        assert_eq!(c.net.bandwidth_bytes_per_us, 100_000.0);
+    }
+
+    #[test]
+    fn graph_name_follows_gap() {
+        let mut c = Config::default();
+        c.scale = 25;
+        assert_eq!(c.graph_name(), "urand25");
+        c.generator = "kron".into();
+        c.scale = 16;
+        assert_eq!(c.graph_name(), "kron16");
+    }
+}

@@ -1,0 +1,341 @@
+//! Experiment definitions: one function per paper artifact (DESIGN.md §2).
+//!
+//! Every experiment builds the configured graph, sweeps locality counts,
+//! runs each engine `reps` times (keeping the fastest repetition, GAP
+//! convention), and reports *modeled* time: per-locality measured compute
+//! charged into the discrete-event clock plus the interconnect model.
+//! Speedups are normalized to the measured wall time of the fastest
+//! sequential implementation, exactly like the paper's Figure 1/2 y-axis.
+
+use std::time::Instant;
+
+use crate::algorithms::{bfs, pagerank, pagerank::PrParams};
+use crate::amt::{NetConfig, SimConfig, SimReport};
+use crate::config::Config;
+use crate::graph::{Csr, DistGraph, Partition1D};
+use crate::Result;
+
+use super::report::{fmt_us, Table};
+
+/// One measured data point.
+#[derive(Debug, Clone)]
+pub struct Point {
+    /// Engine label ("HPX", "Boost", ...).
+    pub engine: String,
+    /// Locality count.
+    pub p: u32,
+    /// Best modeled makespan over reps, us.
+    pub makespan_us: f64,
+    /// Speedup vs the sequential baseline.
+    pub speedup: f64,
+    /// Report of the best repetition.
+    pub report: SimReport,
+}
+
+fn sim_cfg(net: &NetConfig, aggregate: bool) -> SimConfig {
+    SimConfig { net: net.clone(), aggregate_sends: aggregate, ..SimConfig::default() }
+}
+
+/// The HPX runtime configuration: per-handler aggregation plus
+/// `hpx::plugins::parcel::coalescing` with a small flush window.
+fn hpx_cfg(net: &NetConfig) -> SimConfig {
+    SimConfig {
+        net: net.clone(),
+        aggregate_sends: true,
+        coalesce_window_us: 5.0,
+        ..SimConfig::default()
+    }
+}
+
+/// Measure the sequential BFS wall time (min over reps), us.
+pub fn sequential_bfs_us(g: &Csr, root: u32, reps: u32) -> f64 {
+    let mut best = f64::INFINITY;
+    for _ in 0..reps.max(1) {
+        let t0 = Instant::now();
+        let parents = bfs::sequential::bfs(g, root);
+        std::hint::black_box(&parents);
+        best = best.min(t0.elapsed().as_secs_f64() * 1e6);
+    }
+    best
+}
+
+/// Measure the sequential PageRank wall time (min over reps), us.
+pub fn sequential_pr_us(g: &Csr, params: PrParams, reps: u32) -> f64 {
+    let mut best = f64::INFINITY;
+    for _ in 0..reps.max(1) {
+        let t0 = Instant::now();
+        let r = pagerank::sequential::pagerank(g, params);
+        std::hint::black_box(&r);
+        best = best.min(t0.elapsed().as_secs_f64() * 1e6);
+    }
+    best
+}
+
+/// Figure 1: distributed BFS, HPX (async) vs Boost (BSP level-sync).
+pub fn fig1_bfs(cfg: &Config) -> Result<(Table, Vec<Point>)> {
+    let g = cfg.build_graph()?;
+    let seq_us = sequential_bfs_us(&g, cfg.root, cfg.reps);
+    let mut points = Vec::new();
+    let mut table = Table::new(
+        format!(
+            "Figure 1 — distributed BFS on {} (n={}, m={}): speedup vs fastest sequential",
+            cfg.graph_name(),
+            g.n(),
+            g.m()
+        ),
+        &["nodes", "HPX (async)", "Boost (BSP)", "HPX time", "Boost time", "HPX msgs",
+          "Boost msgs", "Boost barriers"],
+    );
+    for &p in &cfg.localities {
+        let dist = DistGraph::build(&g, &Partition1D::block(g.n(), p));
+        let mut best: [Option<(f64, SimReport)>; 2] = [None, None];
+        for _ in 0..cfg.reps.max(1) {
+            // HPX parcel coalescing is always on in the paper's runtime.
+            let a = bfs::async_hpx::run(&dist, cfg.root, hpx_cfg(&cfg.net));
+            let b = bfs::level_sync::run(&dist, cfg.root, sim_cfg(&cfg.net, false));
+            for (slot, res) in [(0, a), (1, b)] {
+                let m = res.report.makespan_us;
+                if best[slot].as_ref().map(|(t, _)| m < *t).unwrap_or(true) {
+                    best[slot] = Some((m, res.report));
+                }
+            }
+        }
+        let (at, ar) = best[0].take().unwrap();
+        let (bt, br) = best[1].take().unwrap();
+        table.row(vec![
+            p.to_string(),
+            format!("{:.2}x", seq_us / at),
+            format!("{:.2}x", seq_us / bt),
+            fmt_us(at),
+            fmt_us(bt),
+            ar.net.messages.to_string(),
+            br.net.messages.to_string(),
+            br.barriers.to_string(),
+        ]);
+        points.push(Point {
+            engine: "HPX".into(),
+            p,
+            makespan_us: at,
+            speedup: seq_us / at,
+            report: ar,
+        });
+        points.push(Point {
+            engine: "Boost".into(),
+            p,
+            makespan_us: bt,
+            speedup: seq_us / bt,
+            report: br,
+        });
+    }
+    Ok((table, points))
+}
+
+/// Figure 2: distributed PageRank — HPX naive, HPX optimized, Boost (BSP).
+pub fn fig2_pagerank(cfg: &Config) -> Result<(Table, Vec<Point>)> {
+    let g = cfg.build_graph()?;
+    let params = PrParams { alpha: cfg.alpha, iterations: cfg.iterations };
+    let seq_us = sequential_pr_us(&g, params, cfg.reps);
+    let mut points = Vec::new();
+    let mut table = Table::new(
+        format!(
+            "Figure 2 — distributed PageRank on {} (n={}, m={}, {} iters): \
+             speedup vs fastest sequential",
+            cfg.graph_name(),
+            g.n(),
+            g.m(),
+            cfg.iterations
+        ),
+        &["nodes", "HPX naive", "HPX (opt)", "Boost (BSP)", "naive time", "opt time",
+          "Boost time", "naive msgs", "opt envs", "Boost envs"],
+    );
+    let engines: [(&str, Box<dyn Fn(&DistGraph) -> pagerank::PrResult>); 3] = [
+        (
+            "HPX-naive",
+            Box::new({
+                let net = cfg.net.clone();
+                move |d| {
+                    pagerank::async_hpx::run(
+                        d,
+                        params,
+                        pagerank::async_hpx::Variant::Naive,
+                        sim_cfg(&net, false),
+                    )
+                }
+            }),
+        ),
+        (
+            "HPX-opt",
+            Box::new({
+                let net = cfg.net.clone();
+                move |d| {
+                    // Chunked combiner flushes, each shipped eagerly as its
+                    // own parcel (no handler-level re-merge): the overlap
+                    // knob that got the paper's prototype close to Boost.
+                    pagerank::async_hpx::run(
+                        d,
+                        params,
+                        pagerank::async_hpx::Variant::Optimized { flush_block: 1024 },
+                        sim_cfg(&net, false),
+                    )
+                }
+            }),
+        ),
+        (
+            "Boost",
+            Box::new({
+                let net = cfg.net.clone();
+                move |d| pagerank::bsp::run(d, params, sim_cfg(&net, false))
+            }),
+        ),
+    ];
+    for &p in &cfg.localities {
+        let dist = DistGraph::build(&g, &Partition1D::block(g.n(), p));
+        let mut best: Vec<Option<(f64, SimReport)>> = vec![None; engines.len()];
+        for _ in 0..cfg.reps.max(1) {
+            for (i, (_, run)) in engines.iter().enumerate() {
+                let res = run(&dist);
+                let m = res.report.makespan_us;
+                if best[i].as_ref().map(|(t, _)| m < *t).unwrap_or(true) {
+                    best[i] = Some((m, res.report));
+                }
+            }
+        }
+        let taken: Vec<(f64, SimReport)> = best.into_iter().map(|b| b.unwrap()).collect();
+        table.row(vec![
+            p.to_string(),
+            format!("{:.2}x", seq_us / taken[0].0),
+            format!("{:.2}x", seq_us / taken[1].0),
+            format!("{:.2}x", seq_us / taken[2].0),
+            fmt_us(taken[0].0),
+            fmt_us(taken[1].0),
+            fmt_us(taken[2].0),
+            taken[0].1.net.messages.to_string(),
+            taken[1].1.net.envelopes.to_string(),
+            taken[2].1.net.envelopes.to_string(),
+        ]);
+        for ((name, _), (t, r)) in engines.iter().zip(taken) {
+            points.push(Point {
+                engine: name.to_string(),
+                p,
+                makespan_us: t,
+                speedup: seq_us / t,
+                report: r,
+            });
+        }
+    }
+    Ok((table, points))
+}
+
+/// Ablation A1: message aggregation in asynchronous BFS.
+pub fn ablation_aggregation(cfg: &Config) -> Result<Table> {
+    let g = cfg.build_graph()?;
+    let mut table = Table::new(
+        format!("Ablation A1 — async BFS send aggregation on {}", cfg.graph_name()),
+        &["nodes", "no-agg time", "agg time", "no-agg envs", "agg envs", "agg factor"],
+    );
+    for &p in &cfg.localities {
+        let dist = DistGraph::build(&g, &Partition1D::block(g.n(), p));
+        let mut best = [f64::INFINITY; 2];
+        let mut reps_report: [Option<SimReport>; 2] = [None, None];
+        for _ in 0..cfg.reps.max(1) {
+            for (i, agg) in [(0, false), (1, true)] {
+                let r = bfs::async_hpx::run(&dist, cfg.root, sim_cfg(&cfg.net, agg));
+                if r.report.makespan_us < best[i] {
+                    best[i] = r.report.makespan_us;
+                    reps_report[i] = Some(r.report);
+                }
+            }
+        }
+        let (r0, r1) = (reps_report[0].take().unwrap(), reps_report[1].take().unwrap());
+        table.row(vec![
+            p.to_string(),
+            fmt_us(best[0]),
+            fmt_us(best[1]),
+            r0.net.envelopes.to_string(),
+            r1.net.envelopes.to_string(),
+            format!("{:.1}", r1.net.aggregation_factor()),
+        ]);
+    }
+    Ok(table)
+}
+
+/// Ablation A2: intra-locality executor chunking policies on the PageRank
+/// update loop (`adaptive_core_chunk_size`, paper §6).
+pub fn ablation_adaptive_chunk(cfg: &Config) -> Result<Table> {
+    use crate::amt::executor::{ChunkPolicy, Executor};
+    use std::sync::Arc;
+
+    let g = cfg.build_graph()?;
+    let params = PrParams { alpha: cfg.alpha, iterations: cfg.iterations };
+    let p = *cfg.localities.iter().find(|&&x| x >= 2).unwrap_or(&2);
+    let dist = DistGraph::build(&g, &Partition1D::block(g.n(), p));
+    let policies: [(&str, ChunkPolicy); 5] = [
+        ("sequential", ChunkPolicy::Sequential),
+        ("static-256", ChunkPolicy::Static { chunk: 256 }),
+        ("static-4096", ChunkPolicy::Static { chunk: 4096 }),
+        ("dynamic-256", ChunkPolicy::Dynamic { chunk: 256 }),
+        ("adaptive", ChunkPolicy::Adaptive),
+    ];
+    let mut table = Table::new(
+        format!(
+            "Ablation A2 — executor chunking on PageRank update ({}, {} localities)",
+            cfg.graph_name(),
+            p
+        ),
+        &["policy", "best time", "mean busy", "imbalance"],
+    );
+    for (name, policy) in policies {
+        let ex = Arc::new(Executor::new(0));
+        let mut best: Option<SimReport> = None;
+        for _ in 0..cfg.reps.max(1) {
+            let r = pagerank::bsp::run_with_executor(
+                &dist,
+                params,
+                sim_cfg(&cfg.net, false),
+                if matches!(policy, ChunkPolicy::Sequential) { None } else { Some(ex.clone()) },
+                policy,
+            );
+            if best.as_ref().map(|b| r.report.makespan_us < b.makespan_us).unwrap_or(true) {
+                best = Some(r.report);
+            }
+        }
+        let b = best.unwrap();
+        table.row(vec![
+            name.to_string(),
+            fmt_us(b.makespan_us),
+            fmt_us(b.mean_busy_us()),
+            format!("{:.2}", b.load_imbalance()),
+        ]);
+    }
+    Ok(table)
+}
+
+/// Extension benches (§6 coverage): SSSP / CC / triangle across localities.
+pub fn extensions(cfg: &Config) -> Result<Table> {
+    use crate::algorithms::{cc, sssp, triangle};
+    use crate::graph::generators;
+
+    let g = cfg.build_graph()?;
+    let gw = generators::with_random_weights(&g, 1.0, 10.0, cfg.seed + 1);
+    let mut table = Table::new(
+        format!("Extensions — SSSP / CC / triangles on {}", cfg.graph_name()),
+        &["nodes", "sssp-async", "sssp-bsp", "cc", "triangles"],
+    );
+    for &p in &cfg.localities {
+        let dist = DistGraph::build(&g, &Partition1D::block(g.n(), p));
+        // Async label-correcting floods fine-grained relaxations; run it
+        // under the HPX parcel-coalescing config like the async BFS.
+        let s_async = sssp::run_async(&gw, &dist, cfg.root, hpx_cfg(&cfg.net));
+        let s_bsp = sssp::run_bsp(&gw, &dist, cfg.root, sim_cfg(&cfg.net, false));
+        let c = cc::run(&dist, sim_cfg(&cfg.net, false));
+        let t = triangle::run(&dist, sim_cfg(&cfg.net, false));
+        table.row(vec![
+            p.to_string(),
+            fmt_us(s_async.report.makespan_us),
+            fmt_us(s_bsp.report.makespan_us),
+            fmt_us(c.report.makespan_us),
+            fmt_us(t.report.makespan_us),
+        ]);
+    }
+    Ok(table)
+}

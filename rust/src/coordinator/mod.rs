@@ -1,0 +1,157 @@
+//! Experiment coordinator: the leader-side driver tying together graph
+//! construction, partitioning, the simulated runtime, and result reporting.
+//!
+//! The CLI (`main.rs`) and the bench binaries (`rust/benches/`) both call
+//! into this module, so a paper figure is regenerated identically whether
+//! run interactively (`nwgraph-hpx fig1`) or via `cargo bench`.
+
+pub mod experiment;
+pub mod report;
+
+use crate::algorithms::{bfs, pagerank, pagerank::PrParams};
+use crate::amt::SimConfig;
+use crate::config::Config;
+use crate::graph::{DistGraph, Partition1D};
+use crate::Result;
+
+pub use experiment::Point;
+pub use report::Table;
+
+/// Which engine executes a single-run command.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Engine {
+    /// Asynchronous HPX-style.
+    Async,
+    /// Naive asynchronous (PageRank only).
+    AsyncNaive,
+    /// BSP / distributed-BGL baseline.
+    Bsp,
+    /// Direction-optimizing BFS.
+    DirOpt,
+    /// Kernel-offloaded (PageRank only; needs artifacts).
+    Kernel,
+}
+
+impl Engine {
+    /// Parse an `--engine` flag value.
+    pub fn parse(s: &str) -> Result<Engine> {
+        Ok(match s {
+            "async" => Engine::Async,
+            "async-naive" => Engine::AsyncNaive,
+            "bsp" | "boost" => Engine::Bsp,
+            "diropt" => Engine::DirOpt,
+            "kernel" => Engine::Kernel,
+            other => anyhow::bail!("unknown engine `{other}`"),
+        })
+    }
+}
+
+/// Run a single distributed BFS with the chosen engine; optionally
+/// validates against the sequential oracle.
+pub fn run_bfs(cfg: &Config, p: u32, engine: Engine, validate: bool) -> Result<bfs::BfsResult> {
+    let g = cfg.build_graph()?;
+    let dist = DistGraph::build(&g, &Partition1D::block(g.n(), p));
+    let sim = SimConfig {
+        net: cfg.net.clone(),
+        aggregate_sends: cfg.aggregate,
+        ..SimConfig::default()
+    };
+    let res = match engine {
+        Engine::Async => bfs::async_hpx::run(&dist, cfg.root, sim),
+        Engine::Bsp => bfs::level_sync::run(&dist, cfg.root, sim),
+        Engine::DirOpt => bfs::direction_opt::run(&dist, cfg.root, sim),
+        other => anyhow::bail!("engine {other:?} does not implement BFS"),
+    };
+    if validate {
+        bfs::validate_parents(&g, cfg.root, &res.parents)
+            .map_err(|e| anyhow::anyhow!("BFS validation failed: {e}"))?;
+    }
+    Ok(res)
+}
+
+/// Run a single distributed PageRank with the chosen engine; optionally
+/// validates against the sequential oracle.
+pub fn run_pagerank(
+    cfg: &Config,
+    p: u32,
+    engine: Engine,
+    validate: bool,
+) -> Result<pagerank::PrResult> {
+    let g = cfg.build_graph()?;
+    let dist = DistGraph::build(&g, &Partition1D::block(g.n(), p));
+    let params = PrParams { alpha: cfg.alpha, iterations: cfg.iterations };
+    let sim = SimConfig {
+        net: cfg.net.clone(),
+        aggregate_sends: cfg.aggregate,
+        ..SimConfig::default()
+    };
+    let res = match engine {
+        Engine::Async => pagerank::async_hpx::run(
+            &dist,
+            params,
+            pagerank::async_hpx::Variant::Optimized { flush_block: 1024 },
+            sim,
+        ),
+        Engine::AsyncNaive => {
+            pagerank::async_hpx::run(&dist, params, pagerank::async_hpx::Variant::Naive, sim)
+        }
+        Engine::Bsp => pagerank::bsp::run(&dist, params, sim),
+        Engine::Kernel => {
+            let engine = std::sync::Arc::new(std::sync::Mutex::new(
+                crate::runtime::Engine::load(&cfg.artifact_dir)?,
+            ));
+            pagerank::kernel::run(&dist, params, sim, engine)?
+        }
+        other => anyhow::bail!("engine {other:?} does not implement PageRank"),
+    };
+    if validate {
+        let want = pagerank::sequential::pagerank(&g, params);
+        let diff = pagerank::max_abs_diff(&res.ranks, &want);
+        anyhow::ensure!(diff < 1e-4, "PageRank validation failed: max |diff| = {diff}");
+    }
+    Ok(res)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_cfg() -> Config {
+        let mut c = Config::default();
+        c.scale = 6;
+        c.degree = 4;
+        c.iterations = 8;
+        c.reps = 1;
+        c
+    }
+
+    #[test]
+    fn engine_parse() {
+        assert_eq!(Engine::parse("async").unwrap(), Engine::Async);
+        assert_eq!(Engine::parse("boost").unwrap(), Engine::Bsp);
+        assert!(Engine::parse("warp").is_err());
+    }
+
+    #[test]
+    fn run_bfs_all_engines_validate() {
+        let cfg = tiny_cfg();
+        for e in [Engine::Async, Engine::Bsp, Engine::DirOpt] {
+            run_bfs(&cfg, 3, e, true).unwrap();
+        }
+    }
+
+    #[test]
+    fn run_pagerank_scalar_engines_validate() {
+        let mut cfg = tiny_cfg();
+        cfg.generator = "urand-directed".into();
+        for e in [Engine::Async, Engine::AsyncNaive, Engine::Bsp] {
+            run_pagerank(&cfg, 3, e, true).unwrap();
+        }
+    }
+
+    #[test]
+    fn bfs_engine_rejects_kernel() {
+        let cfg = tiny_cfg();
+        assert!(run_bfs(&cfg, 2, Engine::Kernel, false).is_err());
+    }
+}

@@ -1,0 +1,107 @@
+//! Fluent graph construction helpers.
+
+use super::{Csr, EdgeList, VertexId};
+
+/// Builder collecting edges before CSR finalization, with the usual
+/// hygiene toggles applied at `build` time.
+#[derive(Debug, Default)]
+pub struct GraphBuilder {
+    n: usize,
+    edges: Vec<(VertexId, VertexId)>,
+    weights: Vec<f32>,
+    symmetrize: bool,
+    dedup: bool,
+    drop_self_loops: bool,
+}
+
+impl GraphBuilder {
+    /// Builder over `n` vertices.
+    pub fn new(n: usize) -> Self {
+        GraphBuilder { n, ..Default::default() }
+    }
+
+    /// Add a directed edge.
+    pub fn edge(mut self, u: VertexId, v: VertexId) -> Self {
+        self.edges.push((u, v));
+        self
+    }
+
+    /// Add a weighted directed edge.
+    pub fn weighted_edge(mut self, u: VertexId, v: VertexId, w: f32) -> Self {
+        self.weights.resize(self.edges.len(), 1.0);
+        self.edges.push((u, v));
+        self.weights.push(w);
+        self
+    }
+
+    /// Add many edges.
+    pub fn edges(mut self, it: impl IntoIterator<Item = (VertexId, VertexId)>) -> Self {
+        self.edges.extend(it);
+        self
+    }
+
+    /// Mirror every edge at build time.
+    pub fn symmetrize(mut self) -> Self {
+        self.symmetrize = true;
+        self
+    }
+
+    /// Remove duplicates at build time.
+    pub fn dedup(mut self) -> Self {
+        self.dedup = true;
+        self
+    }
+
+    /// Remove self loops at build time.
+    pub fn drop_self_loops(mut self) -> Self {
+        self.drop_self_loops = true;
+        self
+    }
+
+    /// Finalize into CSR.
+    pub fn build(self) -> Csr {
+        let mut el = EdgeList { n: self.n, edges: self.edges, weights: self.weights };
+        if !el.weights.is_empty() {
+            el.weights.resize(el.edges.len(), 1.0);
+        }
+        if self.drop_self_loops {
+            el.remove_self_loops();
+        }
+        if self.symmetrize {
+            el.symmetrize();
+        } else if self.dedup {
+            el.dedup();
+        }
+        Csr::from_edge_list(&el)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builder_basic() {
+        let g = GraphBuilder::new(3).edge(0, 1).edge(1, 2).build();
+        assert_eq!(g.m(), 2);
+        assert_eq!(g.neighbors(0), &[1]);
+    }
+
+    #[test]
+    fn builder_symmetrize_dedup() {
+        let g = GraphBuilder::new(3)
+            .edges([(0, 1), (0, 1), (1, 1)])
+            .drop_self_loops()
+            .symmetrize()
+            .build();
+        assert_eq!(g.m(), 2);
+        assert!(g.has_edge(1, 0));
+    }
+
+    #[test]
+    fn builder_weighted() {
+        let g = GraphBuilder::new(2).weighted_edge(0, 1, 4.5).build();
+        assert!(g.is_weighted());
+        assert_eq!(g.neighbors_weighted(0).next().unwrap(), (1, 4.5));
+    }
+}

@@ -1,0 +1,194 @@
+//! Compressed-sparse-row adjacency — the NWGraph "range of ranges".
+
+use super::{EdgeList, VertexId};
+
+/// CSR adjacency. `neighbors(u)` is the inner range of NWGraph's
+/// range-of-ranges model; algorithms iterate `for u in 0..n { for v in
+/// g.neighbors(u) { .. } }` exactly like the paper's Listing 1.1.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Csr {
+    offsets: Vec<usize>,
+    targets: Vec<VertexId>,
+    weights: Option<Vec<f32>>,
+}
+
+impl Csr {
+    /// Build from an edge list (sorts a copy; stable for duplicate edges).
+    pub fn from_edge_list(el: &EdgeList) -> Self {
+        let n = el.n;
+        let mut degree = vec![0usize; n];
+        for &(u, _) in &el.edges {
+            degree[u as usize] += 1;
+        }
+        let mut offsets = vec![0usize; n + 1];
+        for u in 0..n {
+            offsets[u + 1] = offsets[u] + degree[u];
+        }
+        let mut targets = vec![0 as VertexId; el.edges.len()];
+        let mut weights = el.is_weighted().then(|| vec![0.0f32; el.edges.len()]);
+        let mut cursor = offsets.clone();
+        for (i, &(u, v)) in el.edges.iter().enumerate() {
+            let at = cursor[u as usize];
+            targets[at] = v;
+            if let Some(w) = weights.as_mut() {
+                w[at] = el.weights[i];
+            }
+            cursor[u as usize] += 1;
+        }
+        // Sort each row for deterministic iteration + binary-searchable rows.
+        for u in 0..n {
+            let r = offsets[u]..offsets[u + 1];
+            if let Some(w) = weights.as_mut() {
+                let mut row: Vec<(VertexId, f32)> =
+                    targets[r.clone()].iter().cloned().zip(w[r.clone()].iter().cloned()).collect();
+                row.sort_by_key(|&(t, _)| t);
+                for (k, (t, wt)) in row.into_iter().enumerate() {
+                    targets[r.start + k] = t;
+                    w[r.start + k] = wt;
+                }
+            } else {
+                targets[r].sort_unstable();
+            }
+        }
+        Csr { offsets, targets, weights }
+    }
+
+    /// Vertex count.
+    pub fn n(&self) -> usize {
+        self.offsets.len() - 1
+    }
+
+    /// Directed edge count.
+    pub fn m(&self) -> usize {
+        self.targets.len()
+    }
+
+    /// True when edges carry weights.
+    pub fn is_weighted(&self) -> bool {
+        self.weights.is_some()
+    }
+
+    /// Out-neighbors of `u` (sorted).
+    pub fn neighbors(&self, u: VertexId) -> &[VertexId] {
+        let u = u as usize;
+        &self.targets[self.offsets[u]..self.offsets[u + 1]]
+    }
+
+    /// Out-neighbors of `u` with weights; unweighted graphs yield unit
+    /// weights (SSSP on them degenerates to hop counts).
+    pub fn neighbors_weighted(&self, u: VertexId) -> impl Iterator<Item = (VertexId, f32)> + '_ {
+        let u = u as usize;
+        let r = self.offsets[u]..self.offsets[u + 1];
+        let w = self.weights.as_deref();
+        self.targets[r.clone()]
+            .iter()
+            .cloned()
+            .enumerate()
+            .map(move |(k, t)| (t, w.map(|w| w[r.start + k]).unwrap_or(1.0)))
+    }
+
+    /// Out-degree of `u`.
+    pub fn degree(&self, u: VertexId) -> usize {
+        let u = u as usize;
+        self.offsets[u + 1] - self.offsets[u]
+    }
+
+    /// Does the edge `u -> v` exist? (binary search on the sorted row)
+    pub fn has_edge(&self, u: VertexId, v: VertexId) -> bool {
+        self.neighbors(u).binary_search(&v).is_ok()
+    }
+
+    /// The transposed graph (in-neighbors become out-neighbors). PageRank
+    /// pulls over the transpose; BFS parent checks use it in tests.
+    pub fn transpose(&self) -> Csr {
+        let mut el = EdgeList::new(self.n());
+        if let Some(w) = &self.weights {
+            el.weights = Vec::with_capacity(self.m());
+            for u in 0..self.n() as VertexId {
+                let r = self.offsets[u as usize]..self.offsets[u as usize + 1];
+                for (k, &v) in self.targets[r.clone()].iter().enumerate() {
+                    el.edges.push((v, u));
+                    el.weights.push(w[r.start + k]);
+                }
+            }
+        } else {
+            for u in 0..self.n() as VertexId {
+                for &v in self.neighbors(u) {
+                    el.edges.push((v, u));
+                }
+            }
+        }
+        Csr::from_edge_list(&el)
+    }
+
+    /// Raw offsets (len n+1).
+    pub fn offsets(&self) -> &[usize] {
+        &self.offsets
+    }
+
+    /// Raw target array (len m).
+    pub fn targets(&self) -> &[VertexId] {
+        &self.targets
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn diamond() -> Csr {
+        // 0 -> {1,2}, 1 -> {3}, 2 -> {3}
+        Csr::from_edge_list(&EdgeList::from_pairs(4, [(0, 2), (0, 1), (1, 3), (2, 3)]))
+    }
+
+    #[test]
+    fn rows_are_sorted() {
+        let g = diamond();
+        assert_eq!(g.neighbors(0), &[1, 2]);
+        assert_eq!(g.neighbors(1), &[3]);
+        assert_eq!(g.neighbors(3), &[] as &[VertexId]);
+        assert_eq!(g.n(), 4);
+        assert_eq!(g.m(), 4);
+    }
+
+    #[test]
+    fn degree_and_has_edge() {
+        let g = diamond();
+        assert_eq!(g.degree(0), 2);
+        assert_eq!(g.degree(3), 0);
+        assert!(g.has_edge(0, 2));
+        assert!(!g.has_edge(2, 0));
+    }
+
+    #[test]
+    fn transpose_reverses_every_edge() {
+        let g = diamond();
+        let t = g.transpose();
+        assert_eq!(t.neighbors(3), &[1, 2]);
+        assert_eq!(t.neighbors(0), &[] as &[VertexId]);
+        assert_eq!(t.m(), g.m());
+        // double transpose is identity
+        assert_eq!(t.transpose(), g);
+    }
+
+    #[test]
+    fn weighted_roundtrip() {
+        let mut el = EdgeList::new(3);
+        el.push_weighted(0, 1, 1.5);
+        el.push_weighted(0, 2, 2.5);
+        el.push_weighted(1, 2, 3.5);
+        let g = Csr::from_edge_list(&el);
+        let w0: Vec<_> = g.neighbors_weighted(0).collect();
+        assert_eq!(w0, vec![(1, 1.5), (2, 2.5)]);
+        let t = g.transpose();
+        let wt: Vec<_> = t.neighbors_weighted(2).collect();
+        assert_eq!(wt, vec![(0, 2.5), (1, 3.5)]);
+    }
+
+    #[test]
+    fn empty_graph() {
+        let g = Csr::from_edge_list(&EdgeList::new(0));
+        assert_eq!(g.n(), 0);
+        assert_eq!(g.m(), 0);
+    }
+}

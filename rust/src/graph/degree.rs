@@ -1,0 +1,98 @@
+//! Degree utilities and distribution statistics.
+
+use super::{Csr, VertexId};
+
+/// Out-degree of every vertex.
+pub fn out_degrees(g: &Csr) -> Vec<u32> {
+    (0..g.n() as VertexId).map(|u| g.degree(u) as u32).collect()
+}
+
+/// In-degree of every vertex (one pass over the edges; no transpose).
+pub fn in_degrees(g: &Csr) -> Vec<u32> {
+    let mut d = vec![0u32; g.n()];
+    for &v in g.targets() {
+        d[v as usize] += 1;
+    }
+    d
+}
+
+/// Summary statistics of a degree vector.
+#[derive(Debug, Clone, PartialEq)]
+pub struct DegreeStats {
+    /// Smallest degree.
+    pub min: u32,
+    /// Largest degree.
+    pub max: u32,
+    /// Mean degree.
+    pub mean: f64,
+    /// Median degree.
+    pub median: u32,
+}
+
+/// Compute [`DegreeStats`].
+pub fn degree_stats(degrees: &[u32]) -> DegreeStats {
+    if degrees.is_empty() {
+        return DegreeStats { min: 0, max: 0, mean: 0.0, median: 0 };
+    }
+    let mut sorted = degrees.to_vec();
+    sorted.sort_unstable();
+    DegreeStats {
+        min: sorted[0],
+        max: *sorted.last().unwrap(),
+        mean: sorted.iter().map(|&d| d as f64).sum::<f64>() / sorted.len() as f64,
+        median: sorted[sorted.len() / 2],
+    }
+}
+
+/// log2-bucketed degree histogram: `hist[k]` counts vertices with degree in
+/// `[2^k, 2^(k+1))`; `hist[0]` also counts degree 0..2.
+pub fn degree_histogram(degrees: &[u32]) -> Vec<usize> {
+    let mut hist = Vec::new();
+    for &d in degrees {
+        let bucket = if d <= 1 { 0 } else { (u32::BITS - d.leading_zeros() - 1) as usize };
+        if hist.len() <= bucket {
+            hist.resize(bucket + 1, 0);
+        }
+        hist[bucket] += 1;
+    }
+    hist
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generators;
+
+    #[test]
+    fn in_degrees_match_transpose() {
+        let g = generators::urand_directed(6, 4, 3);
+        let t = g.transpose();
+        let ind = in_degrees(&g);
+        for u in 0..g.n() as VertexId {
+            assert_eq!(ind[u as usize] as usize, t.degree(u));
+        }
+    }
+
+    #[test]
+    fn stats_on_star() {
+        let g = generators::star(10);
+        let s = degree_stats(&out_degrees(&g));
+        assert_eq!(s.min, 1);
+        assert_eq!(s.max, 9);
+        assert!((s.mean - 18.0 / 10.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn histogram_buckets() {
+        let h = degree_histogram(&[0, 1, 2, 3, 4, 8, 9]);
+        // deg 0,1 -> bucket 0; 2,3 -> 1; 4 -> 2; 8,9 -> 3
+        assert_eq!(h, vec![2, 2, 1, 2]);
+    }
+
+    #[test]
+    fn empty_stats() {
+        let s = degree_stats(&[]);
+        assert_eq!(s.max, 0);
+        assert_eq!(degree_histogram(&[]), Vec::<usize>::new());
+    }
+}

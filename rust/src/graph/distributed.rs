@@ -1,0 +1,313 @@
+//! Distributed graph shards: the per-locality slice of a partitioned graph.
+//!
+//! Each locality owns a contiguous vertex range (see
+//! [`Partition1D`](super::Partition1D)) and holds
+//!
+//! * the **out-CSR** of its owned rows (targets are *global* ids — edges
+//!   freely cross localities, exactly like NWGraph adjacency backed by an
+//!   `hpx::partitioned_vector` segment), used by push-style traversal;
+//! * the **in-CSR** (transposed rows), used by pull-style PageRank;
+//! * on demand, a **masked-ELL** encoding of the in-adjacency
+//!   ([`EllShard`]) with *virtual-row splitting* for the AOT kernel path —
+//!   HLO needs static shapes, so rows wider than the kernel's `max_deg`
+//!   are split across several virtual rows whose partial sums the caller
+//!   re-accumulates (`row_map`).
+
+use std::ops::Range;
+
+use super::{Csr, Partition1D, VertexId};
+use crate::amt::sim::LocalityId;
+
+/// One locality's shard.
+#[derive(Debug, Clone)]
+pub struct Shard {
+    /// Owning locality.
+    pub locality: LocalityId,
+    /// Owned global vertex range.
+    pub range: Range<usize>,
+    out_offsets: Vec<usize>,
+    out_targets: Vec<VertexId>,
+    in_offsets: Vec<usize>,
+    in_targets: Vec<VertexId>,
+    /// Global out-degree of each owned vertex (PageRank contributions
+    /// divide by this).
+    pub out_degree: Vec<u32>,
+}
+
+impl Shard {
+    /// Number of owned vertices.
+    pub fn n_local(&self) -> usize {
+        self.range.end - self.range.start
+    }
+
+    /// Local row index of a global vertex (must be owned).
+    pub fn local_index(&self, v: VertexId) -> usize {
+        debug_assert!(self.range.contains(&(v as usize)));
+        v as usize - self.range.start
+    }
+
+    /// Global id of a local row.
+    pub fn global_id(&self, local: usize) -> VertexId {
+        (self.range.start + local) as VertexId
+    }
+
+    /// Out-neighbors (global ids) of the owned vertex with local row `u`.
+    pub fn out_neighbors(&self, u: usize) -> &[VertexId] {
+        &self.out_targets[self.out_offsets[u]..self.out_offsets[u + 1]]
+    }
+
+    /// In-neighbors (global ids) of the owned vertex with local row `u`.
+    pub fn in_neighbors(&self, u: usize) -> &[VertexId] {
+        &self.in_targets[self.in_offsets[u]..self.in_offsets[u + 1]]
+    }
+
+    /// Owned out-edge count.
+    pub fn m_out(&self) -> usize {
+        self.out_targets.len()
+    }
+
+    /// Owned in-edge count.
+    pub fn m_in(&self) -> usize {
+        self.in_targets.len()
+    }
+
+    /// Encode the in-adjacency as masked ELL with virtual-row splitting.
+    ///
+    /// * `max_deg` — slot width (must match the AOT artifact);
+    /// * `pad_rows_to` — pad the virtual row count up to this (artifact
+    ///   row count); `0` means no padding.
+    ///
+    /// Returns `None` if the virtual rows exceed `pad_rows_to`.
+    pub fn in_ell(&self, max_deg: usize, pad_rows_to: usize) -> Option<EllShard> {
+        let n_local = self.n_local();
+        let mut row_map: Vec<u32> = Vec::new();
+        let mut cols: Vec<i32> = Vec::new();
+        let mut mask: Vec<f32> = Vec::new();
+        for u in 0..n_local {
+            let nbrs = self.in_neighbors(u);
+            let chunks = if nbrs.is_empty() { 1 } else { nbrs.len().div_ceil(max_deg) };
+            for c in 0..chunks {
+                row_map.push(u as u32);
+                let chunk = &nbrs[c * max_deg..((c + 1) * max_deg).min(nbrs.len())];
+                for &v in chunk {
+                    cols.push(v as i32);
+                    mask.push(1.0);
+                }
+                for _ in chunk.len()..max_deg {
+                    cols.push(0);
+                    mask.push(0.0);
+                }
+            }
+        }
+        let n_virtual = row_map.len();
+        let n_rows_padded = if pad_rows_to == 0 { n_virtual } else { pad_rows_to };
+        if n_virtual > n_rows_padded {
+            return None;
+        }
+        for _ in n_virtual..n_rows_padded {
+            row_map.push(u32::MAX);
+            cols.extend(std::iter::repeat(0).take(max_deg));
+            mask.extend(std::iter::repeat(0.0).take(max_deg));
+        }
+        Some(EllShard { n_local, n_virtual, max_deg, n_rows_padded, cols, mask, row_map })
+    }
+}
+
+/// Masked-ELL in-adjacency for the kernel-offload path (layout contract
+/// shared with `python/compile/model.py`).
+#[derive(Debug, Clone)]
+pub struct EllShard {
+    /// Owned (real) rows.
+    pub n_local: usize,
+    /// Virtual rows before padding (>= n_local).
+    pub n_virtual: usize,
+    /// Slot width.
+    pub max_deg: usize,
+    /// Padded row count (artifact shape).
+    pub n_rows_padded: usize,
+    /// `n_rows_padded * max_deg` global column ids (padding -> 0).
+    pub cols: Vec<i32>,
+    /// `n_rows_padded * max_deg` slot validity (1.0 real, 0.0 padding).
+    pub mask: Vec<f32>,
+    /// Virtual row -> owned local row (`u32::MAX` for padding rows).
+    pub row_map: Vec<u32>,
+}
+
+impl EllShard {
+    /// Fold per-virtual-row values back into per-owned-row values
+    /// (re-accumulating split rows).
+    pub fn fold_rows(&self, virtual_vals: &[f32]) -> Vec<f32> {
+        debug_assert_eq!(virtual_vals.len(), self.n_rows_padded);
+        let mut out = vec![0.0f32; self.n_local];
+        for (r, &owner) in self.row_map.iter().enumerate() {
+            if owner != u32::MAX {
+                out[owner as usize] += virtual_vals[r];
+            }
+        }
+        out
+    }
+}
+
+/// A graph partitioned into per-locality shards.
+#[derive(Debug, Clone)]
+pub struct DistGraph {
+    /// The vertex partition.
+    pub partition: Partition1D,
+    /// One shard per locality.
+    pub shards: Vec<Shard>,
+    n: usize,
+    m: usize,
+}
+
+impl DistGraph {
+    /// Partition `g` according to `partition`.
+    pub fn build(g: &Csr, partition: &Partition1D) -> Self {
+        assert_eq!(g.n(), partition.n());
+        let t = g.transpose();
+        let shards = (0..partition.p())
+            .map(|l| {
+                let range = partition.range_of(l);
+                let mut out_offsets = Vec::with_capacity(range.len() + 1);
+                let mut out_targets = Vec::new();
+                let mut in_offsets = Vec::with_capacity(range.len() + 1);
+                let mut in_targets = Vec::new();
+                let mut out_degree = Vec::with_capacity(range.len());
+                out_offsets.push(0);
+                in_offsets.push(0);
+                for v in range.clone() {
+                    let v = v as VertexId;
+                    out_targets.extend_from_slice(g.neighbors(v));
+                    out_offsets.push(out_targets.len());
+                    in_targets.extend_from_slice(t.neighbors(v));
+                    in_offsets.push(in_targets.len());
+                    out_degree.push(g.degree(v) as u32);
+                }
+                Shard {
+                    locality: l,
+                    range,
+                    out_offsets,
+                    out_targets,
+                    in_offsets,
+                    in_targets,
+                    out_degree,
+                }
+            })
+            .collect();
+        DistGraph { partition: partition.clone(), shards, n: g.n(), m: g.m() }
+    }
+
+    /// Convenience: block partition over `p` localities.
+    pub fn block(g: &Csr, p: u32) -> Self {
+        DistGraph::build(g, &Partition1D::block(g.n(), p))
+    }
+
+    /// Global vertex count.
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    /// Global directed edge count.
+    pub fn m(&self) -> usize {
+        self.m
+    }
+
+    /// Locality count.
+    pub fn p(&self) -> u32 {
+        self.partition.p()
+    }
+
+    /// Owner of a global vertex (`vertex_locality_id` of Listing 1.2).
+    pub fn owner(&self, v: VertexId) -> LocalityId {
+        self.partition.owner(v)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generators;
+
+    #[test]
+    fn shards_cover_all_edges() {
+        let g = generators::urand(8, 4, 2);
+        let d = DistGraph::block(&g, 4);
+        let out_total: usize = d.shards.iter().map(|s| s.m_out()).sum();
+        let in_total: usize = d.shards.iter().map(|s| s.m_in()).sum();
+        assert_eq!(out_total, g.m());
+        assert_eq!(in_total, g.m());
+    }
+
+    #[test]
+    fn shard_neighbors_match_global_graph() {
+        let g = generators::kron(7, 4, 3);
+        let d = DistGraph::block(&g, 3);
+        for s in &d.shards {
+            for u in 0..s.n_local() {
+                let gu = s.global_id(u);
+                assert_eq!(s.out_neighbors(u), g.neighbors(gu));
+                assert_eq!(s.out_degree[u] as usize, g.degree(gu));
+            }
+        }
+    }
+
+    #[test]
+    fn in_neighbors_are_the_transpose() {
+        let g = generators::urand_directed(6, 4, 5);
+        let d = DistGraph::block(&g, 2);
+        let t = g.transpose();
+        for s in &d.shards {
+            for u in 0..s.n_local() {
+                assert_eq!(s.in_neighbors(u), t.neighbors(s.global_id(u)));
+            }
+        }
+    }
+
+    #[test]
+    fn ell_roundtrip_preserves_spmv() {
+        let g = generators::urand_directed(6, 6, 7);
+        let d = DistGraph::block(&g, 2);
+        let n = g.n();
+        let contrib: Vec<f32> = (0..n).map(|i| (i as f32 * 0.37).sin().abs()).collect();
+        for s in &d.shards {
+            let max_deg = 4; // force row splitting
+            let ell = s.in_ell(max_deg, 0).unwrap();
+            assert!(ell.n_virtual >= s.n_local());
+            // Virtual SpMV then fold == direct in-neighbor sums.
+            let mut virt = vec![0.0f32; ell.n_rows_padded];
+            for r in 0..ell.n_rows_padded {
+                for k in 0..max_deg {
+                    let idx = r * max_deg + k;
+                    virt[r] += contrib[ell.cols[idx] as usize] * ell.mask[idx];
+                }
+            }
+            let folded = ell.fold_rows(&virt);
+            for u in 0..s.n_local() {
+                let want: f32 = s.in_neighbors(u).iter().map(|&v| contrib[v as usize]).sum();
+                assert!((folded[u] - want).abs() < 1e-4, "row {u}: {} vs {want}", folded[u]);
+            }
+        }
+    }
+
+    #[test]
+    fn ell_padding_rows_are_inert() {
+        let g = generators::path(10);
+        let d = DistGraph::block(&g, 2);
+        let ell = d.shards[0].in_ell(8, 16).unwrap();
+        assert_eq!(ell.n_rows_padded, 16);
+        for r in ell.n_virtual..16 {
+            assert_eq!(ell.row_map[r], u32::MAX);
+            for k in 0..8 {
+                assert_eq!(ell.mask[r * 8 + k], 0.0);
+            }
+        }
+    }
+
+    #[test]
+    fn ell_rejects_overflow() {
+        let g = generators::star(100);
+        let d = DistGraph::block(&g, 1);
+        // star center has degree 99; with max_deg 4 that's 25 virtual rows
+        // for row 0 alone — padding to 8 rows must fail.
+        assert!(d.shards[0].in_ell(4, 8).is_none());
+    }
+}

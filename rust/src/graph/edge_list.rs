@@ -1,0 +1,148 @@
+//! COO edge lists: the construction-time representation.
+
+use super::VertexId;
+
+/// A directed edge list over `n` vertices, with optional per-edge weights.
+#[derive(Debug, Clone, Default)]
+pub struct EdgeList {
+    /// Vertex count (ids must be `< n`).
+    pub n: usize,
+    /// `(source, target)` pairs.
+    pub edges: Vec<(VertexId, VertexId)>,
+    /// Optional weights, parallel to `edges` (empty == unweighted).
+    pub weights: Vec<f32>,
+}
+
+impl EdgeList {
+    /// New empty edge list over `n` vertices.
+    pub fn new(n: usize) -> Self {
+        EdgeList { n, edges: Vec::new(), weights: Vec::new() }
+    }
+
+    /// From raw pairs.
+    pub fn from_pairs(n: usize, pairs: impl IntoIterator<Item = (VertexId, VertexId)>) -> Self {
+        let edges: Vec<_> = pairs.into_iter().collect();
+        debug_assert!(edges.iter().all(|&(u, v)| (u as usize) < n && (v as usize) < n));
+        EdgeList { n, edges, weights: Vec::new() }
+    }
+
+    /// Edge count.
+    pub fn m(&self) -> usize {
+        self.edges.len()
+    }
+
+    /// True when weighted.
+    pub fn is_weighted(&self) -> bool {
+        !self.weights.is_empty()
+    }
+
+    /// Add one edge.
+    pub fn push(&mut self, u: VertexId, v: VertexId) {
+        debug_assert!((u as usize) < self.n && (v as usize) < self.n);
+        self.edges.push((u, v));
+    }
+
+    /// Add one weighted edge.
+    pub fn push_weighted(&mut self, u: VertexId, v: VertexId, w: f32) {
+        self.push(u, v);
+        self.weights.resize(self.edges.len() - 1, 1.0);
+        self.weights.push(w);
+    }
+
+    /// Drop self loops (in place).
+    pub fn remove_self_loops(&mut self) {
+        if self.is_weighted() {
+            let mut kept_w = Vec::with_capacity(self.weights.len());
+            let mut kept_e = Vec::with_capacity(self.edges.len());
+            for (&(u, v), &w) in self.edges.iter().zip(&self.weights) {
+                if u != v {
+                    kept_e.push((u, v));
+                    kept_w.push(w);
+                }
+            }
+            self.edges = kept_e;
+            self.weights = kept_w;
+        } else {
+            self.edges.retain(|&(u, v)| u != v);
+        }
+    }
+
+    /// Sort and remove duplicate edges (keeping the first weight).
+    pub fn dedup(&mut self) {
+        if self.is_weighted() {
+            let mut zipped: Vec<((VertexId, VertexId), f32)> =
+                self.edges.iter().cloned().zip(self.weights.iter().cloned()).collect();
+            zipped.sort_by_key(|&(e, _)| e);
+            zipped.dedup_by_key(|&mut (e, _)| e);
+            self.edges = zipped.iter().map(|&(e, _)| e).collect();
+            self.weights = zipped.iter().map(|&(_, w)| w).collect();
+        } else {
+            self.edges.sort_unstable();
+            self.edges.dedup();
+        }
+    }
+
+    /// Add the reverse of every edge (directed → symmetric), then dedup.
+    /// GAP's `urand` inputs are undirected; BFS-style traversals expect a
+    /// symmetrized adjacency.
+    pub fn symmetrize(&mut self) {
+        let rev: Vec<(VertexId, VertexId)> =
+            self.edges.iter().map(|&(u, v)| (v, u)).collect();
+        if self.is_weighted() {
+            let rev_w = self.weights.clone();
+            self.edges.extend(rev);
+            self.weights.extend(rev_w);
+        } else {
+            self.edges.extend(rev);
+        }
+        self.remove_self_loops();
+        self.dedup();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn push_and_count() {
+        let mut el = EdgeList::new(4);
+        el.push(0, 1);
+        el.push(1, 2);
+        assert_eq!(el.m(), 2);
+        assert!(!el.is_weighted());
+    }
+
+    #[test]
+    fn remove_self_loops_keeps_order() {
+        let mut el = EdgeList::from_pairs(3, [(0, 1), (1, 1), (2, 0)]);
+        el.remove_self_loops();
+        assert_eq!(el.edges, vec![(0, 1), (2, 0)]);
+    }
+
+    #[test]
+    fn dedup_removes_duplicates() {
+        let mut el = EdgeList::from_pairs(3, [(2, 0), (0, 1), (0, 1), (2, 0)]);
+        el.dedup();
+        assert_eq!(el.edges, vec![(0, 1), (2, 0)]);
+    }
+
+    #[test]
+    fn symmetrize_adds_reverses_and_cleans() {
+        let mut el = EdgeList::from_pairs(3, [(0, 1), (1, 2), (2, 2)]);
+        el.symmetrize();
+        assert_eq!(el.edges, vec![(0, 1), (1, 0), (1, 2), (2, 1)]);
+    }
+
+    #[test]
+    fn weighted_symmetrize_carries_weights() {
+        let mut el = EdgeList::new(3);
+        el.push_weighted(0, 1, 2.5);
+        el.push_weighted(1, 2, 0.5);
+        el.symmetrize();
+        assert_eq!(el.m(), 4);
+        assert_eq!(el.weights.len(), 4);
+        let idx = el.edges.iter().position(|&e| e == (1, 0)).unwrap();
+        assert_eq!(el.weights[idx], 2.5);
+    }
+}

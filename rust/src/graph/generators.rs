@@ -1,0 +1,284 @@
+//! Synthetic graph generators (GAP-style inputs).
+//!
+//! The paper evaluates on Erdős–Rényi "urand" graphs (`urandN` = 2^N
+//! vertices; GAP benchmark naming). We provide `urand` plus the RMAT /
+//! Kronecker family (GAP's `kron`) and structured graphs for tests and
+//! examples. The paper's urand25 does not fit a laptop-scale run; the
+//! benches use urand16–urand20 from the *same generator family*
+//! (substitution table, DESIGN.md §4).
+
+use super::{Csr, EdgeList, VertexId};
+
+/// SplitMix64 — tiny, fast, reproducible PRNG (no external crates offline).
+#[derive(Debug, Clone)]
+pub struct SplitMix64 {
+    state: u64,
+}
+
+impl SplitMix64 {
+    /// Seeded generator.
+    pub fn new(seed: u64) -> Self {
+        SplitMix64 { state: seed }
+    }
+
+    /// Next raw 64-bit value.
+    pub fn next_u64(&mut self) -> u64 {
+        self.state = self.state.wrapping_add(0x9E3779B97F4A7C15);
+        let mut z = self.state;
+        z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+        z ^ (z >> 31)
+    }
+
+    /// Uniform in `[0, bound)`.
+    pub fn below(&mut self, bound: u64) -> u64 {
+        debug_assert!(bound > 0);
+        // Multiply-shift; bias negligible for graph generation.
+        ((self.next_u64() as u128 * bound as u128) >> 64) as u64
+    }
+
+    /// Uniform f64 in `[0, 1)`.
+    pub fn f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+}
+
+/// Erdős–Rényi G(n, m) — the GAP "urand" model: `n = 2^scale` vertices,
+/// `degree * n` uniformly random directed edges, then symmetrized (GAP
+/// urand graphs are undirected), self loops and duplicates removed.
+pub fn urand(scale: u32, degree: usize, seed: u64) -> Csr {
+    let n = 1usize << scale;
+    let m = n * degree;
+    let mut rng = SplitMix64::new(seed);
+    let mut el = EdgeList::new(n);
+    el.edges.reserve(m);
+    for _ in 0..m {
+        let u = rng.below(n as u64) as VertexId;
+        let v = rng.below(n as u64) as VertexId;
+        el.push(u, v);
+    }
+    el.symmetrize();
+    Csr::from_edge_list(&el)
+}
+
+/// Directed Erdős–Rényi G(n, m) without symmetrization — used for PageRank
+/// inputs where direction matters.
+pub fn urand_directed(scale: u32, degree: usize, seed: u64) -> Csr {
+    let n = 1usize << scale;
+    let m = n * degree;
+    let mut rng = SplitMix64::new(seed);
+    let mut el = EdgeList::new(n);
+    el.edges.reserve(m);
+    for _ in 0..m {
+        let u = rng.below(n as u64) as VertexId;
+        let v = rng.below(n as u64) as VertexId;
+        if u != v {
+            el.push(u, v);
+        }
+    }
+    el.dedup();
+    Csr::from_edge_list(&el)
+}
+
+/// RMAT / Kronecker generator (GAP `kron`): recursive quadrant descent with
+/// probabilities `(a, b, c, d)`; the default (0.57, 0.19, 0.19, 0.05) is the
+/// Graph500 parameterization, producing the skewed degree distributions the
+/// paper's load-imbalance discussion targets.
+pub fn rmat(scale: u32, degree: usize, a: f64, b: f64, c: f64, seed: u64) -> Csr {
+    let n = 1usize << scale;
+    let m = n * degree;
+    let d = 1.0 - a - b - c;
+    assert!(d >= -1e-9, "rmat probabilities exceed 1");
+    let mut rng = SplitMix64::new(seed);
+    let mut el = EdgeList::new(n);
+    el.edges.reserve(m);
+    for _ in 0..m {
+        let (mut u, mut v) = (0usize, 0usize);
+        for _ in 0..scale {
+            let r = rng.f64();
+            let (du, dv) = if r < a {
+                (0, 0)
+            } else if r < a + b {
+                (0, 1)
+            } else if r < a + b + c {
+                (1, 0)
+            } else {
+                (1, 1)
+            };
+            u = (u << 1) | du;
+            v = (v << 1) | dv;
+        }
+        if u != v {
+            el.push(u as VertexId, v as VertexId);
+        }
+    }
+    el.symmetrize();
+    Csr::from_edge_list(&el)
+}
+
+/// Graph500-parameterized kron graph.
+pub fn kron(scale: u32, degree: usize, seed: u64) -> Csr {
+    rmat(scale, degree, 0.57, 0.19, 0.19, seed)
+}
+
+/// Simple path 0-1-2-...-(n-1), undirected.
+pub fn path(n: usize) -> Csr {
+    let mut el = EdgeList::new(n);
+    for i in 1..n {
+        el.push((i - 1) as VertexId, i as VertexId);
+        el.push(i as VertexId, (i - 1) as VertexId);
+    }
+    Csr::from_edge_list(&el)
+}
+
+/// Cycle over n vertices, undirected.
+pub fn cycle(n: usize) -> Csr {
+    let mut el = EdgeList::new(n);
+    for i in 0..n {
+        let j = (i + 1) % n;
+        el.push(i as VertexId, j as VertexId);
+        el.push(j as VertexId, i as VertexId);
+    }
+    el.dedup();
+    Csr::from_edge_list(&el)
+}
+
+/// Star: vertex 0 connected to all others, undirected.
+pub fn star(n: usize) -> Csr {
+    let mut el = EdgeList::new(n);
+    for i in 1..n {
+        el.push(0, i as VertexId);
+        el.push(i as VertexId, 0);
+    }
+    Csr::from_edge_list(&el)
+}
+
+/// 2-D grid `rows x cols`, undirected, row-major vertex ids.
+pub fn grid(rows: usize, cols: usize) -> Csr {
+    let n = rows * cols;
+    let mut el = EdgeList::new(n);
+    let id = |r: usize, c: usize| (r * cols + c) as VertexId;
+    for r in 0..rows {
+        for c in 0..cols {
+            if c + 1 < cols {
+                el.push(id(r, c), id(r, c + 1));
+                el.push(id(r, c + 1), id(r, c));
+            }
+            if r + 1 < rows {
+                el.push(id(r, c), id(r + 1, c));
+                el.push(id(r + 1, c), id(r, c));
+            }
+        }
+    }
+    Csr::from_edge_list(&el)
+}
+
+/// Complete graph on n vertices (no self loops).
+pub fn complete(n: usize) -> Csr {
+    let mut el = EdgeList::new(n);
+    for u in 0..n {
+        for v in 0..n {
+            if u != v {
+                el.push(u as VertexId, v as VertexId);
+            }
+        }
+    }
+    Csr::from_edge_list(&el)
+}
+
+/// Complete binary tree with n vertices (edges both directions).
+pub fn binary_tree(n: usize) -> Csr {
+    let mut el = EdgeList::new(n);
+    for i in 1..n {
+        let p = ((i - 1) / 2) as VertexId;
+        el.push(p, i as VertexId);
+        el.push(i as VertexId, p);
+    }
+    Csr::from_edge_list(&el)
+}
+
+/// Attach uniform-random weights in `[lo, hi)` to an unweighted graph
+/// (symmetric edges get independent draws; fine for SSSP benchmarks).
+pub fn with_random_weights(g: &Csr, lo: f32, hi: f32, seed: u64) -> Csr {
+    let mut rng = SplitMix64::new(seed);
+    let mut el = EdgeList::new(g.n());
+    for u in 0..g.n() as VertexId {
+        for &v in g.neighbors(u) {
+            el.push_weighted(u, v, lo + (hi - lo) * rng.f64() as f32);
+        }
+    }
+    Csr::from_edge_list(&el)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn splitmix_is_deterministic() {
+        let mut a = SplitMix64::new(42);
+        let mut b = SplitMix64::new(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn below_respects_bound() {
+        let mut rng = SplitMix64::new(7);
+        for _ in 0..1000 {
+            assert!(rng.below(17) < 17);
+        }
+    }
+
+    #[test]
+    fn urand_is_symmetric_and_loopless() {
+        let g = urand(8, 4, 1);
+        assert_eq!(g.n(), 256);
+        for u in 0..g.n() as VertexId {
+            for &v in g.neighbors(u) {
+                assert_ne!(u, v, "self loop at {u}");
+                assert!(g.has_edge(v, u), "asymmetric edge {u}->{v}");
+            }
+        }
+        // Average degree in the right ballpark (2 * degree for symmetrized).
+        let avg = g.m() as f64 / g.n() as f64;
+        assert!(avg > 4.0 && avg < 9.0, "avg degree {avg}");
+    }
+
+    #[test]
+    fn urand_same_seed_same_graph() {
+        assert_eq!(urand(6, 4, 9), urand(6, 4, 9));
+    }
+
+    #[test]
+    fn rmat_is_skewed() {
+        let g = kron(10, 8, 3);
+        let mut degs: Vec<usize> = (0..g.n() as VertexId).map(|u| g.degree(u)).collect();
+        degs.sort_unstable();
+        let max = *degs.last().unwrap();
+        let med = degs[degs.len() / 2];
+        assert!(max > 4 * med.max(1), "kron should be skewed: max={max} med={med}");
+    }
+
+    #[test]
+    fn structured_shapes() {
+        assert_eq!(path(5).m(), 8);
+        assert_eq!(cycle(5).m(), 10);
+        assert_eq!(star(5).m(), 8);
+        assert_eq!(grid(3, 4).m(), 2 * (3 * 3 + 2 * 4));
+        assert_eq!(complete(4).m(), 12);
+        assert_eq!(binary_tree(7).m(), 12);
+    }
+
+    #[test]
+    fn random_weights_in_range() {
+        let g = with_random_weights(&path(10), 1.0, 2.0, 5);
+        assert!(g.is_weighted());
+        for u in 0..g.n() as VertexId {
+            for (_, w) in g.neighbors_weighted(u) {
+                assert!((1.0..2.0).contains(&w));
+            }
+        }
+    }
+}

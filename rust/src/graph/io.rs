@@ -1,0 +1,167 @@
+//! Graph I/O: whitespace edge lists and a MatrixMarket-pattern subset.
+
+use std::io::{BufRead, BufReader, BufWriter, Read, Write};
+use std::path::Path;
+
+use super::{Csr, EdgeList, VertexId};
+use crate::Result;
+
+/// Parse a whitespace-separated edge list: one `u v [w]` per line, `#` or
+/// `%` comments. Vertex count is `max id + 1` unless `n_hint` is larger.
+pub fn read_edge_list<R: Read>(reader: R, n_hint: usize) -> Result<EdgeList> {
+    let mut el = EdgeList::new(0);
+    let mut max_id: usize = 0;
+    let mut any_weight = false;
+    for (lineno, line) in BufReader::new(reader).lines().enumerate() {
+        let line = line?;
+        let s = line.trim();
+        if s.is_empty() || s.starts_with('#') || s.starts_with('%') {
+            continue;
+        }
+        let mut it = s.split_whitespace();
+        let u: usize = it
+            .next()
+            .ok_or_else(|| anyhow::anyhow!("line {}: missing source", lineno + 1))?
+            .parse()?;
+        let v: usize = it
+            .next()
+            .ok_or_else(|| anyhow::anyhow!("line {}: missing target", lineno + 1))?
+            .parse()?;
+        let w: Option<f32> = it.next().map(|t| t.parse()).transpose()?;
+        max_id = max_id.max(u).max(v);
+        el.edges.push((u as VertexId, v as VertexId));
+        if let Some(w) = w {
+            any_weight = true;
+            el.weights.resize(el.edges.len() - 1, 1.0);
+            el.weights.push(w);
+        } else if any_weight {
+            el.weights.push(1.0);
+        }
+    }
+    el.n = (max_id + 1).max(n_hint);
+    if el.edges.is_empty() {
+        el.n = n_hint;
+    }
+    Ok(el)
+}
+
+/// Read an edge-list file (see [`read_edge_list`]).
+pub fn read_edge_list_file(path: impl AsRef<Path>) -> Result<EdgeList> {
+    let f = std::fs::File::open(path.as_ref())?;
+    read_edge_list(f, 0)
+}
+
+/// Write a graph as an edge list (`u v` or `u v w` lines).
+pub fn write_edge_list<W: Write>(g: &Csr, writer: W) -> Result<()> {
+    let mut w = BufWriter::new(writer);
+    writeln!(w, "# nwgraph-hpx edge list: n={} m={}", g.n(), g.m())?;
+    if g.is_weighted() {
+        for u in 0..g.n() as VertexId {
+            for (v, wt) in g.neighbors_weighted(u) {
+                writeln!(w, "{u} {v} {wt}")?;
+            }
+        }
+    } else {
+        for u in 0..g.n() as VertexId {
+            for &v in g.neighbors(u) {
+                writeln!(w, "{u} {v}")?;
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Read a MatrixMarket `coordinate pattern` / `coordinate real` file as a
+/// directed graph (1-based indices per the format).
+pub fn read_matrix_market<R: Read>(reader: R) -> Result<EdgeList> {
+    let mut lines = BufReader::new(reader).lines();
+    let header = lines
+        .next()
+        .ok_or_else(|| anyhow::anyhow!("empty MatrixMarket file"))??;
+    if !header.starts_with("%%MatrixMarket") {
+        anyhow::bail!("not a MatrixMarket file: {header}");
+    }
+    let symmetric = header.contains("symmetric");
+    let mut dims: Option<(usize, usize)> = None;
+    let mut el = EdgeList::new(0);
+    for line in lines {
+        let line = line?;
+        let s = line.trim();
+        if s.is_empty() || s.starts_with('%') {
+            continue;
+        }
+        let mut it = s.split_whitespace();
+        if dims.is_none() {
+            let rows: usize = it.next().unwrap().parse()?;
+            let cols: usize = it.next().unwrap().parse()?;
+            dims = Some((rows, cols));
+            el.n = rows.max(cols);
+            continue;
+        }
+        let u: usize = it.next().ok_or_else(|| anyhow::anyhow!("bad entry"))?.parse()?;
+        let v: usize = it.next().ok_or_else(|| anyhow::anyhow!("bad entry"))?.parse()?;
+        let (u, v) = (u - 1, v - 1); // 1-based -> 0-based
+        el.push(u as VertexId, v as VertexId);
+        if symmetric && u != v {
+            el.push(v as VertexId, u as VertexId);
+        }
+    }
+    if dims.is_none() {
+        anyhow::bail!("MatrixMarket file has no size line");
+    }
+    Ok(el)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generators;
+
+    #[test]
+    fn edge_list_roundtrip() {
+        let g = generators::urand(6, 4, 1);
+        let mut buf = Vec::new();
+        write_edge_list(&g, &mut buf).unwrap();
+        let el = read_edge_list(&buf[..], g.n()).unwrap();
+        let g2 = Csr::from_edge_list(&el);
+        assert_eq!(g, g2);
+    }
+
+    #[test]
+    fn weighted_roundtrip() {
+        let g = generators::with_random_weights(&generators::path(6), 1.0, 2.0, 3);
+        let mut buf = Vec::new();
+        write_edge_list(&g, &mut buf).unwrap();
+        let el = read_edge_list(&buf[..], g.n()).unwrap();
+        assert!(el.is_weighted());
+        let g2 = Csr::from_edge_list(&el);
+        for u in 0..g.n() as VertexId {
+            let a: Vec<_> = g.neighbors_weighted(u).collect();
+            let b: Vec<_> = g2.neighbors_weighted(u).collect();
+            assert_eq!(a, b);
+        }
+    }
+
+    #[test]
+    fn comments_and_blanks_ignored() {
+        let text = "# comment\n\n% other comment\n0 1\n1 2\n";
+        let el = read_edge_list(text.as_bytes(), 0).unwrap();
+        assert_eq!(el.edges, vec![(0, 1), (1, 2)]);
+        assert_eq!(el.n, 3);
+    }
+
+    #[test]
+    fn matrix_market_symmetric() {
+        let text = "%%MatrixMarket matrix coordinate pattern symmetric\n\
+                    % a triangle\n3 3 3\n1 2\n2 3\n1 3\n";
+        let el = read_matrix_market(text.as_bytes()).unwrap();
+        assert_eq!(el.n, 3);
+        assert_eq!(el.m(), 6);
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        assert!(read_matrix_market("nope".as_bytes()).is_err());
+        assert!(read_edge_list("0\n".as_bytes(), 0).is_err());
+    }
+}

@@ -1,0 +1,28 @@
+//! NWGraph-equivalent graph library.
+//!
+//! NWGraph models a graph as a "range of ranges" — an outer range of
+//! vertices, each with an inner range of neighbors — and builds generic
+//! algorithms on that concept (paper §3.1). The same shape here:
+//! [`Csr`] is the range-of-ranges workhorse, [`EdgeList`] the builder
+//! input, [`generators`] produce the GAP-style synthetic inputs
+//! (`urand`, RMAT/Kronecker, structured families), [`Partition1D`] and
+//! [`DistGraph`] carve a graph into per-locality shards for the simulated
+//! runtime, and [`views`] provide NWGraph-style traversal ranges.
+
+pub mod builder;
+pub mod csr;
+pub mod degree;
+pub mod distributed;
+pub mod edge_list;
+pub mod generators;
+pub mod io;
+pub mod partition;
+pub mod views;
+
+pub use csr::Csr;
+pub use distributed::{DistGraph, EllShard, Shard};
+pub use edge_list::EdgeList;
+pub use partition::Partition1D;
+
+/// Vertex identifier (global index space).
+pub type VertexId = u32;

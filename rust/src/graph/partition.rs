@@ -1,0 +1,176 @@
+//! 1-D vertex partitioning across localities.
+//!
+//! The paper distributes `hpx::partitioned_vector`-backed adjacency in
+//! contiguous blocks; `vertex_locality_id` in Listing 1.2 is the owner
+//! query. [`Partition1D`] generalizes the block layout to arbitrary
+//! contiguous cuts so the edge-balanced strategy (an ablation in DESIGN.md)
+//! shares the same interface.
+
+use super::{Csr, VertexId};
+use crate::amt::agas::BlockMap;
+use crate::amt::sim::LocalityId;
+
+/// A contiguous 1-D partition of `0..n` into `P` ranges.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Partition1D {
+    /// `starts[l]..starts[l+1]` is locality `l`'s range; `len == P + 1`.
+    starts: Vec<usize>,
+}
+
+impl Partition1D {
+    /// Equal-size block partition (HPX `container_layout` convention via
+    /// [`BlockMap`]).
+    pub fn block(n: usize, p: u32) -> Self {
+        let map = BlockMap::new(n, p);
+        let mut starts = Vec::with_capacity(p as usize + 1);
+        starts.push(0);
+        for l in 0..p {
+            starts.push(map.range_of(l).end);
+        }
+        Partition1D { starts }
+    }
+
+    /// Edge-balanced contiguous partition: cuts chosen so each locality
+    /// owns roughly `m / P` out-edges. Mitigates the load imbalance from
+    /// skewed degree distributions (paper §2).
+    pub fn edge_balanced(g: &Csr, p: u32) -> Self {
+        let n = g.n();
+        let m = g.m();
+        let target = (m as f64 / p as f64).max(1.0);
+        let offsets = g.offsets();
+        let mut starts = Vec::with_capacity(p as usize + 1);
+        starts.push(0);
+        for l in 1..p as usize {
+            let want = (l as f64 * target) as usize;
+            // First vertex whose prefix edge count reaches `want`.
+            let cut = offsets.partition_point(|&o| o < want).min(n);
+            let prev = *starts.last().unwrap();
+            starts.push(cut.max(prev)); // keep monotone
+        }
+        starts.push(n);
+        Partition1D { starts }
+    }
+
+    /// From explicit cut points (must start at 0, end at n, be monotone).
+    pub fn from_starts(starts: Vec<usize>) -> Self {
+        assert!(starts.len() >= 2);
+        assert_eq!(starts[0], 0);
+        assert!(starts.windows(2).all(|w| w[0] <= w[1]));
+        Partition1D { starts }
+    }
+
+    /// Locality count.
+    pub fn p(&self) -> u32 {
+        (self.starts.len() - 1) as u32
+    }
+
+    /// Total vertex count covered.
+    pub fn n(&self) -> usize {
+        *self.starts.last().unwrap()
+    }
+
+    /// The paper's `vertex_locality_id`: owner of vertex `v`.
+    pub fn owner(&self, v: VertexId) -> LocalityId {
+        let v = v as usize;
+        debug_assert!(v < self.n());
+        // partition_point returns the first start > v; owner is that - 1.
+        (self.starts.partition_point(|&s| s <= v) - 1) as LocalityId
+    }
+
+    /// Vertex range owned by locality `l`.
+    pub fn range_of(&self, l: LocalityId) -> std::ops::Range<usize> {
+        let l = l as usize;
+        self.starts[l]..self.starts[l + 1]
+    }
+
+    /// Number of vertices owned by `l`.
+    pub fn len_of(&self, l: LocalityId) -> usize {
+        let r = self.range_of(l);
+        r.end - r.start
+    }
+
+    /// Max / mean owned-vertex count (vertex balance factor).
+    pub fn vertex_imbalance(&self) -> f64 {
+        let p = self.p();
+        let mean = self.n() as f64 / p as f64;
+        if mean == 0.0 {
+            return 1.0;
+        }
+        (0..p).map(|l| self.len_of(l) as f64).fold(0.0, f64::max) / mean
+    }
+
+    /// Max / mean owned-edge count under graph `g` (edge balance factor).
+    pub fn edge_imbalance(&self, g: &Csr) -> f64 {
+        let p = self.p();
+        let mean = g.m() as f64 / p as f64;
+        if mean == 0.0 {
+            return 1.0;
+        }
+        let offsets = g.offsets();
+        (0..p)
+            .map(|l| {
+                let r = self.range_of(l);
+                (offsets[r.end] - offsets[r.start]) as f64
+            })
+            .fold(0.0, f64::max)
+            / mean
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generators;
+
+    #[test]
+    fn block_partition_owner_matches_range() {
+        let p = Partition1D::block(10, 3); // 4,3,3
+        assert_eq!(p.range_of(0), 0..4);
+        assert_eq!(p.range_of(1), 4..7);
+        assert_eq!(p.range_of(2), 7..10);
+        for v in 0..10u32 {
+            let l = p.owner(v);
+            assert!(p.range_of(l).contains(&(v as usize)));
+        }
+    }
+
+    #[test]
+    fn partitions_cover_everything_once() {
+        for (n, k) in [(10usize, 3u32), (1, 4), (100, 7), (64, 64)] {
+            let p = Partition1D::block(n, k);
+            let total: usize = (0..k).map(|l| p.len_of(l)).sum();
+            assert_eq!(total, n);
+        }
+    }
+
+    #[test]
+    fn edge_balanced_beats_block_on_skewed_graphs() {
+        let g = generators::kron(10, 8, 11);
+        let blk = Partition1D::block(g.n(), 8);
+        let bal = Partition1D::edge_balanced(&g, 8);
+        assert!(
+            bal.edge_imbalance(&g) <= blk.edge_imbalance(&g) + 1e-9,
+            "balanced {} vs block {}",
+            bal.edge_imbalance(&g),
+            blk.edge_imbalance(&g)
+        );
+        let total: usize = (0..8).map(|l| bal.len_of(l)).sum();
+        assert_eq!(total, g.n());
+    }
+
+    #[test]
+    fn single_locality_owns_all() {
+        let p = Partition1D::block(42, 1);
+        assert_eq!(p.range_of(0), 0..42);
+        assert_eq!(p.owner(41), 0);
+        assert_eq!(p.vertex_imbalance(), 1.0);
+    }
+
+    #[test]
+    fn from_starts_validates() {
+        let p = Partition1D::from_starts(vec![0, 2, 2, 5]);
+        assert_eq!(p.p(), 3);
+        assert_eq!(p.len_of(1), 0);
+        assert_eq!(p.owner(2), 2);
+    }
+}

@@ -1,0 +1,134 @@
+//! NWGraph-style traversal views: `bfs_range`-like iterators that express
+//! algorithms as high-level ranges instead of visitor objects (paper §3.1).
+
+use std::collections::VecDeque;
+
+use super::{Csr, VertexId};
+
+/// Iterator over `(vertex, level)` in BFS order from a source — the
+/// NWGraph `bfs_range` view.
+pub struct BfsRange<'g> {
+    g: &'g Csr,
+    queue: VecDeque<(VertexId, usize)>,
+    visited: Vec<bool>,
+}
+
+impl<'g> BfsRange<'g> {
+    /// BFS view rooted at `source`.
+    pub fn new(g: &'g Csr, source: VertexId) -> Self {
+        let mut visited = vec![false; g.n()];
+        let mut queue = VecDeque::new();
+        if (source as usize) < g.n() {
+            visited[source as usize] = true;
+            queue.push_back((source, 0));
+        }
+        BfsRange { g, queue, visited }
+    }
+}
+
+impl<'g> Iterator for BfsRange<'g> {
+    type Item = (VertexId, usize);
+
+    fn next(&mut self) -> Option<(VertexId, usize)> {
+        let (u, lvl) = self.queue.pop_front()?;
+        for &v in self.g.neighbors(u) {
+            if !self.visited[v as usize] {
+                self.visited[v as usize] = true;
+                self.queue.push_back((v, lvl + 1));
+            }
+        }
+        Some((u, lvl))
+    }
+}
+
+/// Iterator over vertices in DFS (preorder) from a source.
+pub struct DfsRange<'g> {
+    g: &'g Csr,
+    stack: Vec<VertexId>,
+    visited: Vec<bool>,
+}
+
+impl<'g> DfsRange<'g> {
+    /// DFS view rooted at `source`.
+    pub fn new(g: &'g Csr, source: VertexId) -> Self {
+        let mut visited = vec![false; g.n()];
+        let mut stack = Vec::new();
+        if (source as usize) < g.n() {
+            visited[source as usize] = true;
+            stack.push(source);
+        }
+        DfsRange { g, stack, visited }
+    }
+}
+
+impl<'g> Iterator for DfsRange<'g> {
+    type Item = VertexId;
+
+    fn next(&mut self) -> Option<VertexId> {
+        let u = self.stack.pop()?;
+        // Reverse so lower-numbered neighbors come out first.
+        for &v in self.g.neighbors(u).iter().rev() {
+            if !self.visited[v as usize] {
+                self.visited[v as usize] = true;
+                self.stack.push(v);
+            }
+        }
+        Some(u)
+    }
+}
+
+/// All `(u, v)` edges as a flat iterator (the NWGraph `edge_range` view).
+pub fn edge_range(g: &Csr) -> impl Iterator<Item = (VertexId, VertexId)> + '_ {
+    (0..g.n() as VertexId).flat_map(move |u| g.neighbors(u).iter().map(move |&v| (u, v)))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generators;
+
+    #[test]
+    fn bfs_range_levels_on_path() {
+        let g = generators::path(5);
+        let order: Vec<_> = BfsRange::new(&g, 0).collect();
+        assert_eq!(order, vec![(0, 0), (1, 1), (2, 2), (3, 3), (4, 4)]);
+    }
+
+    #[test]
+    fn bfs_range_visits_component_once() {
+        let g = generators::urand(7, 4, 4);
+        let mut seen = vec![false; g.n()];
+        for (v, _) in BfsRange::new(&g, 0) {
+            assert!(!seen[v as usize], "vertex {v} visited twice");
+            seen[v as usize] = true;
+        }
+    }
+
+    #[test]
+    fn bfs_levels_are_monotone() {
+        let g = generators::kron(8, 4, 5);
+        let mut last = 0;
+        for (_, lvl) in BfsRange::new(&g, 0) {
+            assert!(lvl >= last);
+            last = lvl;
+        }
+    }
+
+    #[test]
+    fn dfs_preorder_on_tree() {
+        let g = generators::binary_tree(7);
+        let order: Vec<_> = DfsRange::new(&g, 0).collect();
+        assert_eq!(order.len(), 7);
+        assert_eq!(order[0], 0);
+        // first child of root explored fully before second
+        let pos = |v: VertexId| order.iter().position(|&x| x == v).unwrap();
+        assert!(pos(1) < pos(2));
+        assert!(pos(3) < pos(2));
+    }
+
+    #[test]
+    fn edge_range_counts_m() {
+        let g = generators::urand(6, 4, 6);
+        assert_eq!(edge_range(&g).count(), g.m());
+    }
+}

@@ -1,0 +1,41 @@
+//! # nwgraph-hpx — distributed graph algorithms on an asynchronous many-task runtime
+//!
+//! A reproduction of *"An Initial Evaluation of Distributed Graph Algorithms
+//! using NWGraph and HPX"* (Mohammadiporshokooh, Syskakis, Kaiser — CS.DC 2026)
+//! as a three-layer Rust + JAX + Pallas stack:
+//!
+//! * **[`amt`]** — an HPX-equivalent asynchronous many-task substrate: a
+//!   discrete-event simulated multi-locality runtime (latency/bandwidth
+//!   interconnect model, barriers, message aggregation), plus real threaded
+//!   work-stealing executors with static / dynamic / adaptive chunking for
+//!   intra-locality parallel loops, an AGAS-style address resolver and an
+//!   `hpx::partitioned_vector` equivalent.
+//! * **[`graph`]** — an NWGraph-equivalent library: CSR adjacency, edge
+//!   lists, GAP-style generators (`urand`, RMAT/Kronecker, structured),
+//!   1-D block partitioning and distributed shards (CSR + masked-ELL).
+//! * **[`algorithms`]** — the paper's two algorithms in both execution
+//!   models (asynchronous HPX-style and BSP/PBGL-style), plus the
+//!   future-work extensions (§6): delta-stepping SSSP, connected
+//!   components, triangle counting.
+//! * **[`runtime`]** — PJRT wrapper loading the AOT-lowered Pallas/JAX
+//!   compute kernels (`artifacts/*.hlo.txt`) for the kernel-offloaded
+//!   PageRank / BFS local phases. Python never runs on this path.
+//! * **[`coordinator`]** — experiment driver regenerating the paper's
+//!   Figure 1 / Figure 2 sweeps and the ablations from DESIGN.md.
+//!
+//! See `DESIGN.md` for the full inventory and the substitutions made for
+//! hardware we do not have (the paper's 32-node Ice Lake cluster becomes a
+//! modeled interconnect; distributed BGL becomes a faithful BSP baseline on
+//! the same substrate).
+
+pub mod algorithms;
+pub mod amt;
+pub mod cli;
+pub mod config;
+pub mod coordinator;
+pub mod graph;
+pub mod runtime;
+pub mod testing;
+
+/// Crate-wide result alias.
+pub type Result<T> = anyhow::Result<T>;

@@ -1,0 +1,122 @@
+//! `nwgraph-hpx` CLI — the leader entrypoint.
+//!
+//! See [`nwgraph_hpx::cli::USAGE`] (`nwgraph-hpx help`) for the command
+//! grammar. All heavy lifting lives in [`nwgraph_hpx::coordinator`]; this
+//! binary only parses arguments and formats output.
+
+use std::path::PathBuf;
+
+use nwgraph_hpx::cli::{Args, USAGE};
+use nwgraph_hpx::config::Config;
+use nwgraph_hpx::coordinator::{self, experiment, report::fmt_us, Engine};
+use nwgraph_hpx::graph::degree;
+use nwgraph_hpx::Result;
+
+fn main() {
+    if let Err(e) = real_main() {
+        eprintln!("error: {e}");
+        std::process::exit(1);
+    }
+}
+
+fn real_main() -> Result<()> {
+    let args = Args::from_env()?;
+    if args.command.is_empty() || args.command == "help" || args.switch("help") {
+        println!("{USAGE}");
+        return Ok(());
+    }
+    let cfg_path = args.flag("config").map(PathBuf::from);
+    let mut cfg = Config::load(cfg_path.as_deref(), &args.overrides)?;
+    if args.switch("aggregate") {
+        cfg.aggregate = true;
+    }
+    let validate = args.switch("validate");
+
+    match args.command.as_str() {
+        "bfs" => {
+            let engine = Engine::parse(args.flag("engine").unwrap_or("async"))?;
+            let p = args.flag_or("p", *cfg.localities.last().unwrap_or(&4))?;
+            let res = coordinator::run_bfs(&cfg, p, engine, validate)?;
+            let reached = res.parents.iter().filter(|&&x| x >= 0).count();
+            println!(
+                "bfs[{engine:?}] {} p={p}: reached {}/{} vertices in {} \
+                 (msgs={} envs={} barriers={})",
+                cfg.graph_name(),
+                reached,
+                res.parents.len(),
+                fmt_us(res.report.makespan_us),
+                res.report.net.messages,
+                res.report.net.envelopes,
+                res.report.barriers,
+            );
+            if validate {
+                println!("validation: OK");
+            }
+        }
+        "pagerank" => {
+            let engine = Engine::parse(args.flag("engine").unwrap_or("async"))?;
+            let p = args.flag_or("p", *cfg.localities.last().unwrap_or(&4))?;
+            let res = coordinator::run_pagerank(&cfg, p, engine, validate)?;
+            println!(
+                "pagerank[{engine:?}] {} p={p}: {} iters in {} \
+                 (final delta={:.3e}, msgs={}, envs={}, barriers={})",
+                cfg.graph_name(),
+                cfg.iterations,
+                fmt_us(res.report.makespan_us),
+                res.deltas.last().cloned().unwrap_or(0.0),
+                res.report.net.messages,
+                res.report.net.envelopes,
+                res.report.barriers,
+            );
+            println!(
+                "  mean busy={} imbalance={:.2} utilization={:.2} wire={}",
+                fmt_us(res.report.mean_busy_us()),
+                res.report.load_imbalance(),
+                res.report.utilization(),
+                fmt_us(res.report.net.wire_us),
+            );
+            if validate {
+                println!("validation: OK");
+            }
+        }
+        "fig1" => {
+            let (table, _) = experiment::fig1_bfs(&cfg)?;
+            print!("{}", table.render());
+            if let Some(out) = args.flag("out") {
+                table.write_csv(out)?;
+                println!("wrote {out}");
+            }
+        }
+        "fig2" => {
+            let (table, _) = experiment::fig2_pagerank(&cfg)?;
+            print!("{}", table.render());
+            if let Some(out) = args.flag("out") {
+                table.write_csv(out)?;
+                println!("wrote {out}");
+            }
+        }
+        "ablations" => {
+            print!("{}", experiment::ablation_aggregation(&cfg)?.render());
+            print!("{}", experiment::ablation_adaptive_chunk(&cfg)?.render());
+            print!("{}", experiment::extensions(&cfg)?.render());
+        }
+        "info" => {
+            let g = cfg.build_graph()?;
+            let out = degree::degree_stats(&degree::out_degrees(&g));
+            let ind = degree::degree_stats(&degree::in_degrees(&g));
+            println!("{}: n={} m={}", cfg.graph_name(), g.n(), g.m());
+            println!("out-degree: min={} max={} mean={:.2}", out.min, out.max, out.mean);
+            println!("in-degree:  min={} max={} mean={:.2}", ind.min, ind.max, ind.mean);
+            let hist = degree::degree_histogram(&degree::out_degrees(&g));
+            for (k, c) in hist.iter().enumerate() {
+                println!("  deg 2^{k:<2} {c}");
+            }
+        }
+        other => {
+            eprintln!("unknown command `{other}`\n");
+            println!("{USAGE}");
+            std::process::exit(2);
+        }
+    }
+    Ok(())
+}

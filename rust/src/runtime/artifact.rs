@@ -1,0 +1,136 @@
+//! Artifact manifest: discovery + shape selection for the AOT modules.
+//!
+//! `python/compile/aot.py` writes `artifacts/manifest.txt` with one line
+//! per lowered module: `kind n_global n_rows max_deg tile_rows file`.
+//! The rust side never hard-codes shapes — it parses the manifest and
+//! picks the smallest config that covers the shard at hand (padding the
+//! shard up to the artifact's static shape).
+
+use std::path::{Path, PathBuf};
+
+use crate::Result;
+
+/// One AOT-lowered module.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ArtifactSpec {
+    /// `"pagerank"` or `"bfs"`.
+    pub kind: String,
+    /// Static global vector length (contribution / frontier input).
+    pub n_global: usize,
+    /// Static (virtual) row count.
+    pub n_rows: usize,
+    /// ELL slot width.
+    pub max_deg: usize,
+    /// Pallas grid tile height (informational).
+    pub tile_rows: usize,
+    /// HLO text file, relative to the artifact dir.
+    pub file: String,
+}
+
+/// Parsed manifest plus its base directory.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    dir: PathBuf,
+    specs: Vec<ArtifactSpec>,
+}
+
+impl Manifest {
+    /// Parse `<dir>/manifest.txt`.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = dir.as_ref().to_path_buf();
+        let text = std::fs::read_to_string(dir.join("manifest.txt"))?;
+        Self::parse(&text, dir)
+    }
+
+    /// Parse manifest text (exposed for tests).
+    pub fn parse(text: &str, dir: PathBuf) -> Result<Self> {
+        let mut specs = Vec::new();
+        for (no, line) in text.lines().enumerate() {
+            let s = line.trim();
+            if s.is_empty() || s.starts_with('#') {
+                continue;
+            }
+            let f: Vec<&str> = s.split_whitespace().collect();
+            if f.len() != 6 {
+                anyhow::bail!("manifest line {}: expected 6 fields, got {}", no + 1, f.len());
+            }
+            specs.push(ArtifactSpec {
+                kind: f[0].to_string(),
+                n_global: f[1].parse()?,
+                n_rows: f[2].parse()?,
+                max_deg: f[3].parse()?,
+                tile_rows: f[4].parse()?,
+                file: f[5].to_string(),
+            });
+        }
+        Ok(Manifest { dir, specs })
+    }
+
+    /// All specs.
+    pub fn specs(&self) -> &[ArtifactSpec] {
+        &self.specs
+    }
+
+    /// Absolute path of a spec's HLO file.
+    pub fn path_of(&self, spec: &ArtifactSpec) -> PathBuf {
+        self.dir.join(&spec.file)
+    }
+
+    /// Smallest config of `kind` covering `n_global` gather range and
+    /// `n_rows` virtual rows (ties broken toward fewer rows, then smaller
+    /// max_deg).
+    pub fn pick(&self, kind: &str, n_global: usize, n_rows: usize) -> Option<&ArtifactSpec> {
+        self.specs
+            .iter()
+            .filter(|s| s.kind == kind && s.n_global >= n_global && s.n_rows >= n_rows)
+            .min_by_key(|s| (s.n_global, s.n_rows, s.max_deg))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = "\
+# kind n_global n_rows max_deg tile_rows file
+pagerank 4096 4096 32 1024 pagerank_g4096_r4096_d32.hlo.txt
+pagerank 4096 2048 32 1024 pagerank_g4096_r2048_d32.hlo.txt
+pagerank 16384 16384 32 1024 pagerank_g16384_r16384_d32.hlo.txt
+bfs 4096 4096 32 1024 bfs_g4096_r4096_d32.hlo.txt
+";
+
+    fn manifest() -> Manifest {
+        Manifest::parse(SAMPLE, PathBuf::from("/tmp")).unwrap()
+    }
+
+    #[test]
+    fn parses_all_lines() {
+        assert_eq!(manifest().specs().len(), 4);
+    }
+
+    #[test]
+    fn pick_prefers_smallest_covering_config() {
+        let m = manifest();
+        let s = m.pick("pagerank", 3000, 1500).unwrap();
+        assert_eq!((s.n_global, s.n_rows), (4096, 2048));
+        let s = m.pick("pagerank", 3000, 3000).unwrap();
+        assert_eq!((s.n_global, s.n_rows), (4096, 4096));
+        let s = m.pick("pagerank", 10000, 100).unwrap();
+        assert_eq!(s.n_global, 16384);
+    }
+
+    #[test]
+    fn pick_respects_kind_and_bounds() {
+        let m = manifest();
+        assert!(m.pick("bfs", 4096, 4096).is_some());
+        assert!(m.pick("bfs", 4097, 1).is_none());
+        assert!(m.pick("pagerank", 100_000, 1).is_none());
+        assert!(m.pick("nope", 1, 1).is_none());
+    }
+
+    #[test]
+    fn rejects_malformed_lines() {
+        assert!(Manifest::parse("pagerank 1 2 3", PathBuf::new()).is_err());
+        assert!(Manifest::parse("pagerank a b c d e", PathBuf::new()).is_err());
+    }
+}

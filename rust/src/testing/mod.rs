@@ -1,0 +1,185 @@
+//! Mini property-testing harness (proptest is unavailable offline).
+//!
+//! [`forall`] runs a property over generated cases; on failure it *shrinks*
+//! by retrying the property on the generator's simpler outputs (halved
+//! sizes/seeds) and reports the smallest failing case it found. Generators
+//! are plain functions from a PRNG + size budget to a value, so graph- and
+//! partition-specific generators compose naturally.
+
+use crate::graph::generators::SplitMix64;
+
+/// Configuration for a property run.
+#[derive(Debug, Clone)]
+pub struct PropConfig {
+    /// Number of random cases.
+    pub cases: u32,
+    /// Base seed (every case derives its own).
+    pub seed: u64,
+    /// Maximum size budget handed to generators.
+    pub max_size: usize,
+}
+
+impl Default for PropConfig {
+    fn default() -> Self {
+        PropConfig { cases: 64, seed: 0xC0FFEE, max_size: 64 }
+    }
+}
+
+/// A generated case with the inputs that produced it (for shrinking).
+pub struct Case<T> {
+    /// The generated value.
+    pub value: T,
+    seed: u64,
+    size: usize,
+}
+
+/// Run `prop` over `cfg.cases` values from `gen`; panics with the smallest
+/// failing case's diagnostics on failure.
+///
+/// `gen(rng, size)` must be deterministic in `(seed, size)`.
+pub fn forall<T, G, P>(cfg: &PropConfig, mut gen: G, mut prop: P)
+where
+    T: std::fmt::Debug,
+    G: FnMut(&mut SplitMix64, usize) -> T,
+    P: FnMut(&T) -> Result<(), String>,
+{
+    for case_no in 0..cfg.cases {
+        let seed = cfg.seed.wrapping_add(case_no as u64).wrapping_mul(0x9E3779B97F4A7C15);
+        // Ramp the size budget up across cases: early cases are small.
+        let size = 1 + (cfg.max_size - 1) * case_no as usize / cfg.cases.max(1) as usize;
+        let mut rng = SplitMix64::new(seed);
+        let value = gen(&mut rng, size);
+        if let Err(msg) = prop(&value) {
+            // Shrink: retry with smaller sizes on the same seed, keeping
+            // the smallest size that still fails.
+            let mut worst = Case { value, seed, size };
+            let mut err = msg;
+            let mut s = size / 2;
+            while s >= 1 {
+                let mut rng = SplitMix64::new(seed);
+                let v = gen(&mut rng, s);
+                match prop(&v) {
+                    Err(m) => {
+                        worst = Case { value: v, seed, size: s };
+                        err = m;
+                        if s == 1 {
+                            break;
+                        }
+                        s /= 2;
+                    }
+                    Ok(()) => break,
+                }
+            }
+            panic!(
+                "property failed (case {case_no}, seed {:#x}, size {}):\n  {}\n  value: {:?}",
+                worst.seed, worst.size, err, worst.value
+            );
+        }
+    }
+}
+
+/// Generator helpers for graph properties.
+pub mod gen {
+    use crate::graph::generators::SplitMix64;
+    use crate::graph::{Csr, EdgeList, VertexId};
+
+    /// Random vertex count in `[1, size]`.
+    pub fn vertex_count(rng: &mut SplitMix64, size: usize) -> usize {
+        1 + rng.below(size as u64) as usize
+    }
+
+    /// Random sparse directed graph with up to `3 * n` edges.
+    pub fn digraph(rng: &mut SplitMix64, size: usize) -> Csr {
+        let n = vertex_count(rng, size);
+        let m = rng.below(3 * n as u64 + 1) as usize;
+        let mut el = EdgeList::new(n);
+        for _ in 0..m {
+            let u = rng.below(n as u64) as VertexId;
+            let v = rng.below(n as u64) as VertexId;
+            if u != v {
+                el.push(u, v);
+            }
+        }
+        el.dedup();
+        Csr::from_edge_list(&el)
+    }
+
+    /// Random symmetric graph.
+    pub fn ugraph(rng: &mut SplitMix64, size: usize) -> Csr {
+        let n = vertex_count(rng, size);
+        let m = rng.below(3 * n as u64 + 1) as usize;
+        let mut el = EdgeList::new(n);
+        for _ in 0..m {
+            let u = rng.below(n as u64) as VertexId;
+            let v = rng.below(n as u64) as VertexId;
+            el.push(u, v);
+        }
+        el.symmetrize();
+        Csr::from_edge_list(&el)
+    }
+
+    /// Random locality count in `[1, 8]`.
+    pub fn locality_count(rng: &mut SplitMix64, _size: usize) -> u32 {
+        1 + rng.below(8) as u32
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn forall_passes_on_true_property() {
+        forall(
+            &PropConfig { cases: 32, ..Default::default() },
+            |rng, size| rng.below(size as u64 + 1),
+            |&v| if v <= 64 { Ok(()) } else { Err(format!("{v} > 64")) },
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn forall_reports_failures() {
+        forall(
+            &PropConfig { cases: 16, ..Default::default() },
+            |_, size| size,
+            |&s| if s < 8 { Ok(()) } else { Err("too big".into()) },
+        );
+    }
+
+    #[test]
+    fn shrinking_finds_smaller_case() {
+        let caught = std::panic::catch_unwind(|| {
+            forall(
+                &PropConfig { cases: 8, seed: 7, max_size: 64 },
+                |_, size| size,
+                |&s| if s < 2 { Ok(()) } else { Err("fails for >= 2".into()) },
+            );
+        });
+        let msg = *caught.unwrap_err().downcast::<String>().unwrap();
+        // The shrink loop must have reduced the size to the minimal failing
+        // value (2 or 3 depending on halving path), well below max.
+        assert!(msg.contains("size 2") || msg.contains("size 3"), "{msg}");
+    }
+
+    #[test]
+    fn graph_generators_produce_valid_graphs() {
+        let mut rng = SplitMix64::new(1);
+        for _ in 0..20 {
+            let g = gen::digraph(&mut rng, 32);
+            assert!(g.n() >= 1);
+            for u in 0..g.n() as u32 {
+                for &v in g.neighbors(u) {
+                    assert!((v as usize) < g.n());
+                    assert_ne!(u, v);
+                }
+            }
+            let ug = gen::ugraph(&mut rng, 32);
+            for u in 0..ug.n() as u32 {
+                for &v in ug.neighbors(u) {
+                    assert!(ug.has_edge(v, u));
+                }
+            }
+        }
+    }
+}

@@ -1,0 +1,291 @@
+//! Property-based integration tests over the distributed algorithms.
+//!
+//! Uses the crate's mini property harness (`testing::forall`) — random
+//! graphs × random partitions, asserting the distributed engines agree
+//! with the sequential oracles and the runtime invariants hold.
+
+use nwgraph_hpx::algorithms::{bfs, cc, pagerank, pagerank::PrParams, sssp, triangle};
+use nwgraph_hpx::amt::{NetConfig, SimConfig};
+use nwgraph_hpx::graph::{generators, Csr, DistGraph, Partition1D};
+use nwgraph_hpx::testing::{forall, gen, PropConfig};
+
+fn det() -> SimConfig {
+    SimConfig::deterministic(NetConfig::default())
+}
+
+fn cfg(cases: u32) -> PropConfig {
+    PropConfig { cases, seed: 0xDEADBEEF, max_size: 48 }
+}
+
+#[test]
+fn prop_partition_covers_every_vertex_exactly_once() {
+    forall(
+        &cfg(64),
+        |rng, size| (gen::vertex_count(rng, size * 4), gen::locality_count(rng, size)),
+        |&(n, p)| {
+            let part = Partition1D::block(n, p);
+            let mut seen = vec![0u32; n];
+            for l in 0..p {
+                for v in part.range_of(l) {
+                    seen[v] += 1;
+                    if part.owner(v as u32) != l {
+                        return Err(format!("owner({v}) != {l}"));
+                    }
+                }
+            }
+            if seen.iter().any(|&c| c != 1) {
+                return Err("partition not a cover".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_async_bfs_tree_valid_and_reaches_oracle_set() {
+    forall(
+        &cfg(40),
+        |rng, size| {
+            let g = gen::ugraph(rng, size);
+            let p = gen::locality_count(rng, size);
+            let root = rng.below(g.n() as u64) as u32;
+            (g, p, root)
+        },
+        |(g, p, root)| {
+            let dist = DistGraph::block(g, *p);
+            let res = bfs::async_hpx::run(&dist, *root, det());
+            bfs::validate_parents(g, *root, &res.parents)?;
+            let want = bfs::sequential::bfs(g, *root);
+            for v in 0..g.n() {
+                if (res.parents[v] >= 0) != (want[v] >= 0) {
+                    return Err(format!("reachability mismatch at {v}"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_bsp_bfs_levels_are_minimal() {
+    forall(
+        &cfg(30),
+        |rng, size| {
+            let g = gen::ugraph(rng, size);
+            let p = gen::locality_count(rng, size);
+            let root = rng.below(g.n() as u64) as u32;
+            (g, p, root)
+        },
+        |(g, p, root)| {
+            let dist = DistGraph::block(g, *p);
+            let res = bfs::level_sync::run(&dist, *root, det());
+            bfs::validate_parents(g, *root, &res.parents)?;
+            let lv = bfs::tree_levels(*root, &res.parents);
+            let d = bfs::sequential::distances(g, *root);
+            if lv != d {
+                return Err("BSP levels not minimal".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_pagerank_engines_agree_with_oracle() {
+    let params = PrParams { alpha: 0.85, iterations: 10 };
+    forall(
+        &cfg(25),
+        |rng, size| {
+            let g = gen::digraph(rng, size);
+            let p = gen::locality_count(rng, size);
+            (g, p)
+        },
+        |(g, p)| {
+            let dist = DistGraph::block(g, *p);
+            let want = pagerank::sequential::pagerank(g, params);
+            for (name, res) in [
+                ("bsp", pagerank::bsp::run(&dist, params, det())),
+                (
+                    "naive",
+                    pagerank::async_hpx::run(
+                        &dist,
+                        params,
+                        pagerank::async_hpx::Variant::Naive,
+                        det(),
+                    ),
+                ),
+                (
+                    "opt",
+                    pagerank::async_hpx::run(
+                        &dist,
+                        params,
+                        pagerank::async_hpx::Variant::Optimized { flush_block: 7 },
+                        det(),
+                    ),
+                ),
+            ] {
+                let diff = pagerank::max_abs_diff(&res.ranks, &want);
+                if diff > 1e-5 {
+                    return Err(format!("{name}: diff {diff}"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_pagerank_mass_conserved_without_dangling() {
+    // When every vertex has out-degree >= 1, ranks sum to ~1.
+    let params = PrParams { alpha: 0.85, iterations: 30 };
+    forall(
+        &cfg(20),
+        |rng, size| {
+            // cycle + random chords: out-degree >= 1 everywhere
+            let n = 2 + rng.below(size as u64 + 2) as usize;
+            let mut el = nwgraph_hpx::graph::EdgeList::new(n);
+            for i in 0..n {
+                el.push(i as u32, ((i + 1) % n) as u32);
+            }
+            for _ in 0..n {
+                let u = rng.below(n as u64) as u32;
+                let v = rng.below(n as u64) as u32;
+                if u != v {
+                    el.push(u, v);
+                }
+            }
+            el.dedup();
+            let p = gen::locality_count(rng, size);
+            (Csr::from_edge_list(&el), p)
+        },
+        |(g, p)| {
+            let dist = DistGraph::block(g, *p);
+            let res = pagerank::bsp::run(&dist, params, det());
+            let sum: f32 = res.ranks.iter().sum();
+            if (sum - 1.0).abs() > 1e-3 {
+                return Err(format!("rank mass {sum} != 1"));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_cc_matches_union_find() {
+    forall(
+        &cfg(30),
+        |rng, size| (gen::ugraph(rng, size), gen::locality_count(rng, size)),
+        |(g, p)| {
+            let dist = DistGraph::block(g, *p);
+            let res = cc::run(&dist, det());
+            let want = cc::union_find(g);
+            if res.labels != want {
+                return Err("labels differ from union-find".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_sssp_matches_dijkstra() {
+    forall(
+        &cfg(25),
+        |rng, size| {
+            let g = gen::ugraph(rng, size);
+            let gw = generators::with_random_weights(&g, 0.5, 9.5, rng.next_u64());
+            let p = gen::locality_count(rng, size);
+            let root = rng.below(g.n() as u64) as u32;
+            (gw, p, root)
+        },
+        |(gw, p, root)| {
+            let dist = DistGraph::block(gw, *p);
+            let want = sssp::dijkstra(gw, *root);
+            for res in [
+                sssp::run_async(gw, &dist, *root, det()),
+                sssp::run_bsp(gw, &dist, *root, det()),
+            ] {
+                for v in 0..gw.n() {
+                    let (a, b) = (res.dist[v], want[v]);
+                    if !((a.is_infinite() && b.is_infinite()) || (a - b).abs() < 1e-3) {
+                        return Err(format!("dist[{v}]: {a} vs {b}"));
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_triangles_match_sequential() {
+    forall(
+        &cfg(25),
+        |rng, size| (gen::ugraph(rng, size), gen::locality_count(rng, size)),
+        |(g, p)| {
+            let dist = DistGraph::block(g, *p);
+            let got = triangle::run(&dist, det()).triangles;
+            let want = triangle::count_sequential(g);
+            if got != want {
+                return Err(format!("{got} vs {want} triangles"));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_results_independent_of_partition_count() {
+    // The same graph must produce identical PageRank ranks (up to float
+    // noise) regardless of how many localities it is split across.
+    let params = PrParams { alpha: 0.85, iterations: 12 };
+    forall(
+        &cfg(15),
+        |rng, size| gen::digraph(rng, size + 4),
+        |g| {
+            let base = pagerank::bsp::run(&DistGraph::block(g, 1), params, det());
+            for p in [2u32, 3, 5, 8] {
+                let r = pagerank::bsp::run(&DistGraph::block(g, p), params, det());
+                let diff = pagerank::max_abs_diff(&r.ranks, &base.ranks);
+                if diff > 1e-5 {
+                    return Err(format!("p={p}: diff {diff}"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_aggregation_preserves_bfs_semantics() {
+    // Coalescing/aggregation are performance knobs — results must not
+    // change.
+    forall(
+        &cfg(20),
+        |rng, size| {
+            let g = gen::ugraph(rng, size);
+            let p = gen::locality_count(rng, size);
+            (g, p)
+        },
+        |(g, p)| {
+            let dist = DistGraph::block(g, *p);
+            let plain = bfs::async_hpx::run(&dist, 0, det());
+            let packed = bfs::async_hpx::run(
+                &dist,
+                0,
+                SimConfig {
+                    aggregate_sends: true,
+                    coalesce_window_us: 10.0,
+                    ..det()
+                },
+            );
+            bfs::validate_parents(g, 0, &packed.parents)?;
+            for v in 0..g.n() {
+                if (plain.parents[v] >= 0) != (packed.parents[v] >= 0) {
+                    return Err(format!("reachability differs at {v}"));
+                }
+            }
+            Ok(())
+        },
+    );
+}

@@ -1,0 +1,159 @@
+//! Integration tests over the AOT artifacts (three-layer path).
+//!
+//! These need `make artifacts` to have run; they skip (with a note) when
+//! `artifacts/manifest.txt` is absent so `cargo test` works standalone.
+
+use std::sync::{Arc, Mutex};
+
+use nwgraph_hpx::algorithms::pagerank::{self, PrParams};
+use nwgraph_hpx::amt::{NetConfig, SimConfig};
+use nwgraph_hpx::graph::{generators, DistGraph};
+use nwgraph_hpx::runtime::Engine;
+
+fn artifacts_dir() -> Option<&'static str> {
+    if std::path::Path::new("artifacts/manifest.txt").exists() {
+        Some("artifacts")
+    } else {
+        eprintln!("skipping: artifacts/ not built (run `make artifacts`)");
+        None
+    }
+}
+
+#[test]
+fn engine_loads_and_reports_platform() {
+    let Some(dir) = artifacts_dir() else { return };
+    let engine = Engine::load(dir).expect("engine load");
+    assert!(!engine.manifest().specs().is_empty());
+    assert!(engine.platform().to_lowercase().contains("cpu") || !engine.platform().is_empty());
+}
+
+#[test]
+fn pagerank_step_matches_rust_reference() {
+    let Some(dir) = artifacts_dir() else { return };
+    let mut engine = Engine::load(dir).expect("engine load");
+    let spec = engine.prepare("pagerank", 1024, 1024).expect("no artifact");
+
+    // Random masked ELL + identity row_map; compare against a scalar rust
+    // evaluation of the same contract.
+    let mut rng = generators::SplitMix64::new(7);
+    let g = spec.n_global;
+    let r = spec.n_rows;
+    let d = spec.max_deg;
+    let contrib: Vec<f32> = (0..g).map(|_| rng.f64() as f32).collect();
+    let rank_old: Vec<f32> = (0..r).map(|_| rng.f64() as f32).collect();
+    let cols: Vec<i32> = (0..r * d).map(|_| rng.below(g as u64) as i32).collect();
+    let mask: Vec<f32> = (0..r * d).map(|_| (rng.below(2)) as f32).collect();
+    let row_map: Vec<i32> = (0..r as i32).collect();
+    let (base, alpha) = (0.15f32 / r as f32, 0.85f32);
+
+    let (got_rank, got_delta) = engine
+        .pagerank_step(&spec, &contrib, &rank_old, &cols, &mask, &row_map, base, alpha)
+        .expect("kernel exec");
+
+    let mut want_delta = 0.0f32;
+    for i in 0..r {
+        let mut z = 0.0f32;
+        for k in 0..d {
+            z += contrib[cols[i * d + k] as usize] * mask[i * d + k];
+        }
+        let new = base + alpha * z;
+        assert!(
+            (got_rank[i] - new).abs() < 1e-4,
+            "row {i}: kernel {} vs rust {}",
+            got_rank[i],
+            new
+        );
+        want_delta += (new - rank_old[i]).abs();
+    }
+    // L1 over thousands of rows accumulates in different orders.
+    assert!(
+        (got_delta - want_delta).abs() / want_delta.max(1.0) < 1e-3,
+        "delta {got_delta} vs {want_delta}"
+    );
+}
+
+#[test]
+fn bfs_level_kernel_matches_rust_reference() {
+    let Some(dir) = artifacts_dir() else { return };
+    let mut engine = Engine::load(dir).expect("engine load");
+    let spec = engine.prepare("bfs", 1024, 1024).expect("no artifact");
+
+    let mut rng = generators::SplitMix64::new(11);
+    let g = spec.n_global;
+    let r = spec.n_rows;
+    let d = spec.max_deg;
+    let frontier: Vec<f32> = (0..g).map(|_| (rng.below(4) == 0) as u32 as f32).collect();
+    let visited: Vec<f32> = (0..r).map(|_| (rng.below(3) == 0) as u32 as f32).collect();
+    let cols: Vec<i32> = (0..r * d).map(|_| rng.below(g as u64) as i32).collect();
+    let mask: Vec<f32> = (0..r * d).map(|_| (rng.below(2)) as f32).collect();
+
+    let (next, parents) = engine
+        .bfs_level(&spec, &frontier, &visited, &cols, &mask)
+        .expect("kernel exec");
+
+    for i in 0..r {
+        let mut any = false;
+        for k in 0..d {
+            let c = cols[i * d + k] as usize;
+            if mask[i * d + k] > 0.0 && frontier[c] > 0.0 {
+                any = true;
+            }
+        }
+        let want_next = if any && visited[i] == 0.0 { 1.0 } else { 0.0 };
+        assert_eq!(next[i], want_next, "row {i}");
+        if want_next > 0.0 {
+            let p = parents[i];
+            assert!(p >= 0, "row {i} discovered but parent {p}");
+            assert_eq!(frontier[p as usize], 1.0, "row {i} parent not in frontier");
+        } else {
+            assert_eq!(parents[i], -1, "row {i}");
+        }
+    }
+}
+
+#[test]
+fn kernel_pagerank_end_to_end_matches_oracle() {
+    let Some(dir) = artifacts_dir() else { return };
+    let engine = Arc::new(Mutex::new(Engine::load(dir).expect("engine load")));
+    let params = PrParams { alpha: 0.85, iterations: 12 };
+    for p in [1u32, 2, 4] {
+        let g = generators::urand_directed(8, 6, 5 + p as u64);
+        let want = pagerank::sequential::pagerank(&g, params);
+        let dist = DistGraph::block(&g, p);
+        let res = pagerank::kernel::run(
+            &dist,
+            params,
+            SimConfig::deterministic(NetConfig::default()),
+            engine.clone(),
+        )
+        .expect("kernel pagerank");
+        let diff = pagerank::max_abs_diff(&res.ranks, &want);
+        assert!(diff < 1e-4, "p={p}: diff {diff}");
+        // allgather traffic: P*(P-1) slices per iteration
+        assert_eq!(
+            res.report.net.envelopes,
+            (p as u64) * (p as u64 - 1) * params.iterations as u64
+        );
+    }
+}
+
+#[test]
+fn kernel_pagerank_handles_wide_rows_via_splitting() {
+    let Some(dir) = artifacts_dir() else { return };
+    let engine = Arc::new(Mutex::new(Engine::load(dir).expect("engine load")));
+    let params = PrParams { alpha: 0.85, iterations: 8 };
+    // Star graph: the hub's in-degree (n-1) far exceeds any artifact
+    // max_deg, forcing virtual-row splitting.
+    let g = generators::star(512);
+    let want = pagerank::sequential::pagerank(&g, params);
+    let dist = DistGraph::block(&g, 2);
+    let res = pagerank::kernel::run(
+        &dist,
+        params,
+        SimConfig::deterministic(NetConfig::default()),
+        engine,
+    )
+    .expect("kernel pagerank");
+    let diff = pagerank::max_abs_diff(&res.ranks, &want);
+    assert!(diff < 1e-4, "diff {diff}");
+}
