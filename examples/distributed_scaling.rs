@@ -71,7 +71,12 @@ fn main() {
     let want = pagerank::sequential::pagerank(&gd, params);
     for res in [
         pagerank::bsp::run(&dd, params, sim.clone()),
-        pagerank::async_hpx::run(&dd, params, pagerank::async_hpx::Variant::Naive, sim.clone()),
+        pagerank::async_hpx::run(
+            &dd,
+            params,
+            nwgraph_hpx::amt::FlushPolicy::Unbatched,
+            sim.clone(),
+        ),
     ] {
         assert!(pagerank::max_abs_diff(&res.ranks, &want) < 1e-5);
     }

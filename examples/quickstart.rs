@@ -6,7 +6,7 @@
 //! ```
 
 use nwgraph_hpx::algorithms::{bfs, pagerank, pagerank::PrParams};
-use nwgraph_hpx::amt::{NetConfig, SimConfig};
+use nwgraph_hpx::amt::{FlushPolicy, NetConfig, SimConfig};
 use nwgraph_hpx::graph::{generators, DistGraph};
 
 fn main() {
@@ -44,12 +44,7 @@ fn main() {
     let gd = generators::urand_directed(12, 8, 43);
     let dd = DistGraph::block(&gd, 8);
     let params = PrParams { alpha: 0.85, iterations: 20 };
-    let pr = pagerank::async_hpx::run(
-        &dd,
-        params,
-        pagerank::async_hpx::Variant::Optimized { flush_block: 1024 },
-        sim,
-    );
+    let pr = pagerank::async_hpx::run(&dd, params, FlushPolicy::Items(1024), sim);
     let want = pagerank::sequential::pagerank(&gd, params);
     let diff = pagerank::max_abs_diff(&pr.ranks, &want);
     println!(

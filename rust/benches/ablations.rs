@@ -6,11 +6,14 @@
 //!   including the paper §6 `adaptive_core_chunk_size`.
 //! * **A3** — partition policy: block vs edge-balanced cuts on a skewed
 //!   kron graph (load imbalance, paper §2).
+//! * **A4** — `amt::aggregate` flush policies on asynchronous PageRank:
+//!   the naive-vs-aggregated axis (envelope counts, fold factor, accuracy)
+//!   on both a uniform and a skewed (RMAT) graph.
 //!
 //! `cargo bench --bench ablations`
 
 use nwgraph_hpx::algorithms::bfs;
-use nwgraph_hpx::amt::SimConfig;
+use nwgraph_hpx::amt::{FlushPolicy, SimConfig};
 use nwgraph_hpx::config::Config;
 use nwgraph_hpx::coordinator::{experiment, report::Table};
 use nwgraph_hpx::graph::{generators, DistGraph, Partition1D};
@@ -42,9 +45,12 @@ fn main() {
         for _ in 0..reps {
             for (i, part) in [(0, &block), (1, &bal)] {
                 let dist = DistGraph::build(&g, part);
-                let r = bfs::async_hpx::run(
+                // App-level combiners off: A3 isolates the partition axis
+                // under the pre-existing runtime-coalescing config.
+                let r = bfs::async_hpx::run_with_policy(
                     &dist,
                     0,
+                    FlushPolicy::Unbatched,
                     SimConfig { aggregate_sends: true, coalesce_window_us: 5.0, ..SimConfig::default() },
                 );
                 best[i] = best[i].min(r.report.makespan_us);
@@ -59,4 +65,16 @@ fn main() {
         ]);
     }
     print!("{}", t.render());
+
+    // A4: flush policies on uniform and skewed PageRank traffic.
+    let mut cfg4 = Config::default();
+    cfg4.scale = 13;
+    cfg4.degree = 8;
+    cfg4.reps = reps;
+    cfg4.iterations = 20;
+    cfg4.localities = vec![8];
+    cfg4.generator = "urand-directed".into();
+    print!("{}", experiment::ablation_flush_policy(&cfg4).expect("A4 failed").render());
+    cfg4.generator = "kron".into();
+    print!("{}", experiment::ablation_flush_policy(&cfg4).expect("A4 failed").render());
 }

@@ -1,36 +1,57 @@
-//! Asynchronous distributed BFS — the paper's Listing 1.2.
+//! Asynchronous distributed BFS — the paper's Listing 1.2, on the shared
+//! [`amt::aggregate`](crate::amt::aggregate) combiner layer.
 //!
 //! The message-driven form of `bfs_2`: discovering a remote vertex issues
 //! an asynchronous remote action (`hpx::async(bfs_2, dst, ...)`) on its
 //! owner; locally-owned discoveries are expanded immediately from a local
-//! queue. Parent updates go through the atomic `set_parent` CAS on the
-//! shared partitioned parent vector. There are **no global barriers**:
+//! wavefront. Remote visits are folded into per-destination combiners
+//! (min-by-level) and flushed by the configured [`FlushPolicy`] — the
+//! naive one-action-per-edge path survives as
+//! [`FlushPolicy::Unbatched`]. There are **no global barriers**:
 //! termination is network quiescence, which the discrete-event engine
 //! detects exactly (the paper relies on `hpx::wait_all` over the recursive
 //! future tree for the same effect).
+//!
+//! Unlike the seed's first-touch-CAS variant, visits are *level
+//! correcting*: a proposal with a smaller level overwrites the previous
+//! parent, so at quiescence every reached vertex carries its true BFS
+//! distance — the final tree is a shortest-path tree regardless of message
+//! arrival order or aggregation, which is what lets the property suite
+//! assert `async == BSP == sequential` on levels, not just reachability.
 
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
 use std::sync::Arc;
 
+use crate::amt::aggregate::{Aggregator, Batch, FlushPolicy};
 use crate::amt::sim::{Actor, Ctx, LocalityId, Message, SimConfig, SimRuntime};
 use crate::amt::AtomicLongVector;
 use crate::graph::{DistGraph, Shard, VertexId};
 
 use super::BfsResult;
 
-/// A `Visit(v, parent, level)` remote action.
+/// A flushed combiner of `Visit` actions: `(vertex, (parent, level))`,
+/// at most one (the best) per destination vertex.
 #[derive(Debug, Clone)]
-pub struct Visit {
-    /// Vertex to visit (owned by the receiving locality).
-    pub v: VertexId,
-    /// Proposed parent.
-    pub parent: VertexId,
-    /// Tree level of `v` if this visit wins.
-    pub level: u32,
+pub struct VisitBatch(pub Batch<(VertexId, u32)>);
+
+/// Per-item wire size: vertex + parent + level.
+const ITEM_BYTES: usize = 12;
+
+impl Message for VisitBatch {
+    fn wire_bytes(&self) -> usize {
+        self.0.wire_bytes()
+    }
+
+    fn item_count(&self) -> usize {
+        self.0.len()
+    }
 }
 
-impl Message for Visit {
-    fn wire_bytes(&self) -> usize {
-        12 // v + parent + level
+/// Keep the proposal with the smaller level (ties: first wins).
+fn min_level(acc: &mut (VertexId, u32), new: (VertexId, u32)) {
+    if new.1 < acc.1 {
+        *acc = new;
     }
 }
 
@@ -40,76 +61,94 @@ pub struct AsyncBfsActor {
     dist: Arc<DistGraph>,
     parents: AtomicLongVector,
     root: VertexId,
-    /// Local duplicate-suppression filter: remote vertices this locality
-    /// has already issued a `Visit` for. This is knowledge a real locality
-    /// legitimately has (its own send history) — unlike the remote parent
-    /// array, which only the owner may read.
-    sent: Vec<u64>,
+    /// Tentative BFS level of each owned vertex (`u32::MAX` = unvisited).
+    level: Vec<u32>,
+    /// Best level already *sent* per remote vertex — legitimate local
+    /// knowledge (our own send history) that prunes the correcting flood.
+    best_sent: Vec<u32>,
+    /// Remote-visit combiner (shared aggregation subsystem).
+    pub agg: Aggregator<(VertexId, u32)>,
 }
 
 impl AsyncBfsActor {
-    fn already_sent(&mut self, v: VertexId) -> bool {
-        let (w, b) = (v as usize / 64, v as usize % 64);
-        let hit = self.sent[w] & (1 << b) != 0;
-        self.sent[w] |= 1 << b;
-        hit
-    }
-}
-
-impl AsyncBfsActor {
-    /// The paper's `set_parent`: atomic first-touch via compare-exchange.
-    fn set_parent(&self, v: VertexId, parent: VertexId) -> bool {
-        self.parents.cas(v as usize, -1, parent as i64)
-    }
-
-    /// Expand the local queue seeded by a winning visit (the inner loop of
-    /// Listing 1.2: local discoveries stay in `q1`/`q2`, remote ones become
-    /// async actions).
-    fn expand_from(&mut self, ctx: &mut Ctx<Visit>, v: VertexId, level: u32) {
+    /// Cascade a winning visit through the local shard in level order — a
+    /// per-locality BFS wavefront that keeps the label-correcting flood
+    /// from re-expanding whole subtrees.
+    fn relax_from(&mut self, ctx: &mut Ctx<VisitBatch>, v: VertexId, parent: VertexId, lvl: u32) {
         let here = ctx.locality();
-        let shard = Arc::clone(&self.shard);
-        let mut queue: Vec<(VertexId, u32)> = vec![(v, level)];
-        while let Some((u, lvl)) = queue.pop() {
-            let lu = shard.local_index(u);
-            for &w in shard.out_neighbors(lu) {
+        let start = self.shard.range.start;
+        let mut heap: BinaryHeap<Reverse<(u32, VertexId, VertexId)>> = BinaryHeap::new();
+        heap.push(Reverse((lvl, v, parent)));
+        while let Some(Reverse((lu, u, pu))) = heap.pop() {
+            let iu = u as usize - start;
+            if lu >= self.level[iu] {
+                continue;
+            }
+            self.level[iu] = lu;
+            // Correcting store: the smallest level seen so far wins, so the
+            // final parent array encodes a shortest-path tree.
+            self.parents.store(u as usize, pu as i64);
+            let nl = lu + 1;
+            for &w in self.shard.out_neighbors(iu) {
                 let dst = self.dist.owner(w);
                 if dst == here {
-                    if self.set_parent(w, u) {
-                        queue.push((w, lvl + 1));
+                    if nl < self.level[w as usize - start] {
+                        heap.push(Reverse((nl, w, u)));
                     }
-                } else if !self.already_sent(w) {
-                    // Remote: async action on the owner, which performs the
-                    // atomic set_parent (CAS races are resolved there).
-                    ctx.send(dst, Visit { v: w, parent: u, level: lvl + 1 });
+                } else if nl < self.best_sent[w as usize] {
+                    self.best_sent[w as usize] = nl;
+                    if let Some(batch) = self.agg.accumulate(dst, w, (u, nl)) {
+                        ctx.send(dst, VisitBatch(batch));
+                    }
                 }
             }
+        }
+    }
+
+    /// Ship whatever the policy left buffered; called at handler end so
+    /// quiescence can never strand pending visits.
+    fn drain(&mut self, ctx: &mut Ctx<VisitBatch>) {
+        for (dst, batch) in self.agg.drain() {
+            ctx.send(dst, VisitBatch(batch));
         }
     }
 }
 
 impl Actor for AsyncBfsActor {
-    type Msg = Visit;
+    type Msg = VisitBatch;
 
-    fn on_start(&mut self, ctx: &mut Ctx<Visit>) {
+    fn on_start(&mut self, ctx: &mut Ctx<VisitBatch>) {
         if self.dist.owner(self.root) == ctx.locality() {
             let root = self.root;
-            if self.set_parent(root, root) {
-                self.expand_from(ctx, root, 0);
-            }
+            self.relax_from(ctx, root, root, 0);
+            self.drain(ctx);
         }
     }
 
-    fn on_message(&mut self, ctx: &mut Ctx<Visit>, _from: LocalityId, msg: Visit) {
-        if self.set_parent(msg.v, msg.parent) {
-            self.expand_from(ctx, msg.v, msg.level);
+    fn on_message(&mut self, ctx: &mut Ctx<VisitBatch>, _from: LocalityId, msg: VisitBatch) {
+        for (v, (parent, lvl)) in msg.0.items {
+            self.relax_from(ctx, v, parent, lvl);
         }
+        self.drain(ctx);
     }
 }
 
-/// Run asynchronous distributed BFS over `dist` from `root`.
+/// Run asynchronous distributed BFS over `dist` from `root` with the
+/// default [`FlushPolicy::Adaptive`] aggregation.
 pub fn run(dist: &DistGraph, root: VertexId, cfg: SimConfig) -> BfsResult {
+    run_with_policy(dist, root, FlushPolicy::Adaptive, cfg)
+}
+
+/// Run asynchronous distributed BFS with an explicit flush policy.
+pub fn run_with_policy(
+    dist: &DistGraph,
+    root: VertexId,
+    policy: FlushPolicy,
+    cfg: SimConfig,
+) -> BfsResult {
     let dist = Arc::new(dist.clone());
     let parents = AtomicLongVector::new(dist.n(), dist.p(), -1);
+    let ranges = dist.partition.ranges();
     let actors: Vec<AsyncBfsActor> = dist
         .shards
         .iter()
@@ -118,29 +157,37 @@ pub fn run(dist: &DistGraph, root: VertexId, cfg: SimConfig) -> BfsResult {
             dist: Arc::clone(&dist),
             parents: parents.clone(),
             root,
-            sent: vec![0u64; dist.n().div_ceil(64)],
+            level: vec![u32::MAX; s.n_local()],
+            best_sent: vec![u32::MAX; dist.n()],
+            agg: Aggregator::new(&ranges, s.locality, policy, &cfg.net, ITEM_BYTES, min_level),
         })
         .collect();
-    let (_, report) = SimRuntime::new(cfg).run(actors);
+    let (actors, mut report) = SimRuntime::new(cfg).run(actors);
+    for a in &actors {
+        report.agg.merge(a.agg.stats());
+    }
     BfsResult { parents: parents.to_vec(), report }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::algorithms::bfs::{sequential, validate_parents};
+    use crate::algorithms::bfs::{sequential, tree_levels, validate_parents};
     use crate::amt::NetConfig;
     use crate::graph::generators;
+
+    fn det() -> SimConfig {
+        SimConfig::deterministic(NetConfig::default())
+    }
 
     fn check(g: &crate::graph::Csr, p: u32, root: VertexId) {
         let dist = DistGraph::block(g, p);
         let res = run(&dist, root, SimConfig::deterministic(NetConfig::default()));
         validate_parents(g, root, &res.parents).unwrap();
-        // Reachable set must match the sequential oracle.
-        let seq = sequential::bfs(g, root);
-        for v in 0..g.n() {
-            assert_eq!(res.parents[v] >= 0, seq[v] >= 0, "vertex {v}");
-        }
+        // Level-correcting BFS converges to true distances at quiescence.
+        let lv = tree_levels(root, &res.parents);
+        let want = sequential::distances(g, root);
+        assert_eq!(lv, want);
     }
 
     #[test]
@@ -181,5 +228,32 @@ mod tests {
         let dist = DistGraph::block(&g, 4);
         let res = run(&dist, 0, SimConfig::deterministic(NetConfig::default()));
         assert_eq!(res.report.barriers, 0);
+    }
+
+    #[test]
+    fn every_flush_policy_yields_true_levels() {
+        let g = generators::urand(7, 4, 15);
+        let dist = DistGraph::block(&g, 4);
+        let want = sequential::distances(&g, 0);
+        for policy in [
+            FlushPolicy::Unbatched,
+            FlushPolicy::Items(4),
+            FlushPolicy::Adaptive,
+            FlushPolicy::Manual,
+        ] {
+            let res = run_with_policy(&dist, 0, policy, det());
+            validate_parents(&g, 0, &res.parents).unwrap();
+            assert_eq!(tree_levels(0, &res.parents), want, "{policy:?}");
+        }
+    }
+
+    #[test]
+    fn aggregation_reduces_envelopes_vs_unbatched() {
+        let g = generators::urand(8, 8, 17);
+        let dist = DistGraph::block(&g, 4);
+        let naive = run_with_policy(&dist, 0, FlushPolicy::Unbatched, det());
+        let agg = run_with_policy(&dist, 0, FlushPolicy::Adaptive, det());
+        assert!(agg.report.net.envelopes < naive.report.net.envelopes);
+        assert_eq!(agg.report.agg.envelopes, agg.report.net.envelopes);
     }
 }

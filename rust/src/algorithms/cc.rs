@@ -1,15 +1,29 @@
 //! Connected components — §6 future-work extension.
 //!
 //! Sequential oracle: union-find. Distributed: min-label propagation in
-//! BSP supersteps (each vertex adopts the smallest label seen; remote
-//! updates batched per destination) — the standard Shiloach-Vishkin-flavored
-//! formulation frameworks like Pregel ship.
+//! BSP supersteps (each vertex adopts the smallest label seen) — the
+//! standard Shiloach-Vishkin-flavored formulation frameworks like Pregel
+//! ship. Remote label updates route through the shared
+//! [`amt::aggregate`](crate::amt::aggregate) combiner (fold = min over
+//! labels, drained once per superstep), so at most one update per
+//! destination vertex hits the wire each round.
 
 use std::sync::Arc;
 
+use crate::amt::aggregate::{Aggregator, Batch, FlushPolicy};
 use crate::amt::sim::{Actor, Ctx, LocalityId, Message, SimConfig, SimRuntime};
 use crate::amt::SimReport;
 use crate::graph::{Csr, DistGraph, Shard, VertexId};
+
+/// Per-item wire size: vertex id + label.
+const ITEM_BYTES: usize = 8;
+
+/// Keep the smaller component label.
+fn min_label(acc: &mut VertexId, label: VertexId) {
+    if label < *acc {
+        *acc = label;
+    }
+}
 
 /// Result of a distributed CC run.
 #[derive(Debug)]
@@ -64,8 +78,8 @@ pub fn component_count(labels: &[VertexId]) -> usize {
 /// Label-propagation messages.
 #[derive(Debug, Clone)]
 pub enum CcMsg {
-    /// Batched label updates `(vertex, label)`.
-    Labels(Vec<(VertexId, VertexId)>),
+    /// Batched label updates (one folded min per destination vertex).
+    Labels(Batch<VertexId>),
     /// Activity reduction.
     Count(u64),
     /// Coordinator verdict.
@@ -75,7 +89,7 @@ pub enum CcMsg {
 impl Message for CcMsg {
     fn wire_bytes(&self) -> usize {
         match self {
-            CcMsg::Labels(v) => 8 * v.len(),
+            CcMsg::Labels(b) => b.wire_bytes(),
             CcMsg::Count(_) => 8,
             CcMsg::Continue(_) => 1,
         }
@@ -83,7 +97,7 @@ impl Message for CcMsg {
 
     fn item_count(&self) -> usize {
         match self {
-            CcMsg::Labels(v) => v.len(),
+            CcMsg::Labels(b) => b.len(),
             _ => 1,
         }
     }
@@ -105,13 +119,13 @@ struct CcActor {
     counts_sum: u64,
     continue_flag: bool,
     phase: Phase,
+    /// Superstep combiner: folded min labels, drained once per round.
+    agg: Aggregator<VertexId>,
 }
 
 impl CcActor {
     fn propagate(&mut self, ctx: &mut Ctx<CcMsg>) {
         let here = ctx.locality();
-        let p = ctx.n_localities() as usize;
-        let mut outgoing: Vec<Vec<(VertexId, VertexId)>> = vec![Vec::new(); p];
         let mut activity = 0u64;
         let active = std::mem::take(&mut self.active);
         for &lu in &active {
@@ -133,16 +147,17 @@ impl CcActor {
                         activity += 1;
                     }
                 } else {
-                    outgoing[dst as usize].push((w, label));
+                    // Manual policy: accumulate never auto-flushes.
+                    if let Some(batch) = self.agg.accumulate(dst, w, label) {
+                        ctx.send(dst, CcMsg::Labels(batch));
+                    }
                     activity += 1;
                 }
             }
         }
         self.active = next;
-        for (dst, batch) in outgoing.into_iter().enumerate() {
-            if !batch.is_empty() {
-                ctx.send(dst as LocalityId, CcMsg::Labels(batch));
-            }
+        for (dst, batch) in self.agg.drain() {
+            ctx.send(dst, CcMsg::Labels(batch));
         }
         ctx.send(0, CcMsg::Count(activity));
         self.phase = Phase::AfterPropagate;
@@ -162,7 +177,7 @@ impl Actor for CcActor {
 
     fn on_message(&mut self, _ctx: &mut Ctx<CcMsg>, _from: LocalityId, msg: CcMsg) {
         match msg {
-            CcMsg::Labels(batch) => self.inbox.extend(batch),
+            CcMsg::Labels(batch) => self.inbox.extend(batch.items),
             CcMsg::Count(c) => self.counts_sum += c,
             CcMsg::Continue(b) => self.continue_flag = b,
         }
@@ -204,6 +219,7 @@ impl Actor for CcActor {
 /// Run BSP min-label propagation CC.
 pub fn run(dist: &DistGraph, cfg: SimConfig) -> CcResult {
     let dist = Arc::new(dist.clone());
+    let ranges = dist.partition.ranges();
     let actors: Vec<CcActor> = dist
         .shards
         .iter()
@@ -217,9 +233,20 @@ pub fn run(dist: &DistGraph, cfg: SimConfig) -> CcResult {
             counts_sum: 0,
             continue_flag: false,
             phase: Phase::AfterPropagate,
+            agg: Aggregator::new(
+                &ranges,
+                s.locality,
+                FlushPolicy::Manual,
+                &cfg.net,
+                ITEM_BYTES,
+                min_label,
+            ),
         })
         .collect();
-    let (actors, report) = SimRuntime::new(cfg).run(actors);
+    let (actors, mut report) = SimRuntime::new(cfg).run(actors);
+    for a in &actors {
+        report.agg.merge(a.agg.stats());
+    }
     let mut labels = vec![0 as VertexId; dist.n()];
     for a in &actors {
         labels[a.shard.range.clone()].copy_from_slice(&a.labels);
@@ -261,6 +288,19 @@ mod tests {
         let res = run(&d, SimConfig::deterministic(NetConfig::default()));
         assert_eq!(res.labels, vec![0, 1, 2, 3, 4]);
         assert_eq!(component_count(&res.labels), 5);
+    }
+
+    #[test]
+    fn combiner_folds_duplicate_labels_per_round() {
+        // Dense graph: many active neighbors push labels at the same
+        // remote vertex each round; the combiner ships one min per vertex.
+        let g = generators::urand(7, 8, 47);
+        let d = DistGraph::block(&g, 4);
+        let res = run(&d, SimConfig::deterministic(NetConfig::default()));
+        let agg = res.report.agg;
+        assert!(agg.folded > 0, "dense rounds must fold duplicates");
+        assert_eq!(agg.items, agg.folded + agg.sent_items);
+        assert_eq!(agg.envelopes, agg.drain_flushes);
     }
 
     #[test]

@@ -1,66 +1,56 @@
-//! Asynchronous HPX-style PageRank — paper §4.2, in two stages of maturity.
+//! Asynchronous HPX-style PageRank — paper §4.2, on the shared
+//! [`amt::aggregate`](crate::amt::aggregate) combiner layer.
 //!
-//! * **Naive** (`Variant::Naive`) — the paper's "very initial
-//!   implementation": every remote edge becomes its own asynchronous
-//!   remote action (`Contrib(v, c)` message) issued eagerly during the
-//!   contribution phase, applied atomically at the destination on arrival.
-//!   The per-message CPU/latency overheads dominate — this is why it was
-//!   "significantly worse than the Boost library".
-//! * **Optimized** (`Variant::Optimized { flush_block }`) — the paper's
-//!   improved prototype: contributions to each destination locality are
-//!   folded into a combiner that is flushed every `flush_block` processed
-//!   vertices, so communication overlaps the remainder of the compute
-//!   phase while per-message costs are amortized. Smaller blocks = more
-//!   overlap but more envelopes; `flush_block == n_local` degenerates to
-//!   BSP-style batching (minus the at-barrier application).
+//! The paper's "very initial implementation" issued one asynchronous
+//! remote action per remote edge and was "significantly worse than the
+//! Boost library"; its improved prototype folded contributions into a
+//! per-destination combiner flushed in blocks. Both are now spellings of
+//! one [`FlushPolicy`]:
 //!
-//! Both keep the paper's per-iteration synchronization (one global barrier
-//! between exchange and update), so the *only* experimental difference vs
-//! [`bsp`](super::bsp) is message granularity and overlap — exactly the
-//! contrast Figure 2 probes.
+//! * [`FlushPolicy::Unbatched`] — the naive per-edge path (ablation
+//!   baseline);
+//! * [`FlushPolicy::Items`] / [`FlushPolicy::Bytes`] /
+//!   [`FlushPolicy::Adaptive`] — chunked combiner flushes shipped eagerly,
+//!   so communication overlaps the rest of the contribution phase while
+//!   per-message costs amortize (the paper's "optimized" variant);
+//! * [`FlushPolicy::Manual`] — everything waits for the end-of-phase
+//!   drain, degenerating to BSP-style batching (one envelope per
+//!   destination per iteration) minus the at-barrier application.
+//!
+//! All variants keep the paper's per-iteration synchronization (one global
+//! barrier between exchange and update) and apply remote contributions *on
+//! arrival*, so the only experimental difference vs [`bsp`](super::bsp) is
+//! message granularity and overlap — exactly the contrast Figure 2 probes.
 
 use std::sync::Arc;
 
+use crate::amt::aggregate::{Aggregator, Batch, FlushPolicy};
 use crate::amt::sim::{Actor, Ctx, LocalityId, Message, SimConfig, SimRuntime};
-use crate::graph::{DistGraph, Shard, VertexId};
+use crate::graph::{DistGraph, Shard};
 
 use super::{PrParams, PrResult};
 
-/// Message granularity of the asynchronous variant.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
-pub enum Variant {
-    /// One remote action per remote edge.
-    Naive,
-    /// Combiner flushed every `flush_block` source vertices.
-    Optimized {
-        /// Vertices processed between combiner flushes.
-        flush_block: usize,
-    },
-}
-
-/// Contribution messages.
+/// A flushed combiner of `(vertex, summed contribution)` pairs. An
+/// unbatched flush carries exactly one pair — the paper's naive
+/// `Contrib(v, c)` remote action.
 #[derive(Debug, Clone)]
-pub enum AsyncPrMsg {
-    /// Single fine-grained contribution (naive variant).
-    Contrib(VertexId, f32),
-    /// Batched combined contributions (optimized variant).
-    Batch(Vec<(VertexId, f32)>),
-}
+pub struct AsyncPrMsg(pub Batch<f32>);
+
+/// Per-item wire size: vertex id + contribution.
+const ITEM_BYTES: usize = 8;
 
 impl Message for AsyncPrMsg {
     fn wire_bytes(&self) -> usize {
-        match self {
-            AsyncPrMsg::Contrib(..) => 8,
-            AsyncPrMsg::Batch(b) => 8 * b.len(),
-        }
+        self.0.wire_bytes()
     }
 
     fn item_count(&self) -> usize {
-        match self {
-            AsyncPrMsg::Contrib(..) => 1,
-            AsyncPrMsg::Batch(b) => b.len(),
-        }
+        self.0.len()
     }
+}
+
+fn add(acc: &mut f32, c: f32) {
+    *acc += c;
 }
 
 /// Per-locality asynchronous PageRank state.
@@ -68,7 +58,8 @@ pub struct AsyncPrActor {
     shard: Arc<Shard>,
     dist: Arc<DistGraph>,
     params: PrParams,
-    variant: Variant,
+    /// Remote-contribution combiner (shared aggregation subsystem).
+    pub agg: Aggregator<f32>,
     /// Owned ranks (local index).
     pub rank: Vec<f32>,
     z: Vec<f32>,
@@ -83,80 +74,23 @@ impl AsyncPrActor {
     /// with atomic updates), so communication overlaps compute.
     fn compute_and_send(&mut self, ctx: &mut Ctx<AsyncPrMsg>) {
         let here = ctx.locality();
-        let p = ctx.n_localities() as usize;
         let n_local = self.shard.n_local();
-        match self.variant {
-            Variant::Naive => {
-                for u in 0..n_local {
-                    let deg = (self.shard.out_degree[u].max(1)) as f32;
-                    let c = self.rank[u] / deg;
-                    for &v in self.shard.out_neighbors(u) {
-                        let dst = self.dist.owner(v);
-                        if dst == here {
-                            self.z[v as usize - self.shard.range.start] += c;
-                        } else {
-                            ctx.send(dst, AsyncPrMsg::Contrib(v, c));
-                        }
-                    }
+        for u in 0..n_local {
+            let deg = (self.shard.out_degree[u].max(1)) as f32;
+            let c = self.rank[u] / deg;
+            for &v in self.shard.out_neighbors(u) {
+                let dst = self.dist.owner(v);
+                if dst == here {
+                    self.z[v as usize - self.shard.range.start] += c;
+                } else if let Some(batch) = self.agg.accumulate(dst, v, c) {
+                    ctx.send(dst, AsyncPrMsg(batch));
                 }
             }
-            Variant::Optimized { flush_block } => {
-                let flush_block = flush_block.max(1);
-                let mut combiner: Vec<Vec<f32>> = (0..p)
-                    .map(|l| vec![0.0f32; self.dist.partition.len_of(l as LocalityId)])
-                    .collect();
-                let mut touched: Vec<Vec<u32>> = vec![Vec::new(); p];
-                let mut since_flush = 0usize;
-                for u in 0..n_local {
-                    let deg = (self.shard.out_degree[u].max(1)) as f32;
-                    let c = self.rank[u] / deg;
-                    for &v in self.shard.out_neighbors(u) {
-                        let dst = self.dist.owner(v);
-                        let off = v as usize - self.dist.partition.range_of(dst).start;
-                        if dst == here {
-                            self.z[off] += c;
-                        } else {
-                            let d = dst as usize;
-                            if combiner[d][off] == 0.0 {
-                                touched[d].push(off as u32);
-                            }
-                            combiner[d][off] += c;
-                        }
-                    }
-                    since_flush += 1;
-                    if since_flush >= flush_block {
-                        self.flush(ctx, &mut combiner, &mut touched);
-                        since_flush = 0;
-                    }
-                }
-                self.flush(ctx, &mut combiner, &mut touched);
-            }
+        }
+        for (dst, batch) in self.agg.drain() {
+            ctx.send(dst, AsyncPrMsg(batch));
         }
         ctx.request_barrier();
-    }
-
-    fn flush(
-        &self,
-        ctx: &mut Ctx<AsyncPrMsg>,
-        combiner: &mut [Vec<f32>],
-        touched: &mut [Vec<u32>],
-    ) {
-        for dst in 0..combiner.len() {
-            if touched[dst].is_empty() {
-                continue;
-            }
-            let start = self.dist.partition.range_of(dst as LocalityId).start;
-            let mut batch: Vec<(VertexId, f32)> = touched[dst]
-                .iter()
-                .map(|&off| ((start + off as usize) as VertexId, combiner[dst][off as usize]))
-                .collect();
-            batch.sort_by_key(|&(v, _)| v);
-            for &off in &touched[dst] {
-                combiner[dst][off as usize] = 0.0;
-            }
-            touched[dst].clear();
-            ctx.send(dst as LocalityId, AsyncPrMsg::Batch(batch));
-        }
     }
 
     fn update_ranks(&mut self) {
@@ -185,13 +119,8 @@ impl Actor for AsyncPrActor {
         // Applied on arrival — the "asynchronous remote action ...
         // atomically updating the destination vertex" of §4.2.
         let start = self.shard.range.start;
-        match msg {
-            AsyncPrMsg::Contrib(v, c) => self.z[v as usize - start] += c,
-            AsyncPrMsg::Batch(batch) => {
-                for (v, c) in batch {
-                    self.z[v as usize - start] += c;
-                }
-            }
+        for (v, c) in msg.0.items {
+            self.z[v as usize - start] += c;
         }
     }
 
@@ -204,10 +133,11 @@ impl Actor for AsyncPrActor {
     }
 }
 
-/// Run asynchronous PageRank with the given message-granularity variant.
-pub fn run(dist: &DistGraph, params: PrParams, variant: Variant, cfg: SimConfig) -> PrResult {
+/// Run asynchronous PageRank with the given flush policy.
+pub fn run(dist: &DistGraph, params: PrParams, policy: FlushPolicy, cfg: SimConfig) -> PrResult {
     let dist = Arc::new(dist.clone());
     let n = dist.n();
+    let ranges = dist.partition.ranges();
     let actors: Vec<AsyncPrActor> = dist
         .shards
         .iter()
@@ -215,14 +145,17 @@ pub fn run(dist: &DistGraph, params: PrParams, variant: Variant, cfg: SimConfig)
             shard: Arc::new(s.clone()),
             dist: Arc::clone(&dist),
             params,
-            variant,
+            agg: Aggregator::new(&ranges, s.locality, policy, &cfg.net, ITEM_BYTES, add),
             rank: vec![1.0 / n as f32; s.n_local()],
             z: vec![0.0; s.n_local()],
             iter: 0,
             deltas: Vec::new(),
         })
         .collect();
-    let (actors, report) = SimRuntime::new(cfg).run(actors);
+    let (actors, mut report) = SimRuntime::new(cfg).run(actors);
+    for a in &actors {
+        report.agg.merge(a.agg.stats());
+    }
     super::bsp::collect(&dist, actors.iter().map(|a| (&a.rank, &a.deltas)), params, report)
 }
 
@@ -233,54 +166,104 @@ mod tests {
     use crate::amt::NetConfig;
     use crate::graph::generators;
 
+    fn det() -> SimConfig {
+        SimConfig::deterministic(NetConfig::default())
+    }
+
     #[test]
-    fn naive_matches_oracle() {
+    fn unbatched_matches_oracle() {
         let g = generators::urand_directed(6, 6, 17);
         let params = PrParams { alpha: 0.85, iterations: 12 };
         let want = sequential::pagerank(&g, params);
         for p in [1u32, 2, 4] {
             let dist = DistGraph::block(&g, p);
-            let res = run(&dist, params, Variant::Naive,
-                          SimConfig::deterministic(NetConfig::default()));
+            let res = run(&dist, params, FlushPolicy::Unbatched, det());
             assert!(max_abs_diff(&res.ranks, &want) < 1e-5, "p={p}");
         }
     }
 
     #[test]
-    fn optimized_matches_oracle_for_any_flush_block() {
+    fn every_flush_policy_matches_oracle() {
         let g = generators::urand_directed(6, 6, 23);
         let params = PrParams { alpha: 0.85, iterations: 12 };
         let want = sequential::pagerank(&g, params);
         let dist = DistGraph::block(&g, 4);
-        for fb in [1usize, 8, 64, 1 << 20] {
-            let res = run(&dist, params, Variant::Optimized { flush_block: fb },
-                          SimConfig::deterministic(NetConfig::default()));
-            assert!(max_abs_diff(&res.ranks, &want) < 1e-5, "flush_block={fb}");
+        for policy in [
+            FlushPolicy::Unbatched,
+            FlushPolicy::Items(1),
+            FlushPolicy::Items(8),
+            FlushPolicy::Items(64),
+            FlushPolicy::Bytes(256),
+            FlushPolicy::Adaptive,
+            FlushPolicy::Manual,
+        ] {
+            let res = run(&dist, params, policy, det());
+            assert!(max_abs_diff(&res.ranks, &want) < 1e-5, "{policy:?}");
         }
     }
 
     #[test]
-    fn naive_sends_one_message_per_remote_edge() {
+    fn unbatched_sends_one_message_per_remote_edge() {
         let g = generators::complete(16);
         let dist = DistGraph::block(&g, 4);
         let params = PrParams { alpha: 0.85, iterations: 1 };
-        let res = run(&dist, params, Variant::Naive,
-                      SimConfig::deterministic(NetConfig::default()));
+        let res = run(&dist, params, FlushPolicy::Unbatched, det());
         // complete(16) over 4 localities: each vertex has 12 remote
         // neighbors -> 16 * 12 remote edges.
         assert_eq!(res.report.net.messages, 16 * 12);
+        assert_eq!(res.report.net.envelopes, 16 * 12);
+        assert_eq!(res.report.agg.envelopes, 16 * 12);
     }
 
     #[test]
-    fn optimized_sends_far_fewer_envelopes_than_naive() {
+    fn manual_drain_sends_far_fewer_envelopes_than_unbatched() {
         let g = generators::urand_directed(7, 8, 29);
         let dist = DistGraph::block(&g, 4);
         let params = PrParams { alpha: 0.85, iterations: 3 };
-        let naive = run(&dist, params, Variant::Naive,
-                        SimConfig::deterministic(NetConfig::default()));
-        let opt = run(&dist, params, Variant::Optimized { flush_block: 1 << 20 },
-                      SimConfig::deterministic(NetConfig::default()));
+        let naive = run(&dist, params, FlushPolicy::Unbatched, det());
+        let opt = run(&dist, params, FlushPolicy::Manual, det());
         assert!(opt.report.net.envelopes * 10 < naive.report.net.envelopes);
         assert!(opt.report.makespan_us < naive.report.makespan_us);
+    }
+
+    #[test]
+    fn manual_drain_reproduces_bsp_envelope_schedule() {
+        // Maximal batching == the previous Optimized variant with
+        // `flush_block == n_local`: exactly one envelope per non-empty
+        // destination pair per iteration, the same wire schedule the BSP
+        // engine produces.
+        let g = generators::urand_directed(7, 8, 31);
+        let dist = DistGraph::block(&g, 4);
+        let params = PrParams { alpha: 0.85, iterations: 5 };
+        let manual = run(&dist, params, FlushPolicy::Manual, det());
+        let bsp = super::super::bsp::run(&dist, params, det());
+        assert_eq!(manual.report.net.envelopes, bsp.report.net.envelopes);
+        assert_eq!(manual.report.agg.envelopes, manual.report.net.envelopes);
+    }
+
+    #[test]
+    fn flush_accounting_matches_wire_traffic() {
+        // Every emitted batch is shipped as exactly one envelope, and
+        // every folded item reaches the wire exactly once: the aggregation
+        // counters in SimReport must equal the network counters.
+        let g = generators::urand_directed(6, 6, 37);
+        let dist = DistGraph::block(&g, 4);
+        let params = PrParams { alpha: 0.85, iterations: 4 };
+        for policy in [
+            FlushPolicy::Unbatched,
+            FlushPolicy::Items(16),
+            FlushPolicy::Adaptive,
+            FlushPolicy::Manual,
+        ] {
+            let res = run(&dist, params, policy, det());
+            assert_eq!(res.report.agg.envelopes, res.report.net.envelopes, "{policy:?}");
+            assert_eq!(res.report.agg.sent_items, res.report.net.messages, "{policy:?}");
+            // Per-iteration phases drain fully: nothing folded is lost.
+            assert_eq!(
+                res.report.agg.items,
+                res.report.agg.folded + res.report.agg.sent_items,
+                "{policy:?}"
+            );
+        }
     }
 }

@@ -7,14 +7,16 @@
 //! convention) with one global barrier per iteration separating the
 //! contribution exchange from the rank update — the paper's
 //! "synchronization across iterations". They differ *only* in how
-//! contributions travel:
+//! contributions travel (the async flavors are one engine parameterized
+//! by [`FlushPolicy`](crate::amt::FlushPolicy)):
 //!
-//! | variant       | remote contributions                     | applied      |
-//! |---------------|------------------------------------------|--------------|
-//! | `bsp`         | per-destination combiner, 1 envelope/dst | at barrier   |
-//! | `async naive` | one message per remote edge              | on arrival   |
-//! | `async opt`   | chunked combiner flushes (overlap knob)  | on arrival   |
-//! | `kernel`      | contribution-slice allgather             | local kernel |
+//! | variant           | remote contributions                     | applied      |
+//! |-------------------|------------------------------------------|--------------|
+//! | `bsp`             | per-destination combiner, 1 envelope/dst | at barrier   |
+//! | `async Unbatched` | one message per remote edge (naive)      | on arrival   |
+//! | `async Items/...` | chunked combiner flushes (overlap knob)  | on arrival   |
+//! | `async Manual`    | end-of-phase drain (max batching)        | on arrival   |
+//! | `kernel`          | contribution-slice allgather             | local kernel |
 
 pub mod async_hpx;
 pub mod bsp;

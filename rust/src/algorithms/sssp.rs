@@ -3,12 +3,17 @@
 //! Sequential oracle: binary-heap Dijkstra. Distributed: asynchronous
 //! *label-correcting* relaxation (the natural HPX formulation — an improved
 //! tentative distance triggers eager remote relaxations, termination is
-//! network quiescence) and a BSP Bellman-Ford-style superstep baseline with
-//! per-destination combiners, mirroring the BFS/PageRank pairing.
+//! network quiescence) and a BSP Bellman-Ford-style superstep baseline,
+//! mirroring the BFS/PageRank pairing. Both route their remote
+//! relaxations through the shared [`amt::aggregate`](crate::amt::aggregate)
+//! combiner (fold = min over tentative distances): the async engine
+//! flushes by the configured [`FlushPolicy`] and drains at handler end,
+//! the BSP engine drains once per superstep (maximal batching).
 
 use std::cmp::Reverse;
 use std::collections::BinaryHeap;
 
+use crate::amt::aggregate::{Aggregator, Batch, FlushPolicy};
 use crate::amt::sim::{Actor, Ctx, LocalityId, Message, SimConfig, SimRuntime};
 use crate::amt::SimReport;
 use crate::graph::{Csr, DistGraph, Partition1D, VertexId};
@@ -20,6 +25,16 @@ pub struct SsspResult {
     pub dist: Vec<f32>,
     /// Runtime report.
     pub report: SimReport,
+}
+
+/// Per-item wire size: vertex id + distance.
+const ITEM_BYTES: usize = 8;
+
+/// Keep the smaller tentative distance.
+fn min_f32(acc: &mut f32, d: f32) {
+    if d < *acc {
+        *acc = d;
+    }
 }
 
 /// Sequential Dijkstra oracle (non-negative weights).
@@ -49,18 +64,17 @@ pub fn dijkstra(g: &Csr, source: VertexId) -> Vec<f32> {
     dist
 }
 
-/// Relaxation message: `v` may be reachable at distance `d`.
+/// A flushed combiner of relaxations: `(vertex, best proposed distance)`.
 #[derive(Debug, Clone)]
-pub struct Relax {
-    /// Target vertex (owned by receiver).
-    pub v: VertexId,
-    /// Proposed distance.
-    pub d: f32,
-}
+pub struct RelaxBatch(pub Batch<f32>);
 
-impl Message for Relax {
+impl Message for RelaxBatch {
     fn wire_bytes(&self) -> usize {
-        8
+        self.0.wire_bytes()
+    }
+
+    fn item_count(&self) -> usize {
+        self.0.len()
     }
 }
 
@@ -113,6 +127,8 @@ struct AsyncSsspActor {
     /// knowledge (our own send history) that prunes the label-correcting
     /// flood: re-sending a no-better relaxation is pure waste.
     best_sent: Vec<f32>,
+    /// Remote-relaxation combiner (shared aggregation subsystem).
+    agg: Aggregator<f32>,
 }
 
 impl AsyncSsspActor {
@@ -121,7 +137,7 @@ impl AsyncSsspActor {
     /// trick that keeps unordered label-correcting from re-relaxing
     /// whole subtrees (re-relaxation factor drops from O(diameter) to
     /// ~1 on random weights).
-    fn relax_from(&mut self, ctx: &mut Ctx<Relax>, v: VertexId, d: f32) {
+    fn relax_from(&mut self, ctx: &mut Ctx<RelaxBatch>, v: VertexId, d: f32) {
         let here = ctx.locality();
         let mut heap: BinaryHeap<Reverse<(u32, VertexId)>> = BinaryHeap::new();
         heap.push(Reverse((d.to_bits(), v)));
@@ -141,31 +157,56 @@ impl AsyncSsspActor {
                     }
                 } else if nd < self.best_sent[w as usize] {
                     self.best_sent[w as usize] = nd;
-                    ctx.send(dst, Relax { v: w, d: nd });
+                    if let Some(batch) = self.agg.accumulate(dst, w, nd) {
+                        ctx.send(dst, RelaxBatch(batch));
+                    }
                 }
             }
+        }
+    }
+
+    fn drain(&mut self, ctx: &mut Ctx<RelaxBatch>) {
+        for (dst, batch) in self.agg.drain() {
+            ctx.send(dst, RelaxBatch(batch));
         }
     }
 }
 
 impl Actor for AsyncSsspActor {
-    type Msg = Relax;
+    type Msg = RelaxBatch;
 
-    fn on_start(&mut self, ctx: &mut Ctx<Relax>) {
+    fn on_start(&mut self, ctx: &mut Ctx<RelaxBatch>) {
         if self.partition.owner(self.source) == ctx.locality() {
             let s = self.source;
             self.relax_from(ctx, s, 0.0);
+            self.drain(ctx);
         }
     }
 
-    fn on_message(&mut self, ctx: &mut Ctx<Relax>, _from: LocalityId, msg: Relax) {
-        self.relax_from(ctx, msg.v, msg.d);
+    fn on_message(&mut self, ctx: &mut Ctx<RelaxBatch>, _from: LocalityId, msg: RelaxBatch) {
+        for (v, d) in msg.0.items {
+            self.relax_from(ctx, v, d);
+        }
+        self.drain(ctx);
     }
 }
 
-/// Run asynchronous label-correcting SSSP (requires a weighted graph).
+/// Run asynchronous label-correcting SSSP with the default
+/// [`FlushPolicy::Adaptive`] aggregation.
 pub fn run_async(g: &Csr, dist_graph: &DistGraph, source: VertexId, cfg: SimConfig) -> SsspResult {
+    run_async_with(g, dist_graph, source, FlushPolicy::Adaptive, cfg)
+}
+
+/// Run asynchronous label-correcting SSSP with an explicit flush policy.
+pub fn run_async_with(
+    g: &Csr,
+    dist_graph: &DistGraph,
+    source: VertexId,
+    policy: FlushPolicy,
+    cfg: SimConfig,
+) -> SsspResult {
     let p = dist_graph.p();
+    let ranges = dist_graph.partition.ranges();
     let actors: Vec<AsyncSsspActor> = (0..p)
         .map(|l| AsyncSsspActor {
             shard: WeightedShard::build(g, &dist_graph.partition, l),
@@ -173,9 +214,13 @@ pub fn run_async(g: &Csr, dist_graph: &DistGraph, source: VertexId, cfg: SimConf
             source,
             dist: vec![f32::INFINITY; dist_graph.partition.len_of(l)],
             best_sent: vec![f32::INFINITY; dist_graph.n()],
+            agg: Aggregator::new(&ranges, l, policy, &cfg.net, ITEM_BYTES, min_f32),
         })
         .collect();
-    let (actors, report) = SimRuntime::new(cfg).run(actors);
+    let (actors, mut report) = SimRuntime::new(cfg).run(actors);
+    for a in &actors {
+        report.agg.merge(a.agg.stats());
+    }
     let mut dist = vec![f32::INFINITY; dist_graph.n()];
     for a in &actors {
         dist[a.shard.range.clone()].copy_from_slice(&a.dist);
@@ -186,8 +231,8 @@ pub fn run_async(g: &Csr, dist_graph: &DistGraph, source: VertexId, cfg: SimConf
 /// BSP SSSP messages.
 #[derive(Debug, Clone)]
 pub enum BspSsspMsg {
-    /// Batched relaxations `(vertex, distance)`.
-    Relaxations(Vec<(VertexId, f32)>),
+    /// Batched relaxations (one folded min per destination vertex).
+    Relaxations(Batch<f32>),
     /// Activity count for the termination reduction.
     Count(u64),
     /// Coordinator verdict.
@@ -197,7 +242,7 @@ pub enum BspSsspMsg {
 impl Message for BspSsspMsg {
     fn wire_bytes(&self) -> usize {
         match self {
-            BspSsspMsg::Relaxations(v) => 8 * v.len(),
+            BspSsspMsg::Relaxations(b) => b.wire_bytes(),
             BspSsspMsg::Count(_) => 8,
             BspSsspMsg::Continue(_) => 1,
         }
@@ -205,7 +250,7 @@ impl Message for BspSsspMsg {
 
     fn item_count(&self) -> usize {
         match self {
-            BspSsspMsg::Relaxations(v) => v.len(),
+            BspSsspMsg::Relaxations(b) => b.len(),
             _ => 1,
         }
     }
@@ -231,13 +276,13 @@ struct BspSsspActor {
     counts_sum: u64,
     continue_flag: bool,
     phase: Phase,
+    /// Superstep combiner: folded mins, drained once per round.
+    agg: Aggregator<f32>,
 }
 
 impl BspSsspActor {
     fn relax_round(&mut self, ctx: &mut Ctx<BspSsspMsg>) {
         let here = ctx.locality();
-        let p = ctx.n_localities() as usize;
-        let mut outgoing: Vec<Vec<(VertexId, f32)>> = vec![Vec::new(); p];
         let mut activity = 0u64;
         let mut next: Vec<VertexId> = Vec::new();
         let active = std::mem::take(&mut self.active);
@@ -261,16 +306,17 @@ impl BspSsspActor {
                         activity += 1;
                     }
                 } else {
-                    outgoing[dst as usize].push((w, nd));
+                    // Manual policy: accumulate never auto-flushes.
+                    if let Some(batch) = self.agg.accumulate(dst, w, nd) {
+                        ctx.send(dst, BspSsspMsg::Relaxations(batch));
+                    }
                     activity += 1;
                 }
             }
         }
         self.active = next;
-        for (dst, batch) in outgoing.into_iter().enumerate() {
-            if !batch.is_empty() {
-                ctx.send(dst as LocalityId, BspSsspMsg::Relaxations(batch));
-            }
+        for (dst, batch) in self.agg.drain() {
+            ctx.send(dst, BspSsspMsg::Relaxations(batch));
         }
         ctx.send(0, BspSsspMsg::Count(activity));
         self.phase = Phase::AfterRelax;
@@ -293,7 +339,7 @@ impl Actor for BspSsspActor {
 
     fn on_message(&mut self, _ctx: &mut Ctx<BspSsspMsg>, _from: LocalityId, msg: BspSsspMsg) {
         match msg {
-            BspSsspMsg::Relaxations(batch) => self.inbox.extend(batch),
+            BspSsspMsg::Relaxations(batch) => self.inbox.extend(batch.items),
             BspSsspMsg::Count(c) => {
                 self.counts_seen += 1;
                 self.counts_sum += c;
@@ -317,6 +363,7 @@ impl Actor for BspSsspActor {
                     }
                 }
                 if ctx.locality() == 0 {
+                    debug_assert_eq!(self.counts_seen, ctx.n_localities());
                     let go = self.counts_sum > 0;
                     self.counts_sum = 0;
                     self.counts_seen = 0;
@@ -339,6 +386,7 @@ impl Actor for BspSsspActor {
 /// Run BSP Bellman-Ford-style SSSP (requires a weighted graph).
 pub fn run_bsp(g: &Csr, dist_graph: &DistGraph, source: VertexId, cfg: SimConfig) -> SsspResult {
     let p = dist_graph.p();
+    let ranges = dist_graph.partition.ranges();
     let actors: Vec<BspSsspActor> = (0..p)
         .map(|l| BspSsspActor {
             shard: WeightedShard::build(g, &dist_graph.partition, l),
@@ -352,9 +400,13 @@ pub fn run_bsp(g: &Csr, dist_graph: &DistGraph, source: VertexId, cfg: SimConfig
             counts_sum: 0,
             continue_flag: false,
             phase: Phase::AfterRelax,
+            agg: Aggregator::new(&ranges, l, FlushPolicy::Manual, &cfg.net, ITEM_BYTES, min_f32),
         })
         .collect();
-    let (actors, report) = SimRuntime::new(cfg).run(actors);
+    let (actors, mut report) = SimRuntime::new(cfg).run(actors);
+    for a in &actors {
+        report.agg.merge(a.agg.stats());
+    }
     let mut dist = vec![f32::INFINITY; dist_graph.n()];
     for a in &actors {
         dist[a.shard.range.clone()].copy_from_slice(&a.dist);
@@ -367,6 +419,10 @@ mod tests {
     use super::*;
     use crate::amt::NetConfig;
     use crate::graph::generators;
+
+    fn det() -> SimConfig {
+        SimConfig::deterministic(NetConfig::default())
+    }
 
     fn weighted_graph(scale: u32, seed: u64) -> Csr {
         generators::with_random_weights(&generators::urand(scale, 4, seed), 1.0, 10.0, seed + 1)
@@ -390,6 +446,22 @@ mod tests {
     }
 
     #[test]
+    fn async_matches_dijkstra_under_every_policy() {
+        let g = weighted_graph(6, 53);
+        let want = dijkstra(&g, 0);
+        let d = DistGraph::block(&g, 4);
+        for policy in [
+            FlushPolicy::Unbatched,
+            FlushPolicy::Items(8),
+            FlushPolicy::Adaptive,
+            FlushPolicy::Manual,
+        ] {
+            let res = run_async_with(&g, &d, 0, policy, det());
+            assert!(close(&res.dist, &want), "{policy:?}");
+        }
+    }
+
+    #[test]
     fn bsp_matches_dijkstra() {
         for p in [1u32, 3, 4] {
             let g = weighted_graph(6, 77 + p as u64);
@@ -398,6 +470,17 @@ mod tests {
             let res = run_bsp(&g, &d, 0, SimConfig::deterministic(NetConfig::default()));
             assert!(close(&res.dist, &want), "p={p}");
         }
+    }
+
+    #[test]
+    fn bsp_folds_duplicate_relaxations_per_superstep() {
+        // The combiner ships at most one relaxation per destination vertex
+        // per superstep, so wire items never exceed aggregation input.
+        let g = weighted_graph(6, 91);
+        let d = DistGraph::block(&g, 4);
+        let res = run_bsp(&g, &d, 0, SimConfig::deterministic(NetConfig::default()));
+        assert_eq!(res.report.agg.sent_items + res.report.agg.folded, res.report.agg.items);
+        assert_eq!(res.report.agg.envelopes, res.report.agg.drain_flushes);
     }
 
     #[test]

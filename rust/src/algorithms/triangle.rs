@@ -83,7 +83,6 @@ struct TriActor {
     shard: Arc<Shard>,
     dist: Arc<DistGraph>,
     local_count: u64,
-    partials_seen: u32,
     /// Populated on locality 0 after the run.
     total: u64,
     phase: u8,
@@ -149,7 +148,6 @@ impl Actor for TriActor {
             }
             TriMsg::Partial(c) => {
                 self.total += c;
-                self.partials_seen += 1;
             }
         }
     }
@@ -174,7 +172,6 @@ pub fn run(dist: &DistGraph, cfg: SimConfig) -> TriangleResult {
             shard: Arc::new(s.clone()),
             dist: Arc::clone(&dist),
             local_count: 0,
-            partials_seen: 0,
             total: 0,
             phase: 0,
         })

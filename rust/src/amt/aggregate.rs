@@ -1,0 +1,452 @@
+//! Message aggregation: typed per-destination combiners with pluggable
+//! flush policies.
+//!
+//! The paper's central negative result is that fine-grained asynchronous
+//! algorithms lose to BSP because per-message CPU/latency overheads
+//! dominate; its follow-up work and the AM++ lineage show that a
+//! *runtime-level* coalescing layer — not per-algorithm hacks — is what
+//! closes the gap. This module is that layer: every asynchronous algorithm
+//! folds its remote actions into an [`Aggregator`] instead of calling
+//! [`Ctx::send`](super::sim::Ctx::send) per action.
+//!
+//! An [`Aggregator`] keeps one dense combiner per destination locality
+//! (indexed by destination-local vertex offset, like the owned slice of an
+//! `hpx::partitioned_vector` segment). Pushing a value either claims an
+//! empty slot or *folds* into the pending one through the reduction hook
+//! (sum for PageRank contributions, min for BFS levels / SSSP distances /
+//! CC labels), so a flushed batch carries at most one item per destination
+//! vertex. When the [`FlushPolicy`] threshold fires, the destination's
+//! batch is handed back to the caller to ship as one envelope; whatever is
+//! still buffered is shipped by an explicit [`Aggregator::drain`] at the
+//! end of a handler or superstep phase (the quiescence/barrier drain).
+//!
+//! [`AggStats`] counts items, folds, and emitted envelopes; algorithm
+//! drivers merge them into [`SimReport::agg`](super::metrics::SimReport)
+//! so every experiment reports the naive-vs-aggregated axis.
+
+use std::ops::Range;
+
+use super::net::NetConfig;
+use super::sim::LocalityId;
+
+/// When a per-destination combiner is flushed into an envelope.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FlushPolicy {
+    /// One envelope per item — the paper's naive per-remote-edge path,
+    /// kept only as the ablation baseline.
+    Unbatched,
+    /// Flush a destination once it holds this many (distinct) items.
+    Items(usize),
+    /// Flush a destination once its payload reaches this many bytes.
+    Bytes(usize),
+    /// Derive the item threshold from the [`NetConfig`] cost model: batch
+    /// until the amortized per-item share of the fixed envelope cost
+    /// (latency + per-envelope CPU + framing) drops below 10% of the
+    /// marginal per-item cost.
+    Adaptive,
+    /// Never auto-flush; everything waits for the explicit drain at the
+    /// end of the handler or superstep phase (maximal batching).
+    Manual,
+}
+
+impl FlushPolicy {
+    /// Parse a config/CLI spelling: `unbatched`, `adaptive`, `manual`,
+    /// `items:N`, `bytes:N`.
+    pub fn parse(s: &str) -> Option<FlushPolicy> {
+        match s {
+            "unbatched" | "naive" => return Some(FlushPolicy::Unbatched),
+            "adaptive" => return Some(FlushPolicy::Adaptive),
+            "manual" => return Some(FlushPolicy::Manual),
+            _ => {}
+        }
+        let (kind, val) = s.split_once(':')?;
+        let n: usize = val.parse().ok()?;
+        match kind {
+            "items" => Some(FlushPolicy::Items(n)),
+            "bytes" => Some(FlushPolicy::Bytes(n)),
+            _ => None,
+        }
+    }
+
+    /// Distinct-item threshold that triggers a flush; `None` = drain-only.
+    pub fn item_threshold(&self, net: &NetConfig, item_bytes: usize) -> Option<usize> {
+        match *self {
+            FlushPolicy::Unbatched => Some(1),
+            FlushPolicy::Items(k) => Some(k.max(1)),
+            FlushPolicy::Bytes(b) => Some((b / item_bytes.max(1)).max(1)),
+            FlushPolicy::Adaptive => Some(adaptive_items(net, item_bytes)),
+            FlushPolicy::Manual => None,
+        }
+    }
+}
+
+/// Break-even batch size for [`FlushPolicy::Adaptive`]: the item count at
+/// which the fixed per-envelope cost amortizes to 10% of the marginal
+/// per-item cost. On a zero-cost network there is nothing to amortize and
+/// a fixed 1024 is used.
+pub fn adaptive_items(net: &NetConfig, item_bytes: usize) -> usize {
+    let fixed = net.send_cpu_us
+        + net.recv_cpu_us
+        + net.latency_us
+        + net.overhead_bytes as f64 / net.bandwidth_bytes_per_us;
+    let per_item = 2.0 * net.per_item_cpu_us + item_bytes as f64 / net.bandwidth_bytes_per_us;
+    if fixed <= 0.0 || per_item <= 0.0 || !fixed.is_finite() || !per_item.is_finite() {
+        return 1024;
+    }
+    ((fixed / (0.1 * per_item)).ceil() as usize).clamp(16, 1 << 16)
+}
+
+/// One flushed combiner: `(global vertex, folded value)` pairs sorted by
+/// vertex id (deterministic wire order). Algorithms wrap this in their
+/// message enum; [`Batch::wire_bytes`] / [`Batch::len`] feed the
+/// [`Message`](super::sim::Message) impl.
+#[derive(Debug, Clone)]
+pub struct Batch<V> {
+    /// Folded items, sorted by global vertex id.
+    pub items: Vec<(u32, V)>,
+    item_bytes: usize,
+}
+
+impl<V> Batch<V> {
+    /// Serialized payload size (items x per-item wire bytes).
+    pub fn wire_bytes(&self) -> usize {
+        self.items.len() * self.item_bytes
+    }
+
+    /// Number of folded items carried.
+    pub fn len(&self) -> usize {
+        self.items.len()
+    }
+
+    /// True when the batch carries nothing.
+    pub fn is_empty(&self) -> bool {
+        self.items.is_empty()
+    }
+}
+
+/// Aggregation accounting, merged into
+/// [`SimReport::agg`](super::metrics::SimReport) by algorithm drivers.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct AggStats {
+    /// Values pushed through [`Aggregator::accumulate`].
+    pub items: u64,
+    /// Values folded into an already-pending slot (combiner hits — traffic
+    /// that never reaches the wire).
+    pub folded: u64,
+    /// Batches handed back to the caller (== envelopes if each batch is
+    /// shipped as one send).
+    pub envelopes: u64,
+    /// Items across all emitted batches.
+    pub sent_items: u64,
+    /// Batches emitted because the policy threshold fired.
+    pub policy_flushes: u64,
+    /// Batches emitted by explicit drains (handler end / barrier).
+    pub drain_flushes: u64,
+}
+
+impl AggStats {
+    /// Accumulate another stats block into this one.
+    pub fn merge(&mut self, other: &AggStats) {
+        self.items += other.items;
+        self.folded += other.folded;
+        self.envelopes += other.envelopes;
+        self.sent_items += other.sent_items;
+        self.policy_flushes += other.policy_flushes;
+        self.drain_flushes += other.drain_flushes;
+    }
+
+    /// Mean items per emitted batch.
+    pub fn fold_factor(&self) -> f64 {
+        if self.envelopes == 0 {
+            0.0
+        } else {
+            self.items as f64 / self.envelopes as f64
+        }
+    }
+}
+
+/// Typed per-destination message combiner. See the module docs.
+pub struct Aggregator<V> {
+    here: LocalityId,
+    /// Global start offset of each destination's owned range.
+    starts: Vec<usize>,
+    /// Dense pending slots per destination (destination-local index).
+    slots: Vec<Vec<Option<V>>>,
+    /// Occupied slot offsets per destination, in first-touch order.
+    touched: Vec<Vec<u32>>,
+    threshold: Option<usize>,
+    item_bytes: usize,
+    fold: fn(&mut V, V),
+    stats: AggStats,
+}
+
+impl<V: Clone> Aggregator<V> {
+    /// Create a combiner over the destinations' owned vertex ranges
+    /// (`ranges[l]` = locality `l`'s contiguous global range). `item_bytes`
+    /// is the per-item wire size; `fold` merges a new value into a pending
+    /// one and must be associative and insensitive to arrival order (sum,
+    /// min, ...), so batching never changes results.
+    pub fn new(
+        ranges: &[Range<usize>],
+        here: LocalityId,
+        policy: FlushPolicy,
+        net: &NetConfig,
+        item_bytes: usize,
+        fold: fn(&mut V, V),
+    ) -> Self {
+        let threshold = policy.item_threshold(net, item_bytes);
+        let slots = ranges
+            .iter()
+            .enumerate()
+            .map(|(l, r)| {
+                if l == here as usize || threshold == Some(1) {
+                    Vec::new() // never buffered
+                } else {
+                    vec![None; r.len()]
+                }
+            })
+            .collect();
+        Aggregator {
+            here,
+            starts: ranges.iter().map(|r| r.start).collect(),
+            slots,
+            touched: vec![Vec::new(); ranges.len()],
+            threshold,
+            item_bytes,
+            fold,
+            stats: AggStats::default(),
+        }
+    }
+
+    /// Number of destinations (localities) configured.
+    pub fn n_destinations(&self) -> usize {
+        self.starts.len()
+    }
+
+    /// Fold `(v, val)` into `dst`'s combiner. Returns a batch when the
+    /// flush policy fired — the caller must ship it to `dst` now.
+    pub fn accumulate(&mut self, dst: LocalityId, v: u32, val: V) -> Option<Batch<V>> {
+        debug_assert_ne!(dst, self.here, "aggregate only remote sends");
+        self.stats.items += 1;
+        if self.threshold == Some(1) {
+            // Unbatched fast path: no combiner state at all.
+            self.stats.envelopes += 1;
+            self.stats.policy_flushes += 1;
+            self.stats.sent_items += 1;
+            return Some(Batch { items: vec![(v, val)], item_bytes: self.item_bytes });
+        }
+        let d = dst as usize;
+        let off = v as usize - self.starts[d];
+        match &mut self.slots[d][off] {
+            Some(pending) => {
+                (self.fold)(pending, val);
+                self.stats.folded += 1;
+            }
+            empty => {
+                *empty = Some(val);
+                self.touched[d].push(off as u32);
+            }
+        }
+        if let Some(t) = self.threshold {
+            if self.touched[d].len() >= t {
+                self.stats.policy_flushes += 1;
+                return self.take(dst);
+            }
+        }
+        None
+    }
+
+    /// Take `dst`'s pending batch (no stats-class attribution).
+    fn take(&mut self, dst: LocalityId) -> Option<Batch<V>> {
+        let d = dst as usize;
+        if self.touched[d].is_empty() {
+            return None;
+        }
+        let mut offs = std::mem::take(&mut self.touched[d]);
+        offs.sort_unstable();
+        let start = self.starts[d];
+        let items: Vec<(u32, V)> = offs
+            .iter()
+            .map(|&o| ((start + o as usize) as u32, self.slots[d][o as usize].take().unwrap()))
+            .collect();
+        self.stats.envelopes += 1;
+        self.stats.sent_items += items.len() as u64;
+        Some(Batch { items, item_bytes: self.item_bytes })
+    }
+
+    /// Drain one destination's pending items (explicit flush).
+    pub fn drain_one(&mut self, dst: LocalityId) -> Option<Batch<V>> {
+        let b = self.take(dst);
+        if b.is_some() {
+            self.stats.drain_flushes += 1;
+        }
+        b
+    }
+
+    /// Drain every destination, in locality order. Call at handler end
+    /// (asynchronous algorithms) or right before requesting a barrier
+    /// (BSP supersteps) so nothing is left behind at quiescence.
+    pub fn drain(&mut self) -> Vec<(LocalityId, Batch<V>)> {
+        let (here, n) = (self.here, self.starts.len() as LocalityId);
+        (0..n)
+            .filter(|&l| l != here)
+            .filter_map(|l| self.drain_one(l).map(|b| (l, b)))
+            .collect()
+    }
+
+    /// Items currently buffered across all destinations.
+    pub fn pending(&self) -> usize {
+        self.touched.iter().map(|t| t.len()).sum()
+    }
+
+    /// Accounting so far.
+    pub fn stats(&self) -> &AggStats {
+        &self.stats
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn add(a: &mut f32, b: f32) {
+        *a += b;
+    }
+
+    fn min_u32(a: &mut u32, b: u32) {
+        *a = (*a).min(b);
+    }
+
+    fn ranges(sizes: &[usize]) -> Vec<Range<usize>> {
+        let mut out = Vec::new();
+        let mut start = 0;
+        for &s in sizes {
+            out.push(start..start + s);
+            start += s;
+        }
+        out
+    }
+
+    #[test]
+    fn unbatched_emits_one_batch_per_item() {
+        let r = ranges(&[4, 4]);
+        let mut agg =
+            Aggregator::new(&r, 0, FlushPolicy::Unbatched, &NetConfig::default(), 8, add);
+        for i in 0..5u32 {
+            let b = agg.accumulate(1, 4 + (i % 4), 1.0).expect("unbatched flushes per item");
+            assert_eq!(b.len(), 1);
+        }
+        assert_eq!(agg.stats().envelopes, 5);
+        assert_eq!(agg.stats().sent_items, 5);
+        assert_eq!(agg.pending(), 0);
+        assert!(agg.drain().is_empty());
+    }
+
+    #[test]
+    fn items_policy_flushes_at_threshold_and_folds_duplicates() {
+        let r = ranges(&[4, 8]);
+        let mut agg = Aggregator::new(&r, 0, FlushPolicy::Items(3), &NetConfig::zero(), 8, add);
+        assert!(agg.accumulate(1, 4, 1.0).is_none());
+        assert!(agg.accumulate(1, 4, 2.0).is_none(), "fold, not a new slot");
+        assert!(agg.accumulate(1, 5, 1.0).is_none());
+        let b = agg.accumulate(1, 6, 1.0).expect("3rd distinct item flushes");
+        assert_eq!(b.items, vec![(4, 3.0), (5, 1.0), (6, 1.0)]);
+        assert_eq!(agg.stats().folded, 1);
+        assert_eq!(agg.stats().policy_flushes, 1);
+        assert_eq!(agg.pending(), 0);
+    }
+
+    #[test]
+    fn manual_policy_only_drains() {
+        let r = ranges(&[2, 2, 2]);
+        let mut agg = Aggregator::new(&r, 1, FlushPolicy::Manual, &NetConfig::default(), 8, add);
+        for _ in 0..100 {
+            assert!(agg.accumulate(0, 0, 1.0).is_none());
+            assert!(agg.accumulate(2, 5, 1.0).is_none());
+        }
+        assert_eq!(agg.pending(), 2);
+        let out = agg.drain();
+        assert_eq!(out.len(), 2);
+        assert_eq!(out[0].0, 0);
+        assert_eq!(out[0].1.items, vec![(0, 100.0)]);
+        assert_eq!(out[1].0, 2);
+        assert_eq!(out[1].1.items, vec![(5, 100.0)]);
+        assert_eq!(agg.stats().items, 200);
+        assert_eq!(agg.stats().folded, 198);
+        assert_eq!(agg.stats().sent_items, 2);
+        assert_eq!(agg.stats().envelopes, 2);
+    }
+
+    #[test]
+    fn min_fold_keeps_smallest() {
+        let r = ranges(&[2, 2]);
+        let mut agg =
+            Aggregator::new(&r, 0, FlushPolicy::Manual, &NetConfig::default(), 8, min_u32);
+        agg.accumulate(1, 2, 7);
+        agg.accumulate(1, 2, 3);
+        agg.accumulate(1, 2, 5);
+        let out = agg.drain();
+        assert_eq!(out[0].1.items, vec![(2, 3)]);
+    }
+
+    #[test]
+    fn bytes_policy_translates_to_items() {
+        let net = NetConfig::default();
+        assert_eq!(FlushPolicy::Bytes(64).item_threshold(&net, 8), Some(8));
+        assert_eq!(FlushPolicy::Bytes(4).item_threshold(&net, 8), Some(1));
+        assert_eq!(FlushPolicy::Items(0).item_threshold(&net, 8), Some(1));
+        assert_eq!(FlushPolicy::Manual.item_threshold(&net, 8), None);
+    }
+
+    #[test]
+    fn adaptive_threshold_tracks_cost_model() {
+        let net = NetConfig::default();
+        let t = adaptive_items(&net, 8);
+        // fixed ~3.0us, per-item ~0.1us -> ~300 items to amortize to 10%.
+        assert!((200..500).contains(&t), "threshold {t}");
+        // Zero-cost network: nothing to amortize, fixed default.
+        assert_eq!(adaptive_items(&NetConfig::zero(), 8), 1024);
+        // Pricier envelopes -> bigger batches.
+        let expensive = NetConfig { latency_us: 20.0, ..NetConfig::default() };
+        assert!(adaptive_items(&expensive, 8) > t);
+    }
+
+    #[test]
+    fn parse_spellings() {
+        assert_eq!(FlushPolicy::parse("unbatched"), Some(FlushPolicy::Unbatched));
+        assert_eq!(FlushPolicy::parse("naive"), Some(FlushPolicy::Unbatched));
+        assert_eq!(FlushPolicy::parse("adaptive"), Some(FlushPolicy::Adaptive));
+        assert_eq!(FlushPolicy::parse("manual"), Some(FlushPolicy::Manual));
+        assert_eq!(FlushPolicy::parse("items:64"), Some(FlushPolicy::Items(64)));
+        assert_eq!(FlushPolicy::parse("bytes:4096"), Some(FlushPolicy::Bytes(4096)));
+        assert_eq!(FlushPolicy::parse("items:x"), None);
+        assert_eq!(FlushPolicy::parse("warp"), None);
+    }
+
+    #[test]
+    fn batches_are_sorted_by_vertex() {
+        let r = ranges(&[0, 16]);
+        let mut agg = Aggregator::new(&r, 0, FlushPolicy::Manual, &NetConfig::default(), 8, add);
+        for v in [9u32, 3, 12, 1] {
+            agg.accumulate(1, v, 1.0);
+        }
+        let out = agg.drain();
+        let vs: Vec<u32> = out[0].1.items.iter().map(|&(v, _)| v).collect();
+        assert_eq!(vs, vec![1, 3, 9, 12]);
+    }
+
+    #[test]
+    fn stats_conservation_invariant() {
+        let r = ranges(&[8, 8]);
+        let mut agg = Aggregator::new(&r, 0, FlushPolicy::Items(4), &NetConfig::zero(), 8, add);
+        let mut shipped = 0u64;
+        for i in 0..37u32 {
+            if let Some(b) = agg.accumulate(1, 8 + (i % 8), 1.0) {
+                shipped += b.len() as u64;
+            }
+        }
+        let s = *agg.stats();
+        assert_eq!(s.sent_items, shipped);
+        assert_eq!(s.items, s.folded + s.sent_items + agg.pending() as u64);
+    }
+}

@@ -1,5 +1,6 @@
 //! Run reports and timing helpers for the simulated runtime and benches.
 
+use super::aggregate::AggStats;
 use super::net::NetStats;
 
 /// Outcome of one simulated run: the modeled makespan plus the quantities
@@ -21,6 +22,11 @@ pub struct SimReport {
     pub net: NetStats,
     /// Traffic broken down by source locality.
     pub per_locality_net: Vec<NetStats>,
+    /// Application-level message-aggregation accounting
+    /// ([`amt::aggregate`](super::aggregate)). The engine itself knows
+    /// nothing about combiners, so this starts empty and algorithm drivers
+    /// merge their actors' [`AggStats`] in after the run.
+    pub agg: AggStats,
 }
 
 impl SimReport {
@@ -138,6 +144,7 @@ mod tests {
             events: 0,
             net: NetStats::default(),
             per_locality_net: vec![],
+            agg: AggStats::default(),
         };
         assert!((r.mean_busy_us() - 75.0).abs() < 1e-12);
         assert!((r.load_imbalance() - 100.0 / 75.0).abs() < 1e-12);
@@ -154,6 +161,7 @@ mod tests {
             events: 0,
             net: NetStats::default(),
             per_locality_net: vec![],
+            agg: AggStats::default(),
         };
         assert_eq!(r.load_imbalance(), 1.0);
         assert_eq!(r.utilization(), 1.0);

@@ -17,11 +17,18 @@
 //! * **[`executor`]** — real threaded parallel-for executors for
 //!   *intra*-locality parallelism (the paper's nodes have 64 cores),
 //!   including the `adaptive_core_chunk_size` policy of §6.
+//! * **[`aggregate`]** — runtime-level message aggregation: typed
+//!   per-destination combiners with pluggable flush policies
+//!   ([`FlushPolicy`]) and a fold hook for idempotent reductions. This is
+//!   the AM++-style coalescing layer every asynchronous algorithm routes
+//!   its remote actions through; the naive per-edge path survives only as
+//!   [`FlushPolicy::Unbatched`] for ablations.
 //!
 //! [`agas`] and [`partitioned_vector`] round out the HPX surface the
 //! algorithms program against.
 
 pub mod agas;
+pub mod aggregate;
 pub mod executor;
 pub mod metrics;
 pub mod net;
@@ -29,6 +36,7 @@ pub mod partitioned_vector;
 pub mod sim;
 
 pub use agas::{Agas, GlobalAddress};
+pub use aggregate::{AggStats, Aggregator, Batch, FlushPolicy};
 pub use executor::{ChunkPolicy, Executor};
 pub use metrics::SimReport;
 pub use net::{NetConfig, NetStats};

@@ -464,6 +464,7 @@ impl SimRuntime {
             events: events_processed,
             net: total_net,
             per_locality_net: net_stats,
+            agg: super::aggregate::AggStats::default(),
         };
         (actors, report)
     }

@@ -94,13 +94,15 @@ COMMANDS:
     pagerank    run one distributed PageRank (--engine async|async-naive|bsp|kernel)
     fig1        regenerate Figure 1 (BFS speedup sweep, HPX vs Boost/BSP)
     fig2        regenerate Figure 2 (PageRank sweep, HPX naive/opt vs Boost/BSP)
-    ablations   run the DESIGN.md ablation suite (A1 aggregation, A2 chunking)
+    ablations   run the DESIGN.md ablation suite (A1 aggregation, A2 chunking,
+                A4 amt::aggregate flush policies)
     info        print graph statistics for the configured generator
     help        show this message
 
 CONFIG OVERRIDES (key=value):
     scale, degree, generator (urand|urand-directed|kron), seed,
     localities (comma list), alpha, iterations, root, reps, aggregate,
+    flush_policy (unbatched|items:N|bytes:N|adaptive|manual),
     net.latency_us, net.bandwidth_gbps, net.send_cpu_us, net.recv_cpu_us,
     net.per_item_cpu_us, net.overhead_bytes, artifact_dir
 

@@ -7,7 +7,7 @@
 use std::collections::BTreeMap;
 use std::path::Path;
 
-use crate::amt::NetConfig;
+use crate::amt::{FlushPolicy, NetConfig};
 use crate::Result;
 
 /// Full experiment configuration.
@@ -35,6 +35,9 @@ pub struct Config {
     pub net: NetConfig,
     /// Aggregate same-destination sends per handler (optimized variant).
     pub aggregate: bool,
+    /// Flush policy for the `amt::aggregate` combiners in the asynchronous
+    /// engines (`unbatched`, `items:N`, `bytes:N`, `adaptive`, `manual`).
+    pub flush_policy: FlushPolicy,
     /// Artifact directory for the kernel path.
     pub artifact_dir: String,
 }
@@ -53,6 +56,7 @@ impl Default for Config {
             reps: 3,
             net: NetConfig::default(),
             aggregate: false,
+            flush_policy: FlushPolicy::Adaptive,
             artifact_dir: "artifacts".into(),
         }
     }
@@ -95,6 +99,13 @@ impl Config {
                 "root" => c.root = v.parse()?,
                 "reps" => c.reps = v.parse()?,
                 "aggregate" => c.aggregate = v.parse()?,
+                "flush_policy" => {
+                    c.flush_policy = FlushPolicy::parse(v).ok_or_else(|| {
+                        anyhow::anyhow!(
+                            "bad flush_policy `{v}` (want unbatched|items:N|bytes:N|adaptive|manual)"
+                        )
+                    })?;
+                }
                 "artifact_dir" => c.artifact_dir = v.clone(),
                 "net.latency_us" => c.net.latency_us = v.parse()?,
                 "net.bandwidth_gbps" => {
@@ -171,6 +182,16 @@ mod tests {
     fn unknown_key_is_an_error() {
         let mut kv = BTreeMap::new();
         kv.insert("scle".into(), "10".into());
+        assert!(Config::from_kv(&kv).is_err());
+    }
+
+    #[test]
+    fn flush_policy_parses_and_rejects() {
+        let mut kv = BTreeMap::new();
+        kv.insert("flush_policy".into(), "items:256".into());
+        let c = Config::from_kv(&kv).unwrap();
+        assert_eq!(c.flush_policy, FlushPolicy::Items(256));
+        kv.insert("flush_policy".into(), "warp".into());
         assert!(Config::from_kv(&kv).is_err());
     }
 

@@ -9,7 +9,7 @@ pub mod experiment;
 pub mod report;
 
 use crate::algorithms::{bfs, pagerank, pagerank::PrParams};
-use crate::amt::SimConfig;
+use crate::amt::{FlushPolicy, SimConfig};
 use crate::config::Config;
 use crate::graph::{DistGraph, Partition1D};
 use crate::Result;
@@ -57,7 +57,7 @@ pub fn run_bfs(cfg: &Config, p: u32, engine: Engine, validate: bool) -> Result<b
         ..SimConfig::default()
     };
     let res = match engine {
-        Engine::Async => bfs::async_hpx::run(&dist, cfg.root, sim),
+        Engine::Async => bfs::async_hpx::run_with_policy(&dist, cfg.root, cfg.flush_policy, sim),
         Engine::Bsp => bfs::level_sync::run(&dist, cfg.root, sim),
         Engine::DirOpt => bfs::direction_opt::run(&dist, cfg.root, sim),
         other => anyhow::bail!("engine {other:?} does not implement BFS"),
@@ -86,14 +86,9 @@ pub fn run_pagerank(
         ..SimConfig::default()
     };
     let res = match engine {
-        Engine::Async => pagerank::async_hpx::run(
-            &dist,
-            params,
-            pagerank::async_hpx::Variant::Optimized { flush_block: 1024 },
-            sim,
-        ),
+        Engine::Async => pagerank::async_hpx::run(&dist, params, cfg.flush_policy, sim),
         Engine::AsyncNaive => {
-            pagerank::async_hpx::run(&dist, params, pagerank::async_hpx::Variant::Naive, sim)
+            pagerank::async_hpx::run(&dist, params, FlushPolicy::Unbatched, sim)
         }
         Engine::Bsp => pagerank::bsp::run(&dist, params, sim),
         Engine::Kernel => {

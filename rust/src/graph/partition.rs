@@ -89,6 +89,12 @@ impl Partition1D {
         r.end - r.start
     }
 
+    /// Every locality's owned range, in locality order — the destination
+    /// layout handed to [`Aggregator::new`](crate::amt::Aggregator::new).
+    pub fn ranges(&self) -> Vec<std::ops::Range<usize>> {
+        (0..self.p()).map(|l| self.range_of(l)).collect()
+    }
+
     /// Max / mean owned-vertex count (vertex balance factor).
     pub fn vertex_imbalance(&self) -> f64 {
         let p = self.p();

@@ -6,17 +6,25 @@
 //!
 //! * **[`amt`]** — an HPX-equivalent asynchronous many-task substrate: a
 //!   discrete-event simulated multi-locality runtime (latency/bandwidth
-//!   interconnect model, barriers, message aggregation), plus real threaded
-//!   work-stealing executors with static / dynamic / adaptive chunking for
-//!   intra-locality parallel loops, an AGAS-style address resolver and an
-//!   `hpx::partitioned_vector` equivalent.
+//!   interconnect model, barriers), the [`amt::aggregate`] message
+//!   coalescing layer (typed per-destination combiners with pluggable
+//!   flush policies — unbatched / by-items / by-bytes / cost-model
+//!   adaptive / drain-at-quiescence — and fold hooks for idempotent
+//!   reductions) that every asynchronous algorithm routes remote actions
+//!   through, plus real threaded work-stealing executors with static /
+//!   dynamic / adaptive chunking for intra-locality parallel loops, an
+//!   AGAS-style address resolver and an `hpx::partitioned_vector`
+//!   equivalent.
 //! * **[`graph`]** — an NWGraph-equivalent library: CSR adjacency, edge
 //!   lists, GAP-style generators (`urand`, RMAT/Kronecker, structured),
 //!   1-D block partitioning and distributed shards (CSR + masked-ELL).
 //! * **[`algorithms`]** — the paper's two algorithms in both execution
 //!   models (asynchronous HPX-style and BSP/PBGL-style), plus the
 //!   future-work extensions (§6): delta-stepping SSSP, connected
-//!   components, triangle counting.
+//!   components, triangle counting. Async BFS/PageRank/SSSP aggregate via
+//!   [`amt::FlushPolicy`] (the naive per-edge path survives only as
+//!   `FlushPolicy::Unbatched`); BSP SSSP/CC drain their combiners once
+//!   per superstep.
 //! * **[`runtime`]** — PJRT wrapper loading the AOT-lowered Pallas/JAX
 //!   compute kernels (`artifacts/*.hlo.txt`) for the kernel-offloaded
 //!   PageRank / BFS local phases. Python never runs on this path.

@@ -98,6 +98,7 @@ fn real_main() -> Result<()> {
         "ablations" => {
             print!("{}", experiment::ablation_aggregation(&cfg)?.render());
             print!("{}", experiment::ablation_adaptive_chunk(&cfg)?.render());
+            print!("{}", experiment::ablation_flush_policy(&cfg)?.render());
             print!("{}", experiment::extensions(&cfg)?.render());
         }
         "info" => {

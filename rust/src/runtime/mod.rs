@@ -6,151 +6,247 @@
 //! client, and cached; the PageRank/BFS kernel variants call
 //! [`Engine::pagerank_step`] / [`Engine::bfs_level`] from the simulated
 //! localities' compute phases. Python never runs on this path.
+//!
+//! The `xla` crate is not available in the offline build image, so the
+//! real engine is gated behind the `xla` cargo feature. Without it,
+//! [`Engine`] keeps the same API but `Engine::load` always fails with a
+//! clear message — the kernel tests and examples detect the missing
+//! artifacts/engine and skip.
 
 pub mod artifact;
-
-use std::collections::HashMap;
-use std::path::Path;
 
 use crate::Result;
 pub use artifact::{ArtifactSpec, Manifest};
 
-/// A compiled-executable cache over the artifact manifest.
-pub struct Engine {
-    client: xla::PjRtClient,
-    manifest: Manifest,
-    cache: HashMap<String, xla::PjRtLoadedExecutable>,
-}
+#[cfg(feature = "xla")]
+pub use pjrt::Engine;
+#[cfg(not(feature = "xla"))]
+pub use stub::Engine;
 
-impl Engine {
-    /// Create a CPU PJRT engine over `artifact_dir`.
-    pub fn load(artifact_dir: impl AsRef<Path>) -> Result<Engine> {
-        let client = xla::PjRtClient::cpu().map_err(to_anyhow)?;
-        let manifest = Manifest::load(artifact_dir)?;
-        Ok(Engine { client, manifest, cache: HashMap::new() })
+#[cfg(feature = "xla")]
+mod pjrt {
+    use std::collections::HashMap;
+    use std::path::Path;
+
+    use super::{ArtifactSpec, Manifest};
+    use crate::Result;
+
+    /// A compiled-executable cache over the artifact manifest.
+    pub struct Engine {
+        client: xla::PjRtClient,
+        manifest: Manifest,
+        cache: HashMap<String, xla::PjRtLoadedExecutable>,
     }
 
-    /// The manifest in use.
-    pub fn manifest(&self) -> &Manifest {
-        &self.manifest
-    }
-
-    /// PJRT platform name (diagnostics).
-    pub fn platform(&self) -> String {
-        self.client.platform_name()
-    }
-
-    fn executable(&mut self, spec: &ArtifactSpec) -> Result<&xla::PjRtLoadedExecutable> {
-        if !self.cache.contains_key(&spec.file) {
-            let path = self.manifest.path_of(spec);
-            let proto = xla::HloModuleProto::from_text_file(&path).map_err(to_anyhow)?;
-            let comp = xla::XlaComputation::from_proto(&proto);
-            let exe = self.client.compile(&comp).map_err(to_anyhow)?;
-            self.cache.insert(spec.file.clone(), exe);
+    impl Engine {
+        /// Create a CPU PJRT engine over `artifact_dir`.
+        pub fn load(artifact_dir: impl AsRef<Path>) -> Result<Engine> {
+            let client = xla::PjRtClient::cpu().map_err(to_anyhow)?;
+            let manifest = Manifest::load(artifact_dir)?;
+            Ok(Engine { client, manifest, cache: HashMap::new() })
         }
-        Ok(&self.cache[&spec.file])
+
+        /// The manifest in use.
+        pub fn manifest(&self) -> &Manifest {
+            &self.manifest
+        }
+
+        /// PJRT platform name (diagnostics).
+        pub fn platform(&self) -> String {
+            self.client.platform_name()
+        }
+
+        fn executable(&mut self, spec: &ArtifactSpec) -> Result<&xla::PjRtLoadedExecutable> {
+            if !self.cache.contains_key(&spec.file) {
+                let path = self.manifest.path_of(spec);
+                let proto = xla::HloModuleProto::from_text_file(&path).map_err(to_anyhow)?;
+                let comp = xla::XlaComputation::from_proto(&proto);
+                let exe = self.client.compile(&comp).map_err(to_anyhow)?;
+                self.cache.insert(spec.file.clone(), exe);
+            }
+            Ok(&self.cache[&spec.file])
+        }
+
+        /// Pick + compile the best artifact for `kind` covering the given
+        /// shard geometry. Returns the chosen spec.
+        pub fn prepare(
+            &mut self,
+            kind: &str,
+            n_global: usize,
+            n_rows: usize,
+        ) -> Result<ArtifactSpec> {
+            let spec = self
+                .manifest
+                .pick(kind, n_global, n_rows)
+                .ok_or_else(|| {
+                    anyhow::anyhow!(
+                        "no {kind} artifact covers n_global={n_global}, n_rows={n_rows}; \
+                         re-run `make artifacts` with a larger shape registry"
+                    )
+                })?
+                .clone();
+            self.executable(&spec)?;
+            Ok(spec)
+        }
+
+        /// One local PageRank rank-update on the AOT module:
+        /// inputs must already be padded to `spec` shapes
+        /// (`contrib: f32[n_global]`, `rank_old: f32[n_rows]`,
+        /// `cols: i32[n_rows * max_deg]`, `mask: f32[n_rows * max_deg]`,
+        /// `row_map: i32[n_rows]` mapping virtual rows to owned rows).
+        /// Returns `(rank_new: f32[n_rows], l1_delta)`.
+        #[allow(clippy::too_many_arguments)]
+        pub fn pagerank_step(
+            &mut self,
+            spec: &ArtifactSpec,
+            contrib: &[f32],
+            rank_old: &[f32],
+            cols: &[i32],
+            mask: &[f32],
+            row_map: &[i32],
+            base: f32,
+            alpha: f32,
+        ) -> Result<(Vec<f32>, f32)> {
+            debug_assert_eq!(contrib.len(), spec.n_global);
+            debug_assert_eq!(rank_old.len(), spec.n_rows);
+            debug_assert_eq!(cols.len(), spec.n_rows * spec.max_deg);
+            debug_assert_eq!(mask.len(), cols.len());
+            debug_assert_eq!(row_map.len(), spec.n_rows);
+            let r = spec.n_rows as i64;
+            let d = spec.max_deg as i64;
+            let args = [
+                xla::Literal::vec1(contrib),
+                xla::Literal::vec1(rank_old),
+                xla::Literal::vec1(cols).reshape(&[r, d]).map_err(to_anyhow)?,
+                xla::Literal::vec1(mask).reshape(&[r, d]).map_err(to_anyhow)?,
+                xla::Literal::vec1(row_map),
+                xla::Literal::vec1(&[base]),
+                xla::Literal::vec1(&[alpha]),
+            ];
+            let exe = self.executable(spec)?;
+            let result = exe.execute::<xla::Literal>(&args).map_err(to_anyhow)?[0][0]
+                .to_literal_sync()
+                .map_err(to_anyhow)?;
+            let parts = result.to_tuple().map_err(to_anyhow)?;
+            anyhow::ensure!(parts.len() == 2, "pagerank artifact returned {} outputs", parts.len());
+            let mut it = parts.into_iter();
+            let rank_new = it.next().unwrap().to_vec::<f32>().map_err(to_anyhow)?;
+            let delta = it.next().unwrap().to_vec::<f32>().map_err(to_anyhow)?[0];
+            Ok((rank_new, delta))
+        }
+
+        /// One local BFS level expansion on the AOT module. Shapes as in
+        /// [`Engine::pagerank_step`] with `frontier: f32[n_global]`,
+        /// `visited: f32[n_rows]`. Returns `(next_frontier, parents)` over
+        /// the padded rows.
+        pub fn bfs_level(
+            &mut self,
+            spec: &ArtifactSpec,
+            frontier: &[f32],
+            visited: &[f32],
+            cols: &[i32],
+            mask: &[f32],
+        ) -> Result<(Vec<f32>, Vec<i32>)> {
+            debug_assert_eq!(frontier.len(), spec.n_global);
+            debug_assert_eq!(visited.len(), spec.n_rows);
+            let r = spec.n_rows as i64;
+            let d = spec.max_deg as i64;
+            let args = [
+                xla::Literal::vec1(frontier),
+                xla::Literal::vec1(visited),
+                xla::Literal::vec1(cols).reshape(&[r, d]).map_err(to_anyhow)?,
+                xla::Literal::vec1(mask).reshape(&[r, d]).map_err(to_anyhow)?,
+            ];
+            let exe = self.executable(spec)?;
+            let result = exe.execute::<xla::Literal>(&args).map_err(to_anyhow)?[0][0]
+                .to_literal_sync()
+                .map_err(to_anyhow)?;
+            let parts = result.to_tuple().map_err(to_anyhow)?;
+            anyhow::ensure!(parts.len() == 2, "bfs artifact returned {} outputs", parts.len());
+            let mut it = parts.into_iter();
+            let next = it.next().unwrap().to_vec::<f32>().map_err(to_anyhow)?;
+            let parents = it.next().unwrap().to_vec::<i32>().map_err(to_anyhow)?;
+            Ok((next, parents))
+        }
     }
 
-    /// Pick + compile the best artifact for `kind` covering the given
-    /// shard geometry. Returns the chosen spec.
-    pub fn prepare(&mut self, kind: &str, n_global: usize, n_rows: usize) -> Result<ArtifactSpec> {
-        let spec = self
-            .manifest
-            .pick(kind, n_global, n_rows)
-            .ok_or_else(|| {
-                anyhow::anyhow!(
-                    "no {kind} artifact covers n_global={n_global}, n_rows={n_rows}; \
-                     re-run `make artifacts` with a larger shape registry"
-                )
-            })?
-            .clone();
-        self.executable(&spec)?;
-        Ok(spec)
-    }
-
-    /// One local PageRank rank-update on the AOT module:
-    /// inputs must already be padded to `spec` shapes
-    /// (`contrib: f32[n_global]`, `rank_old: f32[n_rows]`,
-    /// `cols: i32[n_rows * max_deg]`, `mask: f32[n_rows * max_deg]`,
-    /// `row_map: i32[n_rows]` mapping virtual rows to owned rows).
-    /// Returns `(rank_new: f32[n_rows], l1_delta)`.
-    #[allow(clippy::too_many_arguments)]
-    pub fn pagerank_step(
-        &mut self,
-        spec: &ArtifactSpec,
-        contrib: &[f32],
-        rank_old: &[f32],
-        cols: &[i32],
-        mask: &[f32],
-        row_map: &[i32],
-        base: f32,
-        alpha: f32,
-    ) -> Result<(Vec<f32>, f32)> {
-        debug_assert_eq!(contrib.len(), spec.n_global);
-        debug_assert_eq!(rank_old.len(), spec.n_rows);
-        debug_assert_eq!(cols.len(), spec.n_rows * spec.max_deg);
-        debug_assert_eq!(mask.len(), cols.len());
-        debug_assert_eq!(row_map.len(), spec.n_rows);
-        let r = spec.n_rows as i64;
-        let d = spec.max_deg as i64;
-        let args = [
-            xla::Literal::vec1(contrib),
-            xla::Literal::vec1(rank_old),
-            xla::Literal::vec1(cols).reshape(&[r, d]).map_err(to_anyhow)?,
-            xla::Literal::vec1(mask).reshape(&[r, d]).map_err(to_anyhow)?,
-            xla::Literal::vec1(row_map),
-            xla::Literal::vec1(&[base]),
-            xla::Literal::vec1(&[alpha]),
-        ];
-        let exe = self.executable(spec)?;
-        let result = exe.execute::<xla::Literal>(&args).map_err(to_anyhow)?[0][0]
-            .to_literal_sync()
-            .map_err(to_anyhow)?;
-        let parts = result.to_tuple().map_err(to_anyhow)?;
-        anyhow::ensure!(parts.len() == 2, "pagerank artifact returned {} outputs", parts.len());
-        let mut it = parts.into_iter();
-        let rank_new = it.next().unwrap().to_vec::<f32>().map_err(to_anyhow)?;
-        let delta = it.next().unwrap().to_vec::<f32>().map_err(to_anyhow)?[0];
-        Ok((rank_new, delta))
-    }
-
-    /// One local BFS level expansion on the AOT module. Shapes as in
-    /// [`Engine::pagerank_step`] with `frontier: f32[n_global]`,
-    /// `visited: f32[n_rows]`. Returns `(next_frontier, parents)` over the
-    /// padded rows.
-    pub fn bfs_level(
-        &mut self,
-        spec: &ArtifactSpec,
-        frontier: &[f32],
-        visited: &[f32],
-        cols: &[i32],
-        mask: &[f32],
-    ) -> Result<(Vec<f32>, Vec<i32>)> {
-        debug_assert_eq!(frontier.len(), spec.n_global);
-        debug_assert_eq!(visited.len(), spec.n_rows);
-        let r = spec.n_rows as i64;
-        let d = spec.max_deg as i64;
-        let args = [
-            xla::Literal::vec1(frontier),
-            xla::Literal::vec1(visited),
-            xla::Literal::vec1(cols).reshape(&[r, d]).map_err(to_anyhow)?,
-            xla::Literal::vec1(mask).reshape(&[r, d]).map_err(to_anyhow)?,
-        ];
-        let exe = self.executable(spec)?;
-        let result = exe.execute::<xla::Literal>(&args).map_err(to_anyhow)?[0][0]
-            .to_literal_sync()
-            .map_err(to_anyhow)?;
-        let parts = result.to_tuple().map_err(to_anyhow)?;
-        anyhow::ensure!(parts.len() == 2, "bfs artifact returned {} outputs", parts.len());
-        let mut it = parts.into_iter();
-        let next = it.next().unwrap().to_vec::<f32>().map_err(to_anyhow)?;
-        let parents = it.next().unwrap().to_vec::<i32>().map_err(to_anyhow)?;
-        Ok((next, parents))
+    fn to_anyhow(e: xla::Error) -> anyhow::Error {
+        anyhow::anyhow!("xla: {e}")
     }
 }
 
-fn to_anyhow(e: xla::Error) -> anyhow::Error {
-    anyhow::anyhow!("xla: {e}")
+#[cfg(not(feature = "xla"))]
+mod stub {
+    use std::convert::Infallible;
+    use std::path::Path;
+
+    use super::{ArtifactSpec, Manifest};
+    use crate::Result;
+
+    /// API-compatible stand-in for the PJRT engine when the `xla` feature
+    /// is off. It can never be constructed ([`Engine::load`] always errs),
+    /// so every method body is statically unreachable.
+    pub struct Engine {
+        void: Infallible,
+    }
+
+    impl Engine {
+        /// Always fails: the PJRT path needs the `xla` feature.
+        pub fn load(_artifact_dir: impl AsRef<Path>) -> Result<Engine> {
+            anyhow::bail!(
+                "built without the `xla` feature: the PJRT kernel path is \
+                 unavailable (rebuild with `--features xla` and the xla crate)"
+            )
+        }
+
+        /// The manifest in use.
+        pub fn manifest(&self) -> &Manifest {
+            match self.void {}
+        }
+
+        /// PJRT platform name (diagnostics).
+        pub fn platform(&self) -> String {
+            match self.void {}
+        }
+
+        /// See the `xla`-enabled engine.
+        pub fn prepare(
+            &mut self,
+            _kind: &str,
+            _n_global: usize,
+            _n_rows: usize,
+        ) -> Result<ArtifactSpec> {
+            match self.void {}
+        }
+
+        /// See the `xla`-enabled engine.
+        #[allow(clippy::too_many_arguments)]
+        pub fn pagerank_step(
+            &mut self,
+            _spec: &ArtifactSpec,
+            _contrib: &[f32],
+            _rank_old: &[f32],
+            _cols: &[i32],
+            _mask: &[f32],
+            _row_map: &[i32],
+            _base: f32,
+            _alpha: f32,
+        ) -> Result<(Vec<f32>, f32)> {
+            match self.void {}
+        }
+
+        /// See the `xla`-enabled engine.
+        pub fn bfs_level(
+            &mut self,
+            _spec: &ArtifactSpec,
+            _frontier: &[f32],
+            _visited: &[f32],
+            _cols: &[i32],
+            _mask: &[f32],
+        ) -> Result<(Vec<f32>, Vec<i32>)> {
+            match self.void {}
+        }
+    }
 }
 
 #[cfg(test)]

@@ -5,7 +5,7 @@
 //! with the sequential oracles and the runtime invariants hold.
 
 use nwgraph_hpx::algorithms::{bfs, cc, pagerank, pagerank::PrParams, sssp, triangle};
-use nwgraph_hpx::amt::{NetConfig, SimConfig};
+use nwgraph_hpx::amt::{FlushPolicy, NetConfig, SimConfig};
 use nwgraph_hpx::graph::{generators, Csr, DistGraph, Partition1D};
 use nwgraph_hpx::testing::{forall, gen, PropConfig};
 
@@ -15,6 +15,18 @@ fn det() -> SimConfig {
 
 fn cfg(cases: u32) -> PropConfig {
     PropConfig { cases, seed: 0xDEADBEEF, max_size: 48 }
+}
+
+/// Draw a flush policy uniformly from the interesting corners of the
+/// policy space (used by the cross-model agreement properties).
+fn gen_policy(rng: &mut generators::SplitMix64) -> FlushPolicy {
+    match rng.below(5) {
+        0 => FlushPolicy::Unbatched,
+        1 => FlushPolicy::Items(1 + rng.below(64) as usize),
+        2 => FlushPolicy::Bytes(8 + rng.below(1024) as usize),
+        3 => FlushPolicy::Adaptive,
+        _ => FlushPolicy::Manual,
+    }
 }
 
 #[test]
@@ -107,21 +119,11 @@ fn prop_pagerank_engines_agree_with_oracle() {
                 ("bsp", pagerank::bsp::run(&dist, params, det())),
                 (
                     "naive",
-                    pagerank::async_hpx::run(
-                        &dist,
-                        params,
-                        pagerank::async_hpx::Variant::Naive,
-                        det(),
-                    ),
+                    pagerank::async_hpx::run(&dist, params, FlushPolicy::Unbatched, det()),
                 ),
                 (
                     "opt",
-                    pagerank::async_hpx::run(
-                        &dist,
-                        params,
-                        pagerank::async_hpx::Variant::Optimized { flush_block: 7 },
-                        det(),
-                    ),
+                    pagerank::async_hpx::run(&dist, params, FlushPolicy::Items(7), det()),
                 ),
             ] {
                 let diff = pagerank::max_abs_diff(&res.ranks, &want);
@@ -250,6 +252,76 @@ fn prop_results_independent_of_partition_count() {
                 if diff > 1e-5 {
                     return Err(format!("p={p}: diff {diff}"));
                 }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_async_aggregated_bfs_levels_match_bsp_and_sequential() {
+    // The cross-model agreement property: for random digraph-shaped
+    // undirected graphs, random locality counts in [1, 8], and a random
+    // flush policy, the aggregated asynchronous (level-correcting) BFS,
+    // the BSP level-sync BFS, and the sequential oracle all produce the
+    // same per-vertex levels.
+    forall(
+        &cfg(64),
+        |rng, size| {
+            let g = gen::ugraph(rng, size);
+            let p = gen::locality_count(rng, size);
+            let root = rng.below(g.n() as u64) as u32;
+            let policy = gen_policy(rng);
+            (g, p, root, policy)
+        },
+        |(g, p, root, policy)| {
+            let dist = DistGraph::block(g, *p);
+            let want = bfs::sequential::distances(g, *root);
+
+            let async_res = bfs::async_hpx::run_with_policy(&dist, *root, *policy, det());
+            bfs::validate_parents(g, *root, &async_res.parents)?;
+            let async_lv = bfs::tree_levels(*root, &async_res.parents);
+            if async_lv != want {
+                return Err(format!("async[{policy:?}] levels != sequential"));
+            }
+
+            let bsp_res = bfs::level_sync::run(&dist, *root, det());
+            let bsp_lv = bfs::tree_levels(*root, &bsp_res.parents);
+            if bsp_lv != want {
+                return Err("bsp levels != sequential".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_async_aggregated_pagerank_matches_sequential() {
+    // Aggregation is a performance knob: for random digraphs, locality
+    // counts in [1, 8], and random flush policies, asynchronous PageRank
+    // ranks must match the sequential oracle within tolerance.
+    let params = PrParams { alpha: 0.85, iterations: 10 };
+    forall(
+        &cfg(64),
+        |rng, size| {
+            let g = gen::digraph(rng, size);
+            let p = gen::locality_count(rng, size);
+            let policy = gen_policy(rng);
+            (g, p, policy)
+        },
+        |(g, p, policy)| {
+            let dist = DistGraph::block(g, *p);
+            let want = pagerank::sequential::pagerank(g, params);
+            let res = pagerank::async_hpx::run(&dist, params, *policy, det());
+            let diff = pagerank::max_abs_diff(&res.ranks, &want);
+            if diff > 1e-4 {
+                return Err(format!("{policy:?}: diff {diff}"));
+            }
+            // Nothing the combiners absorbed may be lost: per-iteration
+            // drains mean every folded or shipped item is accounted for.
+            let agg = res.report.agg;
+            if agg.items != agg.folded + agg.sent_items {
+                return Err(format!("aggregation leak: {agg:?}"));
             }
             Ok(())
         },

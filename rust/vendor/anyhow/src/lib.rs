@@ -1,0 +1,150 @@
+//! Vendored, offline stand-in for the `anyhow` crate.
+//!
+//! The build environment has no crates.io access, so this crate provides
+//! the (small) subset of anyhow's API the workspace actually uses:
+//! [`Error`], [`Result`], and the [`anyhow!`], [`bail!`] and [`ensure!`]
+//! macros. Like the real crate, [`Error`] deliberately does **not**
+//! implement `std::error::Error` so the blanket `From` conversion below
+//! can exist; `?` works on any `std::error::Error + Send + Sync` source.
+
+use std::error::Error as StdError;
+use std::fmt;
+
+/// A type-erased error, convertible from any standard error.
+pub struct Error(Box<dyn StdError + Send + Sync + 'static>);
+
+impl Error {
+    /// Create an error from a displayable message.
+    pub fn msg<M>(message: M) -> Error
+    where
+        M: fmt::Display + fmt::Debug + Send + Sync + 'static,
+    {
+        Error(Box::new(MessageError(message)))
+    }
+
+    /// Wrap a standard error.
+    pub fn new<E>(error: E) -> Error
+    where
+        E: StdError + Send + Sync + 'static,
+    {
+        Error(Box::new(error))
+    }
+
+    /// Borrow the underlying error.
+    pub fn as_dyn(&self) -> &(dyn StdError + 'static) {
+        &*self.0
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        fmt::Display::fmt(&self.0, f)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        fmt::Display::fmt(&self.0, f)
+    }
+}
+
+impl<E> From<E> for Error
+where
+    E: StdError + Send + Sync + 'static,
+{
+    fn from(error: E) -> Error {
+        Error::new(error)
+    }
+}
+
+struct MessageError<M>(M);
+
+impl<M: fmt::Display> fmt::Display for MessageError<M> {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        fmt::Display::fmt(&self.0, f)
+    }
+}
+
+impl<M: fmt::Debug> fmt::Debug for MessageError<M> {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        fmt::Debug::fmt(&self.0, f)
+    }
+}
+
+impl<M: fmt::Display + fmt::Debug> StdError for MessageError<M> {}
+
+/// `Result<T, anyhow::Error>` with the error type defaulted.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Construct an [`Error`] from a message or format string.
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(format!($msg))
+    };
+    ($fmt:expr, $($arg:tt)*) => {
+        $crate::Error::msg(format!($fmt, $($arg)*))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg(format!("{}", $err))
+    };
+}
+
+/// Return early with an [`Error`].
+#[macro_export]
+macro_rules! bail {
+    ($($tt:tt)*) => {
+        return Err($crate::anyhow!($($tt)*))
+    };
+}
+
+/// Return early with an [`Error`] unless the condition holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr, $($tt:tt)*) => {
+        if !($cond) {
+            return Err($crate::anyhow!($($tt)*));
+        }
+    };
+    ($cond:expr $(,)?) => {
+        if !($cond) {
+            return Err($crate::anyhow!(concat!("condition failed: ", stringify!($cond))));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Result<u32> {
+        let v: u32 = s.parse()?; // std error converts via the blanket From
+        ensure!(v < 100, "{v} too large");
+        Ok(v)
+    }
+
+    #[test]
+    fn question_mark_and_ensure() {
+        assert_eq!(parse("42").unwrap(), 42);
+        assert!(parse("nope").is_err());
+        assert_eq!(parse("500").unwrap_err().to_string(), "500 too large");
+    }
+
+    #[test]
+    fn bail_and_formatting() {
+        fn f(flag: bool) -> Result<()> {
+            if flag {
+                bail!("failed with {}", 7);
+            }
+            Ok(())
+        }
+        assert!(f(false).is_ok());
+        assert_eq!(f(true).unwrap_err().to_string(), "failed with 7");
+    }
+
+    #[test]
+    fn debug_shows_message() {
+        let e = anyhow!("boom");
+        assert_eq!(format!("{e:?}"), "boom");
+    }
+}
