@@ -9,6 +9,10 @@
 //! * **A4** — `amt::aggregate` flush policies on asynchronous PageRank:
 //!   the naive-vs-aggregated axis (envelope counts, fold factor, accuracy)
 //!   on both a uniform and a skewed (RMAT) graph.
+//! * **A5** — delta-stepping SSSP: Δ sweep × flush policy (Δ=∞ ≡
+//!   Bellman-Ford, Δ→0 ≡ Dijkstra-like) with relaxation counters, against
+//!   async label-correcting and BSP reference rows, on a uniform and a
+//!   skewed (RMAT) graph.
 //!
 //! `cargo bench --bench ablations`
 
@@ -77,4 +81,15 @@ fn main() {
     print!("{}", experiment::ablation_flush_policy(&cfg4).expect("A4 failed").render());
     cfg4.generator = "kron".into();
     print!("{}", experiment::ablation_flush_policy(&cfg4).expect("A4 failed").render());
+
+    // A5: delta-stepping delta x flush-policy sweep on uniform and skewed
+    // weighted graphs (weights are attached inside the experiment).
+    let mut cfg5 = Config::default();
+    cfg5.scale = 12;
+    cfg5.degree = 8;
+    cfg5.reps = reps;
+    cfg5.localities = vec![8];
+    print!("{}", experiment::ablation_delta_stepping(&cfg5).expect("A5 failed").render());
+    cfg5.generator = "kron".into();
+    print!("{}", experiment::ablation_delta_stepping(&cfg5).expect("A5 failed").render());
 }

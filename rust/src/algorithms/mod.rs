@@ -12,7 +12,9 @@
 //! [`bfs`] and [`pagerank`] are the paper's two evaluated algorithms
 //! (Figures 1 and 2); [`sssp`], [`cc`] and [`triangle`] are the §6
 //! future-work extensions ("broaden the scope of algorithms ... traversal,
-//! centrality, and pattern-matching").
+//! centrality, and pattern-matching"). SSSP additionally ships a third
+//! execution model — delta-stepping with distributed bucket coordination
+//! ([`sssp::delta`]) — the ordered middle ground between the two styles.
 
 pub mod bfs;
 pub mod cc;

@@ -1,0 +1,148 @@
+//! Asynchronous label-correcting SSSP (the natural HPX formulation).
+//!
+//! An improved tentative distance triggers eager remote relaxations;
+//! termination is network quiescence. Remote relaxations route through the
+//! shared [`Aggregator`] min-fold, flushed by the configured
+//! [`FlushPolicy`] and drained at handler end.
+
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
+
+use crate::amt::aggregate::{Aggregator, Batch, FlushPolicy};
+use crate::amt::sim::{Actor, Ctx, LocalityId, Message, SimConfig, SimRuntime};
+use crate::amt::WorkStats;
+use crate::graph::{Csr, DistGraph, Partition1D, VertexId};
+
+use super::{min_f32, SsspResult, WeightedShard, ITEM_BYTES};
+
+/// A flushed combiner of relaxations: `(vertex, best proposed distance)`.
+#[derive(Debug, Clone)]
+pub struct RelaxBatch(pub Batch<f32>);
+
+impl Message for RelaxBatch {
+    fn wire_bytes(&self) -> usize {
+        self.0.wire_bytes()
+    }
+
+    fn item_count(&self) -> usize {
+        self.0.len()
+    }
+}
+
+/// Asynchronous label-correcting SSSP actor.
+struct AsyncSsspActor {
+    shard: WeightedShard,
+    partition: Partition1D,
+    source: VertexId,
+    /// Owned tentative distances.
+    dist: Vec<f32>,
+    /// Best distance already *sent* per remote vertex — legitimate local
+    /// knowledge (our own send history) that prunes the label-correcting
+    /// flood: re-sending a no-better relaxation is pure waste.
+    best_sent: Vec<f32>,
+    /// Remote-relaxation combiner (shared aggregation subsystem).
+    agg: Aggregator<f32>,
+    /// Relaxation counters (total edge proposals / strict improvements).
+    work: WorkStats,
+}
+
+impl AsyncSsspActor {
+    /// Cascade a relaxation through the local shard in (approximate)
+    /// priority order — a per-locality Dijkstra wavefront, the standard
+    /// trick that keeps unordered label-correcting from re-relaxing
+    /// whole subtrees (re-relaxation factor drops from O(diameter) to
+    /// ~1 on random weights).
+    fn relax_from(&mut self, ctx: &mut Ctx<RelaxBatch>, v: VertexId, d: f32) {
+        let here = ctx.locality();
+        let mut heap: BinaryHeap<Reverse<(u32, VertexId)>> = BinaryHeap::new();
+        heap.push(Reverse((d.to_bits(), v)));
+        while let Some(Reverse((db, u))) = heap.pop() {
+            let du = f32::from_bits(db);
+            let lu = u as usize - self.shard.range.start;
+            if du >= self.dist[lu] {
+                continue;
+            }
+            self.dist[lu] = du;
+            self.work.useful_relaxations += 1;
+            for (w, wt) in self.shard.edges(lu) {
+                self.work.relaxations += 1;
+                let nd = du + wt;
+                let dst = self.partition.owner(w);
+                if dst == here {
+                    if nd < self.dist[w as usize - self.shard.range.start] {
+                        heap.push(Reverse((nd.to_bits(), w)));
+                    }
+                } else if nd < self.best_sent[w as usize] {
+                    self.best_sent[w as usize] = nd;
+                    if let Some(batch) = self.agg.accumulate(dst, w, nd) {
+                        ctx.send(dst, RelaxBatch(batch));
+                    }
+                }
+            }
+        }
+    }
+
+    fn drain(&mut self, ctx: &mut Ctx<RelaxBatch>) {
+        for (dst, batch) in self.agg.drain() {
+            ctx.send(dst, RelaxBatch(batch));
+        }
+    }
+}
+
+impl Actor for AsyncSsspActor {
+    type Msg = RelaxBatch;
+
+    fn on_start(&mut self, ctx: &mut Ctx<RelaxBatch>) {
+        if self.partition.owner(self.source) == ctx.locality() {
+            let s = self.source;
+            self.relax_from(ctx, s, 0.0);
+            self.drain(ctx);
+        }
+    }
+
+    fn on_message(&mut self, ctx: &mut Ctx<RelaxBatch>, _from: LocalityId, msg: RelaxBatch) {
+        for (v, d) in msg.0.items {
+            self.relax_from(ctx, v, d);
+        }
+        self.drain(ctx);
+    }
+}
+
+/// Run asynchronous label-correcting SSSP with the default
+/// [`FlushPolicy::Adaptive`] aggregation.
+pub fn run_async(g: &Csr, dist_graph: &DistGraph, source: VertexId, cfg: SimConfig) -> SsspResult {
+    run_async_with(g, dist_graph, source, FlushPolicy::Adaptive, cfg)
+}
+
+/// Run asynchronous label-correcting SSSP with an explicit flush policy.
+pub fn run_async_with(
+    g: &Csr,
+    dist_graph: &DistGraph,
+    source: VertexId,
+    policy: FlushPolicy,
+    cfg: SimConfig,
+) -> SsspResult {
+    let p = dist_graph.p();
+    let ranges = dist_graph.partition.ranges();
+    let actors: Vec<AsyncSsspActor> = (0..p)
+        .map(|l| AsyncSsspActor {
+            shard: WeightedShard::build(g, &dist_graph.partition, l),
+            partition: dist_graph.partition.clone(),
+            source,
+            dist: vec![f32::INFINITY; dist_graph.partition.len_of(l)],
+            best_sent: vec![f32::INFINITY; dist_graph.n()],
+            agg: Aggregator::new(&ranges, l, policy, &cfg.net, ITEM_BYTES, min_f32),
+            work: WorkStats::default(),
+        })
+        .collect();
+    let (actors, mut report) = SimRuntime::new(cfg).run(actors);
+    for a in &actors {
+        report.agg.merge(a.agg.stats());
+        report.work.merge(&a.work);
+    }
+    let mut dist = vec![f32::INFINITY; dist_graph.n()];
+    for a in &actors {
+        dist[a.shard.range.clone()].copy_from_slice(&a.dist);
+    }
+    SsspResult { dist, report }
+}

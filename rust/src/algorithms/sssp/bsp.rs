@@ -1,0 +1,205 @@
+//! BSP Bellman-Ford-style SSSP: relax the active set each superstep.
+//!
+//! The PBGL/Boost baseline style: supersteps, per-superstep combiner
+//! drains (maximal batching via [`FlushPolicy::Manual`]), and a
+//! coordinator-driven termination reduction.
+
+use crate::amt::aggregate::{Aggregator, Batch, FlushPolicy};
+use crate::amt::sim::{Actor, Ctx, LocalityId, Message, SimConfig, SimRuntime};
+use crate::amt::WorkStats;
+use crate::graph::{Csr, DistGraph, Partition1D, VertexId};
+
+use super::{min_f32, SsspResult, WeightedShard, ITEM_BYTES};
+
+/// BSP SSSP messages.
+#[derive(Debug, Clone)]
+pub enum BspSsspMsg {
+    /// Batched relaxations (one folded min per destination vertex).
+    Relaxations(Batch<f32>),
+    /// Activity count for the termination reduction.
+    Count(u64),
+    /// Coordinator verdict.
+    Continue(bool),
+}
+
+impl Message for BspSsspMsg {
+    fn wire_bytes(&self) -> usize {
+        match self {
+            BspSsspMsg::Relaxations(b) => b.wire_bytes(),
+            BspSsspMsg::Count(_) => 8,
+            BspSsspMsg::Continue(_) => 1,
+        }
+    }
+
+    fn item_count(&self) -> usize {
+        match self {
+            BspSsspMsg::Relaxations(b) => b.len(),
+            _ => 1,
+        }
+    }
+}
+
+#[derive(PartialEq)]
+enum Phase {
+    AfterRelax,
+    AwaitDecision,
+}
+
+/// BSP Bellman-Ford-style actor: relax the active set each superstep.
+struct BspSsspActor {
+    shard: WeightedShard,
+    partition: Partition1D,
+    source: VertexId,
+    dist: Vec<f32>,
+    active: Vec<VertexId>,
+    /// O(1) membership test for `active` (local index space).
+    in_active: Vec<bool>,
+    inbox: Vec<(VertexId, f32)>,
+    counts_seen: u32,
+    counts_sum: u64,
+    continue_flag: bool,
+    phase: Phase,
+    /// Superstep combiner: folded mins, drained once per round.
+    agg: Aggregator<f32>,
+    /// Relaxation counters (total edge proposals / strict improvements).
+    work: WorkStats,
+}
+
+impl BspSsspActor {
+    fn relax_round(&mut self, ctx: &mut Ctx<BspSsspMsg>) {
+        let here = ctx.locality();
+        let mut activity = 0u64;
+        let mut next: Vec<VertexId> = Vec::new();
+        let active = std::mem::take(&mut self.active);
+        for &u in &active {
+            self.in_active[u as usize - self.shard.range.start] = false;
+        }
+        for &u in &active {
+            let lu = u as usize - self.shard.range.start;
+            let du = self.dist[lu];
+            for (w, wt) in self.shard.edges(lu) {
+                self.work.relaxations += 1;
+                let nd = du + wt;
+                let dst = self.partition.owner(w);
+                if dst == here {
+                    let lw = w as usize - self.shard.range.start;
+                    if nd < self.dist[lw] {
+                        self.dist[lw] = nd;
+                        self.work.useful_relaxations += 1;
+                        if !self.in_active[lw] {
+                            self.in_active[lw] = true;
+                            next.push(w);
+                        }
+                        activity += 1;
+                    }
+                } else {
+                    // Manual policy: accumulate never auto-flushes.
+                    if let Some(batch) = self.agg.accumulate(dst, w, nd) {
+                        ctx.send(dst, BspSsspMsg::Relaxations(batch));
+                    }
+                    activity += 1;
+                }
+            }
+        }
+        self.active = next;
+        for (dst, batch) in self.agg.drain() {
+            ctx.send(dst, BspSsspMsg::Relaxations(batch));
+        }
+        ctx.send(0, BspSsspMsg::Count(activity));
+        self.phase = Phase::AfterRelax;
+        ctx.request_barrier();
+    }
+}
+
+impl Actor for BspSsspActor {
+    type Msg = BspSsspMsg;
+
+    fn on_start(&mut self, ctx: &mut Ctx<BspSsspMsg>) {
+        if self.partition.owner(self.source) == ctx.locality() {
+            let ls = self.source as usize - self.shard.range.start;
+            self.dist[ls] = 0.0;
+            self.in_active[ls] = true;
+            self.active.push(self.source);
+        }
+        self.relax_round(ctx);
+    }
+
+    fn on_message(&mut self, _ctx: &mut Ctx<BspSsspMsg>, _from: LocalityId, msg: BspSsspMsg) {
+        match msg {
+            BspSsspMsg::Relaxations(batch) => self.inbox.extend(batch.items),
+            BspSsspMsg::Count(c) => {
+                self.counts_seen += 1;
+                self.counts_sum += c;
+            }
+            BspSsspMsg::Continue(b) => self.continue_flag = b,
+        }
+    }
+
+    fn on_barrier(&mut self, ctx: &mut Ctx<BspSsspMsg>, _epoch: u64) {
+        match self.phase {
+            Phase::AfterRelax => {
+                let inbox = std::mem::take(&mut self.inbox);
+                for (v, d) in inbox {
+                    let lv = v as usize - self.shard.range.start;
+                    if d < self.dist[lv] {
+                        self.dist[lv] = d;
+                        self.work.useful_relaxations += 1;
+                        if !self.in_active[lv] {
+                            self.in_active[lv] = true;
+                            self.active.push(v);
+                        }
+                    }
+                }
+                if ctx.locality() == 0 {
+                    debug_assert_eq!(self.counts_seen, ctx.n_localities());
+                    let go = self.counts_sum > 0;
+                    self.counts_sum = 0;
+                    self.counts_seen = 0;
+                    for l in 0..ctx.n_localities() {
+                        ctx.send(l, BspSsspMsg::Continue(go));
+                    }
+                }
+                self.phase = Phase::AwaitDecision;
+                ctx.request_barrier();
+            }
+            Phase::AwaitDecision => {
+                if self.continue_flag {
+                    self.relax_round(ctx);
+                }
+            }
+        }
+    }
+}
+
+/// Run BSP Bellman-Ford-style SSSP (requires a weighted graph).
+pub fn run_bsp(g: &Csr, dist_graph: &DistGraph, source: VertexId, cfg: SimConfig) -> SsspResult {
+    let p = dist_graph.p();
+    let ranges = dist_graph.partition.ranges();
+    let actors: Vec<BspSsspActor> = (0..p)
+        .map(|l| BspSsspActor {
+            shard: WeightedShard::build(g, &dist_graph.partition, l),
+            partition: dist_graph.partition.clone(),
+            source,
+            dist: vec![f32::INFINITY; dist_graph.partition.len_of(l)],
+            active: Vec::new(),
+            in_active: vec![false; dist_graph.partition.len_of(l)],
+            inbox: Vec::new(),
+            counts_seen: 0,
+            counts_sum: 0,
+            continue_flag: false,
+            phase: Phase::AfterRelax,
+            agg: Aggregator::new(&ranges, l, FlushPolicy::Manual, &cfg.net, ITEM_BYTES, min_f32),
+            work: WorkStats::default(),
+        })
+        .collect();
+    let (actors, mut report) = SimRuntime::new(cfg).run(actors);
+    for a in &actors {
+        report.agg.merge(a.agg.stats());
+        report.work.merge(&a.work);
+    }
+    let mut dist = vec![f32::INFINITY; dist_graph.n()];
+    for a in &actors {
+        dist[a.shard.range.clone()].copy_from_slice(&a.dist);
+    }
+    SsspResult { dist, report }
+}

@@ -1,0 +1,554 @@
+//! Delta-stepping SSSP with distributed bucket coordination.
+//!
+//! # Algorithm
+//!
+//! Meyer & Sanders' delta-stepping organizes relaxations by *priority
+//! bucket*: vertex `v` with tentative distance `d` lives in bucket
+//! `floor(d / Δ)`. Edges are split at graph-load time into **light**
+//! (`w <= Δ`) and **heavy** (`w > Δ`) sets. Buckets are processed in
+//! order; bucket `k` is first drained through its light edges — an inner
+//! re-relaxation loop, because light relaxations can re-insert vertices
+//! into bucket `k` — and only once the light fixpoint is reached are the
+//! settled vertices' heavy edges relaxed (each heavy proposal necessarily
+//! lands in a strictly later bucket, so heavy edges are relaxed exactly
+//! once per settlement). `Δ = ∞` makes every edge light and a single
+//! bucket: the schedule degenerates to round-synchronous Bellman-Ford,
+//! matching the [`bsp`](super::bsp) engine's relaxing rounds exactly
+//! (identical per-round active sets, relaxation totals, and combiner
+//! envelope counts; barrier counts agree up to the engines' differing
+//! terminal handshakes). `Δ → 0` gives one distance class per bucket:
+//! Dijkstra-like ordering with near-minimal relaxation counts.
+//!
+//! # Distributed current-bucket barrier
+//!
+//! Each locality keeps its own bucket array over its owned vertices; the
+//! *current* bucket index is a global agreement maintained through the
+//! runtime's barriers. One phase round is:
+//!
+//! 1. **work** — every locality drains its current bucket (light phase)
+//!    or settled set (heavy phase). Local relaxations update buckets in
+//!    place; remote relaxations fold into the shared [`Aggregator`]
+//!    min-combiner, flushed by the configured [`FlushPolicy`] and drained
+//!    at round end. Arriving relaxations are applied eagerly on receipt.
+//! 2. **vote** — at the barrier (the network has drained, so every
+//!    relaxation of the round has been applied) each locality broadcasts
+//!    `(current bucket non-empty?, min non-empty bucket)` to all
+//!    localities — an all-to-all status exchange.
+//! 3. **decide** — at the next barrier every locality folds the P votes
+//!    with the same pure function, so all reach the identical verdict with
+//!    no coordinator round-trip: repeat the light phase (someone still
+//!    holds current-bucket vertices), enter the heavy phase (light
+//!    fixpoint reached), advance to the globally minimal non-empty bucket,
+//!    or terminate (all buckets empty — no locality requests another
+//!    barrier and the run quiesces).
+//!
+//! # Δ heuristic
+//!
+//! [`auto_delta`] picks `Δ = w̄ / d̄` (mean edge weight over mean degree) —
+//! the Meyer–Sanders `Θ(1/d̄)` rule scaled to the weight distribution. On
+//! GAP-style weights bounded away from zero this typically classifies
+//! every edge heavy, i.e. bucket-Dijkstra with near-minimal relaxation
+//! counts, which is exactly the work-efficiency contrast against the
+//! chaotic label-correcting engine the "Anatomy" analysis predicts. The
+//! `sssp_delta` config key overrides it.
+
+use std::collections::BTreeMap;
+
+use crate::amt::aggregate::{Aggregator, Batch, FlushPolicy};
+use crate::amt::sim::{Actor, Ctx, LocalityId, Message, SimConfig, SimRuntime};
+use crate::amt::WorkStats;
+use crate::graph::{Csr, DistGraph, Partition1D, VertexId};
+
+use super::{min_f32, SsspResult, ITEM_BYTES};
+
+/// `in_bucket` sentinel: the vertex is not queued in any bucket.
+const NOT_QUEUED: u64 = u64::MAX;
+
+/// Bucket index of a (finite, non-negative) tentative distance.
+fn bucket_of(d: f32, delta: f32) -> u64 {
+    if delta.is_infinite() {
+        return 0;
+    }
+    // f32 -> u64 casts saturate; clamp below the NOT_QUEUED sentinel.
+    ((d / delta) as u64).min(NOT_QUEUED - 1)
+}
+
+/// Δ auto-tuning heuristic: mean edge weight over mean degree (see the
+/// module docs). Returns `f32::INFINITY` (≡ Bellman-Ford, a safe single
+/// bucket) for empty or degenerate graphs.
+pub fn auto_delta(g: &Csr) -> f32 {
+    let (n, m) = (g.n(), g.m());
+    if n == 0 || m == 0 {
+        return f32::INFINITY;
+    }
+    let avg_deg = m as f32 / n as f32;
+    let avg_w = if g.is_weighted() {
+        let mut sum = 0.0f64;
+        for u in 0..n as VertexId {
+            for (_, w) in g.neighbors_weighted(u) {
+                sum += w as f64;
+            }
+        }
+        (sum / m as f64) as f32
+    } else {
+        1.0
+    };
+    let d = avg_w / avg_deg;
+    if d.is_finite() && d > 0.0 {
+        d
+    } else {
+        f32::INFINITY
+    }
+}
+
+/// Delta-stepping messages.
+#[derive(Debug, Clone)]
+pub enum DeltaMsg {
+    /// Batched relaxations (one folded min per destination vertex).
+    Relaxations(Batch<f32>),
+    /// One locality's bucket status, broadcast all-to-all at the vote
+    /// barrier (see module docs).
+    Status {
+        /// The current bucket still holds vertices here.
+        nonempty_current: bool,
+        /// Smallest non-empty bucket here (`None` = all empty).
+        min_bucket: Option<u64>,
+    },
+}
+
+impl Message for DeltaMsg {
+    fn wire_bytes(&self) -> usize {
+        match self {
+            DeltaMsg::Relaxations(b) => b.wire_bytes(),
+            DeltaMsg::Status { .. } => 16,
+        }
+    }
+
+    fn item_count(&self) -> usize {
+        match self {
+            DeltaMsg::Relaxations(b) => b.len(),
+            DeltaMsg::Status { .. } => 1,
+        }
+    }
+}
+
+/// Weighted shard with light/heavy edge separation done once at build
+/// time (targets are global ids, rows are owned-local indices).
+struct DeltaShard {
+    range: std::ops::Range<usize>,
+    light_offsets: Vec<usize>,
+    light_targets: Vec<VertexId>,
+    light_weights: Vec<f32>,
+    heavy_offsets: Vec<usize>,
+    heavy_targets: Vec<VertexId>,
+    heavy_weights: Vec<f32>,
+}
+
+impl DeltaShard {
+    fn build(g: &Csr, partition: &Partition1D, l: LocalityId, delta: f32) -> Self {
+        let range = partition.range_of(l);
+        let mut s = DeltaShard {
+            range: range.clone(),
+            light_offsets: vec![0],
+            light_targets: Vec::new(),
+            light_weights: Vec::new(),
+            heavy_offsets: vec![0],
+            heavy_targets: Vec::new(),
+            heavy_weights: Vec::new(),
+        };
+        for v in range {
+            if g.is_weighted() {
+                for (t, w) in g.neighbors_weighted(v as VertexId) {
+                    s.push_edge(t, w, delta);
+                }
+            } else {
+                // Unweighted graphs get unit weights (SSSP == hop count).
+                for &t in g.neighbors(v as VertexId) {
+                    s.push_edge(t, 1.0, delta);
+                }
+            }
+            s.light_offsets.push(s.light_targets.len());
+            s.heavy_offsets.push(s.heavy_targets.len());
+        }
+        s
+    }
+
+    fn push_edge(&mut self, t: VertexId, w: f32, delta: f32) {
+        if w <= delta {
+            self.light_targets.push(t);
+            self.light_weights.push(w);
+        } else {
+            self.heavy_targets.push(t);
+            self.heavy_weights.push(w);
+        }
+    }
+
+    fn light_edges(&self, local: usize) -> impl Iterator<Item = (VertexId, f32)> + '_ {
+        let r = self.light_offsets[local]..self.light_offsets[local + 1];
+        self.light_targets[r.clone()].iter().cloned().zip(self.light_weights[r].iter().cloned())
+    }
+
+    fn heavy_edges(&self, local: usize) -> impl Iterator<Item = (VertexId, f32)> + '_ {
+        let r = self.heavy_offsets[local]..self.heavy_offsets[local + 1];
+        self.heavy_targets[r.clone()].iter().cloned().zip(self.heavy_weights[r].iter().cloned())
+    }
+}
+
+/// Which edge class the next work round relaxes.
+enum Mode {
+    Light,
+    Heavy,
+}
+
+/// Barrier-protocol step (see module docs: work → vote → decide).
+enum Step {
+    AwaitVote,
+    AwaitDecision,
+}
+
+/// Per-locality delta-stepping actor.
+struct DeltaSsspActor {
+    shard: DeltaShard,
+    partition: Partition1D,
+    source: VertexId,
+    delta: f32,
+    /// Owned tentative distances.
+    dist: Vec<f32>,
+    /// Bucket index → queued owned-local vertices. Sparse (`BTreeMap`) so
+    /// tiny Δ cannot blow up memory; entries may go stale when a vertex
+    /// moves buckets (`in_bucket` is the source of truth).
+    buckets: BTreeMap<u64, Vec<u32>>,
+    /// Owned-local vertex → bucket it is queued in ([`NOT_QUEUED`] = none).
+    in_bucket: Vec<u64>,
+    /// Vertices settled during the current bucket's light phase, awaiting
+    /// their one heavy relaxation.
+    req: Vec<u32>,
+    in_req: Vec<bool>,
+    /// Globally agreed current bucket.
+    current: u64,
+    mode: Mode,
+    step: Step,
+    /// Vote fold: any locality's current bucket non-empty.
+    votes_nonempty: bool,
+    /// Vote fold: global min non-empty bucket.
+    votes_min: Option<u64>,
+    votes_seen: u32,
+    /// Remote-relaxation combiner (shared aggregation subsystem).
+    agg: Aggregator<f32>,
+    /// Relaxation counters (total edge proposals / strict improvements).
+    work: WorkStats,
+}
+
+impl DeltaSsspActor {
+    /// One light round: take the current bucket's members, settle them
+    /// into `req`, and relax their light edges. Local re-insertions into
+    /// the current bucket are processed next round (round-synchronous, so
+    /// `Δ = ∞` reproduces the BSP Bellman-Ford schedule exactly).
+    fn light_round(&mut self, ctx: &mut Ctx<DeltaMsg>) {
+        let here = ctx.locality();
+        let members = self.buckets.remove(&self.current).unwrap_or_default();
+        for &lv32 in &members {
+            let lv = lv32 as usize;
+            if self.in_bucket[lv] != self.current {
+                continue; // stale entry: the vertex moved buckets
+            }
+            self.in_bucket[lv] = NOT_QUEUED;
+            if !self.in_req[lv] {
+                self.in_req[lv] = true;
+                self.req.push(lv32);
+            }
+            let du = self.dist[lv];
+            for (w, wt) in self.shard.light_edges(lv) {
+                self.work.relaxations += 1;
+                let nd = du + wt;
+                let dst = self.partition.owner(w);
+                if dst == here {
+                    let lw = w as usize - self.shard.range.start;
+                    if nd < self.dist[lw] {
+                        self.dist[lw] = nd;
+                        self.work.useful_relaxations += 1;
+                        let b = bucket_of(nd, self.delta);
+                        if self.in_bucket[lw] != b {
+                            self.in_bucket[lw] = b;
+                            self.buckets.entry(b).or_default().push(lw as u32);
+                        }
+                    }
+                } else if let Some(batch) = self.agg.accumulate(dst, w, nd) {
+                    ctx.send(dst, DeltaMsg::Relaxations(batch));
+                }
+            }
+        }
+    }
+
+    /// The heavy round: relax the heavy edges of everything settled in
+    /// the current bucket, exactly once, at their final distances.
+    fn heavy_round(&mut self, ctx: &mut Ctx<DeltaMsg>) {
+        let here = ctx.locality();
+        let req = std::mem::take(&mut self.req);
+        for &lv32 in &req {
+            let lv = lv32 as usize;
+            self.in_req[lv] = false;
+            let du = self.dist[lv];
+            for (w, wt) in self.shard.heavy_edges(lv) {
+                self.work.relaxations += 1;
+                let nd = du + wt;
+                let dst = self.partition.owner(w);
+                if dst == here {
+                    let lw = w as usize - self.shard.range.start;
+                    if nd < self.dist[lw] {
+                        self.dist[lw] = nd;
+                        self.work.useful_relaxations += 1;
+                        let b = bucket_of(nd, self.delta);
+                        if self.in_bucket[lw] != b {
+                            self.in_bucket[lw] = b;
+                            self.buckets.entry(b).or_default().push(lw as u32);
+                        }
+                    }
+                } else if let Some(batch) = self.agg.accumulate(dst, w, nd) {
+                    ctx.send(dst, DeltaMsg::Relaxations(batch));
+                }
+            }
+        }
+    }
+
+    fn work_round(&mut self, ctx: &mut Ctx<DeltaMsg>) {
+        match self.mode {
+            Mode::Light => self.light_round(ctx),
+            Mode::Heavy => self.heavy_round(ctx),
+        }
+        for (dst, batch) in self.agg.drain() {
+            ctx.send(dst, DeltaMsg::Relaxations(batch));
+        }
+        self.step = Step::AwaitVote;
+        ctx.request_barrier();
+    }
+}
+
+impl Actor for DeltaSsspActor {
+    type Msg = DeltaMsg;
+
+    fn on_start(&mut self, ctx: &mut Ctx<DeltaMsg>) {
+        if self.partition.owner(self.source) == ctx.locality() {
+            let ls = self.source as usize - self.shard.range.start;
+            self.dist[ls] = 0.0;
+            self.in_bucket[ls] = 0;
+            self.buckets.entry(0).or_default().push(ls as u32);
+        }
+        self.work_round(ctx);
+    }
+
+    fn on_message(&mut self, _ctx: &mut Ctx<DeltaMsg>, _from: LocalityId, msg: DeltaMsg) {
+        match msg {
+            // Relaxations are applied eagerly: by the time the vote
+            // barrier fires the network has drained, so every locality
+            // votes on the complete post-round state.
+            DeltaMsg::Relaxations(batch) => {
+                for (v, d) in batch.items {
+                    let lv = v as usize - self.shard.range.start;
+                    if d < self.dist[lv] {
+                        self.dist[lv] = d;
+                        self.work.useful_relaxations += 1;
+                        let b = bucket_of(d, self.delta);
+                        if self.in_bucket[lv] != b {
+                            self.in_bucket[lv] = b;
+                            self.buckets.entry(b).or_default().push(lv as u32);
+                        }
+                    }
+                }
+            }
+            DeltaMsg::Status { nonempty_current, min_bucket } => {
+                self.votes_seen += 1;
+                self.votes_nonempty |= nonempty_current;
+                self.votes_min = match (self.votes_min, min_bucket) {
+                    (Some(a), Some(b)) => Some(a.min(b)),
+                    (a, b) => a.or(b),
+                };
+            }
+        }
+    }
+
+    fn on_barrier(&mut self, ctx: &mut Ctx<DeltaMsg>, _epoch: u64) {
+        match self.step {
+            Step::AwaitVote => {
+                // Drop stale bucket entries so emptiness votes are exact.
+                let in_bucket = &self.in_bucket;
+                self.buckets.retain(|&b, v| {
+                    v.retain(|&lv| in_bucket[lv as usize] == b);
+                    !v.is_empty()
+                });
+                let status = DeltaMsg::Status {
+                    nonempty_current: self.buckets.contains_key(&self.current),
+                    min_bucket: self.buckets.keys().next().copied(),
+                };
+                for l in 0..ctx.n_localities() {
+                    ctx.send(l, status.clone());
+                }
+                self.step = Step::AwaitDecision;
+                ctx.request_barrier();
+            }
+            Step::AwaitDecision => {
+                // All P votes are in; every locality folds them with the
+                // same pure function and reaches the identical verdict.
+                debug_assert_eq!(self.votes_seen, ctx.n_localities());
+                let nonempty = self.votes_nonempty;
+                let min_b = self.votes_min;
+                self.votes_seen = 0;
+                self.votes_nonempty = false;
+                self.votes_min = None;
+                match self.mode {
+                    Mode::Light if nonempty => self.work_round(ctx),
+                    Mode::Light => {
+                        self.mode = Mode::Heavy;
+                        self.work_round(ctx);
+                    }
+                    Mode::Heavy => match min_b {
+                        Some(k) => {
+                            self.current = k;
+                            self.mode = Mode::Light;
+                            self.work_round(ctx);
+                        }
+                        // Every bucket everywhere is empty and the network
+                        // is quiet: no one requests another barrier and
+                        // the run terminates at quiescence.
+                        None => {}
+                    },
+                }
+            }
+        }
+    }
+}
+
+/// Run delta-stepping SSSP with the [`auto_delta`] heuristic and the
+/// default [`FlushPolicy::Adaptive`] aggregation.
+pub fn run(g: &Csr, dist_graph: &DistGraph, source: VertexId, cfg: SimConfig) -> SsspResult {
+    let delta = auto_delta(g);
+    run_with(g, dist_graph, source, delta, FlushPolicy::Adaptive, cfg)
+}
+
+/// Run delta-stepping SSSP with an explicit Δ and flush policy.
+/// `delta` must be positive (`f32::INFINITY` ≡ Bellman-Ford).
+pub fn run_with(
+    g: &Csr,
+    dist_graph: &DistGraph,
+    source: VertexId,
+    delta: f32,
+    policy: FlushPolicy,
+    cfg: SimConfig,
+) -> SsspResult {
+    assert!(delta > 0.0, "delta must be positive (f32::INFINITY = Bellman-Ford), got {delta}");
+    let p = dist_graph.p();
+    let ranges = dist_graph.partition.ranges();
+    let actors: Vec<DeltaSsspActor> = (0..p)
+        .map(|l| DeltaSsspActor {
+            shard: DeltaShard::build(g, &dist_graph.partition, l, delta),
+            partition: dist_graph.partition.clone(),
+            source,
+            delta,
+            dist: vec![f32::INFINITY; dist_graph.partition.len_of(l)],
+            buckets: BTreeMap::new(),
+            in_bucket: vec![NOT_QUEUED; dist_graph.partition.len_of(l)],
+            req: Vec::new(),
+            in_req: vec![false; dist_graph.partition.len_of(l)],
+            current: 0,
+            mode: Mode::Light,
+            step: Step::AwaitVote,
+            votes_nonempty: false,
+            votes_min: None,
+            votes_seen: 0,
+            agg: Aggregator::new(&ranges, l, policy, &cfg.net, ITEM_BYTES, min_f32),
+            work: WorkStats::default(),
+        })
+        .collect();
+    let (actors, mut report) = SimRuntime::new(cfg).run(actors);
+    for a in &actors {
+        report.agg.merge(a.agg.stats());
+        report.work.merge(&a.work);
+    }
+    let mut dist = vec![f32::INFINITY; dist_graph.n()];
+    for a in &actors {
+        dist[a.shard.range.clone()].copy_from_slice(&a.dist);
+    }
+    SsspResult { dist, report }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::amt::NetConfig;
+    use crate::graph::generators;
+
+    fn det() -> SimConfig {
+        SimConfig::deterministic(NetConfig::default())
+    }
+
+    #[test]
+    fn bucket_of_is_monotone_and_saturates() {
+        assert_eq!(bucket_of(0.0, 0.5), 0);
+        assert_eq!(bucket_of(0.49, 0.5), 0);
+        assert_eq!(bucket_of(0.5, 0.5), 1);
+        assert_eq!(bucket_of(7.3, 0.5), 14);
+        assert_eq!(bucket_of(123.0, f32::INFINITY), 0);
+        // Saturating cast stays clear of the NOT_QUEUED sentinel.
+        assert_eq!(bucket_of(f32::MAX, 1e-30), NOT_QUEUED - 1);
+    }
+
+    #[test]
+    fn auto_delta_scales_with_weight_and_degree() {
+        let g = generators::with_random_weights(&generators::path(64), 2.0, 2.0 + 1e-6, 3);
+        // path: avg degree ~2, weights ~2 -> delta ~1.
+        let d = auto_delta(&g);
+        assert!(d > 0.5 && d < 2.0, "delta {d}");
+        // Unweighted graphs fall back to unit weights.
+        let du = auto_delta(&generators::path(64));
+        assert!(du > 0.25 && du < 1.0, "delta {du}");
+        // Degenerate graphs get the safe single-bucket delta.
+        assert_eq!(auto_delta(&Csr::from_edge_list(&crate::graph::EdgeList::new(0))), f32::INFINITY);
+    }
+
+    #[test]
+    fn light_heavy_split_covers_every_edge() {
+        let g = generators::with_random_weights(&generators::urand(6, 4, 9), 1.0, 10.0, 10);
+        let part = Partition1D::block(g.n(), 3);
+        let delta = 4.0f32;
+        let mut total = 0usize;
+        for l in 0..3 {
+            let s = DeltaShard::build(&g, &part, l, delta);
+            for lv in 0..part.len_of(l) {
+                for (_, w) in s.light_edges(lv) {
+                    assert!(w <= delta);
+                    total += 1;
+                }
+                for (_, w) in s.heavy_edges(lv) {
+                    assert!(w > delta);
+                    total += 1;
+                }
+            }
+        }
+        assert_eq!(total, g.m());
+    }
+
+    #[test]
+    #[should_panic(expected = "delta must be positive")]
+    fn zero_delta_is_rejected() {
+        let g = generators::with_random_weights(&generators::path(4), 1.0, 2.0, 1);
+        let d = DistGraph::block(&g, 2);
+        run_with(&g, &d, 0, 0.0, FlushPolicy::Adaptive, det());
+    }
+
+    #[test]
+    fn delta_run_auto_matches_oracle() {
+        let g = generators::with_random_weights(&generators::urand(7, 4, 21), 1.0, 10.0, 22);
+        let want = super::super::dijkstra(&g, 3);
+        for p in [1u32, 2, 4, 8] {
+            let d = DistGraph::block(&g, p);
+            let res = run(&g, &d, 3, det());
+            for v in 0..g.n() {
+                let (a, b) = (res.dist[v], want[v]);
+                assert!(
+                    (a.is_infinite() && b.is_infinite()) || (a - b).abs() < 1e-3,
+                    "p={p} dist[{v}]: {a} vs {b}"
+                );
+            }
+        }
+    }
+}

@@ -3,6 +3,44 @@
 use super::aggregate::AggStats;
 use super::net::NetStats;
 
+/// Algorithm-level work accounting: how many edge relaxations (or other
+/// per-edge update proposals) an engine executed and how many of them
+/// actually improved state. The Firoz et al. "Anatomy" line of work shows
+/// that *ordering* — chaotic label-correcting vs. delta-stepping buckets —
+/// is what separates distributed SSSP variants, and the separation shows up
+/// here, not in envelope counts: a work-inefficient engine performs many
+/// relaxations that never improve a tentative distance.
+///
+/// The engine itself knows nothing about relaxations; algorithm drivers
+/// merge their actors' counters into [`SimReport::work`] after the run,
+/// exactly like [`AggStats`].
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct WorkStats {
+    /// Update proposals executed (each scanned edge proposes one tentative
+    /// distance, whether or not it wins).
+    pub relaxations: u64,
+    /// Proposals that strictly improved the target's tentative value.
+    pub useful_relaxations: u64,
+}
+
+impl WorkStats {
+    /// Accumulate another stats block into this one.
+    pub fn merge(&mut self, other: &WorkStats) {
+        self.relaxations += other.relaxations;
+        self.useful_relaxations += other.useful_relaxations;
+    }
+
+    /// Useful fraction of the executed relaxations (1.0 == no wasted work;
+    /// an empty run counts as perfectly efficient).
+    pub fn efficiency(&self) -> f64 {
+        if self.relaxations == 0 {
+            1.0
+        } else {
+            self.useful_relaxations as f64 / self.relaxations as f64
+        }
+    }
+}
+
 /// Outcome of one simulated run: the modeled makespan plus the quantities
 /// the paper's analysis hinges on (per-locality busy time → load balance,
 /// barrier count → synchronization cost, traffic → communication overhead).
@@ -27,6 +65,9 @@ pub struct SimReport {
     /// nothing about combiners, so this starts empty and algorithm drivers
     /// merge their actors' [`AggStats`] in after the run.
     pub agg: AggStats,
+    /// Algorithm-level work accounting (relaxation counters). Starts empty;
+    /// algorithm drivers merge their actors' [`WorkStats`] in after the run.
+    pub work: WorkStats,
 }
 
 impl SimReport {
@@ -145,6 +186,7 @@ mod tests {
             net: NetStats::default(),
             per_locality_net: vec![],
             agg: AggStats::default(),
+            work: WorkStats::default(),
         };
         assert!((r.mean_busy_us() - 75.0).abs() < 1e-12);
         assert!((r.load_imbalance() - 100.0 / 75.0).abs() < 1e-12);
@@ -162,8 +204,20 @@ mod tests {
             net: NetStats::default(),
             per_locality_net: vec![],
             agg: AggStats::default(),
+            work: WorkStats::default(),
         };
         assert_eq!(r.load_imbalance(), 1.0);
         assert_eq!(r.utilization(), 1.0);
+    }
+
+    #[test]
+    fn work_stats_merge_and_efficiency() {
+        let mut w = WorkStats::default();
+        assert_eq!(w.efficiency(), 1.0);
+        w.merge(&WorkStats { relaxations: 8, useful_relaxations: 2 });
+        w.merge(&WorkStats { relaxations: 2, useful_relaxations: 3 });
+        assert_eq!(w.relaxations, 10);
+        assert_eq!(w.useful_relaxations, 5);
+        assert!((w.efficiency() - 0.5).abs() < 1e-12);
     }
 }

@@ -465,6 +465,7 @@ impl SimRuntime {
             net: total_net,
             per_locality_net: net_stats,
             agg: super::aggregate::AggStats::default(),
+            work: super::metrics::WorkStats::default(),
         };
         (actors, report)
     }

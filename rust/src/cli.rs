@@ -92,10 +92,13 @@ USAGE:
 COMMANDS:
     bfs         run one distributed BFS (--engine async|bsp|diropt)
     pagerank    run one distributed PageRank (--engine async|async-naive|bsp|kernel)
+    sssp        run one distributed SSSP (--engine delta|async|bsp); reports
+                relaxation counters (total vs useful)
     fig1        regenerate Figure 1 (BFS speedup sweep, HPX vs Boost/BSP)
     fig2        regenerate Figure 2 (PageRank sweep, HPX naive/opt vs Boost/BSP)
     ablations   run the DESIGN.md ablation suite (A1 aggregation, A2 chunking,
-                A4 amt::aggregate flush policies)
+                A4 amt::aggregate flush policies, A5 delta-stepping
+                delta x flush-policy sweep)
     info        print graph statistics for the configured generator
     help        show this message
 
@@ -103,6 +106,7 @@ CONFIG OVERRIDES (key=value):
     scale, degree, generator (urand|urand-directed|kron), seed,
     localities (comma list), alpha, iterations, root, reps, aggregate,
     flush_policy (unbatched|items:N|bytes:N|adaptive|manual),
+    sssp_delta (bucket width; 0 = auto w/d heuristic, inf = Bellman-Ford),
     net.latency_us, net.bandwidth_gbps, net.send_cpu_us, net.recv_cpu_us,
     net.per_item_cpu_us, net.overhead_bytes, artifact_dir
 

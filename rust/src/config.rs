@@ -38,6 +38,10 @@ pub struct Config {
     /// Flush policy for the `amt::aggregate` combiners in the asynchronous
     /// engines (`unbatched`, `items:N`, `bytes:N`, `adaptive`, `manual`).
     pub flush_policy: FlushPolicy,
+    /// Delta-stepping SSSP bucket width Δ. `0` (the default) auto-tunes via
+    /// [`sssp::auto_delta`](crate::algorithms::sssp::auto_delta) (mean
+    /// weight / mean degree); `inf` is accepted (≡ Bellman-Ford).
+    pub sssp_delta: f32,
     /// Artifact directory for the kernel path.
     pub artifact_dir: String,
 }
@@ -57,6 +61,7 @@ impl Default for Config {
             net: NetConfig::default(),
             aggregate: false,
             flush_policy: FlushPolicy::Adaptive,
+            sssp_delta: 0.0,
             artifact_dir: "artifacts".into(),
         }
     }
@@ -105,6 +110,14 @@ impl Config {
                             "bad flush_policy `{v}` (want unbatched|items:N|bytes:N|adaptive|manual)"
                         )
                     })?;
+                }
+                "sssp_delta" => {
+                    let d: f32 = v.parse()?;
+                    anyhow::ensure!(
+                        d >= 0.0 && !d.is_nan(),
+                        "sssp_delta must be >= 0 (0 = auto) or inf, got `{v}`"
+                    );
+                    c.sssp_delta = d;
                 }
                 "artifact_dir" => c.artifact_dir = v.clone(),
                 "net.latency_us" => c.net.latency_us = v.parse()?,
@@ -193,6 +206,21 @@ mod tests {
         assert_eq!(c.flush_policy, FlushPolicy::Items(256));
         kv.insert("flush_policy".into(), "warp".into());
         assert!(Config::from_kv(&kv).is_err());
+    }
+
+    #[test]
+    fn sssp_delta_parses_and_rejects() {
+        let mut kv = BTreeMap::new();
+        kv.insert("sssp_delta".into(), "0.5".into());
+        let c = Config::from_kv(&kv).unwrap();
+        assert_eq!(c.sssp_delta, 0.5);
+        kv.insert("sssp_delta".into(), "inf".into());
+        assert!(Config::from_kv(&kv).unwrap().sssp_delta.is_infinite());
+        kv.insert("sssp_delta".into(), "-1".into());
+        assert!(Config::from_kv(&kv).is_err());
+        kv.insert("sssp_delta".into(), "NaN".into());
+        assert!(Config::from_kv(&kv).is_err());
+        assert_eq!(Config::default().sssp_delta, 0.0, "default is auto");
     }
 
     #[test]

@@ -386,9 +386,10 @@ pub fn extensions(cfg: &Config) -> Result<Table> {
 
     let g = cfg.build_graph()?;
     let gw = generators::with_random_weights(&g, 1.0, 10.0, cfg.seed + 1);
+    let delta = if cfg.sssp_delta > 0.0 { cfg.sssp_delta } else { sssp::auto_delta(&gw) };
     let mut table = Table::new(
         format!("Extensions — SSSP / CC / triangles on {}", cfg.graph_name()),
-        &["nodes", "sssp-async", "sssp-bsp", "cc", "triangles"],
+        &["nodes", "sssp-async", "sssp-bsp", "sssp-delta", "cc", "triangles"],
     );
     for &p in &cfg.localities {
         let dist = DistGraph::build(&g, &Partition1D::block(g.n(), p));
@@ -396,15 +397,115 @@ pub fn extensions(cfg: &Config) -> Result<Table> {
         // under the HPX parcel-coalescing config like the async BFS.
         let s_async = sssp::run_async(&gw, &dist, cfg.root, hpx_cfg(&cfg.net));
         let s_bsp = sssp::run_bsp(&gw, &dist, cfg.root, sim_cfg(&cfg.net, false));
+        let s_delta = sssp::delta::run_with(
+            &gw,
+            &dist,
+            cfg.root,
+            delta,
+            cfg.flush_policy,
+            sim_cfg(&cfg.net, false),
+        );
         let c = cc::run(&dist, sim_cfg(&cfg.net, false));
         let t = triangle::run(&dist, sim_cfg(&cfg.net, false));
         table.row(vec![
             p.to_string(),
             fmt_us(s_async.report.makespan_us),
             fmt_us(s_bsp.report.makespan_us),
+            fmt_us(s_delta.report.makespan_us),
             fmt_us(c.report.makespan_us),
             fmt_us(t.report.makespan_us),
         ]);
     }
+    Ok(table)
+}
+
+/// Ablation A5: delta-stepping SSSP — Δ sweep × flush policy, with the
+/// asynchronous label-correcting and BSP Bellman-Ford engines as reference
+/// rows. Δ = ∞ is Bellman-Ford (one bucket, round-synchronous); a tiny Δ
+/// approaches Dijkstra's ordering (one distance class per bucket). Reports
+/// the [`WorkStats`](crate::amt::WorkStats) relaxation counters so the
+/// work-efficiency axis — ordered buckets vs. chaotic label-correcting —
+/// is measured directly, plus L∞ error vs the Dijkstra oracle.
+pub fn ablation_delta_stepping(cfg: &Config) -> Result<Table> {
+    use crate::algorithms::sssp;
+    use crate::graph::generators;
+
+    let g = cfg.build_graph()?;
+    let gw = generators::with_random_weights(&g, 1.0, 10.0, cfg.seed + 1);
+    let p = cfg.localities.iter().cloned().filter(|&x| x <= 8).max().unwrap_or(8);
+    let dist = DistGraph::build(&gw, &Partition1D::block(gw.n(), p));
+    let want = sssp::dijkstra(&gw, cfg.root);
+    let auto = if cfg.sssp_delta > 0.0 { cfg.sssp_delta } else { sssp::auto_delta(&gw) };
+    let deltas: Vec<(String, f32)> = vec![
+        (format!("{:.3} (Dijkstra-like)", auto / 8.0), auto / 8.0),
+        (format!("{auto:.3} (auto)"), auto),
+        (format!("{:.3}", auto * 8.0), auto * 8.0),
+        ("inf (Bellman-Ford)".into(), f32::INFINITY),
+    ];
+    let policies = [
+        ("unbatched", FlushPolicy::Unbatched),
+        ("adaptive", FlushPolicy::Adaptive),
+        ("manual", FlushPolicy::Manual),
+    ];
+    let mut table = Table::new(
+        format!(
+            "Ablation A5 — delta-stepping SSSP: delta x flush policy on {} ({} localities)",
+            cfg.graph_name(),
+            p
+        ),
+        &["engine", "delta", "policy", "best time", "envelopes", "relax", "useful",
+          "efficiency", "Linf vs dijkstra"],
+    );
+    let linf = |dist: &[f32]| {
+        dist.iter()
+            .zip(&want)
+            .map(|(a, b)| {
+                if a.is_infinite() && b.is_infinite() {
+                    0.0
+                } else {
+                    (a - b).abs()
+                }
+            })
+            .fold(0.0f32, f32::max)
+    };
+    let mut push = |engine: &str, dname: &str, pname: &str, best: &SimReport, err: f32| {
+        table.row(vec![
+            engine.to_string(),
+            dname.to_string(),
+            pname.to_string(),
+            fmt_us(best.makespan_us),
+            best.agg.envelopes.to_string(),
+            best.work.relaxations.to_string(),
+            best.work.useful_relaxations.to_string(),
+            format!("{:.2}", best.work.efficiency()),
+            format!("{err:.2e}"),
+        ]);
+    };
+    for (dname, dval) in &deltas {
+        for (pname, policy) in policies {
+            let mut best: Option<SimReport> = None;
+            let mut err = 0.0f32;
+            for _ in 0..cfg.reps.max(1) {
+                let r = sssp::delta::run_with(
+                    &gw,
+                    &dist,
+                    cfg.root,
+                    *dval,
+                    policy,
+                    sim_cfg(&cfg.net, false),
+                );
+                if best.as_ref().map(|b| r.report.makespan_us < b.makespan_us).unwrap_or(true) {
+                    err = linf(&r.dist);
+                    best = Some(r.report);
+                }
+            }
+            push("delta", dname, pname, &best.unwrap(), err);
+        }
+    }
+    // Reference rows: the unordered engines this ablation is judged against.
+    let r = sssp::run_async(&gw, &dist, cfg.root, sim_cfg(&cfg.net, false));
+    push("async", "-", "adaptive", &r.report, linf(&r.dist));
+    let r = sssp::run_bsp(&gw, &dist, cfg.root, sim_cfg(&cfg.net, false));
+    push("bsp", "-", "manual", &r.report, linf(&r.dist));
     Ok(table)
 }

@@ -26,6 +26,8 @@ pub enum Engine {
     AsyncNaive,
     /// BSP / distributed-BGL baseline.
     Bsp,
+    /// Delta-stepping with distributed bucket coordination (SSSP only).
+    Delta,
     /// Direction-optimizing BFS.
     DirOpt,
     /// Kernel-offloaded (PageRank only; needs artifacts).
@@ -39,6 +41,7 @@ impl Engine {
             "async" => Engine::Async,
             "async-naive" => Engine::AsyncNaive,
             "bsp" | "boost" => Engine::Bsp,
+            "delta" | "delta-stepping" => Engine::Delta,
             "diropt" => Engine::DirOpt,
             "kernel" => Engine::Kernel,
             other => anyhow::bail!("unknown engine `{other}`"),
@@ -107,6 +110,48 @@ pub fn run_pagerank(
     Ok(res)
 }
 
+/// Run a single distributed SSSP with the chosen engine; optionally
+/// validates against the Dijkstra oracle. Config graphs are unweighted, so
+/// GAP-style uniform random weights in `[1, 10)` are attached (seeded by
+/// `cfg.seed + 1`, like the extensions bench).
+pub fn run_sssp(
+    cfg: &Config,
+    p: u32,
+    engine: Engine,
+    validate: bool,
+) -> Result<crate::algorithms::sssp::SsspResult> {
+    use crate::algorithms::sssp;
+    use crate::graph::generators;
+
+    let g = cfg.build_graph()?;
+    let gw = generators::with_random_weights(&g, 1.0, 10.0, cfg.seed + 1);
+    let dist = DistGraph::build(&gw, &Partition1D::block(gw.n(), p));
+    let sim = SimConfig {
+        net: cfg.net.clone(),
+        aggregate_sends: cfg.aggregate,
+        ..SimConfig::default()
+    };
+    let res = match engine {
+        Engine::Async => sssp::run_async_with(&gw, &dist, cfg.root, cfg.flush_policy, sim),
+        Engine::Bsp => sssp::run_bsp(&gw, &dist, cfg.root, sim),
+        Engine::Delta => {
+            // auto_delta scans every edge weight; only pay for it here.
+            let delta =
+                if cfg.sssp_delta > 0.0 { cfg.sssp_delta } else { sssp::auto_delta(&gw) };
+            sssp::delta::run_with(&gw, &dist, cfg.root, delta, cfg.flush_policy, sim)
+        }
+        other => anyhow::bail!("engine {other:?} does not implement SSSP"),
+    };
+    if validate {
+        let want = sssp::dijkstra(&gw, cfg.root);
+        for (v, (got, exp)) in res.dist.iter().zip(&want).enumerate() {
+            let ok = (got.is_infinite() && exp.is_infinite()) || (got - exp).abs() < 1e-3;
+            anyhow::ensure!(ok, "SSSP validation failed at vertex {v}: {got} vs {exp}");
+        }
+    }
+    Ok(res)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -124,6 +169,8 @@ mod tests {
     fn engine_parse() {
         assert_eq!(Engine::parse("async").unwrap(), Engine::Async);
         assert_eq!(Engine::parse("boost").unwrap(), Engine::Bsp);
+        assert_eq!(Engine::parse("delta").unwrap(), Engine::Delta);
+        assert_eq!(Engine::parse("delta-stepping").unwrap(), Engine::Delta);
         assert!(Engine::parse("warp").is_err());
     }
 
@@ -148,5 +195,29 @@ mod tests {
     fn bfs_engine_rejects_kernel() {
         let cfg = tiny_cfg();
         assert!(run_bfs(&cfg, 2, Engine::Kernel, false).is_err());
+    }
+
+    #[test]
+    fn run_sssp_all_engines_validate() {
+        let cfg = tiny_cfg();
+        for e in [Engine::Async, Engine::Bsp, Engine::Delta] {
+            let res = run_sssp(&cfg, 3, e, true).unwrap();
+            assert!(res.report.work.relaxations > 0, "{e:?} counted no relaxations");
+        }
+    }
+
+    #[test]
+    fn run_sssp_honors_explicit_delta() {
+        let mut cfg = tiny_cfg();
+        cfg.sssp_delta = f32::INFINITY;
+        run_sssp(&cfg, 3, Engine::Delta, true).unwrap();
+        cfg.sssp_delta = 0.25;
+        run_sssp(&cfg, 3, Engine::Delta, true).unwrap();
+    }
+
+    #[test]
+    fn sssp_engine_rejects_diropt() {
+        let cfg = tiny_cfg();
+        assert!(run_sssp(&cfg, 2, Engine::DirOpt, false).is_err());
     }
 }

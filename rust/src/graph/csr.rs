@@ -14,7 +14,19 @@ pub struct Csr {
 
 impl Csr {
     /// Build from an edge list (sorts a copy; stable for duplicate edges).
+    ///
+    /// Weighted inputs must carry finite, non-negative weights: SSSP's
+    /// min-fold combiners ([`min_f32`](crate::algorithms::sssp)) rely on
+    /// `<` being a total order over every tentative distance, which holds
+    /// exactly when weights (and therefore path sums) are NaN-free and
+    /// non-negative. Checked here, at the single construction choke
+    /// point, in debug builds.
     pub fn from_edge_list(el: &EdgeList) -> Self {
+        debug_assert!(
+            el.weights.iter().all(|w| w.is_finite() && *w >= 0.0),
+            "edge weights must be finite and non-negative (SSSP min-folds \
+             assume a NaN-free total order on distances)"
+        );
         let n = el.n;
         let mut degree = vec![0usize; n];
         for &(u, _) in &el.edges {
@@ -190,5 +202,42 @@ mod tests {
         let g = Csr::from_edge_list(&EdgeList::new(0));
         assert_eq!(g.n(), 0);
         assert_eq!(g.m(), 0);
+    }
+
+    #[test]
+    fn zero_weights_are_allowed() {
+        let mut el = EdgeList::new(2);
+        el.push_weighted(0, 1, 0.0);
+        let g = Csr::from_edge_list(&el);
+        assert_eq!(g.neighbors_weighted(0).next(), Some((1, 0.0)));
+    }
+
+    // debug_assert-backed guards only exist in debug builds; the release
+    // CI job must not expect the panic.
+    #[cfg(debug_assertions)]
+    #[test]
+    #[should_panic(expected = "finite and non-negative")]
+    fn nan_weight_is_rejected_at_build() {
+        let mut el = EdgeList::new(2);
+        el.push_weighted(0, 1, f32::NAN);
+        let _ = Csr::from_edge_list(&el);
+    }
+
+    #[cfg(debug_assertions)]
+    #[test]
+    #[should_panic(expected = "finite and non-negative")]
+    fn negative_weight_is_rejected_at_build() {
+        let mut el = EdgeList::new(2);
+        el.push_weighted(0, 1, -1.5);
+        let _ = Csr::from_edge_list(&el);
+    }
+
+    #[cfg(debug_assertions)]
+    #[test]
+    #[should_panic(expected = "finite and non-negative")]
+    fn infinite_weight_is_rejected_at_build() {
+        let mut el = EdgeList::new(2);
+        el.push_weighted(0, 1, f32::INFINITY);
+        let _ = Csr::from_edge_list(&el);
     }
 }

@@ -79,6 +79,34 @@ fn real_main() -> Result<()> {
                 println!("validation: OK");
             }
         }
+        "sssp" => {
+            let engine = Engine::parse(args.flag("engine").unwrap_or("delta"))?;
+            let p = args.flag_or("p", *cfg.localities.last().unwrap_or(&4))?;
+            let res = coordinator::run_sssp(&cfg, p, engine, validate)?;
+            let reached = res.dist.iter().filter(|d| d.is_finite()).count();
+            println!(
+                "sssp[{engine:?}] {} p={p}: reached {}/{} vertices in {} \
+                 (msgs={} envs={} barriers={})",
+                cfg.graph_name(),
+                reached,
+                res.dist.len(),
+                fmt_us(res.report.makespan_us),
+                res.report.net.messages,
+                res.report.net.envelopes,
+                res.report.barriers,
+            );
+            println!(
+                "  relaxations={} useful={} efficiency={:.2} agg envelopes={} fold factor={:.1}",
+                res.report.work.relaxations,
+                res.report.work.useful_relaxations,
+                res.report.work.efficiency(),
+                res.report.agg.envelopes,
+                res.report.agg.fold_factor(),
+            );
+            if validate {
+                println!("validation: OK");
+            }
+        }
         "fig1" => {
             let (table, _) = experiment::fig1_bfs(&cfg)?;
             print!("{}", table.render());
@@ -99,6 +127,7 @@ fn real_main() -> Result<()> {
             print!("{}", experiment::ablation_aggregation(&cfg)?.render());
             print!("{}", experiment::ablation_adaptive_chunk(&cfg)?.render());
             print!("{}", experiment::ablation_flush_policy(&cfg)?.render());
+            print!("{}", experiment::ablation_delta_stepping(&cfg)?.render());
             print!("{}", experiment::extensions(&cfg)?.render());
         }
         "info" => {

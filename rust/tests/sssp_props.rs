@@ -1,0 +1,330 @@
+//! Property tests for the delta-stepping SSSP engine and its cross-model
+//! oracle harness.
+//!
+//! * **Oracle agreement** — delta-stepping equals the Dijkstra oracle
+//!   across 64 random weighted graphs × {1, 2, 4, 8} localities × a random
+//!   [`FlushPolicy`] × a random Δ (spanning Dijkstra-like through
+//!   Bellman-Ford).
+//! * **Work efficiency** — on weighted RMAT inputs a bucket-ordered
+//!   schedule performs no more relaxations than the chaotic asynchronous
+//!   label-correcting engine, and strictly fewer on the benchmark-scale
+//!   RMAT graph at 8 localities.
+//! * **Δ = ∞ ≡ Bellman-Ford** — with a single bucket the delta engine's
+//!   round-synchronous schedule reproduces the BSP engine exactly:
+//!   identical distances, relaxation totals, aggregator envelope counts,
+//!   and barrier (superstep) counts.
+//! * **Edge cases** — zero-weight edges (including cycles), disconnected
+//!   components, single-vertex graphs, sources on non-zero localities,
+//!   and duplicate parallel edges.
+//!
+//! The base seed is overridable via `NWGRAPH_PROP_SEED` so CI can run a
+//! deterministic seed matrix (bucket-coordination schedules depend on the
+//! generated graphs, so distinct seeds exercise distinct coordination
+//! interleavings reproducibly).
+
+use nwgraph_hpx::algorithms::sssp;
+use nwgraph_hpx::amt::{FlushPolicy, NetConfig, SimConfig};
+use nwgraph_hpx::graph::generators::SplitMix64;
+use nwgraph_hpx::graph::{generators, Csr, DistGraph, EdgeList};
+use nwgraph_hpx::testing::{forall, gen, PropConfig};
+
+fn det() -> SimConfig {
+    SimConfig::deterministic(NetConfig::default())
+}
+
+/// Base seed for the property runs; `NWGRAPH_PROP_SEED` overrides it (the
+/// CI seed matrix sets it to two fixed values).
+fn prop_seed() -> u64 {
+    std::env::var("NWGRAPH_PROP_SEED")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0xDE17A5)
+}
+
+fn cfg(cases: u32) -> PropConfig {
+    PropConfig { cases, seed: prop_seed(), max_size: 48 }
+}
+
+/// Draw a flush policy uniformly from the interesting corners of the
+/// policy space.
+fn gen_policy(rng: &mut SplitMix64) -> FlushPolicy {
+    match rng.below(5) {
+        0 => FlushPolicy::Unbatched,
+        1 => FlushPolicy::Items(1 + rng.below(64) as usize),
+        2 => FlushPolicy::Bytes(8 + rng.below(1024) as usize),
+        3 => FlushPolicy::Adaptive,
+        _ => FlushPolicy::Manual,
+    }
+}
+
+/// Draw a Δ spanning the whole spectrum: far below the minimum weight
+/// (Dijkstra-like bucket ordering), around the weight scale, far above it
+/// (few buckets), and ∞ (Bellman-Ford).
+fn gen_delta(rng: &mut SplitMix64) -> f32 {
+    match rng.below(6) {
+        0 => 0.05,
+        1 => 0.6,
+        2 => 1.5,
+        3 => 5.0,
+        4 => 20.0,
+        _ => f32::INFINITY,
+    }
+}
+
+fn check_against(want: &[f32], got: &[f32], tag: &str) -> Result<(), String> {
+    for (v, (a, b)) in got.iter().zip(want).enumerate() {
+        let ok = (a.is_infinite() && b.is_infinite()) || (a - b).abs() < 1e-3;
+        if !ok {
+            return Err(format!("{tag}: dist[{v}] = {a}, oracle {b}"));
+        }
+    }
+    Ok(())
+}
+
+#[test]
+fn prop_delta_stepping_matches_dijkstra_oracle() {
+    forall(
+        &cfg(64),
+        |rng, size| {
+            let g = gen::ugraph(rng, size);
+            let gw = generators::with_random_weights(&g, 0.5, 9.5, rng.next_u64());
+            let root = rng.below(gw.n() as u64) as u32;
+            (gw, root, gen_policy(rng), gen_delta(rng))
+        },
+        |(gw, root, policy, delta)| {
+            let want = sssp::dijkstra(gw, *root);
+            for p in [1u32, 2, 4, 8] {
+                let dist = DistGraph::block(gw, p);
+                let res = sssp::delta::run_with(gw, &dist, *root, *delta, *policy, det());
+                check_against(&want, &res.dist, &format!("p={p} delta={delta} {policy:?}"))?;
+                // Combiner conservation: at quiescence every accumulated
+                // relaxation was either folded away or shipped.
+                let agg = res.report.agg;
+                if agg.items != agg.folded + agg.sent_items {
+                    return Err(format!("p={p}: aggregation leak: {agg:?}"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Δ that makes every GAP-style weight (`w >= 1`) heavy, which lower-bounds
+/// the schedule: each settled vertex relaxes its edges exactly once
+/// (bucket-ordered Dijkstra). [`sssp::auto_delta`] lands there on RMAT
+/// degree distributions; the cap keeps the invariant independent of the
+/// dedup-dependent mean degree of small RMAT instances.
+fn tuned_delta(gw: &Csr) -> f32 {
+    sssp::auto_delta(gw).min(0.9)
+}
+
+#[test]
+fn prop_delta_work_efficiency_le_async_on_rmat() {
+    // Bucket ordering never performs more relaxations than chaotic
+    // label-correcting on weighted RMAT inputs, for any locality count
+    // and any flush policy.
+    forall(
+        &cfg(16),
+        |rng, size| {
+            let scale = 5 + (size as u32 % 4); // kron5..kron8
+            let g = generators::kron(scale, 8, rng.next_u64());
+            let gw = generators::with_random_weights(&g, 1.0, 10.0, rng.next_u64());
+            let p = 1u32 << rng.below(4);
+            (gw, p, gen_policy(rng))
+        },
+        |(gw, p, policy)| {
+            let dist = DistGraph::block(gw, *p);
+            let d = sssp::delta::run_with(gw, &dist, 0, tuned_delta(gw), *policy, det());
+            let a = sssp::run_async(gw, &dist, 0, det());
+            check_against(&a.dist, &d.dist, "delta vs async")?;
+            let (dr, ar) = (d.report.work.relaxations, a.report.work.relaxations);
+            if dr > ar {
+                return Err(format!("delta did more work: {dr} > {ar} relaxations"));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn delta_strictly_beats_async_on_benchmark_rmat() {
+    // Acceptance criterion: on the benchmark-scale weighted RMAT graph at
+    // 8 localities, bucket ordering performs strictly fewer relaxations
+    // than asynchronous label-correcting (which re-relaxes vertices as
+    // stale cross-locality proposals land).
+    let g = generators::kron(10, 8, prop_seed());
+    let gw = generators::with_random_weights(&g, 1.0, 10.0, prop_seed() + 1);
+    let dist = DistGraph::block(&gw, 8);
+    let d = sssp::delta::run_with(&gw, &dist, 0, tuned_delta(&gw), FlushPolicy::Adaptive, det());
+    let a = sssp::run_async(&gw, &dist, 0, det());
+    check_against(&a.dist, &d.dist, "delta vs async").unwrap();
+    assert!(
+        d.report.work.relaxations < a.report.work.relaxations,
+        "delta {} vs async {} relaxations",
+        d.report.work.relaxations,
+        a.report.work.relaxations
+    );
+    assert!(d.report.work.useful_relaxations <= d.report.work.relaxations);
+}
+
+#[test]
+fn prop_delta_inf_matches_bsp_bellman_ford_counts() {
+    // With Δ = ∞ every edge is light and there is a single bucket: the
+    // delta engine's round-synchronous light loop IS the BSP Bellman-Ford
+    // superstep schedule. Distances, relaxation totals, and aggregator
+    // envelope accounting must match exactly; barrier counts match up to
+    // the engines' terminal handshakes (see below).
+    forall(
+        &cfg(12),
+        |rng, size| {
+            let g = gen::ugraph(rng, size + 4);
+            let gw = generators::with_random_weights(&g, 0.5, 9.5, rng.next_u64());
+            let p = 1u32 << rng.below(4);
+            (gw, p)
+        },
+        |(gw, p)| {
+            // A degree-0 source terminates the two engines one no-op round
+            // apart; pick a root that actually relaxes something.
+            let root = match (0..gw.n() as u32).find(|&v| gw.degree(v) > 0) {
+                Some(v) => v,
+                None => return Ok(()), // edgeless graph: nothing to compare
+            };
+            let dist = DistGraph::block(gw, *p);
+            let d =
+                sssp::delta::run_with(gw, &dist, root, f32::INFINITY, FlushPolicy::Manual, det());
+            let b = sssp::run_bsp(gw, &dist, root, det());
+            if d.dist != b.dist {
+                return Err("distances differ".into());
+            }
+            let (dw, bw) = (d.report.work, b.report.work);
+            if dw.relaxations != bw.relaxations {
+                return Err(format!("relaxations {} vs {}", dw.relaxations, bw.relaxations));
+            }
+            let (da, ba) = (d.report.agg, b.report.agg);
+            if (da.items, da.folded, da.sent_items, da.envelopes)
+                != (ba.items, ba.folded, ba.sent_items, ba.envelopes)
+            {
+                return Err(format!("aggregation differs: {da:?} vs {ba:?}"));
+            }
+            // Superstep parity up to the terminal handshake: both engines
+            // run the same K relaxing rounds (2 barriers each). Delta
+            // always appends one no-op heavy round before terminating;
+            // BSP skips its trailing empty round only when the last
+            // relaxing round produced no remote sends (always at p=1,
+            // where stale local proposals don't count as activity).
+            let (db, bb) = (d.report.barriers, b.report.barriers);
+            if db != bb && db != bb + 2 {
+                return Err(format!("supersteps differ: {db} vs {bb} barriers"));
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Run every distributed engine (delta at several Δ) against the oracle.
+fn all_engines_match(gw: &Csr, root: u32, ps: &[u32]) {
+    let want = sssp::dijkstra(gw, root);
+    for &p in ps {
+        let dist = DistGraph::block(gw, p);
+        check_against(&want, &sssp::run_async(gw, &dist, root, det()).dist, "async").unwrap();
+        check_against(&want, &sssp::run_bsp(gw, &dist, root, det()).dist, "bsp").unwrap();
+        for delta in [0.1f32, 2.0, f32::INFINITY] {
+            let res =
+                sssp::delta::run_with(gw, &dist, root, delta, FlushPolicy::Adaptive, det());
+            check_against(&want, &res.dist, &format!("delta={delta} p={p}")).unwrap();
+        }
+    }
+}
+
+#[test]
+fn zero_weight_edges_including_cycles() {
+    // 0 -0.0- 1 -2.0- 2 -0.0- 3, plus a zero-weight cycle 4-5-6 hanging
+    // off vertex 2 by a unit edge. Zero-weight light edges must propagate
+    // (equal distances) without re-relaxation loops.
+    let mut el = EdgeList::new(7);
+    let mut add = |u: u32, v: u32, w: f32| {
+        el.push_weighted(u, v, w);
+        el.push_weighted(v, u, w);
+    };
+    add(0, 1, 0.0);
+    add(1, 2, 2.0);
+    add(2, 3, 0.0);
+    add(2, 4, 1.0);
+    add(4, 5, 0.0);
+    add(5, 6, 0.0);
+    add(6, 4, 0.0);
+    let gw = Csr::from_edge_list(&el);
+    let want = sssp::dijkstra(&gw, 0);
+    assert_eq!(want, vec![0.0, 0.0, 2.0, 2.0, 3.0, 3.0, 3.0]);
+    all_engines_match(&gw, 0, &[1, 2, 4]);
+}
+
+#[test]
+fn disconnected_components_keep_infinity() {
+    // Two weighted triangles with no bridge: the far component must stay
+    // at INFINITY under every engine and every partitioning.
+    let mut el = EdgeList::new(6);
+    for (u, v) in [(0, 1), (1, 2), (2, 0), (3, 4), (4, 5), (5, 3)] {
+        el.push_weighted(u, v, 1.5);
+        el.push_weighted(v, u, 1.5);
+    }
+    let gw = Csr::from_edge_list(&el);
+    let want = sssp::dijkstra(&gw, 0);
+    assert!(want[3..].iter().all(|d| d.is_infinite()));
+    all_engines_match(&gw, 0, &[1, 2, 3, 4]);
+    // From the other component, the roles flip.
+    all_engines_match(&gw, 4, &[1, 2, 3, 4]);
+}
+
+#[test]
+fn single_vertex_graph() {
+    let gw = Csr::from_edge_list(&EdgeList::new(1));
+    for p in [1u32, 2, 4, 8] {
+        let dist = DistGraph::block(&gw, p);
+        for res in [
+            sssp::run_async(&gw, &dist, 0, det()),
+            sssp::run_bsp(&gw, &dist, 0, det()),
+            sssp::delta::run_with(&gw, &dist, 0, 1.0, FlushPolicy::Manual, det()),
+        ] {
+            assert_eq!(res.dist, vec![0.0], "p={p}");
+        }
+    }
+}
+
+#[test]
+fn source_on_nonzero_locality() {
+    // Root owned by the last of 4 localities; distances must be exact and
+    // the far end reachable across every boundary.
+    let gw = generators::with_random_weights(&generators::path(9), 1.0, 1.0 + 1e-6, 7);
+    all_engines_match(&gw, 8, &[4]);
+    let want = sssp::dijkstra(&gw, 8);
+    assert!((want[0] - 8.0).abs() < 1e-3);
+    // And a random weighted graph rooted away from locality 0.
+    let g = generators::urand(6, 4, 11);
+    let gw = generators::with_random_weights(&g, 1.0, 10.0, 12);
+    all_engines_match(&gw, (gw.n() - 1) as u32, &[2, 4, 8]);
+}
+
+#[test]
+fn duplicate_parallel_edges_take_the_min() {
+    // Two parallel 0->1 edges with different weights (and a heavy/light
+    // split that separates them when delta = 2): the cheaper one must win
+    // in every engine.
+    let mut el = EdgeList::new(3);
+    el.push_weighted(0, 1, 5.0);
+    el.push_weighted(0, 1, 1.0);
+    el.push_weighted(1, 2, 2.0);
+    let gw = Csr::from_edge_list(&el);
+    assert_eq!(gw.m(), 3, "parallel edges must survive CSR construction");
+    let want = sssp::dijkstra(&gw, 0);
+    assert_eq!(want, vec![0.0, 1.0, 3.0]);
+    for p in [1u32, 2, 3] {
+        let dist = DistGraph::block(&gw, p);
+        check_against(&want, &sssp::run_async(&gw, &dist, 0, det()).dist, "async").unwrap();
+        check_against(&want, &sssp::run_bsp(&gw, &dist, 0, det()).dist, "bsp").unwrap();
+        for delta in [0.5f32, 2.0, f32::INFINITY] {
+            let res = sssp::delta::run_with(&gw, &dist, 0, delta, FlushPolicy::Unbatched, det());
+            check_against(&want, &res.dist, &format!("delta={delta}")).unwrap();
+        }
+    }
+}
