@@ -55,9 +55,12 @@ fn main() {
         bfs::validate_parents(&g, root, &r.parents).expect("invalid BFS tree");
     }
 
-    // Latency-weighted crawl: SSSP with random per-link latencies.
+    // Latency-weighted crawl: SSSP with random per-link latencies (the
+    // SSSP engines read weights from the shards, so the distributed graph
+    // is rebuilt from the weighted Csr).
     let gw = generators::with_random_weights(&g, 5.0, 150.0, 7);
-    let s = sssp::run_async(&gw, &dist, root, sim);
+    let distw = DistGraph::block(&gw, 8);
+    let s = sssp::run_async(&gw, &distw, root, sim);
     let reachable: Vec<f32> = s.dist.iter().cloned().filter(|d| d.is_finite()).collect();
     let mean = reachable.iter().sum::<f32>() / reachable.len() as f32;
     let max = reachable.iter().cloned().fold(0.0f32, f32::max);

@@ -13,6 +13,11 @@
 //!   Bellman-Ford, Δ→0 ≡ Dijkstra-like) with relaxation counters, against
 //!   async label-correcting and BSP reference rows, on a uniform and a
 //!   skewed (RMAT) graph.
+//! * **A6** — partition scheme × algorithm on the skewed kron10 graph at
+//!   8 localities: block vs edge-balanced vs hash vs 2-D vertex cut, with
+//!   vertex/edge imbalance and replication-factor columns. The vertex cut
+//!   must reach lower edge imbalance than block (the tentpole acceptance
+//!   criterion) at the price of replication traffic.
 //!
 //! `cargo bench --bench ablations`
 
@@ -92,4 +97,15 @@ fn main() {
     print!("{}", experiment::ablation_delta_stepping(&cfg5).expect("A5 failed").render());
     cfg5.generator = "kron".into();
     print!("{}", experiment::ablation_delta_stepping(&cfg5).expect("A5 failed").render());
+
+    // A6: partition scheme x algorithm on kron10 at 8 localities — the
+    // acceptance point for the pluggable partition layer.
+    let mut cfg6 = Config::default();
+    cfg6.scale = 10;
+    cfg6.degree = 8;
+    cfg6.reps = reps;
+    cfg6.iterations = 10;
+    cfg6.localities = vec![8];
+    cfg6.generator = "kron".into();
+    print!("{}", experiment::ablation_partition_schemes(&cfg6).expect("A6 failed").render());
 }

@@ -1,23 +1,31 @@
 //! Asynchronous distributed BFS — the paper's Listing 1.2, on the shared
-//! [`amt::aggregate`](crate::amt::aggregate) combiner layer.
+//! [`amt::aggregate`](crate::amt::aggregate) combiner layer, over any
+//! [`PartitionScheme`](crate::graph::partition::PartitionScheme).
 //!
 //! The message-driven form of `bfs_2`: discovering a remote vertex issues
 //! an asynchronous remote action (`hpx::async(bfs_2, dst, ...)`) on its
 //! owner; locally-owned discoveries are expanded immediately from a local
 //! wavefront. Remote visits are folded into per-destination combiners
-//! (min-by-level) and flushed by the configured [`FlushPolicy`] — the
-//! naive one-action-per-edge path survives as
+//! (min-by-level, keyed by the destination's dense master index from the
+//! shard's ghost table) and flushed by the configured [`FlushPolicy`] —
+//! the naive one-action-per-edge path survives as
 //! [`FlushPolicy::Unbatched`]. There are **no global barriers**:
 //! termination is network quiescence, which the discrete-event engine
 //! detects exactly (the paper relies on `hpx::wait_all` over the recursive
 //! future tree for the same effect).
 //!
-//! Unlike the seed's first-touch-CAS variant, visits are *level
-//! correcting*: a proposal with a smaller level overwrites the previous
-//! parent, so at quiescence every reached vertex carries its true BFS
-//! distance — the final tree is a shortest-path tree regardless of message
-//! arrival order or aggregation, which is what lets the property suite
-//! assert `async == BSP == sequential` on levels, not just reachability.
+//! Visits are *level correcting*: a proposal with a smaller level
+//! overwrites the previous parent, so at quiescence every reached vertex
+//! carries its true BFS distance — the final tree is a shortest-path tree
+//! regardless of message arrival order, aggregation, or partition scheme.
+//!
+//! Under a vertex cut the local wavefront runs over the whole local row
+//! space (owned rows *and* mirror rows): an improvement at a ghost row
+//! notifies the vertex's master through the master-bound combiner, and a
+//! master improvement is scattered to every mirror of the vertex through
+//! a second, mirror-bound combiner so the remotely homed edges expand too
+//! (gather-apply-scatter). 1-D schemes have no mirrors and both extra
+//! paths are dead code.
 
 use std::cmp::Reverse;
 use std::collections::BinaryHeap;
@@ -30,21 +38,35 @@ use crate::graph::{DistGraph, Shard, VertexId};
 
 use super::BfsResult;
 
-/// A flushed combiner of `Visit` actions: `(vertex, (parent, level))`,
-/// at most one (the best) per destination vertex.
+/// Async BFS wire format: combiner batches toward masters (visit
+/// proposals) or toward mirrors (level scatter).
 #[derive(Debug, Clone)]
-pub struct VisitBatch(pub Batch<(VertexId, u32)>);
+pub enum BfsMsg {
+    /// `(master index, (parent, level))` — at most the best per vertex.
+    ToMaster(Batch<(VertexId, u32)>),
+    /// `(ghost slot, level)` — master's improved level for a mirror.
+    ToMirror(Batch<u32>),
+}
 
-/// Per-item wire size: vertex + parent + level.
+/// Per-item wire size toward masters: vertex + parent + level.
 const ITEM_BYTES: usize = 12;
 
-impl Message for VisitBatch {
+/// Per-item wire size toward mirrors: ghost slot + level.
+const MIRROR_ITEM_BYTES: usize = 8;
+
+impl Message for BfsMsg {
     fn wire_bytes(&self) -> usize {
-        self.0.wire_bytes()
+        match self {
+            BfsMsg::ToMaster(b) => b.wire_bytes(),
+            BfsMsg::ToMirror(b) => b.wire_bytes(),
+        }
     }
 
     fn item_count(&self) -> usize {
-        self.0.len()
+        match self {
+            BfsMsg::ToMaster(b) => b.len(),
+            BfsMsg::ToMirror(b) => b.len(),
+        }
     }
 }
 
@@ -55,80 +77,118 @@ fn min_level(acc: &mut (VertexId, u32), new: (VertexId, u32)) {
     }
 }
 
+fn min_u32(acc: &mut u32, new: u32) {
+    if new < *acc {
+        *acc = new;
+    }
+}
+
 /// Per-locality actor state.
 pub struct AsyncBfsActor {
     shard: Arc<Shard>,
-    dist: Arc<DistGraph>,
     parents: AtomicLongVector,
     root: VertexId,
-    /// Tentative BFS level of each owned vertex (`u32::MAX` = unvisited).
+    /// Tentative BFS level of every local row — owned rows are
+    /// authoritative, ghost rows cache the best level seen/sent
+    /// (`u32::MAX` = unvisited). The ghost cache doubles as the
+    /// send-dedup that keeps the correcting flood finite.
     level: Vec<u32>,
-    /// Best level already *sent* per remote vertex — legitimate local
-    /// knowledge (our own send history) that prunes the correcting flood.
-    best_sent: Vec<u32>,
-    /// Remote-visit combiner (shared aggregation subsystem).
+    /// Master-bound visit combiner (shared aggregation subsystem).
     pub agg: Aggregator<(VertexId, u32)>,
+    /// Mirror-bound level-scatter combiner (idle under 1-D schemes).
+    pub mirror_agg: Aggregator<u32>,
+    /// Reusable wavefront heap.
+    heap: BinaryHeap<Reverse<(u32, usize, VertexId)>>,
 }
 
 impl AsyncBfsActor {
-    /// Cascade a winning visit through the local shard in level order — a
-    /// per-locality BFS wavefront that keeps the label-correcting flood
-    /// from re-expanding whole subtrees.
-    fn relax_from(&mut self, ctx: &mut Ctx<VisitBatch>, v: VertexId, parent: VertexId, lvl: u32) {
-        let here = ctx.locality();
-        let start = self.shard.range.start;
-        let mut heap: BinaryHeap<Reverse<(u32, VertexId, VertexId)>> = BinaryHeap::new();
-        heap.push(Reverse((lvl, v, parent)));
-        while let Some(Reverse((lu, u, pu))) = heap.pop() {
-            let iu = u as usize - start;
-            if lu >= self.level[iu] {
+    /// Drain the wavefront heap: cascade improvements through the local
+    /// row space in level order (a per-locality BFS wavefront that keeps
+    /// the label-correcting flood from re-expanding whole subtrees).
+    fn relax(&mut self, ctx: &mut Ctx<BfsMsg>) {
+        let n_owned = self.shard.n_local();
+        while let Some(Reverse((lvl, row, parent))) = self.heap.pop() {
+            if lvl >= self.level[row] {
                 continue;
             }
-            self.level[iu] = lu;
-            // Correcting store: the smallest level seen so far wins, so the
-            // final parent array encodes a shortest-path tree.
-            self.parents.store(u as usize, pu as i64);
-            let nl = lu + 1;
-            for &w in self.shard.out_neighbors(iu) {
-                let dst = self.dist.owner(w);
-                if dst == here {
-                    if nl < self.level[w as usize - start] {
-                        heap.push(Reverse((nl, w, u)));
+            self.level[row] = lvl;
+            if row < n_owned {
+                // Correcting store: the smallest level seen so far wins, so
+                // the final parent array encodes a shortest-path tree.
+                self.parents.store(self.shard.owned_ids[row] as usize, parent as i64);
+                for &(dst, gi) in self.shard.mirrors(row) {
+                    if let Some(b) = self.mirror_agg.accumulate(dst, gi, lvl) {
+                        ctx.send(dst, BfsMsg::ToMirror(b));
                     }
-                } else if nl < self.best_sent[w as usize] {
-                    self.best_sent[w as usize] = nl;
-                    if let Some(batch) = self.agg.accumulate(dst, w, (u, nl)) {
-                        ctx.send(dst, VisitBatch(batch));
-                    }
+                }
+            } else {
+                let gi = row - n_owned;
+                let dst = self.shard.ghost_owner[gi];
+                let idx = self.shard.ghost_master_index[gi];
+                if let Some(b) = self.agg.accumulate(dst, idx, (parent, lvl)) {
+                    ctx.send(dst, BfsMsg::ToMaster(b));
+                }
+            }
+            let gu = self.shard.global_of(row);
+            let nl = lvl + 1;
+            for &t in self.shard.row_neighbors_local(row) {
+                if nl < self.level[t as usize] {
+                    self.heap.push(Reverse((nl, t as usize, gu)));
                 }
             }
         }
     }
 
-    /// Ship whatever the policy left buffered; called at handler end so
+    /// Ship whatever the policies left buffered; called at handler end so
     /// quiescence can never strand pending visits.
-    fn drain(&mut self, ctx: &mut Ctx<VisitBatch>) {
+    fn drain(&mut self, ctx: &mut Ctx<BfsMsg>) {
         for (dst, batch) in self.agg.drain() {
-            ctx.send(dst, VisitBatch(batch));
+            ctx.send(dst, BfsMsg::ToMaster(batch));
+        }
+        for (dst, batch) in self.mirror_agg.drain() {
+            ctx.send(dst, BfsMsg::ToMirror(batch));
         }
     }
 }
 
 impl Actor for AsyncBfsActor {
-    type Msg = VisitBatch;
+    type Msg = BfsMsg;
 
-    fn on_start(&mut self, ctx: &mut Ctx<VisitBatch>) {
-        if self.dist.owner(self.root) == ctx.locality() {
+    fn on_start(&mut self, ctx: &mut Ctx<BfsMsg>) {
+        if let Ok(r) = self.shard.owned_ids.binary_search(&self.root) {
             let root = self.root;
-            self.relax_from(ctx, root, root, 0);
+            self.heap.push(Reverse((0, r, root)));
+            self.relax(ctx);
             self.drain(ctx);
         }
     }
 
-    fn on_message(&mut self, ctx: &mut Ctx<VisitBatch>, _from: LocalityId, msg: VisitBatch) {
-        for (v, (parent, lvl)) in msg.0.items {
-            self.relax_from(ctx, v, parent, lvl);
+    fn on_message(&mut self, ctx: &mut Ctx<BfsMsg>, _from: LocalityId, msg: BfsMsg) {
+        let n_owned = self.shard.n_local();
+        match msg {
+            BfsMsg::ToMaster(b) => {
+                for (idx, (parent, lvl)) in b.items {
+                    self.heap.push(Reverse((lvl, idx as usize, parent)));
+                }
+            }
+            BfsMsg::ToMirror(b) => {
+                // The value came *from* the master: install it directly
+                // (no echo back) and expand the locally homed edges.
+                for (gi, lvl) in b.items {
+                    let row = n_owned + gi as usize;
+                    if lvl < self.level[row] {
+                        self.level[row] = lvl;
+                        let gu = self.shard.global_of(row);
+                        for &t in self.shard.row_neighbors_local(row) {
+                            if lvl + 1 < self.level[t as usize] {
+                                self.heap.push(Reverse((lvl + 1, t as usize, gu)));
+                            }
+                        }
+                    }
+                }
+            }
         }
+        self.relax(ctx);
         self.drain(ctx);
     }
 }
@@ -146,26 +206,40 @@ pub fn run_with_policy(
     policy: FlushPolicy,
     cfg: SimConfig,
 ) -> BfsResult {
-    let dist = Arc::new(dist.clone());
     let parents = AtomicLongVector::new(dist.n(), dist.p(), -1);
-    let ranges = dist.partition.ranges();
     let actors: Vec<AsyncBfsActor> = dist
         .shards
         .iter()
         .map(|s| AsyncBfsActor {
             shard: Arc::new(s.clone()),
-            dist: Arc::clone(&dist),
             parents: parents.clone(),
             root,
-            level: vec![u32::MAX; s.n_local()],
-            best_sent: vec![u32::MAX; dist.n()],
-            agg: Aggregator::new(&ranges, s.locality, policy, &cfg.net, ITEM_BYTES, min_level),
+            level: vec![u32::MAX; s.n_rows()],
+            agg: Aggregator::new(
+                dist.owned_counts(),
+                s.locality,
+                policy,
+                &cfg.net,
+                ITEM_BYTES,
+                min_level,
+            ),
+            mirror_agg: Aggregator::new(
+                dist.ghost_counts(),
+                s.locality,
+                policy,
+                &cfg.net,
+                MIRROR_ITEM_BYTES,
+                min_u32,
+            ),
+            heap: BinaryHeap::new(),
         })
         .collect();
     let (actors, mut report) = SimRuntime::new(cfg).run(actors);
     for a in &actors {
         report.agg.merge(a.agg.stats());
+        report.agg.merge(a.mirror_agg.stats());
     }
+    report.partition = dist.partition_stats();
     BfsResult { parents: parents.to_vec(), report }
 }
 
@@ -174,7 +248,7 @@ mod tests {
     use super::*;
     use crate::algorithms::bfs::{sequential, tree_levels, validate_parents};
     use crate::amt::NetConfig;
-    use crate::graph::generators;
+    use crate::graph::{generators, PartitionKind};
 
     fn det() -> SimConfig {
         SimConfig::deterministic(NetConfig::default())
@@ -208,6 +282,34 @@ mod tests {
     fn works_when_root_not_on_locality_zero() {
         let g = generators::urand(6, 4, 11);
         check(&g, 4, (g.n() - 1) as VertexId);
+    }
+
+    #[test]
+    fn true_levels_under_every_partition_scheme() {
+        // The tentpole property: the same graph yields the same BFS levels
+        // under block, edge-balanced, hash, and vertex-cut partitions.
+        let g = generators::kron(7, 6, 19);
+        let want = sequential::distances(&g, 0);
+        for kind in PartitionKind::all() {
+            for p in [1u32, 3, 8] {
+                let dist = DistGraph::build_with(&g, kind.build(&g, p));
+                let res = run(&dist, 0, det());
+                validate_parents(&g, 0, &res.parents).unwrap();
+                assert_eq!(tree_levels(0, &res.parents), want, "{kind:?} p={p}");
+            }
+        }
+    }
+
+    #[test]
+    fn vertex_cut_report_carries_replication() {
+        let g = generators::kron(7, 8, 5);
+        let dist = DistGraph::build_with(&g, PartitionKind::VertexCut.build(&g, 4));
+        assert!(dist.has_mirrors());
+        let res = run(&dist, 0, det());
+        validate_parents(&g, 0, &res.parents).unwrap();
+        assert!(res.report.partition.replication_factor > 1.0);
+        assert!(res.report.partition.vertex_imbalance >= 1.0);
+        assert!(res.report.partition.edge_imbalance >= 1.0);
     }
 
     #[test]

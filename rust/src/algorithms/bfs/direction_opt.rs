@@ -9,6 +9,13 @@
 //! eliminating per-discovery remote traffic at the price of an extra
 //! bitmap-allgather barrier per switch/round. It switches back when the
 //! frontier shrinks below `n / beta`.
+//!
+//! Works with any mirror-free [`PartitionScheme`]
+//! (crate::graph::partition::PartitionScheme) — block, edge-balanced, or
+//! hash — since top-down needs whole rows at the owner and bottom-up
+//! needs whole in-rows. Vertex-cut graphs are rejected; use
+//! [`async_hpx`](super::async_hpx) or [`level_sync`](super::level_sync)
+//! there.
 
 use std::sync::Arc;
 
@@ -91,7 +98,9 @@ pub struct DirOptBfsActor {
     root: VertexId,
     alpha: f64,
     beta: f64,
-    frontier: Vec<VertexId>,
+    /// Current frontier as owned local rows (O(1) degree/adjacency
+    /// access; global ids are rebuilt only for the bitmap allgather).
+    frontier: Vec<u32>,
     inbox: Vec<(VertexId, VertexId)>,
     visited: Vec<bool>, // owned vertices, local index
     global_frontier_bitmap: Vec<u64>,
@@ -116,9 +125,11 @@ impl DirOptBfsActor {
         self.parents.cas(v as usize, -1, parent as i64)
     }
 
-    fn mark_visited(&mut self, v: VertexId) {
+    /// Mark a remotely discovered owned vertex visited; returns its row.
+    fn mark_visited(&mut self, v: VertexId) -> u32 {
         let l = self.shard.local_index(v);
         self.visited[l] = true;
+        l as u32
     }
 
     fn send_stats(&mut self, ctx: &mut Ctx<DirMsg>, activity: u64) {
@@ -126,7 +137,7 @@ impl DirOptBfsActor {
         let fe: u64 = self
             .frontier
             .iter()
-            .map(|&v| self.shard.out_degree[self.shard.local_index(v)] as u64)
+            .map(|&r| self.shard.out_degree[r as usize] as u64)
             .sum();
         let ue: u64 = (0..self.shard.n_local())
             .filter(|&l| !self.visited[l])
@@ -145,25 +156,27 @@ impl DirOptBfsActor {
     /// Top-down superstep (same as the level-synchronous baseline).
     fn expand_top_down(&mut self, ctx: &mut Ctx<DirMsg>) {
         self.td_rounds += 1;
-        let here = ctx.locality();
         let p = ctx.n_localities() as usize;
-        let mut next: Vec<VertexId> = Vec::new();
+        let mut next: Vec<u32> = Vec::new();
         let mut outgoing: Vec<Vec<(VertexId, VertexId)>> = vec![Vec::new(); p];
         let mut activity: u64 = 0;
         let frontier = std::mem::take(&mut self.frontier);
         let shard = Arc::clone(&self.shard);
-        for &u in &frontier {
-            let lu = shard.local_index(u);
-            for &w in shard.out_neighbors(lu) {
-                let dst = self.dist.owner(w);
-                if dst == here {
-                    if self.set_parent(w, u) {
-                        self.mark_visited(w);
-                        next.push(w);
+        let n_owned = shard.n_local();
+        for &lu in &frontier {
+            let u = shard.owned_ids[lu as usize];
+            for &t in shard.out_neighbors_local(lu as usize) {
+                let t = t as usize;
+                if t < n_owned {
+                    if self.set_parent(shard.owned_ids[t], u) {
+                        self.visited[t] = true;
+                        next.push(t as u32);
                         activity += 1;
                     }
                 } else {
-                    outgoing[dst as usize].push((w, u));
+                    let gi = t - n_owned;
+                    outgoing[shard.ghost_owner[gi] as usize]
+                        .push((shard.ghost_global_ids[gi], u));
                     activity += 1;
                 }
             }
@@ -181,7 +194,7 @@ impl DirOptBfsActor {
     /// replicated frontier bitmap; discoveries are purely local.
     fn expand_bottom_up(&mut self, ctx: &mut Ctx<DirMsg>) {
         self.bu_rounds += 1;
-        let mut next: Vec<VertexId> = Vec::new();
+        let mut next: Vec<u32> = Vec::new();
         let mut activity: u64 = 0;
         for l in 0..self.shard.n_local() {
             if self.visited[l] {
@@ -193,7 +206,7 @@ impl DirOptBfsActor {
                 if self.global_frontier_bitmap[w] & (1 << b) != 0 {
                     if self.set_parent(v, u) {
                         self.visited[l] = true;
-                        next.push(v);
+                        next.push(l as u32);
                         activity += 1;
                     }
                     break;
@@ -208,17 +221,16 @@ impl DirOptBfsActor {
         let n = self.dist.n();
         let p = ctx.n_localities();
         let slice_bytes = n.div_ceil(8).div_ceil(p as usize).max(1);
+        let ids: Vec<VertexId> =
+            self.frontier.iter().map(|&r| self.shard.owned_ids[r as usize]).collect();
         for l in 0..p {
             if l != ctx.locality() {
-                ctx.send(l, DirMsg::Bitmap {
-                    ids: self.frontier.clone(),
-                    bitmap_bytes: slice_bytes,
-                });
+                ctx.send(l, DirMsg::Bitmap { ids: ids.clone(), bitmap_bytes: slice_bytes });
             }
         }
         // Own frontier goes straight into the bitmap.
         self.global_frontier_bitmap = vec![0u64; n.div_ceil(64)];
-        for &v in &self.frontier {
+        for &v in &ids {
             self.global_frontier_bitmap[v as usize / 64] |= 1 << (v as usize % 64);
         }
         self.phase = Phase::AfterBitmap;
@@ -230,10 +242,11 @@ impl Actor for DirOptBfsActor {
     type Msg = DirMsg;
 
     fn on_start(&mut self, ctx: &mut Ctx<DirMsg>) {
-        if self.dist.owner(self.root) == ctx.locality() && self.set_parent(self.root, self.root)
+        if self.shard.owned_ids.binary_search(&self.root).is_ok()
+            && self.set_parent(self.root, self.root)
         {
-            self.mark_visited(self.root);
-            self.frontier.push(self.root);
+            let r = self.mark_visited(self.root);
+            self.frontier.push(r);
         }
         self.expand_top_down(ctx);
     }
@@ -267,8 +280,8 @@ impl Actor for DirOptBfsActor {
                 let inbox = std::mem::take(&mut self.inbox);
                 for (v, parent) in inbox {
                     if self.set_parent(v, parent) {
-                        self.mark_visited(v);
-                        self.frontier.push(v);
+                        let r = self.mark_visited(v);
+                        self.frontier.push(r);
                     }
                 }
                 if ctx.locality() == 0 {
@@ -319,6 +332,11 @@ pub fn run_with_params(
     alpha: f64,
     beta: f64,
 ) -> (BfsResult, u32, u32) {
+    assert!(
+        !dist.has_mirrors(),
+        "direction-optimizing BFS requires a mirror-free partition scheme \
+         (block|edge_balanced|hash); use the async or level-sync engine for vertex cuts"
+    );
     let dist = Arc::new(dist.clone());
     let parents = AtomicLongVector::new(dist.n(), dist.p(), -1);
     let actors: Vec<DirOptBfsActor> = dist
@@ -348,7 +366,8 @@ pub fn run_with_params(
             td_rounds: 0,
         })
         .collect();
-    let (actors, report) = SimRuntime::new(cfg).run(actors);
+    let (actors, mut report) = SimRuntime::new(cfg).run(actors);
+    report.partition = dist.partition_stats();
     let td = actors.iter().map(|a| a.td_rounds).max().unwrap_or(0);
     let bu = actors.iter().map(|a| a.bu_rounds).max().unwrap_or(0);
     (BfsResult { parents: parents.to_vec(), report }, td, bu)

@@ -7,6 +7,14 @@
 //! activity count sent to locality 0, which broadcasts the verdict), so
 //! each level costs **two global barriers** — the synchronization overhead
 //! the paper's asynchronous variant eliminates (Fig. 1 discussion).
+//!
+//! Partitioning is scheme-generic. Under a vertex cut, a frontier vertex's
+//! row is split across localities: when the master expands it, it also
+//! sends a [`BspMsg::MirrorExpand`] naming the destination's ghost slots,
+//! and the mirror expands the remotely homed edges *immediately in the
+//! message handler* — the runtime's barrier waits for network quiescence,
+//! so the cascade completes inside the same superstep and levels stay
+//! minimal. 1-D schemes never take this path.
 
 use std::sync::Arc;
 
@@ -19,8 +27,11 @@ use super::BfsResult;
 /// BSP BFS messages.
 #[derive(Debug, Clone)]
 pub enum BspMsg {
-    /// Batched remote discoveries: `(vertex, parent)` pairs.
-    Visits(Vec<(VertexId, VertexId)>),
+    /// Batched remote discoveries: `(destination master index, parent)`.
+    Visits(Vec<(u32, VertexId)>),
+    /// Ghost slots at the destination whose vertex the master is expanding
+    /// this superstep — the mirror expands its share of the row now.
+    MirrorExpand(Vec<u32>),
     /// Superstep activity count, reduced at locality 0.
     Count(u64),
     /// Locality 0's verdict: keep going?
@@ -31,6 +42,7 @@ impl Message for BspMsg {
     fn wire_bytes(&self) -> usize {
         match self {
             BspMsg::Visits(v) => 8 * v.len(),
+            BspMsg::MirrorExpand(v) => 4 * v.len(),
             BspMsg::Count(_) => 8,
             BspMsg::Continue(_) => 1,
         }
@@ -41,6 +53,7 @@ impl Message for BspMsg {
         // batching amortizes envelopes, not per-vertex work.
         match self {
             BspMsg::Visits(v) => v.len(),
+            BspMsg::MirrorExpand(v) => v.len(),
             _ => 1,
         }
     }
@@ -55,11 +68,12 @@ enum Phase {
 /// Per-locality BSP BFS state.
 pub struct BspBfsActor {
     shard: Arc<Shard>,
-    dist: Arc<DistGraph>,
     parents: AtomicLongVector,
     root: VertexId,
-    frontier: Vec<VertexId>,
-    inbox: Vec<(VertexId, VertexId)>,
+    /// Next-superstep frontier as local rows (owned rows only; mirror
+    /// expansion happens eagerly on message receipt).
+    frontier: Vec<u32>,
+    inbox: Vec<(u32, VertexId)>,
     counts_seen: u32,
     counts_sum: u64,
     continue_flag: bool,
@@ -73,29 +87,54 @@ impl BspBfsActor {
         self.parents.cas(v as usize, -1, parent as i64)
     }
 
+    /// Expand the locally homed edges of one local row (owned frontier row
+    /// or mirror row being cascaded). Local discoveries feed the next
+    /// frontier; remote ones go to the per-destination `outgoing` buffers.
+    fn expand_row(
+        &mut self,
+        row: usize,
+        outgoing: &mut [Vec<(u32, VertexId)>],
+        activity: &mut u64,
+    ) {
+        let n_owned = self.shard.n_local();
+        let u = self.shard.global_of(row);
+        let shard = Arc::clone(&self.shard);
+        for &t in shard.row_neighbors_local(row) {
+            let t = t as usize;
+            if t < n_owned {
+                if self.set_parent(shard.owned_ids[t], u) {
+                    self.frontier.push(t as u32);
+                    *activity += 1;
+                }
+            } else {
+                let gi = t - n_owned;
+                let dst = shard.ghost_owner[gi] as usize;
+                outgoing[dst].push((shard.ghost_master_index[gi], u));
+                *activity += 1;
+            }
+        }
+    }
+
     /// Expand the current frontier one level: local discoveries feed the
     /// next frontier directly; remote ones go to per-destination combiners
     /// shipped as one batched message per destination (PBGL's buffering).
+    /// Frontier vertices with mirrors ask their mirrors to expand too.
     fn expand_and_report(&mut self, ctx: &mut Ctx<BspMsg>) {
-        let here = ctx.locality();
-        let p = ctx.n_localities();
-        let mut next: Vec<VertexId> = Vec::new();
-        let mut outgoing: Vec<Vec<(VertexId, VertexId)>> = vec![Vec::new(); p as usize];
+        let p = ctx.n_localities() as usize;
+        let mut outgoing: Vec<Vec<(u32, VertexId)>> = vec![Vec::new(); p];
+        let mut mirror_out: Vec<Vec<u32>> = vec![Vec::new(); p];
         let mut activity: u64 = 0;
         let frontier = std::mem::take(&mut self.frontier);
-        for &u in &frontier {
-            let lu = self.shard.local_index(u);
-            for &w in self.shard.out_neighbors(lu) {
-                let dst = self.dist.owner(w);
-                if dst == here {
-                    if self.set_parent(w, u) {
-                        next.push(w);
-                        activity += 1;
-                    }
-                } else {
-                    outgoing[dst as usize].push((w, u));
-                    activity += 1;
-                }
+        for &row in &frontier {
+            for &(dst, gi) in self.shard.mirrors(row as usize) {
+                mirror_out[dst as usize].push(gi);
+                activity += 1;
+            }
+            self.expand_row(row as usize, &mut outgoing, &mut activity);
+        }
+        for (dst, batch) in mirror_out.into_iter().enumerate() {
+            if !batch.is_empty() {
+                ctx.send(dst as LocalityId, BspMsg::MirrorExpand(batch));
             }
         }
         for (dst, batch) in outgoing.into_iter().enumerate() {
@@ -103,7 +142,6 @@ impl BspBfsActor {
                 ctx.send(dst as LocalityId, BspMsg::Visits(batch));
             }
         }
-        self.frontier = next;
         ctx.send(0, BspMsg::Count(activity));
         self.phase = Phase::AfterExpand;
         ctx.request_barrier();
@@ -114,16 +152,37 @@ impl Actor for BspBfsActor {
     type Msg = BspMsg;
 
     fn on_start(&mut self, ctx: &mut Ctx<BspMsg>) {
-        if self.dist.owner(self.root) == ctx.locality() && self.set_parent(self.root, self.root)
-        {
-            self.frontier.push(self.root);
+        if let Ok(r) = self.shard.owned_ids.binary_search(&self.root) {
+            if self.set_parent(self.root, self.root) {
+                self.frontier.push(r as u32);
+            }
         }
         self.expand_and_report(ctx);
     }
 
-    fn on_message(&mut self, _ctx: &mut Ctx<BspMsg>, _from: LocalityId, msg: BspMsg) {
+    fn on_message(&mut self, ctx: &mut Ctx<BspMsg>, _from: LocalityId, msg: BspMsg) {
         match msg {
             BspMsg::Visits(batch) => self.inbox.extend(batch),
+            BspMsg::MirrorExpand(slots) => {
+                // Cascade inside the same superstep: discoveries here join
+                // the *next* frontier (level L+1), remote proposals reach
+                // their masters' inboxes before the barrier fires.
+                let p = ctx.n_localities() as usize;
+                let n_owned = self.shard.n_local();
+                let mut outgoing: Vec<Vec<(u32, VertexId)>> = vec![Vec::new(); p];
+                let mut cascade_activity = 0u64;
+                for gi in slots {
+                    self.expand_row(n_owned + gi as usize, &mut outgoing, &mut cascade_activity);
+                }
+                for (dst, batch) in outgoing.into_iter().enumerate() {
+                    if !batch.is_empty() {
+                        ctx.send(dst as LocalityId, BspMsg::Visits(batch));
+                    }
+                }
+                // The master already counted the scatter itself, which
+                // guarantees the next superstep runs; cascade discoveries
+                // are expanded there and counted then.
+            }
             BspMsg::Count(c) => {
                 self.counts_seen += 1;
                 self.counts_sum += c;
@@ -137,9 +196,9 @@ impl Actor for BspBfsActor {
             Phase::AfterExpand => {
                 // Fold remote discoveries into the next frontier.
                 let inbox = std::mem::take(&mut self.inbox);
-                for (v, parent) in inbox {
-                    if self.set_parent(v, parent) {
-                        self.frontier.push(v);
+                for (idx, parent) in inbox {
+                    if self.set_parent(self.shard.owned_ids[idx as usize], parent) {
+                        self.frontier.push(idx);
                     }
                 }
                 if ctx.locality() == 0 {
@@ -167,14 +226,12 @@ impl Actor for BspBfsActor {
 
 /// Run level-synchronous BSP BFS over `dist` from `root`.
 pub fn run(dist: &DistGraph, root: VertexId, cfg: SimConfig) -> BfsResult {
-    let dist = Arc::new(dist.clone());
     let parents = AtomicLongVector::new(dist.n(), dist.p(), -1);
     let actors: Vec<BspBfsActor> = dist
         .shards
         .iter()
         .map(|s| BspBfsActor {
             shard: Arc::new(s.clone()),
-            dist: Arc::clone(&dist),
             parents: parents.clone(),
             root,
             frontier: Vec::new(),
@@ -186,7 +243,8 @@ pub fn run(dist: &DistGraph, root: VertexId, cfg: SimConfig) -> BfsResult {
             levels: 0,
         })
         .collect();
-    let (_, report) = SimRuntime::new(cfg).run(actors);
+    let (_, mut report) = SimRuntime::new(cfg).run(actors);
+    report.partition = dist.partition_stats();
     BfsResult { parents: parents.to_vec(), report }
 }
 
@@ -195,7 +253,7 @@ mod tests {
     use super::*;
     use crate::algorithms::bfs::{sequential, tree_levels, validate_parents};
     use crate::amt::NetConfig;
-    use crate::graph::generators;
+    use crate::graph::{generators, PartitionKind};
 
     fn check(g: &crate::graph::Csr, p: u32, root: VertexId) -> BfsResult {
         let dist = DistGraph::block(g, p);
@@ -218,12 +276,29 @@ mod tests {
 
     #[test]
     fn level_sync_trees_are_minimal_depth() {
-        // Unlike async BFS, level-synchronous BFS produces true BFS levels.
+        // Unlike CAS-based async BFS, level-synchronous BFS produces true
+        // BFS levels.
         let g = generators::kron(8, 6, 21);
         let res = check(&g, 4, 0);
         let lv = tree_levels(0, &res.parents);
         let d = sequential::distances(&g, 0);
         assert_eq!(lv, d);
+    }
+
+    #[test]
+    fn minimal_levels_under_every_partition_scheme() {
+        // The same-superstep mirror cascade keeps level synchrony exact
+        // even when rows are split by a vertex cut.
+        let g = generators::kron(7, 6, 33);
+        let d = sequential::distances(&g, 0);
+        for kind in PartitionKind::all() {
+            for p in [2u32, 4, 8] {
+                let dist = DistGraph::build_with(&g, kind.build(&g, p));
+                let res = run(&dist, 0, SimConfig::deterministic(NetConfig::default()));
+                validate_parents(&g, 0, &res.parents).unwrap();
+                assert_eq!(tree_levels(0, &res.parents), d, "{kind:?} p={p}");
+            }
+        }
     }
 
     #[test]

@@ -5,8 +5,16 @@
 //! standard Shiloach-Vishkin-flavored formulation frameworks like Pregel
 //! ship. Remote label updates route through the shared
 //! [`amt::aggregate`](crate::amt::aggregate) combiner (fold = min over
-//! labels, drained once per superstep), so at most one update per
-//! destination vertex hits the wire each round.
+//! labels, keyed by the destination's master index, drained once per
+//! superstep), so at most one update per destination vertex hits the wire
+//! each round.
+//!
+//! Scheme-generic: under a vertex cut every mirror row starts active (its
+//! locally homed edges must propagate the initial labels), and a master
+//! whose label improves scatters the new label to its mirrors through a
+//! second Manual-policy combiner; the mirror re-activates the row for the
+//! next superstep. Monotone min-folding makes the extra rounds converge
+//! to the same fixpoint as the 1-D layout.
 
 use std::sync::Arc;
 
@@ -78,8 +86,10 @@ pub fn component_count(labels: &[VertexId]) -> usize {
 /// Label-propagation messages.
 #[derive(Debug, Clone)]
 pub enum CcMsg {
-    /// Batched label updates (one folded min per destination vertex).
+    /// Batched label updates toward masters: `(master index, min label)`.
     Labels(Batch<VertexId>),
+    /// Batched label scatter toward mirrors: `(ghost slot, label)`.
+    MirrorLabels(Batch<VertexId>),
     /// Activity reduction.
     Count(u64),
     /// Coordinator verdict.
@@ -90,6 +100,7 @@ impl Message for CcMsg {
     fn wire_bytes(&self) -> usize {
         match self {
             CcMsg::Labels(b) => b.wire_bytes(),
+            CcMsg::MirrorLabels(b) => b.wire_bytes(),
             CcMsg::Count(_) => 8,
             CcMsg::Continue(_) => 1,
         }
@@ -98,6 +109,7 @@ impl Message for CcMsg {
     fn item_count(&self) -> usize {
         match self {
             CcMsg::Labels(b) => b.len(),
+            CcMsg::MirrorLabels(b) => b.len(),
             _ => 1,
         }
     }
@@ -111,53 +123,86 @@ enum Phase {
 
 struct CcActor {
     shard: Arc<Shard>,
-    dist: Arc<DistGraph>,
+    /// Label per local row: owned rows authoritative, ghost rows cached.
     labels: Vec<VertexId>,
-    active: Vec<u32>, // local indices with changed labels
+    active: Vec<u32>, // local rows queued for the next propagate round
     in_active: Vec<bool>,
-    inbox: Vec<(VertexId, VertexId)>,
+    inbox: Vec<(u32, VertexId)>,
     counts_sum: u64,
+    /// Activity earned outside a propagate round (scatter queued at the
+    /// barrier), folded into the next Count so termination can't outrun
+    /// pending mirror work.
+    pending_activity: u64,
     continue_flag: bool,
     phase: Phase,
-    /// Superstep combiner: folded min labels, drained once per round.
+    /// Superstep combiner toward masters: folded min labels, drained once
+    /// per round.
     agg: Aggregator<VertexId>,
+    /// Superstep combiner toward mirrors (label scatter).
+    mirror_agg: Aggregator<VertexId>,
 }
 
 impl CcActor {
-    fn propagate(&mut self, ctx: &mut Ctx<CcMsg>) {
-        let here = ctx.locality();
-        let mut activity = 0u64;
-        let active = std::mem::take(&mut self.active);
-        for &lu in &active {
-            self.in_active[lu as usize] = false;
+    fn activate(&mut self, row: usize) {
+        if !self.in_active[row] {
+            self.in_active[row] = true;
+            self.active.push(row as u32);
         }
-        let mut next: Vec<u32> = Vec::new();
-        for &lu in &active {
-            let label = self.labels[lu as usize];
-            for &w in self.shard.out_neighbors(lu as usize) {
-                let dst = self.dist.owner(w);
-                if dst == here {
-                    let lw = (w as usize - self.shard.range.start) as u32;
-                    if label < self.labels[lw as usize] {
-                        self.labels[lw as usize] = label;
-                        if !self.in_active[lw as usize] {
-                            self.in_active[lw as usize] = true;
-                            next.push(lw);
-                        }
+    }
+
+    /// Apply `label` to the owned `row`; on improvement, queue the row and
+    /// scatter the new label to its mirrors. Returns whether it improved.
+    fn improve_owned(&mut self, row: usize, label: VertexId) -> bool {
+        if label >= self.labels[row] {
+            return false;
+        }
+        self.labels[row] = label;
+        self.activate(row);
+        let shard = Arc::clone(&self.shard);
+        for &(dst, gi) in shard.mirrors(row) {
+            // Manual policy: accumulate never auto-flushes.
+            let flushed = self.mirror_agg.accumulate(dst, gi, label);
+            debug_assert!(flushed.is_none());
+        }
+        true
+    }
+
+    fn propagate(&mut self, ctx: &mut Ctx<CcMsg>) {
+        let n_owned = self.shard.n_local();
+        let mut activity = self.pending_activity;
+        self.pending_activity = 0;
+        let active = std::mem::take(&mut self.active);
+        for &row in &active {
+            self.in_active[row as usize] = false;
+        }
+        for &row in &active {
+            let label = self.labels[row as usize];
+            let shard = Arc::clone(&self.shard);
+            for &t in shard.row_neighbors_local(row as usize) {
+                let t = t as usize;
+                if t < n_owned {
+                    if self.improve_owned(t, label) {
                         activity += 1;
                     }
                 } else {
+                    let gi = t - n_owned;
                     // Manual policy: accumulate never auto-flushes.
-                    if let Some(batch) = self.agg.accumulate(dst, w, label) {
-                        ctx.send(dst, CcMsg::Labels(batch));
-                    }
+                    let flushed = self.agg.accumulate(
+                        shard.ghost_owner[gi],
+                        shard.ghost_master_index[gi],
+                        label,
+                    );
+                    debug_assert!(flushed.is_none());
                     activity += 1;
                 }
             }
         }
-        self.active = next;
         for (dst, batch) in self.agg.drain() {
             ctx.send(dst, CcMsg::Labels(batch));
+        }
+        for (dst, batch) in self.mirror_agg.drain() {
+            ctx.send(dst, CcMsg::MirrorLabels(batch));
+            activity += 1;
         }
         ctx.send(0, CcMsg::Count(activity));
         self.phase = Phase::AfterPropagate;
@@ -169,15 +214,31 @@ impl Actor for CcActor {
     type Msg = CcMsg;
 
     fn on_start(&mut self, ctx: &mut Ctx<CcMsg>) {
-        // Everyone starts active with their own id as label.
-        self.active = (0..self.shard.n_local() as u32).collect();
-        self.in_active = vec![true; self.shard.n_local()];
+        // Every owned row starts active with its own id as label; mirror
+        // rows start active too, so remotely homed edges propagate the
+        // initial labels (their labels are the cached ghost ids).
+        self.in_active = vec![false; self.shard.n_rows()];
+        for row in 0..self.shard.n_rows() {
+            if !self.shard.row_neighbors_local(row).is_empty() || row < self.shard.n_local() {
+                self.activate(row);
+            }
+        }
         self.propagate(ctx);
     }
 
     fn on_message(&mut self, _ctx: &mut Ctx<CcMsg>, _from: LocalityId, msg: CcMsg) {
         match msg {
             CcMsg::Labels(batch) => self.inbox.extend(batch.items),
+            CcMsg::MirrorLabels(batch) => {
+                let n_owned = self.shard.n_local();
+                for (gi, label) in batch.items {
+                    let row = n_owned + gi as usize;
+                    if label < self.labels[row] {
+                        self.labels[row] = label;
+                        self.activate(row);
+                    }
+                }
+            }
             CcMsg::Count(c) => self.counts_sum += c,
             CcMsg::Continue(b) => self.continue_flag = b,
         }
@@ -187,14 +248,11 @@ impl Actor for CcActor {
         match self.phase {
             Phase::AfterPropagate => {
                 let inbox = std::mem::take(&mut self.inbox);
-                for (v, label) in inbox {
-                    let lv = (v as usize - self.shard.range.start) as u32;
-                    if label < self.labels[lv as usize] {
-                        self.labels[lv as usize] = label;
-                        if !self.in_active[lv as usize] {
-                            self.in_active[lv as usize] = true;
-                            self.active.push(lv);
-                        }
+                for (idx, label) in inbox {
+                    if self.improve_owned(idx as usize, label) {
+                        // The scatter queued by improve_owned ships with
+                        // the next round's drain; keep the run alive.
+                        self.pending_activity += 1;
                     }
                 }
                 if ctx.locality() == 0 {
@@ -208,6 +266,10 @@ impl Actor for CcActor {
                 ctx.request_barrier();
             }
             Phase::AwaitDecision => {
+                // The verdict is uniform: every activation was backed by a
+                // counted activity (local improvement, sender's proposal,
+                // or a scatter batch), so `go` is true whenever any
+                // locality still holds active rows or pending scatter.
                 if self.continue_flag {
                     self.propagate(ctx);
                 }
@@ -218,23 +280,29 @@ impl Actor for CcActor {
 
 /// Run BSP min-label propagation CC.
 pub fn run(dist: &DistGraph, cfg: SimConfig) -> CcResult {
-    let dist = Arc::new(dist.clone());
-    let ranges = dist.partition.ranges();
     let actors: Vec<CcActor> = dist
         .shards
         .iter()
         .map(|s| CcActor {
             shard: Arc::new(s.clone()),
-            dist: Arc::clone(&dist),
-            labels: (s.range.start as VertexId..s.range.end as VertexId).collect(),
+            labels: (0..s.n_rows()).map(|r| s.global_of(r)).collect(),
             active: Vec::new(),
             in_active: Vec::new(),
             inbox: Vec::new(),
             counts_sum: 0,
+            pending_activity: 0,
             continue_flag: false,
             phase: Phase::AfterPropagate,
             agg: Aggregator::new(
-                &ranges,
+                dist.owned_counts(),
+                s.locality,
+                FlushPolicy::Manual,
+                &cfg.net,
+                ITEM_BYTES,
+                min_label,
+            ),
+            mirror_agg: Aggregator::new(
+                dist.ghost_counts(),
                 s.locality,
                 FlushPolicy::Manual,
                 &cfg.net,
@@ -246,10 +314,12 @@ pub fn run(dist: &DistGraph, cfg: SimConfig) -> CcResult {
     let (actors, mut report) = SimRuntime::new(cfg).run(actors);
     for a in &actors {
         report.agg.merge(a.agg.stats());
+        report.agg.merge(a.mirror_agg.stats());
     }
+    report.partition = dist.partition_stats();
     let mut labels = vec![0 as VertexId; dist.n()];
     for a in &actors {
-        labels[a.shard.range.clone()].copy_from_slice(&a.labels);
+        a.shard.scatter_owned(&a.labels[..a.shard.n_local()], &mut labels);
     }
     CcResult { labels, report }
 }
@@ -258,7 +328,7 @@ pub fn run(dist: &DistGraph, cfg: SimConfig) -> CcResult {
 mod tests {
     use super::*;
     use crate::amt::NetConfig;
-    use crate::graph::generators;
+    use crate::graph::{generators, PartitionKind};
 
     #[test]
     fn matches_union_find() {
@@ -268,6 +338,19 @@ mod tests {
             let d = DistGraph::block(&g, p);
             let res = run(&d, SimConfig::deterministic(NetConfig::default()));
             assert_eq!(res.labels, want, "p={p}");
+        }
+    }
+
+    #[test]
+    fn matches_union_find_under_every_partition_scheme() {
+        let g = generators::kron(7, 4, 61);
+        let want = union_find(&g);
+        for kind in PartitionKind::all() {
+            for p in [2u32, 4, 8] {
+                let d = DistGraph::build_with(&g, kind.build(&g, p));
+                let res = run(&d, SimConfig::deterministic(NetConfig::default()));
+                assert_eq!(res.labels, want, "{kind:?} p={p}");
+            }
         }
     }
 

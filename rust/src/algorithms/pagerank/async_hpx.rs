@@ -21,6 +21,12 @@
 //! barrier between exchange and update) and apply remote contributions *on
 //! arrival*, so the only experimental difference vs [`bsp`](super::bsp) is
 //! message granularity and overlap — exactly the contrast Figure 2 probes.
+//!
+//! Under a vertex cut each owned vertex scatters its per-iteration
+//! contribution to its mirrors through a second combiner
+//! ([`AsyncPrMsg::ToMirror`]); the mirror expands its share of the row on
+//! arrival, forwarding the resulting contributions to their masters
+//! before the iteration barrier. 1-D schemes never touch this path.
 
 use std::sync::Arc;
 
@@ -30,22 +36,33 @@ use crate::graph::{DistGraph, Shard};
 
 use super::{PrParams, PrResult};
 
-/// A flushed combiner of `(vertex, summed contribution)` pairs. An
-/// unbatched flush carries exactly one pair — the paper's naive
-/// `Contrib(v, c)` remote action.
+/// Async PageRank wire format.
 #[derive(Debug, Clone)]
-pub struct AsyncPrMsg(pub Batch<f32>);
+pub enum AsyncPrMsg {
+    /// `(master index, summed contribution)` toward a vertex's master. An
+    /// unbatched flush carries exactly one pair — the paper's naive
+    /// `Contrib(v, c)` remote action.
+    ToMaster(Batch<f32>),
+    /// `(ghost slot, contribution)` toward a vertex's mirror.
+    ToMirror(Batch<f32>),
+}
 
 /// Per-item wire size: vertex id + contribution.
 const ITEM_BYTES: usize = 8;
 
 impl Message for AsyncPrMsg {
     fn wire_bytes(&self) -> usize {
-        self.0.wire_bytes()
+        match self {
+            AsyncPrMsg::ToMaster(b) => b.wire_bytes(),
+            AsyncPrMsg::ToMirror(b) => b.wire_bytes(),
+        }
     }
 
     fn item_count(&self) -> usize {
-        self.0.len()
+        match self {
+            AsyncPrMsg::ToMaster(b) => b.len(),
+            AsyncPrMsg::ToMirror(b) => b.len(),
+        }
     }
 }
 
@@ -56,11 +73,13 @@ fn add(acc: &mut f32, c: f32) {
 /// Per-locality asynchronous PageRank state.
 pub struct AsyncPrActor {
     shard: Arc<Shard>,
-    dist: Arc<DistGraph>,
+    n_global: usize,
     params: PrParams,
     /// Remote-contribution combiner (shared aggregation subsystem).
     pub agg: Aggregator<f32>,
-    /// Owned ranks (local index).
+    /// Mirror-scatter combiner (idle under 1-D schemes).
+    pub mirror_agg: Aggregator<f32>,
+    /// Owned ranks (local row).
     pub rank: Vec<f32>,
     z: Vec<f32>,
     iter: u32,
@@ -69,32 +88,55 @@ pub struct AsyncPrActor {
 }
 
 impl AsyncPrActor {
+    /// Push one row's locally homed edges at contribution `c`: local
+    /// targets accumulate into `z`, remote targets fold into the
+    /// master-bound combiner (flushed batches ship eagerly).
+    fn push_row(&mut self, ctx: &mut Ctx<AsyncPrMsg>, row: usize, c: f32) {
+        let n_owned = self.shard.n_local();
+        let shard = Arc::clone(&self.shard);
+        for &t in shard.row_neighbors_local(row) {
+            let t = t as usize;
+            if t < n_owned {
+                self.z[t] += c;
+            } else {
+                let gi = t - n_owned;
+                let dst = shard.ghost_owner[gi];
+                if let Some(batch) =
+                    self.agg.accumulate(dst, shard.ghost_master_index[gi], c)
+                {
+                    ctx.send(dst, AsyncPrMsg::ToMaster(batch));
+                }
+            }
+        }
+    }
+
     /// Contribution phase. Remote contributions are *applied on arrival*
     /// (the receiving handler updates `z` immediately — HPX remote actions
     /// with atomic updates), so communication overlaps compute.
     fn compute_and_send(&mut self, ctx: &mut Ctx<AsyncPrMsg>) {
-        let here = ctx.locality();
         let n_local = self.shard.n_local();
         for u in 0..n_local {
             let deg = (self.shard.out_degree[u].max(1)) as f32;
             let c = self.rank[u] / deg;
-            for &v in self.shard.out_neighbors(u) {
-                let dst = self.dist.owner(v);
-                if dst == here {
-                    self.z[v as usize - self.shard.range.start] += c;
-                } else if let Some(batch) = self.agg.accumulate(dst, v, c) {
-                    ctx.send(dst, AsyncPrMsg(batch));
+            let shard = Arc::clone(&self.shard);
+            for &(dst, gi) in shard.mirrors(u) {
+                if let Some(batch) = self.mirror_agg.accumulate(dst, gi, c) {
+                    ctx.send(dst, AsyncPrMsg::ToMirror(batch));
                 }
             }
+            self.push_row(ctx, u, c);
         }
         for (dst, batch) in self.agg.drain() {
-            ctx.send(dst, AsyncPrMsg(batch));
+            ctx.send(dst, AsyncPrMsg::ToMaster(batch));
+        }
+        for (dst, batch) in self.mirror_agg.drain() {
+            ctx.send(dst, AsyncPrMsg::ToMirror(batch));
         }
         ctx.request_barrier();
     }
 
     fn update_ranks(&mut self) {
-        let base = (1.0 - self.params.alpha) / self.dist.n() as f32;
+        let base = (1.0 - self.params.alpha) / self.n_global as f32;
         let mut delta = 0.0f32;
         for v in 0..self.shard.n_local() {
             let new = base + self.params.alpha * self.z[v];
@@ -115,12 +157,27 @@ impl Actor for AsyncPrActor {
         }
     }
 
-    fn on_message(&mut self, _ctx: &mut Ctx<AsyncPrMsg>, _from: LocalityId, msg: AsyncPrMsg) {
-        // Applied on arrival — the "asynchronous remote action ...
-        // atomically updating the destination vertex" of §4.2.
-        let start = self.shard.range.start;
-        for (v, c) in msg.0.items {
-            self.z[v as usize - start] += c;
+    fn on_message(&mut self, ctx: &mut Ctx<AsyncPrMsg>, _from: LocalityId, msg: AsyncPrMsg) {
+        match msg {
+            // Applied on arrival — the "asynchronous remote action ...
+            // atomically updating the destination vertex" of §4.2.
+            AsyncPrMsg::ToMaster(b) => {
+                for (idx, c) in b.items {
+                    self.z[idx as usize] += c;
+                }
+            }
+            // Mirror scatter: expand our share of the row now; the
+            // resulting master-bound contributions must reach their
+            // destinations before this iteration's barrier, so drain.
+            AsyncPrMsg::ToMirror(b) => {
+                let n_owned = self.shard.n_local();
+                for (gi, c) in b.items {
+                    self.push_row(ctx, n_owned + gi as usize, c);
+                }
+                for (dst, batch) in self.agg.drain() {
+                    ctx.send(dst, AsyncPrMsg::ToMaster(batch));
+                }
+            }
         }
     }
 
@@ -135,17 +192,30 @@ impl Actor for AsyncPrActor {
 
 /// Run asynchronous PageRank with the given flush policy.
 pub fn run(dist: &DistGraph, params: PrParams, policy: FlushPolicy, cfg: SimConfig) -> PrResult {
-    let dist = Arc::new(dist.clone());
     let n = dist.n();
-    let ranges = dist.partition.ranges();
     let actors: Vec<AsyncPrActor> = dist
         .shards
         .iter()
         .map(|s| AsyncPrActor {
             shard: Arc::new(s.clone()),
-            dist: Arc::clone(&dist),
+            n_global: n,
             params,
-            agg: Aggregator::new(&ranges, s.locality, policy, &cfg.net, ITEM_BYTES, add),
+            agg: Aggregator::new(
+                dist.owned_counts(),
+                s.locality,
+                policy,
+                &cfg.net,
+                ITEM_BYTES,
+                add,
+            ),
+            mirror_agg: Aggregator::new(
+                dist.ghost_counts(),
+                s.locality,
+                policy,
+                &cfg.net,
+                ITEM_BYTES,
+                add,
+            ),
             rank: vec![1.0 / n as f32; s.n_local()],
             z: vec![0.0; s.n_local()],
             iter: 0,
@@ -155,8 +225,9 @@ pub fn run(dist: &DistGraph, params: PrParams, policy: FlushPolicy, cfg: SimConf
     let (actors, mut report) = SimRuntime::new(cfg).run(actors);
     for a in &actors {
         report.agg.merge(a.agg.stats());
+        report.agg.merge(a.mirror_agg.stats());
     }
-    super::bsp::collect(&dist, actors.iter().map(|a| (&a.rank, &a.deltas)), params, report)
+    super::bsp::collect(dist, actors.iter().map(|a| (&a.rank, &a.deltas)), params, report)
 }
 
 #[cfg(test)]
@@ -164,7 +235,7 @@ mod tests {
     use super::*;
     use crate::algorithms::pagerank::{max_abs_diff, sequential};
     use crate::amt::NetConfig;
-    use crate::graph::generators;
+    use crate::graph::{generators, PartitionKind};
 
     fn det() -> SimConfig {
         SimConfig::deterministic(NetConfig::default())
@@ -199,6 +270,28 @@ mod tests {
         ] {
             let res = run(&dist, params, policy, det());
             assert!(max_abs_diff(&res.ranks, &want) < 1e-5, "{policy:?}");
+        }
+    }
+
+    #[test]
+    fn vertex_cut_matches_oracle_under_every_policy() {
+        let g = generators::kron(7, 6, 29);
+        let params = PrParams { alpha: 0.85, iterations: 10 };
+        let want = sequential::pagerank(&g, params);
+        let dist = DistGraph::build_with(&g, PartitionKind::VertexCut.build(&g, 4));
+        assert!(dist.has_mirrors());
+        for policy in [
+            FlushPolicy::Unbatched,
+            FlushPolicy::Items(8),
+            FlushPolicy::Adaptive,
+            FlushPolicy::Manual,
+        ] {
+            let res = run(&dist, params, policy, det());
+            assert!(
+                max_abs_diff(&res.ranks, &want) < 1e-4,
+                "{policy:?}: {}",
+                max_abs_diff(&res.ranks, &want)
+            );
         }
     }
 

@@ -2,98 +2,141 @@
 //!
 //! Each iteration is one superstep: every locality computes contributions
 //! for its owned vertices, applies local ones directly, folds remote ones
-//! into a dense per-destination combiner, and ships **one batched message
-//! per destination locality**. A global barrier separates the exchange
-//! from the rank update; incoming contributions are applied *at the
-//! barrier* (strict BSP semantics — no overlap, maximal batching). This is
-//! the communication pattern that makes Boost's PageRank hard to beat
+//! into a dense per-destination combiner (keyed by the destination's
+//! master index), and ships **one batched message per destination
+//! locality**. A global barrier separates the exchange from the rank
+//! update; incoming contributions are applied *at the barrier* (strict
+//! BSP semantics — no overlap, maximal batching). This is the
+//! communication pattern that makes Boost's PageRank hard to beat
 //! (paper §5, Fig. 2): PageRank's traffic is dense and regular, so batching
 //! amortizes per-message costs that fine-grained asynchrony keeps paying.
+//!
+//! Under a vertex cut each owned vertex additionally scatters its
+//! per-iteration contribution `rank/deg` to its mirrors
+//! ([`BspPrMsg::MirrorContribs`]); the mirror expands its share of the
+//! row immediately in the handler, so the replicated traffic still lands
+//! inside the same superstep. 1-D schemes never take this path.
 
 use std::sync::Arc;
 
 use crate::amt::executor::{ChunkPolicy, Executor};
 use crate::amt::sim::{Actor, Ctx, LocalityId, Message, SimConfig, SimRuntime};
-use crate::graph::{DistGraph, Shard, VertexId};
+use crate::graph::{DistGraph, Shard};
 
 use super::{PrParams, PrResult};
 
-/// Batched contribution exchange: `(destination vertex, contribution)`.
+/// BSP PageRank messages.
 #[derive(Debug, Clone)]
-pub struct Contribs(pub Vec<(VertexId, f32)>);
+pub enum BspPrMsg {
+    /// Batched contribution exchange: `(destination master index, sum)`.
+    Contribs(Vec<(u32, f32)>),
+    /// Vertex-cut scatter: `(ghost slot at destination, contribution)`.
+    MirrorContribs(Vec<(u32, f32)>),
+}
 
-impl Message for Contribs {
+impl Message for BspPrMsg {
     fn wire_bytes(&self) -> usize {
-        8 * self.0.len()
+        match self {
+            BspPrMsg::Contribs(v) => 8 * v.len(),
+            BspPrMsg::MirrorContribs(v) => 8 * v.len(),
+        }
     }
 
     fn item_count(&self) -> usize {
-        // One combined contribution per destination vertex.
-        self.0.len()
+        // One combined contribution per destination slot.
+        match self {
+            BspPrMsg::Contribs(v) => v.len(),
+            BspPrMsg::MirrorContribs(v) => v.len(),
+        }
     }
 }
 
 /// Per-locality BSP PageRank state.
 pub struct BspPrActor {
     shard: Arc<Shard>,
-    dist: Arc<DistGraph>,
+    n_global: usize,
     params: PrParams,
-    /// Ranks of owned vertices (local index).
+    /// Ranks of owned vertices (local row).
     pub rank: Vec<f32>,
     z: Vec<f32>,
-    inbox: Vec<(VertexId, f32)>,
+    inbox: Vec<(u32, f32)>,
     iter: u32,
     /// Per-iteration local L1 delta (reduced by the driver afterwards).
     pub deltas: Vec<f32>,
     /// Optional intra-locality executor for the update loop (None = serial).
     executor: Option<Arc<Executor>>,
     chunk_policy: ChunkPolicy,
-    /// Dense per-destination combiners, allocated once and reused across
-    /// iterations with sparse clears (perf: ~3-4% on the local phase,
-    /// EXPERIMENTS.md §Perf iteration 2).
+    /// Dense per-destination combiners (destination master index),
+    /// allocated once and reused across iterations with sparse clears
+    /// (perf: ~3-4% on the local phase, EXPERIMENTS.md §Perf iteration 2).
     combiner: Vec<Vec<f32>>,
     touched: Vec<Vec<u32>>,
+    /// Owned-count layout of every destination (combiner allocation).
+    owned_counts: Vec<usize>,
 }
 
 impl BspPrActor {
+    /// Fold one row's locally homed out-edges at contribution `c` into the
+    /// local accumulator / remote combiners.
+    fn push_row(
+        &mut self,
+        row: usize,
+        c: f32,
+        here: usize,
+        combiner: &mut [Vec<f32>],
+        touched: &mut [Vec<u32>],
+    ) {
+        let n_owned = self.shard.n_local();
+        let shard = Arc::clone(&self.shard);
+        for &t in shard.row_neighbors_local(row) {
+            let t = t as usize;
+            if t < n_owned {
+                self.z[t] += c;
+            } else {
+                let gi = t - n_owned;
+                let d = shard.ghost_owner[gi] as usize;
+                let off = shard.ghost_master_index[gi] as usize;
+                debug_assert_ne!(d, here);
+                if combiner[d][off] == 0.0 {
+                    touched[d].push(off as u32);
+                }
+                combiner[d][off] += c;
+            }
+        }
+    }
+
     /// Phase 1+2 of paper §4.2: contribution accumulation + exchange.
-    fn compute_and_send(&mut self, ctx: &mut Ctx<Contribs>) {
-        let here = ctx.locality();
+    fn compute_and_send(&mut self, ctx: &mut Ctx<BspPrMsg>) {
+        let here = ctx.locality() as usize;
         let p = ctx.n_localities() as usize;
         let n_local = self.shard.n_local();
         if self.combiner.is_empty() {
-            self.combiner = (0..p)
-                .map(|l| vec![0.0f32; self.dist.partition.len_of(l as LocalityId)])
-                .collect();
+            self.combiner = self.owned_counts.iter().map(|&c| vec![0.0f32; c]).collect();
             self.touched = vec![Vec::new(); p];
         }
         let mut combiner = std::mem::take(&mut self.combiner);
         let mut touched = std::mem::take(&mut self.touched);
+        let mut mirror_out: Vec<Vec<(u32, f32)>> = vec![Vec::new(); p];
         for u in 0..n_local {
             let deg = (self.shard.out_degree[u].max(1)) as f32;
             let c = self.rank[u] / deg;
-            for &v in self.shard.out_neighbors(u) {
-                let dst = self.dist.owner(v);
-                let off = v as usize - self.dist.partition.range_of(dst).start;
-                if dst == here {
-                    self.z[off] += c;
-                } else {
-                    let d = dst as usize;
-                    if combiner[d][off] == 0.0 {
-                        touched[d].push(off as u32);
-                    }
-                    combiner[d][off] += c;
-                }
+            for &(dst, gi) in self.shard.mirrors(u) {
+                mirror_out[dst as usize].push((gi, c));
+            }
+            self.push_row(u, c, here, &mut combiner, &mut touched);
+        }
+        for (dst, batch) in mirror_out.into_iter().enumerate() {
+            if !batch.is_empty() {
+                ctx.send(dst as LocalityId, BspPrMsg::MirrorContribs(batch));
             }
         }
         for dst in 0..p {
-            if dst == here as usize || touched[dst].is_empty() {
+            if dst == here || touched[dst].is_empty() {
                 continue;
             }
-            let start = self.dist.partition.range_of(dst as LocalityId).start;
-            let mut batch: Vec<(VertexId, f32)> = touched[dst]
+            let mut batch: Vec<(u32, f32)> = touched[dst]
                 .iter()
-                .map(|&off| ((start + off as usize) as VertexId, combiner[dst][off as usize]))
+                .map(|&off| (off, combiner[dst][off as usize]))
                 .collect();
             batch.sort_by_key(|&(v, _)| v);
             // Reset only the touched slots (sparse clear) for reuse.
@@ -101,7 +144,7 @@ impl BspPrActor {
                 combiner[dst][off as usize] = 0.0;
             }
             touched[dst].clear();
-            ctx.send(dst as LocalityId, Contribs(batch));
+            ctx.send(dst as LocalityId, BspPrMsg::Contribs(batch));
         }
         self.combiner = combiner;
         self.touched = touched;
@@ -111,7 +154,7 @@ impl BspPrActor {
     /// Phases 2+3 of paper §4.2: rank update + error computation.
     fn update_ranks(&mut self) {
         let n_local = self.shard.n_local();
-        let base = (1.0 - self.params.alpha) / self.dist.n() as f32;
+        let base = (1.0 - self.params.alpha) / self.n_global as f32;
         let alpha = self.params.alpha;
         let delta = if let Some(ex) = &self.executor {
             use std::sync::atomic::{AtomicU64, Ordering};
@@ -164,24 +207,61 @@ impl SendPtr {
 }
 
 impl Actor for BspPrActor {
-    type Msg = Contribs;
+    type Msg = BspPrMsg;
 
-    fn on_start(&mut self, ctx: &mut Ctx<Contribs>) {
+    fn on_start(&mut self, ctx: &mut Ctx<BspPrMsg>) {
         if self.params.iterations > 0 {
             self.compute_and_send(ctx);
         }
     }
 
-    fn on_message(&mut self, _ctx: &mut Ctx<Contribs>, _from: LocalityId, msg: Contribs) {
-        // Strict BSP: buffer, apply at the barrier.
-        self.inbox.extend(msg.0);
+    fn on_message(&mut self, ctx: &mut Ctx<BspPrMsg>, _from: LocalityId, msg: BspPrMsg) {
+        match msg {
+            // Strict BSP: buffer, apply at the barrier.
+            BspPrMsg::Contribs(batch) => self.inbox.extend(batch),
+            // Vertex-cut scatter: expand the mirror rows now so the
+            // resulting contributions land inside this superstep. The
+            // cached combiner is sparse-cleared by compute_and_send (which
+            // always runs before any message of the superstep arrives), so
+            // it can be reused here instead of re-zeroing O(n) slots.
+            BspPrMsg::MirrorContribs(batch) => {
+                let here = ctx.locality() as usize;
+                let p = ctx.n_localities() as usize;
+                let n_owned = self.shard.n_local();
+                let mut combiner = std::mem::take(&mut self.combiner);
+                let mut touched = std::mem::take(&mut self.touched);
+                if combiner.is_empty() {
+                    combiner = self.owned_counts.iter().map(|&c| vec![0.0f32; c]).collect();
+                    touched = vec![Vec::new(); p];
+                }
+                for (gi, c) in batch {
+                    self.push_row(n_owned + gi as usize, c, here, &mut combiner, &mut touched);
+                }
+                for dst in 0..p {
+                    if touched[dst].is_empty() {
+                        continue;
+                    }
+                    let mut out: Vec<(u32, f32)> = touched[dst]
+                        .iter()
+                        .map(|&off| (off, combiner[dst][off as usize]))
+                        .collect();
+                    out.sort_by_key(|&(v, _)| v);
+                    for &off in &touched[dst] {
+                        combiner[dst][off as usize] = 0.0;
+                    }
+                    touched[dst].clear();
+                    ctx.send(dst as LocalityId, BspPrMsg::Contribs(out));
+                }
+                self.combiner = combiner;
+                self.touched = touched;
+            }
+        }
     }
 
-    fn on_barrier(&mut self, ctx: &mut Ctx<Contribs>, _epoch: u64) {
-        let start = self.shard.range.start;
+    fn on_barrier(&mut self, ctx: &mut Ctx<BspPrMsg>, _epoch: u64) {
         let inbox = std::mem::take(&mut self.inbox);
-        for (v, c) in inbox {
-            self.z[v as usize - start] += c;
+        for (idx, c) in inbox {
+            self.z[idx as usize] += c;
         }
         self.update_ranks();
         self.iter += 1;
@@ -205,14 +285,14 @@ pub fn run_with_executor(
     executor: Option<Arc<Executor>>,
     chunk_policy: ChunkPolicy,
 ) -> PrResult {
-    let dist = Arc::new(dist.clone());
     let n = dist.n();
+    let owned_counts: Vec<usize> = dist.owned_counts().to_vec();
     let actors: Vec<BspPrActor> = dist
         .shards
         .iter()
         .map(|s| BspPrActor {
             shard: Arc::new(s.clone()),
-            dist: Arc::clone(&dist),
+            n_global: n,
             params,
             rank: vec![1.0 / n as f32; s.n_local()],
             z: vec![0.0; s.n_local()],
@@ -223,10 +303,11 @@ pub fn run_with_executor(
             chunk_policy,
             combiner: Vec::new(),
             touched: Vec::new(),
+            owned_counts: owned_counts.clone(),
         })
         .collect();
     let (actors, report) = SimRuntime::new(cfg).run(actors);
-    collect(&dist, actors.iter().map(|a| (&a.rank, &a.deltas)), params, report)
+    collect(dist, actors.iter().map(|a| (&a.rank, &a.deltas)), params, report)
 }
 
 /// Assemble global ranks + reduced deltas from per-locality results.
@@ -238,13 +319,14 @@ pub(crate) fn collect<'a>(
 ) -> PrResult {
     let mut ranks = vec![0.0f32; dist.n()];
     let mut deltas = vec![0.0f32; params.iterations as usize];
-    for (l, (rank, local_deltas)) in parts.enumerate() {
-        let range = dist.partition.range_of(l as LocalityId);
-        ranks[range].copy_from_slice(rank);
+    for (shard, (rank, local_deltas)) in dist.shards.iter().zip(parts) {
+        shard.scatter_owned(rank, &mut ranks);
         for (i, d) in local_deltas.iter().enumerate() {
             deltas[i] += d;
         }
     }
+    let mut report = report;
+    report.partition = dist.partition_stats();
     PrResult { ranks, deltas, report }
 }
 
@@ -253,7 +335,7 @@ mod tests {
     use super::*;
     use crate::algorithms::pagerank::{max_abs_diff, sequential};
     use crate::amt::NetConfig;
-    use crate::graph::generators;
+    use crate::graph::{generators, PartitionKind};
 
     #[test]
     fn matches_sequential_oracle() {
@@ -268,6 +350,24 @@ mod tests {
                 "scale={scale} p={p} diff={}",
                 max_abs_diff(&res.ranks, &want)
             );
+        }
+    }
+
+    #[test]
+    fn matches_oracle_under_every_partition_scheme() {
+        let g = generators::kron(7, 6, 51);
+        let params = PrParams { alpha: 0.85, iterations: 15 };
+        let want = sequential::pagerank(&g, params);
+        for kind in PartitionKind::all() {
+            for p in [2u32, 4, 8] {
+                let dist = DistGraph::build_with(&g, kind.build(&g, p));
+                let res = run(&dist, params, SimConfig::deterministic(NetConfig::default()));
+                assert!(
+                    max_abs_diff(&res.ranks, &want) < 1e-4,
+                    "{kind:?} p={p} diff={}",
+                    max_abs_diff(&res.ranks, &want)
+                );
+            }
         }
     }
 

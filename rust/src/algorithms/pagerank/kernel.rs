@@ -17,7 +17,7 @@
 use std::sync::{Arc, Mutex};
 
 use crate::amt::sim::{Actor, Ctx, LocalityId, Message, SimConfig, SimRuntime};
-use crate::graph::{DistGraph, EllShard, Shard};
+use crate::graph::{DistGraph, EllShard, PartitionScheme, Shard};
 use crate::runtime::{ArtifactSpec, Engine};
 use crate::Result;
 
@@ -41,6 +41,10 @@ impl Message for RankSlice {
 /// Per-locality kernel-offload PageRank state.
 pub struct KernelPrActor {
     shard: Arc<Shard>,
+    /// Global start of the shard's contiguous owned range (the allgather
+    /// exchanges contiguous slices, so the engine requires a contiguous
+    /// 1-D scheme — checked in [`run`]).
+    range_start: usize,
     dist: Arc<DistGraph>,
     params: PrParams,
     engine: Arc<Mutex<Engine>>,
@@ -69,7 +73,7 @@ impl KernelPrActor {
     /// Compute own contribution slice, broadcast it, install locally.
     fn contribute_and_allgather(&mut self, ctx: &mut Ctx<RankSlice>) {
         let n_local = self.shard.n_local();
-        let start = self.shard.range.start;
+        let start = self.range_start;
         let mut slice = vec![0.0f32; n_local];
         for u in 0..n_local {
             let deg = (self.shard.out_degree[u].max(1)) as f32;
@@ -146,6 +150,19 @@ pub fn run(
 ) -> Result<PrResult> {
     let dist = Arc::new(dist.clone());
     let n = dist.n();
+    let range_starts: Vec<usize> = dist
+        .shards
+        .iter()
+        .map(|s| {
+            s.contiguous_range().map(|r| r.start).ok_or_else(|| {
+                anyhow::anyhow!(
+                    "kernel PageRank exchanges contiguous rank slices and requires a \
+                     contiguous 1-D partition (block|edge_balanced), got `{}`",
+                    dist.partition.name()
+                )
+            })
+        })
+        .collect::<Result<_>>()?;
 
     // Probe ELL geometry: one spec must cover every shard's virtual rows.
     let max_deg_probe = {
@@ -175,7 +192,8 @@ pub fn run(
         .shards
         .iter()
         .zip(ells)
-        .map(|(s, _)| {
+        .enumerate()
+        .map(|(li, (s, _))| {
             let ell = s.in_ell(spec.max_deg, spec.n_rows).expect("ELL re-pad failed");
             let cols = ell.cols.clone();
             let mask = ell.mask.clone();
@@ -195,6 +213,7 @@ pub fn run(
             contrib.iter_mut().for_each(|c| *c = 0.0);
             KernelPrActor {
                 shard: Arc::new(s.clone()),
+                range_start: range_starts[li],
                 dist: Arc::clone(&dist),
                 params,
                 engine: Arc::clone(&engine),

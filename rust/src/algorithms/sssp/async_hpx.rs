@@ -2,108 +2,157 @@
 //!
 //! An improved tentative distance triggers eager remote relaxations;
 //! termination is network quiescence. Remote relaxations route through the
-//! shared [`Aggregator`] min-fold, flushed by the configured
-//! [`FlushPolicy`] and drained at handler end.
+//! shared [`Aggregator`] min-fold (keyed by the destination's master
+//! index), flushed by the configured [`FlushPolicy`] and drained at
+//! handler end. Scheme-generic: under a vertex cut the per-locality
+//! wavefront runs over owned *and* mirror rows — a ghost-row improvement
+//! notifies the master, a master improvement scatters to the vertex's
+//! mirrors so their share of the row relaxes too. Monotone min-folding
+//! keeps the flood finite and order-independent.
 
 use std::cmp::Reverse;
 use std::collections::BinaryHeap;
+use std::sync::Arc;
 
 use crate::amt::aggregate::{Aggregator, Batch, FlushPolicy};
 use crate::amt::sim::{Actor, Ctx, LocalityId, Message, SimConfig, SimRuntime};
 use crate::amt::WorkStats;
-use crate::graph::{Csr, DistGraph, Partition1D, VertexId};
+use crate::graph::{Csr, DistGraph, Shard, VertexId};
 
-use super::{min_f32, SsspResult, WeightedShard, ITEM_BYTES};
+use super::{check_graph_matches, min_f32, SsspResult, ITEM_BYTES};
 
-/// A flushed combiner of relaxations: `(vertex, best proposed distance)`.
+/// Async SSSP wire format: relaxation batches toward masters or distance
+/// scatter toward mirrors — both `(destination-local slot, distance)`.
 #[derive(Debug, Clone)]
-pub struct RelaxBatch(pub Batch<f32>);
+pub enum SsspMsg {
+    /// `(master index, best proposed distance)`.
+    ToMaster(Batch<f32>),
+    /// `(ghost slot, master's improved distance)`.
+    ToMirror(Batch<f32>),
+}
 
-impl Message for RelaxBatch {
+impl Message for SsspMsg {
     fn wire_bytes(&self) -> usize {
-        self.0.wire_bytes()
+        match self {
+            SsspMsg::ToMaster(b) => b.wire_bytes(),
+            SsspMsg::ToMirror(b) => b.wire_bytes(),
+        }
     }
 
     fn item_count(&self) -> usize {
-        self.0.len()
+        match self {
+            SsspMsg::ToMaster(b) => b.len(),
+            SsspMsg::ToMirror(b) => b.len(),
+        }
     }
 }
 
 /// Asynchronous label-correcting SSSP actor.
 struct AsyncSsspActor {
-    shard: WeightedShard,
-    partition: Partition1D,
+    shard: Arc<Shard>,
     source: VertexId,
-    /// Owned tentative distances.
+    /// Tentative distance per local row — owned rows authoritative, ghost
+    /// rows cache the best value seen/sent (doubles as the send-dedup
+    /// that prunes the label-correcting flood).
     dist: Vec<f32>,
-    /// Best distance already *sent* per remote vertex — legitimate local
-    /// knowledge (our own send history) that prunes the label-correcting
-    /// flood: re-sending a no-better relaxation is pure waste.
-    best_sent: Vec<f32>,
-    /// Remote-relaxation combiner (shared aggregation subsystem).
+    /// Master-bound relaxation combiner (shared aggregation subsystem).
     agg: Aggregator<f32>,
+    /// Mirror-bound distance-scatter combiner (idle under 1-D schemes).
+    mirror_agg: Aggregator<f32>,
+    /// Reusable wavefront heap: (bit-ordered distance, local row).
+    heap: BinaryHeap<Reverse<(u32, usize)>>,
     /// Relaxation counters (total edge proposals / strict improvements).
     work: WorkStats,
 }
 
 impl AsyncSsspActor {
-    /// Cascade a relaxation through the local shard in (approximate)
-    /// priority order — a per-locality Dijkstra wavefront, the standard
-    /// trick that keeps unordered label-correcting from re-relaxing
-    /// whole subtrees (re-relaxation factor drops from O(diameter) to
-    /// ~1 on random weights).
-    fn relax_from(&mut self, ctx: &mut Ctx<RelaxBatch>, v: VertexId, d: f32) {
-        let here = ctx.locality();
-        let mut heap: BinaryHeap<Reverse<(u32, VertexId)>> = BinaryHeap::new();
-        heap.push(Reverse((d.to_bits(), v)));
-        while let Some(Reverse((db, u))) = heap.pop() {
+    /// Drain the wavefront heap: cascade relaxations through the local row
+    /// space in (approximate) priority order — a per-locality Dijkstra
+    /// wavefront, the standard trick that keeps unordered label-correcting
+    /// from re-relaxing whole subtrees.
+    fn relax(&mut self, ctx: &mut Ctx<SsspMsg>) {
+        let n_owned = self.shard.n_local();
+        while let Some(Reverse((db, row))) = self.heap.pop() {
             let du = f32::from_bits(db);
-            let lu = u as usize - self.shard.range.start;
-            if du >= self.dist[lu] {
+            if du >= self.dist[row] {
                 continue;
             }
-            self.dist[lu] = du;
-            self.work.useful_relaxations += 1;
-            for (w, wt) in self.shard.edges(lu) {
+            self.dist[row] = du;
+            if row < n_owned {
+                self.work.useful_relaxations += 1;
+                for &(dst, gi) in self.shard.mirrors(row) {
+                    if let Some(b) = self.mirror_agg.accumulate(dst, gi, du) {
+                        ctx.send(dst, SsspMsg::ToMirror(b));
+                    }
+                }
+            } else {
+                let gi = row - n_owned;
+                let dst = self.shard.ghost_owner[gi];
+                let idx = self.shard.ghost_master_index[gi];
+                if let Some(b) = self.agg.accumulate(dst, idx, du) {
+                    ctx.send(dst, SsspMsg::ToMaster(b));
+                }
+            }
+            let shard = Arc::clone(&self.shard);
+            for (t, wt) in shard.row_edges(row) {
                 self.work.relaxations += 1;
                 let nd = du + wt;
-                let dst = self.partition.owner(w);
-                if dst == here {
-                    if nd < self.dist[w as usize - self.shard.range.start] {
-                        heap.push(Reverse((nd.to_bits(), w)));
-                    }
-                } else if nd < self.best_sent[w as usize] {
-                    self.best_sent[w as usize] = nd;
-                    if let Some(batch) = self.agg.accumulate(dst, w, nd) {
-                        ctx.send(dst, RelaxBatch(batch));
-                    }
+                if nd < self.dist[t as usize] {
+                    self.heap.push(Reverse((nd.to_bits(), t as usize)));
                 }
             }
         }
     }
 
-    fn drain(&mut self, ctx: &mut Ctx<RelaxBatch>) {
+    fn drain(&mut self, ctx: &mut Ctx<SsspMsg>) {
         for (dst, batch) in self.agg.drain() {
-            ctx.send(dst, RelaxBatch(batch));
+            ctx.send(dst, SsspMsg::ToMaster(batch));
+        }
+        for (dst, batch) in self.mirror_agg.drain() {
+            ctx.send(dst, SsspMsg::ToMirror(batch));
         }
     }
 }
 
 impl Actor for AsyncSsspActor {
-    type Msg = RelaxBatch;
+    type Msg = SsspMsg;
 
-    fn on_start(&mut self, ctx: &mut Ctx<RelaxBatch>) {
-        if self.partition.owner(self.source) == ctx.locality() {
-            let s = self.source;
-            self.relax_from(ctx, s, 0.0);
+    fn on_start(&mut self, ctx: &mut Ctx<SsspMsg>) {
+        if let Ok(r) = self.shard.owned_ids.binary_search(&self.source) {
+            self.heap.push(Reverse((0f32.to_bits(), r)));
+            self.relax(ctx);
             self.drain(ctx);
         }
     }
 
-    fn on_message(&mut self, ctx: &mut Ctx<RelaxBatch>, _from: LocalityId, msg: RelaxBatch) {
-        for (v, d) in msg.0.items {
-            self.relax_from(ctx, v, d);
+    fn on_message(&mut self, ctx: &mut Ctx<SsspMsg>, _from: LocalityId, msg: SsspMsg) {
+        let n_owned = self.shard.n_local();
+        match msg {
+            SsspMsg::ToMaster(b) => {
+                for (idx, d) in b.items {
+                    self.heap.push(Reverse((d.to_bits(), idx as usize)));
+                }
+            }
+            SsspMsg::ToMirror(b) => {
+                // The value came *from* the master: install it directly
+                // (no echo back) and expand the locally homed edges.
+                for (gi, d) in b.items {
+                    let row = n_owned + gi as usize;
+                    if d < self.dist[row] {
+                        self.dist[row] = d;
+                        let shard = Arc::clone(&self.shard);
+                        for (t, wt) in shard.row_edges(row) {
+                            self.work.relaxations += 1;
+                            let nd = d + wt;
+                            if nd < self.dist[t as usize] {
+                                self.heap.push(Reverse((nd.to_bits(), t as usize)));
+                            }
+                        }
+                    }
+                }
+            }
         }
+        self.relax(ctx);
         self.drain(ctx);
     }
 }
@@ -122,27 +171,44 @@ pub fn run_async_with(
     policy: FlushPolicy,
     cfg: SimConfig,
 ) -> SsspResult {
-    let p = dist_graph.p();
-    let ranges = dist_graph.partition.ranges();
-    let actors: Vec<AsyncSsspActor> = (0..p)
-        .map(|l| AsyncSsspActor {
-            shard: WeightedShard::build(g, &dist_graph.partition, l),
-            partition: dist_graph.partition.clone(),
+    check_graph_matches(g, dist_graph);
+    let actors: Vec<AsyncSsspActor> = dist_graph
+        .shards
+        .iter()
+        .map(|s| AsyncSsspActor {
+            shard: Arc::new(s.clone()),
             source,
-            dist: vec![f32::INFINITY; dist_graph.partition.len_of(l)],
-            best_sent: vec![f32::INFINITY; dist_graph.n()],
-            agg: Aggregator::new(&ranges, l, policy, &cfg.net, ITEM_BYTES, min_f32),
+            dist: vec![f32::INFINITY; s.n_rows()],
+            agg: Aggregator::new(
+                dist_graph.owned_counts(),
+                s.locality,
+                policy,
+                &cfg.net,
+                ITEM_BYTES,
+                min_f32,
+            ),
+            mirror_agg: Aggregator::new(
+                dist_graph.ghost_counts(),
+                s.locality,
+                policy,
+                &cfg.net,
+                ITEM_BYTES,
+                min_f32,
+            ),
+            heap: BinaryHeap::new(),
             work: WorkStats::default(),
         })
         .collect();
     let (actors, mut report) = SimRuntime::new(cfg).run(actors);
     for a in &actors {
         report.agg.merge(a.agg.stats());
+        report.agg.merge(a.mirror_agg.stats());
         report.work.merge(&a.work);
     }
+    report.partition = dist_graph.partition_stats();
     let mut dist = vec![f32::INFINITY; dist_graph.n()];
     for a in &actors {
-        dist[a.shard.range.clone()].copy_from_slice(&a.dist);
+        a.shard.scatter_owned(&a.dist[..a.shard.n_local()], &mut dist);
     }
     SsspResult { dist, report }
 }

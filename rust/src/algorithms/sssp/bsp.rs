@@ -3,19 +3,30 @@
 //! The PBGL/Boost baseline style: supersteps, per-superstep combiner
 //! drains (maximal batching via [`FlushPolicy::Manual`]), and a
 //! coordinator-driven termination reduction.
+//!
+//! Scheme-generic: the active set holds local rows (owned and, under a
+//! vertex cut, mirror rows). A master improvement scatters the new
+//! distance to the vertex's mirrors through a second Manual-policy
+//! combiner; the mirror re-activates the row so its share of the edges
+//! relaxes next superstep. Monotone min-folding makes the extra rounds
+//! converge to the Bellman-Ford fixpoint.
+
+use std::sync::Arc;
 
 use crate::amt::aggregate::{Aggregator, Batch, FlushPolicy};
 use crate::amt::sim::{Actor, Ctx, LocalityId, Message, SimConfig, SimRuntime};
 use crate::amt::WorkStats;
-use crate::graph::{Csr, DistGraph, Partition1D, VertexId};
+use crate::graph::{Csr, DistGraph, Shard, VertexId};
 
-use super::{min_f32, SsspResult, WeightedShard, ITEM_BYTES};
+use super::{check_graph_matches, min_f32, SsspResult, ITEM_BYTES};
 
 /// BSP SSSP messages.
 #[derive(Debug, Clone)]
 pub enum BspSsspMsg {
-    /// Batched relaxations (one folded min per destination vertex).
+    /// Batched relaxations toward masters: `(master index, min distance)`.
     Relaxations(Batch<f32>),
+    /// Batched distance scatter toward mirrors: `(ghost slot, distance)`.
+    MirrorDists(Batch<f32>),
     /// Activity count for the termination reduction.
     Count(u64),
     /// Coordinator verdict.
@@ -26,6 +37,7 @@ impl Message for BspSsspMsg {
     fn wire_bytes(&self) -> usize {
         match self {
             BspSsspMsg::Relaxations(b) => b.wire_bytes(),
+            BspSsspMsg::MirrorDists(b) => b.wire_bytes(),
             BspSsspMsg::Count(_) => 8,
             BspSsspMsg::Continue(_) => 1,
         }
@@ -34,6 +46,7 @@ impl Message for BspSsspMsg {
     fn item_count(&self) -> usize {
         match self {
             BspSsspMsg::Relaxations(b) => b.len(),
+            BspSsspMsg::MirrorDists(b) => b.len(),
             _ => 1,
         }
     }
@@ -47,63 +60,94 @@ enum Phase {
 
 /// BSP Bellman-Ford-style actor: relax the active set each superstep.
 struct BspSsspActor {
-    shard: WeightedShard,
-    partition: Partition1D,
+    shard: Arc<Shard>,
     source: VertexId,
+    /// Tentative distance per local row (owned authoritative, ghost
+    /// cached from master scatter).
     dist: Vec<f32>,
-    active: Vec<VertexId>,
-    /// O(1) membership test for `active` (local index space).
+    active: Vec<u32>,
+    /// O(1) membership test for `active` (local row space).
     in_active: Vec<bool>,
-    inbox: Vec<(VertexId, f32)>,
+    inbox: Vec<(u32, f32)>,
     counts_seen: u32,
     counts_sum: u64,
+    /// Activity earned at the barrier (scatter queued by inbox
+    /// improvements), folded into the next Count.
+    pending_activity: u64,
     continue_flag: bool,
     phase: Phase,
-    /// Superstep combiner: folded mins, drained once per round.
+    /// Superstep combiner toward masters: folded mins, drained per round.
     agg: Aggregator<f32>,
+    /// Superstep combiner toward mirrors (distance scatter).
+    mirror_agg: Aggregator<f32>,
     /// Relaxation counters (total edge proposals / strict improvements).
     work: WorkStats,
 }
 
 impl BspSsspActor {
-    fn relax_round(&mut self, ctx: &mut Ctx<BspSsspMsg>) {
-        let here = ctx.locality();
-        let mut activity = 0u64;
-        let mut next: Vec<VertexId> = Vec::new();
-        let active = std::mem::take(&mut self.active);
-        for &u in &active {
-            self.in_active[u as usize - self.shard.range.start] = false;
+    fn activate(&mut self, row: usize) {
+        if !self.in_active[row] {
+            self.in_active[row] = true;
+            self.active.push(row as u32);
         }
-        for &u in &active {
-            let lu = u as usize - self.shard.range.start;
-            let du = self.dist[lu];
-            for (w, wt) in self.shard.edges(lu) {
+    }
+
+    /// Apply `nd` to the owned `row`; on improvement, activate it and
+    /// queue the scatter to its mirrors. Returns whether it improved.
+    fn improve_owned(&mut self, row: usize, nd: f32) -> bool {
+        if nd >= self.dist[row] {
+            return false;
+        }
+        self.dist[row] = nd;
+        self.work.useful_relaxations += 1;
+        self.activate(row);
+        let shard = Arc::clone(&self.shard);
+        for &(dst, gi) in shard.mirrors(row) {
+            // Manual policy: accumulate never auto-flushes.
+            let flushed = self.mirror_agg.accumulate(dst, gi, nd);
+            debug_assert!(flushed.is_none());
+        }
+        true
+    }
+
+    fn relax_round(&mut self, ctx: &mut Ctx<BspSsspMsg>) {
+        let n_owned = self.shard.n_local();
+        let mut activity = self.pending_activity;
+        self.pending_activity = 0;
+        let active = std::mem::take(&mut self.active);
+        for &row in &active {
+            self.in_active[row as usize] = false;
+        }
+        for &row in &active {
+            let du = self.dist[row as usize];
+            let shard = Arc::clone(&self.shard);
+            for (t, wt) in shard.row_edges(row as usize) {
                 self.work.relaxations += 1;
                 let nd = du + wt;
-                let dst = self.partition.owner(w);
-                if dst == here {
-                    let lw = w as usize - self.shard.range.start;
-                    if nd < self.dist[lw] {
-                        self.dist[lw] = nd;
-                        self.work.useful_relaxations += 1;
-                        if !self.in_active[lw] {
-                            self.in_active[lw] = true;
-                            next.push(w);
-                        }
+                let t = t as usize;
+                if t < n_owned {
+                    if self.improve_owned(t, nd) {
                         activity += 1;
                     }
                 } else {
+                    let gi = t - n_owned;
                     // Manual policy: accumulate never auto-flushes.
-                    if let Some(batch) = self.agg.accumulate(dst, w, nd) {
-                        ctx.send(dst, BspSsspMsg::Relaxations(batch));
-                    }
+                    let flushed = self.agg.accumulate(
+                        shard.ghost_owner[gi],
+                        shard.ghost_master_index[gi],
+                        nd,
+                    );
+                    debug_assert!(flushed.is_none());
                     activity += 1;
                 }
             }
         }
-        self.active = next;
         for (dst, batch) in self.agg.drain() {
             ctx.send(dst, BspSsspMsg::Relaxations(batch));
+        }
+        for (dst, batch) in self.mirror_agg.drain() {
+            ctx.send(dst, BspSsspMsg::MirrorDists(batch));
+            activity += 1;
         }
         ctx.send(0, BspSsspMsg::Count(activity));
         self.phase = Phase::AfterRelax;
@@ -115,11 +159,12 @@ impl Actor for BspSsspActor {
     type Msg = BspSsspMsg;
 
     fn on_start(&mut self, ctx: &mut Ctx<BspSsspMsg>) {
-        if self.partition.owner(self.source) == ctx.locality() {
-            let ls = self.source as usize - self.shard.range.start;
-            self.dist[ls] = 0.0;
-            self.in_active[ls] = true;
-            self.active.push(self.source);
+        if let Ok(r) = self.shard.owned_ids.binary_search(&self.source) {
+            // Source setup is an improvement like any other: distance 0,
+            // activation, and mirror scatter (counted into this round).
+            if self.improve_owned(r, 0.0) {
+                self.work.useful_relaxations -= 1; // setup, not a relaxation
+            }
         }
         self.relax_round(ctx);
     }
@@ -127,6 +172,16 @@ impl Actor for BspSsspActor {
     fn on_message(&mut self, _ctx: &mut Ctx<BspSsspMsg>, _from: LocalityId, msg: BspSsspMsg) {
         match msg {
             BspSsspMsg::Relaxations(batch) => self.inbox.extend(batch.items),
+            BspSsspMsg::MirrorDists(batch) => {
+                let n_owned = self.shard.n_local();
+                for (gi, d) in batch.items {
+                    let row = n_owned + gi as usize;
+                    if d < self.dist[row] {
+                        self.dist[row] = d;
+                        self.activate(row);
+                    }
+                }
+            }
             BspSsspMsg::Count(c) => {
                 self.counts_seen += 1;
                 self.counts_sum += c;
@@ -139,15 +194,11 @@ impl Actor for BspSsspActor {
         match self.phase {
             Phase::AfterRelax => {
                 let inbox = std::mem::take(&mut self.inbox);
-                for (v, d) in inbox {
-                    let lv = v as usize - self.shard.range.start;
-                    if d < self.dist[lv] {
-                        self.dist[lv] = d;
-                        self.work.useful_relaxations += 1;
-                        if !self.in_active[lv] {
-                            self.in_active[lv] = true;
-                            self.active.push(v);
-                        }
+                for (idx, d) in inbox {
+                    if self.improve_owned(idx as usize, d) {
+                        // Scatter queued here ships with the next round's
+                        // drain; keep the run alive until it lands.
+                        self.pending_activity += 1;
                     }
                 }
                 if ctx.locality() == 0 {
@@ -163,6 +214,9 @@ impl Actor for BspSsspActor {
                 ctx.request_barrier();
             }
             Phase::AwaitDecision => {
+                // Uniform verdict: every activation was backed by a
+                // counted activity, so `go` is true whenever anyone still
+                // holds active rows or pending scatter.
                 if self.continue_flag {
                     self.relax_round(ctx);
                 }
@@ -173,33 +227,51 @@ impl Actor for BspSsspActor {
 
 /// Run BSP Bellman-Ford-style SSSP (requires a weighted graph).
 pub fn run_bsp(g: &Csr, dist_graph: &DistGraph, source: VertexId, cfg: SimConfig) -> SsspResult {
-    let p = dist_graph.p();
-    let ranges = dist_graph.partition.ranges();
-    let actors: Vec<BspSsspActor> = (0..p)
-        .map(|l| BspSsspActor {
-            shard: WeightedShard::build(g, &dist_graph.partition, l),
-            partition: dist_graph.partition.clone(),
+    check_graph_matches(g, dist_graph);
+    let actors: Vec<BspSsspActor> = dist_graph
+        .shards
+        .iter()
+        .map(|s| BspSsspActor {
+            shard: Arc::new(s.clone()),
             source,
-            dist: vec![f32::INFINITY; dist_graph.partition.len_of(l)],
+            dist: vec![f32::INFINITY; s.n_rows()],
             active: Vec::new(),
-            in_active: vec![false; dist_graph.partition.len_of(l)],
+            in_active: vec![false; s.n_rows()],
             inbox: Vec::new(),
             counts_seen: 0,
             counts_sum: 0,
+            pending_activity: 0,
             continue_flag: false,
             phase: Phase::AfterRelax,
-            agg: Aggregator::new(&ranges, l, FlushPolicy::Manual, &cfg.net, ITEM_BYTES, min_f32),
+            agg: Aggregator::new(
+                dist_graph.owned_counts(),
+                s.locality,
+                FlushPolicy::Manual,
+                &cfg.net,
+                ITEM_BYTES,
+                min_f32,
+            ),
+            mirror_agg: Aggregator::new(
+                dist_graph.ghost_counts(),
+                s.locality,
+                FlushPolicy::Manual,
+                &cfg.net,
+                ITEM_BYTES,
+                min_f32,
+            ),
             work: WorkStats::default(),
         })
         .collect();
     let (actors, mut report) = SimRuntime::new(cfg).run(actors);
     for a in &actors {
         report.agg.merge(a.agg.stats());
+        report.agg.merge(a.mirror_agg.stats());
         report.work.merge(&a.work);
     }
+    report.partition = dist_graph.partition_stats();
     let mut dist = vec![f32::INFINITY; dist_graph.n()];
     for a in &actors {
-        dist[a.shard.range.clone()].copy_from_slice(&a.dist);
+        a.shard.scatter_owned(&a.dist[..a.shard.n_local()], &mut dist);
     }
     SsspResult { dist, report }
 }

@@ -53,13 +53,14 @@
 //! `sssp_delta` config key overrides it.
 
 use std::collections::BTreeMap;
+use std::sync::Arc;
 
 use crate::amt::aggregate::{Aggregator, Batch, FlushPolicy};
 use crate::amt::sim::{Actor, Ctx, LocalityId, Message, SimConfig, SimRuntime};
 use crate::amt::WorkStats;
-use crate::graph::{Csr, DistGraph, Partition1D, VertexId};
+use crate::graph::{Csr, DistGraph, Shard, VertexId};
 
-use super::{min_f32, SsspResult, ITEM_BYTES};
+use super::{check_graph_matches, min_f32, SsspResult, ITEM_BYTES};
 
 /// `in_bucket` sentinel: the vertex is not queued in any bucket.
 const NOT_QUEUED: u64 = u64::MAX;
@@ -132,23 +133,21 @@ impl Message for DeltaMsg {
     }
 }
 
-/// Weighted shard with light/heavy edge separation done once at build
-/// time (targets are global ids, rows are owned-local indices).
+/// Light/heavy edge separation over one shard's owned rows, done once at
+/// build time. Targets are the shard's dense local rows (owned index or
+/// ghost slot), so relaxation needs no owner arithmetic at all.
 struct DeltaShard {
-    range: std::ops::Range<usize>,
     light_offsets: Vec<usize>,
-    light_targets: Vec<VertexId>,
+    light_targets: Vec<u32>,
     light_weights: Vec<f32>,
     heavy_offsets: Vec<usize>,
-    heavy_targets: Vec<VertexId>,
+    heavy_targets: Vec<u32>,
     heavy_weights: Vec<f32>,
 }
 
 impl DeltaShard {
-    fn build(g: &Csr, partition: &Partition1D, l: LocalityId, delta: f32) -> Self {
-        let range = partition.range_of(l);
+    fn build(shard: &Shard, delta: f32) -> Self {
         let mut s = DeltaShard {
-            range: range.clone(),
             light_offsets: vec![0],
             light_targets: Vec::new(),
             light_weights: Vec::new(),
@@ -156,16 +155,9 @@ impl DeltaShard {
             heavy_targets: Vec::new(),
             heavy_weights: Vec::new(),
         };
-        for v in range {
-            if g.is_weighted() {
-                for (t, w) in g.neighbors_weighted(v as VertexId) {
-                    s.push_edge(t, w, delta);
-                }
-            } else {
-                // Unweighted graphs get unit weights (SSSP == hop count).
-                for &t in g.neighbors(v as VertexId) {
-                    s.push_edge(t, 1.0, delta);
-                }
+        for row in 0..shard.n_local() {
+            for (t, w) in shard.row_edges(row) {
+                s.push_edge(t, w, delta);
             }
             s.light_offsets.push(s.light_targets.len());
             s.heavy_offsets.push(s.heavy_targets.len());
@@ -173,7 +165,7 @@ impl DeltaShard {
         s
     }
 
-    fn push_edge(&mut self, t: VertexId, w: f32, delta: f32) {
+    fn push_edge(&mut self, t: u32, w: f32, delta: f32) {
         if w <= delta {
             self.light_targets.push(t);
             self.light_weights.push(w);
@@ -183,12 +175,12 @@ impl DeltaShard {
         }
     }
 
-    fn light_edges(&self, local: usize) -> impl Iterator<Item = (VertexId, f32)> + '_ {
+    fn light_edges(&self, local: usize) -> impl Iterator<Item = (u32, f32)> + '_ {
         let r = self.light_offsets[local]..self.light_offsets[local + 1];
         self.light_targets[r.clone()].iter().cloned().zip(self.light_weights[r].iter().cloned())
     }
 
-    fn heavy_edges(&self, local: usize) -> impl Iterator<Item = (VertexId, f32)> + '_ {
+    fn heavy_edges(&self, local: usize) -> impl Iterator<Item = (u32, f32)> + '_ {
         let r = self.heavy_offsets[local]..self.heavy_offsets[local + 1];
         self.heavy_targets[r.clone()].iter().cloned().zip(self.heavy_weights[r].iter().cloned())
     }
@@ -208,8 +200,8 @@ enum Step {
 
 /// Per-locality delta-stepping actor.
 struct DeltaSsspActor {
-    shard: DeltaShard,
-    partition: Partition1D,
+    shard: Arc<Shard>,
+    edges: DeltaShard,
     source: VertexId,
     delta: f32,
     /// Owned tentative distances.
@@ -245,7 +237,7 @@ impl DeltaSsspActor {
     /// the current bucket are processed next round (round-synchronous, so
     /// `Δ = ∞` reproduces the BSP Bellman-Ford schedule exactly).
     fn light_round(&mut self, ctx: &mut Ctx<DeltaMsg>) {
-        let here = ctx.locality();
+        let n_owned = self.shard.n_local();
         let members = self.buckets.remove(&self.current).unwrap_or_default();
         for &lv32 in &members {
             let lv = lv32 as usize;
@@ -258,23 +250,29 @@ impl DeltaSsspActor {
                 self.req.push(lv32);
             }
             let du = self.dist[lv];
-            for (w, wt) in self.shard.light_edges(lv) {
+            for (t, wt) in self.edges.light_edges(lv) {
                 self.work.relaxations += 1;
                 let nd = du + wt;
-                let dst = self.partition.owner(w);
-                if dst == here {
-                    let lw = w as usize - self.shard.range.start;
-                    if nd < self.dist[lw] {
-                        self.dist[lw] = nd;
+                let t = t as usize;
+                if t < n_owned {
+                    if nd < self.dist[t] {
+                        self.dist[t] = nd;
                         self.work.useful_relaxations += 1;
                         let b = bucket_of(nd, self.delta);
-                        if self.in_bucket[lw] != b {
-                            self.in_bucket[lw] = b;
-                            self.buckets.entry(b).or_default().push(lw as u32);
+                        if self.in_bucket[t] != b {
+                            self.in_bucket[t] = b;
+                            self.buckets.entry(b).or_default().push(t as u32);
                         }
                     }
-                } else if let Some(batch) = self.agg.accumulate(dst, w, nd) {
-                    ctx.send(dst, DeltaMsg::Relaxations(batch));
+                } else {
+                    let gi = t - n_owned;
+                    if let Some(batch) = self.agg.accumulate(
+                        self.shard.ghost_owner[gi],
+                        self.shard.ghost_master_index[gi],
+                        nd,
+                    ) {
+                        ctx.send(self.shard.ghost_owner[gi], DeltaMsg::Relaxations(batch));
+                    }
                 }
             }
         }
@@ -283,29 +281,35 @@ impl DeltaSsspActor {
     /// The heavy round: relax the heavy edges of everything settled in
     /// the current bucket, exactly once, at their final distances.
     fn heavy_round(&mut self, ctx: &mut Ctx<DeltaMsg>) {
-        let here = ctx.locality();
+        let n_owned = self.shard.n_local();
         let req = std::mem::take(&mut self.req);
         for &lv32 in &req {
             let lv = lv32 as usize;
             self.in_req[lv] = false;
             let du = self.dist[lv];
-            for (w, wt) in self.shard.heavy_edges(lv) {
+            for (t, wt) in self.edges.heavy_edges(lv) {
                 self.work.relaxations += 1;
                 let nd = du + wt;
-                let dst = self.partition.owner(w);
-                if dst == here {
-                    let lw = w as usize - self.shard.range.start;
-                    if nd < self.dist[lw] {
-                        self.dist[lw] = nd;
+                let t = t as usize;
+                if t < n_owned {
+                    if nd < self.dist[t] {
+                        self.dist[t] = nd;
                         self.work.useful_relaxations += 1;
                         let b = bucket_of(nd, self.delta);
-                        if self.in_bucket[lw] != b {
-                            self.in_bucket[lw] = b;
-                            self.buckets.entry(b).or_default().push(lw as u32);
+                        if self.in_bucket[t] != b {
+                            self.in_bucket[t] = b;
+                            self.buckets.entry(b).or_default().push(t as u32);
                         }
                     }
-                } else if let Some(batch) = self.agg.accumulate(dst, w, nd) {
-                    ctx.send(dst, DeltaMsg::Relaxations(batch));
+                } else {
+                    let gi = t - n_owned;
+                    if let Some(batch) = self.agg.accumulate(
+                        self.shard.ghost_owner[gi],
+                        self.shard.ghost_master_index[gi],
+                        nd,
+                    ) {
+                        ctx.send(self.shard.ghost_owner[gi], DeltaMsg::Relaxations(batch));
+                    }
                 }
             }
         }
@@ -328,8 +332,7 @@ impl Actor for DeltaSsspActor {
     type Msg = DeltaMsg;
 
     fn on_start(&mut self, ctx: &mut Ctx<DeltaMsg>) {
-        if self.partition.owner(self.source) == ctx.locality() {
-            let ls = self.source as usize - self.shard.range.start;
+        if let Ok(ls) = self.shard.owned_ids.binary_search(&self.source) {
             self.dist[ls] = 0.0;
             self.in_bucket[ls] = 0;
             self.buckets.entry(0).or_default().push(ls as u32);
@@ -343,8 +346,8 @@ impl Actor for DeltaSsspActor {
             // barrier fires the network has drained, so every locality
             // votes on the complete post-round state.
             DeltaMsg::Relaxations(batch) => {
-                for (v, d) in batch.items {
-                    let lv = v as usize - self.shard.range.start;
+                for (lv, d) in batch.items {
+                    let lv = lv as usize;
                     if d < self.dist[lv] {
                         self.dist[lv] = d;
                         self.work.useful_relaxations += 1;
@@ -436,26 +439,39 @@ pub fn run_with(
     cfg: SimConfig,
 ) -> SsspResult {
     assert!(delta > 0.0, "delta must be positive (f32::INFINITY = Bellman-Ford), got {delta}");
-    let p = dist_graph.p();
-    let ranges = dist_graph.partition.ranges();
-    let actors: Vec<DeltaSsspActor> = (0..p)
-        .map(|l| DeltaSsspActor {
-            shard: DeltaShard::build(g, &dist_graph.partition, l, delta),
-            partition: dist_graph.partition.clone(),
+    assert!(
+        !dist_graph.has_mirrors(),
+        "delta-stepping's bucket protocol needs whole rows at the owner; use a mirror-free \
+         partition scheme (block|edge_balanced|hash) or the async/bsp engines for vertex cuts"
+    );
+    check_graph_matches(g, dist_graph);
+    let actors: Vec<DeltaSsspActor> = dist_graph
+        .shards
+        .iter()
+        .map(|s| DeltaSsspActor {
+            edges: DeltaShard::build(s, delta),
+            shard: Arc::new(s.clone()),
             source,
             delta,
-            dist: vec![f32::INFINITY; dist_graph.partition.len_of(l)],
+            dist: vec![f32::INFINITY; s.n_local()],
             buckets: BTreeMap::new(),
-            in_bucket: vec![NOT_QUEUED; dist_graph.partition.len_of(l)],
+            in_bucket: vec![NOT_QUEUED; s.n_local()],
             req: Vec::new(),
-            in_req: vec![false; dist_graph.partition.len_of(l)],
+            in_req: vec![false; s.n_local()],
             current: 0,
             mode: Mode::Light,
             step: Step::AwaitVote,
             votes_nonempty: false,
             votes_min: None,
             votes_seen: 0,
-            agg: Aggregator::new(&ranges, l, policy, &cfg.net, ITEM_BYTES, min_f32),
+            agg: Aggregator::new(
+                dist_graph.owned_counts(),
+                s.locality,
+                policy,
+                &cfg.net,
+                ITEM_BYTES,
+                min_f32,
+            ),
             work: WorkStats::default(),
         })
         .collect();
@@ -464,9 +480,10 @@ pub fn run_with(
         report.agg.merge(a.agg.stats());
         report.work.merge(&a.work);
     }
+    report.partition = dist_graph.partition_stats();
     let mut dist = vec![f32::INFINITY; dist_graph.n()];
     for a in &actors {
-        dist[a.shard.range.clone()].copy_from_slice(&a.dist);
+        a.shard.scatter_owned(&a.dist, &mut dist);
     }
     SsspResult { dist, report }
 }
@@ -508,12 +525,12 @@ mod tests {
     #[test]
     fn light_heavy_split_covers_every_edge() {
         let g = generators::with_random_weights(&generators::urand(6, 4, 9), 1.0, 10.0, 10);
-        let part = Partition1D::block(g.n(), 3);
+        let dg = DistGraph::block(&g, 3);
         let delta = 4.0f32;
         let mut total = 0usize;
-        for l in 0..3 {
-            let s = DeltaShard::build(&g, &part, l, delta);
-            for lv in 0..part.len_of(l) {
+        for shard in &dg.shards {
+            let s = DeltaShard::build(shard, delta);
+            for lv in 0..shard.n_local() {
                 for (_, w) in s.light_edges(lv) {
                     assert!(w <= delta);
                     total += 1;
@@ -525,6 +542,31 @@ mod tests {
             }
         }
         assert_eq!(total, g.m());
+    }
+
+    #[test]
+    fn hash_scheme_is_accepted_and_matches_oracle() {
+        use crate::graph::PartitionKind;
+        let g = generators::with_random_weights(&generators::urand(6, 4, 41), 1.0, 10.0, 42);
+        let want = super::super::dijkstra(&g, 0);
+        let d = DistGraph::build_with(&g, PartitionKind::Hash.build(&g, 4));
+        let res = run_with(&g, &d, 0, auto_delta(&g), FlushPolicy::Adaptive, det());
+        for v in 0..g.n() {
+            let (a, b) = (res.dist[v], want[v]);
+            assert!((a.is_infinite() && b.is_infinite()) || (a - b).abs() < 1e-3);
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "mirror-free")]
+    fn vertex_cut_is_rejected() {
+        use crate::graph::PartitionKind;
+        let g = generators::with_random_weights(&generators::kron(6, 6, 43), 1.0, 10.0, 44);
+        let d = DistGraph::build_with(&g, PartitionKind::VertexCut.build(&g, 4));
+        if !d.has_mirrors() {
+            panic!("mirror-free by luck"); // keep the expected message
+        }
+        let _ = run_with(&g, &d, 0, 1.0, FlushPolicy::Adaptive, det());
     }
 
     #[test]

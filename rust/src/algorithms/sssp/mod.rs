@@ -16,12 +16,23 @@
 //!
 //! All three route remote relaxations through the shared
 //! [`amt::aggregate`](crate::amt::aggregate) combiner (fold = min over
-//! tentative distances), so every [`FlushPolicy`] applies uniformly: the
+//! tentative distances, keyed by the destination's master index from the
+//! shard ghost table), so every [`FlushPolicy`] applies uniformly: the
 //! async engine flushes by policy and drains at handler end, the BSP and
 //! delta engines drain once per superstep/phase. Every engine counts its
 //! relaxations into [`WorkStats`](crate::amt::WorkStats) so the
 //! work-efficiency axis (total vs. useful relaxations) is measurable per
 //! run, not inferred from envelope counts.
+//!
+//! Partitioning: the async and BSP engines are scheme-generic (vertex
+//! cuts scatter master improvements to mirror rows); delta-stepping's
+//! bucket protocol assumes whole rows at the owner and is gated to
+//! mirror-free schemes.
+//!
+//! Engines read their weighted adjacency from the [`DistGraph`] shards,
+//! so the distributed graph must be built from the *weighted* Csr (the
+//! same one handed to the engines for oracle checks); unweighted graphs
+//! degenerate to unit weights (SSSP == hop count).
 //!
 //! The min-fold assumes a NaN-free total order on distances; graph build
 //! ([`Csr::from_edge_list`]) debug-asserts that weights are finite and
@@ -31,9 +42,8 @@
 use std::cmp::Reverse;
 use std::collections::BinaryHeap;
 
-use crate::amt::sim::LocalityId;
 use crate::amt::SimReport;
-use crate::graph::{Csr, Partition1D, VertexId};
+use crate::graph::{Csr, DistGraph, VertexId};
 
 pub mod async_hpx;
 pub mod bsp;
@@ -64,6 +74,17 @@ pub(crate) fn min_f32(acc: &mut f32, d: f32) {
     }
 }
 
+/// The engines run on the shard adjacency, so the `DistGraph` must have
+/// been built from the same (weighted) graph the caller validates with.
+pub(crate) fn check_graph_matches(g: &Csr, dist_graph: &DistGraph) {
+    assert_eq!(g.n(), dist_graph.n(), "DistGraph built from a different graph");
+    assert_eq!(g.m(), dist_graph.m(), "DistGraph built from a different graph");
+    assert!(
+        g.m() == 0 || g.is_weighted() == dist_graph.is_weighted(),
+        "build the DistGraph from the weighted Csr so the shards carry weights"
+    );
+}
+
 /// Sequential Dijkstra oracle (non-negative weights).
 pub fn dijkstra(g: &Csr, source: VertexId) -> Vec<f32> {
     let n = g.n();
@@ -91,50 +112,12 @@ pub fn dijkstra(g: &Csr, source: VertexId) -> Vec<f32> {
     dist
 }
 
-/// Weighted shard view (weights parallel to `Shard::out_neighbors` order).
-pub(crate) struct WeightedShard {
-    pub(crate) range: std::ops::Range<usize>,
-    offsets: Vec<usize>,
-    targets: Vec<VertexId>,
-    weights: Vec<f32>,
-}
-
-impl WeightedShard {
-    pub(crate) fn build(g: &Csr, partition: &Partition1D, l: LocalityId) -> Self {
-        let range = partition.range_of(l);
-        let mut offsets = vec![0usize];
-        let mut targets = Vec::new();
-        let mut weights = Vec::new();
-        for v in range.clone() {
-            if g.is_weighted() {
-                for (t, w) in g.neighbors_weighted(v as VertexId) {
-                    targets.push(t);
-                    weights.push(w);
-                }
-            } else {
-                // Unweighted graphs get unit weights (SSSP == hop count).
-                for &t in g.neighbors(v as VertexId) {
-                    targets.push(t);
-                    weights.push(1.0);
-                }
-            }
-            offsets.push(targets.len());
-        }
-        WeightedShard { range, offsets, targets, weights }
-    }
-
-    pub(crate) fn edges(&self, local: usize) -> impl Iterator<Item = (VertexId, f32)> + '_ {
-        let r = self.offsets[local]..self.offsets[local + 1];
-        self.targets[r.clone()].iter().cloned().zip(self.weights[r].iter().cloned())
-    }
-}
-
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::amt::{FlushPolicy, NetConfig, SimConfig};
     use crate::graph::generators;
-    use crate::graph::DistGraph;
+    use crate::graph::PartitionKind;
 
     fn det() -> SimConfig {
         SimConfig::deterministic(NetConfig::default())
@@ -185,6 +168,21 @@ mod tests {
             let d = DistGraph::block(&g, p);
             let res = run_bsp(&g, &d, 0, SimConfig::deterministic(NetConfig::default()));
             assert!(close(&res.dist, &want), "p={p}");
+        }
+    }
+
+    #[test]
+    fn async_and_bsp_match_dijkstra_under_every_partition_scheme() {
+        let g = generators::with_random_weights(&generators::kron(6, 5, 71), 1.0, 10.0, 72);
+        let want = dijkstra(&g, 0);
+        for kind in PartitionKind::all() {
+            for p in [2u32, 4, 8] {
+                let d = DistGraph::build_with(&g, kind.build(&g, p));
+                let a = run_async(&g, &d, 0, det());
+                assert!(close(&a.dist, &want), "async {kind:?} p={p}");
+                let b = run_bsp(&g, &d, 0, det());
+                assert!(close(&b.dist, &want), "bsp {kind:?} p={p}");
+            }
         }
     }
 

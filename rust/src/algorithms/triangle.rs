@@ -5,6 +5,11 @@
 //! `u` owned and `u < v < w` both neighbors of `u`; the edge query
 //! `(v, w)?` is shipped to `v`'s owner in per-destination batches, answered
 //! by local intersection, and the counts are reduced at locality 0.
+//!
+//! Wedge enumeration and the intersection answers both need whole rows at
+//! the owner, so the engine accepts any mirror-free
+//! [`PartitionScheme`](crate::graph::partition::PartitionScheme) (block,
+//! edge-balanced, hash) and rejects vertex cuts.
 
 use std::sync::Arc;
 
@@ -122,8 +127,7 @@ impl Actor for TriActor {
                 }
                 let dst = self.dist.owner(v);
                 if dst == here {
-                    let lv = v as usize - self.shard.range.start;
-                    self.local_count += self.local_intersect(lv, &ws);
+                    self.local_count += self.local_intersect(self.shard.local_index(v), &ws);
                 } else {
                     outgoing[dst as usize].push((v, ws));
                 }
@@ -142,8 +146,7 @@ impl Actor for TriActor {
         match msg {
             TriMsg::Queries(qs) => {
                 for (v, ws) in qs {
-                    let lv = v as usize - self.shard.range.start;
-                    self.local_count += self.local_intersect(lv, &ws);
+                    self.local_count += self.local_intersect(self.shard.local_index(v), &ws);
                 }
             }
             TriMsg::Partial(c) => {
@@ -164,6 +167,11 @@ impl Actor for TriActor {
 
 /// Run the distributed triangle count.
 pub fn run(dist: &DistGraph, cfg: SimConfig) -> TriangleResult {
+    assert!(
+        !dist.has_mirrors(),
+        "triangle counting needs whole rows at the owner; use a mirror-free partition \
+         scheme (block|edge_balanced|hash)"
+    );
     let dist = Arc::new(dist.clone());
     let actors: Vec<TriActor> = dist
         .shards
@@ -176,7 +184,8 @@ pub fn run(dist: &DistGraph, cfg: SimConfig) -> TriangleResult {
             phase: 0,
         })
         .collect();
-    let (actors, report) = SimRuntime::new(cfg).run(actors);
+    let (actors, mut report) = SimRuntime::new(cfg).run(actors);
+    report.partition = dist.partition_stats();
     TriangleResult { triangles: actors[0].total, report }
 }
 

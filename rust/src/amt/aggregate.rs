@@ -9,13 +9,21 @@
 //! folds its remote actions into an [`Aggregator`] instead of calling
 //! [`Ctx::send`](super::sim::Ctx::send) per action.
 //!
-//! An [`Aggregator`] keeps one dense combiner per destination locality
-//! (indexed by destination-local vertex offset, like the owned slice of an
-//! `hpx::partitioned_vector` segment). Pushing a value either claims an
-//! empty slot or *folds* into the pending one through the reduction hook
-//! (sum for PageRank contributions, min for BFS levels / SSSP distances /
-//! CC labels), so a flushed batch carries at most one item per destination
-//! vertex. When the [`FlushPolicy`] threshold fires, the destination's
+//! An [`Aggregator`] keeps one dense combiner per destination locality,
+//! indexed by **destination-local slot**. For master-bound traffic the
+//! slot is the destination's dense owned-row index
+//! ([`PartitionScheme::master_index`](crate::graph::partition::PartitionScheme::master_index),
+//! precomputed per ghost in the
+//! [`Shard`](crate::graph::Shard) ghost table); for mirror-bound scatter
+//! it is the destination's ghost-row slot (the master's mirror table).
+//! Either way the receiver applies batch items directly by index with no
+//! translation, and nothing assumes the partition is contiguous — this is
+//! what lets hash and vertex-cut schemes ride the same combiner layer as
+//! the paper's block layout. Pushing a value either claims an empty slot
+//! or *folds* into the pending one through the reduction hook (sum for
+//! PageRank contributions, min for BFS levels / SSSP distances / CC
+//! labels), so a flushed batch carries at most one item per destination
+//! slot. When the [`FlushPolicy`] threshold fires, the destination's
 //! batch is handed back to the caller to ship as one envelope; whatever is
 //! still buffered is shipped by an explicit [`Aggregator::drain`] at the
 //! end of a handler or superstep phase (the quiescence/barrier drain).
@@ -23,8 +31,6 @@
 //! [`AggStats`] counts items, folds, and emitted envelopes; algorithm
 //! drivers merge them into [`SimReport::agg`](super::metrics::SimReport)
 //! so every experiment reports the naive-vs-aggregated axis.
-
-use std::ops::Range;
 
 use super::net::NetConfig;
 use super::sim::LocalityId;
@@ -96,13 +102,14 @@ pub fn adaptive_items(net: &NetConfig, item_bytes: usize) -> usize {
     ((fixed / (0.1 * per_item)).ceil() as usize).clamp(16, 1 << 16)
 }
 
-/// One flushed combiner: `(global vertex, folded value)` pairs sorted by
-/// vertex id (deterministic wire order). Algorithms wrap this in their
-/// message enum; [`Batch::wire_bytes`] / [`Batch::len`] feed the
-/// [`Message`](super::sim::Message) impl.
+/// One flushed combiner: `(destination-local slot, folded value)` pairs
+/// sorted by slot (deterministic wire order; slots ascend with global ids,
+/// so this is the same order the old global-id batches had). Algorithms
+/// wrap this in their message enum; [`Batch::wire_bytes`] / [`Batch::len`]
+/// feed the [`Message`](super::sim::Message) impl.
 #[derive(Debug, Clone)]
 pub struct Batch<V> {
-    /// Folded items, sorted by global vertex id.
+    /// Folded items, sorted by destination-local slot.
     pub items: Vec<(u32, V)>,
     item_bytes: usize,
 }
@@ -168,9 +175,7 @@ impl AggStats {
 /// Typed per-destination message combiner. See the module docs.
 pub struct Aggregator<V> {
     here: LocalityId,
-    /// Global start offset of each destination's owned range.
-    starts: Vec<usize>,
-    /// Dense pending slots per destination (destination-local index).
+    /// Dense pending slots per destination (destination-local slot index).
     slots: Vec<Vec<Option<V>>>,
     /// Occupied slot offsets per destination, in first-touch order.
     touched: Vec<Vec<u32>>,
@@ -181,13 +186,16 @@ pub struct Aggregator<V> {
 }
 
 impl<V: Clone> Aggregator<V> {
-    /// Create a combiner over the destinations' owned vertex ranges
-    /// (`ranges[l]` = locality `l`'s contiguous global range). `item_bytes`
-    /// is the per-item wire size; `fold` merges a new value into a pending
-    /// one and must be associative and insensitive to arrival order (sum,
-    /// min, ...), so batching never changes results.
+    /// Create a combiner over the destinations' dense slot spaces
+    /// (`counts[l]` = locality `l`'s slot count: its owned-row count for
+    /// master-bound traffic, its ghost-row count for mirror scatter —
+    /// [`DistGraph::owned_counts`](crate::graph::DistGraph::owned_counts) /
+    /// [`DistGraph::ghost_counts`](crate::graph::DistGraph::ghost_counts)).
+    /// `item_bytes` is the per-item wire size; `fold` merges a new value
+    /// into a pending one and must be associative and insensitive to
+    /// arrival order (sum, min, ...), so batching never changes results.
     pub fn new(
-        ranges: &[Range<usize>],
+        counts: &[usize],
         here: LocalityId,
         policy: FlushPolicy,
         net: &NetConfig,
@@ -195,22 +203,21 @@ impl<V: Clone> Aggregator<V> {
         fold: fn(&mut V, V),
     ) -> Self {
         let threshold = policy.item_threshold(net, item_bytes);
-        let slots = ranges
+        let slots = counts
             .iter()
             .enumerate()
-            .map(|(l, r)| {
+            .map(|(l, &c)| {
                 if l == here as usize || threshold == Some(1) {
                     Vec::new() // never buffered
                 } else {
-                    vec![None; r.len()]
+                    vec![None; c]
                 }
             })
             .collect();
         Aggregator {
             here,
-            starts: ranges.iter().map(|r| r.start).collect(),
             slots,
-            touched: vec![Vec::new(); ranges.len()],
+            touched: vec![Vec::new(); counts.len()],
             threshold,
             item_bytes,
             fold,
@@ -220,12 +227,14 @@ impl<V: Clone> Aggregator<V> {
 
     /// Number of destinations (localities) configured.
     pub fn n_destinations(&self) -> usize {
-        self.starts.len()
+        self.slots.len()
     }
 
-    /// Fold `(v, val)` into `dst`'s combiner. Returns a batch when the
-    /// flush policy fired — the caller must ship it to `dst` now.
-    pub fn accumulate(&mut self, dst: LocalityId, v: u32, val: V) -> Option<Batch<V>> {
+    /// Fold `(slot, val)` into `dst`'s combiner, where `slot` is the
+    /// destination-local index (master index or ghost slot). Returns a
+    /// batch when the flush policy fired — the caller must ship it to
+    /// `dst` now.
+    pub fn accumulate(&mut self, dst: LocalityId, slot: u32, val: V) -> Option<Batch<V>> {
         debug_assert_ne!(dst, self.here, "aggregate only remote sends");
         self.stats.items += 1;
         if self.threshold == Some(1) {
@@ -233,18 +242,17 @@ impl<V: Clone> Aggregator<V> {
             self.stats.envelopes += 1;
             self.stats.policy_flushes += 1;
             self.stats.sent_items += 1;
-            return Some(Batch { items: vec![(v, val)], item_bytes: self.item_bytes });
+            return Some(Batch { items: vec![(slot, val)], item_bytes: self.item_bytes });
         }
         let d = dst as usize;
-        let off = v as usize - self.starts[d];
-        match &mut self.slots[d][off] {
+        match &mut self.slots[d][slot as usize] {
             Some(pending) => {
                 (self.fold)(pending, val);
                 self.stats.folded += 1;
             }
             empty => {
                 *empty = Some(val);
-                self.touched[d].push(off as u32);
+                self.touched[d].push(slot);
             }
         }
         if let Some(t) = self.threshold {
@@ -264,10 +272,9 @@ impl<V: Clone> Aggregator<V> {
         }
         let mut offs = std::mem::take(&mut self.touched[d]);
         offs.sort_unstable();
-        let start = self.starts[d];
         let items: Vec<(u32, V)> = offs
             .iter()
-            .map(|&o| ((start + o as usize) as u32, self.slots[d][o as usize].take().unwrap()))
+            .map(|&o| (o, self.slots[d][o as usize].take().unwrap()))
             .collect();
         self.stats.envelopes += 1;
         self.stats.sent_items += items.len() as u64;
@@ -287,7 +294,7 @@ impl<V: Clone> Aggregator<V> {
     /// (asynchronous algorithms) or right before requesting a barrier
     /// (BSP supersteps) so nothing is left behind at quiescence.
     pub fn drain(&mut self) -> Vec<(LocalityId, Batch<V>)> {
-        let (here, n) = (self.here, self.starts.len() as LocalityId);
+        let (here, n) = (self.here, self.slots.len() as LocalityId);
         (0..n)
             .filter(|&l| l != here)
             .filter_map(|l| self.drain_one(l).map(|b| (l, b)))
@@ -317,23 +324,13 @@ mod tests {
         *a = (*a).min(b);
     }
 
-    fn ranges(sizes: &[usize]) -> Vec<Range<usize>> {
-        let mut out = Vec::new();
-        let mut start = 0;
-        for &s in sizes {
-            out.push(start..start + s);
-            start += s;
-        }
-        out
-    }
-
     #[test]
     fn unbatched_emits_one_batch_per_item() {
-        let r = ranges(&[4, 4]);
+        let counts = [4usize, 4];
         let mut agg =
-            Aggregator::new(&r, 0, FlushPolicy::Unbatched, &NetConfig::default(), 8, add);
+            Aggregator::new(&counts, 0, FlushPolicy::Unbatched, &NetConfig::default(), 8, add);
         for i in 0..5u32 {
-            let b = agg.accumulate(1, 4 + (i % 4), 1.0).expect("unbatched flushes per item");
+            let b = agg.accumulate(1, i % 4, 1.0).expect("unbatched flushes per item");
             assert_eq!(b.len(), 1);
         }
         assert_eq!(agg.stats().envelopes, 5);
@@ -344,13 +341,14 @@ mod tests {
 
     #[test]
     fn items_policy_flushes_at_threshold_and_folds_duplicates() {
-        let r = ranges(&[4, 8]);
-        let mut agg = Aggregator::new(&r, 0, FlushPolicy::Items(3), &NetConfig::zero(), 8, add);
-        assert!(agg.accumulate(1, 4, 1.0).is_none());
-        assert!(agg.accumulate(1, 4, 2.0).is_none(), "fold, not a new slot");
-        assert!(agg.accumulate(1, 5, 1.0).is_none());
-        let b = agg.accumulate(1, 6, 1.0).expect("3rd distinct item flushes");
-        assert_eq!(b.items, vec![(4, 3.0), (5, 1.0), (6, 1.0)]);
+        let counts = [4usize, 8];
+        let mut agg =
+            Aggregator::new(&counts, 0, FlushPolicy::Items(3), &NetConfig::zero(), 8, add);
+        assert!(agg.accumulate(1, 0, 1.0).is_none());
+        assert!(agg.accumulate(1, 0, 2.0).is_none(), "fold, not a new slot");
+        assert!(agg.accumulate(1, 1, 1.0).is_none());
+        let b = agg.accumulate(1, 2, 1.0).expect("3rd distinct item flushes");
+        assert_eq!(b.items, vec![(0, 3.0), (1, 1.0), (2, 1.0)]);
         assert_eq!(agg.stats().folded, 1);
         assert_eq!(agg.stats().policy_flushes, 1);
         assert_eq!(agg.pending(), 0);
@@ -358,11 +356,12 @@ mod tests {
 
     #[test]
     fn manual_policy_only_drains() {
-        let r = ranges(&[2, 2, 2]);
-        let mut agg = Aggregator::new(&r, 1, FlushPolicy::Manual, &NetConfig::default(), 8, add);
+        let counts = [2usize, 2, 2];
+        let mut agg =
+            Aggregator::new(&counts, 1, FlushPolicy::Manual, &NetConfig::default(), 8, add);
         for _ in 0..100 {
             assert!(agg.accumulate(0, 0, 1.0).is_none());
-            assert!(agg.accumulate(2, 5, 1.0).is_none());
+            assert!(agg.accumulate(2, 1, 1.0).is_none());
         }
         assert_eq!(agg.pending(), 2);
         let out = agg.drain();
@@ -370,7 +369,7 @@ mod tests {
         assert_eq!(out[0].0, 0);
         assert_eq!(out[0].1.items, vec![(0, 100.0)]);
         assert_eq!(out[1].0, 2);
-        assert_eq!(out[1].1.items, vec![(5, 100.0)]);
+        assert_eq!(out[1].1.items, vec![(1, 100.0)]);
         assert_eq!(agg.stats().items, 200);
         assert_eq!(agg.stats().folded, 198);
         assert_eq!(agg.stats().sent_items, 2);
@@ -379,14 +378,14 @@ mod tests {
 
     #[test]
     fn min_fold_keeps_smallest() {
-        let r = ranges(&[2, 2]);
+        let counts = [2usize, 2];
         let mut agg =
-            Aggregator::new(&r, 0, FlushPolicy::Manual, &NetConfig::default(), 8, min_u32);
-        agg.accumulate(1, 2, 7);
-        agg.accumulate(1, 2, 3);
-        agg.accumulate(1, 2, 5);
+            Aggregator::new(&counts, 0, FlushPolicy::Manual, &NetConfig::default(), 8, min_u32);
+        agg.accumulate(1, 0, 7);
+        agg.accumulate(1, 0, 3);
+        agg.accumulate(1, 0, 5);
         let out = agg.drain();
-        assert_eq!(out[0].1.items, vec![(2, 3)]);
+        assert_eq!(out[0].1.items, vec![(0, 3)]);
     }
 
     #[test]
@@ -424,9 +423,10 @@ mod tests {
     }
 
     #[test]
-    fn batches_are_sorted_by_vertex() {
-        let r = ranges(&[0, 16]);
-        let mut agg = Aggregator::new(&r, 0, FlushPolicy::Manual, &NetConfig::default(), 8, add);
+    fn batches_are_sorted_by_slot() {
+        let counts = [0usize, 16];
+        let mut agg =
+            Aggregator::new(&counts, 0, FlushPolicy::Manual, &NetConfig::default(), 8, add);
         for v in [9u32, 3, 12, 1] {
             agg.accumulate(1, v, 1.0);
         }
@@ -437,11 +437,12 @@ mod tests {
 
     #[test]
     fn stats_conservation_invariant() {
-        let r = ranges(&[8, 8]);
-        let mut agg = Aggregator::new(&r, 0, FlushPolicy::Items(4), &NetConfig::zero(), 8, add);
+        let counts = [8usize, 8];
+        let mut agg =
+            Aggregator::new(&counts, 0, FlushPolicy::Items(4), &NetConfig::zero(), 8, add);
         let mut shipped = 0u64;
         for i in 0..37u32 {
-            if let Some(b) = agg.accumulate(1, 8 + (i % 8), 1.0) {
+            if let Some(b) = agg.accumulate(1, i % 8, 1.0) {
                 shipped += b.len() as u64;
             }
         }

@@ -41,6 +41,27 @@ impl WorkStats {
     }
 }
 
+/// Partition-quality summary of the distributed graph a run executed on.
+/// All three factors are `>= 1.0`; 1.0 is perfect. Like [`AggStats`] and
+/// [`WorkStats`], the engine knows nothing about partitions — algorithm
+/// drivers stamp [`SimReport::partition`] from
+/// [`DistGraph::partition_stats`](crate::graph::DistGraph::partition_stats).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct PartitionStats {
+    /// Max / mean owned-vertex count across localities.
+    pub vertex_imbalance: f64,
+    /// Max / mean locally-stored-edge count across localities.
+    pub edge_imbalance: f64,
+    /// Mean vertex copies (master + mirrors); 1.0 for 1-D schemes.
+    pub replication_factor: f64,
+}
+
+impl Default for PartitionStats {
+    fn default() -> Self {
+        PartitionStats { vertex_imbalance: 1.0, edge_imbalance: 1.0, replication_factor: 1.0 }
+    }
+}
+
 /// Outcome of one simulated run: the modeled makespan plus the quantities
 /// the paper's analysis hinges on (per-locality busy time → load balance,
 /// barrier count → synchronization cost, traffic → communication overhead).
@@ -68,6 +89,10 @@ pub struct SimReport {
     /// Algorithm-level work accounting (relaxation counters). Starts empty;
     /// algorithm drivers merge their actors' [`WorkStats`] in after the run.
     pub work: WorkStats,
+    /// Partition quality of the distributed graph (defaults to the perfect
+    /// 1.0 factors; drivers overwrite it from the built [`DistGraph`]
+    /// (crate::graph::DistGraph)).
+    pub partition: PartitionStats,
 }
 
 impl SimReport {
@@ -187,6 +212,7 @@ mod tests {
             per_locality_net: vec![],
             agg: AggStats::default(),
             work: WorkStats::default(),
+            partition: PartitionStats::default(),
         };
         assert!((r.mean_busy_us() - 75.0).abs() < 1e-12);
         assert!((r.load_imbalance() - 100.0 / 75.0).abs() < 1e-12);
@@ -205,6 +231,7 @@ mod tests {
             per_locality_net: vec![],
             agg: AggStats::default(),
             work: WorkStats::default(),
+            partition: PartitionStats::default(),
         };
         assert_eq!(r.load_imbalance(), 1.0);
         assert_eq!(r.utilization(), 1.0);

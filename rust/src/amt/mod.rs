@@ -38,7 +38,7 @@ pub mod sim;
 pub use agas::{Agas, GlobalAddress};
 pub use aggregate::{AggStats, Aggregator, Batch, FlushPolicy};
 pub use executor::{ChunkPolicy, Executor};
-pub use metrics::{SimReport, WorkStats};
+pub use metrics::{PartitionStats, SimReport, WorkStats};
 pub use net::{NetConfig, NetStats};
 pub use partitioned_vector::{AtomicLongVector, PartitionedVector};
 pub use sim::{Actor, Ctx, LocalityId, SimConfig, SimRuntime, SimTime};

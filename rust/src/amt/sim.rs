@@ -466,6 +466,7 @@ impl SimRuntime {
             per_locality_net: net_stats,
             agg: super::aggregate::AggStats::default(),
             work: super::metrics::WorkStats::default(),
+            partition: super::metrics::PartitionStats::default(),
         };
         (actors, report)
     }

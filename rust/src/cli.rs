@@ -98,7 +98,7 @@ COMMANDS:
     fig2        regenerate Figure 2 (PageRank sweep, HPX naive/opt vs Boost/BSP)
     ablations   run the DESIGN.md ablation suite (A1 aggregation, A2 chunking,
                 A4 amt::aggregate flush policies, A5 delta-stepping
-                delta x flush-policy sweep)
+                delta x flush-policy sweep, A6 partition schemes x algorithms)
     info        print graph statistics for the configured generator
     help        show this message
 
@@ -107,6 +107,7 @@ CONFIG OVERRIDES (key=value):
     localities (comma list), alpha, iterations, root, reps, aggregate,
     flush_policy (unbatched|items:N|bytes:N|adaptive|manual),
     sssp_delta (bucket width; 0 = auto w/d heuristic, inf = Bellman-Ford),
+    partition (block|edge_balanced|hash|vertex_cut),
     net.latency_us, net.bandwidth_gbps, net.send_cpu_us, net.recv_cpu_us,
     net.per_item_cpu_us, net.overhead_bytes, artifact_dir
 

@@ -8,6 +8,7 @@ use std::collections::BTreeMap;
 use std::path::Path;
 
 use crate::amt::{FlushPolicy, NetConfig};
+use crate::graph::PartitionKind;
 use crate::Result;
 
 /// Full experiment configuration.
@@ -42,6 +43,9 @@ pub struct Config {
     /// [`sssp::auto_delta`](crate::algorithms::sssp::auto_delta) (mean
     /// weight / mean degree); `inf` is accepted (≡ Bellman-Ford).
     pub sssp_delta: f32,
+    /// Vertex/edge partition scheme
+    /// (`block|edge_balanced|hash|vertex_cut`).
+    pub partition: PartitionKind,
     /// Artifact directory for the kernel path.
     pub artifact_dir: String,
 }
@@ -62,6 +66,7 @@ impl Default for Config {
             aggregate: false,
             flush_policy: FlushPolicy::Adaptive,
             sssp_delta: 0.0,
+            partition: PartitionKind::Block,
             artifact_dir: "artifacts".into(),
         }
     }
@@ -118,6 +123,13 @@ impl Config {
                         "sssp_delta must be >= 0 (0 = auto) or inf, got `{v}`"
                     );
                     c.sssp_delta = d;
+                }
+                "partition" => {
+                    c.partition = PartitionKind::parse(v).ok_or_else(|| {
+                        anyhow::anyhow!(
+                            "bad partition `{v}` (want block|edge_balanced|hash|vertex_cut)"
+                        )
+                    })?;
                 }
                 "artifact_dir" => c.artifact_dir = v.clone(),
                 "net.latency_us" => c.net.latency_us = v.parse()?,
@@ -221,6 +233,19 @@ mod tests {
         kv.insert("sssp_delta".into(), "NaN".into());
         assert!(Config::from_kv(&kv).is_err());
         assert_eq!(Config::default().sssp_delta, 0.0, "default is auto");
+    }
+
+    #[test]
+    fn partition_parses_and_rejects() {
+        let mut kv = BTreeMap::new();
+        kv.insert("partition".into(), "vertex_cut".into());
+        let c = Config::from_kv(&kv).unwrap();
+        assert_eq!(c.partition, PartitionKind::VertexCut);
+        kv.insert("partition".into(), "hash".into());
+        assert_eq!(Config::from_kv(&kv).unwrap().partition, PartitionKind::Hash);
+        kv.insert("partition".into(), "diagonal".into());
+        assert!(Config::from_kv(&kv).is_err());
+        assert_eq!(Config::default().partition, PartitionKind::Block);
     }
 
     #[test]

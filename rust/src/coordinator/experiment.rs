@@ -12,7 +12,7 @@ use std::time::Instant;
 use crate::algorithms::{bfs, pagerank, pagerank::PrParams};
 use crate::amt::{FlushPolicy, NetConfig, SimConfig, SimReport};
 use crate::config::Config;
-use crate::graph::{Csr, DistGraph, Partition1D};
+use crate::graph::{Csr, DistGraph, PartitionKind};
 use crate::Result;
 
 use super::report::{fmt_us, Table};
@@ -87,7 +87,7 @@ pub fn fig1_bfs(cfg: &Config) -> Result<(Table, Vec<Point>)> {
           "Boost msgs", "Boost barriers"],
     );
     for &p in &cfg.localities {
-        let dist = DistGraph::build(&g, &Partition1D::block(g.n(), p));
+        let dist = DistGraph::build_with(&g, cfg.partition.build(&g, p));
         let mut best: [Option<(f64, SimReport)>; 2] = [None, None];
         for _ in 0..cfg.reps.max(1) {
             // The paper's Figure 1 HPX arm is fine-grained (no app-level
@@ -197,7 +197,7 @@ pub fn fig2_pagerank(cfg: &Config) -> Result<(Table, Vec<Point>)> {
         ),
     ];
     for &p in &cfg.localities {
-        let dist = DistGraph::build(&g, &Partition1D::block(g.n(), p));
+        let dist = DistGraph::build_with(&g, cfg.partition.build(&g, p));
         let mut best: Vec<Option<(f64, SimReport)>> = vec![None; engines.len()];
         for _ in 0..cfg.reps.max(1) {
             for (i, (_, run)) in engines.iter().enumerate() {
@@ -242,7 +242,7 @@ pub fn ablation_aggregation(cfg: &Config) -> Result<Table> {
         &["nodes", "no-agg time", "agg time", "no-agg envs", "agg envs", "agg factor"],
     );
     for &p in &cfg.localities {
-        let dist = DistGraph::build(&g, &Partition1D::block(g.n(), p));
+        let dist = DistGraph::build_with(&g, cfg.partition.build(&g, p));
         let mut best = [f64::INFINITY; 2];
         let mut reps_report: [Option<SimReport>; 2] = [None, None];
         for _ in 0..cfg.reps.max(1) {
@@ -296,7 +296,7 @@ pub fn ablation_flush_policy(cfg: &Config) -> Result<Table> {
     let params = PrParams { alpha: cfg.alpha, iterations: cfg.iterations };
     let want = pagerank::sequential::pagerank(&g, params);
     let p = cfg.localities.iter().cloned().filter(|&x| x <= 8).max().unwrap_or(8);
-    let dist = DistGraph::build(&g, &Partition1D::block(g.n(), p));
+    let dist = DistGraph::build_with(&g, cfg.partition.build(&g, p));
     let mut table = Table::new(
         format!(
             "Ablation A4 — async PageRank flush policy on {} ({} localities)",
@@ -337,7 +337,7 @@ pub fn ablation_adaptive_chunk(cfg: &Config) -> Result<Table> {
     let g = cfg.build_graph()?;
     let params = PrParams { alpha: cfg.alpha, iterations: cfg.iterations };
     let p = *cfg.localities.iter().find(|&&x| x >= 2).unwrap_or(&2);
-    let dist = DistGraph::build(&g, &Partition1D::block(g.n(), p));
+    let dist = DistGraph::build_with(&g, cfg.partition.build(&g, p));
     let policies: [(&str, ChunkPolicy); 5] = [
         ("sequential", ChunkPolicy::Sequential),
         ("static-256", ChunkPolicy::Static { chunk: 256 }),
@@ -387,19 +387,27 @@ pub fn extensions(cfg: &Config) -> Result<Table> {
     let g = cfg.build_graph()?;
     let gw = generators::with_random_weights(&g, 1.0, 10.0, cfg.seed + 1);
     let delta = if cfg.sssp_delta > 0.0 { cfg.sssp_delta } else { sssp::auto_delta(&gw) };
+    anyhow::ensure!(
+        cfg.partition != PartitionKind::VertexCut,
+        "the extensions sweep includes delta-stepping and triangle counting, which need a \
+         mirror-free partition; set partition=block|edge_balanced|hash"
+    );
     let mut table = Table::new(
         format!("Extensions — SSSP / CC / triangles on {}", cfg.graph_name()),
         &["nodes", "sssp-async", "sssp-bsp", "sssp-delta", "cc", "triangles"],
     );
     for &p in &cfg.localities {
-        let dist = DistGraph::build(&g, &Partition1D::block(g.n(), p));
+        let dist = DistGraph::build_with(&g, cfg.partition.build(&g, p));
+        // SSSP engines read weights from the shards, so they get their own
+        // DistGraph built from the weighted graph.
+        let distw = DistGraph::build_with(&gw, cfg.partition.build(&gw, p));
         // Async label-correcting floods fine-grained relaxations; run it
         // under the HPX parcel-coalescing config like the async BFS.
-        let s_async = sssp::run_async(&gw, &dist, cfg.root, hpx_cfg(&cfg.net));
-        let s_bsp = sssp::run_bsp(&gw, &dist, cfg.root, sim_cfg(&cfg.net, false));
+        let s_async = sssp::run_async(&gw, &distw, cfg.root, hpx_cfg(&cfg.net));
+        let s_bsp = sssp::run_bsp(&gw, &distw, cfg.root, sim_cfg(&cfg.net, false));
         let s_delta = sssp::delta::run_with(
             &gw,
-            &dist,
+            &distw,
             cfg.root,
             delta,
             cfg.flush_policy,
@@ -433,7 +441,12 @@ pub fn ablation_delta_stepping(cfg: &Config) -> Result<Table> {
     let g = cfg.build_graph()?;
     let gw = generators::with_random_weights(&g, 1.0, 10.0, cfg.seed + 1);
     let p = cfg.localities.iter().cloned().filter(|&x| x <= 8).max().unwrap_or(8);
-    let dist = DistGraph::build(&gw, &Partition1D::block(gw.n(), p));
+    anyhow::ensure!(
+        cfg.partition != PartitionKind::VertexCut,
+        "delta-stepping needs a mirror-free partition; set partition=block|edge_balanced|hash \
+         (A6 covers the vertex-cut axis)"
+    );
+    let dist = DistGraph::build_with(&gw, cfg.partition.build(&gw, p));
     let want = sssp::dijkstra(&gw, cfg.root);
     let auto = if cfg.sssp_delta > 0.0 { cfg.sssp_delta } else { sssp::auto_delta(&gw) };
     let deltas: Vec<(String, f32)> = vec![
@@ -508,4 +521,97 @@ pub fn ablation_delta_stepping(cfg: &Config) -> Result<Table> {
     let r = sssp::run_bsp(&gw, &dist, cfg.root, sim_cfg(&cfg.net, false));
     push("bsp", "-", "manual", &r.report, linf(&r.dist));
     Ok(table)
+}
+
+/// Ablation A6: partition scheme × algorithm. Runs every
+/// [`PartitionKind`] against one engine per algorithm family — async BFS,
+/// async PageRank, BSP CC, BSP SSSP (all scheme-generic) — at the largest
+/// locality count ≤ 8, validating each result against its sequential
+/// oracle and reporting modeled time, envelope counts, and the partition
+/// quality columns (vertex/edge imbalance, replication factor). This is
+/// the experiment the tentpole exists for: on skewed inputs the vertex
+/// cut trades replication traffic for the edge balance the 1-D block
+/// layout cannot reach.
+pub fn ablation_partition_schemes(cfg: &Config) -> Result<Table> {
+    use crate::algorithms::{cc, sssp};
+    use crate::graph::generators;
+
+    let g = cfg.build_graph()?;
+    let gw = generators::with_random_weights(&g, 1.0, 10.0, cfg.seed + 1);
+    let p = cfg.localities.iter().cloned().filter(|&x| x <= 8).max().unwrap_or(8);
+    let params = PrParams { alpha: cfg.alpha, iterations: cfg.iterations };
+    let pr_want = pagerank::sequential::pagerank(&g, params);
+    let bfs_want = bfs::sequential::distances(&g, cfg.root);
+    let cc_want = crate::algorithms::cc::union_find(&g);
+    let sssp_want = sssp::dijkstra(&gw, cfg.root);
+    let mut table = Table::new(
+        format!(
+            "Ablation A6 — partition scheme x algorithm on {} ({} localities)",
+            cfg.graph_name(),
+            p
+        ),
+        &["scheme", "algorithm", "best time", "envelopes", "v-imb", "e-imb", "repl"],
+    );
+    for kind in PartitionKind::all() {
+        let dist = DistGraph::build_with(&g, kind.build(&g, p));
+        let distw = DistGraph::build_with(&gw, kind.build(&gw, p));
+        let mut rows: Vec<(&str, Option<SimReport>)> = Vec::new();
+        for _ in 0..cfg.reps.max(1) {
+            let r = bfs::async_hpx::run_with_policy(
+                &dist,
+                cfg.root,
+                cfg.flush_policy,
+                sim_cfg(&cfg.net, false),
+            );
+            let lv = bfs::tree_levels(cfg.root, &r.parents);
+            anyhow::ensure!(lv == bfs_want, "A6: BFS levels diverge under {}", kind.name());
+            keep_best(&mut rows, "bfs-async", r.report);
+
+            let r =
+                pagerank::async_hpx::run(&dist, params, cfg.flush_policy, sim_cfg(&cfg.net, false));
+            let diff = pagerank::max_abs_diff(&r.ranks, &pr_want);
+            anyhow::ensure!(diff < 1e-3, "A6: PageRank diverges under {} ({diff})", kind.name());
+            keep_best(&mut rows, "pagerank-async", r.report);
+
+            let r = cc::run(&dist, sim_cfg(&cfg.net, false));
+            anyhow::ensure!(r.labels == cc_want, "A6: CC labels diverge under {}", kind.name());
+            keep_best(&mut rows, "cc-bsp", r.report);
+
+            let r = sssp::run_bsp(&gw, &distw, cfg.root, sim_cfg(&cfg.net, false));
+            let ok = r.dist.iter().zip(&sssp_want).all(|(a, b)| {
+                (a.is_infinite() && b.is_infinite()) || (a - b).abs() < 1e-3
+            });
+            anyhow::ensure!(ok, "A6: SSSP distances diverge under {}", kind.name());
+            keep_best(&mut rows, "sssp-bsp", r.report);
+        }
+        for (algo, report) in rows {
+            let r = report.unwrap();
+            table.row(vec![
+                kind.name().to_string(),
+                algo.to_string(),
+                fmt_us(r.makespan_us),
+                r.net.envelopes.to_string(),
+                format!("{:.2}", r.partition.vertex_imbalance),
+                format!("{:.2}", r.partition.edge_imbalance),
+                format!("{:.2}", r.partition.replication_factor),
+            ]);
+        }
+    }
+    Ok(table)
+}
+
+/// Keep the fastest repetition per labelled row of an A6 sweep.
+fn keep_best(
+    rows: &mut Vec<(&'static str, Option<SimReport>)>,
+    algo: &'static str,
+    report: SimReport,
+) {
+    match rows.iter_mut().find(|(a, _)| *a == algo) {
+        Some((_, slot)) => {
+            if slot.as_ref().map(|b| report.makespan_us < b.makespan_us).unwrap_or(true) {
+                *slot = Some(report);
+            }
+        }
+        None => rows.push((algo, Some(report))),
+    }
 }

@@ -11,7 +11,7 @@ pub mod report;
 use crate::algorithms::{bfs, pagerank, pagerank::PrParams};
 use crate::amt::{FlushPolicy, SimConfig};
 use crate::config::Config;
-use crate::graph::{DistGraph, Partition1D};
+use crate::graph::{Csr, DistGraph};
 use crate::Result;
 
 pub use experiment::Point;
@@ -49,11 +49,25 @@ impl Engine {
     }
 }
 
+/// Build the configured partition scheme and shard `g` over `p`
+/// localities; rejects scheme/engine combinations that cannot work.
+fn build_dist(cfg: &Config, g: &Csr, p: u32, needs_whole_rows: bool) -> Result<DistGraph> {
+    let dist = DistGraph::build_with(g, cfg.partition.build(g, p));
+    if needs_whole_rows && dist.has_mirrors() {
+        anyhow::bail!(
+            "partition `{}` produces mirror rows, which this engine cannot expand; \
+             use block|edge_balanced|hash",
+            cfg.partition.name()
+        );
+    }
+    Ok(dist)
+}
+
 /// Run a single distributed BFS with the chosen engine; optionally
 /// validates against the sequential oracle.
 pub fn run_bfs(cfg: &Config, p: u32, engine: Engine, validate: bool) -> Result<bfs::BfsResult> {
     let g = cfg.build_graph()?;
-    let dist = DistGraph::build(&g, &Partition1D::block(g.n(), p));
+    let dist = build_dist(cfg, &g, p, engine == Engine::DirOpt)?;
     let sim = SimConfig {
         net: cfg.net.clone(),
         aggregate_sends: cfg.aggregate,
@@ -81,7 +95,7 @@ pub fn run_pagerank(
     validate: bool,
 ) -> Result<pagerank::PrResult> {
     let g = cfg.build_graph()?;
-    let dist = DistGraph::build(&g, &Partition1D::block(g.n(), p));
+    let dist = build_dist(cfg, &g, p, engine == Engine::Kernel)?;
     let params = PrParams { alpha: cfg.alpha, iterations: cfg.iterations };
     let sim = SimConfig {
         net: cfg.net.clone(),
@@ -125,7 +139,7 @@ pub fn run_sssp(
 
     let g = cfg.build_graph()?;
     let gw = generators::with_random_weights(&g, 1.0, 10.0, cfg.seed + 1);
-    let dist = DistGraph::build(&gw, &Partition1D::block(gw.n(), p));
+    let dist = build_dist(cfg, &gw, p, engine == Engine::Delta)?;
     let sim = SimConfig {
         net: cfg.net.clone(),
         aggregate_sends: cfg.aggregate,
@@ -204,6 +218,30 @@ mod tests {
             let res = run_sssp(&cfg, 3, e, true).unwrap();
             assert!(res.report.work.relaxations > 0, "{e:?} counted no relaxations");
         }
+    }
+
+    #[test]
+    fn run_commands_work_under_every_partition_scheme() {
+        use crate::graph::PartitionKind;
+        for kind in PartitionKind::all() {
+            let mut cfg = tiny_cfg();
+            cfg.partition = kind;
+            run_bfs(&cfg, 4, Engine::Async, true).unwrap();
+            cfg.generator = "urand-directed".into();
+            run_pagerank(&cfg, 4, Engine::Bsp, true).unwrap();
+            cfg.generator = "urand".into();
+            run_sssp(&cfg, 4, Engine::Bsp, true).unwrap();
+        }
+    }
+
+    #[test]
+    fn whole_row_engines_reject_vertex_cut() {
+        use crate::graph::PartitionKind;
+        let mut cfg = tiny_cfg();
+        cfg.generator = "kron".into(); // skewed -> the cut really mirrors
+        cfg.partition = PartitionKind::VertexCut;
+        assert!(run_bfs(&cfg, 4, Engine::DirOpt, false).is_err());
+        assert!(run_sssp(&cfg, 4, Engine::Delta, false).is_err());
     }
 
     #[test]

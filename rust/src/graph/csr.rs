@@ -142,6 +142,12 @@ impl Csr {
     pub fn targets(&self) -> &[VertexId] {
         &self.targets
     }
+
+    /// Raw weight array (len m), parallel to [`Csr::targets`]; `None` for
+    /// unweighted graphs.
+    pub fn weights(&self) -> Option<&[f32]> {
+        self.weights.as_deref()
+    }
 }
 
 #[cfg(test)]

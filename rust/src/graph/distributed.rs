@@ -1,74 +1,218 @@
 //! Distributed graph shards: the per-locality slice of a partitioned graph.
 //!
-//! Each locality owns a contiguous vertex range (see
-//! [`Partition1D`](super::Partition1D)) and holds
+//! A [`Shard`] materializes a [`PartitionScheme`] at one locality. Its
+//! local row space is dense and two-tiered:
 //!
-//! * the **out-CSR** of its owned rows (targets are *global* ids — edges
-//!   freely cross localities, exactly like NWGraph adjacency backed by an
-//!   `hpx::partitioned_vector` segment), used by push-style traversal;
-//! * the **in-CSR** (transposed rows), used by pull-style PageRank;
-//! * on demand, a **masked-ELL** encoding of the in-adjacency
-//!   ([`EllShard`]) with *virtual-row splitting* for the AOT kernel path —
-//!   HLO needs static shapes, so rows wider than the kernel's `max_deg`
-//!   are split across several virtual rows whose partial sums the caller
-//!   re-accumulates (`row_map`).
+//! * rows `0..n_local` are the **owned** (master) vertices, ascending by
+//!   global id — the authoritative state of every algorithm lives here;
+//! * rows `n_local..n_local+n_ghosts` are **ghosts**: non-owned vertices
+//!   referenced by locally homed edges, ascending by global id. The ghost
+//!   table ([`Shard::ghost_global_ids`], [`Shard::ghost_owner`],
+//!   [`Shard::ghost_master_index`]) precomputes, per ghost, the master
+//!   locality and the dense owned-row index *at that master* — the wire
+//!   index the [`Aggregator`](crate::amt::Aggregator) routes on. See the
+//!   ghost-index invariants in [`partition`](super::partition).
+//!
+//! Adjacency is stored per local row for exactly the edges the scheme
+//! homes here. Under 1-D schemes every edge lives with its source's
+//! master, so owned rows carry whole rows and ghost rows carry nothing.
+//! Under a vertex cut, ghost rows with locally homed out-edges are
+//! **mirrors**: the master's [`Shard::mirrors`] table lists them as
+//! `(locality, ghost-slot-at-that-locality)` pairs so an algorithm can
+//! scatter a master update straight into the destination's dense row
+//! space (gather-apply-scatter).
+//!
+//! The shard also keeps the full **in-CSR** of its owned rows (global
+//! ids, used by pull-style engines) and, on demand, a **masked-ELL**
+//! encoding of the in-adjacency ([`EllShard`]) with virtual-row splitting
+//! for the AOT kernel path.
 
 use std::ops::Range;
+use std::sync::Arc;
 
+use super::partition::PartitionScheme;
 use super::{Csr, Partition1D, VertexId};
 use crate::amt::sim::LocalityId;
 
-/// One locality's shard.
+/// One locality's shard. See the module docs for the row-space layout.
 #[derive(Debug, Clone)]
 pub struct Shard {
     /// Owning locality.
     pub locality: LocalityId,
-    /// Owned global vertex range.
-    pub range: Range<usize>,
+    /// Global ids of owned (master) rows, ascending; local row `r` of an
+    /// owned vertex is its position here.
+    pub owned_ids: Vec<VertexId>,
+    /// Global out-degree of each owned row (PageRank contributions divide
+    /// by this — the *global* degree, not the locally stored edge count).
+    pub out_degree: Vec<u32>,
+    /// Ghost table: global ids of non-owned local rows, ascending.
+    pub ghost_global_ids: Vec<VertexId>,
+    /// Master locality of each ghost.
+    pub ghost_owner: Vec<LocalityId>,
+    /// Dense owned-row index of each ghost at its master (the wire index).
+    pub ghost_master_index: Vec<u32>,
+    // Locally homed out-edges of owned rows; `out_targets` are global ids
+    // (ascending per row), `out_local` the parallel dense local rows.
     out_offsets: Vec<usize>,
     out_targets: Vec<VertexId>,
+    out_local: Vec<u32>,
+    out_weights: Vec<f32>, // empty when the graph is unweighted
+    // Locally homed out-edges whose source is a ghost (mirror rows).
+    ghost_out_offsets: Vec<usize>,
+    ghost_out_targets: Vec<VertexId>,
+    ghost_out_local: Vec<u32>,
+    ghost_out_weights: Vec<f32>,
+    // Mirror table: per owned row, every other locality holding out-edges
+    // of that vertex, as (locality, ghost slot there).
+    mirror_offsets: Vec<usize>,
+    mirror_entries: Vec<(LocalityId, u32)>,
+    // Full in-adjacency of owned rows (global ids).
     in_offsets: Vec<usize>,
     in_targets: Vec<VertexId>,
-    /// Global out-degree of each owned vertex (PageRank contributions
-    /// divide by this).
-    pub out_degree: Vec<u32>,
 }
 
 impl Shard {
     /// Number of owned vertices.
     pub fn n_local(&self) -> usize {
-        self.range.end - self.range.start
+        self.owned_ids.len()
+    }
+
+    /// Number of ghost rows.
+    pub fn n_ghosts(&self) -> usize {
+        self.ghost_global_ids.len()
+    }
+
+    /// Total local rows (owned + ghosts).
+    pub fn n_rows(&self) -> usize {
+        self.n_local() + self.n_ghosts()
+    }
+
+    /// Global id of any local row (owned or ghost).
+    pub fn global_of(&self, row: usize) -> VertexId {
+        if row < self.n_local() {
+            self.owned_ids[row]
+        } else {
+            self.ghost_global_ids[row - self.n_local()]
+        }
+    }
+
+    /// Global id of an owned local row.
+    pub fn global_id(&self, local: usize) -> VertexId {
+        self.owned_ids[local]
     }
 
     /// Local row index of a global vertex (must be owned).
     pub fn local_index(&self, v: VertexId) -> usize {
-        debug_assert!(self.range.contains(&(v as usize)));
-        v as usize - self.range.start
+        self.owned_ids.binary_search(&v).expect("vertex not owned by this shard")
     }
 
-    /// Global id of a local row.
-    pub fn global_id(&self, local: usize) -> VertexId {
-        (self.range.start + local) as VertexId
+    /// Local row of a global vertex, owned or ghost; `None` if the shard
+    /// never references it.
+    pub fn row_of(&self, v: VertexId) -> Option<usize> {
+        match self.owned_ids.binary_search(&v) {
+            Ok(i) => Some(i),
+            Err(_) => {
+                self.ghost_global_ids.binary_search(&v).ok().map(|i| self.n_local() + i)
+            }
+        }
     }
 
-    /// Out-neighbors (global ids) of the owned vertex with local row `u`.
+    /// Out-neighbors (global ids, ascending) of the owned row `u` that
+    /// are homed at this shard. Under 1-D schemes this is the whole row.
     pub fn out_neighbors(&self, u: usize) -> &[VertexId] {
         &self.out_targets[self.out_offsets[u]..self.out_offsets[u + 1]]
     }
 
-    /// In-neighbors (global ids) of the owned vertex with local row `u`.
+    /// Out-neighbors of owned row `u` as dense local rows (parallel to
+    /// [`Shard::out_neighbors`]).
+    pub fn out_neighbors_local(&self, u: usize) -> &[u32] {
+        &self.out_local[self.out_offsets[u]..self.out_offsets[u + 1]]
+    }
+
+    /// Locally homed out-neighbors of any local row, as dense local rows.
+    /// Owned rows read their row slice; ghost rows read their mirror
+    /// adjacency (empty unless this shard homes edges of that vertex).
+    pub fn row_neighbors_local(&self, row: usize) -> &[u32] {
+        if row < self.n_local() {
+            self.out_neighbors_local(row)
+        } else {
+            let gi = row - self.n_local();
+            &self.ghost_out_local[self.ghost_out_offsets[gi]..self.ghost_out_offsets[gi + 1]]
+        }
+    }
+
+    /// Locally homed weighted out-edges of any local row as
+    /// `(dense local target row, weight)`; unweighted graphs yield unit
+    /// weights (SSSP on them degenerates to hop counts).
+    pub fn row_edges(&self, row: usize) -> impl Iterator<Item = (u32, f32)> + '_ {
+        let (locals, weights, range) = if row < self.n_local() {
+            let r = self.out_offsets[row]..self.out_offsets[row + 1];
+            (&self.out_local, &self.out_weights, r)
+        } else {
+            let gi = row - self.n_local();
+            let r = self.ghost_out_offsets[gi]..self.ghost_out_offsets[gi + 1];
+            (&self.ghost_out_local, &self.ghost_out_weights, r)
+        };
+        let w = (!weights.is_empty()).then_some(weights);
+        locals[range.clone()]
+            .iter()
+            .cloned()
+            .enumerate()
+            .map(move |(k, t)| (t, w.map(|w| w[range.start + k]).unwrap_or(1.0)))
+    }
+
+    /// True when edge weights were carried over from the source graph.
+    pub fn is_weighted(&self) -> bool {
+        !self.out_weights.is_empty() || !self.ghost_out_weights.is_empty()
+    }
+
+    /// Mirror locations of the owned row `u`: every other locality that
+    /// homes out-edges of this vertex, as (locality, ghost slot there).
+    /// Empty under replication-free schemes.
+    pub fn mirrors(&self, u: usize) -> &[(LocalityId, u32)] {
+        &self.mirror_entries[self.mirror_offsets[u]..self.mirror_offsets[u + 1]]
+    }
+
+    /// True when any owned row has mirrors elsewhere.
+    pub fn has_mirrors(&self) -> bool {
+        !self.mirror_entries.is_empty()
+    }
+
+    /// In-neighbors (global ids) of the owned vertex with local row `u` —
+    /// the *full* in-adjacency regardless of scheme.
     pub fn in_neighbors(&self, u: usize) -> &[VertexId] {
         &self.in_targets[self.in_offsets[u]..self.in_offsets[u + 1]]
     }
 
-    /// Owned out-edge count.
+    /// Locally homed out-edge count (owned + mirror rows).
     pub fn m_out(&self) -> usize {
-        self.out_targets.len()
+        self.out_targets.len() + self.ghost_out_targets.len()
     }
 
     /// Owned in-edge count.
     pub fn m_in(&self) -> usize {
         self.in_targets.len()
+    }
+
+    /// The owned set as a contiguous global range, when it is one (1-D
+    /// block/edge-balanced cuts). Pull engines that exchange contiguous
+    /// slices (kernel PageRank) require this.
+    pub fn contiguous_range(&self) -> Option<Range<usize>> {
+        match (self.owned_ids.first(), self.owned_ids.last()) {
+            (Some(&a), Some(&b)) if (b - a) as usize + 1 == self.owned_ids.len() => {
+                Some(a as usize..b as usize + 1)
+            }
+            (None, _) => Some(0..0),
+            _ => None,
+        }
+    }
+
+    /// Copy per-owned-row values into their global slots.
+    pub fn scatter_owned<T: Copy>(&self, local: &[T], global: &mut [T]) {
+        debug_assert_eq!(local.len(), self.n_local());
+        for (i, &gid) in self.owned_ids.iter().enumerate() {
+            global[gid as usize] = local[i];
+        }
     }
 
     /// Encode the in-adjacency as masked ELL with virtual-row splitting.
@@ -148,52 +292,198 @@ impl EllShard {
     }
 }
 
+/// Partition-quality summary of a built [`DistGraph`], merged into
+/// [`SimReport::partition`](crate::amt::SimReport) by algorithm drivers.
+pub use crate::amt::metrics::PartitionStats;
+
 /// A graph partitioned into per-locality shards.
 #[derive(Debug, Clone)]
 pub struct DistGraph {
-    /// The vertex partition.
-    pub partition: Partition1D,
+    /// The vertex/edge partition scheme.
+    pub partition: Arc<dyn PartitionScheme>,
     /// One shard per locality.
     pub shards: Vec<Shard>,
     n: usize,
     m: usize,
+    owned_counts: Vec<usize>,
+    ghost_counts: Vec<usize>,
 }
 
 impl DistGraph {
-    /// Partition `g` according to `partition`.
+    /// Partition `g` according to a 1-D contiguous partition (the
+    /// historical entry point; see [`DistGraph::build_with`]).
     pub fn build(g: &Csr, partition: &Partition1D) -> Self {
-        assert_eq!(g.n(), partition.n());
+        DistGraph::build_with(g, Arc::new(partition.clone()))
+    }
+
+    /// Partition `g` according to any [`PartitionScheme`].
+    pub fn build_with(g: &Csr, scheme: Arc<dyn PartitionScheme>) -> Self {
+        assert_eq!(g.n(), scheme.n(), "scheme covers a different vertex count");
+        let p = scheme.p();
+        assert!(p > 0, "need at least one locality");
         let t = g.transpose();
-        let shards = (0..partition.p())
-            .map(|l| {
-                let range = partition.range_of(l);
-                let mut out_offsets = Vec::with_capacity(range.len() + 1);
-                let mut out_targets = Vec::new();
-                let mut in_offsets = Vec::with_capacity(range.len() + 1);
-                let mut in_targets = Vec::new();
-                let mut out_degree = Vec::with_capacity(range.len());
-                out_offsets.push(0);
-                in_offsets.push(0);
-                for v in range.clone() {
-                    let v = v as VertexId;
-                    out_targets.extend_from_slice(g.neighbors(v));
-                    out_offsets.push(out_targets.len());
-                    in_targets.extend_from_slice(t.neighbors(v));
-                    in_offsets.push(in_targets.len());
-                    out_degree.push(g.degree(v) as u32);
+        let offsets = g.offsets();
+        let targets = g.targets();
+        let weights = g.weights();
+
+        // Locally homed edges per locality as (src, global edge idx),
+        // already in (src asc, e asc) order.
+        let mut homed: Vec<Vec<(VertexId, u32)>> = vec![Vec::new(); p as usize];
+        for u in 0..g.n() {
+            for e in offsets[u]..offsets[u + 1] {
+                homed[scheme.edge_home(u as VertexId, e) as usize]
+                    .push((u as VertexId, e as u32));
+            }
+        }
+
+        let mut shards: Vec<Shard> = Vec::with_capacity(p as usize);
+        for l in 0..p {
+            let owned_ids = scheme.owned_vertices(l);
+            let pairs = &homed[l as usize];
+            // Ghosts: every non-owned endpoint of a locally homed edge.
+            let mut ghost: Vec<VertexId> = Vec::new();
+            for &(u, e) in pairs {
+                if scheme.owner(u) != l {
+                    ghost.push(u);
                 }
-                Shard {
-                    locality: l,
-                    range,
-                    out_offsets,
-                    out_targets,
-                    in_offsets,
-                    in_targets,
-                    out_degree,
+                let w = targets[e as usize];
+                if scheme.owner(w) != l {
+                    ghost.push(w);
                 }
-            })
-            .collect();
-        DistGraph { partition: partition.clone(), shards, n: g.n(), m: g.m() }
+            }
+            ghost.sort_unstable();
+            ghost.dedup();
+            let ghost_owner: Vec<LocalityId> = ghost.iter().map(|&v| scheme.owner(v)).collect();
+            let ghost_master_index: Vec<u32> =
+                ghost.iter().map(|&v| scheme.master_index(v) as u32).collect();
+            let n_owned = owned_ids.len();
+            let row_of = |v: VertexId| -> u32 {
+                match owned_ids.binary_search(&v) {
+                    Ok(i) => i as u32,
+                    Err(_) => {
+                        let gi = ghost
+                            .binary_search(&v)
+                            .expect("edge endpoint neither owned nor ghost");
+                        (n_owned + gi) as u32
+                    }
+                }
+            };
+            // Group pairs by source for row assembly.
+            let mut groups: Vec<(VertexId, Range<usize>)> = Vec::new();
+            let mut i = 0;
+            while i < pairs.len() {
+                let src = pairs[i].0;
+                let mut j = i + 1;
+                while j < pairs.len() && pairs[j].0 == src {
+                    j += 1;
+                }
+                groups.push((src, i..j));
+                i = j;
+            }
+            let mut emit = |ids: &[VertexId],
+                            offs: &mut Vec<usize>,
+                            tgts: &mut Vec<VertexId>,
+                            locs: &mut Vec<u32>,
+                            wts: &mut Vec<f32>| {
+                for &gid in ids {
+                    if let Ok(k) = groups.binary_search_by_key(&gid, |x| x.0) {
+                        for &(_, e) in &pairs[groups[k].1.clone()] {
+                            let w = targets[e as usize];
+                            tgts.push(w);
+                            locs.push(row_of(w));
+                            if let Some(ws) = weights {
+                                wts.push(ws[e as usize]);
+                            }
+                        }
+                    }
+                    offs.push(tgts.len());
+                }
+            };
+            let mut out_offsets = vec![0usize];
+            let mut out_targets = Vec::new();
+            let mut out_local = Vec::new();
+            let mut out_weights = Vec::new();
+            emit(
+                &owned_ids,
+                &mut out_offsets,
+                &mut out_targets,
+                &mut out_local,
+                &mut out_weights,
+            );
+            let mut ghost_out_offsets = vec![0usize];
+            let mut ghost_out_targets = Vec::new();
+            let mut ghost_out_local = Vec::new();
+            let mut ghost_out_weights = Vec::new();
+            emit(
+                &ghost,
+                &mut ghost_out_offsets,
+                &mut ghost_out_targets,
+                &mut ghost_out_local,
+                &mut ghost_out_weights,
+            );
+
+            let mut in_offsets = Vec::with_capacity(n_owned + 1);
+            let mut in_targets = Vec::new();
+            in_offsets.push(0);
+            let out_degree = owned_ids.iter().map(|&v| g.degree(v) as u32).collect();
+            for &v in &owned_ids {
+                in_targets.extend_from_slice(t.neighbors(v));
+                in_offsets.push(in_targets.len());
+            }
+            shards.push(Shard {
+                locality: l,
+                owned_ids,
+                out_degree,
+                ghost_global_ids: ghost,
+                ghost_owner,
+                ghost_master_index,
+                out_offsets,
+                out_targets,
+                out_local,
+                out_weights,
+                ghost_out_offsets,
+                ghost_out_targets,
+                ghost_out_local,
+                ghost_out_weights,
+                mirror_offsets: Vec::new(),
+                mirror_entries: Vec::new(),
+                in_offsets,
+                in_targets,
+            });
+        }
+
+        // Second pass: the mirror table. A ghost row holding out-edges is
+        // a mirror; its master's row records (locality, ghost slot).
+        let mut per_vertex: Vec<Vec<(LocalityId, u32)>> = vec![Vec::new(); g.n()];
+        for s in &shards {
+            for gi in 0..s.n_ghosts() {
+                if s.ghost_out_offsets[gi + 1] > s.ghost_out_offsets[gi] {
+                    per_vertex[s.ghost_global_ids[gi] as usize].push((s.locality, gi as u32));
+                }
+            }
+        }
+        for s in &mut shards {
+            let mut offs = Vec::with_capacity(s.n_local() + 1);
+            let mut entries = Vec::new();
+            offs.push(0);
+            for &gid in &s.owned_ids {
+                entries.extend_from_slice(&per_vertex[gid as usize]);
+                offs.push(entries.len());
+            }
+            s.mirror_offsets = offs;
+            s.mirror_entries = entries;
+        }
+
+        let owned_counts = shards.iter().map(|s| s.n_local()).collect();
+        let ghost_counts = shards.iter().map(|s| s.n_ghosts()).collect();
+        DistGraph {
+            partition: scheme,
+            shards,
+            n: g.n(),
+            m: g.m(),
+            owned_counts,
+            ghost_counts,
+        }
     }
 
     /// Convenience: block partition over `p` localities.
@@ -216,9 +506,48 @@ impl DistGraph {
         self.partition.p()
     }
 
-    /// Owner of a global vertex (`vertex_locality_id` of Listing 1.2).
+    /// Master of a global vertex (`vertex_locality_id` of Listing 1.2).
     pub fn owner(&self, v: VertexId) -> LocalityId {
         self.partition.owner(v)
+    }
+
+    /// Owned-row count per locality — the destination layout for
+    /// master-bound [`Aggregator`](crate::amt::Aggregator)s.
+    pub fn owned_counts(&self) -> &[usize] {
+        &self.owned_counts
+    }
+
+    /// Ghost-row count per locality — the destination layout for
+    /// mirror-bound (scatter) [`Aggregator`](crate::amt::Aggregator)s.
+    pub fn ghost_counts(&self) -> &[usize] {
+        &self.ghost_counts
+    }
+
+    /// True when any vertex has mirror rows (vertex-cut schemes). Engines
+    /// without a scatter phase must reject such graphs.
+    pub fn has_mirrors(&self) -> bool {
+        self.shards.iter().any(|s| s.has_mirrors())
+    }
+
+    /// True when the shards carry edge weights.
+    pub fn is_weighted(&self) -> bool {
+        self.shards.iter().any(|s| s.is_weighted())
+    }
+
+    /// Partition-quality stats for [`SimReport`](crate::amt::SimReport):
+    /// vertex/edge balance over the built shards plus the scheme's
+    /// replication factor.
+    pub fn partition_stats(&self) -> PartitionStats {
+        let p = self.p() as f64;
+        let v_mean = self.n as f64 / p;
+        let e_mean = self.m as f64 / p;
+        let v_max = self.shards.iter().map(|s| s.n_local() as f64).fold(0.0, f64::max);
+        let e_max = self.shards.iter().map(|s| s.m_out() as f64).fold(0.0, f64::max);
+        PartitionStats {
+            vertex_imbalance: if v_mean == 0.0 { 1.0 } else { v_max / v_mean },
+            edge_imbalance: if e_mean == 0.0 { 1.0 } else { e_max / e_mean },
+            replication_factor: self.partition.replication_factor(),
+        }
     }
 }
 
@@ -226,15 +555,18 @@ impl DistGraph {
 mod tests {
     use super::*;
     use crate::graph::generators;
+    use crate::graph::partition::PartitionKind;
 
     #[test]
     fn shards_cover_all_edges() {
         let g = generators::urand(8, 4, 2);
-        let d = DistGraph::block(&g, 4);
-        let out_total: usize = d.shards.iter().map(|s| s.m_out()).sum();
-        let in_total: usize = d.shards.iter().map(|s| s.m_in()).sum();
-        assert_eq!(out_total, g.m());
-        assert_eq!(in_total, g.m());
+        for kind in PartitionKind::all() {
+            let d = DistGraph::build_with(&g, kind.build(&g, 4));
+            let out_total: usize = d.shards.iter().map(|s| s.m_out()).sum();
+            let in_total: usize = d.shards.iter().map(|s| s.m_in()).sum();
+            assert_eq!(out_total, g.m(), "{kind:?}");
+            assert_eq!(in_total, g.m(), "{kind:?}");
+        }
     }
 
     #[test]
@@ -246,7 +578,122 @@ mod tests {
                 let gu = s.global_id(u);
                 assert_eq!(s.out_neighbors(u), g.neighbors(gu));
                 assert_eq!(s.out_degree[u] as usize, g.degree(gu));
+                // The local-index view resolves back to the same globals.
+                let back: Vec<VertexId> =
+                    s.out_neighbors_local(u).iter().map(|&t| s.global_of(t as usize)).collect();
+                assert_eq!(back, g.neighbors(gu));
             }
+        }
+    }
+
+    #[test]
+    fn ghost_tables_route_to_masters() {
+        let g = generators::kron(7, 6, 9);
+        for kind in PartitionKind::all() {
+            let scheme = kind.build(&g, 4);
+            let d = DistGraph::build_with(&g, scheme.clone());
+            for s in &d.shards {
+                assert!(
+                    s.ghost_global_ids.windows(2).all(|w| w[0] < w[1]),
+                    "{kind:?}: ghost ids not ascending"
+                );
+                for gi in 0..s.n_ghosts() {
+                    let v = s.ghost_global_ids[gi];
+                    assert!(s.owned_ids.binary_search(&v).is_err(), "ghost {v} also owned");
+                    assert_eq!(s.ghost_owner[gi], scheme.owner(v), "{kind:?}");
+                    assert_eq!(
+                        s.ghost_master_index[gi] as usize,
+                        scheme.master_index(v),
+                        "{kind:?}"
+                    );
+                    assert_ne!(s.ghost_owner[gi], s.locality, "ghost owned by its own shard");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn mirror_tables_are_bidirectional() {
+        let g = generators::kron(7, 6, 21);
+        let d = DistGraph::build_with(&g, PartitionKind::VertexCut.build(&g, 4));
+        let mut mirror_edges = 0usize;
+        for s in &d.shards {
+            for u in 0..s.n_local() {
+                for &(dst, gi) in s.mirrors(u) {
+                    let peer = &d.shards[dst as usize];
+                    // The mirror slot names the same global vertex and
+                    // really holds edges of it.
+                    assert_eq!(peer.ghost_global_ids[gi as usize], s.owned_ids[u]);
+                    let row = peer.n_local() + gi as usize;
+                    assert!(!peer.row_neighbors_local(row).is_empty());
+                }
+            }
+            for gi in 0..s.n_ghosts() {
+                let row = s.n_local() + gi;
+                if !s.row_neighbors_local(row).is_empty() {
+                    mirror_edges += 1;
+                    // This mirror must be listed at its master.
+                    let owner = &d.shards[s.ghost_owner[gi] as usize];
+                    let mrow = s.ghost_master_index[gi] as usize;
+                    assert!(owner.mirrors(mrow).contains(&(s.locality, gi as u32)));
+                }
+            }
+        }
+        assert!(mirror_edges > 0, "kron@4 vertex cut should produce mirrors");
+        assert!(d.has_mirrors());
+        assert!(!DistGraph::block(&g, 4).has_mirrors());
+    }
+
+    #[test]
+    fn every_scheme_covers_every_edge_exactly_once_locally() {
+        // For each scheme, the union over shards of (global src, global
+        // tgt) homed edges equals the graph's edge multiset.
+        let g = generators::urand(6, 5, 33);
+        for kind in PartitionKind::all() {
+            let d = DistGraph::build_with(&g, kind.build(&g, 3));
+            let mut got: Vec<(VertexId, VertexId)> = Vec::new();
+            for s in &d.shards {
+                for row in 0..s.n_rows() {
+                    let src = s.global_of(row);
+                    for &t in s.row_neighbors_local(row) {
+                        got.push((src, s.global_of(t as usize)));
+                    }
+                }
+            }
+            got.sort_unstable();
+            let mut want: Vec<(VertexId, VertexId)> = Vec::new();
+            for u in 0..g.n() as VertexId {
+                for &v in g.neighbors(u) {
+                    want.push((u, v));
+                }
+            }
+            want.sort_unstable();
+            assert_eq!(got, want, "{kind:?}");
+        }
+    }
+
+    #[test]
+    fn weighted_edges_survive_sharding() {
+        let g = generators::with_random_weights(&generators::urand(6, 4, 5), 1.0, 9.0, 6);
+        for kind in PartitionKind::all() {
+            let d = DistGraph::build_with(&g, kind.build(&g, 3));
+            assert!(d.is_weighted(), "{kind:?}");
+            let mut total = 0usize;
+            let mut sum = 0.0f64;
+            for s in &d.shards {
+                for row in 0..s.n_rows() {
+                    for (_, w) in s.row_edges(row) {
+                        assert!((1.0..9.0).contains(&w));
+                        total += 1;
+                        sum += w as f64;
+                    }
+                }
+            }
+            assert_eq!(total, g.m(), "{kind:?}");
+            let want: f64 = (0..g.n() as VertexId)
+                .flat_map(|u| g.neighbors_weighted(u).map(|(_, w)| w as f64).collect::<Vec<_>>())
+                .sum();
+            assert!((sum - want).abs() < 1e-3, "{kind:?}");
         }
     }
 
@@ -260,6 +707,37 @@ mod tests {
                 assert_eq!(s.in_neighbors(u), t.neighbors(s.global_id(u)));
             }
         }
+    }
+
+    #[test]
+    fn contiguity_detection() {
+        let g = generators::urand(6, 4, 8);
+        let blk = DistGraph::block(&g, 3);
+        for s in &blk.shards {
+            assert!(s.contiguous_range().is_some());
+        }
+        let hash = DistGraph::build_with(&g, PartitionKind::Hash.build(&g, 3));
+        assert!(
+            hash.shards.iter().any(|s| s.contiguous_range().is_none()),
+            "hash shards should not all be contiguous"
+        );
+    }
+
+    #[test]
+    fn partition_stats_are_sane() {
+        let g = generators::kron(8, 6, 17);
+        let blk = DistGraph::block(&g, 8);
+        let st = blk.partition_stats();
+        assert!(st.vertex_imbalance >= 1.0);
+        assert!(st.edge_imbalance >= 1.0);
+        assert_eq!(st.replication_factor, 1.0);
+        let vc = DistGraph::build_with(&g, PartitionKind::VertexCut.build(&g, 8));
+        let st = vc.partition_stats();
+        assert!(st.replication_factor >= 1.0);
+        assert!(
+            st.edge_imbalance <= blk.partition_stats().edge_imbalance + 1e-9,
+            "vertex cut must not be worse than block on skewed graphs"
+        );
     }
 
     #[test]

@@ -5,8 +5,10 @@
 //! algorithms on that concept (paper §3.1). The same shape here:
 //! [`Csr`] is the range-of-ranges workhorse, [`EdgeList`] the builder
 //! input, [`generators`] produce the GAP-style synthetic inputs
-//! (`urand`, RMAT/Kronecker, structured families), [`Partition1D`] and
-//! [`DistGraph`] carve a graph into per-locality shards for the simulated
+//! (`urand`, RMAT/Kronecker, structured families), the
+//! [`PartitionScheme`] implementations ([`Partition1D`], [`Hash1D`],
+//! [`VertexCut2D`]) and [`DistGraph`] carve a graph into per-locality
+//! shards (with ghost/mirror tables for vertex cuts) for the simulated
 //! runtime, and [`views`] provide NWGraph-style traversal ranges.
 
 pub mod builder;
@@ -22,7 +24,7 @@ pub mod views;
 pub use csr::Csr;
 pub use distributed::{DistGraph, EllShard, Shard};
 pub use edge_list::EdgeList;
-pub use partition::Partition1D;
+pub use partition::{Hash1D, Partition1D, PartitionKind, PartitionScheme, VertexCut2D};
 
 /// Vertex identifier (global index space).
 pub type VertexId = u32;

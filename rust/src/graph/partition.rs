@@ -1,20 +1,192 @@
-//! 1-D vertex partitioning across localities.
+//! Pluggable vertex partitioning across localities.
 //!
-//! The paper distributes `hpx::partitioned_vector`-backed adjacency in
-//! contiguous blocks; `vertex_locality_id` in Listing 1.2 is the owner
-//! query. [`Partition1D`] generalizes the block layout to arbitrary
-//! contiguous cuts so the edge-balanced strategy (an ablation in DESIGN.md)
-//! shares the same interface.
+//! # The [`PartitionScheme`] contract
+//!
+//! A scheme assigns every global vertex exactly one **master** locality
+//! ([`PartitionScheme::owner`], the paper's `vertex_locality_id` from
+//! Listing 1.2) and every directed edge exactly one **home** locality
+//! ([`PartitionScheme::edge_home`], the locality that stores and expands
+//! it). Within its master, each vertex has a dense **master index**
+//! ([`PartitionScheme::master_index`]): the rank of the vertex among its
+//! master's owned set in ascending global-id order. Master indices are
+//! what travels on the wire — the [`Aggregator`](crate::amt::Aggregator)
+//! combines updates per destination slot `master_index(v)`, so routing
+//! never depends on the scheme being contiguous.
+//!
+//! 1-D schemes ([`Partition1D`] block / edge-balanced cuts, [`Hash1D`])
+//! home every out-edge with its source's master: shards hold whole rows
+//! and no vertex is replicated. [`VertexCut2D`] instead assigns *edges*
+//! greedily (PowerGraph-style, degree-based tie-breaking), so a
+//! high-degree vertex's row is split across localities: the non-master
+//! copies are **mirrors**, and [`PartitionScheme::replication_factor`]
+//! reports the mean number of copies per vertex.
+//!
+//! # Ghost-index invariants
+//!
+//! [`Shard`](super::Shard) materializes the scheme per locality. Its
+//! ghost table obeys, for every ghost slot `i` of every shard:
+//!
+//! * `ghost_owner[i] == scheme.owner(ghost_global_ids[i])` — ghosts route
+//!   to their master, never to another mirror;
+//! * `ghost_master_index[i] == scheme.master_index(ghost_global_ids[i])`
+//!   — the precomputed wire index is exactly the destination's dense
+//!   owned-row index, so a receiver applies batch items directly with no
+//!   translation;
+//! * `ghost_global_ids` is strictly ascending and disjoint from the
+//!   shard's owned set — local row `r` means owned row `r` when
+//!   `r < n_local`, ghost `r - n_local` otherwise;
+//! * every locally homed edge endpoint is addressable: it is either an
+//!   owned row or a ghost slot.
+//!
+//! Algorithms therefore address neighbors by dense local index regardless
+//! of the scheme, and remote updates flow sender-ghost-slot →
+//! master-index → owner, with mirror scatter (master → every mirror of
+//! the vertex) closing the gather-apply-scatter loop for vertex cuts.
+
+use std::sync::Arc;
 
 use super::{Csr, VertexId};
 use crate::amt::agas::BlockMap;
 use crate::amt::sim::LocalityId;
+
+/// A vertex/edge-to-locality assignment. See the module docs for the full
+/// contract. Implementations must be deterministic: the same graph and
+/// locality count always produce the same assignment.
+pub trait PartitionScheme: std::fmt::Debug + Send + Sync {
+    /// Scheme name as spelled in config files (`block`, `hash`, ...).
+    fn name(&self) -> &'static str;
+
+    /// Locality count.
+    fn p(&self) -> u32;
+
+    /// Total vertex count covered.
+    fn n(&self) -> usize;
+
+    /// Master locality of vertex `v` (`vertex_locality_id` of Listing 1.2).
+    fn owner(&self, v: VertexId) -> LocalityId;
+
+    /// Dense index of `v` within its master's owned set (ascending
+    /// global-id order). This is the wire index remote updates carry.
+    fn master_index(&self, v: VertexId) -> usize;
+
+    /// Number of vertices mastered at `l`.
+    fn owned_count(&self, l: LocalityId) -> usize;
+
+    /// Vertices mastered at `l`, ascending.
+    fn owned_vertices(&self, l: LocalityId) -> Vec<VertexId>;
+
+    /// Home locality of the out-edge with global CSR index `e` (source
+    /// `u`). 1-D schemes home every edge with its source's master.
+    fn edge_home(&self, u: VertexId, e: usize) -> LocalityId {
+        let _ = e;
+        self.owner(u)
+    }
+
+    /// Mean number of copies (master + mirrors) per vertex; 1.0 for
+    /// replication-free schemes.
+    fn replication_factor(&self) -> f64 {
+        1.0
+    }
+
+    /// Owned-vertex count per locality, in locality order — the
+    /// destination layout handed to
+    /// [`Aggregator::new`](crate::amt::Aggregator::new).
+    fn owned_counts(&self) -> Vec<usize> {
+        (0..self.p()).map(|l| self.owned_count(l)).collect()
+    }
+
+    /// Max / mean owned-vertex count (vertex balance factor, >= 1.0).
+    fn vertex_imbalance(&self) -> f64 {
+        let p = self.p();
+        let mean = self.n() as f64 / p as f64;
+        if mean == 0.0 {
+            return 1.0;
+        }
+        (0..p).map(|l| self.owned_count(l) as f64).fold(0.0, f64::max) / mean
+    }
+
+    /// Max / mean stored-edge count under `g` (edge balance factor,
+    /// >= 1.0), computed from [`PartitionScheme::edge_home`].
+    fn edge_imbalance(&self, g: &Csr) -> f64 {
+        let mean = g.m() as f64 / self.p() as f64;
+        if mean == 0.0 {
+            return 1.0;
+        }
+        let mut per_loc = vec![0u64; self.p() as usize];
+        let offsets = g.offsets();
+        for u in 0..g.n() {
+            for e in offsets[u]..offsets[u + 1] {
+                per_loc[self.edge_home(u as VertexId, e) as usize] += 1;
+            }
+        }
+        per_loc.iter().map(|&c| c as f64).fold(0.0, f64::max) / mean
+    }
+}
+
+/// Which [`PartitionScheme`] to build — the `partition` config/CLI key.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum PartitionKind {
+    /// Equal-size contiguous blocks (the paper's layout).
+    #[default]
+    Block,
+    /// Contiguous cuts balancing out-edges per locality.
+    EdgeBalanced,
+    /// Deterministic hash of the vertex id (1-D, non-contiguous).
+    Hash,
+    /// Greedy 2-D vertex cut (PowerGraph-style edge assignment).
+    VertexCut,
+}
+
+impl PartitionKind {
+    /// Parse a config/CLI spelling.
+    pub fn parse(s: &str) -> Option<PartitionKind> {
+        match s {
+            "block" => Some(PartitionKind::Block),
+            "edge_balanced" | "edge-balanced" => Some(PartitionKind::EdgeBalanced),
+            "hash" => Some(PartitionKind::Hash),
+            "vertex_cut" | "vertex-cut" | "2d" => Some(PartitionKind::VertexCut),
+            _ => None,
+        }
+    }
+
+    /// Config spelling of this kind.
+    pub fn name(&self) -> &'static str {
+        match self {
+            PartitionKind::Block => "block",
+            PartitionKind::EdgeBalanced => "edge_balanced",
+            PartitionKind::Hash => "hash",
+            PartitionKind::VertexCut => "vertex_cut",
+        }
+    }
+
+    /// Every kind, in sweep order (ablation A6 / property suites).
+    pub fn all() -> [PartitionKind; 4] {
+        [
+            PartitionKind::Block,
+            PartitionKind::EdgeBalanced,
+            PartitionKind::Hash,
+            PartitionKind::VertexCut,
+        ]
+    }
+
+    /// Build the scheme for `g` over `p` localities.
+    pub fn build(&self, g: &Csr, p: u32) -> Arc<dyn PartitionScheme> {
+        match self {
+            PartitionKind::Block => Arc::new(Partition1D::block(g.n(), p)),
+            PartitionKind::EdgeBalanced => Arc::new(Partition1D::edge_balanced(g, p)),
+            PartitionKind::Hash => Arc::new(Hash1D::new(g.n(), p)),
+            PartitionKind::VertexCut => Arc::new(VertexCut2D::new(g, p)),
+        }
+    }
+}
 
 /// A contiguous 1-D partition of `0..n` into `P` ranges.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct Partition1D {
     /// `starts[l]..starts[l+1]` is locality `l`'s range; `len == P + 1`.
     starts: Vec<usize>,
+    /// Whether the cuts were edge-balanced (reporting only).
+    edge_balanced: bool,
 }
 
 impl Partition1D {
@@ -27,28 +199,34 @@ impl Partition1D {
         for l in 0..p {
             starts.push(map.range_of(l).end);
         }
-        Partition1D { starts }
+        Partition1D { starts, edge_balanced: false }
     }
 
     /// Edge-balanced contiguous partition: cuts chosen so each locality
     /// owns roughly `m / P` out-edges. Mitigates the load imbalance from
     /// skewed degree distributions (paper §2).
+    ///
+    /// Degenerate inputs are handled deterministically: when `P > n`, or
+    /// when a prefix plateau (a run of zero-degree vertices, or a single
+    /// vertex holding more than `m / P` edges) makes consecutive cuts
+    /// equal, the surplus localities get empty ranges — cuts are computed
+    /// in integer arithmetic (`l * m / P`, no float rounding) and clamped
+    /// monotone, so the result is always a valid cover.
     pub fn edge_balanced(g: &Csr, p: u32) -> Self {
         let n = g.n();
         let m = g.m();
-        let target = (m as f64 / p as f64).max(1.0);
         let offsets = g.offsets();
         let mut starts = Vec::with_capacity(p as usize + 1);
         starts.push(0);
         for l in 1..p as usize {
-            let want = (l as f64 * target) as usize;
-            // First vertex whose prefix edge count reaches `want`.
+            // Integer target: first vertex whose edge prefix reaches l*m/P.
+            let want = (l as u128 * m as u128 / p as u128) as usize;
             let cut = offsets.partition_point(|&o| o < want).min(n);
             let prev = *starts.last().unwrap();
             starts.push(cut.max(prev)); // keep monotone
         }
         starts.push(n);
-        Partition1D { starts }
+        Partition1D { starts, edge_balanced: true }
     }
 
     /// From explicit cut points (must start at 0, end at n, be monotone).
@@ -56,7 +234,7 @@ impl Partition1D {
         assert!(starts.len() >= 2);
         assert_eq!(starts[0], 0);
         assert!(starts.windows(2).all(|w| w[0] <= w[1]));
-        Partition1D { starts }
+        Partition1D { starts, edge_balanced: false }
     }
 
     /// Locality count.
@@ -89,8 +267,7 @@ impl Partition1D {
         r.end - r.start
     }
 
-    /// Every locality's owned range, in locality order — the destination
-    /// layout handed to [`Aggregator::new`](crate::amt::Aggregator::new).
+    /// Every locality's owned range, in locality order.
     pub fn ranges(&self) -> Vec<std::ops::Range<usize>> {
         (0..self.p()).map(|l| self.range_of(l)).collect()
     }
@@ -123,10 +300,321 @@ impl Partition1D {
     }
 }
 
+impl PartitionScheme for Partition1D {
+    fn name(&self) -> &'static str {
+        if self.edge_balanced {
+            "edge_balanced"
+        } else {
+            "block"
+        }
+    }
+
+    fn p(&self) -> u32 {
+        Partition1D::p(self)
+    }
+
+    fn n(&self) -> usize {
+        Partition1D::n(self)
+    }
+
+    fn owner(&self, v: VertexId) -> LocalityId {
+        Partition1D::owner(self, v)
+    }
+
+    fn master_index(&self, v: VertexId) -> usize {
+        let l = Partition1D::owner(self, v);
+        v as usize - self.starts[l as usize]
+    }
+
+    fn owned_count(&self, l: LocalityId) -> usize {
+        self.len_of(l)
+    }
+
+    fn owned_vertices(&self, l: LocalityId) -> Vec<VertexId> {
+        self.range_of(l).map(|v| v as VertexId).collect()
+    }
+
+    fn vertex_imbalance(&self) -> f64 {
+        Partition1D::vertex_imbalance(self)
+    }
+
+    fn edge_imbalance(&self, g: &Csr) -> f64 {
+        Partition1D::edge_imbalance(self, g)
+    }
+}
+
+/// SplitMix64 finalizer — a stateless avalanche mix for [`Hash1D`].
+fn mix64(v: u64) -> u64 {
+    let mut z = v.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+/// 1-D hash partition: `owner(v) = mix64(v) % P`. Non-contiguous but
+/// replication-free; spreads hubs of skewed graphs uniformly at the price
+/// of destroying all range locality.
+#[derive(Debug, Clone)]
+pub struct Hash1D {
+    n: usize,
+    p: u32,
+    /// Dense index of each vertex within its owner's owned set.
+    master_index: Vec<u32>,
+    counts: Vec<usize>,
+}
+
+impl Hash1D {
+    /// Hash-partition `n` vertices over `p` localities.
+    pub fn new(n: usize, p: u32) -> Self {
+        assert!(p > 0, "need at least one locality");
+        let mut counts = vec![0usize; p as usize];
+        let mut master_index = vec![0u32; n];
+        for (v, mi) in master_index.iter_mut().enumerate() {
+            let l = (mix64(v as u64) % p as u64) as usize;
+            *mi = counts[l] as u32;
+            counts[l] += 1;
+        }
+        Hash1D { n, p, master_index, counts }
+    }
+}
+
+impl PartitionScheme for Hash1D {
+    fn name(&self) -> &'static str {
+        "hash"
+    }
+
+    fn p(&self) -> u32 {
+        self.p
+    }
+
+    fn n(&self) -> usize {
+        self.n
+    }
+
+    fn owner(&self, v: VertexId) -> LocalityId {
+        debug_assert!((v as usize) < self.n);
+        (mix64(v as u64) % self.p as u64) as LocalityId
+    }
+
+    fn master_index(&self, v: VertexId) -> usize {
+        self.master_index[v as usize] as usize
+    }
+
+    fn owned_count(&self, l: LocalityId) -> usize {
+        self.counts[l as usize]
+    }
+
+    fn owned_vertices(&self, l: LocalityId) -> Vec<VertexId> {
+        (0..self.n as VertexId).filter(|&v| self.owner(v) == l).collect()
+    }
+}
+
+/// Greedy 2-D vertex cut: edges are assigned to localities one by one
+/// (CSR order), PowerGraph-style —
+///
+/// 1. if the endpoints' replica sets intersect, pick the least
+///    edge-loaded locality in the intersection;
+/// 2. else if both endpoints already have replicas, pick from the
+///    higher-degree endpoint's set (the degree-based heuristic: the
+///    heavier vertex has more future edges to co-locate);
+/// 3. else if one endpoint has replicas, pick from its set;
+/// 4. else pick the least edge-loaded locality overall.
+///
+/// A **load cap** keeps the balance bound constructive: when the
+/// candidate set's best locality is more than `max(1, m/8P)` edges above
+/// the global minimum, the edge spills to the globally least-loaded
+/// locality instead (splitting the row — this is what shears hub rows
+/// apart). No locality ever exceeds `min + cap + 1` while receiving
+/// edges, so the final edge imbalance is at most `~1 + 1/8 + P/m`
+/// regardless of skew — the bound the kron acceptance test relies on.
+///
+/// Each vertex's **master** is its least vertex-loaded replica (ties to
+/// the smallest locality id); isolated vertices fall back to the block
+/// layout. The construction is fully deterministic.
+#[derive(Debug, Clone)]
+pub struct VertexCut2D {
+    n: usize,
+    p: u32,
+    owner: Vec<LocalityId>,
+    master_index: Vec<u32>,
+    counts: Vec<usize>,
+    /// Home locality per global CSR edge index.
+    edge_home: Vec<LocalityId>,
+    replication: f64,
+}
+
+impl VertexCut2D {
+    /// Build the greedy cut of `g` over `p` localities (`p <= 64`).
+    pub fn new(g: &Csr, p: u32) -> Self {
+        assert!(p > 0, "need at least one locality");
+        assert!(p <= 64, "VertexCut2D supports at most 64 localities, got {p}");
+        let n = g.n();
+        let all_mask: u64 = u64::MAX >> (64 - p);
+        let cap = (g.m() / (8 * p as usize)).max(1);
+        let mut replicas = vec![0u64; n];
+        let mut load = vec![0usize; p as usize];
+        let mut edge_home = vec![0 as LocalityId; g.m()];
+        let offsets = g.offsets();
+        let targets = g.targets();
+        for u in 0..n {
+            let du = g.degree(u as VertexId);
+            for e in offsets[u]..offsets[u + 1] {
+                let v = targets[e] as usize;
+                let (ru, rv) = (replicas[u], replicas[v]);
+                let both = ru & rv;
+                let cand = if both != 0 {
+                    both
+                } else if ru != 0 && rv != 0 {
+                    if du >= g.degree(v as VertexId) {
+                        ru
+                    } else {
+                        rv
+                    }
+                } else if ru != 0 {
+                    ru
+                } else if rv != 0 {
+                    rv
+                } else {
+                    all_mask
+                };
+                let mut best = 0u32;
+                let mut best_load = usize::MAX;
+                let mut global_best = 0u32;
+                let mut global_load = usize::MAX;
+                for l in 0..p {
+                    let ld = load[l as usize];
+                    if cand >> l & 1 == 1 && ld < best_load {
+                        best = l;
+                        best_load = ld;
+                    }
+                    if ld < global_load {
+                        global_best = l;
+                        global_load = ld;
+                    }
+                }
+                if best_load > global_load + cap {
+                    // Load cap: spill to the global minimum, splitting the
+                    // row — keeps the balance bound constructive.
+                    best = global_best;
+                }
+                edge_home[e] = best;
+                load[best as usize] += 1;
+                replicas[u] |= 1 << best;
+                replicas[v] |= 1 << best;
+            }
+        }
+        // Masters: least vertex-loaded replica; block fallback for
+        // isolated vertices (empty replica set).
+        let block = BlockMap::new(n, p);
+        let mut vload = vec![0usize; p as usize];
+        let mut owner = vec![0 as LocalityId; n];
+        for v in 0..n {
+            let mask = replicas[v];
+            let l = if mask == 0 {
+                block.resolve(v).locality
+            } else {
+                let mut best = 0u32;
+                let mut best_load = usize::MAX;
+                for l in 0..p {
+                    if mask >> l & 1 == 1 && vload[l as usize] < best_load {
+                        best = l;
+                        best_load = vload[l as usize];
+                    }
+                }
+                best
+            };
+            owner[v] = l;
+            vload[l as usize] += 1;
+        }
+        let mut counts = vec![0usize; p as usize];
+        let mut master_index = vec![0u32; n];
+        for v in 0..n {
+            let l = owner[v] as usize;
+            master_index[v] = counts[l] as u32;
+            counts[l] += 1;
+        }
+        let total_copies: u64 = (0..n)
+            .map(|v| u64::from((replicas[v] | 1u64 << owner[v]).count_ones()))
+            .sum();
+        let replication = if n == 0 { 1.0 } else { total_copies as f64 / n as f64 };
+        VertexCut2D { n, p, owner, master_index, counts, edge_home, replication }
+    }
+}
+
+impl PartitionScheme for VertexCut2D {
+    fn name(&self) -> &'static str {
+        "vertex_cut"
+    }
+
+    fn p(&self) -> u32 {
+        self.p
+    }
+
+    fn n(&self) -> usize {
+        self.n
+    }
+
+    fn owner(&self, v: VertexId) -> LocalityId {
+        self.owner[v as usize]
+    }
+
+    fn master_index(&self, v: VertexId) -> usize {
+        self.master_index[v as usize] as usize
+    }
+
+    fn owned_count(&self, l: LocalityId) -> usize {
+        self.counts[l as usize]
+    }
+
+    fn owned_vertices(&self, l: LocalityId) -> Vec<VertexId> {
+        (0..self.n as VertexId).filter(|&v| self.owner[v as usize] == l).collect()
+    }
+
+    fn edge_home(&self, _u: VertexId, e: usize) -> LocalityId {
+        self.edge_home[e]
+    }
+
+    fn replication_factor(&self) -> f64 {
+        self.replication
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::graph::generators;
+
+    /// Exhaustive consistency check shared by every scheme's tests.
+    fn check_scheme(s: &dyn PartitionScheme, g: &Csr) {
+        let (n, p) = (s.n(), s.p());
+        assert_eq!(n, g.n());
+        // Masters partition the vertex set; master indices are dense
+        // ascending per locality.
+        let mut seen = vec![false; n];
+        for l in 0..p {
+            let owned = s.owned_vertices(l);
+            assert_eq!(owned.len(), s.owned_count(l));
+            assert!(owned.windows(2).all(|w| w[0] < w[1]), "owned set not ascending");
+            for (i, &v) in owned.iter().enumerate() {
+                assert_eq!(s.owner(v), l);
+                assert_eq!(s.master_index(v), i);
+                assert!(!seen[v as usize], "vertex {v} owned twice");
+                seen[v as usize] = true;
+            }
+        }
+        assert!(seen.iter().all(|&x| x), "some vertex has no master");
+        // Edge homes are valid localities.
+        let offsets = g.offsets();
+        for u in 0..n {
+            for e in offsets[u]..offsets[u + 1] {
+                assert!(s.edge_home(u as VertexId, e) < p);
+            }
+        }
+        // Quality metrics are well-formed.
+        assert!(s.replication_factor() >= 1.0 - 1e-12);
+        assert!(s.vertex_imbalance() >= 1.0 - 1e-9);
+        assert!(s.edge_imbalance(g) >= 1.0 - 1e-9);
+    }
 
     #[test]
     fn block_partition_owner_matches_range() {
@@ -137,6 +625,7 @@ mod tests {
         for v in 0..10u32 {
             let l = p.owner(v);
             assert!(p.range_of(l).contains(&(v as usize)));
+            assert_eq!(PartitionScheme::master_index(&p, v), v as usize - p.range_of(l).start);
         }
     }
 
@@ -165,6 +654,46 @@ mod tests {
     }
 
     #[test]
+    fn edge_balanced_degenerate_cuts_are_deterministic() {
+        // p > n: surplus localities must get empty ranges, the cover must
+        // stay exact, and every owner query must stay in range.
+        let g = generators::path(3); // n=3, m=2
+        let p = Partition1D::edge_balanced(&g, 8);
+        assert_eq!(p.p(), 8);
+        let total: usize = (0..8).map(|l| p.len_of(l)).sum();
+        assert_eq!(total, 3);
+        assert!((0..8).any(|l| p.len_of(l) == 0), "p > n must produce empty ranges");
+        for v in 0..3u32 {
+            let l = Partition1D::owner(&p, v);
+            assert!(p.range_of(l).contains(&(v as usize)));
+        }
+        // Determinism: rebuilding gives identical cuts.
+        assert_eq!(p, Partition1D::edge_balanced(&g, 8));
+        check_scheme(&p, &g);
+    }
+
+    #[test]
+    fn edge_balanced_prefix_plateau_emits_empty_ranges() {
+        // One hub holds every edge, followed by a plateau of zero-degree
+        // vertices: all interior cuts collapse onto the hub boundary and
+        // the middle localities own empty (but valid) ranges.
+        let mut el = crate::graph::EdgeList::new(12);
+        for v in 1..12u32 {
+            el.push(0, v);
+        }
+        let g = Csr::from_edge_list(&el); // deg(0)=11, deg(v>0)=0
+        let p = Partition1D::edge_balanced(&g, 4);
+        let total: usize = (0..4).map(|l| p.len_of(l)).sum();
+        assert_eq!(total, 12);
+        // Locality 0 gets the hub plus the whole zero-degree plateau;
+        // the interior localities collapse to empty ranges.
+        assert!(p.len_of(0) >= 1);
+        assert!((0..4).any(|l| p.len_of(l) == 0), "plateau must yield an empty range");
+        check_scheme(&p, &g);
+        assert_eq!(p, Partition1D::edge_balanced(&g, 4));
+    }
+
+    #[test]
     fn single_locality_owns_all() {
         let p = Partition1D::block(42, 1);
         assert_eq!(p.range_of(0), 0..42);
@@ -178,5 +707,95 @@ mod tests {
         assert_eq!(p.p(), 3);
         assert_eq!(p.len_of(1), 0);
         assert_eq!(p.owner(2), 2);
+    }
+
+    #[test]
+    fn hash_partition_is_consistent_and_spreads() {
+        let g = generators::urand(8, 4, 7);
+        for p in [1u32, 2, 4, 8] {
+            let h = Hash1D::new(g.n(), p);
+            check_scheme(&h, &g);
+        }
+        // A hash spread over 8 localities keeps every share within 2x of
+        // the mean on 256 vertices (loose, deterministic bound).
+        let h = Hash1D::new(256, 8);
+        assert!(h.vertex_imbalance() < 2.0, "{}", h.vertex_imbalance());
+    }
+
+    #[test]
+    fn vertex_cut_is_consistent_on_random_graphs() {
+        for (scale, p) in [(6u32, 1u32), (6, 3), (7, 4), (7, 8)] {
+            let g = generators::urand(scale, 4, 13 + p as u64);
+            let vc = VertexCut2D::new(&g, p);
+            check_scheme(&vc, &g);
+            // Every edge is homed at a replica of both endpoints.
+            let offsets = g.offsets();
+            let targets = g.targets();
+            for u in 0..g.n() {
+                for e in offsets[u]..offsets[u + 1] {
+                    let home = vc.edge_home(u as VertexId, e);
+                    assert!(home < p);
+                    let _ = targets[e];
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn vertex_cut_balances_edges_on_kron() {
+        // Tentpole acceptance: on the skewed kron10 graph at 8 localities
+        // the greedy vertex cut achieves lower edge imbalance than the
+        // block layout, at the price of replication_factor > 1.
+        let g = generators::kron(10, 8, 11);
+        let blk = Partition1D::block(g.n(), 8);
+        let vc = VertexCut2D::new(&g, 8);
+        let (bi, vi) = (
+            PartitionScheme::edge_imbalance(&blk, &g),
+            PartitionScheme::edge_imbalance(&vc, &g),
+        );
+        assert!(vi < bi, "vertex_cut {vi} must beat block {bi} on kron10@8");
+        assert!(vi < 1.5, "greedy least-loaded should be near-balanced, got {vi}");
+        assert!(vc.replication_factor() > 1.0);
+        check_scheme(&vc, &g);
+    }
+
+    #[test]
+    fn vertex_cut_single_locality_degenerates() {
+        let g = generators::urand(6, 4, 3);
+        let vc = VertexCut2D::new(&g, 1);
+        assert_eq!(vc.replication_factor(), 1.0);
+        assert_eq!(vc.owned_count(0), g.n());
+        check_scheme(&vc, &g);
+    }
+
+    #[test]
+    fn isolated_vertices_get_block_fallback_masters() {
+        let el = crate::graph::EdgeList::new(8); // no edges at all
+        let g = Csr::from_edge_list(&el);
+        let vc = VertexCut2D::new(&g, 4);
+        check_scheme(&vc, &g);
+        assert_eq!(vc.replication_factor(), 1.0);
+        // Block fallback spreads isolated vertices evenly.
+        for l in 0..4 {
+            assert_eq!(vc.owned_count(l), 2);
+        }
+    }
+
+    #[test]
+    fn kind_parses_and_builds() {
+        assert_eq!(PartitionKind::parse("block"), Some(PartitionKind::Block));
+        assert_eq!(PartitionKind::parse("edge_balanced"), Some(PartitionKind::EdgeBalanced));
+        assert_eq!(PartitionKind::parse("edge-balanced"), Some(PartitionKind::EdgeBalanced));
+        assert_eq!(PartitionKind::parse("hash"), Some(PartitionKind::Hash));
+        assert_eq!(PartitionKind::parse("vertex_cut"), Some(PartitionKind::VertexCut));
+        assert_eq!(PartitionKind::parse("2d"), Some(PartitionKind::VertexCut));
+        assert_eq!(PartitionKind::parse("diagonal"), None);
+        let g = generators::urand(6, 4, 1);
+        for kind in PartitionKind::all() {
+            let s = kind.build(&g, 4);
+            assert_eq!(s.name(), kind.name());
+            assert_eq!(s.p(), 4);
+            check_scheme(s.as_ref(), &g);
+        }
     }
 }

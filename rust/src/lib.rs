@@ -17,7 +17,9 @@
 //!   equivalent.
 //! * **[`graph`]** — an NWGraph-equivalent library: CSR adjacency, edge
 //!   lists, GAP-style generators (`urand`, RMAT/Kronecker, structured),
-//!   1-D block partitioning and distributed shards (CSR + masked-ELL).
+//!   pluggable partition schemes (1-D block / edge-balanced / hash and a
+//!   2-D greedy vertex cut) and distributed shards with ghost/mirror
+//!   tables for master-index routing (CSR + masked-ELL).
 //! * **[`algorithms`]** — the paper's two algorithms in both execution
 //!   models (asynchronous HPX-style and BSP/PBGL-style), plus the
 //!   future-work extensions (§6): delta-stepping SSSP, connected

@@ -49,6 +49,14 @@ fn real_main() -> Result<()> {
                 res.report.net.envelopes,
                 res.report.barriers,
             );
+            let pt = res.report.partition;
+            println!(
+                "  partition[{}]: v-imb={:.2} e-imb={:.2} repl={:.2}",
+                cfg.partition.name(),
+                pt.vertex_imbalance,
+                pt.edge_imbalance,
+                pt.replication_factor,
+            );
             if validate {
                 println!("validation: OK");
             }
@@ -74,6 +82,14 @@ fn real_main() -> Result<()> {
                 res.report.load_imbalance(),
                 res.report.utilization(),
                 fmt_us(res.report.net.wire_us),
+            );
+            let pt = res.report.partition;
+            println!(
+                "  partition[{}]: v-imb={:.2} e-imb={:.2} repl={:.2}",
+                cfg.partition.name(),
+                pt.vertex_imbalance,
+                pt.edge_imbalance,
+                pt.replication_factor,
             );
             if validate {
                 println!("validation: OK");
@@ -103,6 +119,14 @@ fn real_main() -> Result<()> {
                 res.report.agg.envelopes,
                 res.report.agg.fold_factor(),
             );
+            let pt = res.report.partition;
+            println!(
+                "  partition[{}]: v-imb={:.2} e-imb={:.2} repl={:.2}",
+                cfg.partition.name(),
+                pt.vertex_imbalance,
+                pt.edge_imbalance,
+                pt.replication_factor,
+            );
             if validate {
                 println!("validation: OK");
             }
@@ -128,6 +152,7 @@ fn real_main() -> Result<()> {
             print!("{}", experiment::ablation_adaptive_chunk(&cfg)?.render());
             print!("{}", experiment::ablation_flush_policy(&cfg)?.render());
             print!("{}", experiment::ablation_delta_stepping(&cfg)?.render());
+            print!("{}", experiment::ablation_partition_schemes(&cfg)?.render());
             print!("{}", experiment::extensions(&cfg)?.render());
         }
         "info" => {

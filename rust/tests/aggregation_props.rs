@@ -37,12 +37,13 @@ fn min_u64(acc: &mut u64, v: u64) {
 /// A random push/drain schedule against one aggregator.
 #[derive(Debug, Clone)]
 struct Schedule {
-    /// Destination sizes (`n_dst` localities, contiguous global ranges).
+    /// Destination slot counts (`n_dst` localities; a slot is the
+    /// destination's dense master index).
     sizes: Vec<usize>,
     here: u32,
     policy: FlushPolicy,
-    /// `(op, dst, vertex_offset, value)`; `op == 0` pushes, `op == 1`
-    /// drains the destination mid-stream.
+    /// `(op, dst, slot, value)`; `op == 0` pushes, `op == 1` drains the
+    /// destination mid-stream.
     ops: Vec<(u8, u32, u32, u64)>,
 }
 
@@ -66,14 +67,9 @@ fn gen_schedule(rng: &mut generators::SplitMix64, size: usize) -> Schedule {
     Schedule { sizes, here, policy, ops }
 }
 
-fn ranges_of(sizes: &[usize]) -> Vec<std::ops::Range<usize>> {
-    let mut out = Vec::new();
-    let mut start = 0;
-    for &s in sizes {
-        out.push(start..start + s);
-        start += s;
-    }
-    out
+/// Flatten `(dst, slot)` into one global accounting index.
+fn flat(sizes: &[usize], dst: u32, slot: u32) -> usize {
+    sizes[..dst as usize].iter().sum::<usize>() + slot as usize
 }
 
 #[test]
@@ -83,33 +79,31 @@ fn prop_no_item_dropped_or_duplicated_sum_fold() {
     // per-vertex sum of everything pushed in — nothing dropped, nothing
     // duplicated.
     forall(&cfg(64), gen_schedule, |s| {
-        let ranges = ranges_of(&s.sizes);
         let total: usize = s.sizes.iter().sum();
         let mut agg =
-            Aggregator::new(&ranges, s.here, s.policy, &NetConfig::default(), 8, add);
+            Aggregator::new(&s.sizes, s.here, s.policy, &NetConfig::default(), 8, add);
         let mut want = vec![0u64; total];
         let mut got = vec![0u64; total];
-        let fold_in = |acc: &mut Vec<u64>, b: &Batch<u64>| {
-            for &(v, x) in &b.items {
-                acc[v as usize] += x;
+        let fold_in = |acc: &mut Vec<u64>, dst: u32, b: &Batch<u64>| {
+            for &(slot, x) in &b.items {
+                acc[flat(&s.sizes, dst, slot)] += x;
             }
         };
         for &(op, dst, off, val) in &s.ops {
             if op == 0 {
-                let v = (ranges[dst as usize].start + off as usize) as u32;
-                want[v as usize] += val;
-                if let Some(b) = agg.accumulate(dst, v, val) {
-                    fold_in(&mut got, &b);
+                want[flat(&s.sizes, dst, off)] += val;
+                if let Some(b) = agg.accumulate(dst, off, val) {
+                    fold_in(&mut got, dst, &b);
                 }
             } else if let Some(b) = agg.drain_one(dst) {
-                fold_in(&mut got, &b);
+                fold_in(&mut got, dst, &b);
             }
         }
         for (dst, b) in agg.drain() {
             if b.is_empty() {
                 return Err(format!("drain returned empty batch for {dst}"));
             }
-            fold_in(&mut got, &b);
+            fold_in(&mut got, dst, &b);
         }
         if agg.pending() != 0 {
             return Err(format!("{} items still pending after drain", agg.pending()));
@@ -131,30 +125,32 @@ fn prop_no_item_dropped_min_fold() {
     // true min of everything pushed at it (duplicates collapse, the
     // winner survives).
     forall(&cfg(64), gen_schedule, |s| {
-        let ranges = ranges_of(&s.sizes);
         let total: usize = s.sizes.iter().sum();
         let mut agg =
-            Aggregator::new(&ranges, s.here, s.policy, &NetConfig::default(), 8, min_u64);
+            Aggregator::new(&s.sizes, s.here, s.policy, &NetConfig::default(), 8, min_u64);
         let mut want = vec![u64::MAX; total];
         let mut got = vec![u64::MAX; total];
         for &(op, dst, off, val) in &s.ops {
             if op == 0 {
-                let v = (ranges[dst as usize].start + off as usize) as u32;
-                want[v as usize] = want[v as usize].min(val);
-                if let Some(b) = agg.accumulate(dst, v, val) {
-                    for (v, x) in b.items {
-                        got[v as usize] = got[v as usize].min(x);
+                let i = flat(&s.sizes, dst, off);
+                want[i] = want[i].min(val);
+                if let Some(b) = agg.accumulate(dst, off, val) {
+                    for (slot, x) in b.items {
+                        let i = flat(&s.sizes, dst, slot);
+                        got[i] = got[i].min(x);
                     }
                 }
             } else if let Some(b) = agg.drain_one(dst) {
-                for (v, x) in b.items {
-                    got[v as usize] = got[v as usize].min(x);
+                for (slot, x) in b.items {
+                    let i = flat(&s.sizes, dst, slot);
+                    got[i] = got[i].min(x);
                 }
             }
         }
-        for (_, b) in agg.drain() {
-            for (v, x) in b.items {
-                got[v as usize] = got[v as usize].min(x);
+        for (dst, b) in agg.drain() {
+            for (slot, x) in b.items {
+                let i = flat(&s.sizes, dst, slot);
+                got[i] = got[i].min(x);
             }
         }
         if got != want {
@@ -197,8 +193,8 @@ impl Actor for Sprayer {
         let p = ctx.n_localities();
         for i in 0..self.to_send {
             let dst = 1 + (i % (p as u64 - 1)) as LocalityId;
-            // Vertex offsets collide on purpose: the fold sums them.
-            if let Some(b) = self.agg.accumulate(dst, dst * 4 + (i % 4) as u32, 1) {
+            // Slots collide on purpose: the fold sums them.
+            if let Some(b) = self.agg.accumulate(dst, (i % 4) as u32, 1) {
                 ctx.send(dst, Payload(b));
             }
         }
@@ -219,12 +215,11 @@ fn quiescence_fires_after_draining_pending_buffers() {
     // when the send loop ended are shipped by the drain, delivered, and
     // the run still terminates with nothing lost.
     let p = 4u32;
-    let ranges: Vec<std::ops::Range<usize>> =
-        (0..p as usize).map(|l| l * 4..(l + 1) * 4).collect();
+    let counts = [4usize, 4, 4, 4];
     let net = NetConfig::default();
     let actors: Vec<Sprayer> = (0..p)
         .map(|l| Sprayer {
-            agg: Aggregator::new(&ranges, l, FlushPolicy::Manual, &net, 8, add),
+            agg: Aggregator::new(&counts, l, FlushPolicy::Manual, &net, 8, add),
             to_send: 300,
             received: 0,
         })
