@@ -36,8 +36,8 @@ fn main() {
     let dist = nwgraph_hpx::graph::DistGraph::block(&g, 8);
     let sim = nwgraph_hpx::amt::SimConfig::default();
     for res in [
-        bfs::async_hpx::run(&dist, 0, sim.clone()),
-        bfs::level_sync::run(&dist, 0, sim.clone()),
+        bfs::run_async(&dist, 0, sim.clone()),
+        bfs::run_bsp(&dist, 0, sim.clone()),
     ] {
         bfs::validate_parents(&g, 0, &res.parents).expect("invalid BFS result");
     }
@@ -70,8 +70,8 @@ fn main() {
     let params = pagerank::PrParams { alpha: 0.85, iterations: 20 };
     let want = pagerank::sequential::pagerank(&gd, params);
     for res in [
-        pagerank::bsp::run(&dd, params, sim.clone()),
-        pagerank::async_hpx::run(
+        pagerank::run_bsp(&dd, params, sim.clone()),
+        pagerank::run_async(
             &dd,
             params,
             nwgraph_hpx::amt::FlushPolicy::Unbatched,

@@ -21,7 +21,7 @@ fn main() {
 
     // 3. Asynchronous HPX-style BFS from vertex 0.
     let sim = SimConfig { net: NetConfig::default(), ..SimConfig::default() };
-    let res = bfs::async_hpx::run(&dist, 0, sim.clone());
+    let res = bfs::run_async(&dist, 0, sim.clone());
     let reached = res.parents.iter().filter(|&&p| p >= 0).count();
     println!(
         "async BFS: reached {reached}/{} vertices, modeled time {:.2} ms, {} messages",
@@ -33,7 +33,7 @@ fn main() {
     println!("async BFS: parent tree validated against the sequential oracle");
 
     // 4. BSP baseline for comparison (distributed-BGL style).
-    let bsp = bfs::level_sync::run(&dist, 0, sim.clone());
+    let bsp = bfs::run_bsp(&dist, 0, sim.clone());
     println!(
         "BSP BFS:   modeled time {:.2} ms, {} barriers",
         bsp.report.makespan_us / 1e3,
@@ -44,7 +44,7 @@ fn main() {
     let gd = generators::urand_directed(12, 8, 43);
     let dd = DistGraph::block(&gd, 8);
     let params = PrParams { alpha: 0.85, iterations: 20 };
-    let pr = pagerank::async_hpx::run(&dd, params, FlushPolicy::Items(1024), sim);
+    let pr = pagerank::run_async(&dd, params, FlushPolicy::Items(1024), sim);
     let want = pagerank::sequential::pagerank(&gd, params);
     let diff = pagerank::max_abs_diff(&pr.ranks, &want);
     println!(

@@ -37,7 +37,7 @@ fn main() {
     let sim = SimConfig::default();
 
     // Influencers: distributed PageRank, top 10.
-    let pr = pagerank::bsp::run(&dist, PrParams { alpha: 0.85, iterations: 25 }, sim.clone());
+    let pr = pagerank::run_bsp(&dist, PrParams { alpha: 0.85, iterations: 25 }, sim.clone());
     let mut ranked: Vec<(usize, f32)> = pr.ranks.iter().cloned().enumerate().collect();
     ranked.sort_by(|a, b| b.1.total_cmp(&a.1));
     println!("\ntop-10 influencers (vertex, rank, degree):");

@@ -19,7 +19,7 @@ fn main() {
     println!("crawl graph: urand13 — n={} m={}", g.n(), g.m());
 
     // Frontier profile from the level-synchronous engine (true BFS levels).
-    let res = bfs::level_sync::run(&dist, root, sim.clone());
+    let res = bfs::run_bsp(&dist, root, sim.clone());
     let levels = bfs::tree_levels(root, &res.parents);
     let max_lvl = levels.iter().cloned().max().unwrap_or(0);
     println!("\nfrontier profile (the irregular workload of paper §4.1):");
@@ -38,8 +38,8 @@ fn main() {
         coalesce_window_us: 5.0,
         ..SimConfig::default()
     };
-    let a = bfs::async_hpx::run(&dist, root, hpx_sim);
-    let b = bfs::level_sync::run(&dist, root, sim.clone());
+    let a = bfs::run_async(&dist, root, hpx_sim);
+    let b = bfs::run_bsp(&dist, root, sim.clone());
     let (d, td, bu) = bfs::direction_opt::run_with_params(&dist, root, sim.clone(), 14.0, 24.0);
     for (name, r) in [("async (HPX)", &a), ("level-sync (BGL)", &b), ("direction-opt", &d)] {
         println!(

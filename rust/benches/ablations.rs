@@ -56,7 +56,7 @@ fn main() {
                 let dist = DistGraph::build(&g, part);
                 // App-level combiners off: A3 isolates the partition axis
                 // under the pre-existing runtime-coalescing config.
-                let r = bfs::async_hpx::run_with_policy(
+                let r = bfs::run_async_with(
                     &dist,
                     0,
                     FlushPolicy::Unbatched,

@@ -2,7 +2,7 @@
 //!
 //! The paper's future work (§6) calls for broader algorithm coverage and
 //! runtime adaptivity; direction optimization is the classic example for
-//! BFS. Top-down supersteps behave like [`level_sync`](super::level_sync);
+//! BFS. Top-down supersteps behave like the BSP engine ([`super::run_bsp`]);
 //! when the frontier becomes edge-heavy (`m_frontier > m_unvisited / alpha`)
 //! the traversal switches to bottom-up supersteps, where every locality
 //! scans its *unvisited* vertices against a replicated frontier bitmap —
@@ -10,12 +10,12 @@
 //! bitmap-allgather barrier per switch/round. It switches back when the
 //! frontier shrinks below `n / beta`.
 //!
-//! Works with any mirror-free [`PartitionScheme`]
-//! (crate::graph::partition::PartitionScheme) — block, edge-balanced, or
+//! Works with any mirror-free
+//! [`PartitionScheme`](crate::graph::partition::PartitionScheme) —
+//! block, edge-balanced, or
 //! hash — since top-down needs whole rows at the owner and bottom-up
 //! needs whole in-rows. Vertex-cut graphs are rejected; use
-//! [`async_hpx`](super::async_hpx) or [`level_sync`](super::level_sync)
-//! there.
+//! [`super::run_async`] or [`super::run_bsp`] there.
 
 use std::sync::Arc;
 
@@ -332,11 +332,12 @@ pub fn run_with_params(
     alpha: f64,
     beta: f64,
 ) -> (BfsResult, u32, u32) {
-    assert!(
-        !dist.has_mirrors(),
-        "direction-optimizing BFS requires a mirror-free partition scheme \
-         (block|edge_balanced|hash); use the async or level-sync engine for vertex cuts"
-    );
+    // Coordinator callers reject this combination gracefully up front;
+    // the re-check here turns direct library misuse into a clear panic
+    // instead of silently wrong traversals over unexpanded mirror rows.
+    if let Err(e) = crate::engine::require_mirror_free(dist, "direction-optimizing BFS") {
+        panic!("{e}");
+    }
     let dist = Arc::new(dist.clone());
     let parents = AtomicLongVector::new(dist.n(), dist.p(), -1);
     let actors: Vec<DirOptBfsActor> = dist

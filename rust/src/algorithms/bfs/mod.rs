@@ -1,14 +1,18 @@
-//! Breadth-First Search: sequential oracle, asynchronous HPX-style
-//! distributed version (paper Listing 1.2), level-synchronous BSP baseline
-//! (distributed BGL stand-in), and a direction-optimizing extension.
+//! Breadth-First Search: sequential oracle, the [`BfsProgram`] vertex
+//! program (run on the generic [`engine`](crate::engine) loops —
+//! asynchronous label-correcting or BSP level-by-level), and a
+//! direction-optimizing extension kept as an explicitly specialized
+//! engine.
 
-pub mod async_hpx;
 pub mod direction_opt;
-pub mod level_sync;
+pub mod program;
 pub mod sequential;
 
-use crate::amt::SimReport;
-use crate::graph::{Csr, VertexId};
+pub use program::{BfsProgram, BfsState};
+
+use crate::amt::{FlushPolicy, SimConfig, SimReport};
+use crate::engine;
+use crate::graph::{Csr, DistGraph, VertexId};
 
 /// Result of a distributed BFS run.
 #[derive(Debug)]
@@ -20,6 +24,33 @@ pub struct BfsResult {
     pub report: SimReport,
 }
 
+fn to_result(run: engine::ProgramRun<BfsState>) -> BfsResult {
+    BfsResult { parents: run.states.iter().map(|s| s.parent).collect(), report: run.report }
+}
+
+/// Asynchronous HPX-style BFS (label-correcting wavefront, no barriers)
+/// with the default [`FlushPolicy::Adaptive`] aggregation.
+pub fn run_async(dist: &DistGraph, root: VertexId, cfg: SimConfig) -> BfsResult {
+    run_async_with(dist, root, FlushPolicy::Adaptive, cfg)
+}
+
+/// Asynchronous BFS with an explicit combiner flush policy.
+pub fn run_async_with(
+    dist: &DistGraph,
+    root: VertexId,
+    policy: FlushPolicy,
+    cfg: SimConfig,
+) -> BfsResult {
+    to_result(engine::run_async(BfsProgram { root }, dist, policy, cfg))
+}
+
+/// Level-synchronous BSP BFS — the distributed-BGL (PBGL) baseline:
+/// superstep frontier expansion with an activity-count termination
+/// reduction (two global barriers per level).
+pub fn run_bsp(dist: &DistGraph, root: VertexId, cfg: SimConfig) -> BfsResult {
+    to_result(engine::run_bsp(BfsProgram { root }, dist, cfg))
+}
+
 /// Validate a parent array against the graph, GAP-benchmark style:
 ///
 /// 1. the root is its own parent;
@@ -29,8 +60,9 @@ pub struct BfsResult {
 ///    (tree, no cycles);
 /// 5. tree levels are consistent with true BFS distances: a vertex at
 ///    true distance `d` has a parent at true distance `>= d - 1`
-///    (asynchronous BFS may produce non-minimal trees, which the paper's
-///    CAS-based `set_parent` permits; minimality is NOT required).
+///    (asynchronous BFS may produce non-minimal trees mid-flight, which
+///    the paper's CAS-based `set_parent` permits; minimality is NOT
+///    required by this check, though both engines converge to it).
 pub fn validate_parents(g: &Csr, root: VertexId, parents: &[i64]) -> Result<(), String> {
     let n = g.n();
     if parents.len() != n {
@@ -102,7 +134,12 @@ pub fn tree_levels(root: VertexId, parents: &[i64]) -> Vec<i64> {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::graph::generators;
+    use crate::amt::NetConfig;
+    use crate::graph::{generators, PartitionKind};
+
+    fn det() -> SimConfig {
+        SimConfig::deterministic(NetConfig::default())
+    }
 
     #[test]
     fn validate_accepts_sequential_tree() {
@@ -140,5 +177,124 @@ mod tests {
     fn tree_levels_on_path() {
         let parents = vec![0i64, 0, 1, 2];
         assert_eq!(tree_levels(0, &parents), vec![0, 1, 2, 3]);
+    }
+
+    #[test]
+    fn both_engines_reach_true_levels_on_random_graphs() {
+        for (scale, p) in [(6u32, 1u32), (6, 2), (6, 4), (7, 8)] {
+            let g = generators::urand(scale, 4, scale as u64 + p as u64);
+            let want = sequential::distances(&g, 0);
+            let dist = DistGraph::block(&g, p);
+            for res in [run_async(&dist, 0, det()), run_bsp(&dist, 0, det())] {
+                validate_parents(&g, 0, &res.parents).unwrap();
+                assert_eq!(tree_levels(0, &res.parents), want, "p={p}");
+            }
+        }
+    }
+
+    #[test]
+    fn works_when_root_not_on_locality_zero() {
+        let g = generators::urand(6, 4, 11);
+        let root = (g.n() - 1) as VertexId;
+        let want = sequential::distances(&g, root);
+        let dist = DistGraph::block(&g, 4);
+        for res in [run_async(&dist, root, det()), run_bsp(&dist, root, det())] {
+            validate_parents(&g, root, &res.parents).unwrap();
+            assert_eq!(tree_levels(root, &res.parents), want);
+        }
+    }
+
+    #[test]
+    fn true_levels_under_every_partition_scheme() {
+        let g = generators::kron(7, 6, 19);
+        let want = sequential::distances(&g, 0);
+        for kind in PartitionKind::all() {
+            for p in [1u32, 3, 8] {
+                let dist = DistGraph::build_with(&g, kind.build(&g, p));
+                for (name, res) in [
+                    ("async", run_async(&dist, 0, det())),
+                    ("bsp", run_bsp(&dist, 0, det())),
+                ] {
+                    validate_parents(&g, 0, &res.parents).unwrap();
+                    assert_eq!(tree_levels(0, &res.parents), want, "{name} {kind:?} p={p}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn vertex_cut_report_carries_replication() {
+        let g = generators::kron(7, 8, 5);
+        let dist = DistGraph::build_with(&g, PartitionKind::VertexCut.build(&g, 4));
+        assert!(dist.has_mirrors());
+        let res = run_async(&dist, 0, det());
+        validate_parents(&g, 0, &res.parents).unwrap();
+        assert!(res.report.partition.replication_factor > 1.0);
+        assert!(res.report.partition.vertex_imbalance >= 1.0);
+        assert!(res.report.partition.edge_imbalance >= 1.0);
+    }
+
+    #[test]
+    fn disconnected_graph_terminates() {
+        let mut el = crate::graph::EdgeList::new(10);
+        el.push(0, 1);
+        el.push(1, 0);
+        let g = Csr::from_edge_list(&el);
+        let dist = DistGraph::block(&g, 3);
+        for res in [run_async(&dist, 0, det()), run_bsp(&dist, 0, det())] {
+            assert_eq!(res.parents[1], 0);
+            assert!(res.parents[2..].iter().all(|&p| p == -1));
+        }
+    }
+
+    #[test]
+    fn no_barriers_in_async_bfs() {
+        let g = generators::urand(7, 4, 13);
+        let dist = DistGraph::block(&g, 4);
+        let res = run_async(&dist, 0, det());
+        assert_eq!(res.report.barriers, 0);
+    }
+
+    #[test]
+    fn bsp_barrier_count_is_two_per_level() {
+        let g = generators::path(9); // 8 levels from vertex 0
+        let dist = DistGraph::block(&g, 3);
+        let res = run_bsp(&dist, 0, det());
+        // levels+1 rounds (last round discovers nothing), 2 barriers each.
+        assert_eq!(res.report.barriers, 2 * (8 + 1));
+    }
+
+    #[test]
+    fn every_flush_policy_yields_true_levels() {
+        let g = generators::urand(7, 4, 15);
+        let dist = DistGraph::block(&g, 4);
+        let want = sequential::distances(&g, 0);
+        for policy in [
+            FlushPolicy::Unbatched,
+            FlushPolicy::Items(4),
+            FlushPolicy::Adaptive,
+            FlushPolicy::Manual,
+        ] {
+            let res = run_async_with(&dist, 0, policy, det());
+            validate_parents(&g, 0, &res.parents).unwrap();
+            assert_eq!(tree_levels(0, &res.parents), want, "{policy:?}");
+        }
+    }
+
+    #[test]
+    fn aggregation_reduces_envelopes_vs_unbatched() {
+        let g = generators::urand(8, 8, 17);
+        let dist = DistGraph::block(&g, 4);
+        let naive = run_async_with(&dist, 0, FlushPolicy::Unbatched, det());
+        let agg = run_async_with(&dist, 0, FlushPolicy::Adaptive, det());
+        assert!(agg.report.net.envelopes < naive.report.net.envelopes);
+        assert_eq!(agg.report.agg.envelopes, agg.report.net.envelopes);
+    }
+
+    #[test]
+    fn bsp_empty_graph_single_vertex() {
+        let g = generators::path(1);
+        let res = run_bsp(&DistGraph::block(&g, 1), 0, det());
+        assert_eq!(res.parents, vec![0]);
     }
 }

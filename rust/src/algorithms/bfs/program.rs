@@ -1,0 +1,84 @@
+//! BFS as a [`VertexProgram`] — the paper's Listing 1.2 reduced to its
+//! algorithmic hooks; every execution concern (wavefronts, supersteps,
+//! mirror routing, termination) lives in [`engine`](crate::engine).
+//!
+//! The program is *level correcting*: messages are `(parent, level)`
+//! proposals folded by min-level, so at convergence every reached vertex
+//! carries its true BFS distance — the final tree is a shortest-path tree
+//! regardless of engine, message order, aggregation, or partition scheme.
+
+use crate::engine::{Mode, ProgramInfo, VertexProgram};
+use crate::graph::VertexId;
+
+/// Level-correcting BFS from a root vertex.
+#[derive(Debug, Clone)]
+pub struct BfsProgram {
+    /// Root vertex.
+    pub root: VertexId,
+}
+
+/// Per-row BFS state.
+#[derive(Debug, Clone)]
+pub struct BfsState {
+    /// Tentative BFS level (`u32::MAX` = unvisited).
+    pub level: u32,
+    /// Discovering neighbor (`-1` = unreached).
+    pub parent: i64,
+}
+
+impl VertexProgram for BfsProgram {
+    type State = BfsState;
+    /// `(parent, proposed level)`.
+    type Msg = (VertexId, u32);
+
+    fn info(&self) -> ProgramInfo {
+        ProgramInfo {
+            name: "bfs",
+            mode: Mode::Converge,
+            needs_weights: false,
+            ordered: false,
+            item_bytes: 12, // vertex + parent + level
+        }
+    }
+
+    fn init(&self, _v: VertexId, _out_degree: u32) -> BfsState {
+        BfsState { level: u32::MAX, parent: -1 }
+    }
+
+    fn seed(&self, v: VertexId) -> Option<Self::Msg> {
+        (v == self.root).then_some((self.root, 0))
+    }
+
+    fn combine(acc: &mut Self::Msg, new: Self::Msg) {
+        if new.1 < acc.1 {
+            *acc = new;
+        }
+    }
+
+    fn beats(&self, msg: &Self::Msg, state: &BfsState) -> bool {
+        msg.1 < state.level
+    }
+
+    fn apply(&self, state: &mut BfsState, msg: Self::Msg) -> bool {
+        if msg.1 < state.level {
+            state.level = msg.1;
+            state.parent = msg.0 as i64;
+            true
+        } else {
+            false
+        }
+    }
+
+    fn signal(&self, state: &BfsState) -> Self::Msg {
+        // Only ever read from reached rows, whose parent is set.
+        (state.parent.max(0) as VertexId, state.level)
+    }
+
+    fn along_edge(&self, u: VertexId, sig: &Self::Msg, _w: f32) -> Self::Msg {
+        (u, sig.1 + 1)
+    }
+
+    fn priority(&self, msg: &Self::Msg) -> f32 {
+        msg.1 as f32
+    }
+}

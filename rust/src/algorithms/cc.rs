@@ -1,35 +1,78 @@
-//! Connected components — §6 future-work extension.
+//! Connected components — §6 future-work extension, as a
+//! [`VertexProgram`]: min-label propagation (each vertex adopts the
+//! smallest label seen — the Shiloach-Vishkin-flavored formulation
+//! frameworks like Pregel ship), run on the generic
+//! [`engine`](crate::engine) loops. The BSP flavor is the classic
+//! superstep baseline; the asynchronous flavor falls out of the engine
+//! redesign for free (monotone min-folding converges under any message
+//! order).
 //!
-//! Sequential oracle: union-find. Distributed: min-label propagation in
-//! BSP supersteps (each vertex adopts the smallest label seen) — the
-//! standard Shiloach-Vishkin-flavored formulation frameworks like Pregel
-//! ship. Remote label updates route through the shared
-//! [`amt::aggregate`](crate::amt::aggregate) combiner (fold = min over
-//! labels, keyed by the destination's master index, drained once per
-//! superstep), so at most one update per destination vertex hits the wire
-//! each round.
-//!
-//! Scheme-generic: under a vertex cut every mirror row starts active (its
-//! locally homed edges must propagate the initial labels), and a master
-//! whose label improves scatters the new label to its mirrors through a
-//! second Manual-policy combiner; the mirror re-activates the row for the
-//! next superstep. Monotone min-folding makes the extra rounds converge
-//! to the same fixpoint as the 1-D layout.
+//! Every vertex seeds with its own id, which under a vertex cut activates
+//! mirror rows too — their locally homed edges propagate the initial
+//! labels, and master improvements scatter through the engines' mirror
+//! combiners.
 
-use std::sync::Arc;
+use crate::amt::{FlushPolicy, SimConfig, SimReport};
+use crate::engine::{self, Mode, ProgramInfo, VertexProgram};
+use crate::graph::{Csr, DistGraph, VertexId};
 
-use crate::amt::aggregate::{Aggregator, Batch, FlushPolicy};
-use crate::amt::sim::{Actor, Ctx, LocalityId, Message, SimConfig, SimRuntime};
-use crate::amt::SimReport;
-use crate::graph::{Csr, DistGraph, Shard, VertexId};
+/// Min-label propagation CC.
+#[derive(Debug, Clone, Default)]
+pub struct CcProgram;
 
-/// Per-item wire size: vertex id + label.
-const ITEM_BYTES: usize = 8;
+impl VertexProgram for CcProgram {
+    /// Component label (smallest vertex id seen).
+    type State = VertexId;
+    type Msg = VertexId;
 
-/// Keep the smaller component label.
-fn min_label(acc: &mut VertexId, label: VertexId) {
-    if label < *acc {
-        *acc = label;
+    fn info(&self) -> ProgramInfo {
+        ProgramInfo {
+            name: "cc",
+            mode: Mode::Converge,
+            needs_weights: false,
+            ordered: false,
+            item_bytes: 8, // vertex id + label
+        }
+    }
+
+    fn init(&self, v: VertexId, _out_degree: u32) -> VertexId {
+        v
+    }
+
+    fn seed(&self, v: VertexId) -> Option<VertexId> {
+        Some(v) // every row starts active with its own label
+    }
+
+    fn combine(acc: &mut VertexId, new: VertexId) {
+        if new < *acc {
+            *acc = new;
+        }
+    }
+
+    fn beats(&self, msg: &VertexId, state: &VertexId) -> bool {
+        msg < state
+    }
+
+    fn apply(&self, state: &mut VertexId, msg: VertexId) -> bool {
+        if msg < *state {
+            *state = msg;
+            true
+        } else {
+            false
+        }
+    }
+
+    fn signal(&self, state: &VertexId) -> VertexId {
+        *state
+    }
+
+    fn along_edge(&self, _u: VertexId, sig: &VertexId, _w: f32) -> VertexId {
+        *sig
+    }
+
+    fn priority(&self, msg: &VertexId) -> f32 {
+        // Smaller labels first: winners propagate before losers re-flood.
+        *msg as f32
     }
 }
 
@@ -40,6 +83,18 @@ pub struct CcResult {
     pub labels: Vec<VertexId>,
     /// Runtime report.
     pub report: SimReport,
+}
+
+/// Run BSP min-label propagation CC (per-superstep combiner drains).
+pub fn run(dist: &DistGraph, cfg: SimConfig) -> CcResult {
+    let run = engine::run_bsp(CcProgram, dist, cfg);
+    CcResult { labels: run.states, report: run.report }
+}
+
+/// Run asynchronous label-correcting CC with an explicit flush policy.
+pub fn run_async(dist: &DistGraph, policy: FlushPolicy, cfg: SimConfig) -> CcResult {
+    let run = engine::run_async(CcProgram, dist, policy, cfg);
+    CcResult { labels: run.states, report: run.report }
 }
 
 /// Sequential union-find oracle; labels are canonical minimum vertex ids.
@@ -83,252 +138,15 @@ pub fn component_count(labels: &[VertexId]) -> usize {
     sorted.len()
 }
 
-/// Label-propagation messages.
-#[derive(Debug, Clone)]
-pub enum CcMsg {
-    /// Batched label updates toward masters: `(master index, min label)`.
-    Labels(Batch<VertexId>),
-    /// Batched label scatter toward mirrors: `(ghost slot, label)`.
-    MirrorLabels(Batch<VertexId>),
-    /// Activity reduction.
-    Count(u64),
-    /// Coordinator verdict.
-    Continue(bool),
-}
-
-impl Message for CcMsg {
-    fn wire_bytes(&self) -> usize {
-        match self {
-            CcMsg::Labels(b) => b.wire_bytes(),
-            CcMsg::MirrorLabels(b) => b.wire_bytes(),
-            CcMsg::Count(_) => 8,
-            CcMsg::Continue(_) => 1,
-        }
-    }
-
-    fn item_count(&self) -> usize {
-        match self {
-            CcMsg::Labels(b) => b.len(),
-            CcMsg::MirrorLabels(b) => b.len(),
-            _ => 1,
-        }
-    }
-}
-
-#[derive(PartialEq)]
-enum Phase {
-    AfterPropagate,
-    AwaitDecision,
-}
-
-struct CcActor {
-    shard: Arc<Shard>,
-    /// Label per local row: owned rows authoritative, ghost rows cached.
-    labels: Vec<VertexId>,
-    active: Vec<u32>, // local rows queued for the next propagate round
-    in_active: Vec<bool>,
-    inbox: Vec<(u32, VertexId)>,
-    counts_sum: u64,
-    /// Activity earned outside a propagate round (scatter queued at the
-    /// barrier), folded into the next Count so termination can't outrun
-    /// pending mirror work.
-    pending_activity: u64,
-    continue_flag: bool,
-    phase: Phase,
-    /// Superstep combiner toward masters: folded min labels, drained once
-    /// per round.
-    agg: Aggregator<VertexId>,
-    /// Superstep combiner toward mirrors (label scatter).
-    mirror_agg: Aggregator<VertexId>,
-}
-
-impl CcActor {
-    fn activate(&mut self, row: usize) {
-        if !self.in_active[row] {
-            self.in_active[row] = true;
-            self.active.push(row as u32);
-        }
-    }
-
-    /// Apply `label` to the owned `row`; on improvement, queue the row and
-    /// scatter the new label to its mirrors. Returns whether it improved.
-    fn improve_owned(&mut self, row: usize, label: VertexId) -> bool {
-        if label >= self.labels[row] {
-            return false;
-        }
-        self.labels[row] = label;
-        self.activate(row);
-        let shard = Arc::clone(&self.shard);
-        for &(dst, gi) in shard.mirrors(row) {
-            // Manual policy: accumulate never auto-flushes.
-            let flushed = self.mirror_agg.accumulate(dst, gi, label);
-            debug_assert!(flushed.is_none());
-        }
-        true
-    }
-
-    fn propagate(&mut self, ctx: &mut Ctx<CcMsg>) {
-        let n_owned = self.shard.n_local();
-        let mut activity = self.pending_activity;
-        self.pending_activity = 0;
-        let active = std::mem::take(&mut self.active);
-        for &row in &active {
-            self.in_active[row as usize] = false;
-        }
-        for &row in &active {
-            let label = self.labels[row as usize];
-            let shard = Arc::clone(&self.shard);
-            for &t in shard.row_neighbors_local(row as usize) {
-                let t = t as usize;
-                if t < n_owned {
-                    if self.improve_owned(t, label) {
-                        activity += 1;
-                    }
-                } else {
-                    let gi = t - n_owned;
-                    // Manual policy: accumulate never auto-flushes.
-                    let flushed = self.agg.accumulate(
-                        shard.ghost_owner[gi],
-                        shard.ghost_master_index[gi],
-                        label,
-                    );
-                    debug_assert!(flushed.is_none());
-                    activity += 1;
-                }
-            }
-        }
-        for (dst, batch) in self.agg.drain() {
-            ctx.send(dst, CcMsg::Labels(batch));
-        }
-        for (dst, batch) in self.mirror_agg.drain() {
-            ctx.send(dst, CcMsg::MirrorLabels(batch));
-            activity += 1;
-        }
-        ctx.send(0, CcMsg::Count(activity));
-        self.phase = Phase::AfterPropagate;
-        ctx.request_barrier();
-    }
-}
-
-impl Actor for CcActor {
-    type Msg = CcMsg;
-
-    fn on_start(&mut self, ctx: &mut Ctx<CcMsg>) {
-        // Every owned row starts active with its own id as label; mirror
-        // rows start active too, so remotely homed edges propagate the
-        // initial labels (their labels are the cached ghost ids).
-        self.in_active = vec![false; self.shard.n_rows()];
-        for row in 0..self.shard.n_rows() {
-            if !self.shard.row_neighbors_local(row).is_empty() || row < self.shard.n_local() {
-                self.activate(row);
-            }
-        }
-        self.propagate(ctx);
-    }
-
-    fn on_message(&mut self, _ctx: &mut Ctx<CcMsg>, _from: LocalityId, msg: CcMsg) {
-        match msg {
-            CcMsg::Labels(batch) => self.inbox.extend(batch.items),
-            CcMsg::MirrorLabels(batch) => {
-                let n_owned = self.shard.n_local();
-                for (gi, label) in batch.items {
-                    let row = n_owned + gi as usize;
-                    if label < self.labels[row] {
-                        self.labels[row] = label;
-                        self.activate(row);
-                    }
-                }
-            }
-            CcMsg::Count(c) => self.counts_sum += c,
-            CcMsg::Continue(b) => self.continue_flag = b,
-        }
-    }
-
-    fn on_barrier(&mut self, ctx: &mut Ctx<CcMsg>, _epoch: u64) {
-        match self.phase {
-            Phase::AfterPropagate => {
-                let inbox = std::mem::take(&mut self.inbox);
-                for (idx, label) in inbox {
-                    if self.improve_owned(idx as usize, label) {
-                        // The scatter queued by improve_owned ships with
-                        // the next round's drain; keep the run alive.
-                        self.pending_activity += 1;
-                    }
-                }
-                if ctx.locality() == 0 {
-                    let go = self.counts_sum > 0;
-                    self.counts_sum = 0;
-                    for l in 0..ctx.n_localities() {
-                        ctx.send(l, CcMsg::Continue(go));
-                    }
-                }
-                self.phase = Phase::AwaitDecision;
-                ctx.request_barrier();
-            }
-            Phase::AwaitDecision => {
-                // The verdict is uniform: every activation was backed by a
-                // counted activity (local improvement, sender's proposal,
-                // or a scatter batch), so `go` is true whenever any
-                // locality still holds active rows or pending scatter.
-                if self.continue_flag {
-                    self.propagate(ctx);
-                }
-            }
-        }
-    }
-}
-
-/// Run BSP min-label propagation CC.
-pub fn run(dist: &DistGraph, cfg: SimConfig) -> CcResult {
-    let actors: Vec<CcActor> = dist
-        .shards
-        .iter()
-        .map(|s| CcActor {
-            shard: Arc::new(s.clone()),
-            labels: (0..s.n_rows()).map(|r| s.global_of(r)).collect(),
-            active: Vec::new(),
-            in_active: Vec::new(),
-            inbox: Vec::new(),
-            counts_sum: 0,
-            pending_activity: 0,
-            continue_flag: false,
-            phase: Phase::AfterPropagate,
-            agg: Aggregator::new(
-                dist.owned_counts(),
-                s.locality,
-                FlushPolicy::Manual,
-                &cfg.net,
-                ITEM_BYTES,
-                min_label,
-            ),
-            mirror_agg: Aggregator::new(
-                dist.ghost_counts(),
-                s.locality,
-                FlushPolicy::Manual,
-                &cfg.net,
-                ITEM_BYTES,
-                min_label,
-            ),
-        })
-        .collect();
-    let (actors, mut report) = SimRuntime::new(cfg).run(actors);
-    for a in &actors {
-        report.agg.merge(a.agg.stats());
-        report.agg.merge(a.mirror_agg.stats());
-    }
-    report.partition = dist.partition_stats();
-    let mut labels = vec![0 as VertexId; dist.n()];
-    for a in &actors {
-        a.shard.scatter_owned(&a.labels[..a.shard.n_local()], &mut labels);
-    }
-    CcResult { labels, report }
-}
-
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::amt::NetConfig;
     use crate::graph::{generators, PartitionKind};
+
+    fn det() -> SimConfig {
+        SimConfig::deterministic(NetConfig::default())
+    }
 
     #[test]
     fn matches_union_find() {
@@ -336,8 +154,12 @@ mod tests {
             let g = generators::urand(6, 2, 41 + p as u64); // sparse -> many components
             let want = union_find(&g);
             let d = DistGraph::block(&g, p);
-            let res = run(&d, SimConfig::deterministic(NetConfig::default()));
-            assert_eq!(res.labels, want, "p={p}");
+            assert_eq!(run(&d, det()).labels, want, "bsp p={p}");
+            assert_eq!(
+                run_async(&d, FlushPolicy::Adaptive, det()).labels,
+                want,
+                "async p={p}"
+            );
         }
     }
 
@@ -348,8 +170,12 @@ mod tests {
         for kind in PartitionKind::all() {
             for p in [2u32, 4, 8] {
                 let d = DistGraph::build_with(&g, kind.build(&g, p));
-                let res = run(&d, SimConfig::deterministic(NetConfig::default()));
-                assert_eq!(res.labels, want, "{kind:?} p={p}");
+                assert_eq!(run(&d, det()).labels, want, "bsp {kind:?} p={p}");
+                assert_eq!(
+                    run_async(&d, FlushPolicy::Adaptive, det()).labels,
+                    want,
+                    "async {kind:?} p={p}"
+                );
             }
         }
     }
@@ -358,7 +184,7 @@ mod tests {
     fn connected_graph_has_one_component() {
         let g = generators::grid(8, 8);
         let d = DistGraph::block(&g, 4);
-        let res = run(&d, SimConfig::deterministic(NetConfig::default()));
+        let res = run(&d, det());
         assert_eq!(component_count(&res.labels), 1);
         assert!(res.labels.iter().all(|&l| l == 0));
     }
@@ -368,7 +194,7 @@ mod tests {
         let el = crate::graph::EdgeList::new(5);
         let g = Csr::from_edge_list(&el);
         let d = DistGraph::block(&g, 2);
-        let res = run(&d, SimConfig::deterministic(NetConfig::default()));
+        let res = run(&d, det());
         assert_eq!(res.labels, vec![0, 1, 2, 3, 4]);
         assert_eq!(component_count(&res.labels), 5);
     }
@@ -379,11 +205,20 @@ mod tests {
         // remote vertex each round; the combiner ships one min per vertex.
         let g = generators::urand(7, 8, 47);
         let d = DistGraph::block(&g, 4);
-        let res = run(&d, SimConfig::deterministic(NetConfig::default()));
+        let res = run(&d, det());
         let agg = res.report.agg;
         assert!(agg.folded > 0, "dense rounds must fold duplicates");
         assert_eq!(agg.items, agg.folded + agg.sent_items);
         assert_eq!(agg.envelopes, agg.drain_flushes);
+    }
+
+    #[test]
+    fn async_cc_terminates_without_barriers() {
+        let g = generators::urand(7, 4, 53);
+        let d = DistGraph::block(&g, 4);
+        let res = run_async(&d, FlushPolicy::Adaptive, det());
+        assert_eq!(res.report.barriers, 0);
+        assert_eq!(res.labels, union_find(&g));
     }
 
     #[test]

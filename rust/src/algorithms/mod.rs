@@ -1,20 +1,28 @@
-//! Graph algorithms in both of the paper's execution models.
+//! Graph algorithms as [`VertexProgram`](crate::engine::VertexProgram)s.
 //!
-//! Every distributed algorithm is an [`Actor`](crate::amt::Actor) over the
-//! simulated AMT runtime and comes in (at least) two flavors:
+//! Since the engine redesign, an algorithm here is a ~100-line vertex
+//! program (state, message, fold, apply, scatter hooks) plus thin runner
+//! functions that dispatch it onto the generic execution loops in
+//! [`engine`](crate::engine):
 //!
-//! * **`async_*`** — the paper's HPX style: eager fine-grained messages,
+//! * **`run_async`** — the paper's HPX style: eager fine-grained messages,
 //!   no global barriers (or only per-iteration ones), computation and
 //!   communication overlapped;
-//! * **`bsp_*` / `level_sync`** — the PBGL/Boost baseline style:
-//!   supersteps, batched per-destination combiners, global barriers.
+//! * **`run_bsp`** — the PBGL/Boost baseline style: supersteps, batched
+//!   per-destination combiners, global barriers;
+//! * **`run_delta`** — the ordered bucket schedule (SSSP only; any
+//!   program with a path-metric priority could opt in).
 //!
 //! [`bfs`] and [`pagerank`] are the paper's two evaluated algorithms
 //! (Figures 1 and 2); [`sssp`], [`cc`] and [`triangle`] are the §6
 //! future-work extensions ("broaden the scope of algorithms ... traversal,
-//! centrality, and pattern-matching"). SSSP additionally ships a third
-//! execution model — delta-stepping with distributed bucket coordination
-//! ([`sssp::delta`]) — the ordered middle ground between the two styles.
+//! centrality, and pattern-matching"). Three engines remain explicitly
+//! specialized behind the same coordinator entry points:
+//! direction-optimizing BFS ([`bfs::direction_opt`]), kernel-offloaded
+//! PageRank ([`pagerank::kernel`]), and triangle counting ([`triangle`]) —
+//! each needs whole vertex rows at the owner and gates on mirror-free
+//! partitions through
+//! [`engine::require_mirror_free`](crate::engine::require_mirror_free).
 
 pub mod bfs;
 pub mod cc;

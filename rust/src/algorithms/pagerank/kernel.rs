@@ -237,7 +237,7 @@ pub fn run(
         }
         let _ = &a.ell; // keep geometry alive for inspection
     }
-    Ok(super::bsp::collect(
+    Ok(super::collect(
         &dist,
         actors.iter().map(|a| (&a.rank, &a.deltas)),
         params,

@@ -1,14 +1,15 @@
-//! PageRank: sequential oracle, BSP/PBGL baseline, asynchronous HPX-style
-//! variants (naive + optimized, paper §4.2), and the kernel-offloaded
-//! variant that runs the local rank-update phase on the AOT-compiled
-//! Pallas/XLA module.
+//! PageRank: sequential oracle, the [`PrProgram`] vertex program run on
+//! the generic [`engine`](crate::engine) loops (BSP/PBGL baseline and the
+//! asynchronous HPX-style variants of paper §4.2), and the
+//! kernel-offloaded variant kept as an explicitly specialized engine
+//! (AOT-compiled Pallas/XLA local phase).
 //!
-//! All distributed variants run a fixed iteration count (GAP-benchmark
-//! convention) with one global barrier per iteration separating the
-//! contribution exchange from the rank update — the paper's
-//! "synchronization across iterations". They differ *only* in how
-//! contributions travel (the async flavors are one engine parameterized
-//! by [`FlushPolicy`](crate::amt::FlushPolicy)):
+//! All variants run a fixed iteration count (GAP-benchmark convention)
+//! with one global barrier per iteration separating the contribution
+//! exchange from the rank update — the paper's "synchronization across
+//! iterations". They differ *only* in how contributions travel (the async
+//! flavors are one engine parameterized by
+//! [`FlushPolicy`](crate::amt::FlushPolicy)):
 //!
 //! | variant           | remote contributions                     | applied      |
 //! |-------------------|------------------------------------------|--------------|
@@ -18,12 +19,18 @@
 //! | `async Manual`    | end-of-phase drain (max batching)        | on arrival   |
 //! | `kernel`          | contribution-slice allgather             | local kernel |
 
-pub mod async_hpx;
-pub mod bsp;
 pub mod kernel;
+pub mod program;
 pub mod sequential;
 
-use crate::amt::SimReport;
+pub use program::{PrProgram, PrState};
+
+use std::sync::Arc;
+
+use crate::amt::executor::{ChunkPolicy, Executor};
+use crate::amt::{FlushPolicy, SimConfig, SimReport};
+use crate::engine;
+use crate::graph::DistGraph;
 
 /// Result of a distributed PageRank run.
 #[derive(Debug)]
@@ -51,6 +58,69 @@ impl Default for PrParams {
     }
 }
 
+fn to_result(run: engine::ProgramRun<PrState>) -> PrResult {
+    PrResult {
+        ranks: run.states.iter().map(|s| s.rank).collect(),
+        deltas: run.deltas,
+        report: run.report,
+    }
+}
+
+/// Run asynchronous PageRank with the given flush policy (the naive
+/// per-edge path is [`FlushPolicy::Unbatched`]).
+pub fn run_async(
+    dist: &DistGraph,
+    params: PrParams,
+    policy: FlushPolicy,
+    cfg: SimConfig,
+) -> PrResult {
+    to_result(engine::run_async(PrProgram { params, n: dist.n() }, dist, policy, cfg))
+}
+
+/// Run BSP PageRank (serial local update loop).
+pub fn run_bsp(dist: &DistGraph, params: PrParams, cfg: SimConfig) -> PrResult {
+    to_result(engine::run_bsp(PrProgram { params, n: dist.n() }, dist, cfg))
+}
+
+/// Run BSP PageRank with an intra-locality executor for the update loop
+/// (the `adaptive_core_chunk_size` ablation hooks in here).
+pub fn run_bsp_with_executor(
+    dist: &DistGraph,
+    params: PrParams,
+    cfg: SimConfig,
+    executor: Option<Arc<Executor>>,
+    chunk_policy: ChunkPolicy,
+) -> PrResult {
+    to_result(engine::run_bsp_with_executor(
+        PrProgram { params, n: dist.n() },
+        dist,
+        cfg,
+        executor,
+        chunk_policy,
+    ))
+}
+
+/// Assemble global ranks + reduced deltas from per-locality results (used
+/// by the specialized kernel engine, which bypasses the generic loops).
+pub(crate) fn collect<'a>(
+    dist: &DistGraph,
+    parts: impl Iterator<Item = (&'a Vec<f32>, &'a Vec<f32>)>,
+    params: PrParams,
+    report: SimReport,
+) -> PrResult {
+    let mut ranks = vec![0.0f32; dist.n()];
+    let mut deltas = vec![0.0f32; params.iterations as usize];
+    for (shard, (rank, local_deltas)) in dist.shards.iter().zip(parts) {
+        shard.scatter_owned(rank, &mut ranks);
+        for (i, d) in local_deltas.iter().enumerate() {
+            deltas[i] += d;
+        }
+    }
+    let mut report = report;
+    report.partition = dist.partition_stats();
+    PrResult { ranks, deltas, report }
+}
+
 /// Compare two rank vectors with an L∞ tolerance.
 pub fn max_abs_diff(a: &[f32], b: &[f32]) -> f32 {
     assert_eq!(a.len(), b.len());
@@ -60,10 +130,184 @@ pub fn max_abs_diff(a: &[f32], b: &[f32]) -> f32 {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::amt::NetConfig;
+    use crate::graph::{generators, PartitionKind};
+
+    fn det() -> SimConfig {
+        SimConfig::deterministic(NetConfig::default())
+    }
 
     #[test]
     fn max_abs_diff_basics() {
         assert_eq!(max_abs_diff(&[1.0, 2.0], &[1.5, 2.0]), 0.5);
         assert_eq!(max_abs_diff(&[], &[]), 0.0);
+    }
+
+    #[test]
+    fn bsp_matches_sequential_oracle() {
+        for (scale, p) in [(6u32, 1u32), (6, 2), (7, 4), (7, 8)] {
+            let g = generators::urand_directed(scale, 6, 42 + p as u64);
+            let params = PrParams { alpha: 0.85, iterations: 15 };
+            let want = sequential::pagerank(&g, params);
+            let dist = DistGraph::block(&g, p);
+            let res = run_bsp(&dist, params, det());
+            assert!(
+                max_abs_diff(&res.ranks, &want) < 1e-5,
+                "scale={scale} p={p} diff={}",
+                max_abs_diff(&res.ranks, &want)
+            );
+        }
+    }
+
+    #[test]
+    fn every_flush_policy_matches_oracle() {
+        let g = generators::urand_directed(6, 6, 23);
+        let params = PrParams { alpha: 0.85, iterations: 12 };
+        let want = sequential::pagerank(&g, params);
+        let dist = DistGraph::block(&g, 4);
+        for policy in [
+            FlushPolicy::Unbatched,
+            FlushPolicy::Items(1),
+            FlushPolicy::Items(8),
+            FlushPolicy::Items(64),
+            FlushPolicy::Bytes(256),
+            FlushPolicy::Adaptive,
+            FlushPolicy::Manual,
+        ] {
+            let res = run_async(&dist, params, policy, det());
+            assert!(max_abs_diff(&res.ranks, &want) < 1e-5, "{policy:?}");
+        }
+    }
+
+    #[test]
+    fn both_engines_match_oracle_under_every_partition_scheme() {
+        let g = generators::kron(7, 6, 51);
+        let params = PrParams { alpha: 0.85, iterations: 10 };
+        let want = sequential::pagerank(&g, params);
+        for kind in PartitionKind::all() {
+            for p in [2u32, 4, 8] {
+                let dist = DistGraph::build_with(&g, kind.build(&g, p));
+                for (name, res) in [
+                    ("bsp", run_bsp(&dist, params, det())),
+                    ("async", run_async(&dist, params, FlushPolicy::Adaptive, det())),
+                ] {
+                    assert!(
+                        max_abs_diff(&res.ranks, &want) < 1e-4,
+                        "{name} {kind:?} p={p} diff={}",
+                        max_abs_diff(&res.ranks, &want)
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn one_barrier_per_iteration() {
+        let g = generators::urand_directed(6, 4, 1);
+        let dist = DistGraph::block(&g, 4);
+        let params = PrParams { alpha: 0.85, iterations: 12 };
+        assert_eq!(run_bsp(&dist, params, det()).report.barriers, 12);
+        assert_eq!(
+            run_async(&dist, params, FlushPolicy::Adaptive, det()).report.barriers,
+            12
+        );
+    }
+
+    #[test]
+    fn unbatched_sends_one_message_per_remote_edge() {
+        let g = generators::complete(16);
+        let dist = DistGraph::block(&g, 4);
+        let params = PrParams { alpha: 0.85, iterations: 1 };
+        let res = run_async(&dist, params, FlushPolicy::Unbatched, det());
+        // complete(16) over 4 localities: each vertex has 12 remote
+        // neighbors -> 16 * 12 remote edges.
+        assert_eq!(res.report.net.messages, 16 * 12);
+        assert_eq!(res.report.net.envelopes, 16 * 12);
+        assert_eq!(res.report.agg.envelopes, 16 * 12);
+    }
+
+    #[test]
+    fn bsp_batches_one_envelope_per_destination_pair() {
+        let g = generators::complete(32); // all-to-all traffic
+        let dist = DistGraph::block(&g, 4);
+        let params = PrParams { alpha: 0.85, iterations: 3 };
+        let res = run_bsp(&dist, params, det());
+        // per iteration: each of 4 localities sends to 3 others.
+        assert_eq!(res.report.net.envelopes, 3 * 4 * 3);
+    }
+
+    #[test]
+    fn manual_drain_reproduces_bsp_envelope_schedule() {
+        // Maximal batching: exactly one envelope per non-empty destination
+        // pair per iteration, the same wire schedule the BSP engine
+        // produces.
+        let g = generators::urand_directed(7, 8, 31);
+        let dist = DistGraph::block(&g, 4);
+        let params = PrParams { alpha: 0.85, iterations: 5 };
+        let manual = run_async(&dist, params, FlushPolicy::Manual, det());
+        let bsp = run_bsp(&dist, params, det());
+        assert_eq!(manual.report.net.envelopes, bsp.report.net.envelopes);
+        assert_eq!(manual.report.agg.envelopes, manual.report.net.envelopes);
+    }
+
+    #[test]
+    fn manual_drain_sends_far_fewer_envelopes_than_unbatched() {
+        let g = generators::urand_directed(7, 8, 29);
+        let dist = DistGraph::block(&g, 4);
+        let params = PrParams { alpha: 0.85, iterations: 3 };
+        let naive = run_async(&dist, params, FlushPolicy::Unbatched, det());
+        let opt = run_async(&dist, params, FlushPolicy::Manual, det());
+        assert!(opt.report.net.envelopes * 10 < naive.report.net.envelopes);
+        assert!(opt.report.makespan_us < naive.report.makespan_us);
+    }
+
+    #[test]
+    fn deltas_shrink() {
+        let g = generators::urand_directed(7, 6, 5);
+        let dist = DistGraph::block(&g, 4);
+        let params = PrParams { alpha: 0.85, iterations: 20 };
+        let res = run_bsp(&dist, params, det());
+        assert!(res.deltas.last().unwrap() < &res.deltas[0]);
+    }
+
+    #[test]
+    fn flush_accounting_matches_wire_traffic() {
+        // Every emitted batch is shipped as exactly one envelope, and
+        // every folded item reaches the wire exactly once: the aggregation
+        // counters in SimReport must equal the network counters.
+        let g = generators::urand_directed(6, 6, 37);
+        let dist = DistGraph::block(&g, 4);
+        let params = PrParams { alpha: 0.85, iterations: 4 };
+        for policy in [
+            FlushPolicy::Unbatched,
+            FlushPolicy::Items(16),
+            FlushPolicy::Adaptive,
+            FlushPolicy::Manual,
+        ] {
+            let res = run_async(&dist, params, policy, det());
+            assert_eq!(res.report.agg.envelopes, res.report.net.envelopes, "{policy:?}");
+            assert_eq!(res.report.agg.sent_items, res.report.net.messages, "{policy:?}");
+            assert_eq!(
+                res.report.agg.items,
+                res.report.agg.folded + res.report.agg.sent_items,
+                "{policy:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn threaded_update_matches_serial() {
+        let g = generators::urand_directed(7, 6, 9);
+        let dist = DistGraph::block(&g, 2);
+        let params = PrParams { alpha: 0.85, iterations: 10 };
+        let serial = run_bsp(&dist, params, det());
+        let threaded = run_bsp_with_executor(
+            &dist,
+            params,
+            det(),
+            Some(Arc::new(Executor::new(4))),
+            ChunkPolicy::Dynamic { chunk: 64 },
+        );
+        assert!(max_abs_diff(&serial.ranks, &threaded.ranks) < 1e-6);
     }
 }

@@ -1,0 +1,103 @@
+//! PageRank as a [`VertexProgram`] — the rank-style ([`Mode::Iterate`])
+//! exemplar. Messages are `rank/deg` contributions folded by sum; the
+//! engines decide *when* they travel and apply (the paper's §4.2 axis):
+//! the async engine applies on arrival and overlaps communication with the
+//! contribution phase, the BSP engine buffers to the barrier (strict
+//! Boost-style batching). [`VertexProgram::step_update`] is the damped
+//! rank update run at every iteration barrier.
+//!
+//! Mirror rows (vertex cuts) stash the master's per-iteration contribution
+//! via [`VertexProgram::apply_mirror`] — `inv_deg` becomes 1 so the row's
+//! signal is exactly the installed value — and the engines expand them
+//! inside the receiving handler, keeping replicated traffic in the same
+//! superstep.
+
+use crate::engine::{Mode, ProgramInfo, VertexProgram};
+use crate::graph::VertexId;
+
+use super::PrParams;
+
+/// Damped PageRank over a fixed iteration count (GAP convention).
+#[derive(Debug, Clone)]
+pub struct PrProgram {
+    /// Damping factor + iteration count.
+    pub params: PrParams,
+    /// Global vertex count (normalization).
+    pub n: usize,
+}
+
+/// Per-row PageRank state.
+#[derive(Debug, Clone)]
+pub struct PrState {
+    /// Current rank (owned rows) or the installed master contribution
+    /// (mirror rows, where `inv_deg == 1`).
+    pub rank: f32,
+    /// Accumulated incoming contributions this iteration.
+    pub acc: f32,
+    /// `1 / max(global out-degree, 1)`.
+    pub inv_deg: f32,
+}
+
+impl VertexProgram for PrProgram {
+    type State = PrState;
+    /// Summed contribution toward a vertex.
+    type Msg = f32;
+
+    fn info(&self) -> ProgramInfo {
+        ProgramInfo {
+            name: "pagerank",
+            mode: Mode::Iterate(self.params.iterations),
+            needs_weights: false,
+            ordered: false,
+            item_bytes: 8, // vertex id + contribution
+        }
+    }
+
+    fn init(&self, _v: VertexId, out_degree: u32) -> PrState {
+        PrState {
+            rank: 1.0 / self.n as f32,
+            acc: 0.0,
+            inv_deg: 1.0 / out_degree.max(1) as f32,
+        }
+    }
+
+    fn seed(&self, _v: VertexId) -> Option<f32> {
+        None // Iterate programs are driven by the engine's supersteps
+    }
+
+    fn combine(acc: &mut f32, new: f32) {
+        *acc += new;
+    }
+
+    fn beats(&self, _msg: &f32, _state: &PrState) -> bool {
+        true // contributions always accumulate
+    }
+
+    fn apply(&self, state: &mut PrState, msg: f32) -> bool {
+        state.acc += msg;
+        true
+    }
+
+    fn signal(&self, state: &PrState) -> f32 {
+        state.rank * state.inv_deg
+    }
+
+    fn along_edge(&self, _u: VertexId, sig: &f32, _w: f32) -> f32 {
+        *sig
+    }
+
+    fn apply_mirror(&self, state: &mut PrState, msg: f32) -> bool {
+        state.rank = msg;
+        state.inv_deg = 1.0;
+        true // always expand the mirror's share of the row
+    }
+
+    fn step_update(&self, state: &mut PrState) -> f32 {
+        let base = (1.0 - self.params.alpha) / self.n as f32;
+        let new = base + self.params.alpha * state.acc;
+        let delta = (new - state.rank).abs();
+        state.rank = new;
+        state.acc = 0.0;
+        delta
+    }
+}

@@ -1,57 +1,39 @@
 //! Single-source shortest paths — §6 future-work extension, in *three*
-//! distributed execution models.
+//! distributed execution models, all running one [`SsspProgram`] on the
+//! generic [`engine`](crate::engine) loops:
 //!
-//! Sequential oracle: binary-heap Dijkstra. Distributed engines:
-//!
-//! * **[`async_hpx`]** — asynchronous *label-correcting* relaxation (the
+//! * **[`run_async`]** — asynchronous *label-correcting* relaxation (the
 //!   natural HPX formulation — an improved tentative distance triggers
 //!   eager remote relaxations, termination is network quiescence);
-//! * **[`bsp`]** — a BSP Bellman-Ford-style superstep baseline mirroring
-//!   the BFS/PageRank pairing;
-//! * **[`delta`]** — delta-stepping with per-locality bucket arrays and a
-//!   distributed current-bucket barrier, the ordered middle ground the
+//! * **[`run_bsp`]** — BSP Bellman-Ford supersteps, the PBGL baseline;
+//! * **[`run_delta`]** — delta-stepping: the ordered bucket schedule the
 //!   "Anatomy of Large-Scale Distributed Graph Algorithms" analysis shows
-//!   dominates work efficiency. Δ = ∞ degenerates to the BSP Bellman-Ford
-//!   schedule; Δ → 0 approaches Dijkstra's ordering.
+//!   dominates work efficiency. Δ = ∞ degenerates to the BSP schedule;
+//!   Δ → 0 approaches Dijkstra's ordering. Mirror-aware in the engine, so
+//!   vertex-cut partitions are supported.
 //!
-//! All three route remote relaxations through the shared
-//! [`amt::aggregate`](crate::amt::aggregate) combiner (fold = min over
-//! tentative distances, keyed by the destination's master index from the
-//! shard ghost table), so every [`FlushPolicy`] applies uniformly: the
-//! async engine flushes by policy and drains at handler end, the BSP and
-//! delta engines drain once per superstep/phase. Every engine counts its
-//! relaxations into [`WorkStats`](crate::amt::WorkStats) so the
+//! All engines route remote relaxations through the shared
+//! [`amt::aggregate`](crate::amt::aggregate) min-fold combiners (keyed by
+//! the destination's master index from the shard ghost table) and count
+//! relaxations into [`WorkStats`](crate::amt::WorkStats), so the
 //! work-efficiency axis (total vs. useful relaxations) is measurable per
-//! run, not inferred from envelope counts.
-//!
-//! Partitioning: the async and BSP engines are scheme-generic (vertex
-//! cuts scatter master improvements to mirror rows); delta-stepping's
-//! bucket protocol assumes whole rows at the owner and is gated to
-//! mirror-free schemes.
+//! run.
 //!
 //! Engines read their weighted adjacency from the [`DistGraph`] shards,
 //! so the distributed graph must be built from the *weighted* Csr (the
-//! same one handed to the engines for oracle checks); unweighted graphs
+//! same one handed to the runners for oracle checks); unweighted graphs
 //! degenerate to unit weights (SSSP == hop count).
-//!
-//! The min-fold assumes a NaN-free total order on distances; graph build
-//! ([`Csr::from_edge_list`]) debug-asserts that weights are finite and
-//! non-negative, which makes `<` a total comparison on every tentative
-//! distance that can arise (sums of non-negative finite weights).
 
 use std::cmp::Reverse;
 use std::collections::BinaryHeap;
 
-use crate::amt::SimReport;
+use crate::amt::{FlushPolicy, SimConfig, SimReport};
+use crate::engine;
 use crate::graph::{Csr, DistGraph, VertexId};
 
-pub mod async_hpx;
-pub mod bsp;
-pub mod delta;
+pub mod program;
 
-pub use async_hpx::{run_async, run_async_with};
-pub use bsp::run_bsp;
-pub use delta::auto_delta;
+pub use program::SsspProgram;
 
 /// Result of a distributed SSSP run.
 #[derive(Debug)]
@@ -60,18 +42,6 @@ pub struct SsspResult {
     pub dist: Vec<f32>,
     /// Runtime report (includes relaxation counters in `report.work`).
     pub report: SimReport,
-}
-
-/// Per-item wire size: vertex id + distance.
-pub(crate) const ITEM_BYTES: usize = 8;
-
-/// Keep the smaller tentative distance. Relies on the graph-build
-/// guarantee that weights (and therefore path sums) are never NaN.
-pub(crate) fn min_f32(acc: &mut f32, d: f32) {
-    debug_assert!(!d.is_nan() && !acc.is_nan(), "SSSP distances must be NaN-free");
-    if d < *acc {
-        *acc = d;
-    }
 }
 
 /// The engines run on the shard adjacency, so the `DistGraph` must have
@@ -83,6 +53,89 @@ pub(crate) fn check_graph_matches(g: &Csr, dist_graph: &DistGraph) {
         g.m() == 0 || g.is_weighted() == dist_graph.is_weighted(),
         "build the DistGraph from the weighted Csr so the shards carry weights"
     );
+}
+
+fn to_result(run: engine::ProgramRun<f32>) -> SsspResult {
+    SsspResult { dist: run.states, report: run.report }
+}
+
+/// Run asynchronous label-correcting SSSP with the default
+/// [`FlushPolicy::Adaptive`] aggregation.
+pub fn run_async(g: &Csr, dist_graph: &DistGraph, source: VertexId, cfg: SimConfig) -> SsspResult {
+    run_async_with(g, dist_graph, source, FlushPolicy::Adaptive, cfg)
+}
+
+/// Run asynchronous label-correcting SSSP with an explicit flush policy.
+pub fn run_async_with(
+    g: &Csr,
+    dist_graph: &DistGraph,
+    source: VertexId,
+    policy: FlushPolicy,
+    cfg: SimConfig,
+) -> SsspResult {
+    check_graph_matches(g, dist_graph);
+    to_result(engine::run_async(SsspProgram { source }, dist_graph, policy, cfg))
+}
+
+/// Run BSP Bellman-Ford-style SSSP (per-superstep combiner drains).
+pub fn run_bsp(g: &Csr, dist_graph: &DistGraph, source: VertexId, cfg: SimConfig) -> SsspResult {
+    check_graph_matches(g, dist_graph);
+    to_result(engine::run_bsp(SsspProgram { source }, dist_graph, cfg))
+}
+
+/// Run delta-stepping SSSP with the [`auto_delta`] heuristic and the
+/// default [`FlushPolicy::Adaptive`] aggregation.
+pub fn run_delta(g: &Csr, dist_graph: &DistGraph, source: VertexId, cfg: SimConfig) -> SsspResult {
+    let delta = auto_delta(g);
+    run_delta_with(g, dist_graph, source, delta, FlushPolicy::Adaptive, cfg)
+}
+
+/// Run delta-stepping SSSP with an explicit Δ and flush policy.
+/// `delta` must be positive (`f32::INFINITY` ≡ Bellman-Ford). Works under
+/// every partition scheme, including vertex cuts (the engine's
+/// mirror-aware bucket protocol).
+pub fn run_delta_with(
+    g: &Csr,
+    dist_graph: &DistGraph,
+    source: VertexId,
+    delta: f32,
+    policy: FlushPolicy,
+    cfg: SimConfig,
+) -> SsspResult {
+    check_graph_matches(g, dist_graph);
+    to_result(engine::run_delta(SsspProgram { source }, dist_graph, delta, policy, cfg))
+}
+
+/// Δ auto-tuning heuristic: `Δ = w̄ / d̄` (mean edge weight over mean
+/// degree) — the Meyer–Sanders `Θ(1/d̄)` rule scaled to the weight
+/// distribution. On GAP-style weights bounded away from zero this
+/// typically classifies every edge heavy, i.e. bucket-Dijkstra with
+/// near-minimal relaxation counts. Returns `f32::INFINITY` (≡
+/// Bellman-Ford, a safe single bucket) for empty or degenerate graphs.
+/// The `sssp_delta` config key overrides it.
+pub fn auto_delta(g: &Csr) -> f32 {
+    let (n, m) = (g.n(), g.m());
+    if n == 0 || m == 0 {
+        return f32::INFINITY;
+    }
+    let avg_deg = m as f32 / n as f32;
+    let avg_w = if g.is_weighted() {
+        let mut sum = 0.0f64;
+        for u in 0..n as VertexId {
+            for (_, w) in g.neighbors_weighted(u) {
+                sum += w as f64;
+            }
+        }
+        (sum / m as f64) as f32
+    } else {
+        1.0
+    };
+    let d = avg_w / avg_deg;
+    if d.is_finite() && d > 0.0 {
+        d
+    } else {
+        f32::INFINITY
+    }
 }
 
 /// Sequential Dijkstra oracle (non-negative weights).
@@ -115,7 +168,7 @@ pub fn dijkstra(g: &Csr, source: VertexId) -> Vec<f32> {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::amt::{FlushPolicy, NetConfig, SimConfig};
+    use crate::amt::NetConfig;
     use crate::graph::generators;
     use crate::graph::PartitionKind;
 
@@ -139,7 +192,7 @@ mod tests {
             let g = weighted_graph(6, 31 + p as u64);
             let want = dijkstra(&g, 0);
             let d = DistGraph::block(&g, p);
-            let res = run_async(&g, &d, 0, SimConfig::deterministic(NetConfig::default()));
+            let res = run_async(&g, &d, 0, det());
             assert!(close(&res.dist, &want), "p={p}");
         }
     }
@@ -166,13 +219,14 @@ mod tests {
             let g = weighted_graph(6, 77 + p as u64);
             let want = dijkstra(&g, 0);
             let d = DistGraph::block(&g, p);
-            let res = run_bsp(&g, &d, 0, SimConfig::deterministic(NetConfig::default()));
+            let res = run_bsp(&g, &d, 0, det());
             assert!(close(&res.dist, &want), "p={p}");
         }
     }
 
     #[test]
-    fn async_and_bsp_match_dijkstra_under_every_partition_scheme() {
+    fn every_engine_matches_dijkstra_under_every_partition_scheme() {
+        // Includes the previously gated combination: delta × vertex cut.
         let g = generators::with_random_weights(&generators::kron(6, 5, 71), 1.0, 10.0, 72);
         let want = dijkstra(&g, 0);
         for kind in PartitionKind::all() {
@@ -182,6 +236,8 @@ mod tests {
                 assert!(close(&a.dist, &want), "async {kind:?} p={p}");
                 let b = run_bsp(&g, &d, 0, det());
                 assert!(close(&b.dist, &want), "bsp {kind:?} p={p}");
+                let dl = run_delta(&g, &d, 0, det());
+                assert!(close(&dl.dist, &want), "delta {kind:?} p={p}");
             }
         }
     }
@@ -192,7 +248,22 @@ mod tests {
         let want = dijkstra(&g, 0);
         let d = DistGraph::block(&g, 4);
         for delta_v in [0.1f32, 0.7, 2.0, 8.0, f32::INFINITY] {
-            let res = delta::run_with(&g, &d, 0, delta_v, FlushPolicy::Adaptive, det());
+            let res = run_delta_with(&g, &d, 0, delta_v, FlushPolicy::Adaptive, det());
+            assert!(close(&res.dist, &want), "delta={delta_v}");
+        }
+    }
+
+    #[test]
+    fn delta_under_vertex_cut_matches_dijkstra() {
+        // The tentpole acceptance point: the bucket schedule's mirror
+        // protocol (settle-scatter + heavy-expand + vote-after-quiescence)
+        // yields exact distances on a mirroring partition.
+        let g = generators::with_random_weights(&generators::kron(6, 6, 43), 1.0, 10.0, 44);
+        let d = DistGraph::build_with(&g, PartitionKind::VertexCut.build(&g, 4));
+        assert!(d.has_mirrors(), "kron@4 vertex cut should mirror");
+        let want = dijkstra(&g, 0);
+        for delta_v in [0.5f32, 2.0, f32::INFINITY] {
+            let res = run_delta_with(&g, &d, 0, delta_v, FlushPolicy::Adaptive, det());
             assert!(close(&res.dist, &want), "delta={delta_v}");
         }
     }
@@ -203,7 +274,7 @@ mod tests {
         // per superstep, so wire items never exceed aggregation input.
         let g = weighted_graph(6, 91);
         let d = DistGraph::block(&g, 4);
-        let res = run_bsp(&g, &d, 0, SimConfig::deterministic(NetConfig::default()));
+        let res = run_bsp(&g, &d, 0, det());
         assert_eq!(res.report.agg.sent_items + res.report.agg.folded, res.report.agg.items);
         assert_eq!(res.report.agg.envelopes, res.report.agg.drain_flushes);
     }
@@ -212,11 +283,10 @@ mod tests {
     fn engines_report_relaxation_counters() {
         let g = weighted_graph(6, 17);
         let d = DistGraph::block(&g, 4);
-        let delta_v = auto_delta(&g);
         for res in [
             run_async(&g, &d, 0, det()),
             run_bsp(&g, &d, 0, det()),
-            delta::run_with(&g, &d, 0, delta_v, FlushPolicy::Adaptive, det()),
+            run_delta(&g, &d, 0, det()),
         ] {
             let w = res.report.work;
             assert!(w.relaxations > 0, "no relaxations counted");
@@ -225,6 +295,30 @@ mod tests {
             let reached = res.dist.iter().filter(|d| d.is_finite()).count() as u64;
             assert!(w.useful_relaxations >= reached - 1, "{w:?}, reached {reached}");
         }
+    }
+
+    #[test]
+    fn auto_delta_scales_with_weight_and_degree() {
+        let g = generators::with_random_weights(&generators::path(64), 2.0, 2.0 + 1e-6, 3);
+        // path: avg degree ~2, weights ~2 -> delta ~1.
+        let d = auto_delta(&g);
+        assert!(d > 0.5 && d < 2.0, "delta {d}");
+        // Unweighted graphs fall back to unit weights.
+        let du = auto_delta(&generators::path(64));
+        assert!(du > 0.25 && du < 1.0, "delta {du}");
+        // Degenerate graphs get the safe single-bucket delta.
+        assert_eq!(
+            auto_delta(&Csr::from_edge_list(&crate::graph::EdgeList::new(0))),
+            f32::INFINITY
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "delta must be positive")]
+    fn zero_delta_is_rejected() {
+        let g = generators::with_random_weights(&generators::path(4), 1.0, 2.0, 1);
+        let d = DistGraph::block(&g, 2);
+        run_delta_with(&g, &d, 0, 0.0, FlushPolicy::Adaptive, det());
     }
 
     #[test]
@@ -242,7 +336,7 @@ mod tests {
         el.push_weighted(0, 1, 1.0);
         let g = Csr::from_edge_list(&el);
         let d = DistGraph::block(&g, 2);
-        let res = run_async(&g, &d, 0, SimConfig::deterministic(NetConfig::default()));
+        let res = run_async(&g, &d, 0, det());
         assert_eq!(res.dist[1], 1.0);
         assert!(res.dist[2].is_infinite());
     }

@@ -1,0 +1,76 @@
+//! SSSP as a [`VertexProgram`]: states and messages are tentative
+//! distances, folded by min. The same ~60 lines run on all three engines —
+//! asynchronous label-correcting, BSP Bellman-Ford supersteps, and the
+//! ordered bucket schedule (delta-stepping), including under vertex cuts.
+//!
+//! The min-fold assumes a NaN-free total order on distances; graph build
+//! ([`Csr::from_edge_list`](crate::graph::Csr::from_edge_list))
+//! debug-asserts that weights are finite and non-negative, which makes `<`
+//! a total comparison on every tentative distance that can arise (sums of
+//! non-negative finite weights).
+
+use crate::engine::{Mode, ProgramInfo, VertexProgram};
+use crate::graph::VertexId;
+
+/// Label-correcting SSSP from a source vertex.
+#[derive(Debug, Clone)]
+pub struct SsspProgram {
+    /// Source vertex.
+    pub source: VertexId,
+}
+
+impl VertexProgram for SsspProgram {
+    /// Tentative distance (`f32::INFINITY` = unreached).
+    type State = f32;
+    type Msg = f32;
+
+    fn info(&self) -> ProgramInfo {
+        ProgramInfo {
+            name: "sssp",
+            mode: Mode::Converge,
+            needs_weights: true,
+            ordered: true, // distances are a path metric: delta applies
+            item_bytes: 8, // vertex id + distance
+        }
+    }
+
+    fn init(&self, _v: VertexId, _out_degree: u32) -> f32 {
+        f32::INFINITY
+    }
+
+    fn seed(&self, v: VertexId) -> Option<f32> {
+        (v == self.source).then_some(0.0)
+    }
+
+    fn combine(acc: &mut f32, new: f32) {
+        debug_assert!(!new.is_nan() && !acc.is_nan(), "SSSP distances must be NaN-free");
+        if new < *acc {
+            *acc = new;
+        }
+    }
+
+    fn beats(&self, msg: &f32, state: &f32) -> bool {
+        msg < state
+    }
+
+    fn apply(&self, state: &mut f32, msg: f32) -> bool {
+        if msg < *state {
+            *state = msg;
+            true
+        } else {
+            false
+        }
+    }
+
+    fn signal(&self, state: &f32) -> f32 {
+        *state
+    }
+
+    fn along_edge(&self, _u: VertexId, sig: &f32, w: f32) -> f32 {
+        sig + w
+    }
+
+    fn priority(&self, msg: &f32) -> f32 {
+        *msg
+    }
+}

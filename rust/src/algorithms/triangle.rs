@@ -167,11 +167,12 @@ impl Actor for TriActor {
 
 /// Run the distributed triangle count.
 pub fn run(dist: &DistGraph, cfg: SimConfig) -> TriangleResult {
-    assert!(
-        !dist.has_mirrors(),
-        "triangle counting needs whole rows at the owner; use a mirror-free partition \
-         scheme (block|edge_balanced|hash)"
-    );
+    // Coordinator callers reject this combination gracefully up front;
+    // the re-check here turns direct library misuse into a clear panic
+    // instead of silently wrong counts over unexpanded mirror rows.
+    if let Err(e) = crate::engine::require_mirror_free(dist, "triangle counting") {
+        panic!("{e}");
+    }
     let dist = Arc::new(dist.clone());
     let actors: Vec<TriActor> = dist
         .shards

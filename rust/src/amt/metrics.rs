@@ -90,8 +90,8 @@ pub struct SimReport {
     /// algorithm drivers merge their actors' [`WorkStats`] in after the run.
     pub work: WorkStats,
     /// Partition quality of the distributed graph (defaults to the perfect
-    /// 1.0 factors; drivers overwrite it from the built [`DistGraph`]
-    /// (crate::graph::DistGraph)).
+    /// 1.0 factors; drivers overwrite it from the built
+    /// [`DistGraph`](crate::graph::DistGraph)).
     pub partition: PartitionStats,
 }
 

@@ -21,7 +21,7 @@ pub struct Args {
 }
 
 /// Boolean switches that take no value.
-const SWITCHES: &[&str] = &["help", "aggregate", "quiet", "validate"];
+const SWITCHES: &[&str] = &["help", "aggregate", "quiet", "validate", "json"];
 
 impl Args {
     /// Parse from raw tokens (without argv[0]).
@@ -93,12 +93,17 @@ COMMANDS:
     bfs         run one distributed BFS (--engine async|bsp|diropt)
     pagerank    run one distributed PageRank (--engine async|async-naive|bsp|kernel)
     sssp        run one distributed SSSP (--engine delta|async|bsp); reports
-                relaxation counters (total vs useful)
+                relaxation counters (total vs useful); every engine is
+                partition-generic, vertex cuts included
+    cc          run one distributed connected-components pass
+                (--engine bsp|async)
     fig1        regenerate Figure 1 (BFS speedup sweep, HPX vs Boost/BSP)
     fig2        regenerate Figure 2 (PageRank sweep, HPX naive/opt vs Boost/BSP)
     ablations   run the DESIGN.md ablation suite (A1 aggregation, A2 chunking,
                 A4 amt::aggregate flush policies, A5 delta-stepping
-                delta x flush-policy sweep, A6 partition schemes x algorithms)
+                delta x flush-policy sweep, A6 partition schemes x algorithms);
+                --json additionally writes machine-readable tables to
+                bench_out/*.json (--out-dir overrides the directory)
     info        print graph statistics for the configured generator
     help        show this message
 
@@ -115,6 +120,8 @@ FLAGS:
     --config <file>    key=value config file (overrides applied after)
     --engine <name>    algorithm engine (see per-command lists above)
     --out <file>       write the result table as CSV
+    --out-dir <dir>    output directory for `ablations --json` (default bench_out)
+    --json             also write ablation tables as JSON (ablations only)
     --validate         validate results against the sequential oracle
 ";
 
@@ -139,6 +146,14 @@ mod tests {
         let a = Args::parse(&toks("bfs --validate --engine bsp")).unwrap();
         assert!(a.switch("validate"));
         assert_eq!(a.flag("engine"), Some("bsp"));
+    }
+
+    #[test]
+    fn json_is_a_switch_and_out_dir_takes_a_value() {
+        let a = Args::parse(&toks("ablations --json --out-dir results scale=8")).unwrap();
+        assert!(a.switch("json"));
+        assert_eq!(a.flag("out-dir"), Some("results"));
+        assert_eq!(a.overrides, vec!["scale=8"]);
     }
 
     #[test]

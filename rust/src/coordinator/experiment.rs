@@ -94,13 +94,13 @@ pub fn fig1_bfs(cfg: &Config) -> Result<(Table, Vec<Point>)> {
             // combiners); coalescing happens in the runtime's parcelport,
             // which hpx_cfg models. Keep the app level Unbatched so this
             // figure measures what the paper measured.
-            let a = bfs::async_hpx::run_with_policy(
+            let a = bfs::run_async_with(
                 &dist,
                 cfg.root,
                 FlushPolicy::Unbatched,
                 hpx_cfg(&cfg.net),
             );
-            let b = bfs::level_sync::run(&dist, cfg.root, sim_cfg(&cfg.net, false));
+            let b = bfs::run_bsp(&dist, cfg.root, sim_cfg(&cfg.net, false));
             for (slot, res) in [(0, a), (1, b)] {
                 let m = res.report.makespan_us;
                 if best[slot].as_ref().map(|(t, _)| m < *t).unwrap_or(true) {
@@ -162,12 +162,7 @@ pub fn fig2_pagerank(cfg: &Config) -> Result<(Table, Vec<Point>)> {
             Box::new({
                 let net = cfg.net.clone();
                 move |d| {
-                    pagerank::async_hpx::run(
-                        d,
-                        params,
-                        FlushPolicy::Unbatched,
-                        sim_cfg(&net, false),
-                    )
+                    pagerank::run_async(d, params, FlushPolicy::Unbatched, sim_cfg(&net, false))
                 }
             }),
         ),
@@ -179,12 +174,7 @@ pub fn fig2_pagerank(cfg: &Config) -> Result<(Table, Vec<Point>)> {
                     // Chunked combiner flushes, each shipped eagerly as its
                     // own parcel (no handler-level re-merge): the overlap
                     // knob that got the paper's prototype close to Boost.
-                    pagerank::async_hpx::run(
-                        d,
-                        params,
-                        FlushPolicy::Items(1024),
-                        sim_cfg(&net, false),
-                    )
+                    pagerank::run_async(d, params, FlushPolicy::Items(1024), sim_cfg(&net, false))
                 }
             }),
         ),
@@ -192,7 +182,7 @@ pub fn fig2_pagerank(cfg: &Config) -> Result<(Table, Vec<Point>)> {
             "Boost",
             Box::new({
                 let net = cfg.net.clone();
-                move |d| pagerank::bsp::run(d, params, sim_cfg(&net, false))
+                move |d| pagerank::run_bsp(d, params, sim_cfg(&net, false))
             }),
         ),
     ];
@@ -249,7 +239,7 @@ pub fn ablation_aggregation(cfg: &Config) -> Result<Table> {
             for (i, agg) in [(0, false), (1, true)] {
                 // App-level combiners stay Unbatched in both arms: A1
                 // isolates the engine's handler-level send aggregation.
-                let r = bfs::async_hpx::run_with_policy(
+                let r = bfs::run_async_with(
                     &dist,
                     cfg.root,
                     FlushPolicy::Unbatched,
@@ -309,7 +299,7 @@ pub fn ablation_flush_policy(cfg: &Config) -> Result<Table> {
         let mut best: Option<SimReport> = None;
         let mut diff = 0.0f32;
         for _ in 0..cfg.reps.max(1) {
-            let r = pagerank::async_hpx::run(&dist, params, policy, sim_cfg(&cfg.net, false));
+            let r = pagerank::run_async(&dist, params, policy, sim_cfg(&cfg.net, false));
             diff = pagerank::max_abs_diff(&r.ranks, &want);
             if best.as_ref().map(|b| r.report.makespan_us < b.makespan_us).unwrap_or(true) {
                 best = Some(r.report);
@@ -357,7 +347,7 @@ pub fn ablation_adaptive_chunk(cfg: &Config) -> Result<Table> {
         let ex = Arc::new(Executor::new(0));
         let mut best: Option<SimReport> = None;
         for _ in 0..cfg.reps.max(1) {
-            let r = pagerank::bsp::run_with_executor(
+            let r = pagerank::run_bsp_with_executor(
                 &dist,
                 params,
                 sim_cfg(&cfg.net, false),
@@ -389,8 +379,8 @@ pub fn extensions(cfg: &Config) -> Result<Table> {
     let delta = if cfg.sssp_delta > 0.0 { cfg.sssp_delta } else { sssp::auto_delta(&gw) };
     anyhow::ensure!(
         cfg.partition != PartitionKind::VertexCut,
-        "the extensions sweep includes delta-stepping and triangle counting, which need a \
-         mirror-free partition; set partition=block|edge_balanced|hash"
+        "the extensions sweep includes triangle counting, which needs a mirror-free \
+         partition; set partition=block|edge_balanced|hash"
     );
     let mut table = Table::new(
         format!("Extensions — SSSP / CC / triangles on {}", cfg.graph_name()),
@@ -405,7 +395,7 @@ pub fn extensions(cfg: &Config) -> Result<Table> {
         // under the HPX parcel-coalescing config like the async BFS.
         let s_async = sssp::run_async(&gw, &distw, cfg.root, hpx_cfg(&cfg.net));
         let s_bsp = sssp::run_bsp(&gw, &distw, cfg.root, sim_cfg(&cfg.net, false));
-        let s_delta = sssp::delta::run_with(
+        let s_delta = sssp::run_delta_with(
             &gw,
             &distw,
             cfg.root,
@@ -441,11 +431,6 @@ pub fn ablation_delta_stepping(cfg: &Config) -> Result<Table> {
     let g = cfg.build_graph()?;
     let gw = generators::with_random_weights(&g, 1.0, 10.0, cfg.seed + 1);
     let p = cfg.localities.iter().cloned().filter(|&x| x <= 8).max().unwrap_or(8);
-    anyhow::ensure!(
-        cfg.partition != PartitionKind::VertexCut,
-        "delta-stepping needs a mirror-free partition; set partition=block|edge_balanced|hash \
-         (A6 covers the vertex-cut axis)"
-    );
     let dist = DistGraph::build_with(&gw, cfg.partition.build(&gw, p));
     let want = sssp::dijkstra(&gw, cfg.root);
     let auto = if cfg.sssp_delta > 0.0 { cfg.sssp_delta } else { sssp::auto_delta(&gw) };
@@ -499,7 +484,7 @@ pub fn ablation_delta_stepping(cfg: &Config) -> Result<Table> {
             let mut best: Option<SimReport> = None;
             let mut err = 0.0f32;
             for _ in 0..cfg.reps.max(1) {
-                let r = sssp::delta::run_with(
+                let r = sssp::run_delta_with(
                     &gw,
                     &dist,
                     cfg.root,
@@ -525,19 +510,22 @@ pub fn ablation_delta_stepping(cfg: &Config) -> Result<Table> {
 
 /// Ablation A6: partition scheme × algorithm. Runs every
 /// [`PartitionKind`] against one engine per algorithm family — async BFS,
-/// async PageRank, BSP CC, BSP SSSP (all scheme-generic) — at the largest
-/// locality count ≤ 8, validating each result against its sequential
-/// oracle and reporting modeled time, envelope counts, and the partition
-/// quality columns (vertex/edge imbalance, replication factor). This is
-/// the experiment the tentpole exists for: on skewed inputs the vertex
-/// cut trades replication traffic for the edge balance the 1-D block
-/// layout cannot reach.
+/// async PageRank, BSP CC, BSP SSSP, and delta SSSP (all scheme-generic
+/// since the engine redesign, delta included) — at the largest locality
+/// count ≤ 8, validating each result against its sequential oracle and
+/// reporting modeled time, envelope counts, and the partition quality
+/// columns (vertex/edge imbalance, replication factor). This is the
+/// experiment the partition tentpole exists for: on skewed inputs the
+/// vertex cut trades replication traffic for the edge balance the 1-D
+/// block layout cannot reach — and the `sssp-delta × vertex_cut` row is
+/// the combination the engine redesign un-gated.
 pub fn ablation_partition_schemes(cfg: &Config) -> Result<Table> {
     use crate::algorithms::{cc, sssp};
     use crate::graph::generators;
 
     let g = cfg.build_graph()?;
     let gw = generators::with_random_weights(&g, 1.0, 10.0, cfg.seed + 1);
+    let delta = if cfg.sssp_delta > 0.0 { cfg.sssp_delta } else { sssp::auto_delta(&gw) };
     let p = cfg.localities.iter().cloned().filter(|&x| x <= 8).max().unwrap_or(8);
     let params = PrParams { alpha: cfg.alpha, iterations: cfg.iterations };
     let pr_want = pagerank::sequential::pagerank(&g, params);
@@ -557,7 +545,7 @@ pub fn ablation_partition_schemes(cfg: &Config) -> Result<Table> {
         let distw = DistGraph::build_with(&gw, kind.build(&gw, p));
         let mut rows: Vec<(&str, Option<SimReport>)> = Vec::new();
         for _ in 0..cfg.reps.max(1) {
-            let r = bfs::async_hpx::run_with_policy(
+            let r = bfs::run_async_with(
                 &dist,
                 cfg.root,
                 cfg.flush_policy,
@@ -568,7 +556,7 @@ pub fn ablation_partition_schemes(cfg: &Config) -> Result<Table> {
             keep_best(&mut rows, "bfs-async", r.report);
 
             let r =
-                pagerank::async_hpx::run(&dist, params, cfg.flush_policy, sim_cfg(&cfg.net, false));
+                pagerank::run_async(&dist, params, cfg.flush_policy, sim_cfg(&cfg.net, false));
             let diff = pagerank::max_abs_diff(&r.ranks, &pr_want);
             anyhow::ensure!(diff < 1e-3, "A6: PageRank diverges under {} ({diff})", kind.name());
             keep_best(&mut rows, "pagerank-async", r.report);
@@ -577,12 +565,31 @@ pub fn ablation_partition_schemes(cfg: &Config) -> Result<Table> {
             anyhow::ensure!(r.labels == cc_want, "A6: CC labels diverge under {}", kind.name());
             keep_best(&mut rows, "cc-bsp", r.report);
 
+            let sssp_ok = |dist: &[f32]| {
+                dist.iter().zip(&sssp_want).all(|(a, b)| {
+                    (a.is_infinite() && b.is_infinite()) || (a - b).abs() < 1e-3
+                })
+            };
             let r = sssp::run_bsp(&gw, &distw, cfg.root, sim_cfg(&cfg.net, false));
-            let ok = r.dist.iter().zip(&sssp_want).all(|(a, b)| {
-                (a.is_infinite() && b.is_infinite()) || (a - b).abs() < 1e-3
-            });
-            anyhow::ensure!(ok, "A6: SSSP distances diverge under {}", kind.name());
+            anyhow::ensure!(sssp_ok(&r.dist), "A6: SSSP distances diverge under {}", kind.name());
             keep_best(&mut rows, "sssp-bsp", r.report);
+
+            // The row the engine redesign un-gated: the ordered bucket
+            // schedule under every scheme, vertex cut included.
+            let r = sssp::run_delta_with(
+                &gw,
+                &distw,
+                cfg.root,
+                delta,
+                cfg.flush_policy,
+                sim_cfg(&cfg.net, false),
+            );
+            anyhow::ensure!(
+                sssp_ok(&r.dist),
+                "A6: delta SSSP distances diverge under {}",
+                kind.name()
+            );
+            keep_best(&mut rows, "sssp-delta", r.report);
         }
         for (algo, report) in rows {
             let r = report.unwrap();

@@ -1,5 +1,10 @@
 //! Experiment coordinator: the leader-side driver tying together graph
-//! construction, partitioning, the simulated runtime, and result reporting.
+//! construction, partitioning, the simulated runtime, and result
+//! reporting. Single-run commands dispatch `program × engine × partition
+//! scheme` through the [`engine`](crate::engine) API; unsupported
+//! combinations are rejected up front with
+//! [`engine::require_mirror_free`](crate::engine::require_mirror_free)'s
+//! uniform error.
 //!
 //! The CLI (`main.rs`) and the bench binaries (`rust/benches/`) both call
 //! into this module, so a paper figure is regenerated identically whether
@@ -8,9 +13,10 @@
 pub mod experiment;
 pub mod report;
 
-use crate::algorithms::{bfs, pagerank, pagerank::PrParams};
+use crate::algorithms::{bfs, cc, pagerank, pagerank::PrParams};
 use crate::amt::{FlushPolicy, SimConfig};
 use crate::config::Config;
+use crate::engine::require_mirror_free;
 use crate::graph::{Csr, DistGraph};
 use crate::Result;
 
@@ -20,17 +26,19 @@ pub use report::Table;
 /// Which engine executes a single-run command.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Engine {
-    /// Asynchronous HPX-style.
+    /// Asynchronous HPX-style (generic async engine).
     Async,
-    /// Naive asynchronous (PageRank only).
+    /// Naive asynchronous (PageRank only: `FlushPolicy::Unbatched`).
     AsyncNaive,
-    /// BSP / distributed-BGL baseline.
+    /// BSP / distributed-BGL baseline (generic BSP engine).
     Bsp,
-    /// Delta-stepping with distributed bucket coordination (SSSP only).
+    /// Ordered bucket schedule (SSSP only; scheme-generic since the
+    /// engine redesign — vertex cuts included).
     Delta,
-    /// Direction-optimizing BFS.
+    /// Direction-optimizing BFS (specialized; mirror-free schemes only).
     DirOpt,
-    /// Kernel-offloaded (PageRank only; needs artifacts).
+    /// Kernel-offloaded (PageRank only; needs artifacts and a contiguous
+    /// mirror-free scheme).
     Kernel,
 }
 
@@ -50,33 +58,31 @@ impl Engine {
 }
 
 /// Build the configured partition scheme and shard `g` over `p`
-/// localities; rejects scheme/engine combinations that cannot work.
-fn build_dist(cfg: &Config, g: &Csr, p: u32, needs_whole_rows: bool) -> Result<DistGraph> {
-    let dist = DistGraph::build_with(g, cfg.partition.build(g, p));
-    if needs_whole_rows && dist.has_mirrors() {
-        anyhow::bail!(
-            "partition `{}` produces mirror rows, which this engine cannot expand; \
-             use block|edge_balanced|hash",
-            cfg.partition.name()
-        );
+/// localities.
+fn build_dist(cfg: &Config, g: &Csr, p: u32) -> DistGraph {
+    DistGraph::build_with(g, cfg.partition.build(g, p))
+}
+
+fn sim(cfg: &Config) -> SimConfig {
+    SimConfig {
+        net: cfg.net.clone(),
+        aggregate_sends: cfg.aggregate,
+        ..SimConfig::default()
     }
-    Ok(dist)
 }
 
 /// Run a single distributed BFS with the chosen engine; optionally
 /// validates against the sequential oracle.
 pub fn run_bfs(cfg: &Config, p: u32, engine: Engine, validate: bool) -> Result<bfs::BfsResult> {
     let g = cfg.build_graph()?;
-    let dist = build_dist(cfg, &g, p, engine == Engine::DirOpt)?;
-    let sim = SimConfig {
-        net: cfg.net.clone(),
-        aggregate_sends: cfg.aggregate,
-        ..SimConfig::default()
-    };
+    let dist = build_dist(cfg, &g, p);
     let res = match engine {
-        Engine::Async => bfs::async_hpx::run_with_policy(&dist, cfg.root, cfg.flush_policy, sim),
-        Engine::Bsp => bfs::level_sync::run(&dist, cfg.root, sim),
-        Engine::DirOpt => bfs::direction_opt::run(&dist, cfg.root, sim),
+        Engine::Async => bfs::run_async_with(&dist, cfg.root, cfg.flush_policy, sim(cfg)),
+        Engine::Bsp => bfs::run_bsp(&dist, cfg.root, sim(cfg)),
+        Engine::DirOpt => {
+            require_mirror_free(&dist, "direction-optimizing BFS")?;
+            bfs::direction_opt::run(&dist, cfg.root, sim(cfg))
+        }
         other => anyhow::bail!("engine {other:?} does not implement BFS"),
     };
     if validate {
@@ -95,24 +101,20 @@ pub fn run_pagerank(
     validate: bool,
 ) -> Result<pagerank::PrResult> {
     let g = cfg.build_graph()?;
-    let dist = build_dist(cfg, &g, p, engine == Engine::Kernel)?;
+    let dist = build_dist(cfg, &g, p);
     let params = PrParams { alpha: cfg.alpha, iterations: cfg.iterations };
-    let sim = SimConfig {
-        net: cfg.net.clone(),
-        aggregate_sends: cfg.aggregate,
-        ..SimConfig::default()
-    };
     let res = match engine {
-        Engine::Async => pagerank::async_hpx::run(&dist, params, cfg.flush_policy, sim),
+        Engine::Async => pagerank::run_async(&dist, params, cfg.flush_policy, sim(cfg)),
         Engine::AsyncNaive => {
-            pagerank::async_hpx::run(&dist, params, FlushPolicy::Unbatched, sim)
+            pagerank::run_async(&dist, params, FlushPolicy::Unbatched, sim(cfg))
         }
-        Engine::Bsp => pagerank::bsp::run(&dist, params, sim),
+        Engine::Bsp => pagerank::run_bsp(&dist, params, sim(cfg)),
         Engine::Kernel => {
+            require_mirror_free(&dist, "kernel-offloaded PageRank")?;
             let engine = std::sync::Arc::new(std::sync::Mutex::new(
                 crate::runtime::Engine::load(&cfg.artifact_dir)?,
             ));
-            pagerank::kernel::run(&dist, params, sim, engine)?
+            pagerank::kernel::run(&dist, params, sim(cfg), engine)?
         }
         other => anyhow::bail!("engine {other:?} does not implement PageRank"),
     };
@@ -139,20 +141,15 @@ pub fn run_sssp(
 
     let g = cfg.build_graph()?;
     let gw = generators::with_random_weights(&g, 1.0, 10.0, cfg.seed + 1);
-    let dist = build_dist(cfg, &gw, p, engine == Engine::Delta)?;
-    let sim = SimConfig {
-        net: cfg.net.clone(),
-        aggregate_sends: cfg.aggregate,
-        ..SimConfig::default()
-    };
+    let dist = build_dist(cfg, &gw, p);
     let res = match engine {
-        Engine::Async => sssp::run_async_with(&gw, &dist, cfg.root, cfg.flush_policy, sim),
-        Engine::Bsp => sssp::run_bsp(&gw, &dist, cfg.root, sim),
+        Engine::Async => sssp::run_async_with(&gw, &dist, cfg.root, cfg.flush_policy, sim(cfg)),
+        Engine::Bsp => sssp::run_bsp(&gw, &dist, cfg.root, sim(cfg)),
         Engine::Delta => {
             // auto_delta scans every edge weight; only pay for it here.
             let delta =
                 if cfg.sssp_delta > 0.0 { cfg.sssp_delta } else { sssp::auto_delta(&gw) };
-            sssp::delta::run_with(&gw, &dist, cfg.root, delta, cfg.flush_policy, sim)
+            sssp::run_delta_with(&gw, &dist, cfg.root, delta, cfg.flush_policy, sim(cfg))
         }
         other => anyhow::bail!("engine {other:?} does not implement SSSP"),
     };
@@ -162,6 +159,23 @@ pub fn run_sssp(
             let ok = (got.is_infinite() && exp.is_infinite()) || (got - exp).abs() < 1e-3;
             anyhow::ensure!(ok, "SSSP validation failed at vertex {v}: {got} vs {exp}");
         }
+    }
+    Ok(res)
+}
+
+/// Run a single distributed connected-components pass with the chosen
+/// engine; optionally validates against the union-find oracle.
+pub fn run_cc(cfg: &Config, p: u32, engine: Engine, validate: bool) -> Result<cc::CcResult> {
+    let g = cfg.build_graph()?;
+    let dist = build_dist(cfg, &g, p);
+    let res = match engine {
+        Engine::Async => cc::run_async(&dist, cfg.flush_policy, sim(cfg)),
+        Engine::Bsp => cc::run(&dist, sim(cfg)),
+        other => anyhow::bail!("engine {other:?} does not implement CC"),
+    };
+    if validate {
+        let want = cc::union_find(&g);
+        anyhow::ensure!(res.labels == want, "CC validation failed: labels diverge");
     }
     Ok(res)
 }
@@ -206,6 +220,14 @@ mod tests {
     }
 
     #[test]
+    fn run_cc_both_engines_validate() {
+        let cfg = tiny_cfg();
+        for e in [Engine::Async, Engine::Bsp] {
+            run_cc(&cfg, 3, e, true).unwrap();
+        }
+    }
+
+    #[test]
     fn bfs_engine_rejects_kernel() {
         let cfg = tiny_cfg();
         assert!(run_bfs(&cfg, 2, Engine::Kernel, false).is_err());
@@ -227,21 +249,26 @@ mod tests {
             let mut cfg = tiny_cfg();
             cfg.partition = kind;
             run_bfs(&cfg, 4, Engine::Async, true).unwrap();
+            run_cc(&cfg, 4, Engine::Bsp, true).unwrap();
             cfg.generator = "urand-directed".into();
             run_pagerank(&cfg, 4, Engine::Bsp, true).unwrap();
             cfg.generator = "urand".into();
             run_sssp(&cfg, 4, Engine::Bsp, true).unwrap();
+            // Previously gated: the delta engine is scheme-generic now.
+            run_sssp(&cfg, 4, Engine::Delta, true).unwrap();
         }
     }
 
     #[test]
-    fn whole_row_engines_reject_vertex_cut() {
+    fn whole_row_engines_reject_vertex_cut_uniformly() {
         use crate::graph::PartitionKind;
         let mut cfg = tiny_cfg();
         cfg.generator = "kron".into(); // skewed -> the cut really mirrors
         cfg.partition = PartitionKind::VertexCut;
-        assert!(run_bfs(&cfg, 4, Engine::DirOpt, false).is_err());
-        assert!(run_sssp(&cfg, 4, Engine::Delta, false).is_err());
+        let err = run_bfs(&cfg, 4, Engine::DirOpt, false).unwrap_err().to_string();
+        assert!(err.contains("direction-optimizing BFS"), "{err}");
+        assert!(err.contains("vertex_cut"), "{err}");
+        assert!(err.contains("mirror-free"), "{err}");
     }
 
     #[test]

@@ -75,6 +75,74 @@ impl Table {
         std::fs::write(path, self.to_csv())?;
         Ok(())
     }
+
+    /// Render as machine-readable JSON: `{"title", "headers", "rows"}`
+    /// with rows as arrays of objects keyed by header, cell values emitted
+    /// as JSON numbers when they parse as one (no serde offline, so the
+    /// encoder is hand-rolled with full string escaping).
+    pub fn to_json(&self) -> String {
+        let mut out = String::from("{\n");
+        out.push_str(&format!("  \"title\": {},\n", json_string(&self.title)));
+        out.push_str("  \"headers\": [");
+        for (i, h) in self.headers.iter().enumerate() {
+            if i > 0 {
+                out.push_str(", ");
+            }
+            out.push_str(&json_string(h));
+        }
+        out.push_str("],\n  \"rows\": [\n");
+        for (r, row) in self.rows.iter().enumerate() {
+            out.push_str("    {");
+            for (i, (h, c)) in self.headers.iter().zip(row).enumerate() {
+                if i > 0 {
+                    out.push_str(", ");
+                }
+                out.push_str(&format!("{}: {}", json_string(h), json_value(c)));
+            }
+            out.push_str(if r + 1 < self.rows.len() { "},\n" } else { "}\n" });
+        }
+        out.push_str("  ]\n}\n");
+        out
+    }
+
+    /// Write JSON to a file, creating parent directories as needed.
+    pub fn write_json(&self, path: &str) -> Result<()> {
+        if let Some(dir) = std::path::Path::new(path).parent() {
+            if !dir.as_os_str().is_empty() {
+                std::fs::create_dir_all(dir)?;
+            }
+        }
+        std::fs::write(path, self.to_json())?;
+        Ok(())
+    }
+}
+
+/// JSON-escape a string (quotes, backslashes, control characters).
+fn json_string(s: &str) -> String {
+    let mut out = String::with_capacity(s.len() + 2);
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+    out
+}
+
+/// Emit a cell as a bare JSON number when it is one (perf trackers diff
+/// these files; `"12"` vs `12` matters), otherwise as an escaped string.
+fn json_value(cell: &str) -> String {
+    match cell.parse::<f64>() {
+        Ok(x) if x.is_finite() => cell.to_string(),
+        _ => json_string(cell),
+    }
 }
 
 /// Format microseconds human-readably (us / ms / s).
@@ -109,6 +177,33 @@ mod tests {
         let mut t = Table::new("demo", &["x", "y"]);
         t.row(vec!["1".into(), "2".into()]);
         assert_eq!(t.to_csv(), "x,y\n1,2\n");
+    }
+
+    #[test]
+    fn json_escapes_and_types_cells() {
+        let mut t = Table::new("demo \"quoted\"", &["policy", "envs", "time"]);
+        t.row(vec!["items:64".into(), "120".into(), "1.25ms".into()]);
+        let j = t.to_json();
+        assert!(j.contains("\"title\": \"demo \\\"quoted\\\"\""), "{j}");
+        // Numeric cells are bare numbers; others stay strings.
+        assert!(j.contains("\"envs\": 120"), "{j}");
+        assert!(j.contains("\"time\": \"1.25ms\""), "{j}");
+        assert!(j.contains("\"policy\": \"items:64\""), "{j}");
+        // Sanity: balanced braces/brackets.
+        assert_eq!(j.matches('{').count(), j.matches('}').count());
+        assert_eq!(j.matches('[').count(), j.matches(']').count());
+    }
+
+    #[test]
+    fn write_json_creates_parent_dirs() {
+        let mut t = Table::new("demo", &["x"]);
+        t.row(vec!["1".into()]);
+        let dir = std::env::temp_dir().join(format!("nwgraph_json_{}", std::process::id()));
+        let path = dir.join("nested").join("out.json");
+        t.write_json(path.to_str().unwrap()).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert!(text.contains("\"x\": 1"));
+        std::fs::remove_dir_all(&dir).ok();
     }
 
     #[test]

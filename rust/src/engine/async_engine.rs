@@ -1,0 +1,322 @@
+//! `AsyncEngine` — the asynchronous HPX-style execution loop, once.
+//!
+//! [`Mode::Converge`] programs run a label-correcting wavefront over the
+//! whole local row space (owned *and* ghost rows): messages queue on a
+//! priority heap ([`VertexProgram::priority`] order — the per-locality
+//! Dijkstra-wavefront trick that keeps unordered label-correcting from
+//! re-expanding whole subtrees), a winning application at an owned row
+//! scatters the row's signal to its mirrors, a winning application at a
+//! ghost row forwards it to the master, and every handler ends with a
+//! combiner drain so network quiescence — the engine's exact termination —
+//! can never strand buffered traffic. There are **no global barriers**.
+//!
+//! [`Mode::Iterate`] programs (rank-style) emit every owned row's signal
+//! per superstep, apply master-bound messages *on arrival* (communication
+//! overlaps the contribution phase — the paper's §4.2 contrast against
+//! BSP), expand mirror installs inside the receiving handler so replicated
+//! traffic lands in the same superstep, and advance state at the
+//! per-iteration barrier.
+
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
+use std::sync::Arc;
+
+use crate::amt::aggregate::{Aggregator, FlushPolicy};
+use crate::amt::sim::{Actor, Ctx, LocalityId, SimConfig, SimRuntime};
+use crate::amt::WorkStats;
+use crate::graph::{DistGraph, Shard};
+
+use super::program::{Mode, VertexProgram};
+use super::{finish, init_states, EngineMsg, ProgramRun};
+
+/// Pending wavefront entry: apply `msg` to `row` when popped. Min-ordered
+/// by (priority bits, insertion seq) — deterministic without requiring an
+/// order on `Msg` itself.
+struct HeapEntry<M> {
+    prio: u32,
+    seq: u64,
+    row: u32,
+    msg: M,
+}
+
+impl<M> PartialEq for HeapEntry<M> {
+    fn eq(&self, other: &Self) -> bool {
+        self.seq == other.seq
+    }
+}
+impl<M> Eq for HeapEntry<M> {}
+impl<M> PartialOrd for HeapEntry<M> {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl<M> Ord for HeapEntry<M> {
+    fn cmp(&self, other: &Self) -> Ordering {
+        // BinaryHeap is a max-heap; reverse for smallest-priority-first.
+        other.prio.cmp(&self.prio).then_with(|| other.seq.cmp(&self.seq))
+    }
+}
+
+struct AsyncActor<P: VertexProgram> {
+    prog: Arc<P>,
+    shard: Arc<Shard>,
+    mode: Mode,
+    state: Vec<P::State>,
+    /// Master-bound combiner (ghost-row improvements / remote emissions).
+    agg: Aggregator<P::Msg>,
+    /// Mirror-bound combiner (owned-row signals; idle under 1-D schemes).
+    mirror_agg: Aggregator<P::Msg>,
+    heap: BinaryHeap<HeapEntry<P::Msg>>,
+    seq: u64,
+    iter: u32,
+    deltas: Vec<f32>,
+    work: WorkStats,
+}
+
+impl<P: VertexProgram> AsyncActor<P> {
+    fn push(&mut self, row: usize, msg: P::Msg) {
+        let prio = self.prog.priority(&msg);
+        debug_assert!(prio >= 0.0, "priorities must be non-negative");
+        self.heap.push(HeapEntry { prio: prio.to_bits(), seq: self.seq, row: row as u32, msg });
+        self.seq += 1;
+    }
+
+    /// Queue proposals for `row`'s locally homed edges at its current
+    /// state (Converge: the ghost caches double as the send-dedup that
+    /// keeps the correcting flood finite).
+    fn expand_converge(&mut self, row: usize) {
+        let sig = self.prog.signal(&self.state[row]);
+        let u = self.shard.global_of(row);
+        let shard = Arc::clone(&self.shard);
+        for (t, w) in shard.row_edges(row) {
+            self.work.relaxations += 1;
+            let m = self.prog.along_edge(u, &sig, w);
+            if self.prog.beats(&m, &self.state[t as usize]) {
+                self.push(t as usize, m);
+            }
+        }
+    }
+
+    /// Emit `row`'s signal along its locally homed edges (Iterate: local
+    /// targets apply on the spot, remote targets fold into the
+    /// master-bound combiner and ship by policy).
+    fn expand_iterate(&mut self, ctx: &mut Ctx<EngineMsg<P::Msg>>, row: usize) {
+        let n_owned = self.shard.n_local();
+        let sig = self.prog.signal(&self.state[row]);
+        let u = self.shard.global_of(row);
+        let shard = Arc::clone(&self.shard);
+        for (t, w) in shard.row_edges(row) {
+            self.work.relaxations += 1;
+            let m = self.prog.along_edge(u, &sig, w);
+            let t = t as usize;
+            if t < n_owned {
+                // Iterate applies are unconditional accumulations, not
+                // improvements; useful_relaxations stays a Converge metric
+                // so work efficiency compares across engines.
+                let _ = self.prog.apply(&mut self.state[t], m);
+            } else {
+                let gi = t - n_owned;
+                let dst = shard.ghost_owner[gi];
+                if let Some(b) = self.agg.accumulate(dst, shard.ghost_master_index[gi], m) {
+                    ctx.send(dst, EngineMsg::ToMaster(b));
+                }
+            }
+        }
+    }
+
+    /// Drain the wavefront heap: apply pending messages in priority order,
+    /// route winning applications (mirror scatter from masters, master
+    /// forward from ghosts), and expand improved rows.
+    fn relax(&mut self, ctx: &mut Ctx<EngineMsg<P::Msg>>) {
+        let n_owned = self.shard.n_local();
+        let shard = Arc::clone(&self.shard);
+        while let Some(e) = self.heap.pop() {
+            let row = e.row as usize;
+            if !self.prog.beats(&e.msg, &self.state[row]) {
+                continue; // stale: a better value already landed
+            }
+            self.prog.apply(&mut self.state[row], e.msg);
+            let sig = self.prog.signal(&self.state[row]);
+            if row < n_owned {
+                self.work.useful_relaxations += 1;
+                for &(dst, gi) in shard.mirrors(row) {
+                    if let Some(b) = self.mirror_agg.accumulate(dst, gi, sig.clone()) {
+                        ctx.send(dst, EngineMsg::ToMirror(b));
+                    }
+                }
+            } else {
+                let gi = row - n_owned;
+                let dst = shard.ghost_owner[gi];
+                if let Some(b) = self.agg.accumulate(dst, shard.ghost_master_index[gi], sig) {
+                    ctx.send(dst, EngineMsg::ToMaster(b));
+                }
+            }
+            self.expand_converge(row);
+        }
+    }
+
+    /// Ship whatever the policies left buffered; called at handler end so
+    /// quiescence (or the superstep barrier) can never strand traffic.
+    fn drain(&mut self, ctx: &mut Ctx<EngineMsg<P::Msg>>) {
+        for (dst, b) in self.agg.drain() {
+            ctx.send(dst, EngineMsg::ToMaster(b));
+        }
+        for (dst, b) in self.mirror_agg.drain() {
+            ctx.send(dst, EngineMsg::ToMirror(b));
+        }
+    }
+
+    /// One Iterate superstep: every owned row scatters to its mirrors and
+    /// emits along its locally homed edges, then the phase drains and
+    /// waits at the iteration barrier.
+    fn iteration_phase(&mut self, ctx: &mut Ctx<EngineMsg<P::Msg>>) {
+        let n_owned = self.shard.n_local();
+        let shard = Arc::clone(&self.shard);
+        for u in 0..n_owned {
+            let sig = self.prog.signal(&self.state[u]);
+            for &(dst, gi) in shard.mirrors(u) {
+                if let Some(b) = self.mirror_agg.accumulate(dst, gi, sig.clone()) {
+                    ctx.send(dst, EngineMsg::ToMirror(b));
+                }
+            }
+            self.expand_iterate(ctx, u);
+        }
+        self.drain(ctx);
+        ctx.request_barrier();
+    }
+}
+
+impl<P: VertexProgram> Actor for AsyncActor<P> {
+    type Msg = EngineMsg<P::Msg>;
+
+    fn on_start(&mut self, ctx: &mut Ctx<Self::Msg>) {
+        match self.mode {
+            Mode::Converge => {
+                for row in 0..self.shard.n_rows() {
+                    if let Some(m) = self.prog.seed(self.shard.global_of(row)) {
+                        let _ = self.prog.apply(&mut self.state[row], m);
+                        self.expand_converge(row);
+                    }
+                }
+                self.relax(ctx);
+                self.drain(ctx);
+            }
+            Mode::Iterate(n) if n > 0 => self.iteration_phase(ctx),
+            Mode::Iterate(_) => {}
+        }
+    }
+
+    fn on_message(&mut self, ctx: &mut Ctx<Self::Msg>, _from: LocalityId, msg: Self::Msg) {
+        let n_owned = self.shard.n_local();
+        match (msg, self.mode) {
+            (EngineMsg::ToMaster(b), Mode::Converge) => {
+                for (idx, m) in b.items {
+                    self.push(idx as usize, m);
+                }
+                self.relax(ctx);
+                self.drain(ctx);
+            }
+            (EngineMsg::ToMirror(b), Mode::Converge) => {
+                // The value came *from* the master: install it directly
+                // (no echo back) and expand the locally homed edges.
+                for (gi, m) in b.items {
+                    let row = n_owned + gi as usize;
+                    if self.prog.apply_mirror(&mut self.state[row], m) {
+                        self.expand_converge(row);
+                    }
+                }
+                self.relax(ctx);
+                self.drain(ctx);
+            }
+            (EngineMsg::ToMaster(b), Mode::Iterate(_)) => {
+                // Applied on arrival — overlap, not at-barrier batching.
+                for (idx, m) in b.items {
+                    let _ = self.prog.apply(&mut self.state[idx as usize], m);
+                }
+            }
+            (EngineMsg::ToMirror(b), Mode::Iterate(_)) => {
+                // Expand our share of the mirrored rows now; the resulting
+                // master-bound traffic must land inside this superstep.
+                for (gi, m) in b.items {
+                    let row = n_owned + gi as usize;
+                    if self.prog.apply_mirror(&mut self.state[row], m) {
+                        self.expand_iterate(ctx, row);
+                    }
+                }
+                for (dst, b) in self.agg.drain() {
+                    ctx.send(dst, EngineMsg::ToMaster(b));
+                }
+            }
+            _ => unreachable!("control message on the async engine"),
+        }
+    }
+
+    fn on_barrier(&mut self, ctx: &mut Ctx<Self::Msg>, _epoch: u64) {
+        if let Mode::Iterate(n) = self.mode {
+            let mut delta = 0.0f32;
+            for u in 0..self.shard.n_local() {
+                delta += self.prog.step_update(&mut self.state[u]);
+            }
+            self.deltas.push(delta);
+            self.iter += 1;
+            if self.iter < n {
+                self.iteration_phase(ctx);
+            }
+        }
+    }
+}
+
+/// Run `prog` on the asynchronous engine over `dist` with the given
+/// combiner flush policy.
+pub fn run_async<P: VertexProgram>(
+    prog: P,
+    dist: &DistGraph,
+    policy: FlushPolicy,
+    cfg: SimConfig,
+) -> ProgramRun<P::State> {
+    let info = prog.info();
+    let prog = Arc::new(prog);
+    let actors: Vec<AsyncActor<P>> = dist
+        .shards
+        .iter()
+        .map(|s| AsyncActor {
+            prog: Arc::clone(&prog),
+            shard: Arc::new(s.clone()),
+            mode: info.mode,
+            state: init_states(&*prog, s),
+            agg: Aggregator::new(
+                dist.owned_counts(),
+                s.locality,
+                policy,
+                &cfg.net,
+                info.item_bytes,
+                P::combine,
+            ),
+            mirror_agg: Aggregator::new(
+                dist.ghost_counts(),
+                s.locality,
+                policy,
+                &cfg.net,
+                info.item_bytes,
+                P::combine,
+            ),
+            heap: BinaryHeap::new(),
+            seq: 0,
+            iter: 0,
+            deltas: Vec::new(),
+            work: WorkStats::default(),
+        })
+        .collect();
+    let (actors, mut report) = SimRuntime::new(cfg).run(actors);
+    for a in &actors {
+        report.agg.merge(a.agg.stats());
+        report.agg.merge(a.mirror_agg.stats());
+        report.work.merge(&a.work);
+    }
+    report.partition = dist.partition_stats();
+    finish(
+        dist,
+        actors.iter().map(|a| (&*a.shard, &a.state[..], &a.deltas[..])),
+        report,
+    )
+}

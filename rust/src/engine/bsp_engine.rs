@@ -1,0 +1,428 @@
+//! `BspEngine` — the bulk-synchronous (PBGL/Boost-style) execution loop,
+//! once.
+//!
+//! [`Mode::Converge`] programs run active-set supersteps: every active row
+//! emits along its locally homed edges, remote proposals fold into
+//! Manual-policy combiners drained once per round (maximal batching — one
+//! envelope per destination pair per superstep), and termination is an
+//! activity-count reduction at locality 0 (**two global barriers per
+//! superstep**: work+count, then verdict — the synchronization cost the
+//! asynchronous engine eliminates). Activity accounting is conservative:
+//! local improvements, remote proposals, and mirror-scatter batches all
+//! count, and improvements applied *at* the barrier carry
+//! `pending_activity` into the next round's count so termination can never
+//! outrun in-flight scatter.
+//!
+//! [`Mode::Iterate`] programs run their fixed superstep count with strict
+//! BSP semantics: master-bound messages buffer in an inbox and apply at
+//! the barrier (no overlap), one barrier per superstep, no control
+//! traffic. Mirror installs expand inside the receiving handler — the
+//! runtime's barrier waits for network quiescence, so the replicated
+//! cascade lands in the same superstep.
+//!
+//! Mirror handling (vertex cuts): an active owned row scatters its signal
+//! to its mirrors when it expands; the receiving mirror installs the value
+//! and re-activates its row for the next round (Converge) or expands it
+//! immediately (Iterate). 1-D schemes never touch these paths.
+
+use std::sync::Arc;
+
+use crate::amt::aggregate::{Aggregator, FlushPolicy};
+use crate::amt::executor::{ChunkPolicy, Executor};
+use crate::amt::sim::{Actor, Ctx, LocalityId, SimConfig, SimRuntime};
+use crate::amt::WorkStats;
+use crate::graph::{DistGraph, Shard};
+
+use super::program::{Mode, VertexProgram};
+use super::{finish, init_states, EngineMsg, ProgramRun};
+
+#[derive(PartialEq)]
+enum Phase {
+    AfterWork,
+    AwaitDecision,
+}
+
+struct BspActor<P: VertexProgram> {
+    prog: Arc<P>,
+    shard: Arc<Shard>,
+    mode: Mode,
+    state: Vec<P::State>,
+    /// Next-round active rows (local row space: owned and mirror rows).
+    active: Vec<u32>,
+    in_active: Vec<bool>,
+    inbox: Vec<(u32, P::Msg)>,
+    counts_seen: u32,
+    counts_sum: u64,
+    /// Activity earned at the barrier (inbox improvements whose expansion
+    /// ships next round), folded into the next Count.
+    pending_activity: u64,
+    continue_flag: bool,
+    phase: Phase,
+    /// Master-bound superstep combiner (Manual: drained once per round).
+    agg: Aggregator<P::Msg>,
+    /// Mirror-bound superstep combiner (Manual).
+    mirror_agg: Aggregator<P::Msg>,
+    iter: u32,
+    deltas: Vec<f32>,
+    /// Optional intra-locality executor for the Iterate update loop.
+    executor: Option<Arc<Executor>>,
+    chunk_policy: ChunkPolicy,
+    work: WorkStats,
+}
+
+impl<P: VertexProgram> BspActor<P> {
+    fn activate(&mut self, row: usize) {
+        if !self.in_active[row] {
+            self.in_active[row] = true;
+            self.active.push(row as u32);
+        }
+    }
+
+    /// Apply a master-bound proposal to an owned row; on improvement,
+    /// activate it and earn one unit of activity.
+    fn apply_owned(&mut self, row: usize, m: P::Msg) -> bool {
+        if !self.prog.beats(&m, &self.state[row]) {
+            return false;
+        }
+        self.prog.apply(&mut self.state[row], m);
+        self.work.useful_relaxations += 1;
+        self.activate(row);
+        true
+    }
+
+    /// One Converge superstep: expand the active set, drain the combiners,
+    /// report activity, and wait at the barrier.
+    fn work_round(&mut self, ctx: &mut Ctx<EngineMsg<P::Msg>>) {
+        let n_owned = self.shard.n_local();
+        let mut activity = self.pending_activity;
+        self.pending_activity = 0;
+        let active = std::mem::take(&mut self.active);
+        let shard = Arc::clone(&self.shard);
+        for &row in &active {
+            let row = row as usize;
+            // Clear the flag at processing time, not round start: a row
+            // improved by an earlier row of the same round has not been
+            // expanded yet and will read the improved value below, so
+            // re-activating it for the next round would be redundant work
+            // (and would break the delta engine's Δ=∞ schedule parity —
+            // its buckets keep a row queued until it is processed).
+            self.in_active[row] = false;
+            let sig = self.prog.signal(&self.state[row]);
+            let u = shard.global_of(row);
+            if row < n_owned {
+                for &(dst, gi) in shard.mirrors(row) {
+                    // Manual policy: accumulate never auto-flushes.
+                    let flushed = self.mirror_agg.accumulate(dst, gi, sig.clone());
+                    debug_assert!(flushed.is_none());
+                }
+            }
+            for (t, w) in shard.row_edges(row) {
+                self.work.relaxations += 1;
+                let m = self.prog.along_edge(u, &sig, w);
+                let t = t as usize;
+                if t < n_owned {
+                    if self.apply_owned(t, m) {
+                        activity += 1;
+                    }
+                } else {
+                    let gi = t - n_owned;
+                    let flushed = self.agg.accumulate(
+                        shard.ghost_owner[gi],
+                        shard.ghost_master_index[gi],
+                        m,
+                    );
+                    debug_assert!(flushed.is_none());
+                    activity += 1;
+                }
+            }
+        }
+        for (dst, b) in self.agg.drain() {
+            ctx.send(dst, EngineMsg::ToMaster(b));
+        }
+        for (dst, b) in self.mirror_agg.drain() {
+            ctx.send(dst, EngineMsg::ToMirror(b));
+            // The scatter guarantees the next superstep runs; the mirror's
+            // cascade is expanded and counted there.
+            activity += 1;
+        }
+        ctx.send(0, EngineMsg::Count(activity));
+        self.phase = Phase::AfterWork;
+        ctx.request_barrier();
+    }
+
+    /// One Iterate superstep: every owned row scatters to its mirrors and
+    /// emits along its locally homed edges; strict BSP, so remote
+    /// applications wait for the barrier.
+    fn iterate_round(&mut self, ctx: &mut Ctx<EngineMsg<P::Msg>>) {
+        let n_owned = self.shard.n_local();
+        let shard = Arc::clone(&self.shard);
+        for u in 0..n_owned {
+            let sig = self.prog.signal(&self.state[u]);
+            for &(dst, gi) in shard.mirrors(u) {
+                let flushed = self.mirror_agg.accumulate(dst, gi, sig.clone());
+                debug_assert!(flushed.is_none());
+            }
+            self.emit_row(u, &sig);
+        }
+        for (dst, b) in self.mirror_agg.drain() {
+            ctx.send(dst, EngineMsg::ToMirror(b));
+        }
+        for (dst, b) in self.agg.drain() {
+            ctx.send(dst, EngineMsg::ToMaster(b));
+        }
+        ctx.request_barrier();
+    }
+
+    /// Emit one row's signal along its locally homed edges (Iterate: local
+    /// targets apply now, remote targets fold into the Manual combiner).
+    fn emit_row(&mut self, row: usize, sig: &P::Msg) {
+        let n_owned = self.shard.n_local();
+        let u = self.shard.global_of(row);
+        let shard = Arc::clone(&self.shard);
+        for (t, w) in shard.row_edges(row) {
+            self.work.relaxations += 1;
+            let m = self.prog.along_edge(u, sig, w);
+            let t = t as usize;
+            if t < n_owned {
+                let _ = self.prog.apply(&mut self.state[t], m);
+            } else {
+                let gi = t - n_owned;
+                let flushed = self.agg.accumulate(
+                    shard.ghost_owner[gi],
+                    shard.ghost_master_index[gi],
+                    m,
+                );
+                debug_assert!(flushed.is_none());
+            }
+        }
+    }
+
+    /// Iterate-mode end-of-superstep update over the owned rows, serial or
+    /// through the intra-locality executor (the `adaptive_core_chunk_size`
+    /// ablation hooks in here).
+    fn step_all(&mut self) -> f32 {
+        let n_owned = self.shard.n_local();
+        if let Some(ex) = self.executor.clone() {
+            use std::sync::atomic::{AtomicU64, Ordering};
+            let acc = AtomicU64::new(0f64.to_bits());
+            let ptr = SendPtr(self.state.as_mut_ptr());
+            let ptr = &ptr;
+            let prog = &*self.prog;
+            ex.parallel_for(n_owned, self.chunk_policy, |r| {
+                let mut local = 0.0f64;
+                for v in r {
+                    // SAFETY: ranges from parallel_for are disjoint.
+                    let s = unsafe { &mut *ptr.get().add(v) };
+                    local += prog.step_update(s) as f64;
+                }
+                // fetch_add for f64 via CAS loop.
+                let mut cur = acc.load(Ordering::Relaxed);
+                loop {
+                    let next = (f64::from_bits(cur) + local).to_bits();
+                    match acc.compare_exchange(cur, next, Ordering::Relaxed, Ordering::Relaxed) {
+                        Ok(_) => break,
+                        Err(c) => cur = c,
+                    }
+                }
+            });
+            f64::from_bits(acc.load(std::sync::atomic::Ordering::Relaxed)) as f32
+        } else {
+            let mut d = 0.0f32;
+            for v in 0..n_owned {
+                d += self.prog.step_update(&mut self.state[v]);
+            }
+            d
+        }
+    }
+}
+
+struct SendPtr<T>(*mut T);
+unsafe impl<T> Send for SendPtr<T> {}
+unsafe impl<T> Sync for SendPtr<T> {}
+impl<T> SendPtr<T> {
+    fn get(&self) -> *mut T {
+        self.0
+    }
+}
+
+impl<P: VertexProgram> Actor for BspActor<P> {
+    type Msg = EngineMsg<P::Msg>;
+
+    fn on_start(&mut self, ctx: &mut Ctx<Self::Msg>) {
+        match self.mode {
+            Mode::Converge => {
+                for row in 0..self.shard.n_rows() {
+                    if let Some(m) = self.prog.seed(self.shard.global_of(row)) {
+                        let _ = self.prog.apply(&mut self.state[row], m);
+                        self.activate(row);
+                    }
+                }
+                self.work_round(ctx);
+            }
+            Mode::Iterate(n) if n > 0 => self.iterate_round(ctx),
+            Mode::Iterate(_) => {}
+        }
+    }
+
+    fn on_message(&mut self, ctx: &mut Ctx<Self::Msg>, _from: LocalityId, msg: Self::Msg) {
+        let n_owned = self.shard.n_local();
+        match msg {
+            EngineMsg::ToMaster(b) => self.inbox.extend(b.items),
+            EngineMsg::ToMirror(b) => match self.mode {
+                Mode::Converge => {
+                    // Install and re-activate: the mirror's share of the
+                    // row expands next superstep (the sender counted the
+                    // scatter, so that superstep is guaranteed to run).
+                    for (gi, m) in b.items {
+                        let row = n_owned + gi as usize;
+                        if self.prog.apply_mirror(&mut self.state[row], m) {
+                            self.activate(row);
+                        }
+                    }
+                }
+                Mode::Iterate(_) => {
+                    // Expand inside the handler so the replicated traffic
+                    // lands in this superstep (the barrier waits for
+                    // network quiescence).
+                    for (gi, m) in b.items {
+                        let row = n_owned + gi as usize;
+                        if self.prog.apply_mirror(&mut self.state[row], m) {
+                            let sig = self.prog.signal(&self.state[row]);
+                            self.emit_row(row, &sig);
+                        }
+                    }
+                    for (dst, b) in self.agg.drain() {
+                        ctx.send(dst, EngineMsg::ToMaster(b));
+                    }
+                }
+            },
+            EngineMsg::Count(c) => {
+                self.counts_seen += 1;
+                self.counts_sum += c;
+            }
+            EngineMsg::Continue(go) => self.continue_flag = go,
+            _ => unreachable!("delta control message on the BSP engine"),
+        }
+    }
+
+    fn on_barrier(&mut self, ctx: &mut Ctx<Self::Msg>, _epoch: u64) {
+        match self.mode {
+            Mode::Converge => match self.phase {
+                Phase::AfterWork => {
+                    let inbox = std::mem::take(&mut self.inbox);
+                    for (idx, m) in inbox {
+                        if self.apply_owned(idx as usize, m) {
+                            // Expansion ships with the next round's drain;
+                            // keep the run alive until it lands.
+                            self.pending_activity += 1;
+                        }
+                    }
+                    if ctx.locality() == 0 {
+                        debug_assert_eq!(self.counts_seen, ctx.n_localities());
+                        let go = self.counts_sum > 0;
+                        self.counts_sum = 0;
+                        self.counts_seen = 0;
+                        for l in 0..ctx.n_localities() {
+                            ctx.send(l, EngineMsg::Continue(go));
+                        }
+                    }
+                    self.phase = Phase::AwaitDecision;
+                    ctx.request_barrier();
+                }
+                Phase::AwaitDecision => {
+                    // Uniform verdict: every activation was backed by a
+                    // counted activity, so `go` is true whenever anyone
+                    // still holds active rows or pending scatter.
+                    if self.continue_flag {
+                        self.work_round(ctx);
+                    }
+                }
+            },
+            Mode::Iterate(n) => {
+                let inbox = std::mem::take(&mut self.inbox);
+                for (idx, m) in inbox {
+                    let _ = self.prog.apply(&mut self.state[idx as usize], m);
+                }
+                let delta = self.step_all();
+                self.deltas.push(delta);
+                self.iter += 1;
+                if self.iter < n {
+                    self.iterate_round(ctx);
+                }
+            }
+        }
+    }
+}
+
+/// Run `prog` on the BSP engine over `dist` (serial update loop).
+pub fn run_bsp<P: VertexProgram>(
+    prog: P,
+    dist: &DistGraph,
+    cfg: SimConfig,
+) -> ProgramRun<P::State> {
+    run_bsp_with_executor(prog, dist, cfg, None, ChunkPolicy::Sequential)
+}
+
+/// Run `prog` on the BSP engine with an intra-locality executor for the
+/// Iterate-mode update loop.
+pub fn run_bsp_with_executor<P: VertexProgram>(
+    prog: P,
+    dist: &DistGraph,
+    cfg: SimConfig,
+    executor: Option<Arc<Executor>>,
+    chunk_policy: ChunkPolicy,
+) -> ProgramRun<P::State> {
+    let info = prog.info();
+    let prog = Arc::new(prog);
+    let actors: Vec<BspActor<P>> = dist
+        .shards
+        .iter()
+        .map(|s| BspActor {
+            prog: Arc::clone(&prog),
+            shard: Arc::new(s.clone()),
+            mode: info.mode,
+            state: init_states(&*prog, s),
+            active: Vec::new(),
+            in_active: vec![false; s.n_rows()],
+            inbox: Vec::new(),
+            counts_seen: 0,
+            counts_sum: 0,
+            pending_activity: 0,
+            continue_flag: false,
+            phase: Phase::AfterWork,
+            agg: Aggregator::new(
+                dist.owned_counts(),
+                s.locality,
+                FlushPolicy::Manual,
+                &cfg.net,
+                info.item_bytes,
+                P::combine,
+            ),
+            mirror_agg: Aggregator::new(
+                dist.ghost_counts(),
+                s.locality,
+                FlushPolicy::Manual,
+                &cfg.net,
+                info.item_bytes,
+                P::combine,
+            ),
+            iter: 0,
+            deltas: Vec::new(),
+            executor: executor.clone(),
+            chunk_policy,
+            work: WorkStats::default(),
+        })
+        .collect();
+    let (actors, mut report) = SimRuntime::new(cfg).run(actors);
+    for a in &actors {
+        report.agg.merge(a.agg.stats());
+        report.agg.merge(a.mirror_agg.stats());
+        report.work.merge(&a.work);
+    }
+    report.partition = dist.partition_stats();
+    finish(
+        dist,
+        actors.iter().map(|a| (&*a.shard, &a.state[..], &a.deltas[..])),
+        report,
+    )
+}

@@ -1,0 +1,486 @@
+//! `DeltaEngine` — the ordered bucket schedule (generalized from
+//! delta-stepping SSSP), once, and now mirror-aware.
+//!
+//! # Schedule
+//!
+//! Messages carry a non-negative [`VertexProgram::priority`]; owned rows
+//! queue in per-locality buckets keyed by `floor(priority / Δ)`. Edges are
+//! split at build time into **light** (`w <= Δ`) and **heavy** (`w > Δ`)
+//! sets over the whole local row space (owned *and* mirror rows). Buckets
+//! are processed in order: bucket `k` drains through light edges to a
+//! fixpoint (re-insertions into `k` are re-processed round-synchronously),
+//! then the settled rows relax their heavy edges exactly once. `Δ = ∞`
+//! degenerates to the BSP engine's relaxing rounds (identical active
+//! sets, relaxation totals, and combiner envelope counts; barriers equal
+//! up to the terminal handshake); `Δ → 0` approaches priority-ordered
+//! (Dijkstra-like) scheduling.
+//!
+//! # Distributed current-bucket barrier
+//!
+//! One phase round is **work → vote → decide**: localities drain the
+//! current bucket (light) or settled set (heavy), then — at a barrier, so
+//! the network has drained and every in-flight relaxation and mirror
+//! cascade has been applied — broadcast `(current bucket non-empty?, min
+//! non-empty bucket)` all-to-all, and at the next barrier fold the P votes
+//! with the same pure function to reach an identical verdict with no
+//! coordinator round-trip.
+//!
+//! # Mirrors (vertex cuts)
+//!
+//! Previously this schedule was gated to mirror-free partitions; the
+//! ROADMAP risk was that a mirror expansion could re-populate the current
+//! bucket *after* the vote. The engine closes that race by construction:
+//! masters scatter their signal to mirrors when a row is *processed*
+//! (settled) in a light round, mirrors install and relax their share of
+//! the **light** edges inside the receiving handler, and the settled set's
+//! heavy phase sends an explicit heavy-expand signal (`ToMirrorHeavy`)
+//! so mirrors relax their heavy share too.
+//! All cascades ride ordinary messages, and votes are cast at barriers —
+//! which complete only at network quiescence — so every re-population is
+//! visible before any locality votes on emptiness.
+
+use std::collections::BTreeMap;
+use std::sync::Arc;
+
+use crate::amt::aggregate::{Aggregator, FlushPolicy};
+use crate::amt::sim::{Actor, Ctx, LocalityId, SimConfig, SimRuntime};
+use crate::amt::WorkStats;
+use crate::graph::{DistGraph, Shard};
+
+use super::program::{Mode, VertexProgram};
+use super::{finish, init_states, EngineMsg, ProgramRun};
+
+/// `in_bucket` sentinel: the row is not queued in any bucket.
+const NOT_QUEUED: u64 = u64::MAX;
+
+/// Bucket index of a (finite, non-negative) priority.
+fn bucket_of(p: f32, delta: f32) -> u64 {
+    if delta.is_infinite() {
+        return 0;
+    }
+    // f32 -> u64 casts saturate; clamp below the NOT_QUEUED sentinel.
+    ((p / delta) as u64).min(NOT_QUEUED - 1)
+}
+
+/// Light/heavy edge separation over one shard's local rows (owned and
+/// mirror rows), done once at engine setup. Targets are dense local rows,
+/// so relaxation needs no owner arithmetic at all.
+struct SplitEdges {
+    light_offsets: Vec<usize>,
+    light_targets: Vec<u32>,
+    light_weights: Vec<f32>,
+    heavy_offsets: Vec<usize>,
+    heavy_targets: Vec<u32>,
+    heavy_weights: Vec<f32>,
+}
+
+impl SplitEdges {
+    fn build(shard: &Shard, delta: f32) -> Self {
+        let mut s = SplitEdges {
+            light_offsets: vec![0],
+            light_targets: Vec::new(),
+            light_weights: Vec::new(),
+            heavy_offsets: vec![0],
+            heavy_targets: Vec::new(),
+            heavy_weights: Vec::new(),
+        };
+        for row in 0..shard.n_rows() {
+            for (t, w) in shard.row_edges(row) {
+                if w <= delta {
+                    s.light_targets.push(t);
+                    s.light_weights.push(w);
+                } else {
+                    s.heavy_targets.push(t);
+                    s.heavy_weights.push(w);
+                }
+            }
+            s.light_offsets.push(s.light_targets.len());
+            s.heavy_offsets.push(s.heavy_targets.len());
+        }
+        s
+    }
+}
+
+/// Which edge class the next work round relaxes.
+enum LightHeavy {
+    Light,
+    Heavy,
+}
+
+/// Barrier-protocol step (work → vote → decide).
+enum Step {
+    AwaitVote,
+    AwaitDecision,
+}
+
+struct DeltaActor<P: VertexProgram> {
+    prog: Arc<P>,
+    shard: Arc<Shard>,
+    edges: SplitEdges,
+    delta: f32,
+    /// Per-row state: owned rows authoritative, ghost rows install slots.
+    state: Vec<P::State>,
+    /// Bucket index → queued owned rows. Sparse (`BTreeMap`) so tiny Δ
+    /// cannot blow up memory; entries may go stale when a row moves
+    /// buckets (`in_bucket` is the source of truth).
+    buckets: BTreeMap<u64, Vec<u32>>,
+    /// Owned row → bucket it is queued in ([`NOT_QUEUED`] = none).
+    in_bucket: Vec<u64>,
+    /// Rows settled during the current bucket's light phase, awaiting
+    /// their one heavy relaxation.
+    req: Vec<u32>,
+    in_req: Vec<bool>,
+    /// Globally agreed current bucket.
+    current: u64,
+    phase: LightHeavy,
+    step: Step,
+    votes_nonempty: bool,
+    votes_min: Option<u64>,
+    votes_seen: u32,
+    /// Master-bound relaxation combiner (policy-driven).
+    agg: Aggregator<P::Msg>,
+    /// Mirror-bound settle-signal combiner (light phase).
+    mirror_agg: Aggregator<P::Msg>,
+    /// Mirror-bound heavy-expand combiner (heavy phase).
+    heavy_agg: Aggregator<P::Msg>,
+    work: WorkStats,
+}
+
+impl<P: VertexProgram> DeltaActor<P> {
+    /// Route one relaxation proposal: owned targets apply eagerly and move
+    /// buckets; ghost targets fold into the master-bound combiner.
+    fn relax_target(&mut self, ctx: &mut Ctx<EngineMsg<P::Msg>>, t: usize, m: P::Msg) {
+        let n_owned = self.shard.n_local();
+        if t < n_owned {
+            if self.prog.beats(&m, &self.state[t]) {
+                let b = bucket_of(self.prog.priority(&m), self.delta);
+                self.prog.apply(&mut self.state[t], m);
+                self.work.useful_relaxations += 1;
+                if self.in_bucket[t] != b {
+                    self.in_bucket[t] = b;
+                    self.buckets.entry(b).or_default().push(t as u32);
+                }
+            }
+        } else {
+            let gi = t - n_owned;
+            let dst = self.shard.ghost_owner[gi];
+            let idx = self.shard.ghost_master_index[gi];
+            if let Some(batch) = self.agg.accumulate(dst, idx, m) {
+                ctx.send(dst, EngineMsg::ToMaster(batch));
+            }
+        }
+    }
+
+    /// Relax one edge class of `row` at signal `sig`.
+    fn relax_edges(
+        &mut self,
+        ctx: &mut Ctx<EngineMsg<P::Msg>>,
+        row: usize,
+        sig: &P::Msg,
+        heavy: bool,
+    ) {
+        let u = self.shard.global_of(row);
+        let range = if heavy {
+            self.edges.heavy_offsets[row]..self.edges.heavy_offsets[row + 1]
+        } else {
+            self.edges.light_offsets[row]..self.edges.light_offsets[row + 1]
+        };
+        for k in range {
+            let (t, w) = if heavy {
+                (self.edges.heavy_targets[k], self.edges.heavy_weights[k])
+            } else {
+                (self.edges.light_targets[k], self.edges.light_weights[k])
+            };
+            self.work.relaxations += 1;
+            let m = self.prog.along_edge(u, sig, w);
+            self.relax_target(ctx, t as usize, m);
+        }
+    }
+
+    /// One light round: settle the current bucket's members into `req`,
+    /// scatter their signals to mirrors, and relax their light edges.
+    /// Re-insertions into the current bucket are processed next round
+    /// (round-synchronous, so `Δ = ∞` reproduces the BSP schedule).
+    fn light_round(&mut self, ctx: &mut Ctx<EngineMsg<P::Msg>>) {
+        let members = self.buckets.remove(&self.current).unwrap_or_default();
+        let shard = Arc::clone(&self.shard);
+        for &lv32 in &members {
+            let lv = lv32 as usize;
+            if self.in_bucket[lv] != self.current {
+                continue; // stale entry: the row moved buckets
+            }
+            self.in_bucket[lv] = NOT_QUEUED;
+            if !self.in_req[lv] {
+                self.in_req[lv] = true;
+                self.req.push(lv32);
+            }
+            let sig = self.prog.signal(&self.state[lv]);
+            for &(dst, gi) in shard.mirrors(lv) {
+                if let Some(b) = self.mirror_agg.accumulate(dst, gi, sig.clone()) {
+                    ctx.send(dst, EngineMsg::ToMirror(b));
+                }
+            }
+            self.relax_edges(ctx, lv, &sig, false);
+        }
+    }
+
+    /// The heavy round: relax the heavy edges of everything settled in the
+    /// current bucket, exactly once, at their final signals — and ask
+    /// their mirrors to do the same for the remotely homed heavy edges.
+    fn heavy_round(&mut self, ctx: &mut Ctx<EngineMsg<P::Msg>>) {
+        let req = std::mem::take(&mut self.req);
+        let shard = Arc::clone(&self.shard);
+        for &lv32 in &req {
+            let lv = lv32 as usize;
+            self.in_req[lv] = false;
+            let sig = self.prog.signal(&self.state[lv]);
+            for &(dst, gi) in shard.mirrors(lv) {
+                if let Some(b) = self.heavy_agg.accumulate(dst, gi, sig.clone()) {
+                    ctx.send(dst, EngineMsg::ToMirrorHeavy(b));
+                }
+            }
+            self.relax_edges(ctx, lv, &sig, true);
+        }
+    }
+
+    fn work_round(&mut self, ctx: &mut Ctx<EngineMsg<P::Msg>>) {
+        match self.phase {
+            LightHeavy::Light => self.light_round(ctx),
+            LightHeavy::Heavy => self.heavy_round(ctx),
+        }
+        self.drain(ctx);
+        self.step = Step::AwaitVote;
+        ctx.request_barrier();
+    }
+
+    fn drain(&mut self, ctx: &mut Ctx<EngineMsg<P::Msg>>) {
+        for (dst, b) in self.agg.drain() {
+            ctx.send(dst, EngineMsg::ToMaster(b));
+        }
+        for (dst, b) in self.mirror_agg.drain() {
+            ctx.send(dst, EngineMsg::ToMirror(b));
+        }
+        for (dst, b) in self.heavy_agg.drain() {
+            ctx.send(dst, EngineMsg::ToMirrorHeavy(b));
+        }
+    }
+}
+
+impl<P: VertexProgram> Actor for DeltaActor<P> {
+    type Msg = EngineMsg<P::Msg>;
+
+    fn on_start(&mut self, ctx: &mut Ctx<Self::Msg>) {
+        for lv in 0..self.shard.n_local() {
+            if let Some(m) = self.prog.seed(self.shard.global_id(lv)) {
+                let b = bucket_of(self.prog.priority(&m), self.delta);
+                let _ = self.prog.apply(&mut self.state[lv], m);
+                self.in_bucket[lv] = b;
+                self.buckets.entry(b).or_default().push(lv as u32);
+            }
+        }
+        self.work_round(ctx);
+    }
+
+    fn on_message(&mut self, ctx: &mut Ctx<Self::Msg>, _from: LocalityId, msg: Self::Msg) {
+        let n_owned = self.shard.n_local();
+        match msg {
+            // Relaxations apply eagerly: by the time the vote barrier
+            // fires the network has drained, so every locality votes on
+            // the complete post-round state.
+            EngineMsg::ToMaster(b) => {
+                for (lv, m) in b.items {
+                    let lv = lv as usize;
+                    if self.prog.beats(&m, &self.state[lv]) {
+                        let bk = bucket_of(self.prog.priority(&m), self.delta);
+                        self.prog.apply(&mut self.state[lv], m);
+                        self.work.useful_relaxations += 1;
+                        if self.in_bucket[lv] != bk {
+                            self.in_bucket[lv] = bk;
+                            self.buckets.entry(bk).or_default().push(lv as u32);
+                        }
+                    }
+                }
+            }
+            // A master settled in the current light phase: install its
+            // signal and relax our share of the light edges now. The
+            // cascade completes before the vote barrier (quiescence).
+            EngineMsg::ToMirror(b) => {
+                for (gi, m) in b.items {
+                    let row = n_owned + gi as usize;
+                    if self.prog.apply_mirror(&mut self.state[row], m) {
+                        let sig = self.prog.signal(&self.state[row]);
+                        self.relax_edges(ctx, row, &sig, false);
+                    }
+                }
+                self.drain(ctx);
+            }
+            // Heavy expansion on the master's behalf: exactly once per
+            // settlement, at the settled signal.
+            EngineMsg::ToMirrorHeavy(b) => {
+                for (gi, m) in b.items {
+                    let row = n_owned + gi as usize;
+                    let _ = self.prog.apply_mirror(&mut self.state[row], m);
+                    let sig = self.prog.signal(&self.state[row]);
+                    self.relax_edges(ctx, row, &sig, true);
+                }
+                self.drain(ctx);
+            }
+            EngineMsg::Status { nonempty_current, min_bucket } => {
+                self.votes_seen += 1;
+                self.votes_nonempty |= nonempty_current;
+                self.votes_min = match (self.votes_min, min_bucket) {
+                    (Some(a), Some(b)) => Some(a.min(b)),
+                    (a, b) => a.or(b),
+                };
+            }
+            _ => unreachable!("BSP control message on the delta engine"),
+        }
+    }
+
+    fn on_barrier(&mut self, ctx: &mut Ctx<Self::Msg>, _epoch: u64) {
+        match self.step {
+            Step::AwaitVote => {
+                // Drop stale bucket entries so emptiness votes are exact.
+                let in_bucket = &self.in_bucket;
+                self.buckets.retain(|&b, v| {
+                    v.retain(|&lv| in_bucket[lv as usize] == b);
+                    !v.is_empty()
+                });
+                let status = EngineMsg::Status {
+                    nonempty_current: self.buckets.contains_key(&self.current),
+                    min_bucket: self.buckets.keys().next().copied(),
+                };
+                for l in 0..ctx.n_localities() {
+                    ctx.send(l, status.clone());
+                }
+                self.step = Step::AwaitDecision;
+                ctx.request_barrier();
+            }
+            Step::AwaitDecision => {
+                // All P votes are in; every locality folds them with the
+                // same pure function and reaches the identical verdict.
+                debug_assert_eq!(self.votes_seen, ctx.n_localities());
+                let nonempty = self.votes_nonempty;
+                let min_b = self.votes_min;
+                self.votes_seen = 0;
+                self.votes_nonempty = false;
+                self.votes_min = None;
+                match self.phase {
+                    LightHeavy::Light if nonempty => self.work_round(ctx),
+                    LightHeavy::Light => {
+                        self.phase = LightHeavy::Heavy;
+                        self.work_round(ctx);
+                    }
+                    LightHeavy::Heavy => match min_b {
+                        Some(k) => {
+                            self.current = k;
+                            self.phase = LightHeavy::Light;
+                            self.work_round(ctx);
+                        }
+                        // Every bucket everywhere is empty and the network
+                        // is quiet: no one requests another barrier and
+                        // the run terminates at quiescence.
+                        None => {}
+                    },
+                }
+            }
+        }
+    }
+}
+
+/// Run `prog` on the ordered bucket engine over `dist` with bucket width
+/// `delta` (must be positive; `f32::INFINITY` ≡ one bucket ≡ the BSP
+/// schedule). Requires [`ProgramInfo::ordered`](super::ProgramInfo);
+/// supports every partition scheme, including vertex cuts.
+pub fn run_delta<P: VertexProgram>(
+    prog: P,
+    dist: &DistGraph,
+    delta: f32,
+    policy: FlushPolicy,
+    cfg: SimConfig,
+) -> ProgramRun<P::State> {
+    let info = prog.info();
+    assert!(delta > 0.0, "delta must be positive (f32::INFINITY = one bucket), got {delta}");
+    assert!(
+        info.ordered && info.mode == Mode::Converge,
+        "program `{}` is not bucket-orderable; use the async or BSP engine",
+        info.name
+    );
+    let prog = Arc::new(prog);
+    let actors: Vec<DeltaActor<P>> = dist
+        .shards
+        .iter()
+        .map(|s| DeltaActor {
+            prog: Arc::clone(&prog),
+            edges: SplitEdges::build(s, delta),
+            shard: Arc::new(s.clone()),
+            delta,
+            state: init_states(&*prog, s),
+            buckets: BTreeMap::new(),
+            in_bucket: vec![NOT_QUEUED; s.n_local()],
+            req: Vec::new(),
+            in_req: vec![false; s.n_local()],
+            current: 0,
+            phase: LightHeavy::Light,
+            step: Step::AwaitVote,
+            votes_nonempty: false,
+            votes_min: None,
+            votes_seen: 0,
+            agg: Aggregator::new(
+                dist.owned_counts(),
+                s.locality,
+                policy,
+                &cfg.net,
+                info.item_bytes,
+                P::combine,
+            ),
+            mirror_agg: Aggregator::new(
+                dist.ghost_counts(),
+                s.locality,
+                policy,
+                &cfg.net,
+                info.item_bytes,
+                P::combine,
+            ),
+            heavy_agg: Aggregator::new(
+                dist.ghost_counts(),
+                s.locality,
+                policy,
+                &cfg.net,
+                info.item_bytes,
+                P::combine,
+            ),
+            work: WorkStats::default(),
+        })
+        .collect();
+    let (actors, mut report) = SimRuntime::new(cfg).run(actors);
+    for a in &actors {
+        report.agg.merge(a.agg.stats());
+        report.agg.merge(a.mirror_agg.stats());
+        report.agg.merge(a.heavy_agg.stats());
+        report.work.merge(&a.work);
+    }
+    report.partition = dist.partition_stats();
+    static NO_DELTAS: [f32; 0] = [];
+    finish(
+        dist,
+        actors.iter().map(|a| (&*a.shard, &a.state[..], &NO_DELTAS[..])),
+        report,
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bucket_of_is_monotone_and_saturates() {
+        assert_eq!(bucket_of(0.0, 0.5), 0);
+        assert_eq!(bucket_of(0.49, 0.5), 0);
+        assert_eq!(bucket_of(0.5, 0.5), 1);
+        assert_eq!(bucket_of(7.3, 0.5), 14);
+        assert_eq!(bucket_of(123.0, f32::INFINITY), 0);
+        // Saturating cast stays clear of the NOT_QUEUED sentinel.
+        assert_eq!(bucket_of(f32::MAX, 1e-30), NOT_QUEUED - 1);
+    }
+}

@@ -1,0 +1,177 @@
+//! Generic execution engines for [`VertexProgram`]s.
+//!
+//! The execution loops of the distributed algorithms exist exactly once,
+//! here, as three engines over the simulated AMT runtime:
+//!
+//! * **[`run_async`]** ([`async_engine`]) — asynchronous label-correcting
+//!   wavefront over owned+ghost rows; remote traffic folds through the
+//!   [`amt::aggregate`](crate::amt::aggregate) combiners under any
+//!   [`FlushPolicy`](crate::amt::FlushPolicy); termination is network
+//!   quiescence ([`Mode::Converge`]) or barrier-separated supersteps
+//!   ([`Mode::Iterate`]).
+//! * **[`run_bsp`]** ([`bsp_engine`]) — bulk-synchronous supersteps with
+//!   Manual-policy combiner drains; `Converge` programs terminate through
+//!   an activity-count reduction (two barriers per superstep), `Iterate`
+//!   programs run their fixed count (one barrier per superstep).
+//! * **[`run_delta`]** ([`delta_engine`]) — the ordered middle ground:
+//!   bucketed priority scheduling (generalized from delta-stepping SSSP)
+//!   with light/heavy edge splitting and a distributed current-bucket
+//!   vote. Mirror-aware: masters scatter settle/heavy signals to mirror
+//!   rows, so vertex-cut partitions are supported.
+//!
+//! The engines own *all* distribution machinery — mirror-table routing,
+//! ghost-slot aggregation, activation/termination accounting,
+//! [`WorkStats`](crate::amt::WorkStats) counting, and
+//! [`SimReport`](crate::amt::SimReport) stamping. A program contributes
+//! only the ~10 pure hooks of [`VertexProgram`]; see
+//! [`program`] and `ARCHITECTURE.md`.
+
+pub mod async_engine;
+pub mod bsp_engine;
+pub mod delta_engine;
+pub mod program;
+
+pub use async_engine::run_async;
+pub use bsp_engine::{run_bsp, run_bsp_with_executor};
+pub use delta_engine::run_delta;
+pub use program::{Mode, ProgramInfo, VertexProgram};
+
+use crate::amt::aggregate::Batch;
+use crate::amt::sim::Message;
+use crate::amt::SimReport;
+use crate::graph::{DistGraph, Shard};
+
+/// Outcome of one engine run, before the algorithm driver projects its
+/// result type out of the per-vertex states.
+#[derive(Debug)]
+pub struct ProgramRun<S> {
+    /// Final owned-row states in global vertex order.
+    pub states: Vec<S>,
+    /// Per-superstep global convergence deltas ([`Mode::Iterate`] only).
+    pub deltas: Vec<f32>,
+    /// Runtime report (aggregation, work, and partition stats stamped).
+    pub report: SimReport,
+}
+
+/// Uniform coordinator-facing rejection for `algorithm × partition`
+/// combinations that need whole vertex rows at the owner. The explicitly
+/// specialized engines (direction-optimizing BFS, kernel PageRank,
+/// triangle counting) cannot expand mirror rows; everything running on the
+/// generic engines is scheme-generic and never calls this.
+pub fn require_mirror_free(dist: &DistGraph, algo: &str) -> crate::Result<()> {
+    if dist.has_mirrors() {
+        anyhow::bail!(
+            "`{algo}` does not support the `{}` partition: it needs whole vertex rows at \
+             the owner and this scheme splits rows across mirror localities; use a \
+             mirror-free partition (block|edge_balanced|hash) or a scheme-generic engine",
+            dist.partition.name()
+        );
+    }
+    Ok(())
+}
+
+/// Engine wire format: combiner batches toward masters or mirrors plus the
+/// small control messages of the BSP/delta termination protocols. Unused
+/// variants are dead code for a given engine, not traffic.
+#[derive(Debug, Clone)]
+pub(crate) enum EngineMsg<M> {
+    /// `(destination master index, folded value)` toward a vertex's owner.
+    ToMaster(Batch<M>),
+    /// `(ghost slot, master's signal)` toward a vertex's mirror.
+    ToMirror(Batch<M>),
+    /// Delta heavy phase: `(ghost slot, settled signal)` — the mirror
+    /// relaxes its share of the heavy edges at this value.
+    ToMirrorHeavy(Batch<M>),
+    /// Superstep activity count, reduced at locality 0 (BSP Converge).
+    Count(u64),
+    /// Locality 0's superstep verdict (BSP Converge).
+    Continue(bool),
+    /// One locality's bucket status, broadcast all-to-all (delta).
+    Status {
+        /// The current bucket still holds vertices here.
+        nonempty_current: bool,
+        /// Smallest non-empty bucket here (`None` = all empty).
+        min_bucket: Option<u64>,
+    },
+}
+
+impl<M> Message for EngineMsg<M> {
+    fn wire_bytes(&self) -> usize {
+        match self {
+            EngineMsg::ToMaster(b) | EngineMsg::ToMirror(b) | EngineMsg::ToMirrorHeavy(b) => {
+                b.wire_bytes()
+            }
+            EngineMsg::Count(_) => 8,
+            EngineMsg::Continue(_) => 1,
+            EngineMsg::Status { .. } => 16,
+        }
+    }
+
+    fn item_count(&self) -> usize {
+        match self {
+            EngineMsg::ToMaster(b) | EngineMsg::ToMirror(b) | EngineMsg::ToMirrorHeavy(b) => {
+                b.len()
+            }
+            _ => 1,
+        }
+    }
+}
+
+/// Initial per-row states for one shard: owned rows get their global
+/// out-degree, ghost rows get 0 (install-only slots).
+pub(crate) fn init_states<P: VertexProgram>(prog: &P, shard: &Shard) -> Vec<P::State> {
+    (0..shard.n_rows())
+        .map(|row| {
+            let deg = if row < shard.n_local() { shard.out_degree[row] } else { 0 };
+            prog.init(shard.global_of(row), deg)
+        })
+        .collect()
+}
+
+/// Assemble the global result: scatter owned states into vertex order and
+/// reduce the per-locality superstep deltas elementwise.
+pub(crate) fn finish<'a, S: Clone + 'a>(
+    dist: &DistGraph,
+    parts: impl Iterator<Item = (&'a Shard, &'a [S], &'a [f32])>,
+    report: SimReport,
+) -> ProgramRun<S> {
+    let mut states: Vec<Option<S>> = vec![None; dist.n()];
+    let mut deltas: Vec<f32> = Vec::new();
+    for (shard, st, dl) in parts {
+        for (i, &gid) in shard.owned_ids.iter().enumerate() {
+            states[gid as usize] = Some(st[i].clone());
+        }
+        if deltas.len() < dl.len() {
+            deltas.resize(dl.len(), 0.0);
+        }
+        for (i, d) in dl.iter().enumerate() {
+            deltas[i] += d;
+        }
+    }
+    ProgramRun {
+        states: states
+            .into_iter()
+            .map(|s| s.expect("vertex not owned by any shard"))
+            .collect(),
+        deltas,
+        report,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::{generators, PartitionKind};
+
+    #[test]
+    fn require_mirror_free_names_algo_and_scheme() {
+        let g = generators::kron(7, 6, 9);
+        let vc = DistGraph::build_with(&g, PartitionKind::VertexCut.build(&g, 4));
+        assert!(vc.has_mirrors(), "kron@4 vertex cut should mirror");
+        let err = require_mirror_free(&vc, "triangle counting").unwrap_err().to_string();
+        assert!(err.contains("triangle counting"), "{err}");
+        assert!(err.contains("vertex_cut"), "{err}");
+        assert!(err.contains("mirror-free"), "{err}");
+        require_mirror_free(&DistGraph::block(&g, 4), "triangle counting").unwrap();
+    }
+}

@@ -1,0 +1,144 @@
+//! The [`VertexProgram`] abstraction: what an algorithm *is*, separated
+//! from how an engine *runs* it.
+//!
+//! The "Anatomy of Large-Scale Distributed Graph Algorithms" line of work
+//! argues that distributed graph algorithms should be studied as small
+//! vertex programs behind a common abstract-machine API so the execution
+//! policy (asynchronous label-correcting, bulk-synchronous supersteps,
+//! ordered bucket schedules) can vary independently. This module is that
+//! API: a program declares per-row [`VertexProgram::State`], a wire
+//! [`VertexProgram::Msg`], and a handful of pure hooks; the three engines
+//! in [`engine`](crate::engine) own everything else — mirror-table
+//! routing, ghost-slot aggregation, activity/vote termination, work
+//! counters, and [`SimReport`](crate::amt::SimReport) stamping.
+//!
+//! Two scheduling families are expressible through one trait:
+//!
+//! * **[`Mode::Converge`]** — monotone label-correcting programs (BFS
+//!   levels, SSSP distances, CC labels): rows improve under an idempotent
+//!   [`VertexProgram::combine`] fold until a global fixpoint; termination
+//!   is quiescence (async), an activity vote (BSP), or bucket exhaustion
+//!   (delta).
+//! * **[`Mode::Iterate`]** — rank-style pull/push rounds (PageRank): every
+//!   owned row emits each superstep, messages fold by sum, and
+//!   [`VertexProgram::step_update`] advances the state at the barrier for
+//!   a fixed iteration count.
+
+use crate::graph::VertexId;
+
+/// How an engine schedules a program.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Mode {
+    /// Monotone label-correcting: run to the combine-fold fixpoint.
+    Converge,
+    /// Rank-style: exactly this many barrier-separated supersteps.
+    Iterate(u32),
+}
+
+/// Program-declared capabilities, read once by the engines at setup.
+#[derive(Debug, Clone, Copy)]
+pub struct ProgramInfo {
+    /// Short name used in errors and reports.
+    pub name: &'static str,
+    /// Scheduling family (see [`Mode`]).
+    pub mode: Mode,
+    /// The program reads edge weights ([`VertexProgram::along_edge`]'s
+    /// `w`). Informational for callers (algorithm drivers validate their
+    /// inputs, e.g. `sssp::check_graph_matches`) — the engines themselves
+    /// run unweighted graphs as unit weights, which is the documented
+    /// degeneration (SSSP == hop count).
+    pub needs_weights: bool,
+    /// [`VertexProgram::priority`] is a meaningful path metric, so the
+    /// ordered bucket schedule ([`run_delta`](crate::engine::run_delta))
+    /// applies.
+    pub ordered: bool,
+    /// Serialized wire size of one `(slot, Msg)` item.
+    pub item_bytes: usize,
+}
+
+/// A distributed graph algorithm as a vertex program. See the module docs
+/// for the engine/program contract; `ARCHITECTURE.md` documents it in
+/// prose with the full support matrix.
+///
+/// Semantics the engines rely on:
+///
+/// * [`VertexProgram::combine`] must be associative, commutative, and
+///   idempotent-safe for [`Mode::Converge`] (min-style) or a plain
+///   commutative reduction for [`Mode::Iterate`] (sum-style), so
+///   aggregation and message order never change results.
+/// * [`VertexProgram::apply`] must be monotone under `Converge`: once
+///   [`VertexProgram::beats`] is false for a message it stays false, which
+///   is what makes the label-correcting flood finite.
+/// * `beats`/`apply`/`signal`/`along_edge` are pure in everything but the
+///   row state; engines may call them in any order consistent with message
+///   delivery.
+pub trait VertexProgram: Send + Sync + 'static {
+    /// Per-row state. Owned rows are authoritative; ghost rows hold the
+    /// cache/install slot the engines maintain for mirror routing.
+    type State: Clone + Send + 'static;
+    /// Wire value per destination slot; folded by [`VertexProgram::combine`].
+    type Msg: Clone + Send + std::fmt::Debug + 'static;
+
+    /// Capability declaration.
+    fn info(&self) -> ProgramInfo;
+
+    /// Initial state of the row for global vertex `v`. `out_degree` is the
+    /// global out-degree for owned rows and `0` for ghost rows (whose
+    /// state is install-only).
+    fn init(&self, v: VertexId, out_degree: u32) -> Self::State;
+
+    /// Message that seeds vertex `v` at start ([`Mode::Converge`] only);
+    /// `None` = starts inactive. The async and BSP engines apply it to
+    /// every local row of `v` (master and mirrors) and expand the row;
+    /// the delta engine seeds master rows only — mirror activation flows
+    /// through its settle-scatter protocol, which keeps bucket ordering
+    /// intact when a seed lands in a later bucket.
+    fn seed(&self, v: VertexId) -> Option<Self::Msg>;
+
+    /// Aggregator fold hook (an associated fn so it can feed
+    /// [`Aggregator`](crate::amt::Aggregator)'s function pointer).
+    fn combine(acc: &mut Self::Msg, new: Self::Msg);
+
+    /// Would `msg` strictly improve `state`? Pure pre-check the engines
+    /// use to prune floods and decide activation.
+    fn beats(&self, msg: &Self::Msg, state: &Self::State) -> bool;
+
+    /// Fold `msg` into `state`; returns whether the state changed.
+    fn apply(&self, state: &mut Self::State, msg: Self::Msg) -> bool;
+
+    /// The row's current value as a wire message — what masters scatter to
+    /// mirrors, what ghost rows forward to their master, and what a row
+    /// emits per superstep under [`Mode::Iterate`].
+    fn signal(&self, state: &Self::State) -> Self::Msg;
+
+    /// Transform the emitting row's signal into the message carried along
+    /// one out-edge (`u` = the emitting row's global id, `w` = the edge
+    /// weight; `1.0` on unweighted graphs).
+    fn along_edge(&self, u: VertexId, sig: &Self::Msg, w: f32) -> Self::Msg;
+
+    /// Scheduling priority of a message (smaller = sooner). Orders the
+    /// async wavefront heap and, when [`ProgramInfo::ordered`], the delta
+    /// engine's buckets. Must be non-negative.
+    fn priority(&self, _msg: &Self::Msg) -> f32 {
+        0.0
+    }
+
+    /// Install a master→mirror sync message into a ghost row; returns
+    /// whether the mirror's locally homed edges should expand now. The
+    /// default is the monotone improvement check; rank-style programs
+    /// override it to stash the per-superstep emission.
+    fn apply_mirror(&self, state: &mut Self::State, msg: Self::Msg) -> bool {
+        if self.beats(&msg, state) {
+            self.apply(state, msg);
+            true
+        } else {
+            false
+        }
+    }
+
+    /// [`Mode::Iterate`] end-of-superstep state advance for one owned row;
+    /// returns the row's contribution to the global convergence delta.
+    fn step_update(&self, _state: &mut Self::State) -> f32 {
+        0.0
+    }
+}

@@ -16,7 +16,8 @@ impl Csr {
     /// Build from an edge list (sorts a copy; stable for duplicate edges).
     ///
     /// Weighted inputs must carry finite, non-negative weights: SSSP's
-    /// min-fold combiners ([`min_f32`](crate::algorithms::sssp)) rely on
+    /// min-fold combine hook
+    /// ([`SsspProgram`](crate::algorithms::sssp::SsspProgram)) relies on
     /// `<` being a total order over every tentative distance, which holds
     /// exactly when weights (and therefore path sums) are NaN-free and
     /// non-negative. Checked here, at the single construction choke

@@ -20,12 +20,18 @@
 //!   pluggable partition schemes (1-D block / edge-balanced / hash and a
 //!   2-D greedy vertex cut) and distributed shards with ghost/mirror
 //!   tables for master-index routing (CSR + masked-ELL).
-//! * **[`algorithms`]** — the paper's two algorithms in both execution
-//!   models (asynchronous HPX-style and BSP/PBGL-style), plus the
-//!   future-work extensions (§6): delta-stepping SSSP, connected
-//!   components, triangle counting. Async BFS/PageRank/SSSP aggregate via
+//! * **[`engine`]** — the `VertexProgram` abstraction plus the three
+//!   generic execution loops (asynchronous label-correcting, BSP
+//!   supersteps, ordered delta buckets), owning all mirror routing,
+//!   ghost-slot aggregation, termination, and report stamping. See
+//!   `ARCHITECTURE.md` for the contract and the support matrix.
+//! * **[`algorithms`]** — the paper's two algorithms plus the future-work
+//!   extensions (§6), each a ~100-line `VertexProgram` (BFS, SSSP,
+//!   PageRank, CC) dispatched onto the engines, with
+//!   direction-optimizing BFS, kernel PageRank, and triangle counting as
+//!   explicitly specialized engines. Async flavors aggregate via
 //!   [`amt::FlushPolicy`] (the naive per-edge path survives only as
-//!   `FlushPolicy::Unbatched`); BSP SSSP/CC drain their combiners once
+//!   `FlushPolicy::Unbatched`); BSP flavors drain their combiners once
 //!   per superstep.
 //! * **[`runtime`]** — PJRT wrapper loading the AOT-lowered Pallas/JAX
 //!   compute kernels (`artifacts/*.hlo.txt`) for the kernel-offloaded
@@ -43,6 +49,7 @@ pub mod amt;
 pub mod cli;
 pub mod config;
 pub mod coordinator;
+pub mod engine;
 pub mod graph;
 pub mod runtime;
 pub mod testing;

@@ -131,6 +131,34 @@ fn real_main() -> Result<()> {
                 println!("validation: OK");
             }
         }
+        "cc" => {
+            let engine = Engine::parse(args.flag("engine").unwrap_or("bsp"))?;
+            let p = args.flag_or("p", *cfg.localities.last().unwrap_or(&4))?;
+            let res = coordinator::run_cc(&cfg, p, engine, validate)?;
+            let comps = nwgraph_hpx::algorithms::cc::component_count(&res.labels);
+            println!(
+                "cc[{engine:?}] {} p={p}: {} components over {} vertices in {} \
+                 (msgs={} envs={} barriers={})",
+                cfg.graph_name(),
+                comps,
+                res.labels.len(),
+                fmt_us(res.report.makespan_us),
+                res.report.net.messages,
+                res.report.net.envelopes,
+                res.report.barriers,
+            );
+            let pt = res.report.partition;
+            println!(
+                "  partition[{}]: v-imb={:.2} e-imb={:.2} repl={:.2}",
+                cfg.partition.name(),
+                pt.vertex_imbalance,
+                pt.edge_imbalance,
+                pt.replication_factor,
+            );
+            if validate {
+                println!("validation: OK");
+            }
+        }
         "fig1" => {
             let (table, _) = experiment::fig1_bfs(&cfg)?;
             print!("{}", table.render());
@@ -148,12 +176,28 @@ fn real_main() -> Result<()> {
             }
         }
         "ablations" => {
-            print!("{}", experiment::ablation_aggregation(&cfg)?.render());
-            print!("{}", experiment::ablation_adaptive_chunk(&cfg)?.render());
-            print!("{}", experiment::ablation_flush_policy(&cfg)?.render());
-            print!("{}", experiment::ablation_delta_stepping(&cfg)?.render());
-            print!("{}", experiment::ablation_partition_schemes(&cfg)?.render());
-            print!("{}", experiment::extensions(&cfg)?.render());
+            // (file stem, runner) pairs so --json can name its outputs;
+            // each table prints (and persists) as soon as it completes.
+            type Runner = fn(&Config) -> Result<nwgraph_hpx::coordinator::Table>;
+            let tables: [(&str, Runner); 6] = [
+                ("a1_aggregation", experiment::ablation_aggregation),
+                ("a2_chunking", experiment::ablation_adaptive_chunk),
+                ("a4_flush_policy", experiment::ablation_flush_policy),
+                ("a5_delta_stepping", experiment::ablation_delta_stepping),
+                ("a6_partition_schemes", experiment::ablation_partition_schemes),
+                ("extensions", experiment::extensions),
+            ];
+            let json = args.switch("json");
+            let out_dir = args.flag("out-dir").unwrap_or("bench_out");
+            for (stem, run) in tables {
+                let table = run(&cfg)?;
+                print!("{}", table.render());
+                if json {
+                    let path = format!("{out_dir}/{stem}.json");
+                    table.write_json(&path)?;
+                    println!("wrote {path}");
+                }
+            }
         }
         "info" => {
             let g = cfg.build_graph()?;

@@ -25,6 +25,21 @@ impl Default for PropConfig {
     }
 }
 
+impl PropConfig {
+    /// Build a config honoring the property-suite environment knobs:
+    /// `NWGRAPH_PROP_SEED` overrides `seed` (the CI seed matrix) and
+    /// `NWGRAPH_PROP_CASES` overrides `cases` (shrink case counts for
+    /// fast local runs, e.g. `NWGRAPH_PROP_CASES=4 cargo test`).
+    pub fn from_env(cases: u32, seed: u64, max_size: usize) -> PropConfig {
+        let env_u64 = |key: &str| std::env::var(key).ok().and_then(|s| s.parse::<u64>().ok());
+        PropConfig {
+            cases: env_u64("NWGRAPH_PROP_CASES").map(|c| c.max(1) as u32).unwrap_or(cases),
+            seed: env_u64("NWGRAPH_PROP_SEED").unwrap_or(seed),
+            max_size,
+        }
+    }
+}
+
 /// A generated case with the inputs that produced it (for shrinking).
 pub struct Case<T> {
     /// The generated value.
@@ -160,6 +175,19 @@ mod tests {
         // The shrink loop must have reduced the size to the minimal failing
         // value (2 or 3 depending on halving path), well below max.
         assert!(msg.contains("size 2") || msg.contains("size 3"), "{msg}");
+    }
+
+    #[test]
+    fn from_env_defaults_without_env() {
+        // The env vars are unset in unit-test runs that don't opt in.
+        if std::env::var("NWGRAPH_PROP_SEED").is_err()
+            && std::env::var("NWGRAPH_PROP_CASES").is_err()
+        {
+            let c = PropConfig::from_env(32, 0xAB, 48);
+            assert_eq!(c.cases, 32);
+            assert_eq!(c.seed, 0xAB);
+            assert_eq!(c.max_size, 48);
+        }
     }
 
     #[test]

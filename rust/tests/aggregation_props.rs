@@ -13,7 +13,8 @@ use nwgraph_hpx::graph::{generators, DistGraph};
 use nwgraph_hpx::testing::{forall, PropConfig};
 
 fn cfg(cases: u32) -> PropConfig {
-    PropConfig { cases, seed: 0xC0FFEE, max_size: 64 }
+    // NWGRAPH_PROP_SEED / NWGRAPH_PROP_CASES override seed and case count.
+    PropConfig::from_env(cases, 0xC0FFEE, 64)
 }
 
 fn gen_policy(rng: &mut generators::SplitMix64) -> FlushPolicy {
@@ -248,7 +249,7 @@ fn simreport_counters_equal_actual_sends() {
         FlushPolicy::Adaptive,
         FlushPolicy::Manual,
     ] {
-        let res = pagerank::async_hpx::run(
+        let res = pagerank::run_async(
             &dist,
             params,
             policy,
@@ -273,13 +274,13 @@ fn manual_drain_reproduces_optimized_variant_envelopes() {
     let g = generators::urand_directed(7, 8, 11);
     let dist = DistGraph::block(&g, 8);
     let params = PrParams { alpha: 0.85, iterations: 6 };
-    let manual = pagerank::async_hpx::run(
+    let manual = pagerank::run_async(
         &dist,
         params,
         FlushPolicy::Manual,
         SimConfig::deterministic(NetConfig::default()),
     );
-    let bsp = pagerank::bsp::run(&dist, params, SimConfig::deterministic(NetConfig::default()));
+    let bsp = pagerank::run_bsp(&dist, params, SimConfig::deterministic(NetConfig::default()));
     assert_eq!(manual.report.net.envelopes, bsp.report.net.envelopes);
     assert_eq!(manual.report.net.messages, bsp.report.net.messages);
 }
@@ -294,9 +295,9 @@ fn ablation_acceptance_rmat_8_localities() {
     let params = PrParams { alpha: 0.85, iterations: 10 };
     let want = pagerank::sequential::pagerank(&g, params);
     let sim = || SimConfig::deterministic(NetConfig::default());
-    let naive = pagerank::async_hpx::run(&dist, params, FlushPolicy::Unbatched, sim());
+    let naive = pagerank::run_async(&dist, params, FlushPolicy::Unbatched, sim());
     for policy in [FlushPolicy::Adaptive, FlushPolicy::Manual] {
-        let agg = pagerank::async_hpx::run(&dist, params, policy, sim());
+        let agg = pagerank::run_async(&dist, params, policy, sim());
         assert!(
             agg.report.net.envelopes * 10 <= naive.report.net.envelopes,
             "{policy:?}: {} vs naive {}",

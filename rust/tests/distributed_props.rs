@@ -14,7 +14,8 @@ fn det() -> SimConfig {
 }
 
 fn cfg(cases: u32) -> PropConfig {
-    PropConfig { cases, seed: 0xDEADBEEF, max_size: 48 }
+    // NWGRAPH_PROP_SEED / NWGRAPH_PROP_CASES override seed and case count.
+    PropConfig::from_env(cases, 0xDEADBEEF, 48)
 }
 
 /// Draw a flush policy uniformly from the interesting corners of the
@@ -65,7 +66,7 @@ fn prop_async_bfs_tree_valid_and_reaches_oracle_set() {
         },
         |(g, p, root)| {
             let dist = DistGraph::block(g, *p);
-            let res = bfs::async_hpx::run(&dist, *root, det());
+            let res = bfs::run_async(&dist, *root, det());
             bfs::validate_parents(g, *root, &res.parents)?;
             let want = bfs::sequential::bfs(g, *root);
             for v in 0..g.n() {
@@ -90,7 +91,7 @@ fn prop_bsp_bfs_levels_are_minimal() {
         },
         |(g, p, root)| {
             let dist = DistGraph::block(g, *p);
-            let res = bfs::level_sync::run(&dist, *root, det());
+            let res = bfs::run_bsp(&dist, *root, det());
             bfs::validate_parents(g, *root, &res.parents)?;
             let lv = bfs::tree_levels(*root, &res.parents);
             let d = bfs::sequential::distances(g, *root);
@@ -116,14 +117,14 @@ fn prop_pagerank_engines_agree_with_oracle() {
             let dist = DistGraph::block(g, *p);
             let want = pagerank::sequential::pagerank(g, params);
             for (name, res) in [
-                ("bsp", pagerank::bsp::run(&dist, params, det())),
+                ("bsp", pagerank::run_bsp(&dist, params, det())),
                 (
                     "naive",
-                    pagerank::async_hpx::run(&dist, params, FlushPolicy::Unbatched, det()),
+                    pagerank::run_async(&dist, params, FlushPolicy::Unbatched, det()),
                 ),
                 (
                     "opt",
-                    pagerank::async_hpx::run(&dist, params, FlushPolicy::Items(7), det()),
+                    pagerank::run_async(&dist, params, FlushPolicy::Items(7), det()),
                 ),
             ] {
                 let diff = pagerank::max_abs_diff(&res.ranks, &want);
@@ -162,7 +163,7 @@ fn prop_pagerank_mass_conserved_without_dangling() {
         },
         |(g, p)| {
             let dist = DistGraph::block(g, *p);
-            let res = pagerank::bsp::run(&dist, params, det());
+            let res = pagerank::run_bsp(&dist, params, det());
             let sum: f32 = res.ranks.iter().sum();
             if (sum - 1.0).abs() > 1e-3 {
                 return Err(format!("rank mass {sum} != 1"));
@@ -245,9 +246,9 @@ fn prop_results_independent_of_partition_count() {
         &cfg(15),
         |rng, size| gen::digraph(rng, size + 4),
         |g| {
-            let base = pagerank::bsp::run(&DistGraph::block(g, 1), params, det());
+            let base = pagerank::run_bsp(&DistGraph::block(g, 1), params, det());
             for p in [2u32, 3, 5, 8] {
-                let r = pagerank::bsp::run(&DistGraph::block(g, p), params, det());
+                let r = pagerank::run_bsp(&DistGraph::block(g, p), params, det());
                 let diff = pagerank::max_abs_diff(&r.ranks, &base.ranks);
                 if diff > 1e-5 {
                     return Err(format!("p={p}: diff {diff}"));
@@ -278,14 +279,14 @@ fn prop_async_aggregated_bfs_levels_match_bsp_and_sequential() {
             let dist = DistGraph::block(g, *p);
             let want = bfs::sequential::distances(g, *root);
 
-            let async_res = bfs::async_hpx::run_with_policy(&dist, *root, *policy, det());
+            let async_res = bfs::run_async_with(&dist, *root, *policy, det());
             bfs::validate_parents(g, *root, &async_res.parents)?;
             let async_lv = bfs::tree_levels(*root, &async_res.parents);
             if async_lv != want {
                 return Err(format!("async[{policy:?}] levels != sequential"));
             }
 
-            let bsp_res = bfs::level_sync::run(&dist, *root, det());
+            let bsp_res = bfs::run_bsp(&dist, *root, det());
             let bsp_lv = bfs::tree_levels(*root, &bsp_res.parents);
             if bsp_lv != want {
                 return Err("bsp levels != sequential".into());
@@ -312,7 +313,7 @@ fn prop_async_aggregated_pagerank_matches_sequential() {
         |(g, p, policy)| {
             let dist = DistGraph::block(g, *p);
             let want = pagerank::sequential::pagerank(g, params);
-            let res = pagerank::async_hpx::run(&dist, params, *policy, det());
+            let res = pagerank::run_async(&dist, params, *policy, det());
             let diff = pagerank::max_abs_diff(&res.ranks, &want);
             if diff > 1e-4 {
                 return Err(format!("{policy:?}: diff {diff}"));
@@ -341,8 +342,8 @@ fn prop_aggregation_preserves_bfs_semantics() {
         },
         |(g, p)| {
             let dist = DistGraph::block(g, *p);
-            let plain = bfs::async_hpx::run(&dist, 0, det());
-            let packed = bfs::async_hpx::run(
+            let plain = bfs::run_async(&dist, 0, det());
+            let packed = bfs::run_async(
                 &dist,
                 0,
                 SimConfig {

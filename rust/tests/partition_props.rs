@@ -20,17 +20,10 @@ fn det() -> SimConfig {
     SimConfig::deterministic(NetConfig::default())
 }
 
-/// Base seed for the property runs; `NWGRAPH_PROP_SEED` overrides it (the
-/// CI seed matrix sets it to two fixed values).
-fn prop_seed() -> u64 {
-    std::env::var("NWGRAPH_PROP_SEED")
-        .ok()
-        .and_then(|s| s.parse().ok())
-        .unwrap_or(0x9A57_17)
-}
-
 fn cfg(cases: u32) -> PropConfig {
-    PropConfig { cases, seed: prop_seed(), max_size: 48 }
+    // NWGRAPH_PROP_SEED (CI seed matrix) and NWGRAPH_PROP_CASES (fast
+    // local runs) override the defaults.
+    PropConfig::from_env(cases, 0x9A57_17, 48)
 }
 
 const LOCALITIES: [u32; 4] = [1, 2, 4, 8];
@@ -97,7 +90,7 @@ fn prop_bfs_levels_identical_across_schemes() {
             for kind in PartitionKind::all() {
                 for p in LOCALITIES {
                     let dist = DistGraph::build_with(g, kind.build(g, p));
-                    let res = bfs::async_hpx::run(&dist, *root, det());
+                    let res = bfs::run_async(&dist, *root, det());
                     bfs::validate_parents(g, *root, &res.parents)?;
                     if bfs::tree_levels(*root, &res.parents) != want {
                         return Err(format!("{kind:?} p={p}: BFS levels diverge"));
@@ -120,7 +113,7 @@ fn prop_pagerank_ranks_identical_across_schemes() {
             for kind in PartitionKind::all() {
                 for p in LOCALITIES {
                     let dist = DistGraph::build_with(g, kind.build(g, p));
-                    let res = pagerank::async_hpx::run(
+                    let res = pagerank::run_async(
                         &dist,
                         params,
                         nwgraph_hpx::amt::FlushPolicy::Adaptive,

@@ -32,17 +32,16 @@ fn det() -> SimConfig {
     SimConfig::deterministic(NetConfig::default())
 }
 
-/// Base seed for the property runs; `NWGRAPH_PROP_SEED` overrides it (the
-/// CI seed matrix sets it to two fixed values).
-fn prop_seed() -> u64 {
-    std::env::var("NWGRAPH_PROP_SEED")
-        .ok()
-        .and_then(|s| s.parse().ok())
-        .unwrap_or(0xDE17A5)
+fn cfg(cases: u32) -> PropConfig {
+    // NWGRAPH_PROP_CASES additionally shrinks case counts for fast local
+    // runs; the seed matrix still comes through NWGRAPH_PROP_SEED.
+    PropConfig::from_env(cases, 0xDE17A5, 48)
 }
 
-fn cfg(cases: u32) -> PropConfig {
-    PropConfig { cases, seed: prop_seed(), max_size: 48 }
+/// Base seed for the non-`forall` benchmark pins; honors
+/// `NWGRAPH_PROP_SEED` through the same [`PropConfig::from_env`] path.
+fn prop_seed() -> u64 {
+    cfg(1).seed
 }
 
 /// Draw a flush policy uniformly from the interesting corners of the
@@ -95,7 +94,7 @@ fn prop_delta_stepping_matches_dijkstra_oracle() {
             let want = sssp::dijkstra(gw, *root);
             for p in [1u32, 2, 4, 8] {
                 let dist = DistGraph::block(gw, p);
-                let res = sssp::delta::run_with(gw, &dist, *root, *delta, *policy, det());
+                let res = sssp::run_delta_with(gw, &dist, *root, *delta, *policy, det());
                 check_against(&want, &res.dist, &format!("p={p} delta={delta} {policy:?}"))?;
                 // Combiner conservation: at quiescence every accumulated
                 // relaxation was either folded away or shipped.
@@ -134,7 +133,7 @@ fn prop_delta_work_efficiency_le_async_on_rmat() {
         },
         |(gw, p, policy)| {
             let dist = DistGraph::block(gw, *p);
-            let d = sssp::delta::run_with(gw, &dist, 0, tuned_delta(gw), *policy, det());
+            let d = sssp::run_delta_with(gw, &dist, 0, tuned_delta(gw), *policy, det());
             let a = sssp::run_async(gw, &dist, 0, det());
             check_against(&a.dist, &d.dist, "delta vs async")?;
             let (dr, ar) = (d.report.work.relaxations, a.report.work.relaxations);
@@ -155,7 +154,7 @@ fn delta_strictly_beats_async_on_benchmark_rmat() {
     let g = generators::kron(10, 8, prop_seed());
     let gw = generators::with_random_weights(&g, 1.0, 10.0, prop_seed() + 1);
     let dist = DistGraph::block(&gw, 8);
-    let d = sssp::delta::run_with(&gw, &dist, 0, tuned_delta(&gw), FlushPolicy::Adaptive, det());
+    let d = sssp::run_delta_with(&gw, &dist, 0, tuned_delta(&gw), FlushPolicy::Adaptive, det());
     let a = sssp::run_async(&gw, &dist, 0, det());
     check_against(&a.dist, &d.dist, "delta vs async").unwrap();
     assert!(
@@ -191,7 +190,7 @@ fn prop_delta_inf_matches_bsp_bellman_ford_counts() {
             };
             let dist = DistGraph::block(gw, *p);
             let d =
-                sssp::delta::run_with(gw, &dist, root, f32::INFINITY, FlushPolicy::Manual, det());
+                sssp::run_delta_with(gw, &dist, root, f32::INFINITY, FlushPolicy::Manual, det());
             let b = sssp::run_bsp(gw, &dist, root, det());
             if d.dist != b.dist {
                 return Err("distances differ".into());
@@ -230,7 +229,7 @@ fn all_engines_match(gw: &Csr, root: u32, ps: &[u32]) {
         check_against(&want, &sssp::run_bsp(gw, &dist, root, det()).dist, "bsp").unwrap();
         for delta in [0.1f32, 2.0, f32::INFINITY] {
             let res =
-                sssp::delta::run_with(gw, &dist, root, delta, FlushPolicy::Adaptive, det());
+                sssp::run_delta_with(gw, &dist, root, delta, FlushPolicy::Adaptive, det());
             check_against(&want, &res.dist, &format!("delta={delta} p={p}")).unwrap();
         }
     }
@@ -284,7 +283,7 @@ fn single_vertex_graph() {
         for res in [
             sssp::run_async(&gw, &dist, 0, det()),
             sssp::run_bsp(&gw, &dist, 0, det()),
-            sssp::delta::run_with(&gw, &dist, 0, 1.0, FlushPolicy::Manual, det()),
+            sssp::run_delta_with(&gw, &dist, 0, 1.0, FlushPolicy::Manual, det()),
         ] {
             assert_eq!(res.dist, vec![0.0], "p={p}");
         }
@@ -323,7 +322,7 @@ fn duplicate_parallel_edges_take_the_min() {
         check_against(&want, &sssp::run_async(&gw, &dist, 0, det()).dist, "async").unwrap();
         check_against(&want, &sssp::run_bsp(&gw, &dist, 0, det()).dist, "bsp").unwrap();
         for delta in [0.5f32, 2.0, f32::INFINITY] {
-            let res = sssp::delta::run_with(&gw, &dist, 0, delta, FlushPolicy::Unbatched, det());
+            let res = sssp::run_delta_with(&gw, &dist, 0, delta, FlushPolicy::Unbatched, det());
             check_against(&want, &res.dist, &format!("delta={delta}")).unwrap();
         }
     }
