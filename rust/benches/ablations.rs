@@ -18,6 +18,12 @@
 //!   vertex/edge imbalance and replication-factor columns. The vertex cut
 //!   must reach lower edge imbalance than block (the tentpole acceptance
 //!   criterion) at the price of replication traffic.
+//! * **A7** — adaptive coalescing on kron10 at 8 localities: the static
+//!   break-even `adaptive` policy vs the latency-observing self-tuner vs
+//!   `time:US` flush windows, × {block, vertex_cut} × {bfs-async,
+//!   pagerank-async, sssp-delta}, with per-slot-space observed-latency
+//!   columns. The acceptance pin (`LatencyAdaptive` envelopes ≤ static
+//!   `Adaptive` on the vertex cut) lives in `tests/engine_props.rs`.
 //!
 //! `cargo bench --bench ablations`
 
@@ -108,4 +114,9 @@ fn main() {
     cfg6.localities = vec![8];
     cfg6.generator = "kron".into();
     print!("{}", experiment::ablation_partition_schemes(&cfg6).expect("A6 failed").render());
+
+    // A7: adaptive coalescing on kron10 at 8 localities — the acceptance
+    // point for the latency-observing flush layer (same graph shape as
+    // the release-mode envelope pin in tests/engine_props.rs).
+    print!("{}", experiment::ablation_adaptive_coalescing(&cfg6).expect("A7 failed").render());
 }

@@ -1,39 +1,91 @@
 //! Message aggregation: typed per-destination combiners with pluggable
-//! flush policies.
+//! flush policies, a self-tuning coalescing layer, and a zero-allocation
+//! steady-state hot path.
 //!
 //! The paper's central negative result is that fine-grained asynchronous
 //! algorithms lose to BSP because per-message CPU/latency overheads
-//! dominate; its follow-up work and the AM++ lineage show that a
-//! *runtime-level* coalescing layer — not per-algorithm hacks — is what
+//! dominate; its follow-up ("Overcoming Latency-bound Limitations of
+//! Distributed Graph Algorithms using the HPX Runtime System") and the
+//! AM++ lineage show that a *runtime-level* coalescing layer — one that
+//! adapts to observed network behaviour, not per-algorithm hacks — is what
 //! closes the gap. This module is that layer: every asynchronous algorithm
 //! folds its remote actions into an [`Aggregator`] instead of calling
 //! [`Ctx::send`](super::sim::Ctx::send) per action.
 //!
-//! An [`Aggregator`] keeps one dense combiner per destination locality,
-//! indexed by **destination-local slot**. For master-bound traffic the
-//! slot is the destination's dense owned-row index
-//! ([`PartitionScheme::master_index`](crate::graph::partition::PartitionScheme::master_index),
-//! precomputed per ghost in the
-//! [`Shard`](crate::graph::Shard) ghost table); for mirror-bound scatter
-//! it is the destination's ghost-row slot (the master's mirror table).
-//! Either way the receiver applies batch items directly by index with no
-//! translation, and nothing assumes the partition is contiguous — this is
-//! what lets hash and vertex-cut schemes ride the same combiner layer as
-//! the paper's block layout. Pushing a value either claims an empty slot
-//! or *folds* into the pending one through the reduction hook (sum for
-//! PageRank contributions, min for BFS levels / SSSP distances / CC
-//! labels), so a flushed batch carries at most one item per destination
-//! slot. When the [`FlushPolicy`] threshold fires, the destination's
-//! batch is handed back to the caller to ship as one envelope; whatever is
-//! still buffered is shipped by an explicit [`Aggregator::drain`] at the
-//! end of a handler or superstep phase (the quiescence/barrier drain).
+//! # Slot spaces
 //!
-//! [`AggStats`] counts items, folds, and emitted envelopes; algorithm
-//! drivers merge them into [`SimReport::agg`](super::metrics::SimReport)
-//! so every experiment reports the naive-vs-aggregated axis.
+//! An [`Aggregator`] keeps one dense combiner per destination locality,
+//! indexed by **destination-local slot**, and is constructed for exactly
+//! one [`SlotSpace`]:
+//!
+//! * [`SlotSpace::Master`] — the slot is the destination's dense owned-row
+//!   index ([`PartitionScheme::master_index`](crate::graph::partition::PartitionScheme::master_index),
+//!   precomputed per ghost in the [`Shard`](crate::graph::Shard) ghost
+//!   table). Ghost-row improvements and remote emissions ride here.
+//! * [`SlotSpace::Mirror`] — the slot is the destination's ghost-row slot
+//!   (the master's mirror table). Master→mirror scatter rides here.
+//!
+//! The two spaces have very different fan-in under vertex cuts (a few hot
+//! masters absorb most relaxations; scatter spreads thin across mirrors),
+//! which is why the engines hold one `Aggregator` per space and why the
+//! latency estimator below is keyed by `(destination, slot space)` — each
+//! instance tunes its own destinations independently.
+//!
+//! # Flush policies
+//!
+//! Pushing a value either claims an empty slot or *folds* into the pending
+//! one through the reduction hook (sum for PageRank contributions, min for
+//! BFS levels / SSSP distances / CC labels), so a flushed batch carries at
+//! most one item per destination slot. When the [`FlushPolicy`] fires, the
+//! destination's batch is handed back to the caller to ship as one
+//! envelope; whatever is still buffered is shipped by an explicit
+//! [`Aggregator::drain`] at the end of a handler or superstep phase (the
+//! quiescence/barrier drain). Two policies go beyond static item counts:
+//!
+//! * [`FlushPolicy::TimeWindow`] — flush a destination once its *oldest*
+//!   pending item has waited the window out. Engines drive it with the sim
+//!   clock through [`Aggregator::poll`] at handler/step boundaries and a
+//!   timer at [`Aggregator::next_deadline`]; see the poll contract in
+//!   `ARCHITECTURE.md`. `time:0` degenerates to [`FlushPolicy::Unbatched`].
+//! * [`FlushPolicy::LatencyAdaptive`] — starts at the static break-even
+//!   threshold ([`adaptive_items`]) and then *observes*: every emitted
+//!   envelope is traced through the runtime
+//!   ([`Ctx::send_traced`](super::sim::Ctx::send_traced)), the delivery
+//!   ack feeds [`Aggregator::observe_ack`], and a per-destination EWMA +
+//!   hill-climbing tuner grows the item threshold while the amortized
+//!   per-item latency share keeps falling and shrinks it back toward the
+//!   break-even floor when queueing delay inflates observed latency.
+//!
+//! # Hot path
+//!
+//! Combiner storage is flat: one dense value array per destination plus a
+//! generation-stamped occupancy array — a push is one integer compare
+//! (stamp vs. the destination's current generation), never an `Option`
+//! discriminant; a flush retires the whole combiner by bumping the
+//! generation instead of clearing slots. Flushed batch vectors come from a
+//! recycle pool ([`Aggregator::recycle`] — receivers hand consumed batch
+//! vectors back), so steady-state aggregation allocates nothing;
+//! [`AggStats::pool_reuses`]/[`AggStats::pool_allocs`] measure it.
+//!
+//! [`AggStats`] counts items, folds, emitted envelopes, pool traffic, and
+//! delivery observations; algorithm drivers merge them into
+//! [`SimReport::agg`](super::metrics::SimReport) (and per-slot-space into
+//! `agg_master`/`agg_mirror`) so every experiment reports the
+//! naive-vs-aggregated axis without side channels.
 
 use super::net::NetConfig;
-use super::sim::LocalityId;
+use super::sim::{LocalityId, SimTime};
+
+/// Which destination-local index space an [`Aggregator`] combines over.
+/// See the module docs; the engines hold one instance per space so
+/// master-bound and mirror-bound traffic tune and report independently.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SlotSpace {
+    /// Slots are dense owned-row (master) indices at the destination.
+    Master,
+    /// Slots are ghost-row (mirror) indices at the destination.
+    Mirror,
+}
 
 /// When a per-destination combiner is flushed into an envelope.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -45,48 +97,106 @@ pub enum FlushPolicy {
     Items(usize),
     /// Flush a destination once its payload reaches this many bytes.
     Bytes(usize),
-    /// Derive the item threshold from the [`NetConfig`] cost model: batch
-    /// until the amortized per-item share of the fixed envelope cost
-    /// (latency + per-envelope CPU + framing) drops below 10% of the
-    /// marginal per-item cost.
+    /// Derive a static item threshold from the [`NetConfig`] cost model
+    /// once, at construction time (see [`adaptive_items`]).
     Adaptive,
+    /// Flush a destination when its oldest pending item has waited this
+    /// many microseconds, measured on the simulated clock via
+    /// [`Aggregator::poll`]. `TimeWindow(0)` ≡ [`FlushPolicy::Unbatched`].
+    TimeWindow(u64),
+    /// Self-tuning item threshold: starts at the [`adaptive_items`]
+    /// break-even and hill-climbs on observed per-envelope delivery
+    /// latency fed back through [`Aggregator::observe_ack`], separately
+    /// per destination.
+    LatencyAdaptive,
     /// Never auto-flush; everything waits for the explicit drain at the
     /// end of the handler or superstep phase (maximal batching).
     Manual,
 }
 
 impl FlushPolicy {
-    /// Parse a config/CLI spelling: `unbatched`, `adaptive`, `manual`,
-    /// `items:N`, `bytes:N`.
-    pub fn parse(s: &str) -> Option<FlushPolicy> {
+    /// Parse a config/CLI spelling: `unbatched` (alias `naive`),
+    /// `items:N`, `bytes:N`, `adaptive`, `latency`, `time:US`, `manual`.
+    /// Zero thresholds that would silently degenerate (`items:0`,
+    /// `bytes:0`) are rejected with an explanation; `time:0` is accepted
+    /// as the documented [`FlushPolicy::Unbatched`] degeneration.
+    pub fn parse(s: &str) -> std::result::Result<FlushPolicy, String> {
         match s {
-            "unbatched" | "naive" => return Some(FlushPolicy::Unbatched),
-            "adaptive" => return Some(FlushPolicy::Adaptive),
-            "manual" => return Some(FlushPolicy::Manual),
+            "unbatched" | "naive" => return Ok(FlushPolicy::Unbatched),
+            "adaptive" => return Ok(FlushPolicy::Adaptive),
+            "latency" | "latency-adaptive" => return Ok(FlushPolicy::LatencyAdaptive),
+            "manual" => return Ok(FlushPolicy::Manual),
             _ => {}
         }
-        let (kind, val) = s.split_once(':')?;
-        let n: usize = val.parse().ok()?;
+        let bad = || {
+            format!(
+                "unknown flush policy `{s}` (want unbatched|items:N|bytes:N|adaptive|\
+                 latency|time:US|manual)"
+            )
+        };
+        let (kind, val) = s.split_once(':').ok_or_else(bad)?;
+        let n: u64 = val.parse().map_err(|_| bad())?;
         match kind {
-            "items" => Some(FlushPolicy::Items(n)),
-            "bytes" => Some(FlushPolicy::Bytes(n)),
-            _ => None,
+            "items" if n == 0 => Err(
+                "flush policy `items:0` would flush before any item is buffered; use \
+                 `unbatched` for per-item envelopes or `manual` for drain-only batching"
+                    .into(),
+            ),
+            "bytes" if n == 0 => Err(
+                "flush policy `bytes:0` would flush before any item is buffered; use \
+                 `unbatched` for per-item envelopes or `manual` for drain-only batching"
+                    .into(),
+            ),
+            "items" => Ok(FlushPolicy::Items(n as usize)),
+            "bytes" => Ok(FlushPolicy::Bytes(n as usize)),
+            "time" => Ok(FlushPolicy::TimeWindow(n)),
+            _ => Err(bad()),
         }
     }
 
-    /// Distinct-item threshold that triggers a flush; `None` = drain-only.
+    /// Distinct-item threshold that triggers a flush; `None` = drain-only
+    /// (or, for a non-zero [`FlushPolicy::TimeWindow`], time-driven via
+    /// [`Aggregator::poll`]). For [`FlushPolicy::LatencyAdaptive`] this is
+    /// the *starting* threshold; the per-destination tuners move it.
     pub fn item_threshold(&self, net: &NetConfig, item_bytes: usize) -> Option<usize> {
         match *self {
             FlushPolicy::Unbatched => Some(1),
             FlushPolicy::Items(k) => Some(k.max(1)),
             FlushPolicy::Bytes(b) => Some((b / item_bytes.max(1)).max(1)),
-            FlushPolicy::Adaptive => Some(adaptive_items(net, item_bytes)),
+            FlushPolicy::Adaptive | FlushPolicy::LatencyAdaptive => {
+                Some(adaptive_items(net, item_bytes))
+            }
+            FlushPolicy::TimeWindow(0) => Some(1),
+            FlushPolicy::TimeWindow(_) => None,
             FlushPolicy::Manual => None,
         }
     }
+
+    /// The time window in microseconds when this policy is a non-zero
+    /// [`FlushPolicy::TimeWindow`] (the zero window is the unbatched
+    /// degeneration and needs no clock).
+    pub fn time_window_us(&self) -> Option<f64> {
+        match *self {
+            FlushPolicy::TimeWindow(w) if w > 0 => Some(w as f64),
+            _ => None,
+        }
+    }
+
+    /// Whether emitted batches should be traced through the runtime so
+    /// delivery latency is observed ([`Aggregator::observe_ack`]). True
+    /// for the policies the A7 ablation compares — the static break-even,
+    /// the time window, and the self-tuner — so their observed-latency
+    /// columns populate; the tuner is the only one that *acts* on it.
+    pub fn traced(&self) -> bool {
+        matches!(
+            *self,
+            FlushPolicy::Adaptive | FlushPolicy::LatencyAdaptive | FlushPolicy::TimeWindow(1..)
+        )
+    }
 }
 
-/// Break-even batch size for [`FlushPolicy::Adaptive`]: the item count at
+/// Break-even batch size for [`FlushPolicy::Adaptive`] (and the starting
+/// point / floor of [`FlushPolicy::LatencyAdaptive`]): the item count at
 /// which the fixed per-envelope cost amortizes to 10% of the marginal
 /// per-item cost. On a zero-cost network there is nothing to amortize and
 /// a fixed 1024 is used.
@@ -106,16 +216,24 @@ pub fn adaptive_items(net: &NetConfig, item_bytes: usize) -> usize {
 /// sorted by slot (deterministic wire order; slots ascend with global ids,
 /// so this is the same order the old global-id batches had). Algorithms
 /// wrap this in their message enum; [`Batch::wire_bytes`] / [`Batch::len`]
-/// feed the [`Message`](super::sim::Message) impl.
+/// feed the [`Message`](super::sim::Message) impl. Receivers should hand
+/// the consumed vector back through [`Aggregator::recycle`] (via
+/// [`Batch::into_items`]) so the steady state allocates nothing.
 #[derive(Debug, Clone)]
 pub struct Batch<V> {
     /// Folded items, sorted by destination-local slot.
     pub items: Vec<(u32, V)>,
     item_bytes: usize,
+    /// Delivery-trace token under traced policies (see
+    /// [`FlushPolicy::traced`]); the shipper passes it to
+    /// [`Ctx::send_traced`](super::sim::Ctx::send_traced) and routes the
+    /// ack back to [`Aggregator::observe_ack`].
+    token: Option<u64>,
 }
 
 impl<V> Batch<V> {
-    /// Serialized payload size (items x per-item wire bytes).
+    /// Serialized payload size (items x per-item wire bytes). The trace
+    /// token is runtime bookkeeping, not payload.
     pub fn wire_bytes(&self) -> usize {
         self.items.len() * self.item_bytes
     }
@@ -129,10 +247,22 @@ impl<V> Batch<V> {
     pub fn is_empty(&self) -> bool {
         self.items.is_empty()
     }
+
+    /// Delivery-trace token, when the emitting policy is traced.
+    pub fn token(&self) -> Option<u64> {
+        self.token
+    }
+
+    /// Consume the batch, returning the item vector (e.g. to drain it and
+    /// hand the empty vector to [`Aggregator::recycle`]).
+    pub fn into_items(self) -> Vec<(u32, V)> {
+        self.items
+    }
 }
 
 /// Aggregation accounting, merged into
-/// [`SimReport::agg`](super::metrics::SimReport) by algorithm drivers.
+/// [`SimReport::agg`](super::metrics::SimReport) (and per-slot-space into
+/// `agg_master` / `agg_mirror`) by the engines after a run.
 #[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
 pub struct AggStats {
     /// Values pushed through [`Aggregator::accumulate`].
@@ -145,10 +275,20 @@ pub struct AggStats {
     pub envelopes: u64,
     /// Items across all emitted batches.
     pub sent_items: u64,
-    /// Batches emitted because the policy threshold fired.
+    /// Batches emitted because the policy threshold (item count or time
+    /// window) fired.
     pub policy_flushes: u64,
     /// Batches emitted by explicit drains (handler end / barrier).
     pub drain_flushes: u64,
+    /// Batch vectors served from the recycle pool.
+    pub pool_reuses: u64,
+    /// Batch vectors freshly allocated (pool empty).
+    pub pool_allocs: u64,
+    /// Delivery observations received ([`Aggregator::observe_ack`]).
+    pub acks: u64,
+    /// Sum of observed per-envelope delivery latencies, in nanoseconds
+    /// (fixed point so the stats block stays `Eq`-comparable).
+    pub ack_latency_ns: u64,
 }
 
 impl AggStats {
@@ -160,6 +300,10 @@ impl AggStats {
         self.sent_items += other.sent_items;
         self.policy_flushes += other.policy_flushes;
         self.drain_flushes += other.drain_flushes;
+        self.pool_reuses += other.pool_reuses;
+        self.pool_allocs += other.pool_allocs;
+        self.acks += other.acks;
+        self.ack_latency_ns += other.ack_latency_ns;
     }
 
     /// Mean items per emitted batch.
@@ -170,25 +314,154 @@ impl AggStats {
             self.items as f64 / self.envelopes as f64
         }
     }
+
+    /// Mean observed per-envelope delivery latency, us (0 when untraced).
+    pub fn mean_obs_latency_us(&self) -> f64 {
+        if self.acks == 0 {
+            0.0
+        } else {
+            self.ack_latency_ns as f64 / 1e3 / self.acks as f64
+        }
+    }
+
+    /// Fraction of emitted batches whose vector came from the recycle
+    /// pool (1.0 == allocation-free steady state reached immediately).
+    pub fn pool_reuse_ratio(&self) -> f64 {
+        let total = self.pool_reuses + self.pool_allocs;
+        if total == 0 {
+            0.0
+        } else {
+            self.pool_reuses as f64 / total as f64
+        }
+    }
 }
+
+/// EWMA epoch length: tuning decisions are made every this many acks.
+const TUNER_EPOCH: u32 = 8;
+/// EWMA smoothing factor for the latency / per-item-cost estimators.
+const TUNER_ALPHA: f64 = 0.25;
+/// Observed envelope latency above this multiple of the uncongested floor
+/// is read as queueing delay: time to shrink the batch size.
+const TUNER_QUEUE_INFLATION: f64 = 4.0;
+/// The threshold may grow to at most this multiple of the break-even
+/// floor (and never below the floor — batching below break-even provably
+/// wastes, which is also what pins `LatencyAdaptive` envelopes at or
+/// under the static `Adaptive` count).
+const TUNER_MAX_GROWTH: usize = 64;
+
+/// Per-destination latency estimator + hill climber for
+/// [`FlushPolicy::LatencyAdaptive`]. Purely observation-driven: it sees
+/// only `(observed envelope latency, items carried)` pairs from
+/// [`Aggregator::observe_ack`] and outputs the destination's current item
+/// threshold. Deterministic — state advances only on acks, which in the
+/// simulated runtime arrive at deterministic times.
+#[derive(Debug, Clone)]
+struct Tuner {
+    /// Current item threshold for this destination.
+    limit: usize,
+    /// EWMA of per-item latency share (envelope latency / items).
+    per_item_ewma: f64,
+    /// EWMA of whole-envelope delivery latency.
+    latency_ewma: f64,
+    /// Smallest envelope latency seen — the uncongested baseline.
+    floor_latency: f64,
+    /// Acks since the last tuning decision.
+    epoch_acks: u32,
+    /// Per-item cost at the last decision (hill-climb comparison point).
+    last_cost: f64,
+    /// Current hill-climb direction.
+    grow: bool,
+}
+
+impl Tuner {
+    fn new(base: usize) -> Self {
+        Tuner {
+            limit: base,
+            per_item_ewma: 0.0,
+            latency_ewma: 0.0,
+            floor_latency: f64::INFINITY,
+            epoch_acks: 0,
+            last_cost: f64::INFINITY,
+            grow: true,
+        }
+    }
+
+    fn observe(&mut self, latency_us: f64, items: u32, base: usize) {
+        let per_item = latency_us / items.max(1) as f64;
+        if self.epoch_acks == 0 && self.last_cost.is_infinite() && self.per_item_ewma == 0.0 {
+            self.per_item_ewma = per_item;
+            self.latency_ewma = latency_us;
+        } else {
+            self.per_item_ewma += TUNER_ALPHA * (per_item - self.per_item_ewma);
+            self.latency_ewma += TUNER_ALPHA * (latency_us - self.latency_ewma);
+        }
+        self.floor_latency = self.floor_latency.min(latency_us);
+        self.epoch_acks += 1;
+        if self.epoch_acks < TUNER_EPOCH {
+            return;
+        }
+        self.epoch_acks = 0;
+        let cost = self.per_item_ewma;
+        if self.latency_ewma > TUNER_QUEUE_INFLATION * self.floor_latency.max(f64::MIN_POSITIVE) {
+            // Queueing delay inflates observed latency: envelopes are
+            // waiting on each other, not on the wire. Back off.
+            self.grow = false;
+        } else if cost > self.last_cost * 1.02 {
+            // Amortized per-item cost got worse: reverse direction.
+            self.grow = !self.grow;
+        }
+        // else: cost still falling (or flat) — keep climbing.
+        self.last_cost = cost;
+        self.limit = if self.grow {
+            (self.limit.saturating_mul(2)).min(base * TUNER_MAX_GROWTH)
+        } else {
+            (self.limit / 2).max(base)
+        };
+    }
+}
+
+/// Batch vectors kept for reuse (bounds pool memory).
+const POOL_CAP: usize = 32;
+/// `limit` sentinel: no item-count threshold (drain/time-driven only).
+const NO_LIMIT: usize = usize::MAX;
 
 /// Typed per-destination message combiner. See the module docs.
 pub struct Aggregator<V> {
     here: LocalityId,
-    /// Dense pending slots per destination (destination-local slot index).
-    slots: Vec<Vec<Option<V>>>,
+    space: SlotSpace,
+    /// Dense value slots per destination; a slot holds live data iff its
+    /// stamp equals the destination's current generation.
+    values: Vec<Vec<V>>,
+    stamp: Vec<Vec<u32>>,
+    generation: Vec<u32>,
     /// Occupied slot offsets per destination, in first-touch order.
     touched: Vec<Vec<u32>>,
-    threshold: Option<usize>,
+    /// Per-destination flush threshold ([`NO_LIMIT`] = drain/time only).
+    limit: Vec<usize>,
+    /// First-touch time per destination (drives [`FlushPolicy::TimeWindow`]).
+    oldest: Vec<SimTime>,
+    window_us: Option<f64>,
+    /// All destinations flush at one item (no combiner state at all).
+    unbatched: bool,
+    /// Per-destination hill climbers ([`FlushPolicy::LatencyAdaptive`]).
+    tuners: Vec<Tuner>,
+    /// Break-even threshold — the tuners' floor and starting point.
+    base_items: usize,
+    traced: bool,
+    next_token: u64,
+    /// Outstanding traced envelopes: `(token, destination, items)`.
+    inflight: Vec<(u64, LocalityId, u32)>,
+    pool: Vec<Vec<(u32, V)>>,
     item_bytes: usize,
     fold: fn(&mut V, V),
     stats: AggStats,
 }
 
-impl<V: Clone> Aggregator<V> {
+impl<V: Clone + Default> Aggregator<V> {
     /// Create a combiner over the destinations' dense slot spaces
     /// (`counts[l]` = locality `l`'s slot count: its owned-row count for
-    /// master-bound traffic, its ghost-row count for mirror scatter —
+    /// [`SlotSpace::Master`] traffic, its ghost-row count for
+    /// [`SlotSpace::Mirror`] scatter —
     /// [`DistGraph::owned_counts`](crate::graph::DistGraph::owned_counts) /
     /// [`DistGraph::ghost_counts`](crate::graph::DistGraph::ghost_counts)).
     /// `item_bytes` is the per-item wire size; `fold` merges a new value
@@ -197,28 +470,49 @@ impl<V: Clone> Aggregator<V> {
     pub fn new(
         counts: &[usize],
         here: LocalityId,
+        space: SlotSpace,
         policy: FlushPolicy,
         net: &NetConfig,
         item_bytes: usize,
         fold: fn(&mut V, V),
     ) -> Self {
         let threshold = policy.item_threshold(net, item_bytes);
-        let slots = counts
+        let unbatched = threshold == Some(1);
+        let base_items = adaptive_items(net, item_bytes);
+        let n = counts.len();
+        let alloc = |c: usize, l: usize| !(l == here as usize || unbatched || c == 0);
+        let values = counts
             .iter()
             .enumerate()
-            .map(|(l, &c)| {
-                if l == here as usize || threshold == Some(1) {
-                    Vec::new() // never buffered
-                } else {
-                    vec![None; c]
-                }
-            })
+            .map(|(l, &c)| if alloc(c, l) { vec![V::default(); c] } else { Vec::new() })
             .collect();
+        let stamp = counts
+            .iter()
+            .enumerate()
+            .map(|(l, &c)| if alloc(c, l) { vec![0u32; c] } else { Vec::new() })
+            .collect();
+        let tuners = if policy == FlushPolicy::LatencyAdaptive {
+            vec![Tuner::new(base_items); n]
+        } else {
+            Vec::new()
+        };
         Aggregator {
             here,
-            slots,
-            touched: vec![Vec::new(); counts.len()],
-            threshold,
+            space,
+            values,
+            stamp,
+            generation: vec![1; n],
+            touched: vec![Vec::new(); n],
+            limit: vec![threshold.unwrap_or(NO_LIMIT); n],
+            oldest: vec![0.0; n],
+            window_us: policy.time_window_us(),
+            unbatched,
+            tuners,
+            base_items,
+            traced: policy.traced(),
+            next_token: 0,
+            inflight: Vec::new(),
+            pool: Vec::new(),
             item_bytes,
             fold,
             stats: AggStats::default(),
@@ -227,41 +521,101 @@ impl<V: Clone> Aggregator<V> {
 
     /// Number of destinations (localities) configured.
     pub fn n_destinations(&self) -> usize {
-        self.slots.len()
+        self.values.len()
+    }
+
+    /// Which destination-local index space this combiner covers.
+    pub fn space(&self) -> SlotSpace {
+        self.space
+    }
+
+    /// The time window in us when the policy is a non-zero
+    /// [`FlushPolicy::TimeWindow`] — callers that see `Some` must uphold
+    /// the poll contract (call [`Aggregator::poll`] at handler/step
+    /// boundaries and keep a timer armed at [`Aggregator::next_deadline`]).
+    pub fn time_window_us(&self) -> Option<f64> {
+        self.window_us
+    }
+
+    /// Grab a batch vector from the recycle pool (or allocate).
+    fn fresh_items(&mut self, cap_hint: usize) -> Vec<(u32, V)> {
+        match self.pool.pop() {
+            Some(v) => {
+                self.stats.pool_reuses += 1;
+                v
+            }
+            None => {
+                self.stats.pool_allocs += 1;
+                Vec::with_capacity(cap_hint)
+            }
+        }
+    }
+
+    /// Hand a consumed batch vector back for reuse. Receivers call this
+    /// after draining a delivered batch's items; steady-state aggregation
+    /// then allocates nothing.
+    pub fn recycle(&mut self, mut items: Vec<(u32, V)>) {
+        if self.pool.len() < POOL_CAP && items.capacity() > 0 {
+            items.clear();
+            self.pool.push(items);
+        }
     }
 
     /// Fold `(slot, val)` into `dst`'s combiner, where `slot` is the
-    /// destination-local index (master index or ghost slot). Returns a
-    /// batch when the flush policy fired — the caller must ship it to
-    /// `dst` now.
-    pub fn accumulate(&mut self, dst: LocalityId, slot: u32, val: V) -> Option<Batch<V>> {
+    /// destination-local index (master index or ghost slot) and `now` is
+    /// the simulated clock (drives [`FlushPolicy::TimeWindow`] ages).
+    /// Returns a batch when the flush policy fired — the caller must ship
+    /// it to `dst` now.
+    pub fn accumulate(
+        &mut self,
+        dst: LocalityId,
+        slot: u32,
+        val: V,
+        now: SimTime,
+    ) -> Option<Batch<V>> {
         debug_assert_ne!(dst, self.here, "aggregate only remote sends");
         self.stats.items += 1;
-        if self.threshold == Some(1) {
+        if self.unbatched {
             // Unbatched fast path: no combiner state at all.
-            self.stats.envelopes += 1;
             self.stats.policy_flushes += 1;
-            self.stats.sent_items += 1;
-            return Some(Batch { items: vec![(slot, val)], item_bytes: self.item_bytes });
+            let mut items = self.fresh_items(1);
+            items.push((slot, val));
+            return Some(self.seal(dst, items));
         }
         let d = dst as usize;
-        match &mut self.slots[d][slot as usize] {
-            Some(pending) => {
-                (self.fold)(pending, val);
-                self.stats.folded += 1;
+        let g = self.generation[d];
+        if self.stamp[d][slot as usize] == g {
+            (self.fold)(&mut self.values[d][slot as usize], val);
+            self.stats.folded += 1;
+        } else {
+            self.stamp[d][slot as usize] = g;
+            self.values[d][slot as usize] = val;
+            if self.touched[d].is_empty() {
+                self.oldest[d] = now;
             }
-            empty => {
-                *empty = Some(val);
-                self.touched[d].push(slot);
-            }
+            self.touched[d].push(slot);
         }
-        if let Some(t) = self.threshold {
-            if self.touched[d].len() >= t {
-                self.stats.policy_flushes += 1;
-                return self.take(dst);
-            }
+        if self.touched[d].len() >= self.limit[d] {
+            self.stats.policy_flushes += 1;
+            return self.take(dst);
         }
         None
+    }
+
+    /// Stamp envelope-level accounting (and a trace token under traced
+    /// policies) onto an outgoing item vector.
+    fn seal(&mut self, dst: LocalityId, items: Vec<(u32, V)>) -> Batch<V> {
+        self.stats.envelopes += 1;
+        self.stats.sent_items += items.len() as u64;
+        let token = if self.traced {
+            let t = self.next_token;
+            self.next_token += 1;
+            self.inflight.push((t, dst, items.len() as u32));
+            Some(t)
+        } else {
+            None
+        };
+        Batch { items, item_bytes: self.item_bytes, token }
     }
 
     /// Take `dst`'s pending batch (no stats-class attribution).
@@ -270,15 +624,26 @@ impl<V: Clone> Aggregator<V> {
         if self.touched[d].is_empty() {
             return None;
         }
-        let mut offs = std::mem::take(&mut self.touched[d]);
-        offs.sort_unstable();
-        let items: Vec<(u32, V)> = offs
-            .iter()
-            .map(|&o| (o, self.slots[d][o as usize].take().unwrap()))
-            .collect();
-        self.stats.envelopes += 1;
-        self.stats.sent_items += items.len() as u64;
-        Some(Batch { items, item_bytes: self.item_bytes })
+        self.touched[d].sort_unstable();
+        let mut items = self.fresh_items(self.touched[d].len());
+        // Move values out (replacing with the default) rather than clone;
+        // the generation bump below retires the whole combiner in O(1).
+        for i in 0..self.touched[d].len() {
+            let slot = self.touched[d][i];
+            items.push((slot, std::mem::take(&mut self.values[d][slot as usize])));
+        }
+        self.touched[d].clear();
+        self.generation[d] = self.generation[d].wrapping_add(1);
+        if self.generation[d] == 0 {
+            // u32 generation wrapped (2^32 flushes to one destination):
+            // reset the stamps to 0 — the live generation restarts at 1
+            // and is never 0 again, so stamp 0 can never read as occupied.
+            for s in &mut self.stamp[d] {
+                *s = 0;
+            }
+            self.generation[d] = 1;
+        }
+        Some(self.seal(dst, items))
     }
 
     /// Drain one destination's pending items (explicit flush).
@@ -294,11 +659,77 @@ impl<V: Clone> Aggregator<V> {
     /// (asynchronous algorithms) or right before requesting a barrier
     /// (BSP supersteps) so nothing is left behind at quiescence.
     pub fn drain(&mut self) -> Vec<(LocalityId, Batch<V>)> {
-        let (here, n) = (self.here, self.slots.len() as LocalityId);
+        let (here, n) = (self.here, self.values.len() as LocalityId);
         (0..n)
             .filter(|&l| l != here)
             .filter_map(|l| self.drain_one(l).map(|b| (l, b)))
             .collect()
+    }
+
+    /// Time-window flush: emit every destination whose oldest pending item
+    /// has waited [`FlushPolicy::TimeWindow`] out as of `now`. A no-op
+    /// (empty result) under every other policy. Engines call this at
+    /// handler/step boundaries and from the timer armed at
+    /// [`Aggregator::next_deadline`]; counted as policy flushes.
+    pub fn poll(&mut self, now: SimTime) -> Vec<(LocalityId, Batch<V>)> {
+        let Some(w) = self.window_us else {
+            return Vec::new();
+        };
+        let (here, n) = (self.here, self.values.len() as LocalityId);
+        (0..n)
+            .filter(|&l| l != here)
+            .filter_map(|l| {
+                let d = l as usize;
+                if self.touched[d].is_empty() || now - self.oldest[d] < w {
+                    return None;
+                }
+                self.stats.policy_flushes += 1;
+                self.take(l).map(|b| (l, b))
+            })
+            .collect()
+    }
+
+    /// Earliest time at which [`Aggregator::poll`] would flush something:
+    /// `min over pending destinations of (first touch + window)`. `None`
+    /// when nothing is pending or the policy has no time window. Callers
+    /// that buffer under a time window must keep a runtime timer armed
+    /// here, or pending items could outlive quiescence.
+    pub fn next_deadline(&self) -> Option<SimTime> {
+        let w = self.window_us?;
+        self.touched
+            .iter()
+            .enumerate()
+            .filter(|(d, t)| *d != self.here as usize && !t.is_empty())
+            .map(|(d, _)| self.oldest[d] + w)
+            .min_by(|a, b| a.total_cmp(b))
+    }
+
+    /// Feed one delivery observation back (the ack of a traced envelope):
+    /// `sent`/`delivered` are simulated times from
+    /// [`Actor::on_ack`](super::sim::Actor::on_ack). Updates the observed
+    /// latency stats; under [`FlushPolicy::LatencyAdaptive`] it also
+    /// advances the destination's hill climber and adopts its new item
+    /// threshold.
+    pub fn observe_ack(&mut self, token: u64, sent: SimTime, delivered: SimTime) {
+        let Some(i) = self.inflight.iter().position(|e| e.0 == token) else {
+            debug_assert!(false, "ack for unknown token {token}");
+            return;
+        };
+        let (_, dst, items) = self.inflight.swap_remove(i);
+        let latency_us = (delivered - sent).max(0.0);
+        self.stats.acks += 1;
+        self.stats.ack_latency_ns += (latency_us * 1e3) as u64;
+        if let Some(t) = self.tuners.get_mut(dst as usize) {
+            t.observe(latency_us, items, self.base_items);
+            self.limit[dst as usize] = t.limit;
+        }
+    }
+
+    /// The current item threshold for `dst` (`usize::MAX` = drain/time
+    /// only). Under [`FlushPolicy::LatencyAdaptive`] this moves as acks
+    /// arrive; exposed for tests and diagnostics.
+    pub fn current_limit(&self, dst: LocalityId) -> usize {
+        self.limit[dst as usize]
     }
 
     /// Items currently buffered across all destinations.
@@ -324,13 +755,21 @@ mod tests {
         *a = (*a).min(b);
     }
 
+    fn agg_f32(
+        counts: &[usize],
+        here: LocalityId,
+        policy: FlushPolicy,
+        net: &NetConfig,
+    ) -> Aggregator<f32> {
+        Aggregator::new(counts, here, SlotSpace::Master, policy, net, 8, add)
+    }
+
     #[test]
     fn unbatched_emits_one_batch_per_item() {
         let counts = [4usize, 4];
-        let mut agg =
-            Aggregator::new(&counts, 0, FlushPolicy::Unbatched, &NetConfig::default(), 8, add);
+        let mut agg = agg_f32(&counts, 0, FlushPolicy::Unbatched, &NetConfig::default());
         for i in 0..5u32 {
-            let b = agg.accumulate(1, i % 4, 1.0).expect("unbatched flushes per item");
+            let b = agg.accumulate(1, i % 4, 1.0, 0.0).expect("unbatched flushes per item");
             assert_eq!(b.len(), 1);
         }
         assert_eq!(agg.stats().envelopes, 5);
@@ -342,12 +781,11 @@ mod tests {
     #[test]
     fn items_policy_flushes_at_threshold_and_folds_duplicates() {
         let counts = [4usize, 8];
-        let mut agg =
-            Aggregator::new(&counts, 0, FlushPolicy::Items(3), &NetConfig::zero(), 8, add);
-        assert!(agg.accumulate(1, 0, 1.0).is_none());
-        assert!(agg.accumulate(1, 0, 2.0).is_none(), "fold, not a new slot");
-        assert!(agg.accumulate(1, 1, 1.0).is_none());
-        let b = agg.accumulate(1, 2, 1.0).expect("3rd distinct item flushes");
+        let mut agg = agg_f32(&counts, 0, FlushPolicy::Items(3), &NetConfig::zero());
+        assert!(agg.accumulate(1, 0, 1.0, 0.0).is_none());
+        assert!(agg.accumulate(1, 0, 2.0, 0.0).is_none(), "fold, not a new slot");
+        assert!(agg.accumulate(1, 1, 1.0, 0.0).is_none());
+        let b = agg.accumulate(1, 2, 1.0, 0.0).expect("3rd distinct item flushes");
         assert_eq!(b.items, vec![(0, 3.0), (1, 1.0), (2, 1.0)]);
         assert_eq!(agg.stats().folded, 1);
         assert_eq!(agg.stats().policy_flushes, 1);
@@ -357,11 +795,10 @@ mod tests {
     #[test]
     fn manual_policy_only_drains() {
         let counts = [2usize, 2, 2];
-        let mut agg =
-            Aggregator::new(&counts, 1, FlushPolicy::Manual, &NetConfig::default(), 8, add);
+        let mut agg = agg_f32(&counts, 1, FlushPolicy::Manual, &NetConfig::default());
         for _ in 0..100 {
-            assert!(agg.accumulate(0, 0, 1.0).is_none());
-            assert!(agg.accumulate(2, 1, 1.0).is_none());
+            assert!(agg.accumulate(0, 0, 1.0, 0.0).is_none());
+            assert!(agg.accumulate(2, 1, 1.0, 0.0).is_none());
         }
         assert_eq!(agg.pending(), 2);
         let out = agg.drain();
@@ -379,11 +816,18 @@ mod tests {
     #[test]
     fn min_fold_keeps_smallest() {
         let counts = [2usize, 2];
-        let mut agg =
-            Aggregator::new(&counts, 0, FlushPolicy::Manual, &NetConfig::default(), 8, min_u32);
-        agg.accumulate(1, 0, 7);
-        agg.accumulate(1, 0, 3);
-        agg.accumulate(1, 0, 5);
+        let mut agg: Aggregator<u32> = Aggregator::new(
+            &counts,
+            0,
+            SlotSpace::Master,
+            FlushPolicy::Manual,
+            &NetConfig::default(),
+            8,
+            min_u32,
+        );
+        agg.accumulate(1, 0, 7, 0.0);
+        agg.accumulate(1, 0, 3, 0.0);
+        agg.accumulate(1, 0, 5, 0.0);
         let out = agg.drain();
         assert_eq!(out[0].1.items, vec![(0, 3)]);
     }
@@ -395,6 +839,8 @@ mod tests {
         assert_eq!(FlushPolicy::Bytes(4).item_threshold(&net, 8), Some(1));
         assert_eq!(FlushPolicy::Items(0).item_threshold(&net, 8), Some(1));
         assert_eq!(FlushPolicy::Manual.item_threshold(&net, 8), None);
+        assert_eq!(FlushPolicy::TimeWindow(0).item_threshold(&net, 8), Some(1));
+        assert_eq!(FlushPolicy::TimeWindow(5).item_threshold(&net, 8), None);
     }
 
     #[test]
@@ -412,23 +858,35 @@ mod tests {
 
     #[test]
     fn parse_spellings() {
-        assert_eq!(FlushPolicy::parse("unbatched"), Some(FlushPolicy::Unbatched));
-        assert_eq!(FlushPolicy::parse("naive"), Some(FlushPolicy::Unbatched));
-        assert_eq!(FlushPolicy::parse("adaptive"), Some(FlushPolicy::Adaptive));
-        assert_eq!(FlushPolicy::parse("manual"), Some(FlushPolicy::Manual));
-        assert_eq!(FlushPolicy::parse("items:64"), Some(FlushPolicy::Items(64)));
-        assert_eq!(FlushPolicy::parse("bytes:4096"), Some(FlushPolicy::Bytes(4096)));
-        assert_eq!(FlushPolicy::parse("items:x"), None);
-        assert_eq!(FlushPolicy::parse("warp"), None);
+        assert_eq!(FlushPolicy::parse("unbatched"), Ok(FlushPolicy::Unbatched));
+        assert_eq!(FlushPolicy::parse("naive"), Ok(FlushPolicy::Unbatched));
+        assert_eq!(FlushPolicy::parse("adaptive"), Ok(FlushPolicy::Adaptive));
+        assert_eq!(FlushPolicy::parse("latency"), Ok(FlushPolicy::LatencyAdaptive));
+        assert_eq!(FlushPolicy::parse("latency-adaptive"), Ok(FlushPolicy::LatencyAdaptive));
+        assert_eq!(FlushPolicy::parse("manual"), Ok(FlushPolicy::Manual));
+        assert_eq!(FlushPolicy::parse("items:64"), Ok(FlushPolicy::Items(64)));
+        assert_eq!(FlushPolicy::parse("bytes:4096"), Ok(FlushPolicy::Bytes(4096)));
+        assert_eq!(FlushPolicy::parse("time:25"), Ok(FlushPolicy::TimeWindow(25)));
+        assert_eq!(FlushPolicy::parse("time:0"), Ok(FlushPolicy::TimeWindow(0)));
+        assert!(FlushPolicy::parse("items:x").is_err());
+        assert!(FlushPolicy::parse("warp").is_err());
+    }
+
+    #[test]
+    fn parse_rejects_zero_thresholds_with_guidance() {
+        let e = FlushPolicy::parse("items:0").unwrap_err();
+        assert!(e.contains("items:0"), "{e}");
+        assert!(e.contains("unbatched") && e.contains("manual"), "{e}");
+        let e = FlushPolicy::parse("bytes:0").unwrap_err();
+        assert!(e.contains("bytes:0"), "{e}");
     }
 
     #[test]
     fn batches_are_sorted_by_slot() {
         let counts = [0usize, 16];
-        let mut agg =
-            Aggregator::new(&counts, 0, FlushPolicy::Manual, &NetConfig::default(), 8, add);
+        let mut agg = agg_f32(&counts, 0, FlushPolicy::Manual, &NetConfig::default());
         for v in [9u32, 3, 12, 1] {
-            agg.accumulate(1, v, 1.0);
+            agg.accumulate(1, v, 1.0, 0.0);
         }
         let out = agg.drain();
         let vs: Vec<u32> = out[0].1.items.iter().map(|&(v, _)| v).collect();
@@ -438,16 +896,160 @@ mod tests {
     #[test]
     fn stats_conservation_invariant() {
         let counts = [8usize, 8];
-        let mut agg =
-            Aggregator::new(&counts, 0, FlushPolicy::Items(4), &NetConfig::zero(), 8, add);
+        let mut agg = agg_f32(&counts, 0, FlushPolicy::Items(4), &NetConfig::zero());
         let mut shipped = 0u64;
         for i in 0..37u32 {
-            if let Some(b) = agg.accumulate(1, i % 8, 1.0) {
+            if let Some(b) = agg.accumulate(1, i % 8, 1.0, 0.0) {
                 shipped += b.len() as u64;
             }
         }
         let s = *agg.stats();
         assert_eq!(s.sent_items, shipped);
         assert_eq!(s.items, s.folded + s.sent_items + agg.pending() as u64);
+    }
+
+    #[test]
+    fn generations_retire_flushed_slots() {
+        // After a flush, the same slot must claim fresh (not fold into the
+        // retired value): the generation bump, not a slot clear, is what
+        // empties the combiner.
+        let counts = [2usize, 4];
+        let mut agg = agg_f32(&counts, 0, FlushPolicy::Manual, &NetConfig::zero());
+        agg.accumulate(1, 2, 5.0, 0.0);
+        let out = agg.drain();
+        assert_eq!(out[0].1.items, vec![(2, 5.0)]);
+        agg.accumulate(1, 2, 7.0, 0.0);
+        let out = agg.drain();
+        assert_eq!(out[0].1.items, vec![(2, 7.0)], "stale value folded in");
+        assert_eq!(agg.stats().folded, 0);
+    }
+
+    #[test]
+    fn time_window_flushes_when_oldest_expires() {
+        let counts = [4usize, 4, 4];
+        let mut agg = agg_f32(&counts, 0, FlushPolicy::TimeWindow(10), &NetConfig::default());
+        assert!(agg.accumulate(1, 0, 1.0, 100.0).is_none(), "no item threshold");
+        assert!(agg.accumulate(1, 1, 1.0, 105.0).is_none());
+        assert!(agg.accumulate(2, 0, 1.0, 104.0).is_none());
+        // The window runs from the destination's oldest pending item.
+        assert_eq!(agg.next_deadline(), Some(110.0));
+        assert!(agg.poll(109.9).is_empty(), "window not out yet");
+        let out = agg.poll(110.0);
+        assert_eq!(out.len(), 1);
+        assert_eq!(out[0].0, 1);
+        assert_eq!(out[0].1.items, vec![(0, 1.0), (1, 1.0)]);
+        // Destination 2's clock started later.
+        assert_eq!(agg.next_deadline(), Some(114.0));
+        let out = agg.poll(120.0);
+        assert_eq!(out.len(), 1);
+        assert_eq!(out[0].0, 2);
+        assert_eq!(agg.next_deadline(), None);
+        assert_eq!(agg.stats().policy_flushes, 2);
+        assert_eq!(agg.stats().drain_flushes, 0);
+    }
+
+    #[test]
+    fn time_window_zero_is_unbatched() {
+        let counts = [4usize, 4];
+        let mut tw = agg_f32(&counts, 0, FlushPolicy::TimeWindow(0), &NetConfig::default());
+        let mut ub = agg_f32(&counts, 0, FlushPolicy::Unbatched, &NetConfig::default());
+        for i in 0..7u32 {
+            let a = tw.accumulate(1, i % 4, 1.0, i as f64).expect("flush per item");
+            let b = ub.accumulate(1, i % 4, 1.0, i as f64).expect("flush per item");
+            assert_eq!(a.items, b.items);
+        }
+        assert_eq!(tw.stats(), ub.stats());
+        assert_eq!(tw.next_deadline(), None);
+    }
+
+    /// Fill `dst` to its current threshold so a traced envelope is
+    /// emitted, and return its token.
+    fn emit_traced(agg: &mut Aggregator<f32>, dst: LocalityId) -> u64 {
+        let limit = agg.current_limit(dst);
+        for i in 0..limit as u32 {
+            if let Some(b) = agg.accumulate(dst, i, 1.0, 0.0) {
+                return b.token().expect("latency policy traces envelopes");
+            }
+        }
+        panic!("threshold {limit} never fired");
+    }
+
+    #[test]
+    fn latency_adaptive_starts_at_break_even_and_tunes() {
+        let net = NetConfig::default();
+        let base = adaptive_items(&net, 8);
+        let counts = [64usize, 65536];
+        let mut agg = agg_f32(&counts, 0, FlushPolicy::LatencyAdaptive, &net);
+        assert_eq!(agg.current_limit(1), base);
+
+        // Constant envelope latency, one ack per emitted envelope: the
+        // amortized per-item share keeps falling as batches grow, so after
+        // one epoch of acks the climber must have grown the threshold.
+        for _ in 0..TUNER_EPOCH {
+            let tok = emit_traced(&mut agg, 1);
+            agg.observe_ack(tok, 0.0, 10.0);
+        }
+        assert!(
+            agg.current_limit(1) > base,
+            "constant-latency acks must grow the threshold ({} vs base {base})",
+            agg.current_limit(1)
+        );
+        assert!(agg.current_limit(1) <= base * TUNER_MAX_GROWTH);
+        assert_eq!(agg.stats().acks, TUNER_EPOCH as u64);
+        assert!(agg.stats().mean_obs_latency_us() > 0.0);
+    }
+
+    #[test]
+    fn latency_adaptive_never_drops_below_break_even() {
+        let net = NetConfig::default();
+        let base = adaptive_items(&net, 8);
+        let counts = [8usize, 65536];
+        let mut agg = agg_f32(&counts, 0, FlushPolicy::LatencyAdaptive, &net);
+        // Queueing-inflated latencies: first establish a floor, then blow
+        // past TUNER_QUEUE_INFLATION x floor; the climber must shrink but
+        // clamp at the break-even base.
+        for round in 0..40 {
+            let tok = emit_traced(&mut agg, 1);
+            let lat = if round == 0 { 5.0 } else { 500.0 };
+            agg.observe_ack(tok, 0.0, lat);
+            assert!(agg.current_limit(1) >= base, "dropped below break-even floor");
+        }
+        assert_eq!(agg.current_limit(1), base, "inflated latency must shrink to the floor");
+    }
+
+    #[test]
+    fn pool_recycling_reaches_allocation_free_steady_state() {
+        let counts = [4usize, 4];
+        let mut agg = agg_f32(&counts, 0, FlushPolicy::Items(2), &NetConfig::zero());
+        let mut reclaimed = 0;
+        for i in 0..20u32 {
+            if let Some(b) = agg.accumulate(1, i % 4, 1.0, 0.0) {
+                let mut items = b.into_items();
+                items.drain(..).count();
+                agg.recycle(items);
+                reclaimed += 1;
+            }
+        }
+        assert_eq!(reclaimed, 10);
+        let s = *agg.stats();
+        assert_eq!(s.pool_reuses + s.pool_allocs, s.envelopes);
+        // Only the very first flush had an empty pool.
+        assert_eq!(s.pool_allocs, 1, "{s:?}");
+        assert_eq!(s.pool_reuses, 9);
+        assert!(s.pool_reuse_ratio() > 0.8);
+    }
+
+    #[test]
+    fn untraced_policies_mint_no_tokens() {
+        let counts = [4usize, 4];
+        let mut agg = agg_f32(&counts, 0, FlushPolicy::Items(1), &NetConfig::zero());
+        let b = agg.accumulate(1, 0, 1.0, 0.0).unwrap();
+        assert_eq!(b.token(), None);
+        assert!(!FlushPolicy::Manual.traced());
+        assert!(!FlushPolicy::Unbatched.traced());
+        assert!(!FlushPolicy::TimeWindow(0).traced());
+        assert!(FlushPolicy::TimeWindow(3).traced());
+        assert!(FlushPolicy::Adaptive.traced());
+        assert!(FlushPolicy::LatencyAdaptive.traced());
     }
 }

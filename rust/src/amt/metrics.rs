@@ -86,6 +86,16 @@ pub struct SimReport {
     /// nothing about combiners, so this starts empty and algorithm drivers
     /// merge their actors' [`AggStats`] in after the run.
     pub agg: AggStats,
+    /// The master-bound slice of [`SimReport::agg`]: combiners whose slots
+    /// are destination owned-row indices
+    /// ([`SlotSpace::Master`](super::aggregate::SlotSpace)). Master-bound
+    /// and mirror-bound traffic have different fan-in under vertex cuts,
+    /// so observed latency is reported per slot space.
+    pub agg_master: AggStats,
+    /// The mirror-bound slice of [`SimReport::agg`]
+    /// ([`SlotSpace::Mirror`](super::aggregate::SlotSpace)): master→mirror
+    /// scatter (idle under 1-D schemes).
+    pub agg_mirror: AggStats,
     /// Algorithm-level work accounting (relaxation counters). Starts empty;
     /// algorithm drivers merge their actors' [`WorkStats`] in after the run.
     pub work: WorkStats,
@@ -211,6 +221,8 @@ mod tests {
             net: NetStats::default(),
             per_locality_net: vec![],
             agg: AggStats::default(),
+            agg_master: AggStats::default(),
+            agg_mirror: AggStats::default(),
             work: WorkStats::default(),
             partition: PartitionStats::default(),
         };
@@ -230,6 +242,8 @@ mod tests {
             net: NetStats::default(),
             per_locality_net: vec![],
             agg: AggStats::default(),
+            agg_master: AggStats::default(),
+            agg_mirror: AggStats::default(),
             work: WorkStats::default(),
             partition: PartitionStats::default(),
         };

@@ -36,7 +36,7 @@ pub mod partitioned_vector;
 pub mod sim;
 
 pub use agas::{Agas, GlobalAddress};
-pub use aggregate::{AggStats, Aggregator, Batch, FlushPolicy};
+pub use aggregate::{AggStats, Aggregator, Batch, FlushPolicy, SlotSpace};
 pub use executor::{ChunkPolicy, Executor};
 pub use metrics::{PartitionStats, SimReport, WorkStats};
 pub use net::{NetConfig, NetStats};

@@ -68,6 +68,27 @@ pub trait Actor {
     /// Called when a requested global barrier completes (`epoch` counts
     /// completed barriers, starting at 1).
     fn on_barrier(&mut self, _ctx: &mut Ctx<Self::Msg>, _epoch: u64) {}
+
+    /// Delivery acknowledgement for a [`Ctx::send_traced`] message: the
+    /// runtime reports the send-call time and the receiver's handler-start
+    /// time (so receiver-side queueing delay is included in the observed
+    /// latency). Models the parcelport's send-completion callback; the
+    /// return channel itself is free. Default: ignored.
+    fn on_ack(
+        &mut self,
+        _ctx: &mut Ctx<Self::Msg>,
+        _token: u64,
+        _sent: SimTime,
+        _delivered: SimTime,
+    ) {
+    }
+
+    /// A timer requested via [`Ctx::set_timer`] fired (`ctx.now()` is at
+    /// or after the requested time). Timers count as in-flight work:
+    /// quiescence and barriers wait for them, which is what lets
+    /// time-windowed coalescing buffer across handler boundaries without
+    /// stranding traffic. Default: ignored.
+    fn on_timer(&mut self, _ctx: &mut Ctx<Self::Msg>) {}
 }
 
 /// Simulation parameters.
@@ -129,13 +150,21 @@ impl SimConfig {
     }
 }
 
+/// Ack requests riding an envelope: `(token, send-call time)` per traced
+/// message. Reported back to the sender at the receiver's handler start.
+type AckReqs = Vec<(u64, SimTime)>;
+
 enum Payload<M> {
     Start,
-    Envelope { from: LocalityId, items: Vec<M> },
+    Envelope { from: LocalityId, items: Vec<M>, acks: AckReqs },
     BarrierDone { epoch: u64 },
     /// Parcel-coalescing flush: the event's `dst` is the *sender* (the
     /// flush runs on its timeline); `to` is the wire destination.
     Flush { to: LocalityId },
+    /// Delivery report for one traced message (see [`Ctx::send_traced`]).
+    Ack { token: u64, sent: SimTime, delivered: SimTime },
+    /// A [`Ctx::set_timer`] deadline arrived.
+    Timer,
 }
 
 struct Event<M> {
@@ -175,7 +204,8 @@ pub struct Ctx<'a, M> {
     epoch: u64,
     explicit_charge_us: f64,
     barrier_requested: &'a mut bool,
-    outbox: Vec<(LocalityId, M)>,
+    outbox: Vec<(LocalityId, M, Option<u64>)>,
+    timers: Vec<SimTime>,
 }
 
 impl<'a, M: Message> Ctx<'a, M> {
@@ -205,7 +235,27 @@ impl<'a, M: Message> Ctx<'a, M> {
     /// is the `hpx::async`-on-same-locality case.
     pub fn send(&mut self, dst: LocalityId, msg: M) {
         debug_assert!(dst < self.n_localities, "send to unknown locality {dst}");
-        self.outbox.push((dst, msg));
+        self.outbox.push((dst, msg, None));
+    }
+
+    /// Queue a message and request a delivery observation: when the
+    /// envelope carrying it starts processing at the receiver, the runtime
+    /// calls [`Actor::on_ack`] on this locality with `token`, the current
+    /// time (`sent`), and the receiver's handler-start time (`delivered`).
+    /// The return channel models the parcelport's completion callback and
+    /// is free; the observation *includes* receiver-side queueing, which
+    /// is the signal the latency-adaptive flush policy tunes on.
+    pub fn send_traced(&mut self, dst: LocalityId, msg: M, token: u64) {
+        debug_assert!(dst < self.n_localities, "send to unknown locality {dst}");
+        self.outbox.push((dst, msg, Some(token)));
+    }
+
+    /// Request an [`Actor::on_timer`] callback at absolute simulated time
+    /// `at` (clamped forward to now). Pending timers count as in-flight
+    /// work: quiescence and barrier completion wait for them.
+    pub fn set_timer(&mut self, at: SimTime) {
+        debug_assert!(at.is_finite(), "timer at non-finite time {at}");
+        self.timers.push(at.max(self.now));
     }
 
     /// Add an explicit compute charge (model-based costing; used by tests
@@ -249,10 +299,15 @@ impl SimRuntime {
         let mut net_stats: Vec<NetStats> = vec![NetStats::default(); n as usize];
         let mut epoch: u64 = 0;
         let mut events_processed: u64 = 0;
-        let mut messages_pending: u64 = 0; // Start/Envelope/Flush events in heap
-        // Parcel-coalescing buffers: (src, dst) -> queued items.
-        let mut pending: std::collections::HashMap<(LocalityId, LocalityId), Vec<A::Msg>> =
-            std::collections::HashMap::new();
+        // Start/Envelope/Flush/Ack/Timer events in heap: everything the
+        // network (and therefore quiescence and barriers) must wait for.
+        let mut messages_pending: u64 = 0;
+        // Parcel-coalescing buffers: (src, dst) -> queued items + ack reqs.
+        #[allow(clippy::type_complexity)]
+        let mut pending: std::collections::HashMap<
+            (LocalityId, LocalityId),
+            (Vec<A::Msg>, AckReqs),
+        > = std::collections::HashMap::new();
         let coalesce = self.cfg.coalesce_window_us > 0.0;
 
         for l in 0..n {
@@ -275,7 +330,7 @@ impl SimRuntime {
             // charge the sender's send CPU, put one envelope on the wire.
             if let Payload::Flush { to } = ev.payload {
                 messages_pending -= 1;
-                let items = pending.remove(&(ev.dst, to)).unwrap_or_default();
+                let (items, acks) = pending.remove(&(ev.dst, to)).unwrap_or_default();
                 if !items.is_empty() {
                     let n_items: usize = items.iter().map(|m| m.item_count()).sum();
                     let payload_bytes: usize = items.iter().map(|m| m.wire_bytes()).sum();
@@ -292,7 +347,7 @@ impl SimRuntime {
                         time: avail[l] + wire,
                         seq,
                         dst: to,
-                        payload: Payload::Envelope { from: ev.dst, items },
+                        payload: Payload::Envelope { from: ev.dst, items, acks },
                     });
                     seq += 1;
                     messages_pending += 1;
@@ -325,6 +380,7 @@ impl SimRuntime {
                 explicit_charge_us: 0.0,
                 barrier_requested: &mut barrier_requested,
                 outbox: Vec::new(),
+                timers: Vec::new(),
             };
 
             let wall = Instant::now();
@@ -334,8 +390,21 @@ impl SimRuntime {
                     messages_pending -= 1;
                     actors[l].on_start(&mut ctx);
                 }
-                Payload::Envelope { from, items } => {
+                Payload::Envelope { from, items, acks } => {
                     messages_pending -= 1;
+                    // Report traced deliveries back to the sender at the
+                    // handler-start time, queueing delay included. The
+                    // return channel is free (completion callback).
+                    for (token, sent) in acks {
+                        heap.push(Event {
+                            time: start,
+                            seq,
+                            dst: from,
+                            payload: Payload::Ack { token, sent, delivered: start },
+                        });
+                        seq += 1;
+                        messages_pending += 1;
+                    }
                     if from != ev.dst {
                         let n_items: usize = items.iter().map(|m| m.item_count()).sum();
                         recv_charge = self.cfg.net.recv_cpu(n_items);
@@ -347,6 +416,14 @@ impl SimRuntime {
                 Payload::BarrierDone { epoch: e } => {
                     actors[l].on_barrier(&mut ctx, e);
                 }
+                Payload::Ack { token, sent, delivered } => {
+                    messages_pending -= 1;
+                    actors[l].on_ack(&mut ctx, token, sent, delivered);
+                }
+                Payload::Timer => {
+                    messages_pending -= 1;
+                    actors[l].on_timer(&mut ctx);
+                }
                 Payload::Flush { .. } => unreachable!("handled above"),
             }
             let measured = if self.cfg.measure_compute {
@@ -357,16 +434,18 @@ impl SimRuntime {
 
             let explicit = ctx.explicit_charge_us;
             let outbox = std::mem::take(&mut ctx.outbox);
+            let timers = std::mem::take(&mut ctx.timers);
             drop(ctx);
             waiting[l] = barrier_requested;
 
             let mut charge = measured + explicit + recv_charge;
 
             // Dispatch outbox: aggregate per destination if configured.
+            // Traced sends stamp the handler-start time as their send time.
             let depart_base = start;
             let mut send_cpu_total = 0.0;
-            let groups = group_outbox(outbox, self.cfg.aggregate_sends);
-            for (dst, items) in groups {
+            let groups = group_outbox(outbox, self.cfg.aggregate_sends, start);
+            for (dst, items, acks) in groups {
                 let n_items: usize = items.iter().map(|m| m.item_count()).sum();
                 if dst == ev.dst {
                     // Local spawn: no network, delivered when we are free.
@@ -374,7 +453,7 @@ impl SimRuntime {
                         time: depart_base + charge + send_cpu_total,
                         seq,
                         dst,
-                        payload: Payload::Envelope { from: ev.dst, items },
+                        payload: Payload::Envelope { from: ev.dst, items, acks },
                     });
                     seq += 1;
                     messages_pending += 1;
@@ -384,8 +463,9 @@ impl SimRuntime {
                     // Buffer into the (src, dst) parcel; schedule a flush
                     // if this is the first item since the last flush.
                     let buf = pending.entry((ev.dst, dst)).or_default();
-                    let first = buf.is_empty();
-                    buf.extend(items);
+                    let first = buf.0.is_empty();
+                    buf.0.extend(items);
+                    buf.1.extend(acks);
                     if first {
                         heap.push(Event {
                             time: depart_base + charge + self.cfg.coalesce_window_us,
@@ -412,12 +492,20 @@ impl SimRuntime {
                     time: depart + wire,
                     seq,
                     dst,
-                    payload: Payload::Envelope { from: ev.dst, items },
+                    payload: Payload::Envelope { from: ev.dst, items, acks },
                 });
                 seq += 1;
                 messages_pending += 1;
             }
             charge += send_cpu_total;
+            // Arm requested timers (absolute times; already clamped to
+            // >= now by set_timer). They hold quiescence and barriers
+            // open until they fire.
+            for at in timers {
+                heap.push(Event { time: at, seq, dst: ev.dst, payload: Payload::Timer });
+                seq += 1;
+                messages_pending += 1;
+            }
             avail[l] = start + charge;
             busy[l] += charge;
 
@@ -465,6 +553,8 @@ impl SimRuntime {
             net: total_net,
             per_locality_net: net_stats,
             agg: super::aggregate::AggStats::default(),
+            agg_master: super::aggregate::AggStats::default(),
+            agg_mirror: super::aggregate::AggStats::default(),
             work: super::metrics::WorkStats::default(),
             partition: super::metrics::PartitionStats::default(),
         };
@@ -472,28 +562,35 @@ impl SimRuntime {
     }
 }
 
-fn group_outbox<M>(outbox: Vec<(LocalityId, M)>, aggregate: bool) -> Vec<(LocalityId, Vec<M>)> {
+#[allow(clippy::type_complexity)]
+fn group_outbox<M>(
+    outbox: Vec<(LocalityId, M, Option<u64>)>,
+    aggregate: bool,
+    now: SimTime,
+) -> Vec<(LocalityId, Vec<M>, AckReqs)> {
+    let ack = |tok: Option<u64>| -> AckReqs { tok.map(|t| (t, now)).into_iter().collect() };
     if !aggregate {
-        return outbox.into_iter().map(|(d, m)| (d, vec![m])).collect();
+        return outbox.into_iter().map(|(d, m, t)| (d, vec![m], ack(t))).collect();
     }
     // Preserve first-appearance destination order for determinism.
     let mut order: Vec<LocalityId> = Vec::new();
-    let mut buckets: std::collections::HashMap<LocalityId, Vec<M>> =
+    let mut buckets: std::collections::HashMap<LocalityId, (Vec<M>, AckReqs)> =
         std::collections::HashMap::new();
-    for (d, m) in outbox {
-        buckets
-            .entry(d)
-            .or_insert_with(|| {
-                order.push(d);
-                Vec::new()
-            })
-            .push(m);
+    for (d, m, t) in outbox {
+        let b = buckets.entry(d).or_insert_with(|| {
+            order.push(d);
+            (Vec::new(), Vec::new())
+        });
+        b.0.push(m);
+        if let Some(tok) = t {
+            b.1.push((tok, now));
+        }
     }
     order
         .into_iter()
         .map(|d| {
-            let items = buckets.remove(&d).unwrap();
-            (d, items)
+            let (items, acks) = buckets.remove(&d).unwrap();
+            (d, items, acks)
         })
         .collect()
 }
@@ -719,6 +816,81 @@ mod tests {
         }
         let cfg = SimConfig::deterministic(NetConfig::zero());
         SimRuntime::new(cfg).run(vec![OnlyZeroWaits, OnlyZeroWaits]);
+    }
+
+    #[test]
+    fn traced_send_reports_queueing_inclusive_latency() {
+        // Locality 0 sends two traced pings back-to-back. The second one
+        // arrives while the receiver is still busy with an explicit
+        // charge, so its observed latency must include the queueing delay,
+        // not just the wire time.
+        struct Tracer {
+            acks: Vec<(u64, SimTime, SimTime)>,
+        }
+        impl Actor for Tracer {
+            type Msg = Ping;
+            fn on_start(&mut self, ctx: &mut Ctx<Ping>) {
+                if ctx.locality() == 0 {
+                    ctx.send_traced(1, Ping(1), 7);
+                    ctx.send_traced(1, Ping(2), 8);
+                }
+            }
+            fn on_message(&mut self, ctx: &mut Ctx<Ping>, _: LocalityId, _: Ping) {
+                ctx.charge_us(100.0); // make the receiver busy
+            }
+            fn on_ack(&mut self, _: &mut Ctx<Ping>, token: u64, sent: SimTime, del: SimTime) {
+                self.acks.push((token, sent, del));
+            }
+        }
+        let net = NetConfig { latency_us: 10.0, ..NetConfig::zero() };
+        let cfg = SimConfig::deterministic(net);
+        let actors = (0..2).map(|_| Tracer { acks: Vec::new() }).collect();
+        let (actors, _) = SimRuntime::new(cfg).run(actors);
+        let acks = &actors[0].acks;
+        assert_eq!(acks.len(), 2, "every traced send is acked");
+        let lat = |i: usize| acks[i].2 - acks[i].1;
+        assert!((lat(0) - 10.0).abs() < 1e-9, "first ping pays wire latency: {}", lat(0));
+        // The second envelope lands while the receiver is 100us busy.
+        assert!(lat(1) > 10.0 + 50.0, "queueing delay must show: {}", lat(1));
+        assert!(actors[1].acks.is_empty());
+    }
+
+    #[test]
+    fn timers_fire_at_requested_time_and_hold_barriers() {
+        // Locality 0 arms a timer and requests a barrier; the barrier must
+        // not complete until the timer has fired (timers are in-flight
+        // work), and on_timer runs at the requested simulated time.
+        struct Alarm {
+            fired_at: Option<SimTime>,
+            barrier_at: Option<SimTime>,
+        }
+        impl Actor for Alarm {
+            type Msg = Nothing;
+            fn on_start(&mut self, ctx: &mut Ctx<Nothing>) {
+                if ctx.locality() == 0 {
+                    ctx.set_timer(40.0);
+                }
+                ctx.request_barrier();
+            }
+            fn on_message(&mut self, _: &mut Ctx<Nothing>, _: LocalityId, _: Nothing) {}
+            fn on_timer(&mut self, ctx: &mut Ctx<Nothing>) {
+                self.fired_at = Some(ctx.now());
+            }
+            fn on_barrier(&mut self, ctx: &mut Ctx<Nothing>, _: u64) {
+                self.barrier_at = Some(ctx.now());
+            }
+        }
+        let cfg = SimConfig {
+            barrier_latency_us: Some(1.0),
+            ..SimConfig::deterministic(NetConfig::zero())
+        };
+        let actors = (0..2).map(|_| Alarm { fired_at: None, barrier_at: None }).collect();
+        let (actors, report) = SimRuntime::new(cfg).run(actors);
+        assert_eq!(actors[0].fired_at, Some(40.0));
+        assert_eq!(report.barriers, 1);
+        for a in &actors {
+            assert!(a.barrier_at.expect("barrier completed") >= 40.0, "barrier outran timer");
+        }
     }
 
     #[test]

@@ -101,16 +101,24 @@ COMMANDS:
     fig2        regenerate Figure 2 (PageRank sweep, HPX naive/opt vs Boost/BSP)
     ablations   run the DESIGN.md ablation suite (A1 aggregation, A2 chunking,
                 A4 amt::aggregate flush policies, A5 delta-stepping
-                delta x flush-policy sweep, A6 partition schemes x algorithms);
+                delta x flush-policy sweep, A6 partition schemes x algorithms,
+                A7 adaptive coalescing: static-adaptive vs latency vs time
+                windows x {block, vertex_cut} with observed-latency columns);
                 --json additionally writes machine-readable tables to
-                bench_out/*.json (--out-dir overrides the directory)
+                bench_out/*.json (--out-dir overrides the directory);
+                --only a4,a7 runs a prefix-matched subset
     info        print graph statistics for the configured generator
     help        show this message
 
 CONFIG OVERRIDES (key=value):
     scale, degree, generator (urand|urand-directed|kron), seed,
     localities (comma list), alpha, iterations, root, reps, aggregate,
-    flush_policy (unbatched|items:N|bytes:N|adaptive|manual),
+    flush_policy (unbatched|naive|items:N|bytes:N|adaptive|latency|time:US|manual
+                  — adaptive derives a static break-even from the net model;
+                  latency self-tunes per destination on observed delivery
+                  latency; time:US flushes when the oldest buffered item has
+                  waited US microseconds, time:0 == unbatched;
+                  items:0/bytes:0 are rejected),
     sssp_delta (bucket width; 0 = auto w/d heuristic, inf = Bellman-Ford),
     partition (block|edge_balanced|hash|vertex_cut),
     net.latency_us, net.bandwidth_gbps, net.send_cpu_us, net.recv_cpu_us,
@@ -122,6 +130,8 @@ FLAGS:
     --out <file>       write the result table as CSV
     --out-dir <dir>    output directory for `ablations --json` (default bench_out)
     --json             also write ablation tables as JSON (ablations only)
+    --only <list>      comma list of ablation stems to run, prefix-matched
+                       (e.g. --only a4,a7; ablations only)
     --validate         validate results against the sequential oracle
 ";
 

@@ -37,7 +37,8 @@ pub struct Config {
     /// Aggregate same-destination sends per handler (optimized variant).
     pub aggregate: bool,
     /// Flush policy for the `amt::aggregate` combiners in the asynchronous
-    /// engines (`unbatched`, `items:N`, `bytes:N`, `adaptive`, `manual`).
+    /// engines (`unbatched`, `items:N`, `bytes:N`, `adaptive`, `latency`,
+    /// `time:US`, `manual`).
     pub flush_policy: FlushPolicy,
     /// Delta-stepping SSSP bucket width Δ. `0` (the default) auto-tunes via
     /// [`sssp::auto_delta`](crate::algorithms::sssp::auto_delta) (mean
@@ -110,11 +111,8 @@ impl Config {
                 "reps" => c.reps = v.parse()?,
                 "aggregate" => c.aggregate = v.parse()?,
                 "flush_policy" => {
-                    c.flush_policy = FlushPolicy::parse(v).ok_or_else(|| {
-                        anyhow::anyhow!(
-                            "bad flush_policy `{v}` (want unbatched|items:N|bytes:N|adaptive|manual)"
-                        )
-                    })?;
+                    c.flush_policy = FlushPolicy::parse(v)
+                        .map_err(|e| anyhow::anyhow!("bad flush_policy: {e}"))?;
                 }
                 "sssp_delta" => {
                     let d: f32 = v.parse()?;
@@ -216,8 +214,15 @@ mod tests {
         kv.insert("flush_policy".into(), "items:256".into());
         let c = Config::from_kv(&kv).unwrap();
         assert_eq!(c.flush_policy, FlushPolicy::Items(256));
+        kv.insert("flush_policy".into(), "latency".into());
+        assert_eq!(Config::from_kv(&kv).unwrap().flush_policy, FlushPolicy::LatencyAdaptive);
+        kv.insert("flush_policy".into(), "time:25".into());
+        assert_eq!(Config::from_kv(&kv).unwrap().flush_policy, FlushPolicy::TimeWindow(25));
         kv.insert("flush_policy".into(), "warp".into());
         assert!(Config::from_kv(&kv).is_err());
+        kv.insert("flush_policy".into(), "items:0".into());
+        let err = Config::from_kv(&kv).unwrap_err().to_string();
+        assert!(err.contains("items:0"), "{err}");
     }
 
     #[test]

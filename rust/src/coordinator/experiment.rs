@@ -272,6 +272,8 @@ pub fn flush_policy_grid() -> Vec<(&'static str, FlushPolicy)> {
         ("items:1024", FlushPolicy::Items(1024)),
         ("bytes:4096", FlushPolicy::Bytes(4096)),
         ("adaptive", FlushPolicy::Adaptive),
+        ("latency", FlushPolicy::LatencyAdaptive),
+        ("time:5", FlushPolicy::TimeWindow(5)),
         ("manual", FlushPolicy::Manual),
     ]
 }
@@ -602,6 +604,104 @@ pub fn ablation_partition_schemes(cfg: &Config) -> Result<Table> {
                 format!("{:.2}", r.partition.edge_imbalance),
                 format!("{:.2}", r.partition.replication_factor),
             ]);
+        }
+    }
+    Ok(table)
+}
+
+/// Ablation A7: adaptive coalescing. The tentpole experiment for the
+/// latency-observing flush layer: static break-even (`adaptive`) vs the
+/// self-tuning `latency` policy vs `time:US` windows, swept over
+/// `{block, vertex_cut}` × `{bfs-async, pagerank-async, sssp-delta}` at
+/// the largest locality count ≤ 8, every run validated against its
+/// sequential oracle. Reports envelope counts, the combiner fold factor,
+/// and the *observed* per-envelope delivery latency split by destination
+/// slot space (master-bound vs mirror-bound — the fan-in asymmetry that
+/// motivates per-space estimators under vertex cuts), straight from
+/// `SimReport.agg_master` / `agg_mirror` with no side channels.
+pub fn ablation_adaptive_coalescing(cfg: &Config) -> Result<Table> {
+    use crate::algorithms::sssp;
+    use crate::graph::generators;
+
+    let g = cfg.build_graph()?;
+    let gw = generators::with_random_weights(&g, 1.0, 10.0, cfg.seed + 1);
+    let p = cfg.localities.iter().cloned().filter(|&x| x <= 8).max().unwrap_or(8);
+    let params = PrParams { alpha: cfg.alpha, iterations: cfg.iterations };
+    let delta = if cfg.sssp_delta > 0.0 { cfg.sssp_delta } else { sssp::auto_delta(&gw) };
+    let pr_want = pagerank::sequential::pagerank(&g, params);
+    let bfs_want = bfs::sequential::distances(&g, cfg.root);
+    let sssp_want = sssp::dijkstra(&gw, cfg.root);
+    let policies: [(&str, FlushPolicy); 4] = [
+        ("adaptive", FlushPolicy::Adaptive),
+        ("latency", FlushPolicy::LatencyAdaptive),
+        ("time:5", FlushPolicy::TimeWindow(5)),
+        ("time:50", FlushPolicy::TimeWindow(50)),
+    ];
+    let mut table = Table::new(
+        format!(
+            "Ablation A7 — adaptive coalescing (policy x scheme x algorithm) on {} \
+             ({} localities)",
+            cfg.graph_name(),
+            p
+        ),
+        &["scheme", "algorithm", "policy", "best time", "envelopes", "fold factor",
+          "master-lat-us", "mirror-lat-us"],
+    );
+    for kind in [PartitionKind::Block, PartitionKind::VertexCut] {
+        let dist = DistGraph::build_with(&g, kind.build(&g, p));
+        let distw = DistGraph::build_with(&gw, kind.build(&gw, p));
+        for (pname, policy) in policies {
+            let mut rows: Vec<(&str, Option<SimReport>)> = Vec::new();
+            for _ in 0..cfg.reps.max(1) {
+                let r = bfs::run_async_with(&dist, cfg.root, policy, sim_cfg(&cfg.net, false));
+                let lv = bfs::tree_levels(cfg.root, &r.parents);
+                anyhow::ensure!(
+                    lv == bfs_want,
+                    "A7: BFS levels diverge under {} / {pname}",
+                    kind.name()
+                );
+                keep_best(&mut rows, "bfs-async", r.report);
+
+                let r = pagerank::run_async(&dist, params, policy, sim_cfg(&cfg.net, false));
+                let diff = pagerank::max_abs_diff(&r.ranks, &pr_want);
+                anyhow::ensure!(
+                    diff < 1e-3,
+                    "A7: PageRank diverges under {} / {pname} ({diff})",
+                    kind.name()
+                );
+                keep_best(&mut rows, "pagerank-async", r.report);
+
+                let r = sssp::run_delta_with(
+                    &gw,
+                    &distw,
+                    cfg.root,
+                    delta,
+                    policy,
+                    sim_cfg(&cfg.net, false),
+                );
+                let ok = r.dist.iter().zip(&sssp_want).all(|(a, b)| {
+                    (a.is_infinite() && b.is_infinite()) || (a - b).abs() < 1e-3
+                });
+                anyhow::ensure!(
+                    ok,
+                    "A7: delta SSSP distances diverge under {} / {pname}",
+                    kind.name()
+                );
+                keep_best(&mut rows, "sssp-delta", r.report);
+            }
+            for (algo, report) in rows {
+                let r = report.unwrap();
+                table.row(vec![
+                    kind.name().to_string(),
+                    algo.to_string(),
+                    pname.to_string(),
+                    fmt_us(r.makespan_us),
+                    r.net.envelopes.to_string(),
+                    format!("{:.1}", r.agg.fold_factor()),
+                    format!("{:.2}", r.agg_master.mean_obs_latency_us()),
+                    format!("{:.2}", r.agg_mirror.mean_obs_latency_us()),
+                ]);
+            }
         }
     }
     Ok(table)

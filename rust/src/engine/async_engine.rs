@@ -21,13 +21,15 @@ use std::cmp::Ordering;
 use std::collections::BinaryHeap;
 use std::sync::Arc;
 
-use crate::amt::aggregate::{Aggregator, FlushPolicy};
-use crate::amt::sim::{Actor, Ctx, LocalityId, SimConfig, SimRuntime};
+use crate::amt::aggregate::{Aggregator, FlushPolicy, SlotSpace};
+use crate::amt::sim::{Actor, Ctx, LocalityId, SimConfig, SimRuntime, SimTime};
 use crate::amt::WorkStats;
 use crate::graph::{DistGraph, Shard};
 
 use super::program::{Mode, VertexProgram};
-use super::{finish, init_states, EngineMsg, ProgramRun};
+use super::{
+    finish, init_states, ship, untag_token, EngineMsg, ProgramRun, SPACE_MASTER, SPACE_MIRROR,
+};
 
 /// Pending wavefront entry: apply `msg` to `row` when popped. Min-ordered
 /// by (priority bits, insertion seq) — deterministic without requiring an
@@ -71,6 +73,13 @@ struct AsyncActor<P: VertexProgram> {
     iter: u32,
     deltas: Vec<f32>,
     work: WorkStats,
+    /// The policy is a non-zero `TimeWindow`: handler boundaries poll the
+    /// combiners instead of draining them, and a runtime timer is kept
+    /// armed at the earliest flush deadline so buffered traffic can never
+    /// outlive quiescence (or a superstep barrier).
+    windowed: bool,
+    /// Earliest outstanding timer deadline (None = no timer armed).
+    timer_at: Option<SimTime>,
 }
 
 impl<P: VertexProgram> AsyncActor<P> {
@@ -117,8 +126,9 @@ impl<P: VertexProgram> AsyncActor<P> {
             } else {
                 let gi = t - n_owned;
                 let dst = shard.ghost_owner[gi];
-                if let Some(b) = self.agg.accumulate(dst, shard.ghost_master_index[gi], m) {
-                    ctx.send(dst, EngineMsg::ToMaster(b));
+                let b = self.agg.accumulate(dst, shard.ghost_master_index[gi], m, ctx.now());
+                if let Some(b) = b {
+                    ship(ctx, dst, b, SPACE_MASTER, EngineMsg::ToMaster);
                 }
             }
         }
@@ -140,43 +150,82 @@ impl<P: VertexProgram> AsyncActor<P> {
             if row < n_owned {
                 self.work.useful_relaxations += 1;
                 for &(dst, gi) in shard.mirrors(row) {
-                    if let Some(b) = self.mirror_agg.accumulate(dst, gi, sig.clone()) {
-                        ctx.send(dst, EngineMsg::ToMirror(b));
+                    if let Some(b) = self.mirror_agg.accumulate(dst, gi, sig.clone(), ctx.now()) {
+                        ship(ctx, dst, b, SPACE_MIRROR, EngineMsg::ToMirror);
                     }
                 }
             } else {
                 let gi = row - n_owned;
                 let dst = shard.ghost_owner[gi];
-                if let Some(b) = self.agg.accumulate(dst, shard.ghost_master_index[gi], sig) {
-                    ctx.send(dst, EngineMsg::ToMaster(b));
+                let b = self.agg.accumulate(dst, shard.ghost_master_index[gi], sig, ctx.now());
+                if let Some(b) = b {
+                    ship(ctx, dst, b, SPACE_MASTER, EngineMsg::ToMaster);
                 }
             }
             self.expand_converge(row);
         }
     }
 
-    /// Ship whatever the policies left buffered; called at handler end so
-    /// quiescence (or the superstep barrier) can never strand traffic.
+    /// Ship everything the policies left buffered (unconditional flush).
     fn drain(&mut self, ctx: &mut Ctx<EngineMsg<P::Msg>>) {
         for (dst, b) in self.agg.drain() {
-            ctx.send(dst, EngineMsg::ToMaster(b));
+            ship(ctx, dst, b, SPACE_MASTER, EngineMsg::ToMaster);
         }
         for (dst, b) in self.mirror_agg.drain() {
-            ctx.send(dst, EngineMsg::ToMirror(b));
+            ship(ctx, dst, b, SPACE_MIRROR, EngineMsg::ToMirror);
+        }
+    }
+
+    /// End-of-handler flush point. Non-windowed policies drain everything
+    /// (the pre-existing contract: quiescence can never strand traffic).
+    /// Under a time window the combiners are only *polled* — expired
+    /// destinations ship, the rest keep buffering across handlers — and a
+    /// runtime timer is kept armed at the earliest remaining deadline,
+    /// which holds quiescence/barriers open until the window flushes.
+    fn flush_boundary(&mut self, ctx: &mut Ctx<EngineMsg<P::Msg>>) {
+        if !self.windowed {
+            self.drain(ctx);
+            return;
+        }
+        let now = ctx.now();
+        for (dst, b) in self.agg.poll(now) {
+            ship(ctx, dst, b, SPACE_MASTER, EngineMsg::ToMaster);
+        }
+        for (dst, b) in self.mirror_agg.poll(now) {
+            ship(ctx, dst, b, SPACE_MIRROR, EngineMsg::ToMirror);
+        }
+        self.arm_timer(ctx);
+    }
+
+    /// Keep a timer armed at the earliest pending flush deadline.
+    fn arm_timer(&mut self, ctx: &mut Ctx<EngineMsg<P::Msg>>) {
+        let next = match (self.agg.next_deadline(), self.mirror_agg.next_deadline()) {
+            (Some(a), Some(b)) => Some(a.min(b)),
+            (a, b) => a.or(b),
+        };
+        if let Some(t) = next {
+            let t = t.max(ctx.now());
+            // Redundant later timers are harmless no-op polls; only re-arm
+            // when this deadline is earlier than the armed one.
+            if self.timer_at.is_none_or(|cur| t < cur) {
+                ctx.set_timer(t);
+                self.timer_at = Some(t);
+            }
         }
     }
 
     /// One Iterate superstep: every owned row scatters to its mirrors and
-    /// emits along its locally homed edges, then the phase drains and
-    /// waits at the iteration barrier.
+    /// emits along its locally homed edges, then the phase drains — a
+    /// superstep boundary is a hard flush point under every policy, time
+    /// windows included — and waits at the iteration barrier.
     fn iteration_phase(&mut self, ctx: &mut Ctx<EngineMsg<P::Msg>>) {
         let n_owned = self.shard.n_local();
         let shard = Arc::clone(&self.shard);
         for u in 0..n_owned {
             let sig = self.prog.signal(&self.state[u]);
             for &(dst, gi) in shard.mirrors(u) {
-                if let Some(b) = self.mirror_agg.accumulate(dst, gi, sig.clone()) {
-                    ctx.send(dst, EngineMsg::ToMirror(b));
+                if let Some(b) = self.mirror_agg.accumulate(dst, gi, sig.clone(), ctx.now()) {
+                    ship(ctx, dst, b, SPACE_MIRROR, EngineMsg::ToMirror);
                 }
             }
             self.expand_iterate(ctx, u);
@@ -199,7 +248,7 @@ impl<P: VertexProgram> Actor for AsyncActor<P> {
                     }
                 }
                 self.relax(ctx);
-                self.drain(ctx);
+                self.flush_boundary(ctx);
             }
             Mode::Iterate(n) if n > 0 => self.iteration_phase(ctx),
             Mode::Iterate(_) => {}
@@ -210,45 +259,79 @@ impl<P: VertexProgram> Actor for AsyncActor<P> {
         let n_owned = self.shard.n_local();
         match (msg, self.mode) {
             (EngineMsg::ToMaster(b), Mode::Converge) => {
-                for (idx, m) in b.items {
+                let mut items = b.into_items();
+                for (idx, m) in items.drain(..) {
                     self.push(idx as usize, m);
                 }
+                self.agg.recycle(items);
                 self.relax(ctx);
-                self.drain(ctx);
+                self.flush_boundary(ctx);
             }
             (EngineMsg::ToMirror(b), Mode::Converge) => {
                 // The value came *from* the master: install it directly
                 // (no echo back) and expand the locally homed edges.
-                for (gi, m) in b.items {
+                let mut items = b.into_items();
+                for (gi, m) in items.drain(..) {
                     let row = n_owned + gi as usize;
                     if self.prog.apply_mirror(&mut self.state[row], m) {
                         self.expand_converge(row);
                     }
                 }
+                self.mirror_agg.recycle(items);
                 self.relax(ctx);
-                self.drain(ctx);
+                self.flush_boundary(ctx);
             }
             (EngineMsg::ToMaster(b), Mode::Iterate(_)) => {
                 // Applied on arrival — overlap, not at-barrier batching.
-                for (idx, m) in b.items {
+                let mut items = b.into_items();
+                for (idx, m) in items.drain(..) {
                     let _ = self.prog.apply(&mut self.state[idx as usize], m);
                 }
+                self.agg.recycle(items);
             }
             (EngineMsg::ToMirror(b), Mode::Iterate(_)) => {
                 // Expand our share of the mirrored rows now; the resulting
-                // master-bound traffic must land inside this superstep.
-                for (gi, m) in b.items {
+                // master-bound traffic must land inside this superstep —
+                // directly, or via the armed window timer the iteration
+                // barrier waits out.
+                let mut items = b.into_items();
+                for (gi, m) in items.drain(..) {
                     let row = n_owned + gi as usize;
                     if self.prog.apply_mirror(&mut self.state[row], m) {
                         self.expand_iterate(ctx, row);
                     }
                 }
-                for (dst, b) in self.agg.drain() {
-                    ctx.send(dst, EngineMsg::ToMaster(b));
+                self.mirror_agg.recycle(items);
+                if self.windowed {
+                    self.flush_boundary(ctx);
+                } else {
+                    for (dst, b) in self.agg.drain() {
+                        ship(ctx, dst, b, SPACE_MASTER, EngineMsg::ToMaster);
+                    }
                 }
             }
             _ => unreachable!("control message on the async engine"),
         }
+    }
+
+    fn on_ack(
+        &mut self,
+        _ctx: &mut Ctx<Self::Msg>,
+        token: u64,
+        sent: SimTime,
+        delivered: SimTime,
+    ) {
+        let (tok, space) = untag_token(token);
+        match space {
+            SPACE_MASTER => self.agg.observe_ack(tok, sent, delivered),
+            SPACE_MIRROR => self.mirror_agg.observe_ack(tok, sent, delivered),
+            _ => unreachable!("heavy-space ack on the async engine"),
+        }
+    }
+
+    fn on_timer(&mut self, ctx: &mut Ctx<Self::Msg>) {
+        self.timer_at = None;
+        self.flush_boundary(ctx);
     }
 
     fn on_barrier(&mut self, ctx: &mut Ctx<Self::Msg>, _epoch: u64) {
@@ -287,6 +370,7 @@ pub fn run_async<P: VertexProgram>(
             agg: Aggregator::new(
                 dist.owned_counts(),
                 s.locality,
+                SlotSpace::Master,
                 policy,
                 &cfg.net,
                 info.item_bytes,
@@ -295,6 +379,7 @@ pub fn run_async<P: VertexProgram>(
             mirror_agg: Aggregator::new(
                 dist.ghost_counts(),
                 s.locality,
+                SlotSpace::Mirror,
                 policy,
                 &cfg.net,
                 info.item_bytes,
@@ -305,12 +390,16 @@ pub fn run_async<P: VertexProgram>(
             iter: 0,
             deltas: Vec::new(),
             work: WorkStats::default(),
+            windowed: policy.time_window_us().is_some(),
+            timer_at: None,
         })
         .collect();
     let (actors, mut report) = SimRuntime::new(cfg).run(actors);
     for a in &actors {
         report.agg.merge(a.agg.stats());
         report.agg.merge(a.mirror_agg.stats());
+        report.agg_master.merge(a.agg.stats());
+        report.agg_mirror.merge(a.mirror_agg.stats());
         report.work.merge(&a.work);
     }
     report.partition = dist.partition_stats();

@@ -27,14 +27,14 @@
 
 use std::sync::Arc;
 
-use crate::amt::aggregate::{Aggregator, FlushPolicy};
+use crate::amt::aggregate::{Aggregator, FlushPolicy, SlotSpace};
 use crate::amt::executor::{ChunkPolicy, Executor};
-use crate::amt::sim::{Actor, Ctx, LocalityId, SimConfig, SimRuntime};
+use crate::amt::sim::{Actor, Ctx, LocalityId, SimConfig, SimRuntime, SimTime};
 use crate::amt::WorkStats;
 use crate::graph::{DistGraph, Shard};
 
 use super::program::{Mode, VertexProgram};
-use super::{finish, init_states, EngineMsg, ProgramRun};
+use super::{finish, init_states, ship, EngineMsg, ProgramRun, SPACE_MASTER, SPACE_MIRROR};
 
 #[derive(PartialEq)]
 enum Phase {
@@ -112,7 +112,7 @@ impl<P: VertexProgram> BspActor<P> {
             if row < n_owned {
                 for &(dst, gi) in shard.mirrors(row) {
                     // Manual policy: accumulate never auto-flushes.
-                    let flushed = self.mirror_agg.accumulate(dst, gi, sig.clone());
+                    let flushed = self.mirror_agg.accumulate(dst, gi, sig.clone(), ctx.now());
                     debug_assert!(flushed.is_none());
                 }
             }
@@ -130,6 +130,7 @@ impl<P: VertexProgram> BspActor<P> {
                         shard.ghost_owner[gi],
                         shard.ghost_master_index[gi],
                         m,
+                        ctx.now(),
                     );
                     debug_assert!(flushed.is_none());
                     activity += 1;
@@ -137,10 +138,10 @@ impl<P: VertexProgram> BspActor<P> {
             }
         }
         for (dst, b) in self.agg.drain() {
-            ctx.send(dst, EngineMsg::ToMaster(b));
+            ship(ctx, dst, b, SPACE_MASTER, EngineMsg::ToMaster);
         }
         for (dst, b) in self.mirror_agg.drain() {
-            ctx.send(dst, EngineMsg::ToMirror(b));
+            ship(ctx, dst, b, SPACE_MIRROR, EngineMsg::ToMirror);
             // The scatter guarantees the next superstep runs; the mirror's
             // cascade is expanded and counted there.
             activity += 1;
@@ -159,23 +160,23 @@ impl<P: VertexProgram> BspActor<P> {
         for u in 0..n_owned {
             let sig = self.prog.signal(&self.state[u]);
             for &(dst, gi) in shard.mirrors(u) {
-                let flushed = self.mirror_agg.accumulate(dst, gi, sig.clone());
+                let flushed = self.mirror_agg.accumulate(dst, gi, sig.clone(), ctx.now());
                 debug_assert!(flushed.is_none());
             }
-            self.emit_row(u, &sig);
+            self.emit_row(u, &sig, ctx.now());
         }
         for (dst, b) in self.mirror_agg.drain() {
-            ctx.send(dst, EngineMsg::ToMirror(b));
+            ship(ctx, dst, b, SPACE_MIRROR, EngineMsg::ToMirror);
         }
         for (dst, b) in self.agg.drain() {
-            ctx.send(dst, EngineMsg::ToMaster(b));
+            ship(ctx, dst, b, SPACE_MASTER, EngineMsg::ToMaster);
         }
         ctx.request_barrier();
     }
 
     /// Emit one row's signal along its locally homed edges (Iterate: local
     /// targets apply now, remote targets fold into the Manual combiner).
-    fn emit_row(&mut self, row: usize, sig: &P::Msg) {
+    fn emit_row(&mut self, row: usize, sig: &P::Msg, now: SimTime) {
         let n_owned = self.shard.n_local();
         let u = self.shard.global_of(row);
         let shard = Arc::clone(&self.shard);
@@ -191,6 +192,7 @@ impl<P: VertexProgram> BspActor<P> {
                     shard.ghost_owner[gi],
                     shard.ghost_master_index[gi],
                     m,
+                    now,
                 );
                 debug_assert!(flushed.is_none());
             }
@@ -267,32 +269,40 @@ impl<P: VertexProgram> Actor for BspActor<P> {
     fn on_message(&mut self, ctx: &mut Ctx<Self::Msg>, _from: LocalityId, msg: Self::Msg) {
         let n_owned = self.shard.n_local();
         match msg {
-            EngineMsg::ToMaster(b) => self.inbox.extend(b.items),
+            EngineMsg::ToMaster(b) => {
+                let mut items = b.into_items();
+                self.inbox.append(&mut items);
+                self.agg.recycle(items);
+            }
             EngineMsg::ToMirror(b) => match self.mode {
                 Mode::Converge => {
                     // Install and re-activate: the mirror's share of the
                     // row expands next superstep (the sender counted the
                     // scatter, so that superstep is guaranteed to run).
-                    for (gi, m) in b.items {
+                    let mut items = b.into_items();
+                    for (gi, m) in items.drain(..) {
                         let row = n_owned + gi as usize;
                         if self.prog.apply_mirror(&mut self.state[row], m) {
                             self.activate(row);
                         }
                     }
+                    self.mirror_agg.recycle(items);
                 }
                 Mode::Iterate(_) => {
                     // Expand inside the handler so the replicated traffic
                     // lands in this superstep (the barrier waits for
                     // network quiescence).
-                    for (gi, m) in b.items {
+                    let mut items = b.into_items();
+                    for (gi, m) in items.drain(..) {
                         let row = n_owned + gi as usize;
                         if self.prog.apply_mirror(&mut self.state[row], m) {
                             let sig = self.prog.signal(&self.state[row]);
-                            self.emit_row(row, &sig);
+                            self.emit_row(row, &sig, ctx.now());
                         }
                     }
+                    self.mirror_agg.recycle(items);
                     for (dst, b) in self.agg.drain() {
-                        ctx.send(dst, EngineMsg::ToMaster(b));
+                        ship(ctx, dst, b, SPACE_MASTER, EngineMsg::ToMaster);
                     }
                 }
             },
@@ -393,6 +403,7 @@ pub fn run_bsp_with_executor<P: VertexProgram>(
             agg: Aggregator::new(
                 dist.owned_counts(),
                 s.locality,
+                SlotSpace::Master,
                 FlushPolicy::Manual,
                 &cfg.net,
                 info.item_bytes,
@@ -401,6 +412,7 @@ pub fn run_bsp_with_executor<P: VertexProgram>(
             mirror_agg: Aggregator::new(
                 dist.ghost_counts(),
                 s.locality,
+                SlotSpace::Mirror,
                 FlushPolicy::Manual,
                 &cfg.net,
                 info.item_bytes,
@@ -417,6 +429,8 @@ pub fn run_bsp_with_executor<P: VertexProgram>(
     for a in &actors {
         report.agg.merge(a.agg.stats());
         report.agg.merge(a.mirror_agg.stats());
+        report.agg_master.merge(a.agg.stats());
+        report.agg_mirror.merge(a.mirror_agg.stats());
         report.work.merge(&a.work);
     }
     report.partition = dist.partition_stats();

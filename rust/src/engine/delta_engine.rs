@@ -42,13 +42,16 @@
 use std::collections::BTreeMap;
 use std::sync::Arc;
 
-use crate::amt::aggregate::{Aggregator, FlushPolicy};
-use crate::amt::sim::{Actor, Ctx, LocalityId, SimConfig, SimRuntime};
+use crate::amt::aggregate::{Aggregator, FlushPolicy, SlotSpace};
+use crate::amt::sim::{Actor, Ctx, LocalityId, SimConfig, SimRuntime, SimTime};
 use crate::amt::WorkStats;
 use crate::graph::{DistGraph, Shard};
 
 use super::program::{Mode, VertexProgram};
-use super::{finish, init_states, EngineMsg, ProgramRun};
+use super::{
+    finish, init_states, ship, untag_token, EngineMsg, ProgramRun, SPACE_HEAVY, SPACE_MASTER,
+    SPACE_MIRROR,
+};
 
 /// `in_bucket` sentinel: the row is not queued in any bucket.
 const NOT_QUEUED: u64 = u64::MAX;
@@ -144,6 +147,13 @@ struct DeltaActor<P: VertexProgram> {
     /// Mirror-bound heavy-expand combiner (heavy phase).
     heavy_agg: Aggregator<P::Msg>,
     work: WorkStats,
+    /// Non-zero `TimeWindow` policy: mid-round handler boundaries poll
+    /// instead of draining (the pre-vote `work_round` drain stays
+    /// unconditional), with a timer armed at the earliest deadline so the
+    /// vote barrier waits buffered relaxations out.
+    windowed: bool,
+    /// Earliest outstanding timer deadline (None = no timer armed).
+    timer_at: Option<SimTime>,
 }
 
 impl<P: VertexProgram> DeltaActor<P> {
@@ -165,8 +175,8 @@ impl<P: VertexProgram> DeltaActor<P> {
             let gi = t - n_owned;
             let dst = self.shard.ghost_owner[gi];
             let idx = self.shard.ghost_master_index[gi];
-            if let Some(batch) = self.agg.accumulate(dst, idx, m) {
-                ctx.send(dst, EngineMsg::ToMaster(batch));
+            if let Some(batch) = self.agg.accumulate(dst, idx, m, ctx.now()) {
+                ship(ctx, dst, batch, SPACE_MASTER, EngineMsg::ToMaster);
             }
         }
     }
@@ -216,8 +226,8 @@ impl<P: VertexProgram> DeltaActor<P> {
             }
             let sig = self.prog.signal(&self.state[lv]);
             for &(dst, gi) in shard.mirrors(lv) {
-                if let Some(b) = self.mirror_agg.accumulate(dst, gi, sig.clone()) {
-                    ctx.send(dst, EngineMsg::ToMirror(b));
+                if let Some(b) = self.mirror_agg.accumulate(dst, gi, sig.clone(), ctx.now()) {
+                    ship(ctx, dst, b, SPACE_MIRROR, EngineMsg::ToMirror);
                 }
             }
             self.relax_edges(ctx, lv, &sig, false);
@@ -235,8 +245,8 @@ impl<P: VertexProgram> DeltaActor<P> {
             self.in_req[lv] = false;
             let sig = self.prog.signal(&self.state[lv]);
             for &(dst, gi) in shard.mirrors(lv) {
-                if let Some(b) = self.heavy_agg.accumulate(dst, gi, sig.clone()) {
-                    ctx.send(dst, EngineMsg::ToMirrorHeavy(b));
+                if let Some(b) = self.heavy_agg.accumulate(dst, gi, sig.clone(), ctx.now()) {
+                    ship(ctx, dst, b, SPACE_HEAVY, EngineMsg::ToMirrorHeavy);
                 }
             }
             self.relax_edges(ctx, lv, &sig, true);
@@ -248,6 +258,8 @@ impl<P: VertexProgram> DeltaActor<P> {
             LightHeavy::Light => self.light_round(ctx),
             LightHeavy::Heavy => self.heavy_round(ctx),
         }
+        // Unconditional drain before the vote barrier, under every policy
+        // (time windows included): votes must see settled local state.
         self.drain(ctx);
         self.step = Step::AwaitVote;
         ctx.request_barrier();
@@ -255,13 +267,51 @@ impl<P: VertexProgram> DeltaActor<P> {
 
     fn drain(&mut self, ctx: &mut Ctx<EngineMsg<P::Msg>>) {
         for (dst, b) in self.agg.drain() {
-            ctx.send(dst, EngineMsg::ToMaster(b));
+            ship(ctx, dst, b, SPACE_MASTER, EngineMsg::ToMaster);
         }
         for (dst, b) in self.mirror_agg.drain() {
-            ctx.send(dst, EngineMsg::ToMirror(b));
+            ship(ctx, dst, b, SPACE_MIRROR, EngineMsg::ToMirror);
         }
         for (dst, b) in self.heavy_agg.drain() {
-            ctx.send(dst, EngineMsg::ToMirrorHeavy(b));
+            ship(ctx, dst, b, SPACE_HEAVY, EngineMsg::ToMirrorHeavy);
+        }
+    }
+
+    /// Mid-round handler flush point: drain everything (the pre-existing
+    /// contract), or — under a time window — poll for expired destinations
+    /// only and keep a timer armed at the earliest remaining deadline.
+    /// Timers count as in-flight work, so the vote barrier cannot complete
+    /// until every windowed buffer has shipped and been applied: every
+    /// locality still votes on complete post-round state.
+    fn flush_boundary(&mut self, ctx: &mut Ctx<EngineMsg<P::Msg>>) {
+        if !self.windowed {
+            self.drain(ctx);
+            return;
+        }
+        let now = ctx.now();
+        for (dst, b) in self.agg.poll(now) {
+            ship(ctx, dst, b, SPACE_MASTER, EngineMsg::ToMaster);
+        }
+        for (dst, b) in self.mirror_agg.poll(now) {
+            ship(ctx, dst, b, SPACE_MIRROR, EngineMsg::ToMirror);
+        }
+        for (dst, b) in self.heavy_agg.poll(now) {
+            ship(ctx, dst, b, SPACE_HEAVY, EngineMsg::ToMirrorHeavy);
+        }
+        let next = [
+            self.agg.next_deadline(),
+            self.mirror_agg.next_deadline(),
+            self.heavy_agg.next_deadline(),
+        ]
+        .into_iter()
+        .flatten()
+        .min_by(|a, b| a.total_cmp(b));
+        if let Some(t) = next {
+            let t = t.max(now);
+            if self.timer_at.is_none_or(|cur| t < cur) {
+                ctx.set_timer(t);
+                self.timer_at = Some(t);
+            }
         }
     }
 }
@@ -288,7 +338,8 @@ impl<P: VertexProgram> Actor for DeltaActor<P> {
             // fires the network has drained, so every locality votes on
             // the complete post-round state.
             EngineMsg::ToMaster(b) => {
-                for (lv, m) in b.items {
+                let mut items = b.into_items();
+                for (lv, m) in items.drain(..) {
                     let lv = lv as usize;
                     if self.prog.beats(&m, &self.state[lv]) {
                         let bk = bucket_of(self.prog.priority(&m), self.delta);
@@ -300,30 +351,36 @@ impl<P: VertexProgram> Actor for DeltaActor<P> {
                         }
                     }
                 }
+                self.agg.recycle(items);
             }
             // A master settled in the current light phase: install its
             // signal and relax our share of the light edges now. The
-            // cascade completes before the vote barrier (quiescence).
+            // cascade completes before the vote barrier (quiescence, which
+            // also waits out any armed window timer).
             EngineMsg::ToMirror(b) => {
-                for (gi, m) in b.items {
+                let mut items = b.into_items();
+                for (gi, m) in items.drain(..) {
                     let row = n_owned + gi as usize;
                     if self.prog.apply_mirror(&mut self.state[row], m) {
                         let sig = self.prog.signal(&self.state[row]);
                         self.relax_edges(ctx, row, &sig, false);
                     }
                 }
-                self.drain(ctx);
+                self.mirror_agg.recycle(items);
+                self.flush_boundary(ctx);
             }
             // Heavy expansion on the master's behalf: exactly once per
             // settlement, at the settled signal.
             EngineMsg::ToMirrorHeavy(b) => {
-                for (gi, m) in b.items {
+                let mut items = b.into_items();
+                for (gi, m) in items.drain(..) {
                     let row = n_owned + gi as usize;
                     let _ = self.prog.apply_mirror(&mut self.state[row], m);
                     let sig = self.prog.signal(&self.state[row]);
                     self.relax_edges(ctx, row, &sig, true);
                 }
-                self.drain(ctx);
+                self.heavy_agg.recycle(items);
+                self.flush_boundary(ctx);
             }
             EngineMsg::Status { nonempty_current, min_bucket } => {
                 self.votes_seen += 1;
@@ -335,6 +392,27 @@ impl<P: VertexProgram> Actor for DeltaActor<P> {
             }
             _ => unreachable!("BSP control message on the delta engine"),
         }
+    }
+
+    fn on_ack(
+        &mut self,
+        _ctx: &mut Ctx<Self::Msg>,
+        token: u64,
+        sent: SimTime,
+        delivered: SimTime,
+    ) {
+        let (tok, space) = untag_token(token);
+        match space {
+            SPACE_MASTER => self.agg.observe_ack(tok, sent, delivered),
+            SPACE_MIRROR => self.mirror_agg.observe_ack(tok, sent, delivered),
+            SPACE_HEAVY => self.heavy_agg.observe_ack(tok, sent, delivered),
+            _ => unreachable!("unknown ack space"),
+        }
+    }
+
+    fn on_timer(&mut self, ctx: &mut Ctx<Self::Msg>) {
+        self.timer_at = None;
+        self.flush_boundary(ctx);
     }
 
     fn on_barrier(&mut self, ctx: &mut Ctx<Self::Msg>, _epoch: u64) {
@@ -429,6 +507,7 @@ pub fn run_delta<P: VertexProgram>(
             agg: Aggregator::new(
                 dist.owned_counts(),
                 s.locality,
+                SlotSpace::Master,
                 policy,
                 &cfg.net,
                 info.item_bytes,
@@ -437,6 +516,7 @@ pub fn run_delta<P: VertexProgram>(
             mirror_agg: Aggregator::new(
                 dist.ghost_counts(),
                 s.locality,
+                SlotSpace::Mirror,
                 policy,
                 &cfg.net,
                 info.item_bytes,
@@ -445,12 +525,15 @@ pub fn run_delta<P: VertexProgram>(
             heavy_agg: Aggregator::new(
                 dist.ghost_counts(),
                 s.locality,
+                SlotSpace::Mirror,
                 policy,
                 &cfg.net,
                 info.item_bytes,
                 P::combine,
             ),
             work: WorkStats::default(),
+            windowed: policy.time_window_us().is_some(),
+            timer_at: None,
         })
         .collect();
     let (actors, mut report) = SimRuntime::new(cfg).run(actors);
@@ -458,6 +541,9 @@ pub fn run_delta<P: VertexProgram>(
         report.agg.merge(a.agg.stats());
         report.agg.merge(a.mirror_agg.stats());
         report.agg.merge(a.heavy_agg.stats());
+        report.agg_master.merge(a.agg.stats());
+        report.agg_mirror.merge(a.mirror_agg.stats());
+        report.agg_mirror.merge(a.heavy_agg.stats());
         report.work.merge(&a.work);
     }
     report.partition = dist.partition_stats();

@@ -37,7 +37,7 @@ pub use delta_engine::run_delta;
 pub use program::{Mode, ProgramInfo, VertexProgram};
 
 use crate::amt::aggregate::Batch;
-use crate::amt::sim::Message;
+use crate::amt::sim::{Ctx, Message};
 use crate::amt::SimReport;
 use crate::graph::{DistGraph, Shard};
 
@@ -114,6 +114,44 @@ impl<M> Message for EngineMsg<M> {
             }
             _ => 1,
         }
+    }
+}
+
+/// Trace-token tags: an engine holds several [`Aggregator`]s (master /
+/// mirror / heavy), each minting its own token space, so the shipper tags
+/// the top bits with which combiner emitted the envelope and
+/// [`untag_token`] routes the ack back. See
+/// [`Aggregator::observe_ack`](crate::amt::Aggregator::observe_ack).
+pub(crate) const SPACE_MASTER: u64 = 0;
+/// Mirror-scatter combiner tag (see [`SPACE_MASTER`]).
+pub(crate) const SPACE_MIRROR: u64 = 1;
+/// Delta heavy-expand combiner tag (see [`SPACE_MASTER`]).
+pub(crate) const SPACE_HEAVY: u64 = 2;
+const SPACE_SHIFT: u32 = 62;
+
+/// Split a tagged ack token into `(combiner token, space tag)`.
+pub(crate) fn untag_token(t: u64) -> (u64, u64) {
+    (t & !(3u64 << SPACE_SHIFT), t >> SPACE_SHIFT)
+}
+
+/// Ship one combiner batch: traced envelopes (see
+/// [`FlushPolicy::traced`](crate::amt::FlushPolicy::traced)) go out via
+/// [`Ctx::send_traced`] with the space tag folded into the token so the
+/// delivery ack can be routed back to the emitting aggregator; everything
+/// else is a plain send.
+pub(crate) fn ship<M>(
+    ctx: &mut Ctx<EngineMsg<M>>,
+    dst: crate::amt::LocalityId,
+    b: Batch<M>,
+    space: u64,
+    wrap: fn(Batch<M>) -> EngineMsg<M>,
+) {
+    match b.token() {
+        Some(t) => {
+            debug_assert!(t < 1 << SPACE_SHIFT, "trace token overflow");
+            ctx.send_traced(dst, wrap(b), t | (space << SPACE_SHIFT));
+        }
+        None => ctx.send(dst, wrap(b)),
     }
 }
 

@@ -77,7 +77,10 @@ pub trait VertexProgram: Send + Sync + 'static {
     /// cache/install slot the engines maintain for mirror routing.
     type State: Clone + Send + 'static;
     /// Wire value per destination slot; folded by [`VertexProgram::combine`].
-    type Msg: Clone + Send + std::fmt::Debug + 'static;
+    /// `Default` backs the aggregator's flat combiner storage (dense value
+    /// arrays with generation-stamped occupancy — retired slots hold the
+    /// default value, never read).
+    type Msg: Clone + Send + Default + std::fmt::Debug + 'static;
 
     /// Capability declaration.
     fn info(&self) -> ProgramInfo;

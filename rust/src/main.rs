@@ -83,6 +83,13 @@ fn real_main() -> Result<()> {
                 res.report.utilization(),
                 fmt_us(res.report.net.wire_us),
             );
+            println!(
+                "  agg: pool reuse={:.2} obs-lat master={:.1}us mirror={:.1}us (acks={})",
+                res.report.agg.pool_reuse_ratio(),
+                res.report.agg_master.mean_obs_latency_us(),
+                res.report.agg_mirror.mean_obs_latency_us(),
+                res.report.agg.acks,
+            );
             let pt = res.report.partition;
             println!(
                 "  partition[{}]: v-imb={:.2} e-imb={:.2} repl={:.2}",
@@ -118,6 +125,13 @@ fn real_main() -> Result<()> {
                 res.report.work.efficiency(),
                 res.report.agg.envelopes,
                 res.report.agg.fold_factor(),
+            );
+            println!(
+                "  agg: pool reuse={:.2} obs-lat master={:.1}us mirror={:.1}us (acks={})",
+                res.report.agg.pool_reuse_ratio(),
+                res.report.agg_master.mean_obs_latency_us(),
+                res.report.agg_mirror.mean_obs_latency_us(),
+                res.report.agg.acks,
             );
             let pt = res.report.partition;
             println!(
@@ -179,17 +193,36 @@ fn real_main() -> Result<()> {
             // (file stem, runner) pairs so --json can name its outputs;
             // each table prints (and persists) as soon as it completes.
             type Runner = fn(&Config) -> Result<nwgraph_hpx::coordinator::Table>;
-            let tables: [(&str, Runner); 6] = [
+            let tables: [(&str, Runner); 7] = [
                 ("a1_aggregation", experiment::ablation_aggregation),
                 ("a2_chunking", experiment::ablation_adaptive_chunk),
                 ("a4_flush_policy", experiment::ablation_flush_policy),
                 ("a5_delta_stepping", experiment::ablation_delta_stepping),
                 ("a6_partition_schemes", experiment::ablation_partition_schemes),
+                ("a7_adaptive_coalescing", experiment::ablation_adaptive_coalescing),
                 ("extensions", experiment::extensions),
             ];
             let json = args.switch("json");
             let out_dir = args.flag("out-dir").unwrap_or("bench_out");
+            // --only a4,a7: run the prefix-matched subset (CI baselines
+            // grab A4+A7 without paying for the whole suite).
+            let only: Option<Vec<&str>> =
+                args.flag("only").map(|s| s.split(',').map(str::trim).collect());
+            if let Some(sel) = &only {
+                for pat in sel {
+                    anyhow::ensure!(
+                        tables.iter().any(|(stem, _)| stem.starts_with(pat)),
+                        "--only `{pat}` matches no ablation (stems: {})",
+                        tables.iter().map(|(s, _)| *s).collect::<Vec<_>>().join(", ")
+                    );
+                }
+            }
             for (stem, run) in tables {
+                if let Some(sel) = &only {
+                    if !sel.iter().any(|pat| stem.starts_with(pat)) {
+                        continue;
+                    }
+                }
                 let table = run(&cfg)?;
                 print!("{}", table.render());
                 if json {

@@ -4,7 +4,7 @@
 //! traffic, and the ablation acceptance criterion on a skewed graph.
 
 use nwgraph_hpx::algorithms::pagerank::{self, PrParams};
-use nwgraph_hpx::amt::aggregate::{AggStats, Aggregator, Batch};
+use nwgraph_hpx::amt::aggregate::{AggStats, Aggregator, Batch, SlotSpace};
 use nwgraph_hpx::amt::sim::Message;
 use nwgraph_hpx::amt::{
     Actor, Ctx, FlushPolicy, LocalityId, NetConfig, SimConfig, SimRuntime,
@@ -18,11 +18,13 @@ fn cfg(cases: u32) -> PropConfig {
 }
 
 fn gen_policy(rng: &mut generators::SplitMix64) -> FlushPolicy {
-    match rng.below(5) {
+    match rng.below(7) {
         0 => FlushPolicy::Unbatched,
         1 => FlushPolicy::Items(1 + rng.below(32) as usize),
         2 => FlushPolicy::Bytes(8 + rng.below(512) as usize),
         3 => FlushPolicy::Adaptive,
+        4 => FlushPolicy::TimeWindow(rng.below(50)),
+        5 => FlushPolicy::LatencyAdaptive,
         _ => FlushPolicy::Manual,
     }
 }
@@ -81,8 +83,15 @@ fn prop_no_item_dropped_or_duplicated_sum_fold() {
     // duplicated.
     forall(&cfg(64), gen_schedule, |s| {
         let total: usize = s.sizes.iter().sum();
-        let mut agg =
-            Aggregator::new(&s.sizes, s.here, s.policy, &NetConfig::default(), 8, add);
+        let mut agg = Aggregator::new(
+            &s.sizes,
+            s.here,
+            SlotSpace::Master,
+            s.policy,
+            &NetConfig::default(),
+            8,
+            add,
+        );
         let mut want = vec![0u64; total];
         let mut got = vec![0u64; total];
         let fold_in = |acc: &mut Vec<u64>, dst: u32, b: &Batch<u64>| {
@@ -90,10 +99,10 @@ fn prop_no_item_dropped_or_duplicated_sum_fold() {
                 acc[flat(&s.sizes, dst, slot)] += x;
             }
         };
-        for &(op, dst, off, val) in &s.ops {
+        for (i, &(op, dst, off, val)) in s.ops.iter().enumerate() {
             if op == 0 {
                 want[flat(&s.sizes, dst, off)] += val;
-                if let Some(b) = agg.accumulate(dst, off, val) {
+                if let Some(b) = agg.accumulate(dst, off, val, i as f64) {
                     fold_in(&mut got, dst, &b);
                 }
             } else if let Some(b) = agg.drain_one(dst) {
@@ -127,15 +136,22 @@ fn prop_no_item_dropped_min_fold() {
     // winner survives).
     forall(&cfg(64), gen_schedule, |s| {
         let total: usize = s.sizes.iter().sum();
-        let mut agg =
-            Aggregator::new(&s.sizes, s.here, s.policy, &NetConfig::default(), 8, min_u64);
+        let mut agg = Aggregator::new(
+            &s.sizes,
+            s.here,
+            SlotSpace::Master,
+            s.policy,
+            &NetConfig::default(),
+            8,
+            min_u64,
+        );
         let mut want = vec![u64::MAX; total];
         let mut got = vec![u64::MAX; total];
-        for &(op, dst, off, val) in &s.ops {
+        for (t, &(op, dst, off, val)) in s.ops.iter().enumerate() {
             if op == 0 {
                 let i = flat(&s.sizes, dst, off);
                 want[i] = want[i].min(val);
-                if let Some(b) = agg.accumulate(dst, off, val) {
+                if let Some(b) = agg.accumulate(dst, off, val, t as f64) {
                     for (slot, x) in b.items {
                         let i = flat(&s.sizes, dst, slot);
                         got[i] = got[i].min(x);
@@ -195,7 +211,7 @@ impl Actor for Sprayer {
         for i in 0..self.to_send {
             let dst = 1 + (i % (p as u64 - 1)) as LocalityId;
             // Slots collide on purpose: the fold sums them.
-            if let Some(b) = self.agg.accumulate(dst, (i % 4) as u32, 1) {
+            if let Some(b) = self.agg.accumulate(dst, (i % 4) as u32, 1, ctx.now()) {
                 ctx.send(dst, Payload(b));
             }
         }
@@ -220,7 +236,15 @@ fn quiescence_fires_after_draining_pending_buffers() {
     let net = NetConfig::default();
     let actors: Vec<Sprayer> = (0..p)
         .map(|l| Sprayer {
-            agg: Aggregator::new(&counts, l, FlushPolicy::Manual, &net, 8, add),
+            agg: Aggregator::new(
+                &counts,
+                l,
+                SlotSpace::Master,
+                FlushPolicy::Manual,
+                &net,
+                8,
+                add,
+            ),
             to_send: 300,
             received: 0,
         })
@@ -247,6 +271,8 @@ fn simreport_counters_equal_actual_sends() {
         FlushPolicy::Items(32),
         FlushPolicy::Bytes(512),
         FlushPolicy::Adaptive,
+        FlushPolicy::LatencyAdaptive,
+        FlushPolicy::TimeWindow(5),
         FlushPolicy::Manual,
     ] {
         let res = pagerank::run_async(
@@ -283,6 +309,113 @@ fn manual_drain_reproduces_optimized_variant_envelopes() {
     let bsp = pagerank::run_bsp(&dist, params, SimConfig::deterministic(NetConfig::default()));
     assert_eq!(manual.report.net.envelopes, bsp.report.net.envelopes);
     assert_eq!(manual.report.net.messages, bsp.report.net.messages);
+}
+
+/// Replay one schedule through a policy, feeding a synthetic constant-wire
+/// delivery ack for every traced envelope (so the latency tuner actually
+/// moves); returns the total envelope count.
+fn replay_envelopes(s: &Schedule, policy: FlushPolicy) -> u64 {
+    let mut agg: Aggregator<u64> = Aggregator::new(
+        &s.sizes,
+        s.here,
+        SlotSpace::Master,
+        policy,
+        &NetConfig::default(),
+        8,
+        add,
+    );
+    let mut counted = 0u64;
+    let mut ship = |agg: &mut Aggregator<u64>, b: Batch<u64>, t: f64, counted: &mut u64| {
+        *counted += 1;
+        if let Some(tok) = b.token() {
+            // Synthetic delivery: constant wire latency plus a per-item
+            // marshalling share — enough signal for the hill climber.
+            agg.observe_ack(tok, t, t + 2.0 + 0.05 * b.len() as f64);
+        }
+    };
+    for (i, &(op, dst, off, val)) in s.ops.iter().enumerate() {
+        let t = i as f64;
+        if op == 0 {
+            if let Some(b) = agg.accumulate(dst, off, val, t) {
+                ship(&mut agg, b, t, &mut counted);
+            }
+        } else if let Some(b) = agg.drain_one(dst) {
+            ship(&mut agg, b, t, &mut counted);
+        }
+        for (_, b) in agg.poll(t) {
+            ship(&mut agg, b, t, &mut counted);
+        }
+    }
+    let t_end = s.ops.len() as f64;
+    for (_, b) in agg.drain() {
+        ship(&mut agg, b, t_end, &mut counted);
+    }
+    assert_eq!(counted, agg.stats().envelopes, "every emitted batch was counted");
+    assert_eq!(agg.pending(), 0);
+    counted
+}
+
+#[test]
+fn prop_latency_adaptive_envelopes_bounded_by_unbatched_and_manual() {
+    // Satellite acceptance: on the same push/drain trace, the self-tuning
+    // policy can never emit more envelopes than Unbatched (one per item)
+    // and never fewer than Manual (drains only) — the tuner moves the
+    // threshold, but only within [break-even, 64x break-even], so the
+    // bound holds whatever latencies it observes.
+    forall(&cfg(48), gen_schedule, |s| {
+        let unbatched = replay_envelopes(s, FlushPolicy::Unbatched);
+        let latency = replay_envelopes(s, FlushPolicy::LatencyAdaptive);
+        let manual = replay_envelopes(s, FlushPolicy::Manual);
+        if latency > unbatched {
+            return Err(format!("latency {latency} > unbatched {unbatched}"));
+        }
+        if latency < manual {
+            return Err(format!("latency {latency} < manual {manual}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_time_window_zero_equals_unbatched() {
+    // Satellite acceptance: `time:0` is exactly the unbatched policy —
+    // same envelope stream, same accounting, no combiner state.
+    forall(&cfg(32), gen_schedule, |s| {
+        let run = |policy: FlushPolicy| {
+            let mut agg: Aggregator<u64> = Aggregator::new(
+                &s.sizes,
+                s.here,
+                SlotSpace::Master,
+                policy,
+                &NetConfig::default(),
+                8,
+                add,
+            );
+            let mut emitted: Vec<(u32, Vec<(u32, u64)>)> = Vec::new();
+            for (i, &(op, dst, off, val)) in s.ops.iter().enumerate() {
+                if op == 0 {
+                    if let Some(b) = agg.accumulate(dst, off, val, i as f64) {
+                        emitted.push((dst, b.into_items()));
+                    }
+                } else if let Some(b) = agg.drain_one(dst) {
+                    emitted.push((dst, b.into_items()));
+                }
+            }
+            for (dst, b) in agg.drain() {
+                emitted.push((dst, b.into_items()));
+            }
+            (emitted, *agg.stats())
+        };
+        let (tw, tw_stats) = run(FlushPolicy::TimeWindow(0));
+        let (ub, ub_stats) = run(FlushPolicy::Unbatched);
+        if tw != ub {
+            return Err("time:0 emitted a different envelope stream".into());
+        }
+        if tw_stats != ub_stats {
+            return Err(format!("stats diverge: {tw_stats:?} vs {ub_stats:?}"));
+        }
+        Ok(())
+    });
 }
 
 #[test]

@@ -29,13 +29,18 @@ fn cfg(cases: u32) -> PropConfig {
 
 const LOCALITIES: [u32; 4] = [1, 2, 4, 8];
 
-/// Draw a flush policy from the interesting corners of the policy space.
+/// Draw a flush policy from the interesting corners of the policy space —
+/// including the time-window and latency-adaptive policies, so the oracle
+/// properties race the poll/timer flush path and the ack-driven tuner
+/// through every engine × scheme × locality combination.
 fn gen_policy(rng: &mut SplitMix64) -> FlushPolicy {
-    match rng.below(5) {
+    match rng.below(7) {
         0 => FlushPolicy::Unbatched,
         1 => FlushPolicy::Items(1 + rng.below(64) as usize),
         2 => FlushPolicy::Bytes(8 + rng.below(1024) as usize),
         3 => FlushPolicy::Adaptive,
+        4 => FlushPolicy::TimeWindow(rng.below(30)),
+        5 => FlushPolicy::LatencyAdaptive,
         _ => FlushPolicy::Manual,
     }
 }
@@ -193,6 +198,60 @@ fn delta_sssp_under_vertex_cut_on_benchmark_rmat() {
 }
 
 #[test]
+fn latency_adaptive_beats_static_adaptive_on_benchmark_rmat() {
+    // A7 acceptance pin (release CI runs this suite): on the benchmark
+    // kron10@8 vertex cut, the latency-observing policy must emit at most
+    // as many envelopes as the static break-even policy for bfs-async and
+    // sssp-delta — the tuner starts at the static threshold and only
+    // moves within [break-even, 64x], so it can merge more, never less —
+    // and its per-slot-space observed-latency columns must be populated.
+    let seed = cfg(1).seed; // honors NWGRAPH_PROP_SEED via from_env
+    let g = generators::kron(10, 8, seed);
+    let dist = DistGraph::build_with(&g, PartitionKind::VertexCut.build(&g, 8));
+    assert!(dist.has_mirrors(), "kron10@8 vertex cut should mirror");
+
+    let want = bfs::sequential::distances(&g, 0);
+    let stat = bfs::run_async_with(&dist, 0, FlushPolicy::Adaptive, det());
+    let lat = bfs::run_async_with(&dist, 0, FlushPolicy::LatencyAdaptive, det());
+    for r in [&stat, &lat] {
+        assert_eq!(bfs::tree_levels(0, &r.parents), want, "bfs levels diverge");
+    }
+    assert!(
+        lat.report.agg.envelopes <= stat.report.agg.envelopes,
+        "bfs-async: latency-adaptive {} vs static adaptive {} envelopes",
+        lat.report.agg.envelopes,
+        stat.report.agg.envelopes
+    );
+    assert!(lat.report.agg_master.acks > 0, "master-bound latency unobserved");
+    assert!(lat.report.agg_mirror.acks > 0, "mirror-bound latency unobserved");
+    assert!(lat.report.agg_master.mean_obs_latency_us() > 0.0);
+    assert!(lat.report.agg_mirror.mean_obs_latency_us() > 0.0);
+
+    let gw = generators::with_random_weights(&g, 1.0, 10.0, seed + 1);
+    let distw = DistGraph::build_with(&gw, PartitionKind::VertexCut.build(&gw, 8));
+    let delta = sssp::auto_delta(&gw);
+    let want = sssp::dijkstra(&gw, 0);
+    let stat = sssp::run_delta_with(&gw, &distw, 0, delta, FlushPolicy::Adaptive, det());
+    let lat = sssp::run_delta_with(&gw, &distw, 0, delta, FlushPolicy::LatencyAdaptive, det());
+    for r in [&stat, &lat] {
+        for v in 0..gw.n() {
+            let (a, b) = (r.dist[v], want[v]);
+            assert!(
+                (a.is_infinite() && b.is_infinite()) || (a - b).abs() < 1e-3,
+                "sssp dist[{v}]: {a} vs {b}"
+            );
+        }
+    }
+    assert!(
+        lat.report.agg.envelopes <= stat.report.agg.envelopes,
+        "sssp-delta: latency-adaptive {} vs static adaptive {} envelopes",
+        lat.report.agg.envelopes,
+        stat.report.agg.envelopes
+    );
+    assert!(lat.report.agg.acks > 0, "delta estimator never observed a delivery");
+}
+
+#[test]
 fn engines_share_one_aggregation_layer() {
     // The engines, not the programs, own combiner accounting: for every
     // program × engine pair, whatever was accumulated is folded or
@@ -227,6 +286,10 @@ fn engines_share_one_aggregation_layer() {
             "{name}: {:?}",
             r.agg
         );
+        // The per-slot-space split partitions the merged stats exactly.
+        let mut merged = r.agg_master;
+        merged.merge(&r.agg_mirror);
+        assert_eq!(merged, r.agg, "{name}: slot-space split does not sum");
         if name.ends_with("async") {
             assert_eq!(r.agg.envelopes, r.net.envelopes, "{name}: {:?}", r.agg);
             assert_eq!(r.barriers, if name.starts_with("pr") { 5 } else { 0 }, "{name}");
