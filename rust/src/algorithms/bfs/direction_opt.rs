@@ -19,7 +19,7 @@
 
 use std::sync::Arc;
 
-use crate::amt::sim::{Actor, Ctx, LocalityId, Message, SimConfig, SimRuntime};
+use crate::amt::sim::{Actor, Ctx, LocalityId, Message, SimConfig};
 use crate::amt::AtomicLongVector;
 use crate::graph::{DistGraph, Shard, VertexId};
 
@@ -367,7 +367,7 @@ pub fn run_with_params(
             td_rounds: 0,
         })
         .collect();
-    let (actors, mut report) = SimRuntime::new(cfg).run(actors);
+    let (actors, mut report) = crate::amt::run_actors(&cfg, actors);
     report.partition = dist.partition_stats();
     let td = actors.iter().map(|a| a.td_rounds).max().unwrap_or(0);
     let bu = actors.iter().map(|a| a.bu_rounds).max().unwrap_or(0);

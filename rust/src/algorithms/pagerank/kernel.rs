@@ -16,7 +16,7 @@
 
 use std::sync::{Arc, Mutex};
 
-use crate::amt::sim::{Actor, Ctx, LocalityId, Message, SimConfig, SimRuntime};
+use crate::amt::sim::{Actor, Ctx, LocalityId, Message, SimConfig};
 use crate::graph::{DistGraph, EllShard, PartitionScheme, Shard};
 use crate::runtime::{ArtifactSpec, Engine};
 use crate::Result;
@@ -230,7 +230,7 @@ pub fn run(
             }
         })
         .collect();
-    let (mut actors, report) = SimRuntime::new(cfg).run(actors);
+    let (mut actors, report) = crate::amt::run_actors(&cfg, actors);
     for a in &mut actors {
         if a.rank.is_empty() {
             a.rank = a.rank_padded[..a.shard.n_local()].to_vec();

@@ -13,7 +13,7 @@
 
 use std::sync::Arc;
 
-use crate::amt::sim::{Actor, Ctx, LocalityId, Message, SimConfig, SimRuntime};
+use crate::amt::sim::{Actor, Ctx, LocalityId, Message, SimConfig};
 use crate::amt::SimReport;
 use crate::graph::{Csr, DistGraph, Shard, VertexId};
 
@@ -185,7 +185,7 @@ pub fn run(dist: &DistGraph, cfg: SimConfig) -> TriangleResult {
             phase: 0,
         })
         .collect();
-    let (actors, mut report) = SimRuntime::new(cfg).run(actors);
+    let (actors, mut report) = crate::amt::run_actors(&cfg, actors);
     report.partition = dist.partition_stats();
     TriangleResult { triangles: actors[0].total, report }
 }

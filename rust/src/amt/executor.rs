@@ -220,15 +220,48 @@ mod tests {
     fn adaptive_chunk_changes_across_calls() {
         let ex = Executor::new(2);
         let initial = ex.adaptive_chunk();
-        for _ in 0..4 {
+        // Every adaptive call moves log2(chunk) by exactly ±1 (the clamps
+        // at 16 and 1<<20 are unreachable within 3 steps of 256), so after
+        // an ODD number of calls the chunk cannot equal the initial value
+        // regardless of which way each hill-climb step went. An even count
+        // would be flaky: grow-then-shrink lands back on 256.
+        for _ in 0..3 {
             ex.parallel_for(10_000, ChunkPolicy::Adaptive, |r| {
                 std::hint::black_box(r.map(|i| i as f64).sum::<f64>());
             });
         }
-        // Hill climbing must have moved the chunk away from the initial
-        // value at least once (grow or shrink).
-        assert_ne!(ex.adaptive_chunk(), 0);
-        assert_ne!(initial, 0);
+        assert_ne!(
+            ex.adaptive_chunk(),
+            initial,
+            "hill climbing never moved the chunk from its initial value"
+        );
+    }
+
+    #[test]
+    fn adaptive_chunk_is_clamped_to_len_for_small_inputs() {
+        // The stored chunk hill-climbs without bound, but the chunk used
+        // for a given call must never exceed ceil(len / workers): a tiny
+        // parallel_for after large ones must still split across workers
+        // instead of handing one worker the whole range.
+        let ex = Executor::new(4);
+        for _ in 0..12 {
+            // Drive the stored chunk upward past any small-input bound.
+            ex.parallel_for(1 << 20, ChunkPolicy::Adaptive, |r| {
+                std::hint::black_box(r.len());
+            });
+        }
+        for len in [1usize, 5, 33, 100] {
+            let max_seen = AtomicUsize::new(0);
+            ex.parallel_for(len, ChunkPolicy::Adaptive, |r| {
+                max_seen.fetch_max(r.len(), Ordering::Relaxed);
+            });
+            let bound = len.div_ceil(ex.workers()).max(1);
+            let got = max_seen.load(Ordering::Relaxed);
+            assert!(
+                got <= bound,
+                "len={len}: saw a range of {got} > clamp bound {bound}"
+            );
+        }
     }
 
     #[test]

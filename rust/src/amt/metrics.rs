@@ -103,6 +103,17 @@ pub struct SimReport {
     /// 1.0 factors; drivers overwrite it from the built
     /// [`DistGraph`](crate::graph::DistGraph)).
     pub partition: PartitionStats,
+    /// Host wall-clock for the whole run, us. For the simulator this is
+    /// the cost of executing the simulation itself; for the threaded
+    /// runtime it *is* the end-to-end time (`makespan_us == wall_us`).
+    /// Always nonzero: every run takes real time.
+    pub wall_us: f64,
+    /// Host wall-clock per barrier-delimited phase, us. A run with B
+    /// completed barriers has B+1 segments (the segment after the last
+    /// barrier — or the whole run for barrier-free asynchronous
+    /// execution — is included), so the entries always sum to
+    /// [`SimReport::wall_us`].
+    pub phase_wall_us: Vec<f64>,
 }
 
 impl SimReport {
@@ -135,6 +146,21 @@ impl SimReport {
             self.mean_busy_us() / self.makespan_us
         }
     }
+}
+
+/// Convert absolute barrier-completion wall-clock marks into per-phase
+/// segment durations, closing the final segment at `wall_us`. Both
+/// runtimes use this so `phase_wall_us` has one schema: B barriers →
+/// B+1 segments summing to `wall_us`.
+pub(crate) fn phase_segments(marks: &[f64], wall_us: f64) -> Vec<f64> {
+    let mut out = Vec::with_capacity(marks.len() + 1);
+    let mut last = 0.0;
+    for &m in marks {
+        out.push(m - last);
+        last = m;
+    }
+    out.push(wall_us - last);
+    out
 }
 
 /// Simple online mean/min/max/stddev accumulator for bench repetitions.
@@ -225,6 +251,8 @@ mod tests {
             agg_mirror: AggStats::default(),
             work: WorkStats::default(),
             partition: PartitionStats::default(),
+            wall_us: 0.0,
+            phase_wall_us: vec![],
         };
         assert!((r.mean_busy_us() - 75.0).abs() < 1e-12);
         assert!((r.load_imbalance() - 100.0 / 75.0).abs() < 1e-12);
@@ -246,9 +274,21 @@ mod tests {
             agg_mirror: AggStats::default(),
             work: WorkStats::default(),
             partition: PartitionStats::default(),
+            wall_us: 0.0,
+            phase_wall_us: vec![],
         };
         assert_eq!(r.load_imbalance(), 1.0);
         assert_eq!(r.utilization(), 1.0);
+    }
+
+    #[test]
+    fn phase_segments_close_the_final_segment() {
+        // Two barriers at t=10 and t=30, run ends at t=45: three phases.
+        let segs = phase_segments(&[10.0, 30.0], 45.0);
+        assert_eq!(segs, vec![10.0, 20.0, 15.0]);
+        assert!((segs.iter().sum::<f64>() - 45.0).abs() < 1e-12);
+        // No barriers: one segment spanning the whole run.
+        assert_eq!(phase_segments(&[], 7.5), vec![7.5]);
     }
 
     #[test]

@@ -14,6 +14,11 @@
 //!   BSP (superstep + barrier + batched delivery) styles are both
 //!   expressible, which is exactly the HPX-vs-PBGL contrast the paper
 //!   evaluates.
+//! * **[`threads`]** — a thread-per-locality runtime executing the *same*
+//!   actors on real OS threads with real queueing and host wall-clock
+//!   time. [`run_actors`] dispatches between [`sim`] and [`threads`] on
+//!   [`SimConfig::runtime`], so `--runtime sim|threads` switches every
+//!   algorithm's substrate without touching engine code.
 //! * **[`executor`]** — real threaded parallel-for executors for
 //!   *intra*-locality parallelism (the paper's nodes have 64 cores),
 //!   including the `adaptive_core_chunk_size` policy of §6.
@@ -34,6 +39,7 @@ pub mod metrics;
 pub mod net;
 pub mod partitioned_vector;
 pub mod sim;
+pub mod threads;
 
 pub use agas::{Agas, GlobalAddress};
 pub use aggregate::{AggStats, Aggregator, Batch, FlushPolicy, SlotSpace};
@@ -41,4 +47,21 @@ pub use executor::{ChunkPolicy, Executor};
 pub use metrics::{PartitionStats, SimReport, WorkStats};
 pub use net::{NetConfig, NetStats};
 pub use partitioned_vector::{AtomicLongVector, PartitionedVector};
-pub use sim::{Actor, Ctx, LocalityId, SimConfig, SimRuntime, SimTime};
+pub use sim::{Actor, Ctx, LocalityId, RuntimeKind, SimConfig, SimRuntime, SimTime};
+pub use threads::ThreadedRuntime;
+
+/// Run `actors` on the substrate selected by [`SimConfig::runtime`]: the
+/// discrete-event simulator or the thread-per-locality runtime. This is
+/// the single seam the engines call, so one config key retargets every
+/// algorithm. The `Send` bounds are what the threaded substrate needs;
+/// all engine actors satisfy them (plain owned state, `Send` messages).
+pub fn run_actors<A>(cfg: &SimConfig, actors: Vec<A>) -> (Vec<A>, SimReport)
+where
+    A: Actor + Send,
+    A::Msg: Send,
+{
+    match cfg.runtime {
+        RuntimeKind::Sim => SimRuntime::new(cfg.clone()).run(actors),
+        RuntimeKind::Threads => ThreadedRuntime::new(cfg.clone()).run(actors),
+    }
+}

@@ -91,11 +91,49 @@ pub trait Actor {
     fn on_timer(&mut self, _ctx: &mut Ctx<Self::Msg>) {}
 }
 
+/// Which runtime executes a set of [`Actor`]s: the discrete-event
+/// simulator ([`SimRuntime`]) or the thread-per-locality runtime
+/// ([`ThreadedRuntime`](super::threads::ThreadedRuntime)). Both run the
+/// same actors unmodified; they differ only in what "time" means
+/// (modeled virtual clock vs host wall-clock).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum RuntimeKind {
+    /// Discrete-event simulation with the modeled interconnect.
+    #[default]
+    Sim,
+    /// One OS thread per locality; real queueing, real wall-clock.
+    Threads,
+}
+
+impl RuntimeKind {
+    /// Parse a `--runtime` / `runtime=` value.
+    pub fn parse(s: &str) -> std::result::Result<RuntimeKind, String> {
+        match s {
+            "sim" => Ok(RuntimeKind::Sim),
+            "threads" => Ok(RuntimeKind::Threads),
+            other => Err(format!("unknown runtime `{other}` (want sim|threads)")),
+        }
+    }
+
+    /// Canonical config-key spelling.
+    pub fn name(&self) -> &'static str {
+        match self {
+            RuntimeKind::Sim => "sim",
+            RuntimeKind::Threads => "threads",
+        }
+    }
+}
+
 /// Simulation parameters.
 #[derive(Debug, Clone)]
 pub struct SimConfig {
     /// Interconnect model.
     pub net: NetConfig,
+    /// Which substrate executes the actors (see [`RuntimeKind`]). The
+    /// engines dispatch through [`run_actors`](super::run_actors), so a
+    /// single config key switches every algorithm between the simulator
+    /// and real threads.
+    pub runtime: RuntimeKind,
     /// Global barrier cost in us; `None` derives a tree barrier:
     /// `2 * latency * ceil(log2 P)`.
     pub barrier_latency_us: Option<f64>,
@@ -125,6 +163,7 @@ impl Default for SimConfig {
     fn default() -> Self {
         SimConfig {
             net: NetConfig::default(),
+            runtime: RuntimeKind::Sim,
             barrier_latency_us: None,
             measure_compute: true,
             compute_scale: 1.0,
@@ -152,7 +191,7 @@ impl SimConfig {
 
 /// Ack requests riding an envelope: `(token, send-call time)` per traced
 /// message. Reported back to the sender at the receiver's handler start.
-type AckReqs = Vec<(u64, SimTime)>;
+pub(crate) type AckReqs = Vec<(u64, SimTime)>;
 
 enum Payload<M> {
     Start,
@@ -197,15 +236,19 @@ impl<M> Ord for Event<M> {
 }
 
 /// Handler-side interface to the runtime: clock, sends, charges, barriers.
+///
+/// Fields are `pub(crate)` so the two runtimes ([`SimRuntime`] and
+/// [`ThreadedRuntime`](super::threads::ThreadedRuntime)) can construct and
+/// drain a `Ctx` around each handler call; actors only see the methods.
 pub struct Ctx<'a, M> {
-    locality: LocalityId,
-    n_localities: u32,
-    now: SimTime,
-    epoch: u64,
-    explicit_charge_us: f64,
-    barrier_requested: &'a mut bool,
-    outbox: Vec<(LocalityId, M, Option<u64>)>,
-    timers: Vec<SimTime>,
+    pub(crate) locality: LocalityId,
+    pub(crate) n_localities: u32,
+    pub(crate) now: SimTime,
+    pub(crate) epoch: u64,
+    pub(crate) explicit_charge_us: f64,
+    pub(crate) barrier_requested: &'a mut bool,
+    pub(crate) outbox: Vec<(LocalityId, M, Option<u64>)>,
+    pub(crate) timers: Vec<SimTime>,
 }
 
 impl<'a, M: Message> Ctx<'a, M> {
@@ -290,6 +333,11 @@ impl SimRuntime {
         let n = actors.len() as u32;
         assert!(n > 0, "need at least one locality");
         let barrier_cost = self.cfg.barrier_cost(n);
+        // Host wall-clock for the whole run and per barrier-delimited
+        // phase — the simulator's own execution cost, reported next to
+        // the modeled makespan so sim and threaded runs share a schema.
+        let run_start = Instant::now();
+        let mut phase_marks: Vec<f64> = Vec::new();
 
         let mut heap: BinaryHeap<Event<A::Msg>> = BinaryHeap::new();
         let mut seq: u64 = 0;
@@ -355,6 +403,7 @@ impl SimRuntime {
                 // Barrier check below still applies after a flush.
                 if messages_pending == 0 && waiting.iter().all(|w| *w) {
                     epoch += 1;
+                    phase_marks.push(run_start.elapsed().as_secs_f64() * 1e6);
                     let fire = avail.iter().cloned().fold(0.0_f64, f64::max) + barrier_cost;
                     for d in 0..n {
                         waiting[d as usize] = false;
@@ -512,6 +561,7 @@ impl SimRuntime {
             // Barrier completion: everyone waiting + network drained.
             if messages_pending == 0 && waiting.iter().all(|w| *w) {
                 epoch += 1;
+                phase_marks.push(run_start.elapsed().as_secs_f64() * 1e6);
                 let fire = avail.iter().cloned().fold(0.0_f64, f64::max) + barrier_cost;
                 for d in 0..n {
                     waiting[d as usize] = false;
@@ -544,6 +594,7 @@ impl SimRuntime {
         for s in &net_stats {
             total_net.merge(s);
         }
+        let wall_us = run_start.elapsed().as_secs_f64() * 1e6;
         let report = SimReport {
             n_localities: n,
             makespan_us: makespan,
@@ -557,13 +608,15 @@ impl SimRuntime {
             agg_mirror: super::aggregate::AggStats::default(),
             work: super::metrics::WorkStats::default(),
             partition: super::metrics::PartitionStats::default(),
+            wall_us,
+            phase_wall_us: super::metrics::phase_segments(&phase_marks, wall_us),
         };
         (actors, report)
     }
 }
 
 #[allow(clippy::type_complexity)]
-fn group_outbox<M>(
+pub(crate) fn group_outbox<M>(
     outbox: Vec<(LocalityId, M, Option<u64>)>,
     aggregate: bool,
     now: SimTime,

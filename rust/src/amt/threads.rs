@@ -1,0 +1,663 @@
+//! Thread-per-locality AMT runtime: the same [`Actor`]s as [`sim`](super::sim),
+//! executed on real OS threads with real queueing.
+//!
+//! The discrete-event simulator reproduces the paper's *message economics*
+//! (envelope counts, modeled latency); this runtime reproduces its
+//! *execution model*: each locality is a worker thread, inter-locality
+//! envelopes are std-only MPSC channels (a `Mutex<VecDeque>` inbox per
+//! locality — the vendored-deps constraint rules out crossbeam), and
+//! quiescence, barriers, timers, and delivery acks are re-implemented over
+//! a shared mutex + condvar so the exact same `VertexProgram`-driven
+//! engines run unmodified on either substrate (`--runtime sim|threads`).
+//!
+//! Semantics match the simulator one-for-one:
+//!
+//! * **sends** depart when the handler finishes; per-destination grouping
+//!   under [`SimConfig::aggregate_sends`] uses the same
+//!   [`group_outbox`] the simulator uses, so envelope counts agree.
+//!   Self-sends are local task-queue entries with no network accounting.
+//! * **barriers** complete only when every locality has an outstanding
+//!   request, every inbox is empty, no handler is mid-flight, and no
+//!   timer is pending — the threaded reading of "the network has
+//!   drained". A partial barrier at quiescence is the same deadlock
+//!   panic the simulator raises.
+//! * **quiescence** is the termination condition: all inboxes empty, no
+//!   active handler, no pending timer, nobody waiting on a barrier.
+//! * **timers** ([`Ctx::set_timer`]) hold barriers and quiescence open
+//!   and fire on the owning worker via condvar timeout.
+//! * **acks** ([`Ctx::send_traced`]) report the *real* send-to-handler-start
+//!   latency — actual inter-thread queueing delay, which is what lets the
+//!   latency-adaptive flush policy be validated against real queueing
+//!   instead of the cost model (ablation A7).
+//!
+//! What is *not* reproduced: the modeled interconnect. `NetConfig`
+//! latencies, explicit [`Ctx::charge_us`] charges, and
+//! `coalesce_window_us` parcel buffering are cost-model features; here an
+//! envelope is delivered as fast as the receiving thread can pick it up,
+//! and time is host wall-clock (`SimReport::makespan_us == wall_us`,
+//! `busy_us` is measured in-handler time).
+
+use std::collections::VecDeque;
+use std::sync::{Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+use super::metrics::{phase_segments, SimReport};
+use super::net::NetStats;
+use super::sim::{group_outbox, AckReqs, Actor, Ctx, LocalityId, Message, SimConfig, SimTime};
+
+/// One inbox entry. Envelopes carry the batched items plus any ack
+/// requests stamped by [`group_outbox`]; `Barrier` fan-out entries are
+/// pushed by whichever worker observes barrier completion.
+enum Delivery<M> {
+    Start,
+    Envelope { from: LocalityId, items: Vec<M>, acks: AckReqs },
+    Ack { token: u64, sent: SimTime, delivered: SimTime },
+    Barrier { epoch: u64 },
+}
+
+/// State shared by all workers, guarded by one mutex; the paired condvar
+/// is broadcast on every enqueue, handler completion, barrier release,
+/// and shutdown.
+struct Shared<M> {
+    inboxes: Vec<VecDeque<Delivery<M>>>,
+    /// Armed [`Ctx::set_timer`] deadlines per locality, in wall-us since
+    /// run start. Pending timers hold barriers and quiescence open.
+    timers: Vec<Vec<SimTime>>,
+    /// Outstanding barrier requests per locality.
+    waiting: Vec<bool>,
+    /// Workers currently inside a handler (between inbox pop and effect
+    /// dispatch). Terminal conditions require `active == 0` so a
+    /// mid-handler worker's pending sends are never missed.
+    active: u32,
+    epoch: u64,
+    events: u64,
+    done: bool,
+    /// Localities stuck on a partial barrier at quiescence (deadlock).
+    stuck: Vec<usize>,
+    /// Fatal condition raised by a worker (runaway guard).
+    error: Option<String>,
+    net: Vec<NetStats>,
+    /// Wall-us marks at each barrier completion (per-phase reporting).
+    phase_marks: Vec<f64>,
+}
+
+impl<M> Shared<M> {
+    /// Nothing in flight anywhere: no queued delivery, no mid-handler
+    /// worker, no armed timer. The threaded equivalent of the simulator's
+    /// `messages_pending == 0` with an empty event heap.
+    fn quiesced(&self) -> bool {
+        self.active == 0
+            && self.inboxes.iter().all(|q| q.is_empty())
+            && self.timers.iter().all(|t| t.is_empty())
+    }
+}
+
+/// Ensures a panicking worker (actor assertion, poisoned lock) releases
+/// the others instead of leaving them parked on the condvar forever; the
+/// scope join then propagates the original panic.
+struct Bail<'a, M> {
+    shared: &'a Mutex<Shared<M>>,
+    cv: &'a Condvar,
+}
+
+impl<M> Drop for Bail<'_, M> {
+    fn drop(&mut self) {
+        if std::thread::panicking() {
+            if let Ok(mut g) = self.shared.lock() {
+                g.done = true;
+            }
+            self.cv.notify_all();
+        }
+    }
+}
+
+/// The thread-per-locality runtime. See module docs.
+pub struct ThreadedRuntime {
+    cfg: SimConfig,
+}
+
+impl ThreadedRuntime {
+    /// Create a runtime with the given configuration. Only
+    /// `aggregate_sends` and `max_events` are consulted; the modeled
+    /// interconnect fields are cost-model-only (see module docs).
+    pub fn new(cfg: SimConfig) -> Self {
+        ThreadedRuntime { cfg }
+    }
+
+    /// Run `actors` (one per locality, one worker thread each) to
+    /// quiescence; returns the final actor states plus the report with
+    /// real wall-clock timings.
+    pub fn run<A>(&self, actors: Vec<A>) -> (Vec<A>, SimReport)
+    where
+        A: Actor + Send,
+        A::Msg: Send,
+    {
+        let n = actors.len() as u32;
+        assert!(n > 0, "need at least one locality");
+        let run_start = Instant::now();
+
+        let shared = Mutex::new(Shared {
+            inboxes: (0..n).map(|_| VecDeque::from([Delivery::<A::Msg>::Start])).collect(),
+            timers: vec![Vec::new(); n as usize],
+            waiting: vec![false; n as usize],
+            active: 0,
+            epoch: 0,
+            events: 0,
+            done: false,
+            stuck: Vec::new(),
+            error: None,
+            net: vec![NetStats::default(); n as usize],
+            phase_marks: Vec::new(),
+        });
+        let cv = Condvar::new();
+
+        let (actors, busy): (Vec<A>, Vec<f64>) = std::thread::scope(|s| {
+            let handles: Vec<_> = actors
+                .into_iter()
+                .enumerate()
+                .map(|(l, mut actor)| {
+                    let shared = &shared;
+                    let cv = &cv;
+                    let cfg = &self.cfg;
+                    s.spawn(move || {
+                        let _bail = Bail { shared, cv };
+                        let busy = worker(l, n, run_start, cfg, shared, cv, &mut actor);
+                        (actor, busy)
+                    })
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().unwrap()).unzip()
+        });
+
+        let g = shared.into_inner().unwrap();
+        if let Some(e) = g.error {
+            panic!("{e}");
+        }
+        assert!(
+            g.stuck.is_empty(),
+            "deadlock: localities {:?} waiting on a barrier that can never \
+             complete (not all localities requested one)",
+            g.stuck
+        );
+
+        let wall_us = run_start.elapsed().as_secs_f64() * 1e6;
+        let mut total_net = NetStats::default();
+        for st in &g.net {
+            total_net.merge(st);
+        }
+        let report = SimReport {
+            n_localities: n,
+            makespan_us: wall_us,
+            busy_us: busy,
+            barriers: g.epoch,
+            events: g.events,
+            net: total_net,
+            per_locality_net: g.net,
+            agg: super::aggregate::AggStats::default(),
+            agg_master: super::aggregate::AggStats::default(),
+            agg_mirror: super::aggregate::AggStats::default(),
+            work: super::metrics::WorkStats::default(),
+            partition: super::metrics::PartitionStats::default(),
+            wall_us,
+            phase_wall_us: phase_segments(&g.phase_marks, wall_us),
+        };
+        (actors, report)
+    }
+}
+
+fn elapsed_us(t0: Instant) -> f64 {
+    t0.elapsed().as_secs_f64() * 1e6
+}
+
+/// One locality's worker loop: pop work, run the handler outside the
+/// lock, dispatch effects under the lock, decide barriers/quiescence.
+/// Returns the accumulated in-handler wall time (the locality's busy_us).
+fn worker<A>(
+    l: usize,
+    n: u32,
+    t0: Instant,
+    cfg: &SimConfig,
+    shared: &Mutex<Shared<A::Msg>>,
+    cv: &Condvar,
+    actor: &mut A,
+) -> f64
+where
+    A: Actor,
+{
+    let mut busy_us = 0.0;
+    let mut g = shared.lock().unwrap();
+    loop {
+        if g.done {
+            return busy_us;
+        }
+
+        // 1. A due timer? (Timers fire on their owning worker.)
+        let now = elapsed_us(t0);
+        let due = g.timers[l].iter().position(|&at| at <= now);
+        if let Some(i) = due {
+            g.timers[l].swap_remove(i);
+            g = dispatch(l, n, t0, cfg, shared, cv, actor, g, None, &mut busy_us, |a, ctx| {
+                a.on_timer(ctx)
+            });
+            continue;
+        }
+
+        // 2. Queued delivery?
+        if let Some(d) = g.inboxes[l].pop_front() {
+            g = match d {
+                Delivery::Start => dispatch(
+                    l, n, t0, cfg, shared, cv, actor, g, None, &mut busy_us,
+                    |a, ctx| a.on_start(ctx),
+                ),
+                Delivery::Envelope { from, items, acks } => dispatch(
+                    l, n, t0, cfg, shared, cv, actor, g,
+                    Some((from, acks)),
+                    &mut busy_us,
+                    move |a, ctx| {
+                        for msg in items {
+                            a.on_message(ctx, from, msg);
+                        }
+                    },
+                ),
+                Delivery::Ack { token, sent, delivered } => dispatch(
+                    l, n, t0, cfg, shared, cv, actor, g, None, &mut busy_us,
+                    move |a, ctx| a.on_ack(ctx, token, sent, delivered),
+                ),
+                Delivery::Barrier { epoch } => dispatch(
+                    l, n, t0, cfg, shared, cv, actor, g, None, &mut busy_us,
+                    move |a, ctx| a.on_barrier(ctx, epoch),
+                ),
+            };
+            continue;
+        }
+
+        // 3. Nothing runnable here — is the whole system terminal?
+        if g.quiesced() {
+            if g.waiting.iter().all(|w| *w) {
+                // Barrier completion: everyone waiting + network drained.
+                g.epoch += 1;
+                let epoch = g.epoch;
+                g.phase_marks.push(elapsed_us(t0));
+                for d in 0..n as usize {
+                    g.waiting[d] = false;
+                    g.inboxes[d].push_back(Delivery::Barrier { epoch });
+                }
+                cv.notify_all();
+                continue;
+            }
+            if g.waiting.iter().any(|w| *w) {
+                // Partial barrier with nothing left to deliver: the same
+                // deadlock the simulator asserts on. Recorded here,
+                // panicked on the main thread after join.
+                g.stuck = g
+                    .waiting
+                    .iter()
+                    .enumerate()
+                    .filter(|(_, w)| **w)
+                    .map(|(i, _)| i)
+                    .collect();
+                g.done = true;
+                cv.notify_all();
+                return busy_us;
+            }
+            g.done = true;
+            cv.notify_all();
+            return busy_us;
+        }
+
+        // 4. Park until notified, or until our earliest timer is due.
+        let next = g.timers[l].iter().cloned().fold(f64::INFINITY, f64::min);
+        if next.is_finite() {
+            let wait = (next - elapsed_us(t0)).max(0.0);
+            let (g2, _) = cv
+                .wait_timeout(g, Duration::from_micros(wait as u64 + 1))
+                .unwrap();
+            g = g2;
+        } else {
+            g = cv.wait(g).unwrap();
+        }
+    }
+}
+
+/// Run one handler outside the lock and apply its effects under it:
+/// barrier flag, acks for the consumed envelope, outbox fan-out (with the
+/// simulator's per-destination grouping), timer arming, event accounting.
+#[allow(clippy::too_many_arguments)]
+fn dispatch<'m, A, F>(
+    l: usize,
+    n: u32,
+    t0: Instant,
+    cfg: &SimConfig,
+    shared: &'m Mutex<Shared<A::Msg>>,
+    cv: &Condvar,
+    actor: &mut A,
+    mut g: std::sync::MutexGuard<'m, Shared<A::Msg>>,
+    envelope_acks: Option<(LocalityId, AckReqs)>,
+    busy_us: &mut f64,
+    f: F,
+) -> std::sync::MutexGuard<'m, Shared<A::Msg>>
+where
+    A: Actor,
+    F: FnOnce(&mut A, &mut Ctx<A::Msg>),
+{
+    g.active += 1;
+    let epoch = g.epoch;
+    let was_waiting = g.waiting[l];
+    drop(g);
+
+    let now = elapsed_us(t0);
+    let mut barrier_requested = was_waiting;
+    let mut ctx = Ctx {
+        locality: l as LocalityId,
+        n_localities: n,
+        now,
+        epoch,
+        explicit_charge_us: 0.0,
+        barrier_requested: &mut barrier_requested,
+        outbox: Vec::new(),
+        timers: Vec::new(),
+    };
+    let wall = Instant::now();
+    f(actor, &mut ctx);
+    *busy_us += wall.elapsed().as_secs_f64() * 1e6;
+    let outbox = std::mem::take(&mut ctx.outbox);
+    let timers = std::mem::take(&mut ctx.timers);
+    drop(ctx);
+
+    let mut g = shared.lock().unwrap();
+    g.waiting[l] = barrier_requested;
+    g.events += 1;
+    if g.events > cfg.max_events && g.error.is_none() {
+        g.error = Some(format!(
+            "threaded run exceeded max_events={} (runaway?)",
+            cfg.max_events
+        ));
+        g.done = true;
+    }
+    // Ack the envelope we just consumed: real send-to-handler-start
+    // latency, receiver-side queueing included (the A7 signal).
+    if let Some((from, acks)) = envelope_acks {
+        for (token, sent) in acks {
+            g.inboxes[from as usize]
+                .push_back(Delivery::Ack { token, sent, delivered: now });
+        }
+    }
+    // Outbox fan-out. Same grouping as the simulator (envelope counts
+    // agree); traced sends stamp the handler-start time. Self-sends skip
+    // the network accounting, exactly like the simulator's local spawns.
+    for (dst, items, acks) in group_outbox(outbox, cfg.aggregate_sends, now) {
+        if dst as usize != l {
+            let n_items: usize = items.iter().map(|m| m.item_count()).sum();
+            let payload_bytes: usize = items.iter().map(|m| m.wire_bytes()).sum();
+            let st = &mut g.net[l];
+            st.envelopes += 1;
+            st.messages += n_items as u64;
+            st.payload_bytes += payload_bytes as u64;
+        }
+        g.inboxes[dst as usize].push_back(Delivery::Envelope {
+            from: l as LocalityId,
+            items,
+            acks,
+        });
+    }
+    for at in timers {
+        g.timers[l].push(at);
+    }
+    g.active -= 1;
+    cv.notify_all();
+    g
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::sim::RuntimeKind;
+    use super::*;
+
+    fn threads_cfg() -> SimConfig {
+        SimConfig { runtime: RuntimeKind::Threads, ..SimConfig::default() }
+    }
+
+    #[derive(Clone)]
+    struct Ping(u32);
+    impl Message for Ping {
+        fn wire_bytes(&self) -> usize {
+            4
+        }
+    }
+
+    struct RingActor {
+        hops_left: u32,
+        received: u32,
+    }
+    impl Actor for RingActor {
+        type Msg = Ping;
+        fn on_start(&mut self, ctx: &mut Ctx<Ping>) {
+            if ctx.locality() == 0 && self.hops_left > 0 {
+                ctx.send(1 % ctx.n_localities(), Ping(self.hops_left));
+            }
+        }
+        fn on_message(&mut self, ctx: &mut Ctx<Ping>, _from: LocalityId, msg: Ping) {
+            self.received += 1;
+            if msg.0 > 1 {
+                let next = (ctx.locality() + 1) % ctx.n_localities();
+                ctx.send(next, Ping(msg.0 - 1));
+            }
+        }
+    }
+
+    #[test]
+    fn ring_of_pings_terminates_with_real_wall_clock() {
+        let actors = (0..4).map(|_| RingActor { hops_left: 8, received: 0 }).collect();
+        let (actors, report) = ThreadedRuntime::new(threads_cfg()).run(actors);
+        let total: u32 = actors.iter().map(|a| a.received).sum();
+        assert_eq!(total, 8);
+        assert_eq!(report.net.messages, 8);
+        assert_eq!(report.net.envelopes, 8);
+        assert!(report.wall_us > 0.0, "a real run takes real time");
+        assert_eq!(report.makespan_us, report.wall_us);
+        assert_eq!(report.phase_wall_us.len(), 1, "no barriers: one phase");
+    }
+
+    struct BspActor {
+        rounds: u64,
+    }
+    #[derive(Clone)]
+    struct Nothing;
+    impl Message for Nothing {
+        fn wire_bytes(&self) -> usize {
+            0
+        }
+    }
+    impl Actor for BspActor {
+        type Msg = Nothing;
+        fn on_start(&mut self, ctx: &mut Ctx<Nothing>) {
+            ctx.request_barrier();
+        }
+        fn on_message(&mut self, _: &mut Ctx<Nothing>, _: LocalityId, _: Nothing) {}
+        fn on_barrier(&mut self, ctx: &mut Ctx<Nothing>, epoch: u64) {
+            if epoch < self.rounds {
+                ctx.request_barrier();
+            }
+        }
+    }
+
+    #[test]
+    fn barriers_complete_and_phases_are_reported() {
+        let actors = (0..3).map(|_| BspActor { rounds: 4 }).collect();
+        let (_, report) = ThreadedRuntime::new(threads_cfg()).run(actors);
+        assert_eq!(report.barriers, 4);
+        assert_eq!(report.phase_wall_us.len(), 5, "4 barriers => 5 phases");
+        let sum: f64 = report.phase_wall_us.iter().sum();
+        assert!((sum - report.wall_us).abs() < 1e-6, "{sum} vs {}", report.wall_us);
+    }
+
+    #[test]
+    fn messages_drain_before_barriers() {
+        // A BSP round: messages sent before a barrier request must be
+        // delivered before the barrier fires, however threads interleave.
+        struct OneShot {
+            got: u32,
+        }
+        impl Actor for OneShot {
+            type Msg = Ping;
+            fn on_start(&mut self, ctx: &mut Ctx<Ping>) {
+                let next = (ctx.locality() + 1) % ctx.n_localities();
+                ctx.send(next, Ping(1));
+                ctx.request_barrier();
+            }
+            fn on_message(&mut self, _: &mut Ctx<Ping>, _: LocalityId, _: Ping) {
+                self.got += 1;
+            }
+            fn on_barrier(&mut self, _: &mut Ctx<Ping>, _: u64) {
+                assert_eq!(self.got, 1, "barrier fired before delivery");
+            }
+        }
+        let actors = (0..3).map(|_| OneShot { got: 0 }).collect();
+        let (actors, report) = ThreadedRuntime::new(threads_cfg()).run(actors);
+        assert_eq!(report.barriers, 1);
+        assert!(actors.iter().all(|a| a.got == 1));
+    }
+
+    #[test]
+    #[should_panic(expected = "deadlock")]
+    fn partial_barrier_is_a_deadlock() {
+        struct OnlyZeroWaits;
+        impl Actor for OnlyZeroWaits {
+            type Msg = Nothing;
+            fn on_start(&mut self, ctx: &mut Ctx<Nothing>) {
+                if ctx.locality() == 0 {
+                    ctx.request_barrier();
+                }
+            }
+            fn on_message(&mut self, _: &mut Ctx<Nothing>, _: LocalityId, _: Nothing) {}
+        }
+        ThreadedRuntime::new(threads_cfg()).run(vec![OnlyZeroWaits, OnlyZeroWaits]);
+    }
+
+    #[test]
+    fn traced_sends_are_acked_with_real_latency() {
+        struct Tracer {
+            acks: Vec<(u64, SimTime, SimTime)>,
+        }
+        impl Actor for Tracer {
+            type Msg = Ping;
+            fn on_start(&mut self, ctx: &mut Ctx<Ping>) {
+                if ctx.locality() == 0 {
+                    ctx.send_traced(1, Ping(1), 7);
+                    ctx.send_traced(1, Ping(2), 8);
+                }
+            }
+            fn on_message(&mut self, _: &mut Ctx<Ping>, _: LocalityId, _: Ping) {}
+            fn on_ack(&mut self, _: &mut Ctx<Ping>, token: u64, sent: SimTime, del: SimTime) {
+                self.acks.push((token, sent, del));
+            }
+        }
+        let actors = (0..2).map(|_| Tracer { acks: Vec::new() }).collect();
+        let (actors, _) = ThreadedRuntime::new(threads_cfg()).run(actors);
+        let acks = &actors[0].acks;
+        assert_eq!(acks.len(), 2, "every traced send is acked");
+        for &(_, sent, delivered) in acks {
+            assert!(delivered >= sent, "latency cannot be negative");
+        }
+        assert!(actors[1].acks.is_empty());
+    }
+
+    #[test]
+    fn timers_fire_and_hold_barriers() {
+        struct Alarm {
+            fired_at: Option<SimTime>,
+            barrier_at: Option<SimTime>,
+        }
+        impl Actor for Alarm {
+            type Msg = Nothing;
+            fn on_start(&mut self, ctx: &mut Ctx<Nothing>) {
+                if ctx.locality() == 0 {
+                    ctx.set_timer(ctx.now() + 200.0);
+                }
+                ctx.request_barrier();
+            }
+            fn on_message(&mut self, _: &mut Ctx<Nothing>, _: LocalityId, _: Nothing) {}
+            fn on_timer(&mut self, ctx: &mut Ctx<Nothing>) {
+                self.fired_at = Some(ctx.now());
+            }
+            fn on_barrier(&mut self, ctx: &mut Ctx<Nothing>, _: u64) {
+                self.barrier_at = Some(ctx.now());
+            }
+        }
+        let actors = (0..2).map(|_| Alarm { fired_at: None, barrier_at: None }).collect();
+        let (actors, report) = ThreadedRuntime::new(threads_cfg()).run(actors);
+        let fired = actors[0].fired_at.expect("timer fired");
+        assert_eq!(report.barriers, 1);
+        for a in &actors {
+            assert!(a.barrier_at.expect("barrier completed") >= fired, "barrier outran timer");
+        }
+    }
+
+    #[test]
+    fn self_sends_do_not_hit_the_network() {
+        struct SelfSpawn {
+            seen: u32,
+        }
+        impl Actor for SelfSpawn {
+            type Msg = Ping;
+            fn on_start(&mut self, ctx: &mut Ctx<Ping>) {
+                ctx.send(ctx.locality(), Ping(3));
+            }
+            fn on_message(&mut self, ctx: &mut Ctx<Ping>, _: LocalityId, msg: Ping) {
+                self.seen += 1;
+                if msg.0 > 1 {
+                    ctx.send(ctx.locality(), Ping(msg.0 - 1));
+                }
+            }
+        }
+        let (actors, report) =
+            ThreadedRuntime::new(threads_cfg()).run(vec![SelfSpawn { seen: 0 }]);
+        assert_eq!(actors[0].seen, 3);
+        assert_eq!(report.net.messages, 0, "self-sends must not hit the network");
+    }
+
+    #[test]
+    fn aggregate_sends_group_envelopes_like_the_simulator() {
+        struct Fanout;
+        impl Actor for Fanout {
+            type Msg = Ping;
+            fn on_start(&mut self, ctx: &mut Ctx<Ping>) {
+                if ctx.locality() == 0 {
+                    for i in 0..10 {
+                        ctx.send(1, Ping(i));
+                    }
+                }
+            }
+            fn on_message(&mut self, _: &mut Ctx<Ping>, _: LocalityId, _: Ping) {}
+        }
+        let run = |aggregate| {
+            let cfg = SimConfig { aggregate_sends: aggregate, ..threads_cfg() };
+            ThreadedRuntime::new(cfg).run(vec![Fanout, Fanout]).1
+        };
+        let loose = run(false);
+        let packed = run(true);
+        assert_eq!(loose.net.messages, 10);
+        assert_eq!(packed.net.messages, 10);
+        assert_eq!(loose.net.envelopes, 10);
+        assert_eq!(packed.net.envelopes, 1);
+    }
+
+    #[test]
+    #[should_panic(expected = "max_events")]
+    fn runaway_guard_trips() {
+        struct Bouncer;
+        impl Actor for Bouncer {
+            type Msg = Ping;
+            fn on_start(&mut self, ctx: &mut Ctx<Ping>) {
+                if ctx.locality() == 0 {
+                    ctx.send(1, Ping(0));
+                }
+            }
+            fn on_message(&mut self, ctx: &mut Ctx<Ping>, from: LocalityId, msg: Ping) {
+                ctx.send(from, msg); // ping-pong forever
+            }
+        }
+        let cfg = SimConfig { max_events: 1000, ..threads_cfg() };
+        ThreadedRuntime::new(cfg).run(vec![Bouncer, Bouncer]);
+    }
+}

@@ -121,12 +121,16 @@ CONFIG OVERRIDES (key=value):
                   items:0/bytes:0 are rejected),
     sssp_delta (bucket width; 0 = auto w/d heuristic, inf = Bellman-Ford),
     partition (block|edge_balanced|hash|vertex_cut),
+    runtime (sim|threads — discrete-event simulator with the modeled
+             interconnect, or one OS thread per locality with real queueing;
+             both run the same engines and report wall-clock columns),
     net.latency_us, net.bandwidth_gbps, net.send_cpu_us, net.recv_cpu_us,
     net.per_item_cpu_us, net.overhead_bytes, artifact_dir
 
 FLAGS:
     --config <file>    key=value config file (overrides applied after)
     --engine <name>    algorithm engine (see per-command lists above)
+    --runtime <name>   execution substrate, sim|threads (same as runtime=)
     --out <file>       write the result table as CSV
     --out-dir <dir>    output directory for `ablations --json` (default bench_out)
     --json             also write ablation tables as JSON (ablations only)

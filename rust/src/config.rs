@@ -7,7 +7,7 @@
 use std::collections::BTreeMap;
 use std::path::Path;
 
-use crate::amt::{FlushPolicy, NetConfig};
+use crate::amt::{FlushPolicy, NetConfig, RuntimeKind};
 use crate::graph::PartitionKind;
 use crate::Result;
 
@@ -47,6 +47,9 @@ pub struct Config {
     /// Vertex/edge partition scheme
     /// (`block|edge_balanced|hash|vertex_cut`).
     pub partition: PartitionKind,
+    /// Execution substrate: the discrete-event simulator (`sim`, default)
+    /// or one OS thread per locality with real wall-clock (`threads`).
+    pub runtime: RuntimeKind,
     /// Artifact directory for the kernel path.
     pub artifact_dir: String,
 }
@@ -68,6 +71,7 @@ impl Default for Config {
             flush_policy: FlushPolicy::Adaptive,
             sssp_delta: 0.0,
             partition: PartitionKind::Block,
+            runtime: RuntimeKind::Sim,
             artifact_dir: "artifacts".into(),
         }
     }
@@ -128,6 +132,10 @@ impl Config {
                             "bad partition `{v}` (want block|edge_balanced|hash|vertex_cut)"
                         )
                     })?;
+                }
+                "runtime" => {
+                    c.runtime = RuntimeKind::parse(v)
+                        .map_err(|e| anyhow::anyhow!("bad runtime: {e}"))?;
                 }
                 "artifact_dir" => c.artifact_dir = v.clone(),
                 "net.latency_us" => c.net.latency_us = v.parse()?,
@@ -251,6 +259,20 @@ mod tests {
         kv.insert("partition".into(), "diagonal".into());
         assert!(Config::from_kv(&kv).is_err());
         assert_eq!(Config::default().partition, PartitionKind::Block);
+    }
+
+    #[test]
+    fn runtime_parses_and_rejects() {
+        let mut kv = BTreeMap::new();
+        kv.insert("runtime".into(), "threads".into());
+        let c = Config::from_kv(&kv).unwrap();
+        assert_eq!(c.runtime, RuntimeKind::Threads);
+        kv.insert("runtime".into(), "sim".into());
+        assert_eq!(Config::from_kv(&kv).unwrap().runtime, RuntimeKind::Sim);
+        kv.insert("runtime".into(), "fibers".into());
+        let err = Config::from_kv(&kv).unwrap_err().to_string();
+        assert!(err.contains("fibers"), "{err}");
+        assert_eq!(Config::default().runtime, RuntimeKind::Sim, "sim is the default");
     }
 
     #[test]

@@ -10,7 +10,7 @@
 use std::time::Instant;
 
 use crate::algorithms::{bfs, pagerank, pagerank::PrParams};
-use crate::amt::{FlushPolicy, NetConfig, SimConfig, SimReport};
+use crate::amt::{FlushPolicy, RuntimeKind, SimConfig, SimReport};
 use crate::config::Config;
 use crate::graph::{Csr, DistGraph, PartitionKind};
 use crate::Result;
@@ -32,17 +32,24 @@ pub struct Point {
     pub report: SimReport,
 }
 
-fn sim_cfg(net: &NetConfig, aggregate: bool) -> SimConfig {
-    SimConfig { net: net.clone(), aggregate_sends: aggregate, ..SimConfig::default() }
+fn sim_cfg(cfg: &Config, aggregate: bool) -> SimConfig {
+    SimConfig {
+        net: cfg.net.clone(),
+        aggregate_sends: aggregate,
+        runtime: cfg.runtime,
+        ..SimConfig::default()
+    }
 }
 
 /// The HPX runtime configuration: per-handler aggregation plus
-/// `hpx::plugins::parcel::coalescing` with a small flush window.
-fn hpx_cfg(net: &NetConfig) -> SimConfig {
+/// `hpx::plugins::parcel::coalescing` with a small flush window (a
+/// cost-model feature; the threaded runtime delivers eagerly instead).
+fn hpx_cfg(cfg: &Config) -> SimConfig {
     SimConfig {
-        net: net.clone(),
+        net: cfg.net.clone(),
         aggregate_sends: true,
         coalesce_window_us: 5.0,
+        runtime: cfg.runtime,
         ..SimConfig::default()
     }
 }
@@ -98,9 +105,9 @@ pub fn fig1_bfs(cfg: &Config) -> Result<(Table, Vec<Point>)> {
                 &dist,
                 cfg.root,
                 FlushPolicy::Unbatched,
-                hpx_cfg(&cfg.net),
+                hpx_cfg(cfg),
             );
-            let b = bfs::run_bsp(&dist, cfg.root, sim_cfg(&cfg.net, false));
+            let b = bfs::run_bsp(&dist, cfg.root, sim_cfg(cfg, false));
             for (slot, res) in [(0, a), (1, b)] {
                 let m = res.report.makespan_us;
                 if best[slot].as_ref().map(|(t, _)| m < *t).unwrap_or(true) {
@@ -160,29 +167,29 @@ pub fn fig2_pagerank(cfg: &Config) -> Result<(Table, Vec<Point>)> {
         (
             "HPX-naive",
             Box::new({
-                let net = cfg.net.clone();
+                let sc = sim_cfg(cfg, false);
                 move |d| {
-                    pagerank::run_async(d, params, FlushPolicy::Unbatched, sim_cfg(&net, false))
+                    pagerank::run_async(d, params, FlushPolicy::Unbatched, sc.clone())
                 }
             }),
         ),
         (
             "HPX-opt",
             Box::new({
-                let net = cfg.net.clone();
+                let sc = sim_cfg(cfg, false);
                 move |d| {
                     // Chunked combiner flushes, each shipped eagerly as its
                     // own parcel (no handler-level re-merge): the overlap
                     // knob that got the paper's prototype close to Boost.
-                    pagerank::run_async(d, params, FlushPolicy::Items(1024), sim_cfg(&net, false))
+                    pagerank::run_async(d, params, FlushPolicy::Items(1024), sc.clone())
                 }
             }),
         ),
         (
             "Boost",
             Box::new({
-                let net = cfg.net.clone();
-                move |d| pagerank::run_bsp(d, params, sim_cfg(&net, false))
+                let sc = sim_cfg(cfg, false);
+                move |d| pagerank::run_bsp(d, params, sc.clone())
             }),
         ),
     ];
@@ -229,7 +236,8 @@ pub fn ablation_aggregation(cfg: &Config) -> Result<Table> {
     let g = cfg.build_graph()?;
     let mut table = Table::new(
         format!("Ablation A1 — async BFS send aggregation on {}", cfg.graph_name()),
-        &["nodes", "no-agg time", "agg time", "no-agg envs", "agg envs", "agg factor"],
+        &["nodes", "no-agg time", "agg time", "no-agg envs", "agg envs", "agg factor",
+          "agg wall"],
     );
     for &p in &cfg.localities {
         let dist = DistGraph::build_with(&g, cfg.partition.build(&g, p));
@@ -243,7 +251,7 @@ pub fn ablation_aggregation(cfg: &Config) -> Result<Table> {
                     &dist,
                     cfg.root,
                     FlushPolicy::Unbatched,
-                    sim_cfg(&cfg.net, agg),
+                    sim_cfg(cfg, agg),
                 );
                 if r.report.makespan_us < best[i] {
                     best[i] = r.report.makespan_us;
@@ -259,6 +267,7 @@ pub fn ablation_aggregation(cfg: &Config) -> Result<Table> {
             r0.net.envelopes.to_string(),
             r1.net.envelopes.to_string(),
             format!("{:.1}", r1.net.aggregation_factor()),
+            fmt_us(r1.wall_us),
         ]);
     }
     Ok(table)
@@ -295,13 +304,14 @@ pub fn ablation_flush_policy(cfg: &Config) -> Result<Table> {
             cfg.graph_name(),
             p
         ),
-        &["policy", "best time", "envelopes", "wire msgs", "fold factor", "Linf vs seq"],
+        &["policy", "best time", "wall", "envelopes", "wire msgs", "fold factor",
+          "Linf vs seq"],
     );
     for (name, policy) in flush_policy_grid() {
         let mut best: Option<SimReport> = None;
         let mut diff = 0.0f32;
         for _ in 0..cfg.reps.max(1) {
-            let r = pagerank::run_async(&dist, params, policy, sim_cfg(&cfg.net, false));
+            let r = pagerank::run_async(&dist, params, policy, sim_cfg(cfg, false));
             diff = pagerank::max_abs_diff(&r.ranks, &want);
             if best.as_ref().map(|b| r.report.makespan_us < b.makespan_us).unwrap_or(true) {
                 best = Some(r.report);
@@ -311,6 +321,7 @@ pub fn ablation_flush_policy(cfg: &Config) -> Result<Table> {
         table.row(vec![
             name.to_string(),
             fmt_us(b.makespan_us),
+            fmt_us(b.wall_us),
             b.net.envelopes.to_string(),
             b.net.messages.to_string(),
             format!("{:.1}", b.agg.fold_factor()),
@@ -343,7 +354,7 @@ pub fn ablation_adaptive_chunk(cfg: &Config) -> Result<Table> {
             cfg.graph_name(),
             p
         ),
-        &["policy", "best time", "mean busy", "imbalance"],
+        &["policy", "best time", "wall", "mean busy", "imbalance"],
     );
     for (name, policy) in policies {
         let ex = Arc::new(Executor::new(0));
@@ -352,7 +363,7 @@ pub fn ablation_adaptive_chunk(cfg: &Config) -> Result<Table> {
             let r = pagerank::run_bsp_with_executor(
                 &dist,
                 params,
-                sim_cfg(&cfg.net, false),
+                sim_cfg(cfg, false),
                 if matches!(policy, ChunkPolicy::Sequential) { None } else { Some(ex.clone()) },
                 policy,
             );
@@ -364,6 +375,7 @@ pub fn ablation_adaptive_chunk(cfg: &Config) -> Result<Table> {
         table.row(vec![
             name.to_string(),
             fmt_us(b.makespan_us),
+            fmt_us(b.wall_us),
             fmt_us(b.mean_busy_us()),
             format!("{:.2}", b.load_imbalance()),
         ]);
@@ -395,18 +407,18 @@ pub fn extensions(cfg: &Config) -> Result<Table> {
         let distw = DistGraph::build_with(&gw, cfg.partition.build(&gw, p));
         // Async label-correcting floods fine-grained relaxations; run it
         // under the HPX parcel-coalescing config like the async BFS.
-        let s_async = sssp::run_async(&gw, &distw, cfg.root, hpx_cfg(&cfg.net));
-        let s_bsp = sssp::run_bsp(&gw, &distw, cfg.root, sim_cfg(&cfg.net, false));
+        let s_async = sssp::run_async(&gw, &distw, cfg.root, hpx_cfg(cfg));
+        let s_bsp = sssp::run_bsp(&gw, &distw, cfg.root, sim_cfg(cfg, false));
         let s_delta = sssp::run_delta_with(
             &gw,
             &distw,
             cfg.root,
             delta,
             cfg.flush_policy,
-            sim_cfg(&cfg.net, false),
+            sim_cfg(cfg, false),
         );
-        let c = cc::run(&dist, sim_cfg(&cfg.net, false));
-        let t = triangle::run(&dist, sim_cfg(&cfg.net, false));
+        let c = cc::run(&dist, sim_cfg(cfg, false));
+        let t = triangle::run(&dist, sim_cfg(cfg, false));
         table.row(vec![
             p.to_string(),
             fmt_us(s_async.report.makespan_us),
@@ -453,7 +465,7 @@ pub fn ablation_delta_stepping(cfg: &Config) -> Result<Table> {
             cfg.graph_name(),
             p
         ),
-        &["engine", "delta", "policy", "best time", "envelopes", "relax", "useful",
+        &["engine", "delta", "policy", "best time", "wall", "envelopes", "relax", "useful",
           "efficiency", "Linf vs dijkstra"],
     );
     let linf = |dist: &[f32]| {
@@ -474,6 +486,7 @@ pub fn ablation_delta_stepping(cfg: &Config) -> Result<Table> {
             dname.to_string(),
             pname.to_string(),
             fmt_us(best.makespan_us),
+            fmt_us(best.wall_us),
             best.agg.envelopes.to_string(),
             best.work.relaxations.to_string(),
             best.work.useful_relaxations.to_string(),
@@ -492,7 +505,7 @@ pub fn ablation_delta_stepping(cfg: &Config) -> Result<Table> {
                     cfg.root,
                     *dval,
                     policy,
-                    sim_cfg(&cfg.net, false),
+                    sim_cfg(cfg, false),
                 );
                 if best.as_ref().map(|b| r.report.makespan_us < b.makespan_us).unwrap_or(true) {
                     err = linf(&r.dist);
@@ -503,9 +516,9 @@ pub fn ablation_delta_stepping(cfg: &Config) -> Result<Table> {
         }
     }
     // Reference rows: the unordered engines this ablation is judged against.
-    let r = sssp::run_async(&gw, &dist, cfg.root, sim_cfg(&cfg.net, false));
+    let r = sssp::run_async(&gw, &dist, cfg.root, sim_cfg(cfg, false));
     push("async", "-", "adaptive", &r.report, linf(&r.dist));
-    let r = sssp::run_bsp(&gw, &dist, cfg.root, sim_cfg(&cfg.net, false));
+    let r = sssp::run_bsp(&gw, &dist, cfg.root, sim_cfg(cfg, false));
     push("bsp", "-", "manual", &r.report, linf(&r.dist));
     Ok(table)
 }
@@ -540,7 +553,8 @@ pub fn ablation_partition_schemes(cfg: &Config) -> Result<Table> {
             cfg.graph_name(),
             p
         ),
-        &["scheme", "algorithm", "best time", "envelopes", "v-imb", "e-imb", "repl"],
+        &["scheme", "algorithm", "best time", "wall", "envelopes", "v-imb", "e-imb",
+          "repl"],
     );
     for kind in PartitionKind::all() {
         let dist = DistGraph::build_with(&g, kind.build(&g, p));
@@ -551,19 +565,19 @@ pub fn ablation_partition_schemes(cfg: &Config) -> Result<Table> {
                 &dist,
                 cfg.root,
                 cfg.flush_policy,
-                sim_cfg(&cfg.net, false),
+                sim_cfg(cfg, false),
             );
             let lv = bfs::tree_levels(cfg.root, &r.parents);
             anyhow::ensure!(lv == bfs_want, "A6: BFS levels diverge under {}", kind.name());
             keep_best(&mut rows, "bfs-async", r.report);
 
             let r =
-                pagerank::run_async(&dist, params, cfg.flush_policy, sim_cfg(&cfg.net, false));
+                pagerank::run_async(&dist, params, cfg.flush_policy, sim_cfg(cfg, false));
             let diff = pagerank::max_abs_diff(&r.ranks, &pr_want);
             anyhow::ensure!(diff < 1e-3, "A6: PageRank diverges under {} ({diff})", kind.name());
             keep_best(&mut rows, "pagerank-async", r.report);
 
-            let r = cc::run(&dist, sim_cfg(&cfg.net, false));
+            let r = cc::run(&dist, sim_cfg(cfg, false));
             anyhow::ensure!(r.labels == cc_want, "A6: CC labels diverge under {}", kind.name());
             keep_best(&mut rows, "cc-bsp", r.report);
 
@@ -572,7 +586,7 @@ pub fn ablation_partition_schemes(cfg: &Config) -> Result<Table> {
                     (a.is_infinite() && b.is_infinite()) || (a - b).abs() < 1e-3
                 })
             };
-            let r = sssp::run_bsp(&gw, &distw, cfg.root, sim_cfg(&cfg.net, false));
+            let r = sssp::run_bsp(&gw, &distw, cfg.root, sim_cfg(cfg, false));
             anyhow::ensure!(sssp_ok(&r.dist), "A6: SSSP distances diverge under {}", kind.name());
             keep_best(&mut rows, "sssp-bsp", r.report);
 
@@ -584,7 +598,7 @@ pub fn ablation_partition_schemes(cfg: &Config) -> Result<Table> {
                 cfg.root,
                 delta,
                 cfg.flush_policy,
-                sim_cfg(&cfg.net, false),
+                sim_cfg(cfg, false),
             );
             anyhow::ensure!(
                 sssp_ok(&r.dist),
@@ -599,6 +613,7 @@ pub fn ablation_partition_schemes(cfg: &Config) -> Result<Table> {
                 kind.name().to_string(),
                 algo.to_string(),
                 fmt_us(r.makespan_us),
+                fmt_us(r.wall_us),
                 r.net.envelopes.to_string(),
                 format!("{:.2}", r.partition.vertex_imbalance),
                 format!("{:.2}", r.partition.edge_imbalance),
@@ -612,9 +627,12 @@ pub fn ablation_partition_schemes(cfg: &Config) -> Result<Table> {
 /// Ablation A7: adaptive coalescing. The tentpole experiment for the
 /// latency-observing flush layer: static break-even (`adaptive`) vs the
 /// self-tuning `latency` policy vs `time:US` windows, swept over
-/// `{block, vertex_cut}` × `{bfs-async, pagerank-async, sssp-delta}` at
-/// the largest locality count ≤ 8, every run validated against its
-/// sequential oracle. Reports envelope counts, the combiner fold factor,
+/// `{sim, threads}` × `{block, vertex_cut}` ×
+/// `{bfs-async, pagerank-async, sssp-delta}` at the largest locality
+/// count ≤ 8, every run validated against its sequential oracle. The
+/// threads rows are the real-queueing validation of the latency-adaptive
+/// policy: there the observed latencies are actual inter-thread delivery
+/// delays, not the cost model. Reports envelope counts, the combiner fold factor,
 /// and the *observed* per-envelope delivery latency split by destination
 /// slot space (master-bound vs mirror-bound — the fan-in asymmetry that
 /// motivates per-space estimators under vertex cuts), straight from
@@ -644,63 +662,76 @@ pub fn ablation_adaptive_coalescing(cfg: &Config) -> Result<Table> {
             cfg.graph_name(),
             p
         ),
-        &["scheme", "algorithm", "policy", "best time", "envelopes", "fold factor",
-          "master-lat-us", "mirror-lat-us"],
+        &["runtime", "scheme", "algorithm", "policy", "best time", "wall", "envelopes",
+          "fold factor", "master-lat-us", "mirror-lat-us"],
     );
     for kind in [PartitionKind::Block, PartitionKind::VertexCut] {
         let dist = DistGraph::build_with(&g, kind.build(&g, p));
         let distw = DistGraph::build_with(&gw, kind.build(&gw, p));
-        for (pname, policy) in policies {
-            let mut rows: Vec<(&str, Option<SimReport>)> = Vec::new();
-            for _ in 0..cfg.reps.max(1) {
-                let r = bfs::run_async_with(&dist, cfg.root, policy, sim_cfg(&cfg.net, false));
-                let lv = bfs::tree_levels(cfg.root, &r.parents);
-                anyhow::ensure!(
-                    lv == bfs_want,
-                    "A7: BFS levels diverge under {} / {pname}",
-                    kind.name()
-                );
-                keep_best(&mut rows, "bfs-async", r.report);
+        // Both substrates, whatever the session default: the sim rows give
+        // the modeled economics, the threads rows validate the
+        // latency-adaptive policy against *real* queueing (observed
+        // latencies are actual inter-thread delays there) and fill the
+        // wall column with true end-to-end time.
+        for rt in [RuntimeKind::Sim, RuntimeKind::Threads] {
+            let scfg = SimConfig { runtime: rt, ..sim_cfg(cfg, false) };
+            for (pname, policy) in policies {
+                let mut rows: Vec<(&str, Option<SimReport>)> = Vec::new();
+                for _ in 0..cfg.reps.max(1) {
+                    let r = bfs::run_async_with(&dist, cfg.root, policy, scfg.clone());
+                    let lv = bfs::tree_levels(cfg.root, &r.parents);
+                    anyhow::ensure!(
+                        lv == bfs_want,
+                        "A7: BFS levels diverge under {} / {} / {pname}",
+                        rt.name(),
+                        kind.name()
+                    );
+                    keep_best(&mut rows, "bfs-async", r.report);
 
-                let r = pagerank::run_async(&dist, params, policy, sim_cfg(&cfg.net, false));
-                let diff = pagerank::max_abs_diff(&r.ranks, &pr_want);
-                anyhow::ensure!(
-                    diff < 1e-3,
-                    "A7: PageRank diverges under {} / {pname} ({diff})",
-                    kind.name()
-                );
-                keep_best(&mut rows, "pagerank-async", r.report);
+                    let r = pagerank::run_async(&dist, params, policy, scfg.clone());
+                    let diff = pagerank::max_abs_diff(&r.ranks, &pr_want);
+                    anyhow::ensure!(
+                        diff < 1e-3,
+                        "A7: PageRank diverges under {} / {} / {pname} ({diff})",
+                        rt.name(),
+                        kind.name()
+                    );
+                    keep_best(&mut rows, "pagerank-async", r.report);
 
-                let r = sssp::run_delta_with(
-                    &gw,
-                    &distw,
-                    cfg.root,
-                    delta,
-                    policy,
-                    sim_cfg(&cfg.net, false),
-                );
-                let ok = r.dist.iter().zip(&sssp_want).all(|(a, b)| {
-                    (a.is_infinite() && b.is_infinite()) || (a - b).abs() < 1e-3
-                });
-                anyhow::ensure!(
-                    ok,
-                    "A7: delta SSSP distances diverge under {} / {pname}",
-                    kind.name()
-                );
-                keep_best(&mut rows, "sssp-delta", r.report);
-            }
-            for (algo, report) in rows {
-                let r = report.unwrap();
-                table.row(vec![
-                    kind.name().to_string(),
-                    algo.to_string(),
-                    pname.to_string(),
-                    fmt_us(r.makespan_us),
-                    r.net.envelopes.to_string(),
-                    format!("{:.1}", r.agg.fold_factor()),
-                    format!("{:.2}", r.agg_master.mean_obs_latency_us()),
-                    format!("{:.2}", r.agg_mirror.mean_obs_latency_us()),
-                ]);
+                    let r = sssp::run_delta_with(
+                        &gw,
+                        &distw,
+                        cfg.root,
+                        delta,
+                        policy,
+                        scfg.clone(),
+                    );
+                    let ok = r.dist.iter().zip(&sssp_want).all(|(a, b)| {
+                        (a.is_infinite() && b.is_infinite()) || (a - b).abs() < 1e-3
+                    });
+                    anyhow::ensure!(
+                        ok,
+                        "A7: delta SSSP distances diverge under {} / {} / {pname}",
+                        rt.name(),
+                        kind.name()
+                    );
+                    keep_best(&mut rows, "sssp-delta", r.report);
+                }
+                for (algo, report) in rows {
+                    let r = report.unwrap();
+                    table.row(vec![
+                        rt.name().to_string(),
+                        kind.name().to_string(),
+                        algo.to_string(),
+                        pname.to_string(),
+                        fmt_us(r.makespan_us),
+                        fmt_us(r.wall_us),
+                        r.net.envelopes.to_string(),
+                        format!("{:.1}", r.agg.fold_factor()),
+                        format!("{:.2}", r.agg_master.mean_obs_latency_us()),
+                        format!("{:.2}", r.agg_mirror.mean_obs_latency_us()),
+                    ]);
+                }
             }
         }
     }

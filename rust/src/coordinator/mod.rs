@@ -67,6 +67,7 @@ fn sim(cfg: &Config) -> SimConfig {
     SimConfig {
         net: cfg.net.clone(),
         aggregate_sends: cfg.aggregate,
+        runtime: cfg.runtime,
         ..SimConfig::default()
     }
 }

@@ -22,7 +22,7 @@ use std::collections::BinaryHeap;
 use std::sync::Arc;
 
 use crate::amt::aggregate::{Aggregator, FlushPolicy, SlotSpace};
-use crate::amt::sim::{Actor, Ctx, LocalityId, SimConfig, SimRuntime, SimTime};
+use crate::amt::sim::{Actor, Ctx, LocalityId, SimConfig, SimTime};
 use crate::amt::WorkStats;
 use crate::graph::{DistGraph, Shard};
 
@@ -394,7 +394,7 @@ pub fn run_async<P: VertexProgram>(
             timer_at: None,
         })
         .collect();
-    let (actors, mut report) = SimRuntime::new(cfg).run(actors);
+    let (actors, mut report) = crate::amt::run_actors(&cfg, actors);
     for a in &actors {
         report.agg.merge(a.agg.stats());
         report.agg.merge(a.mirror_agg.stats());

@@ -29,7 +29,7 @@ use std::sync::Arc;
 
 use crate::amt::aggregate::{Aggregator, FlushPolicy, SlotSpace};
 use crate::amt::executor::{ChunkPolicy, Executor};
-use crate::amt::sim::{Actor, Ctx, LocalityId, SimConfig, SimRuntime, SimTime};
+use crate::amt::sim::{Actor, Ctx, LocalityId, SimConfig, SimTime};
 use crate::amt::WorkStats;
 use crate::graph::{DistGraph, Shard};
 
@@ -425,7 +425,7 @@ pub fn run_bsp_with_executor<P: VertexProgram>(
             work: WorkStats::default(),
         })
         .collect();
-    let (actors, mut report) = SimRuntime::new(cfg).run(actors);
+    let (actors, mut report) = crate::amt::run_actors(&cfg, actors);
     for a in &actors {
         report.agg.merge(a.agg.stats());
         report.agg.merge(a.mirror_agg.stats());

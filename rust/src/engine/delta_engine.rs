@@ -43,7 +43,7 @@ use std::collections::BTreeMap;
 use std::sync::Arc;
 
 use crate::amt::aggregate::{Aggregator, FlushPolicy, SlotSpace};
-use crate::amt::sim::{Actor, Ctx, LocalityId, SimConfig, SimRuntime, SimTime};
+use crate::amt::sim::{Actor, Ctx, LocalityId, SimConfig, SimTime};
 use crate::amt::WorkStats;
 use crate::graph::{DistGraph, Shard};
 
@@ -536,7 +536,7 @@ pub fn run_delta<P: VertexProgram>(
             timer_at: None,
         })
         .collect();
-    let (actors, mut report) = SimRuntime::new(cfg).run(actors);
+    let (actors, mut report) = crate::amt::run_actors(&cfg, actors);
     for a in &actors {
         report.agg.merge(a.agg.stats());
         report.agg.merge(a.mirror_agg.stats());

@@ -30,6 +30,10 @@ fn real_main() -> Result<()> {
     if args.switch("aggregate") {
         cfg.aggregate = true;
     }
+    if let Some(rt) = args.flag("runtime") {
+        cfg.runtime = nwgraph_hpx::amt::RuntimeKind::parse(rt)
+            .map_err(|e| anyhow::anyhow!("bad --runtime: {e}"))?;
+    }
     let validate = args.switch("validate");
 
     match args.command.as_str() {
@@ -39,12 +43,13 @@ fn real_main() -> Result<()> {
             let res = coordinator::run_bfs(&cfg, p, engine, validate)?;
             let reached = res.parents.iter().filter(|&&x| x >= 0).count();
             println!(
-                "bfs[{engine:?}] {} p={p}: reached {}/{} vertices in {} \
+                "bfs[{engine:?}] {} p={p}: reached {}/{} vertices in {} (wall {}) \
                  (msgs={} envs={} barriers={})",
                 cfg.graph_name(),
                 reached,
                 res.parents.len(),
                 fmt_us(res.report.makespan_us),
+                fmt_us(res.report.wall_us),
                 res.report.net.messages,
                 res.report.net.envelopes,
                 res.report.barriers,
@@ -66,11 +71,12 @@ fn real_main() -> Result<()> {
             let p = args.flag_or("p", *cfg.localities.last().unwrap_or(&4))?;
             let res = coordinator::run_pagerank(&cfg, p, engine, validate)?;
             println!(
-                "pagerank[{engine:?}] {} p={p}: {} iters in {} \
+                "pagerank[{engine:?}] {} p={p}: {} iters in {} (wall {}) \
                  (final delta={:.3e}, msgs={}, envs={}, barriers={})",
                 cfg.graph_name(),
                 cfg.iterations,
                 fmt_us(res.report.makespan_us),
+                fmt_us(res.report.wall_us),
                 res.deltas.last().cloned().unwrap_or(0.0),
                 res.report.net.messages,
                 res.report.net.envelopes,
@@ -108,12 +114,13 @@ fn real_main() -> Result<()> {
             let res = coordinator::run_sssp(&cfg, p, engine, validate)?;
             let reached = res.dist.iter().filter(|d| d.is_finite()).count();
             println!(
-                "sssp[{engine:?}] {} p={p}: reached {}/{} vertices in {} \
+                "sssp[{engine:?}] {} p={p}: reached {}/{} vertices in {} (wall {}) \
                  (msgs={} envs={} barriers={})",
                 cfg.graph_name(),
                 reached,
                 res.dist.len(),
                 fmt_us(res.report.makespan_us),
+                fmt_us(res.report.wall_us),
                 res.report.net.messages,
                 res.report.net.envelopes,
                 res.report.barriers,
@@ -151,12 +158,13 @@ fn real_main() -> Result<()> {
             let res = coordinator::run_cc(&cfg, p, engine, validate)?;
             let comps = nwgraph_hpx::algorithms::cc::component_count(&res.labels);
             println!(
-                "cc[{engine:?}] {} p={p}: {} components over {} vertices in {} \
+                "cc[{engine:?}] {} p={p}: {} components over {} vertices in {} (wall {}) \
                  (msgs={} envs={} barriers={})",
                 cfg.graph_name(),
                 comps,
                 res.labels.len(),
                 fmt_us(res.report.makespan_us),
+                fmt_us(res.report.wall_us),
                 res.report.net.messages,
                 res.report.net.envelopes,
                 res.report.barriers,

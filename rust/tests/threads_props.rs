@@ -1,0 +1,324 @@
+//! Threaded-runtime equivalence property suite.
+//!
+//! The contract under test: [`RuntimeKind`] is a pure *substrate* knob.
+//! Running a `VertexProgram` on the discrete-event simulator (`sim`) or on
+//! one OS thread per locality (`threads`) must produce the same answers —
+//! BFS levels, SSSP distances, PageRank ranks, and CC labels — across all
+//! four partition schemes, {1, 2, 4} localities, and random flush
+//! policies. The integer-valued fixed points (BFS levels, CC labels) must
+//! be *identical*; the float algorithms agree within the same tolerances
+//! the engines already promise against their sequential oracles, because
+//! real thread interleavings reorder float accumulation.
+//!
+//! Also here: a loom-free repeat-run stress test (determinism of *results*,
+//! not schedules) and the PR acceptance pin — on kron10@8 every algorithm
+//! is oracle-identical across runtimes while the threaded `SimReport`
+//! carries nonzero wall-clock for every phase.
+//!
+//! Environment knobs (see `testing::PropConfig::from_env`):
+//! `NWGRAPH_PROP_SEED` pins the base seed (the CI seed matrix);
+//! `NWGRAPH_PROP_CASES` shrinks case counts for fast local runs.
+
+use nwgraph_hpx::algorithms::{bfs, cc, pagerank, pagerank::PrParams, sssp};
+use nwgraph_hpx::amt::{FlushPolicy, NetConfig, RuntimeKind, SimConfig};
+use nwgraph_hpx::graph::generators::SplitMix64;
+use nwgraph_hpx::graph::{generators, DistGraph, PartitionKind};
+use nwgraph_hpx::testing::{forall, gen, PropConfig};
+
+fn sim_det() -> SimConfig {
+    SimConfig::deterministic(NetConfig::default())
+}
+
+fn threads_det() -> SimConfig {
+    SimConfig { runtime: RuntimeKind::Threads, ..sim_det() }
+}
+
+fn cfg(cases: u32) -> PropConfig {
+    PropConfig::from_env(cases, 0x7EEAD5, 28)
+}
+
+/// The ISSUE's locality sweep: every count must agree, including the
+/// degenerate single-thread runtime.
+const LOCALITIES: [u32; 3] = [1, 2, 4];
+
+/// Same policy corners as the engine suite, so the threaded delivery path
+/// races the timer-flush and ack-driven tuner too.
+fn gen_policy(rng: &mut SplitMix64) -> FlushPolicy {
+    match rng.below(7) {
+        0 => FlushPolicy::Unbatched,
+        1 => FlushPolicy::Items(1 + rng.below(64) as usize),
+        2 => FlushPolicy::Bytes(8 + rng.below(1024) as usize),
+        3 => FlushPolicy::Adaptive,
+        4 => FlushPolicy::TimeWindow(rng.below(30)),
+        5 => FlushPolicy::LatencyAdaptive,
+        _ => FlushPolicy::Manual,
+    }
+}
+
+#[test]
+fn prop_bfs_levels_identical_on_sim_and_threads() {
+    forall(
+        &cfg(10),
+        |rng, size| {
+            let g = gen::ugraph(rng, size);
+            let root = rng.below(g.n() as u64) as u32;
+            (g, root, gen_policy(rng))
+        },
+        |(g, root, policy)| {
+            let want = bfs::sequential::distances(g, *root);
+            for kind in PartitionKind::all() {
+                for p in LOCALITIES {
+                    let dist = DistGraph::build_with(g, kind.build(g, p));
+                    let s = bfs::run_async_with(&dist, *root, *policy, sim_det());
+                    let t = bfs::run_async_with(&dist, *root, *policy, threads_det());
+                    bfs::validate_parents(g, *root, &t.parents)?;
+                    let (ls, lt) = (
+                        bfs::tree_levels(*root, &s.parents),
+                        bfs::tree_levels(*root, &t.parents),
+                    );
+                    if ls != lt || lt != want {
+                        return Err(format!("bfs {kind:?} p={p} {policy:?}: levels diverge"));
+                    }
+                    if !(t.report.wall_us > 0.0) {
+                        return Err(format!("bfs {kind:?} p={p}: threads wall_us == 0"));
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_sssp_distances_agree_on_sim_and_threads() {
+    forall(
+        &cfg(8),
+        |rng, size| {
+            let g = gen::ugraph(rng, size);
+            let gw = generators::with_random_weights(&g, 0.5, 9.5, rng.next_u64());
+            let root = rng.below(gw.n() as u64) as u32;
+            (gw, root, gen_policy(rng))
+        },
+        |(gw, root, policy)| {
+            let want = sssp::dijkstra(gw, *root);
+            // Label correction converges to the unique shortest-distance
+            // fixed point, but tied paths can round differently under
+            // different arrival orders — so both runtimes are held to the
+            // engine's oracle tolerance, and to each other at the same bar.
+            let close = |a: f32, b: f32| {
+                (a.is_infinite() && b.is_infinite()) || (a - b).abs() < 1e-3
+            };
+            for kind in PartitionKind::all() {
+                for p in LOCALITIES {
+                    let dist = DistGraph::build_with(gw, kind.build(gw, p));
+                    let s = sssp::run_async_with(gw, &dist, *root, *policy, sim_det());
+                    let t = sssp::run_async_with(gw, &dist, *root, *policy, threads_det());
+                    for v in 0..gw.n() {
+                        if !close(s.dist[v], want[v])
+                            || !close(t.dist[v], want[v])
+                            || !close(s.dist[v], t.dist[v])
+                        {
+                            return Err(format!(
+                                "sssp {kind:?} p={p} {policy:?} v={v}: sim {} threads {} want {}",
+                                s.dist[v], t.dist[v], want[v]
+                            ));
+                        }
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_pagerank_ranks_agree_on_sim_and_threads() {
+    let params = PrParams { alpha: 0.85, iterations: 8 };
+    forall(
+        &cfg(8),
+        |rng, size| (gen::digraph(rng, size), gen_policy(rng)),
+        |(g, policy)| {
+            let want = pagerank::sequential::pagerank(g, params);
+            for kind in PartitionKind::all() {
+                for p in LOCALITIES {
+                    let dist = DistGraph::build_with(g, kind.build(g, p));
+                    let s = pagerank::run_async(&dist, params, *policy, sim_det());
+                    let t = pagerank::run_async(&dist, params, *policy, threads_det());
+                    for (name, r) in [("sim", &s), ("threads", &t)] {
+                        let diff = pagerank::max_abs_diff(&r.ranks, &want);
+                        if diff > 1e-4 {
+                            return Err(format!(
+                                "pagerank {name} {kind:?} p={p} {policy:?}: oracle diff {diff}"
+                            ));
+                        }
+                    }
+                    let cross = pagerank::max_abs_diff(&s.ranks, &t.ranks);
+                    if cross > 1e-4 {
+                        return Err(format!(
+                            "pagerank {kind:?} p={p} {policy:?}: sim vs threads diff {cross}"
+                        ));
+                    }
+                    // The iteration barriers must survive the substrate
+                    // swap: same count, and each threaded phase took time.
+                    if t.report.barriers != s.report.barriers {
+                        return Err(format!(
+                            "pagerank {kind:?} p={p}: {} barriers on threads, {} on sim",
+                            t.report.barriers, s.report.barriers
+                        ));
+                    }
+                    if t.report.phase_wall_us.iter().any(|&w| w <= 0.0) {
+                        return Err(format!(
+                            "pagerank {kind:?} p={p}: zero-width threaded phase {:?}",
+                            t.report.phase_wall_us
+                        ));
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_cc_labels_identical_on_sim_and_threads() {
+    forall(
+        &cfg(10),
+        |rng, size| (gen::ugraph(rng, size), gen_policy(rng)),
+        |(g, policy)| {
+            let want = cc::union_find(g);
+            for kind in PartitionKind::all() {
+                for p in LOCALITIES {
+                    let dist = DistGraph::build_with(g, kind.build(g, p));
+                    for (name, labels) in [
+                        ("bsp", cc::run(&dist, threads_det()).labels),
+                        ("async", cc::run_async(&dist, *policy, threads_det()).labels),
+                    ] {
+                        if labels != want {
+                            return Err(format!(
+                                "cc {name} {kind:?} p={p} {policy:?}: threaded labels diverge"
+                            ));
+                        }
+                    }
+                    if cc::run_async(&dist, *policy, sim_det()).labels != want {
+                        return Err(format!("cc async {kind:?} p={p}: sim labels diverge"));
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn threaded_results_are_repeat_deterministic() {
+    // Loom-free stress: thread *schedules* vary run to run, but the
+    // integer-valued fixed points (BFS levels, CC labels) are
+    // schedule-independent, so repeated threaded runs must return
+    // identical results. SSSP distances are float min-folds over tied
+    // paths, so repeats are held to the oracle tolerance instead.
+    let seed = cfg(1).seed; // honors NWGRAPH_PROP_SEED via from_env
+    let g = generators::kron(8, 8, seed);
+    let dist = DistGraph::build_with(&g, PartitionKind::VertexCut.build(&g, 4));
+
+    let levels0 = bfs::tree_levels(
+        0,
+        &bfs::run_async_with(&dist, 0, FlushPolicy::LatencyAdaptive, threads_det()).parents,
+    );
+    let labels0 = cc::run_async(&dist, FlushPolicy::Adaptive, threads_det()).labels;
+    let gw = generators::with_random_weights(&g, 1.0, 10.0, seed + 1);
+    let distw = DistGraph::build_with(&gw, PartitionKind::VertexCut.build(&gw, 4));
+    let delta = sssp::auto_delta(&gw);
+    let dist0 =
+        sssp::run_delta_with(&gw, &distw, 0, delta, FlushPolicy::Adaptive, threads_det()).dist;
+
+    for rep in 0..4 {
+        let levels = bfs::tree_levels(
+            0,
+            &bfs::run_async_with(&dist, 0, FlushPolicy::LatencyAdaptive, threads_det())
+                .parents,
+        );
+        assert_eq!(levels, levels0, "rep {rep}: BFS levels changed across threaded runs");
+        let labels = cc::run_async(&dist, FlushPolicy::Adaptive, threads_det()).labels;
+        assert_eq!(labels, labels0, "rep {rep}: CC labels changed across threaded runs");
+        let d = sssp::run_delta_with(&gw, &distw, 0, delta, FlushPolicy::Adaptive, threads_det())
+            .dist;
+        for v in 0..gw.n() {
+            let (a, b) = (d[v], dist0[v]);
+            assert!(
+                (a.is_infinite() && b.is_infinite()) || (a - b).abs() < 1e-3,
+                "rep {rep}: sssp dist[{v}] drifted: {a} vs {b}"
+            );
+        }
+    }
+}
+
+#[test]
+fn kron10_acceptance_threads_match_sim_with_nonzero_phase_wall_clock() {
+    // PR acceptance pin (release CI runs this suite): on the benchmark
+    // kron10@8 shape, all four algorithms agree across runtimes and the
+    // threaded SimReport carries real wall-clock — end-to-end and for
+    // every barrier-delimited phase.
+    let seed = cfg(1).seed; // honors NWGRAPH_PROP_SEED via from_env
+    let g = generators::kron(10, 8, seed);
+    let dist = DistGraph::build_with(&g, PartitionKind::VertexCut.build(&g, 8));
+    assert!(dist.has_mirrors(), "kron10@8 vertex cut should mirror");
+
+    let check_wall = |name: &str, r: &nwgraph_hpx::amt::SimReport| {
+        assert!(r.wall_us > 0.0, "{name}: threaded wall_us not measured");
+        assert_eq!(
+            r.makespan_us, r.wall_us,
+            "{name}: threaded makespan must BE the wall clock"
+        );
+        assert_eq!(
+            r.phase_wall_us.len() as u64,
+            r.barriers + 1,
+            "{name}: {} barriers should cut {} phases, got {:?}",
+            r.barriers,
+            r.barriers + 1,
+            r.phase_wall_us
+        );
+        for (i, &w) in r.phase_wall_us.iter().enumerate() {
+            assert!(w > 0.0, "{name}: phase {i} reported zero wall-clock");
+        }
+    };
+
+    // BFS: levels identical.
+    let s = bfs::run_async_with(&dist, 0, FlushPolicy::Adaptive, sim_det());
+    let t = bfs::run_async_with(&dist, 0, FlushPolicy::Adaptive, threads_det());
+    assert_eq!(
+        bfs::tree_levels(0, &s.parents),
+        bfs::tree_levels(0, &t.parents),
+        "bfs: levels diverge across runtimes"
+    );
+    check_wall("bfs", &t.report);
+
+    // CC: labels identical.
+    let s = cc::run_async(&dist, FlushPolicy::Adaptive, sim_det());
+    let t = cc::run_async(&dist, FlushPolicy::Adaptive, threads_det());
+    assert_eq!(s.labels, t.labels, "cc: labels diverge across runtimes");
+    check_wall("cc", &t.report);
+
+    // PageRank: ranks within the oracle tolerance, barriers preserved.
+    let params = PrParams { alpha: 0.85, iterations: 10 };
+    let s = pagerank::run_async(&dist, params, FlushPolicy::Adaptive, sim_det());
+    let t = pagerank::run_async(&dist, params, FlushPolicy::Adaptive, threads_det());
+    let diff = pagerank::max_abs_diff(&s.ranks, &t.ranks);
+    assert!(diff <= 1e-4, "pagerank: sim vs threads diff {diff}");
+    assert_eq!(s.report.barriers, t.report.barriers, "pagerank: barrier count diverges");
+    check_wall("pagerank", &t.report);
+
+    // SSSP (delta engine): distances within the oracle tolerance.
+    let gw = generators::with_random_weights(&g, 1.0, 10.0, seed + 1);
+    let distw = DistGraph::build_with(&gw, PartitionKind::VertexCut.build(&gw, 8));
+    let delta = sssp::auto_delta(&gw);
+    let s = sssp::run_delta_with(&gw, &distw, 0, delta, FlushPolicy::Adaptive, sim_det());
+    let t = sssp::run_delta_with(&gw, &distw, 0, delta, FlushPolicy::Adaptive, threads_det());
+    for v in 0..gw.n() {
+        let (a, b) = (s.dist[v], t.dist[v]);
+        assert!(
+            (a.is_infinite() && b.is_infinite()) || (a - b).abs() < 1e-3,
+            "sssp dist[{v}]: sim {a} vs threads {b}"
+        );
+    }
+    check_wall("sssp", &t.report);
+}
