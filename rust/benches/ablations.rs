@@ -24,6 +24,10 @@
 //!   pagerank-async, sssp-delta}, with per-slot-space observed-latency
 //!   columns. The acceptance pin (`LatencyAdaptive` envelopes ≤ static
 //!   `Adaptive` on the vertex cut) lives in `tests/engine_props.rs`.
+//! * **A8** — query serving on kron10 at 8 localities: landmark oracle ×
+//!   hot-source LRU cache × wave batch width over {sim, threads}, every
+//!   answer set validated against sequential Dijkstra (hits and waves may
+//!   move, answers may not). Columns: hits, waves, qps, p50/p99 latency.
 //!
 //! `cargo bench --bench ablations`
 
@@ -119,4 +123,9 @@ fn main() {
     // point for the latency-observing flush layer (same graph shape as
     // the release-mode envelope pin in tests/engine_props.rs).
     print!("{}", experiment::ablation_adaptive_coalescing(&cfg6).expect("A7 failed").render());
+
+    // A8: query serving on the same kron10 shape — the acceptance point
+    // for the serve layer (oracle/cache hits > 0, waves < queries, on
+    // both substrates).
+    print!("{}", experiment::ablation_query_serving(&cfg6).expect("A8 failed").render());
 }

@@ -31,8 +31,10 @@ use crate::amt::{FlushPolicy, SimConfig, SimReport};
 use crate::engine;
 use crate::graph::{Csr, DistGraph, VertexId};
 
+pub mod paths;
 pub mod program;
 
+pub use paths::{path_weight, recover_path, run_paths, DistParent, SsspPathProgram, SsspPathResult};
 pub use program::SsspProgram;
 
 /// Result of a distributed SSSP run.

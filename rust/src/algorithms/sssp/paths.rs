@@ -1,0 +1,256 @@
+//! SSSP with path recovery as a [`VertexProgram`]: messages carry a
+//! `(tentative distance, parent)` pair, folded by distance-min, so the
+//! converged states form a shortest-path tree and any `s → t` path can be
+//! reconstructed by walking parent pointers — the query-serving layer
+//! ([`serve`](crate::serve)) is built on this program and its multi-source
+//! generalization ([`serve::wave`](crate::serve::wave)).
+//!
+//! Parents ride inside [`DistParent`] atomically with their distance, so
+//! aggregation, mirror installs, and message reordering can never pair a
+//! distance with a stale parent. Ties break toward the smaller parent id,
+//! keeping the [`VertexProgram::combine`] fold associative, commutative,
+//! and deterministic; with that order `<` on `(dist, parent)` is total
+//! (graph build asserts weights finite and non-negative, so distances are
+//! NaN-free).
+
+use crate::amt::{FlushPolicy, SimConfig, SimReport};
+use crate::engine::{self, Mode, ProgramInfo, VertexProgram};
+use crate::graph::{Csr, DistGraph, VertexId};
+
+/// A tentative distance plus the parent that proposed it (`-1` =
+/// unreached; the source is its own parent).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct DistParent {
+    /// Tentative distance (`f32::INFINITY` = unreached).
+    pub dist: f32,
+    /// Global id of the relaxing neighbor (`-1` = none yet).
+    pub parent: i64,
+}
+
+impl Default for DistParent {
+    fn default() -> Self {
+        DistParent { dist: f32::INFINITY, parent: -1 }
+    }
+}
+
+impl DistParent {
+    /// Strict improvement order: smaller distance wins; equal distances
+    /// break toward the smaller parent id so the min-fold stays
+    /// deterministic under any message interleaving.
+    pub fn beats(&self, other: &DistParent) -> bool {
+        self.dist < other.dist || (self.dist == other.dist && self.parent < other.parent)
+    }
+}
+
+/// Label-correcting SSSP from a source vertex, recording parent pointers.
+#[derive(Debug, Clone)]
+pub struct SsspPathProgram {
+    /// Source vertex.
+    pub source: VertexId,
+}
+
+impl VertexProgram for SsspPathProgram {
+    type State = DistParent;
+    type Msg = DistParent;
+
+    fn info(&self) -> ProgramInfo {
+        ProgramInfo {
+            name: "sssp-paths",
+            mode: Mode::Converge,
+            needs_weights: true,
+            ordered: true, // distances remain a path metric: delta applies
+            item_bytes: 16, // vertex id + distance + parent
+        }
+    }
+
+    fn init(&self, _v: VertexId, _out_degree: u32) -> DistParent {
+        DistParent::default()
+    }
+
+    fn seed(&self, v: VertexId) -> Option<DistParent> {
+        (v == self.source).then_some(DistParent { dist: 0.0, parent: v as i64 })
+    }
+
+    fn combine(acc: &mut DistParent, new: DistParent) {
+        debug_assert!(!new.dist.is_nan() && !acc.dist.is_nan(), "distances must be NaN-free");
+        if new.beats(acc) {
+            *acc = new;
+        }
+    }
+
+    fn beats(&self, msg: &DistParent, state: &DistParent) -> bool {
+        msg.beats(state)
+    }
+
+    fn apply(&self, state: &mut DistParent, msg: DistParent) -> bool {
+        if msg.beats(state) {
+            *state = msg;
+            true
+        } else {
+            false
+        }
+    }
+
+    fn signal(&self, state: &DistParent) -> DistParent {
+        *state
+    }
+
+    fn along_edge(&self, u: VertexId, sig: &DistParent, w: f32) -> DistParent {
+        DistParent { dist: sig.dist + w, parent: u as i64 }
+    }
+
+    fn priority(&self, msg: &DistParent) -> f32 {
+        msg.dist
+    }
+}
+
+/// Result of a path-recovering SSSP run.
+#[derive(Debug)]
+pub struct SsspPathResult {
+    /// Tentative distances (`f32::INFINITY` = unreachable).
+    pub dist: Vec<f32>,
+    /// Shortest-path-tree parents (`-1` = unreachable; source is its own
+    /// parent). Walk with [`recover_path`].
+    pub parents: Vec<i64>,
+    /// Runtime report.
+    pub report: SimReport,
+}
+
+/// Run asynchronous label-correcting SSSP with path recovery. Runs on the
+/// generic mirror-aware engine, so every partition scheme (vertex cuts
+/// included) is supported.
+pub fn run_paths(
+    g: &Csr,
+    dist_graph: &DistGraph,
+    source: VertexId,
+    policy: FlushPolicy,
+    cfg: SimConfig,
+) -> SsspPathResult {
+    super::check_graph_matches(g, dist_graph);
+    let run = engine::run_async(SsspPathProgram { source }, dist_graph, policy, cfg);
+    let (dist, parents) = run.states.iter().map(|s| (s.dist, s.parent)).unzip();
+    SsspPathResult { dist, parents, report: run.report }
+}
+
+/// Walk a shortest-path tree from `target` back to `source`. Returns the
+/// vertex sequence `source, ..., target`, `Some([source])` for
+/// `source == target`, and `None` when `target` is unreachable (or the
+/// tree is malformed — the walk is bounded by `parents.len()` hops).
+pub fn recover_path(parents: &[i64], source: VertexId, target: VertexId) -> Option<Vec<VertexId>> {
+    let mut path = vec![target];
+    let mut cur = target;
+    for _ in 0..parents.len() {
+        if cur == source {
+            path.reverse();
+            return Some(path);
+        }
+        let p = *parents.get(cur as usize)?;
+        if p < 0 {
+            return None;
+        }
+        cur = p as VertexId;
+        path.push(cur);
+    }
+    None // cycle or over-long walk: malformed tree
+}
+
+/// Sum of edge weights along `path`, validating that every hop is a real
+/// edge of `g`. Parallel edges contribute their minimum weight (the one a
+/// shortest path would use). Returns `None` on a missing edge. An empty or
+/// single-vertex path weighs `0.0`.
+pub fn path_weight(g: &Csr, path: &[VertexId]) -> Option<f32> {
+    let mut total = 0.0f32;
+    for hop in path.windows(2) {
+        let (u, v) = (hop[0], hop[1]);
+        let w = g
+            .neighbors_weighted(u)
+            .filter(|&(x, _)| x == v)
+            .map(|(_, w)| w)
+            .fold(f32::INFINITY, f32::min);
+        if !w.is_finite() {
+            return None;
+        }
+        total += w;
+    }
+    Some(total)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::amt::NetConfig;
+    use crate::graph::{generators, PartitionKind};
+
+    fn det() -> SimConfig {
+        SimConfig::deterministic(NetConfig::default())
+    }
+
+    fn weighted_graph(scale: u32, seed: u64) -> Csr {
+        generators::with_symmetric_random_weights(
+            &generators::urand(scale, 4, seed),
+            1.0,
+            10.0,
+            seed + 1,
+        )
+    }
+
+    #[test]
+    fn distances_match_dijkstra_and_paths_are_valid() {
+        for p in [1u32, 2, 4, 8] {
+            let g = weighted_graph(6, 19 + p as u64);
+            let want = super::super::dijkstra(&g, 0);
+            let d = DistGraph::block(&g, p);
+            let res = run_paths(&g, &d, 0, FlushPolicy::Adaptive, det());
+            for (v, (&got, &exp)) in res.dist.iter().zip(&want).enumerate() {
+                let ok = (got.is_infinite() && exp.is_infinite()) || (got - exp).abs() < 1e-3;
+                assert!(ok, "p={p} v={v}: {got} vs {exp}");
+                let path = recover_path(&res.parents, 0, v as VertexId);
+                if exp.is_infinite() {
+                    assert!(path.is_none(), "p={p} v={v}: path to unreachable vertex");
+                } else {
+                    let path = path.unwrap_or_else(|| panic!("p={p} v={v}: no path"));
+                    assert_eq!(path[0], 0);
+                    assert_eq!(*path.last().unwrap(), v as VertexId);
+                    let w = path_weight(&g, &path).expect("path uses real edges");
+                    assert!((w - got).abs() < 1e-3, "p={p} v={v}: weight {w} vs dist {got}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn paths_are_valid_under_every_partition_scheme() {
+        let g = generators::with_symmetric_random_weights(
+            &generators::kron(6, 5, 61),
+            1.0,
+            10.0,
+            62,
+        );
+        let want = super::super::dijkstra(&g, 0);
+        for kind in PartitionKind::all() {
+            let d = DistGraph::build_with(&g, kind.build(&g, 4));
+            let res = run_paths(&g, &d, 0, FlushPolicy::Adaptive, det());
+            for (v, &exp) in want.iter().enumerate() {
+                if !exp.is_finite() {
+                    continue;
+                }
+                let path = recover_path(&res.parents, 0, v as VertexId)
+                    .unwrap_or_else(|| panic!("{kind:?} v={v}: no path"));
+                let w = path_weight(&g, &path).expect("edge-valid");
+                assert!((w - exp).abs() < 1e-3, "{kind:?} v={v}: {w} vs {exp}");
+            }
+        }
+    }
+
+    #[test]
+    fn source_path_is_trivial() {
+        let parents = vec![0i64, 0, 1];
+        assert_eq!(recover_path(&parents, 0, 0), Some(vec![0]));
+        assert_eq!(recover_path(&parents, 0, 2), Some(vec![0, 1, 2]));
+        // Unreached vertex.
+        assert_eq!(recover_path(&[0, -1], 0, 1), None);
+        // Parent cycle never loops forever.
+        assert_eq!(recover_path(&[1, 0], 0, 1), Some(vec![0, 1]));
+        assert_eq!(recover_path(&[1, 2, 1], 0, 2), None);
+    }
+}

@@ -62,6 +62,43 @@ impl Default for PartitionStats {
     }
 }
 
+/// Query-serving accounting for [`serve`](crate::serve) runs: how a
+/// stream of point-to-point queries was answered (precomputed landmark
+/// tables, the hot-source LRU cache, or batched multi-source SSSP waves)
+/// and the end-to-end latency distribution. Like [`WorkStats`], the
+/// runtimes know nothing about queries — this starts zeroed and the serve
+/// front-end stamps it after the run. `waves < queries` is the batching
+/// win; `oracle_hits + cache_hits` is the precompute win.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct QueryStats {
+    /// Queries answered.
+    pub queries: u64,
+    /// Queries answered exactly from the landmark distance tables.
+    pub oracle_hits: u64,
+    /// Queries answered from the hot-source LRU cache.
+    pub cache_hits: u64,
+    /// Multi-source SSSP waves executed for the uncovered remainder.
+    pub waves: u64,
+    /// Queries per second of host wall-clock.
+    pub qps: f64,
+    /// Median per-query latency, us (wall-clock from arrival to answer).
+    pub p50_us: f64,
+    /// 99th-percentile per-query latency, us.
+    pub p99_us: f64,
+}
+
+impl QueryStats {
+    /// Covered fraction: queries that never left the serving locality
+    /// (oracle + cache hits over total; an empty run counts as 0).
+    pub fn hit_rate(&self) -> f64 {
+        if self.queries == 0 {
+            0.0
+        } else {
+            (self.oracle_hits + self.cache_hits) as f64 / self.queries as f64
+        }
+    }
+}
+
 /// Outcome of one simulated run: the modeled makespan plus the quantities
 /// the paper's analysis hinges on (per-locality busy time → load balance,
 /// barrier count → synchronization cost, traffic → communication overhead).
@@ -103,6 +140,10 @@ pub struct SimReport {
     /// 1.0 factors; drivers overwrite it from the built
     /// [`DistGraph`](crate::graph::DistGraph)).
     pub partition: PartitionStats,
+    /// Query-serving accounting. Zero for one-shot analytics runs; the
+    /// [`serve`](crate::serve) front-end stamps it like drivers stamp
+    /// [`SimReport::work`].
+    pub query: QueryStats,
     /// Host wall-clock for the whole run, us. For the simulator this is
     /// the cost of executing the simulation itself; for the threaded
     /// runtime it *is* the end-to-end time (`makespan_us == wall_us`).
@@ -251,6 +292,7 @@ mod tests {
             agg_mirror: AggStats::default(),
             work: WorkStats::default(),
             partition: PartitionStats::default(),
+            query: QueryStats::default(),
             wall_us: 0.0,
             phase_wall_us: vec![],
         };
@@ -274,6 +316,7 @@ mod tests {
             agg_mirror: AggStats::default(),
             work: WorkStats::default(),
             partition: PartitionStats::default(),
+            query: QueryStats::default(),
             wall_us: 0.0,
             phase_wall_us: vec![],
         };
@@ -289,6 +332,21 @@ mod tests {
         assert!((segs.iter().sum::<f64>() - 45.0).abs() < 1e-12);
         // No barriers: one segment spanning the whole run.
         assert_eq!(phase_segments(&[], 7.5), vec![7.5]);
+    }
+
+    #[test]
+    fn query_stats_hit_rate() {
+        assert_eq!(QueryStats::default().hit_rate(), 0.0);
+        let q = QueryStats {
+            queries: 100,
+            oracle_hits: 30,
+            cache_hits: 20,
+            waves: 5,
+            qps: 1000.0,
+            p50_us: 10.0,
+            p99_us: 50.0,
+        };
+        assert!((q.hit_rate() - 0.5).abs() < 1e-12);
     }
 
     #[test]

@@ -608,6 +608,7 @@ impl SimRuntime {
             agg_mirror: super::aggregate::AggStats::default(),
             work: super::metrics::WorkStats::default(),
             partition: super::metrics::PartitionStats::default(),
+            query: super::metrics::QueryStats::default(),
             wall_us,
             phase_wall_us: super::metrics::phase_segments(&phase_marks, wall_us),
         };

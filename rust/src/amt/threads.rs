@@ -198,6 +198,7 @@ impl ThreadedRuntime {
             agg_mirror: super::aggregate::AggStats::default(),
             work: super::metrics::WorkStats::default(),
             partition: super::metrics::PartitionStats::default(),
+            query: super::metrics::QueryStats::default(),
             wall_us,
             phase_wall_us: phase_segments(&g.phase_marks, wall_us),
         };

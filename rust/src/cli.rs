@@ -97,16 +97,25 @@ COMMANDS:
                 partition-generic, vertex cuts included
     cc          run one distributed connected-components pass
                 (--engine bsp|async)
+    serve       answer a generated s->t query stream (distance / path /
+                rank) instead of one-shot analytics: landmark-oracle
+                precompute, hot-source LRU cache, and batched multi-source
+                SSSP waves through the aggregator; prints hits, waves,
+                qps, and p50/p99 wall-clock latency; scheme-generic
+                (vertex cuts included); needs an undirected generator
+                (symmetric metric)
     fig1        regenerate Figure 1 (BFS speedup sweep, HPX vs Boost/BSP)
     fig2        regenerate Figure 2 (PageRank sweep, HPX naive/opt vs Boost/BSP)
     ablations   run the DESIGN.md ablation suite (A1 aggregation, A2 chunking,
                 A4 amt::aggregate flush policies, A5 delta-stepping
                 delta x flush-policy sweep, A6 partition schemes x algorithms,
                 A7 adaptive coalescing: static-adaptive vs latency vs time
-                windows x {block, vertex_cut} with observed-latency columns);
+                windows x {block, vertex_cut} with observed-latency columns,
+                A8 query serving: oracle x cache x batch over {sim, threads}
+                with hits/waves/qps/latency columns);
                 --json additionally writes machine-readable tables to
                 bench_out/*.json (--out-dir overrides the directory);
-                --only a4,a7 runs a prefix-matched subset
+                --only a4,a7,a8 runs a prefix-matched subset
     info        print graph statistics for the configured generator
     help        show this message
 
@@ -124,6 +133,8 @@ CONFIG OVERRIDES (key=value):
     runtime (sim|threads — discrete-event simulator with the modeled
              interconnect, or one OS thread per locality with real queueing;
              both run the same engines and report wall-clock columns),
+    serve_queries, serve_landmarks, serve_cache (0 disables),
+    serve_batch (>= 1), serve_oracle (true|false),
     net.latency_us, net.bandwidth_gbps, net.send_cpu_us, net.recv_cpu_us,
     net.per_item_cpu_us, net.overhead_bytes, artifact_dir
 
@@ -135,7 +146,7 @@ FLAGS:
     --out-dir <dir>    output directory for `ablations --json` (default bench_out)
     --json             also write ablation tables as JSON (ablations only)
     --only <list>      comma list of ablation stems to run, prefix-matched
-                       (e.g. --only a4,a7; ablations only)
+                       (e.g. --only a4,a7,a8; ablations only)
     --validate         validate results against the sequential oracle
 ";
 

@@ -52,6 +52,16 @@ pub struct Config {
     pub runtime: RuntimeKind,
     /// Artifact directory for the kernel path.
     pub artifact_dir: String,
+    /// Serve mode: queries in the generated stream.
+    pub serve_queries: usize,
+    /// Serve mode: landmarks precomputed for the distance oracle.
+    pub serve_landmarks: usize,
+    /// Serve mode: hot-source LRU cache capacity in trees (`0` disables).
+    pub serve_cache: usize,
+    /// Serve mode: multi-source wave width (must be `>= 1`).
+    pub serve_batch: usize,
+    /// Serve mode: master switch for the landmark oracle.
+    pub serve_oracle: bool,
 }
 
 impl Default for Config {
@@ -73,6 +83,11 @@ impl Default for Config {
             partition: PartitionKind::Block,
             runtime: RuntimeKind::Sim,
             artifact_dir: "artifacts".into(),
+            serve_queries: 1000,
+            serve_landmarks: 8,
+            serve_cache: 32,
+            serve_batch: 16,
+            serve_oracle: true,
         }
     }
 }
@@ -138,6 +153,15 @@ impl Config {
                         .map_err(|e| anyhow::anyhow!("bad runtime: {e}"))?;
                 }
                 "artifact_dir" => c.artifact_dir = v.clone(),
+                "serve_queries" => c.serve_queries = v.parse()?,
+                "serve_landmarks" => c.serve_landmarks = v.parse()?,
+                "serve_cache" => c.serve_cache = v.parse()?,
+                "serve_batch" => {
+                    let b: usize = v.parse()?;
+                    anyhow::ensure!(b >= 1, "serve_batch must be >= 1, got `{v}`");
+                    c.serve_batch = b;
+                }
+                "serve_oracle" => c.serve_oracle = v.parse()?,
                 "net.latency_us" => c.net.latency_us = v.parse()?,
                 "net.bandwidth_gbps" => {
                     c.net.bandwidth_bytes_per_us = v.parse::<f64>()? * 1000.0
@@ -273,6 +297,30 @@ mod tests {
         let err = Config::from_kv(&kv).unwrap_err().to_string();
         assert!(err.contains("fibers"), "{err}");
         assert_eq!(Config::default().runtime, RuntimeKind::Sim, "sim is the default");
+    }
+
+    #[test]
+    fn serve_keys_parse_and_reject() {
+        let mut kv = BTreeMap::new();
+        kv.insert("serve_queries".into(), "250".into());
+        kv.insert("serve_landmarks".into(), "4".into());
+        kv.insert("serve_cache".into(), "0".into());
+        kv.insert("serve_batch".into(), "8".into());
+        kv.insert("serve_oracle".into(), "false".into());
+        let c = Config::from_kv(&kv).unwrap();
+        assert_eq!(c.serve_queries, 250);
+        assert_eq!(c.serve_landmarks, 4);
+        assert_eq!(c.serve_cache, 0);
+        assert_eq!(c.serve_batch, 8);
+        assert!(!c.serve_oracle);
+        kv.insert("serve_batch".into(), "0".into());
+        let err = Config::from_kv(&kv).unwrap_err().to_string();
+        assert!(err.contains("serve_batch"), "{err}");
+        let d = Config::default();
+        assert_eq!(
+            (d.serve_queries, d.serve_landmarks, d.serve_cache, d.serve_batch, d.serve_oracle),
+            (1000, 8, 32, 16, true)
+        );
     }
 
     #[test]

@@ -738,6 +738,84 @@ pub fn ablation_adaptive_coalescing(cfg: &Config) -> Result<Table> {
     Ok(table)
 }
 
+/// Ablation A8: query-serving throughput. Sweeps the three serving
+/// amortizations — landmark oracle {on, off}, hot-source LRU cache
+/// {0, configured}, wave width {1, configured} — over `{sim, threads}` at
+/// the largest locality count ≤ 8, answering the same generated stream
+/// each time and validating every answer set against the sequential
+/// Dijkstra oracle (the covered-vs-uncovered parity property: toggling
+/// the oracle or cache may only move hits and waves, never answers).
+/// Reports the [`QueryStats`](crate::amt::QueryStats) columns: hits,
+/// waves, qps, and the real wall-clock latency distribution.
+pub fn ablation_query_serving(cfg: &Config) -> Result<Table> {
+    use crate::serve;
+    use crate::graph::generators;
+
+    anyhow::ensure!(
+        cfg.generator != "urand-directed",
+        "A8 serves a symmetric metric; generator `urand-directed` is unsupported"
+    );
+    let g = cfg.build_graph()?;
+    let gw = generators::with_symmetric_random_weights(&g, 1.0, 10.0, cfg.seed + 1);
+    let p = cfg.localities.iter().cloned().filter(|&x| x <= 8).max().unwrap_or(8);
+    let dist = DistGraph::build_with(&gw, cfg.partition.build(&gw, p));
+    // The full serve_queries default would dominate the ablation suite's
+    // runtime; 256 queries are plenty to separate the knobs.
+    let queries = cfg.serve_queries.min(256);
+    let mut table = Table::new(
+        format!(
+            "Ablation A8 — query serving (oracle x cache x batch) on {} ({} localities, \
+             {queries} queries)",
+            cfg.graph_name(),
+            p
+        ),
+        &["runtime", "oracle", "cache", "batch", "queries", "oracle-hits", "cache-hits",
+          "waves", "qps", "p50-us", "p99-us", "wall"],
+    );
+    for rt in [RuntimeKind::Sim, RuntimeKind::Threads] {
+        let scfg = SimConfig { runtime: rt, ..sim_cfg(cfg, cfg.aggregate) };
+        for (oracle, cache, batch) in [
+            (true, cfg.serve_cache, cfg.serve_batch),
+            (false, cfg.serve_cache, cfg.serve_batch),
+            (true, 0, cfg.serve_batch),
+            (true, cfg.serve_cache, 1),
+        ] {
+            let params = serve::ServeParams {
+                queries,
+                landmarks: cfg.serve_landmarks,
+                cache,
+                batch,
+                oracle,
+                seed: cfg.seed + 2,
+            };
+            let res = serve::run(&gw, &dist, &params, cfg.flush_policy, scfg.clone());
+            serve::validate(&gw, &res.queries, &res.answers).map_err(|e| {
+                anyhow::anyhow!(
+                    "A8: answers diverge under {} oracle={oracle} cache={cache} \
+                     batch={batch}: {e}",
+                    rt.name()
+                )
+            })?;
+            let q = res.report.query;
+            table.row(vec![
+                rt.name().to_string(),
+                oracle.to_string(),
+                cache.to_string(),
+                batch.to_string(),
+                q.queries.to_string(),
+                q.oracle_hits.to_string(),
+                q.cache_hits.to_string(),
+                q.waves.to_string(),
+                format!("{:.0}", q.qps),
+                format!("{:.1}", q.p50_us),
+                format!("{:.1}", q.p99_us),
+                fmt_us(res.report.wall_us),
+            ]);
+        }
+    }
+    Ok(table)
+}
+
 /// Keep the fastest repetition per labelled row of an A6 sweep.
 fn keep_best(
     rows: &mut Vec<(&'static str, Option<SimReport>)>,

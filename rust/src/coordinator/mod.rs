@@ -40,6 +40,10 @@ pub enum Engine {
     /// Kernel-offloaded (PageRank only; needs artifacts and a contiguous
     /// mirror-free scheme).
     Kernel,
+    /// Query-serving front-end (`serve` command): landmark oracle +
+    /// hot-source cache + batched multi-source SSSP waves on the generic
+    /// async engine. Scheme-generic, vertex cuts included.
+    Serve,
 }
 
 impl Engine {
@@ -52,6 +56,7 @@ impl Engine {
             "delta" | "delta-stepping" => Engine::Delta,
             "diropt" => Engine::DirOpt,
             "kernel" => Engine::Kernel,
+            "serve" => Engine::Serve,
             other => anyhow::bail!("unknown engine `{other}`"),
         })
     }
@@ -181,6 +186,50 @@ pub fn run_cc(cfg: &Config, p: u32, engine: Engine, validate: bool) -> Result<cc
     Ok(res)
 }
 
+/// Run the query-serving front-end: precompute the landmark oracle, then
+/// answer the generated `s → t` stream via cache hits, oracle hits, and
+/// batched multi-source SSSP waves. Waves run on the generic mirror-aware
+/// async engine, so every partition scheme is supported — serve never
+/// calls [`require_mirror_free`]. The oracle's triangle bounds need a
+/// symmetric metric, so the (undirected) config graph gets pair-keyed
+/// symmetric weights and the directed generator is rejected up front.
+pub fn run_serve(
+    cfg: &Config,
+    p: u32,
+    engine: Engine,
+    validate: bool,
+) -> Result<crate::serve::ServeResult> {
+    use crate::graph::generators;
+    use crate::serve;
+
+    anyhow::ensure!(
+        matches!(engine, Engine::Serve | Engine::Async),
+        "engine {engine:?} does not implement serve (waves always run on the async engine)"
+    );
+    anyhow::ensure!(
+        cfg.generator != "urand-directed",
+        "serve needs a symmetric metric; generator `urand-directed` is unsupported \
+         (use urand or kron)"
+    );
+    let g = cfg.build_graph()?;
+    let gw = generators::with_symmetric_random_weights(&g, 1.0, 10.0, cfg.seed + 1);
+    let dist = build_dist(cfg, &gw, p);
+    let params = serve::ServeParams {
+        queries: cfg.serve_queries,
+        landmarks: cfg.serve_landmarks,
+        cache: cfg.serve_cache,
+        batch: cfg.serve_batch,
+        oracle: cfg.serve_oracle,
+        seed: cfg.seed + 2,
+    };
+    let res = serve::run(&gw, &dist, &params, cfg.flush_policy, sim(cfg));
+    if validate {
+        serve::validate(&gw, &res.queries, &res.answers)
+            .map_err(|e| anyhow::anyhow!("serve validation failed: {e}"))?;
+    }
+    Ok(res)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -200,6 +249,7 @@ mod tests {
         assert_eq!(Engine::parse("boost").unwrap(), Engine::Bsp);
         assert_eq!(Engine::parse("delta").unwrap(), Engine::Delta);
         assert_eq!(Engine::parse("delta-stepping").unwrap(), Engine::Delta);
+        assert_eq!(Engine::parse("serve").unwrap(), Engine::Serve);
         assert!(Engine::parse("warp").is_err());
     }
 
@@ -270,6 +320,40 @@ mod tests {
         assert!(err.contains("direction-optimizing BFS"), "{err}");
         assert!(err.contains("vertex_cut"), "{err}");
         assert!(err.contains("mirror-free"), "{err}");
+    }
+
+    fn serve_cfg() -> Config {
+        let mut c = tiny_cfg();
+        c.serve_queries = 32;
+        c.serve_landmarks = 3;
+        c.serve_cache = 8;
+        c.serve_batch = 4;
+        c
+    }
+
+    #[test]
+    fn run_serve_validates_under_every_partition_scheme() {
+        use crate::graph::PartitionKind;
+        for kind in PartitionKind::all() {
+            let mut cfg = serve_cfg();
+            cfg.partition = kind;
+            let res = run_serve(&cfg, 4, Engine::Serve, true).unwrap();
+            let q = res.report.query;
+            assert_eq!(q.queries, 32, "{kind:?}");
+            assert!(q.oracle_hits + q.cache_hits > 0, "{kind:?}: {q:?}");
+            assert!(q.waves < q.queries, "{kind:?}: {q:?}");
+            assert!(q.qps > 0.0 && q.p50_us > 0.0, "{kind:?}: {q:?}");
+        }
+    }
+
+    #[test]
+    fn serve_rejects_directed_generator_and_wrong_engine() {
+        let mut cfg = serve_cfg();
+        let err = run_serve(&cfg, 2, Engine::Bsp, false).unwrap_err().to_string();
+        assert!(err.contains("does not implement serve"), "{err}");
+        cfg.generator = "urand-directed".into();
+        let err = run_serve(&cfg, 2, Engine::Serve, false).unwrap_err().to_string();
+        assert!(err.contains("symmetric"), "{err}");
     }
 
     #[test]

@@ -210,6 +210,29 @@ pub fn with_random_weights(g: &Csr, lo: f32, hi: f32, seed: u64) -> Csr {
     Csr::from_edge_list(&el)
 }
 
+/// Attach uniform random weights in `[lo, hi)` keyed by the *undirected*
+/// vertex pair, so `w(u, v) == w(v, u)` whenever both directions exist.
+/// On a symmetrized graph this yields a symmetric shortest-path metric
+/// (`d(s, t) == d(t, s)`), which the landmark oracle in
+/// [`serve`](crate::serve) requires for its triangle-inequality bounds —
+/// [`with_random_weights`] draws a fresh weight per directed CSR entry
+/// and is *not* symmetric.
+pub fn with_symmetric_random_weights(g: &Csr, lo: f32, hi: f32, seed: u64) -> Csr {
+    let mut el = EdgeList::new(g.n());
+    for u in 0..g.n() as VertexId {
+        for &v in g.neighbors(u) {
+            let (a, b) = if u <= v { (u, v) } else { (v, u) };
+            // One independently-mixed draw per unordered pair: SplitMix64
+            // is a bijective mixer, so seeding with the pair key gives a
+            // deterministic, well-distributed weight.
+            let key = ((a as u64) << 32) | b as u64;
+            let mut rng = SplitMix64::new(seed ^ key.wrapping_mul(0x9E3779B97F4A7C15));
+            el.push_weighted(u, v, lo + (hi - lo) * rng.f64() as f32);
+        }
+    }
+    Csr::from_edge_list(&el)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -279,6 +302,38 @@ mod tests {
             for (_, w) in g.neighbors_weighted(u) {
                 assert!((1.0..2.0).contains(&w));
             }
+        }
+    }
+
+    #[test]
+    fn symmetric_weights_agree_across_directions() {
+        let g = with_symmetric_random_weights(&urand(7, 4, 11), 1.0, 10.0, 13);
+        assert!(g.is_weighted());
+        let mut checked = 0u32;
+        for u in 0..g.n() as VertexId {
+            for (v, w) in g.neighbors_weighted(u) {
+                assert!((1.0..10.0).contains(&w));
+                let back: Vec<f32> =
+                    g.neighbors_weighted(v).filter(|&(x, _)| x == u).map(|(_, w)| w).collect();
+                assert!(!back.is_empty(), "urand is symmetrized: ({v},{u}) must exist");
+                for bw in back {
+                    assert_eq!(bw, w, "w({u},{v}) != w({v},{u})");
+                }
+                checked += 1;
+            }
+        }
+        assert!(checked > 0);
+    }
+
+    #[test]
+    fn symmetric_weights_are_deterministic() {
+        let base = urand(6, 4, 21);
+        let a = with_symmetric_random_weights(&base, 1.0, 10.0, 9);
+        let b = with_symmetric_random_weights(&base, 1.0, 10.0, 9);
+        for u in 0..a.n() as VertexId {
+            let wa: Vec<(VertexId, f32)> = a.neighbors_weighted(u).collect();
+            let wb: Vec<(VertexId, f32)> = b.neighbors_weighted(u).collect();
+            assert_eq!(wa, wb);
         }
     }
 }

@@ -52,6 +52,7 @@ pub mod coordinator;
 pub mod engine;
 pub mod graph;
 pub mod runtime;
+pub mod serve;
 pub mod testing;
 
 /// Crate-wide result alias.

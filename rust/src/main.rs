@@ -181,6 +181,49 @@ fn real_main() -> Result<()> {
                 println!("validation: OK");
             }
         }
+        "serve" => {
+            let engine = Engine::parse(args.flag("engine").unwrap_or("serve"))?;
+            let p = args.flag_or("p", *cfg.localities.last().unwrap_or(&4))?;
+            let res = coordinator::run_serve(&cfg, p, engine, validate)?;
+            let q = res.report.query;
+            println!(
+                "serve {} p={p}: {} queries in {} wall, {:.0} q/s \
+                 (landmarks={} cache={} batch={})",
+                cfg.graph_name(),
+                q.queries,
+                fmt_us(res.report.wall_us),
+                q.qps,
+                if cfg.serve_oracle { cfg.serve_landmarks } else { 0 },
+                cfg.serve_cache,
+                cfg.serve_batch,
+            );
+            println!(
+                "  oracle hits={} cache hits={} (hit rate {:.2}) waves={}",
+                q.oracle_hits,
+                q.cache_hits,
+                q.hit_rate(),
+                q.waves,
+            );
+            println!(
+                "  latency: p50={:.1}us p99={:.1}us (msgs={} envs={} barriers={})",
+                q.p50_us,
+                q.p99_us,
+                res.report.net.messages,
+                res.report.net.envelopes,
+                res.report.barriers,
+            );
+            let pt = res.report.partition;
+            println!(
+                "  partition[{}]: v-imb={:.2} e-imb={:.2} repl={:.2}",
+                cfg.partition.name(),
+                pt.vertex_imbalance,
+                pt.edge_imbalance,
+                pt.replication_factor,
+            );
+            if validate {
+                println!("validation: OK");
+            }
+        }
         "fig1" => {
             let (table, _) = experiment::fig1_bfs(&cfg)?;
             print!("{}", table.render());
@@ -201,19 +244,20 @@ fn real_main() -> Result<()> {
             // (file stem, runner) pairs so --json can name its outputs;
             // each table prints (and persists) as soon as it completes.
             type Runner = fn(&Config) -> Result<nwgraph_hpx::coordinator::Table>;
-            let tables: [(&str, Runner); 7] = [
+            let tables: [(&str, Runner); 8] = [
                 ("a1_aggregation", experiment::ablation_aggregation),
                 ("a2_chunking", experiment::ablation_adaptive_chunk),
                 ("a4_flush_policy", experiment::ablation_flush_policy),
                 ("a5_delta_stepping", experiment::ablation_delta_stepping),
                 ("a6_partition_schemes", experiment::ablation_partition_schemes),
                 ("a7_adaptive_coalescing", experiment::ablation_adaptive_coalescing),
+                ("a8_query_serving", experiment::ablation_query_serving),
                 ("extensions", experiment::extensions),
             ];
             let json = args.switch("json");
             let out_dir = args.flag("out-dir").unwrap_or("bench_out");
-            // --only a4,a7: run the prefix-matched subset (CI baselines
-            // grab A4+A7 without paying for the whole suite).
+            // --only a4,a7,a8: run the prefix-matched subset (CI baselines
+            // grab A4+A7+A8 without paying for the whole suite).
             let only: Option<Vec<&str>> =
                 args.flag("only").map(|s| s.split(',').map(str::trim).collect());
             if let Some(sel) = &only {

@@ -1,0 +1,640 @@
+//! Query serving: answer a stream of point-to-point `s → t` queries on a
+//! distributed graph instead of running one-shot full-graph analytics.
+//!
+//! This is the ROADMAP's latency-bound regime ("serve heavy traffic"):
+//! the asynchronous many-task substrate hides latency for irregular
+//! point-to-point work, and the serving layer stacks three amortizations
+//! on top of it —
+//!
+//! 1. **Landmark oracle** ([`oracle`]): `k` high-degree landmarks are
+//!    precomputed once (batched multi-source SSSP waves); covered queries
+//!    become table lookups.
+//! 2. **Hot-source LRU cache**: a full shortest-path tree per recently
+//!    queried source; repeat sources answer locally.
+//! 3. **Batched waves** ([`wave`]): concurrent uncovered queries share
+//!    width-`B` multi-source SSSP waves through the existing aggregator —
+//!    `waves` ends far below `queries`.
+//!
+//! Every path is exact: an oracle or cache hit never changes an answer,
+//! only its latency (the covered-vs-uncovered parity property in
+//! `tests/serve_props.rs`). Results carry
+//! [`QueryStats`](crate::amt::QueryStats) in the run's
+//! [`SimReport`] — hits, waves, qps, and the wall-clock latency
+//! distribution (real end-to-end time under `runtime=threads`).
+//!
+//! All waves run on the generic mirror-aware async engine; serving works
+//! under every partition scheme, vertex cuts included, and never calls
+//! `engine::require_mirror_free`.
+
+pub mod oracle;
+pub mod wave;
+
+use std::collections::{HashMap, VecDeque};
+use std::rc::Rc;
+use std::time::Instant;
+
+use crate::algorithms::sssp;
+use crate::amt::{FlushPolicy, QueryStats, SimConfig, SimReport};
+use crate::graph::generators::SplitMix64;
+use crate::graph::{Csr, DistGraph, VertexId};
+use crate::Result;
+
+pub use oracle::LandmarkOracle;
+pub use wave::{run_wave, MultiSourceSssp, WaveResult};
+
+/// Serving knobs (config keys `serve_*`).
+#[derive(Debug, Clone)]
+pub struct ServeParams {
+    /// Queries in the generated stream.
+    pub queries: usize,
+    /// Landmarks to precompute (`0` = no oracle tables).
+    pub landmarks: usize,
+    /// Hot-source LRU cache capacity, in source trees (`0` = disabled).
+    pub cache: usize,
+    /// Multi-source wave width: uncovered sources per engine run.
+    pub batch: usize,
+    /// Master switch for the landmark oracle (tables + covered answers).
+    pub oracle: bool,
+    /// Stream seed (query endpoints and kinds).
+    pub seed: u64,
+}
+
+impl Default for ServeParams {
+    fn default() -> Self {
+        ServeParams { queries: 1000, landmarks: 8, cache: 32, batch: 16, oracle: true, seed: 42 }
+    }
+}
+
+/// One point-to-point query.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Query {
+    /// What to compute about the pair.
+    pub kind: QueryKind,
+    /// Source vertex.
+    pub s: VertexId,
+    /// Target vertex.
+    pub t: VertexId,
+}
+
+/// Query flavors of the generated stream.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum QueryKind {
+    /// Shortest-path distance `d(s, t)`.
+    Distance,
+    /// Distance plus the vertex sequence of one shortest path.
+    Path,
+    /// Distance rank of `t` from `s`: how many vertices are strictly
+    /// closer to `s` (see [`rank_of`]).
+    Rank,
+}
+
+/// Answer to one [`Query`]. Distances are `f32::INFINITY` when `t` is
+/// unreachable from `s` (and the path is `None`).
+#[derive(Debug, Clone, PartialEq)]
+pub enum Answer {
+    /// `d(s, t)`.
+    Distance(f32),
+    /// `d(s, t)` plus one shortest path `s, ..., t`.
+    Path {
+        /// The path's total weight.
+        dist: f32,
+        /// Vertex sequence (`None` = unreachable).
+        path: Option<Vec<VertexId>>,
+    },
+    /// Number of vertices strictly closer to `s` than `t`.
+    Rank(u32),
+}
+
+/// Outcome of one serve run.
+#[derive(Debug)]
+pub struct ServeResult {
+    /// The generated stream, in arrival order.
+    pub queries: Vec<Query>,
+    /// One answer per query, same order.
+    pub answers: Vec<Answer>,
+    /// Merged runtime report of the precompute and all query waves, with
+    /// [`SimReport::query`] stamped. `makespan_us`/`wall_us` accumulate
+    /// across engine runs; `wall_us` covers the whole serve call.
+    pub report: SimReport,
+}
+
+/// Distance rank: how many vertices are strictly closer to the source
+/// than `t`, given the source's full distance vector. An unreachable `t`
+/// ranks below every reached vertex (the count of finite distances).
+pub fn rank_of(dist: &[f32], t: VertexId) -> u32 {
+    let dt = dist[t as usize];
+    if dt.is_finite() {
+        dist.iter().filter(|d| **d < dt).count() as u32
+    } else {
+        dist.iter().filter(|d| d.is_finite()).count() as u32
+    }
+}
+
+/// Generate a query stream: sources are skewed toward a small hot pool
+/// (half the stream) so the LRU cache has something to catch, targets are
+/// uniform, and kinds mix distance (5/8), path (2/8), and rank (1/8).
+pub fn generate_queries(n: usize, count: usize, seed: u64) -> Vec<Query> {
+    assert!(n > 0, "cannot query an empty graph");
+    let mut rng = SplitMix64::new(seed);
+    let hot: Vec<VertexId> =
+        (0..8).map(|_| rng.below(n as u64) as VertexId).collect();
+    (0..count)
+        .map(|_| {
+            let s = if rng.below(2) == 0 {
+                hot[rng.below(hot.len() as u64) as usize]
+            } else {
+                rng.below(n as u64) as VertexId
+            };
+            let t = rng.below(n as u64) as VertexId;
+            let kind = match rng.below(8) {
+                0 | 1 => QueryKind::Path,
+                2 => QueryKind::Rank,
+                _ => QueryKind::Distance,
+            };
+            Query { kind, s, t }
+        })
+        .collect()
+}
+
+/// One cached shortest-path tree (distances + parents for a source).
+#[derive(Debug)]
+struct SourceTree {
+    dist: Vec<f32>,
+    parents: Vec<i64>,
+}
+
+/// Hot-source LRU: most-recently-used source trees, capacity in trees.
+struct SourceCache {
+    cap: usize,
+    order: VecDeque<VertexId>,
+    map: HashMap<VertexId, Rc<SourceTree>>,
+}
+
+impl SourceCache {
+    fn new(cap: usize) -> Self {
+        SourceCache { cap, order: VecDeque::new(), map: HashMap::new() }
+    }
+
+    fn get(&mut self, s: VertexId) -> Option<Rc<SourceTree>> {
+        let tree = self.map.get(&s)?.clone();
+        // Refresh recency.
+        if let Some(pos) = self.order.iter().position(|&v| v == s) {
+            self.order.remove(pos);
+        }
+        self.order.push_back(s);
+        Some(tree)
+    }
+
+    fn insert(&mut self, s: VertexId, tree: Rc<SourceTree>) {
+        if self.cap == 0 {
+            return;
+        }
+        if self.map.insert(s, tree).is_none() {
+            self.order.push_back(s);
+            if self.order.len() > self.cap {
+                if let Some(evict) = self.order.pop_front() {
+                    self.map.remove(&evict);
+                }
+            }
+        } else if let Some(pos) = self.order.iter().position(|&v| v == s) {
+            self.order.remove(pos);
+            self.order.push_back(s);
+        }
+    }
+}
+
+fn answer_from_tree(q: &Query, tree: &SourceTree) -> Answer {
+    match q.kind {
+        QueryKind::Distance => Answer::Distance(tree.dist[q.t as usize]),
+        QueryKind::Path => Answer::Path {
+            dist: tree.dist[q.t as usize],
+            path: sssp::recover_path(&tree.parents, q.s, q.t),
+        },
+        QueryKind::Rank => Answer::Rank(rank_of(&tree.dist, q.t)),
+    }
+}
+
+fn answer_from_oracle(oracle: &LandmarkOracle, q: &Query) -> Option<Answer> {
+    match q.kind {
+        QueryKind::Distance => oracle.exact_distance(q.s, q.t).map(Answer::Distance),
+        QueryKind::Path => {
+            let path = oracle.exact_path(q.s, q.t)?;
+            let dist = oracle.exact_distance(q.s, q.t)?;
+            Some(Answer::Path { dist, path })
+        }
+        QueryKind::Rank => {
+            if q.s == q.t {
+                return Some(Answer::Rank(0));
+            }
+            let i = oracle.landmark_index(q.s)?;
+            Some(Answer::Rank(rank_of(&oracle.tables[i], q.t)))
+        }
+    }
+}
+
+/// Accumulate a second engine run into a serve-level report: traffic,
+/// barriers, busy time, and modeled makespan add up; phase segments
+/// concatenate.
+pub(crate) fn merge_reports(into: &mut SimReport, other: &SimReport) {
+    into.n_localities = into.n_localities.max(other.n_localities);
+    into.makespan_us += other.makespan_us;
+    into.barriers += other.barriers;
+    into.events += other.events;
+    into.net.merge(&other.net);
+    if into.busy_us.len() < other.busy_us.len() {
+        into.busy_us.resize(other.busy_us.len(), 0.0);
+    }
+    for (a, b) in into.busy_us.iter_mut().zip(&other.busy_us) {
+        *a += b;
+    }
+    if into.per_locality_net.len() < other.per_locality_net.len() {
+        into.per_locality_net.resize(other.per_locality_net.len(), Default::default());
+    }
+    for (a, b) in into.per_locality_net.iter_mut().zip(&other.per_locality_net) {
+        a.merge(b);
+    }
+    into.agg.merge(&other.agg);
+    into.agg_master.merge(&other.agg_master);
+    into.agg_mirror.merge(&other.agg_mirror);
+    into.work.merge(&other.work);
+    into.wall_us += other.wall_us;
+    into.phase_wall_us.extend_from_slice(&other.phase_wall_us);
+}
+
+/// A zeroed report for serve runs that never touched an engine (e.g. an
+/// all-covered stream with the oracle prebuilt elsewhere).
+fn empty_report(p: u32) -> SimReport {
+    SimReport {
+        n_localities: p,
+        makespan_us: 0.0,
+        busy_us: vec![0.0; p as usize],
+        barriers: 0,
+        events: 0,
+        net: Default::default(),
+        per_locality_net: vec![Default::default(); p as usize],
+        agg: Default::default(),
+        agg_master: Default::default(),
+        agg_mirror: Default::default(),
+        work: Default::default(),
+        partition: Default::default(),
+        query: QueryStats::default(),
+        wall_us: 0.0,
+        phase_wall_us: Vec::new(),
+    }
+}
+
+/// Interpolation-free percentile of an ascending-sorted slice
+/// (nearest-rank). Empty input yields 0.
+fn percentile(sorted_us: &[f64], q: f64) -> f64 {
+    if sorted_us.is_empty() {
+        return 0.0;
+    }
+    let idx = ((sorted_us.len() - 1) as f64 * q).round() as usize;
+    sorted_us[idx.min(sorted_us.len() - 1)]
+}
+
+/// Serve a generated query stream. Precomputes the landmark oracle (when
+/// enabled), then answers queries in arrival windows: covered queries
+/// resolve from cache/tables immediately, the uncovered remainder batches
+/// into shared multi-source waves. Per-query latency is host wall-clock
+/// from window arrival to answer; `qps` covers the serving phase
+/// (precompute excluded — it is a build step, reported in `wall_us`).
+///
+/// The `DistGraph` must be built from the weighted `g`. For the oracle's
+/// triangle bounds `g` must carry a symmetric metric (see
+/// [`oracle`] module docs) — the coordinator builds one with
+/// [`with_symmetric_random_weights`](crate::graph::generators::with_symmetric_random_weights).
+pub fn run(
+    g: &Csr,
+    dist_graph: &DistGraph,
+    params: &ServeParams,
+    policy: FlushPolicy,
+    cfg: SimConfig,
+) -> ServeResult {
+    let t0 = Instant::now();
+    let p = dist_graph.shards.len() as u32;
+    let batch = params.batch.max(1);
+
+    let k = if params.oracle { params.landmarks } else { 0 };
+    let (oracle, precompute_report) =
+        LandmarkOracle::build(g, dist_graph, k, batch, policy, &cfg);
+    let mut report = precompute_report.unwrap_or_else(|| empty_report(p));
+
+    let queries = generate_queries(g.n(), params.queries, params.seed);
+    let mut answers: Vec<Option<Answer>> = vec![None; queries.len()];
+    let mut latencies_us = vec![0.0f64; queries.len()];
+    let mut stats = QueryStats { queries: queries.len() as u64, ..QueryStats::default() };
+    let mut cache = SourceCache::new(params.cache);
+
+    let serve_t0 = Instant::now();
+    let window = batch * 4;
+    for (w, chunk) in queries.chunks(window).enumerate() {
+        let base = w * window;
+        let round_t0 = Instant::now();
+        let mut pending: Vec<usize> = Vec::new();
+        for (j, q) in chunk.iter().enumerate() {
+            let idx = base + j;
+            if let Some(tree) = cache.get(q.s) {
+                answers[idx] = Some(answer_from_tree(q, &tree));
+                stats.cache_hits += 1;
+            } else if params.oracle {
+                if let Some(ans) = answer_from_oracle(&oracle, q) {
+                    answers[idx] = Some(ans);
+                    stats.oracle_hits += 1;
+                } else {
+                    pending.push(idx);
+                }
+            } else {
+                pending.push(idx);
+            }
+            if answers[idx].is_some() {
+                latencies_us[idx] = round_t0.elapsed().as_secs_f64() * 1e6;
+            }
+        }
+
+        // Batch the uncovered remainder into shared multi-source waves.
+        let mut uncovered: Vec<VertexId> = Vec::new();
+        for &idx in &pending {
+            let s = queries[idx].s;
+            if !uncovered.contains(&s) {
+                uncovered.push(s);
+            }
+        }
+        // Round-local trees: guaranteed to survive until every pending
+        // query is answered even when the LRU capacity is smaller than
+        // the round's source set.
+        let mut round_trees: HashMap<VertexId, Rc<SourceTree>> = HashMap::new();
+        for src_chunk in uncovered.chunks(batch) {
+            let res = run_wave(g, dist_graph, src_chunk, policy, cfg.clone());
+            stats.waves += 1;
+            merge_reports(&mut report, &res.report);
+            for ((&s, dist), parents) in
+                src_chunk.iter().zip(res.dist).zip(res.parents)
+            {
+                let tree = Rc::new(SourceTree { dist, parents });
+                cache.insert(s, tree.clone());
+                round_trees.insert(s, tree);
+            }
+            // Answer every pending query this wave unblocked, stamping
+            // its latency now (arrival → answer, real wall-clock).
+            for &idx in &pending {
+                if answers[idx].is_some() {
+                    continue;
+                }
+                let q = &queries[idx];
+                if let Some(tree) = round_trees.get(&q.s) {
+                    answers[idx] = Some(answer_from_tree(q, tree));
+                    latencies_us[idx] = round_t0.elapsed().as_secs_f64() * 1e6;
+                }
+            }
+        }
+    }
+    let serve_secs = serve_t0.elapsed().as_secs_f64();
+
+    let answers: Vec<Answer> = answers
+        .into_iter()
+        .map(|a| a.expect("every query is answered by its round"))
+        .collect();
+    stats.qps = if serve_secs > 0.0 { queries.len() as f64 / serve_secs } else { 0.0 };
+    let mut sorted = latencies_us.clone();
+    sorted.sort_by(f64::total_cmp);
+    stats.p50_us = percentile(&sorted, 0.50);
+    stats.p99_us = percentile(&sorted, 0.99);
+
+    report.partition = dist_graph.partition_stats();
+    report.query = stats;
+    report.wall_us = t0.elapsed().as_secs_f64() * 1e6;
+    ServeResult { queries, answers, report }
+}
+
+/// Validate every answer against the sequential Dijkstra oracle
+/// (memoized per distinct source). Distances and path weights must agree
+/// within `1e-3`; paths must be edge-valid walks `s, ..., t`; ranks must
+/// fall inside the float-tolerance bracket around the oracle rank.
+pub fn validate(g: &Csr, queries: &[Query], answers: &[Answer]) -> Result<()> {
+    anyhow::ensure!(queries.len() == answers.len(), "answer count mismatch");
+    let mut truth: HashMap<VertexId, Vec<f32>> = HashMap::new();
+    for (q, a) in queries.iter().zip(answers) {
+        let want =
+            truth.entry(q.s).or_insert_with(|| sssp::dijkstra(g, q.s));
+        let wd = want[q.t as usize];
+        let check_dist = |got: f32| -> Result<()> {
+            let ok = (got.is_infinite() && wd.is_infinite()) || (got - wd).abs() < 1e-3;
+            anyhow::ensure!(ok, "query {q:?}: distance {got} vs oracle {wd}");
+            Ok(())
+        };
+        match a {
+            Answer::Distance(got) => check_dist(*got)?,
+            Answer::Path { dist, path } => {
+                check_dist(*dist)?;
+                match path {
+                    None => anyhow::ensure!(
+                        wd.is_infinite(),
+                        "query {q:?}: no path but oracle distance {wd}"
+                    ),
+                    Some(path) => {
+                        anyhow::ensure!(
+                            path.first() == Some(&q.s) && path.last() == Some(&q.t),
+                            "query {q:?}: path endpoints {path:?}"
+                        );
+                        let w = sssp::path_weight(g, path).ok_or_else(|| {
+                            anyhow::anyhow!("query {q:?}: path uses a non-edge")
+                        })?;
+                        anyhow::ensure!(
+                            (w - dist).abs() < 1e-3,
+                            "query {q:?}: path weighs {w}, reported {dist}"
+                        );
+                    }
+                }
+            }
+            Answer::Rank(got) => {
+                // Strict-less counting is float-sensitive near ties, so
+                // bracket the oracle rank with a ±5e-3 margin.
+                let (lo, hi) = if wd.is_finite() {
+                    (
+                        want.iter().filter(|d| **d < wd - 5e-3).count() as u32,
+                        want.iter().filter(|d| **d < wd + 5e-3).count() as u32,
+                    )
+                } else {
+                    let r = want.iter().filter(|d| d.is_finite()).count() as u32;
+                    (r, r)
+                };
+                anyhow::ensure!(
+                    (lo..=hi).contains(got),
+                    "query {q:?}: rank {got} outside oracle bracket [{lo}, {hi}]"
+                );
+            }
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::amt::NetConfig;
+    use crate::graph::{generators, PartitionKind};
+
+    fn det() -> SimConfig {
+        SimConfig::deterministic(NetConfig::default())
+    }
+
+    fn serve_graph(scale: u32, seed: u64) -> Csr {
+        generators::with_symmetric_random_weights(
+            &generators::kron(scale, 5, seed),
+            1.0,
+            10.0,
+            seed + 1,
+        )
+    }
+
+    fn small_params() -> ServeParams {
+        ServeParams { queries: 64, landmarks: 4, cache: 8, batch: 4, oracle: true, seed: 7 }
+    }
+
+    #[test]
+    fn serve_answers_validate_and_batch() {
+        let g = serve_graph(7, 3);
+        let d = DistGraph::block(&g, 4);
+        let res = run(&g, &d, &small_params(), FlushPolicy::Adaptive, det());
+        validate(&g, &res.queries, &res.answers).unwrap();
+        let q = res.report.query;
+        assert_eq!(q.queries, 64);
+        assert!(q.oracle_hits + q.cache_hits > 0, "no covered queries: {q:?}");
+        assert!(q.waves < q.queries, "no batching win: {q:?}");
+        assert!(q.qps > 0.0 && q.p50_us > 0.0 && q.p99_us >= q.p50_us, "{q:?}");
+        assert!(res.report.wall_us > 0.0);
+    }
+
+    #[test]
+    fn serve_works_under_vertex_cut() {
+        // Regression (satellite 2): serve routes through the mirror-aware
+        // generic engines and must not inherit require_mirror_free.
+        let g = serve_graph(7, 13);
+        let d = DistGraph::build_with(&g, PartitionKind::VertexCut.build(&g, 4));
+        assert!(d.has_mirrors(), "kron@4 vertex cut should mirror");
+        let res = run(&g, &d, &small_params(), FlushPolicy::Adaptive, det());
+        validate(&g, &res.queries, &res.answers).unwrap();
+        assert!(res.report.query.waves > 0);
+    }
+
+    #[test]
+    fn oracle_and_cache_never_change_answers() {
+        // Covered-vs-uncovered parity: the same stream answered with the
+        // oracle and cache on, off, and shrunk must agree exactly.
+        let g = serve_graph(6, 29);
+        let d = DistGraph::block(&g, 2);
+        let base = small_params();
+        let res_on = run(&g, &d, &base, FlushPolicy::Adaptive, det());
+        for params in [
+            ServeParams { oracle: false, ..base.clone() },
+            ServeParams { cache: 0, ..base.clone() },
+            ServeParams { oracle: false, cache: 0, batch: 1, ..base.clone() },
+        ] {
+            let res = run(&g, &d, &params, FlushPolicy::Adaptive, det());
+            assert_eq!(res.queries, res_on.queries);
+            for (i, (a, b)) in res_on.answers.iter().zip(&res.answers).enumerate() {
+                assert!(
+                    answers_close(a, b),
+                    "query {i} {:?}: {a:?} vs {b:?} ({params:?})",
+                    res.queries[i]
+                );
+            }
+        }
+    }
+
+    fn close_f(a: f32, b: f32) -> bool {
+        (a.is_infinite() && b.is_infinite()) || (a - b).abs() < 1e-3
+    }
+
+    fn answers_close(a: &Answer, b: &Answer) -> bool {
+        match (a, b) {
+            (Answer::Distance(x), Answer::Distance(y)) => close_f(*x, *y),
+            // Paths may legitimately differ between equally-short routes;
+            // parity is on the reported distance (validate() checks the
+            // walks themselves).
+            (Answer::Path { dist: x, path: px }, Answer::Path { dist: y, path: py }) => {
+                close_f(*x, *y) && px.is_some() == py.is_some()
+            }
+            (Answer::Rank(x), Answer::Rank(y)) => x.abs_diff(*y) <= 2,
+            _ => false,
+        }
+    }
+
+    #[test]
+    fn cache_counts_repeat_sources() {
+        let g = serve_graph(6, 31);
+        let d = DistGraph::block(&g, 2);
+        // No oracle: every first-time source waves, repeats must hit the
+        // cache (the generator's hot pool guarantees repeats).
+        let params = ServeParams {
+            queries: 96,
+            landmarks: 0,
+            cache: 64,
+            batch: 4,
+            oracle: false,
+            seed: 5,
+        };
+        let res = run(&g, &d, &params, FlushPolicy::Adaptive, det());
+        validate(&g, &res.queries, &res.answers).unwrap();
+        let q = res.report.query;
+        assert_eq!(q.oracle_hits, 0);
+        assert!(q.cache_hits > 0, "{q:?}");
+        assert!(q.waves > 0 && q.waves < q.queries, "{q:?}");
+    }
+
+    #[test]
+    fn generated_stream_is_deterministic_and_skewed() {
+        let a = generate_queries(100, 200, 9);
+        let b = generate_queries(100, 200, 9);
+        assert_eq!(a, b);
+        assert_ne!(a, generate_queries(100, 200, 10));
+        let mut by_source: HashMap<VertexId, usize> = HashMap::new();
+        for q in &a {
+            *by_source.entry(q.s).or_default() += 1;
+        }
+        let max_repeat = by_source.values().max().unwrap();
+        assert!(*max_repeat > 5, "hot pool should repeat sources: {max_repeat}");
+        assert!(a.iter().any(|q| q.kind == QueryKind::Path));
+        assert!(a.iter().any(|q| q.kind == QueryKind::Rank));
+        assert!(a.iter().any(|q| q.kind == QueryKind::Distance));
+    }
+
+    #[test]
+    fn rank_of_counts_strictly_closer() {
+        let dist = [0.0f32, 2.0, 1.0, f32::INFINITY, 2.0];
+        assert_eq!(rank_of(&dist, 0), 0);
+        assert_eq!(rank_of(&dist, 2), 1); // only the source is closer
+        assert_eq!(rank_of(&dist, 1), 2); // source + v2; the tie at v4 is not
+        assert_eq!(rank_of(&dist, 3), 4); // unreachable ranks below all reached
+    }
+
+    #[test]
+    fn lru_evicts_oldest_and_refreshes_on_hit() {
+        let tree = |v: u32| {
+            Rc::new(SourceTree { dist: vec![v as f32], parents: vec![-1] })
+        };
+        let mut c = SourceCache::new(2);
+        c.insert(1, tree(1));
+        c.insert(2, tree(2));
+        assert!(c.get(1).is_some()); // refresh 1: now 2 is the LRU
+        c.insert(3, tree(3));
+        assert!(c.get(2).is_none(), "2 was evicted");
+        assert!(c.get(1).is_some() && c.get(3).is_some());
+        // Capacity 0 disables caching entirely.
+        let mut off = SourceCache::new(0);
+        off.insert(1, tree(1));
+        assert!(off.get(1).is_none());
+    }
+
+    #[test]
+    fn percentile_nearest_rank() {
+        assert_eq!(percentile(&[], 0.5), 0.0);
+        assert_eq!(percentile(&[7.0], 0.99), 7.0);
+        let v: Vec<f64> = (1..=100).map(|x| x as f64).collect();
+        assert_eq!(percentile(&v, 0.0), 1.0);
+        assert_eq!(percentile(&v, 0.5), 51.0);
+        assert_eq!(percentile(&v, 0.99), 99.0);
+        assert_eq!(percentile(&v, 1.0), 100.0);
+    }
+}

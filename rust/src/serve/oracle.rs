@@ -1,0 +1,249 @@
+//! Landmark oracle: precompute distance tables from `k` high-degree
+//! landmark vertices so repeated point-to-point queries become table
+//! lookups instead of SSSP runs.
+//!
+//! Landmarks are chosen by descending out-degree (hubs cover the most
+//! pairs on skewed graphs). Each landmark's table `d(L, ·)` is filled by
+//! the batched multi-source wave ([`super::wave`]), so the precompute
+//! itself is distributed, mirror-aware, and scheme-generic. The tables
+//! model the per-locality replicas a production deployment would hold —
+//! every locality can answer a covered query locally; the coordinator-held
+//! copy here stands in for those replicas.
+//!
+//! **Symmetric-metric contract:** triangle-inequality bounds and the
+//! `t`-is-a-landmark exact case read the tables backwards
+//! (`d(t, s) == d(s, t)`), which requires a symmetric metric — a
+//! symmetrized graph weighted by
+//! [`with_symmetric_random_weights`](crate::graph::generators::with_symmetric_random_weights).
+//! The serve coordinator enforces this; [`LandmarkOracle::bounds`]
+//! documents the dependency.
+//!
+//! For any pair `(s, t)` and landmark `L` (symmetric metric):
+//!
+//! * upper bound: `d(s, t) <= d(L, s) + d(L, t)`;
+//! * lower bound: `d(s, t) >= |d(L, s) - d(L, t)|`.
+//!
+//! The oracle answers *exactly* when `s == t`, when `s` or `t` is a
+//! landmark, or when the bounds collapse; everything else is a bound and
+//! the query goes to a wave.
+
+use crate::amt::{FlushPolicy, SimConfig, SimReport};
+use crate::graph::{Csr, DistGraph, VertexId};
+
+use super::wave;
+
+/// Tolerance under which collapsed bounds count as an exact answer. The
+/// serving contract checks answers against the sequential Dijkstra oracle
+/// at `1e-3`; collapsing at a 10× tighter threshold keeps bound-derived
+/// answers inside that envelope.
+const COLLAPSE_EPS: f32 = 1e-4;
+
+/// Precomputed landmark distance tables (and shortest-path trees, so a
+/// query *from* a landmark can answer path queries too).
+#[derive(Debug)]
+pub struct LandmarkOracle {
+    /// Landmark vertices, highest degree first.
+    pub landmarks: Vec<VertexId>,
+    /// `tables[i][v]` = distance from `landmarks[i]` to `v`.
+    pub tables: Vec<Vec<f32>>,
+    /// `parents[i]` = shortest-path tree rooted at `landmarks[i]`.
+    pub parents: Vec<Vec<i64>>,
+}
+
+impl LandmarkOracle {
+    /// Choose `k` landmarks by descending out-degree and fill their
+    /// distance tables with batched multi-source waves of width
+    /// `<= batch`. Returns the oracle plus the merged precompute report.
+    /// `k == 0` yields an empty oracle (every query is uncovered).
+    pub fn build(
+        g: &Csr,
+        dist_graph: &DistGraph,
+        k: usize,
+        batch: usize,
+        policy: FlushPolicy,
+        cfg: &SimConfig,
+    ) -> (LandmarkOracle, Option<SimReport>) {
+        let landmarks = pick_landmarks(g, k);
+        let mut oracle = LandmarkOracle {
+            landmarks: landmarks.clone(),
+            tables: Vec::with_capacity(landmarks.len()),
+            parents: Vec::with_capacity(landmarks.len()),
+        };
+        let mut report: Option<SimReport> = None;
+        for chunk in landmarks.chunks(batch.max(1)) {
+            let res = wave::run_wave(g, dist_graph, chunk, policy, cfg.clone());
+            oracle.tables.extend(res.dist);
+            oracle.parents.extend(res.parents);
+            match &mut report {
+                None => report = Some(res.report),
+                Some(r) => super::merge_reports(r, &res.report),
+            }
+        }
+        (oracle, report)
+    }
+
+    /// Index of `v` in the landmark list.
+    pub fn landmark_index(&self, v: VertexId) -> Option<usize> {
+        self.landmarks.iter().position(|&l| l == v)
+    }
+
+    /// Triangle-inequality `(lower, upper)` bounds on `d(s, t)`. Requires
+    /// the symmetric-metric contract (module docs). With no landmarks the
+    /// bounds are the vacuous `(0, +inf)`.
+    pub fn bounds(&self, s: VertexId, t: VertexId) -> (f32, f32) {
+        let mut lo = 0.0f32;
+        let mut hi = f32::INFINITY;
+        for table in &self.tables {
+            let (ds, dt) = (table[s as usize], table[t as usize]);
+            if ds.is_finite() && dt.is_finite() {
+                hi = hi.min(ds + dt);
+                lo = lo.max((ds - dt).abs());
+            } else if ds.is_finite() != dt.is_finite() {
+                // Exactly one endpoint reachable from L: s and t are in
+                // different components, distance is infinite.
+                return (f32::INFINITY, f32::INFINITY);
+            }
+        }
+        (lo, hi)
+    }
+
+    /// Exact distance if this pair is covered: `s == t`, `s` or `t` is a
+    /// landmark (symmetric metric for the latter), or the triangle bounds
+    /// collapse. `None` means the query must go to a wave.
+    pub fn exact_distance(&self, s: VertexId, t: VertexId) -> Option<f32> {
+        if s == t {
+            return Some(0.0);
+        }
+        if let Some(i) = self.landmark_index(s) {
+            return Some(self.tables[i][t as usize]);
+        }
+        if let Some(i) = self.landmark_index(t) {
+            return Some(self.tables[i][s as usize]);
+        }
+        let (lo, hi) = self.bounds(s, t);
+        if hi.is_infinite() && lo.is_infinite() {
+            return Some(f32::INFINITY); // proven disconnected
+        }
+        (hi - lo <= COLLAPSE_EPS).then_some(hi)
+    }
+
+    /// Exact path if `s` is a landmark (its shortest-path tree is stored)
+    /// or `s == t`. `None` means uncovered — path queries *to* a landmark
+    /// still need a wave (the stored tree is rooted at the landmark and
+    /// reversing it assumes edge-level symmetry the serving layer does not
+    /// want to rely on for paths).
+    pub fn exact_path(&self, s: VertexId, t: VertexId) -> Option<Option<Vec<VertexId>>> {
+        if s == t {
+            return Some(Some(vec![s]));
+        }
+        let i = self.landmark_index(s)?;
+        Some(crate::algorithms::sssp::recover_path(&self.parents[i], s, t))
+    }
+}
+
+/// Top-`k` vertices by descending out-degree (ties toward the smaller id,
+/// so the choice is deterministic). `k` is clamped to `n`.
+pub fn pick_landmarks(g: &Csr, k: usize) -> Vec<VertexId> {
+    let n = g.n();
+    let mut order: Vec<VertexId> = (0..n as VertexId).collect();
+    order.sort_by_key(|&v| (std::cmp::Reverse(g.degree(v)), v));
+    order.truncate(k.min(n));
+    order
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algorithms::sssp;
+    use crate::amt::NetConfig;
+    use crate::graph::{generators, PartitionKind};
+
+    fn det() -> SimConfig {
+        SimConfig::deterministic(NetConfig::default())
+    }
+
+    fn serve_graph(scale: u32, seed: u64) -> Csr {
+        generators::with_symmetric_random_weights(
+            &generators::kron(scale, 5, seed),
+            1.0,
+            10.0,
+            seed + 1,
+        )
+    }
+
+    #[test]
+    fn landmarks_are_high_degree_and_deterministic() {
+        let g = serve_graph(6, 7);
+        let lm = pick_landmarks(&g, 4);
+        assert_eq!(lm.len(), 4);
+        assert_eq!(lm, pick_landmarks(&g, 4));
+        let min_picked = lm.iter().map(|&v| g.degree(v)).min().unwrap();
+        let max_any = (0..g.n() as VertexId)
+            .filter(|v| !lm.contains(v))
+            .map(|v| g.degree(v))
+            .max()
+            .unwrap();
+        assert!(min_picked >= max_any, "picked {min_picked} < unpicked {max_any}");
+        // k is clamped.
+        assert_eq!(pick_landmarks(&g, g.n() + 10).len(), g.n());
+        assert!(pick_landmarks(&g, 0).is_empty());
+    }
+
+    #[test]
+    fn tables_match_dijkstra_and_bounds_sandwich_truth() {
+        let g = serve_graph(6, 15);
+        let d = DistGraph::block(&g, 4);
+        let (oracle, report) =
+            LandmarkOracle::build(&g, &d, 4, 2, FlushPolicy::Adaptive, &det());
+        assert!(report.is_some());
+        for (i, &l) in oracle.landmarks.iter().enumerate() {
+            let want = sssp::dijkstra(&g, l);
+            for (v, (&got, &exp)) in oracle.tables[i].iter().zip(&want).enumerate() {
+                let ok = (got.is_infinite() && exp.is_infinite()) || (got - exp).abs() < 1e-3;
+                assert!(ok, "landmark {l} v={v}: {got} vs {exp}");
+            }
+        }
+        // Bounds sandwich the true distance for random pairs.
+        let mut rng = generators::SplitMix64::new(99);
+        for _ in 0..50 {
+            let s = rng.below(g.n() as u64) as VertexId;
+            let t = rng.below(g.n() as u64) as VertexId;
+            let truth = sssp::dijkstra(&g, s)[t as usize];
+            let (lo, hi) = oracle.bounds(s, t);
+            if truth.is_finite() {
+                assert!(lo <= truth + 1e-2, "({s},{t}): lower {lo} > truth {truth}");
+                assert!(hi >= truth - 1e-2, "({s},{t}): upper {hi} < truth {truth}");
+            }
+            if let Some(exact) = oracle.exact_distance(s, t) {
+                let ok = (exact.is_infinite() && truth.is_infinite())
+                    || (exact - truth).abs() < 1e-3;
+                assert!(ok, "({s},{t}): exact {exact} vs truth {truth}");
+            }
+        }
+    }
+
+    #[test]
+    fn landmark_queries_are_covered_under_vertex_cut() {
+        let g = serve_graph(6, 23);
+        let d = DistGraph::build_with(&g, PartitionKind::VertexCut.build(&g, 4));
+        let (oracle, _) = LandmarkOracle::build(&g, &d, 3, 8, FlushPolicy::Adaptive, &det());
+        let l = oracle.landmarks[0];
+        assert!(oracle.exact_distance(l, 5).is_some());
+        assert!(oracle.exact_distance(5, l).is_some(), "t-landmark uses symmetry");
+        assert!(oracle.exact_path(l, 5).is_some());
+        assert!(oracle.exact_path(5, l).is_none(), "paths to a landmark are uncovered");
+        assert_eq!(oracle.exact_distance(9, 9), Some(0.0));
+    }
+
+    #[test]
+    fn empty_oracle_covers_only_trivial_pairs() {
+        let g = serve_graph(6, 41);
+        let d = DistGraph::block(&g, 2);
+        let (oracle, report) =
+            LandmarkOracle::build(&g, &d, 0, 4, FlushPolicy::Adaptive, &det());
+        assert!(report.is_none());
+        assert_eq!(oracle.bounds(1, 2), (0.0, f32::INFINITY));
+        assert_eq!(oracle.exact_distance(3, 3), Some(0.0));
+        assert_eq!(oracle.exact_distance(1, 2), None);
+    }
+}

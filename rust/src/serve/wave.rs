@@ -1,0 +1,246 @@
+//! Batched multi-source SSSP: one engine run relaxes a whole batch of
+//! sources at once. States and messages are fixed-width vectors of
+//! [`DistParent`] — one lane per source — folded by elementwise
+//! distance-min, which stays associative, commutative, and idempotent, so
+//! the program is an ordinary monotone [`Mode::Converge`] program and runs
+//! on the generic mirror-aware async engine under every partition scheme
+//! (vertex cuts included; the serve layer never calls
+//! `engine::require_mirror_free`).
+//!
+//! This is the query-serving amortization lever: `B` concurrent uncovered
+//! queries share one wavefront (one flood of width-`B` messages through
+//! the aggregator) instead of `B` sequential SSSP runs.
+
+use crate::algorithms::sssp::{self, DistParent};
+use crate::amt::{FlushPolicy, SimConfig, SimReport};
+use crate::engine::{self, Mode, ProgramInfo, VertexProgram};
+use crate::graph::{Csr, DistGraph, VertexId};
+
+/// A width-`B` vector of `(distance, parent)` lanes. The empty vector is
+/// the fold identity (`Default` backs the aggregator's retired-slot
+/// storage and is never read as a real value).
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct WaveMsg(pub Vec<DistParent>);
+
+impl WaveMsg {
+    fn fold(&mut self, new: &WaveMsg) -> bool {
+        if new.0.is_empty() {
+            return false;
+        }
+        if self.0.is_empty() {
+            self.0 = new.0.clone();
+            return true;
+        }
+        debug_assert_eq!(self.0.len(), new.0.len(), "wave width mismatch");
+        let mut changed = false;
+        for (acc, n) in self.0.iter_mut().zip(&new.0) {
+            if n.beats(acc) {
+                *acc = *n;
+                changed = true;
+            }
+        }
+        changed
+    }
+}
+
+/// Multi-source label-correcting SSSP over a batch of sources.
+#[derive(Debug, Clone)]
+pub struct MultiSourceSssp {
+    /// The batch; lane `i` computes the shortest-path tree from
+    /// `sources[i]`.
+    pub sources: Vec<VertexId>,
+}
+
+impl VertexProgram for MultiSourceSssp {
+    type State = WaveMsg;
+    type Msg = WaveMsg;
+
+    fn info(&self) -> ProgramInfo {
+        ProgramInfo {
+            name: "sssp-wave",
+            mode: Mode::Converge,
+            needs_weights: true,
+            // A vector of distances is not a single path metric, so the
+            // ordered bucket schedule does not apply; the async wavefront
+            // orders on the minimum lane instead.
+            ordered: false,
+            item_bytes: 4 + 12 * self.sources.len(),
+        }
+    }
+
+    fn init(&self, _v: VertexId, _out_degree: u32) -> WaveMsg {
+        WaveMsg(vec![DistParent::default(); self.sources.len()])
+    }
+
+    fn seed(&self, v: VertexId) -> Option<WaveMsg> {
+        if !self.sources.contains(&v) {
+            return None;
+        }
+        let mut lanes = vec![DistParent::default(); self.sources.len()];
+        for (i, &s) in self.sources.iter().enumerate() {
+            if s == v {
+                lanes[i] = DistParent { dist: 0.0, parent: v as i64 };
+            }
+        }
+        Some(WaveMsg(lanes))
+    }
+
+    fn combine(acc: &mut WaveMsg, new: WaveMsg) {
+        acc.fold(&new);
+    }
+
+    fn beats(&self, msg: &WaveMsg, state: &WaveMsg) -> bool {
+        if msg.0.is_empty() {
+            return false;
+        }
+        if state.0.is_empty() {
+            return true;
+        }
+        msg.0.iter().zip(&state.0).any(|(m, s)| m.beats(s))
+    }
+
+    fn apply(&self, state: &mut WaveMsg, msg: WaveMsg) -> bool {
+        state.fold(&msg)
+    }
+
+    fn signal(&self, state: &WaveMsg) -> WaveMsg {
+        state.clone()
+    }
+
+    fn along_edge(&self, u: VertexId, sig: &WaveMsg, w: f32) -> WaveMsg {
+        WaveMsg(
+            sig.0
+                .iter()
+                .map(|dp| {
+                    if dp.dist.is_finite() {
+                        DistParent { dist: dp.dist + w, parent: u as i64 }
+                    } else {
+                        DistParent::default()
+                    }
+                })
+                .collect(),
+        )
+    }
+
+    fn priority(&self, msg: &WaveMsg) -> f32 {
+        // The nearest lane drives the wavefront order.
+        msg.0.iter().map(|dp| dp.dist).fold(f32::INFINITY, f32::min).min(1e30)
+    }
+}
+
+/// One multi-source wave: per-lane shortest-path trees.
+#[derive(Debug)]
+pub struct WaveResult {
+    /// `dist[i][v]` = distance from `sources[i]` to `v`.
+    pub dist: Vec<Vec<f32>>,
+    /// `parents[i]` = shortest-path tree of `sources[i]` (walk with
+    /// [`sssp::recover_path`]).
+    pub parents: Vec<Vec<i64>>,
+    /// Runtime report of the wave.
+    pub report: SimReport,
+}
+
+/// Run one batched multi-source SSSP wave on the generic async engine.
+pub fn run_wave(
+    g: &Csr,
+    dist_graph: &DistGraph,
+    sources: &[VertexId],
+    policy: FlushPolicy,
+    cfg: SimConfig,
+) -> WaveResult {
+    assert!(!sources.is_empty(), "a wave needs at least one source");
+    sssp::check_graph_matches(g, dist_graph);
+    let prog = MultiSourceSssp { sources: sources.to_vec() };
+    let run = engine::run_async(prog, dist_graph, policy, cfg);
+    let b = sources.len();
+    let n = run.states.len();
+    let mut dist = vec![vec![f32::INFINITY; n]; b];
+    let mut parents = vec![vec![-1i64; n]; b];
+    for (v, lanes) in run.states.iter().enumerate() {
+        debug_assert_eq!(lanes.0.len(), b);
+        for (i, dp) in lanes.0.iter().enumerate() {
+            dist[i][v] = dp.dist;
+            parents[i][v] = dp.parent;
+        }
+    }
+    WaveResult { dist, parents, report: run.report }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::amt::NetConfig;
+    use crate::graph::{generators, PartitionKind};
+
+    fn det() -> SimConfig {
+        SimConfig::deterministic(NetConfig::default())
+    }
+
+    fn close(a: &[f32], b: &[f32]) -> bool {
+        a.iter()
+            .zip(b)
+            .all(|(x, y)| (x.is_infinite() && y.is_infinite()) || (x - y).abs() < 1e-3)
+    }
+
+    #[test]
+    fn wave_lanes_match_per_source_dijkstra() {
+        let g = generators::with_symmetric_random_weights(
+            &generators::urand(6, 4, 5),
+            1.0,
+            10.0,
+            6,
+        );
+        let sources = [0u32, 7, 13, 21];
+        let d = DistGraph::block(&g, 4);
+        let res = run_wave(&g, &d, &sources, FlushPolicy::Adaptive, det());
+        for (i, &s) in sources.iter().enumerate() {
+            let want = sssp::dijkstra(&g, s);
+            assert!(close(&res.dist[i], &want), "lane {i} (source {s})");
+        }
+    }
+
+    #[test]
+    fn wave_works_under_every_partition_scheme() {
+        let g = generators::with_symmetric_random_weights(
+            &generators::kron(6, 5, 33),
+            1.0,
+            10.0,
+            34,
+        );
+        let sources = [1u32, 2, 3];
+        let wants: Vec<Vec<f32>> = sources.iter().map(|&s| sssp::dijkstra(&g, s)).collect();
+        for kind in PartitionKind::all() {
+            for p in [2u32, 4, 8] {
+                let d = DistGraph::build_with(&g, kind.build(&g, p));
+                let res = run_wave(&g, &d, &sources, FlushPolicy::Adaptive, det());
+                for (i, want) in wants.iter().enumerate() {
+                    assert!(close(&res.dist[i], want), "{kind:?} p={p} lane {i}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn wave_paths_are_edge_valid() {
+        let g = generators::with_symmetric_random_weights(
+            &generators::urand(6, 4, 91),
+            1.0,
+            10.0,
+            92,
+        );
+        let sources = [3u32, 40];
+        let d = DistGraph::build_with(&g, PartitionKind::Hash.build(&g, 4));
+        let res = run_wave(&g, &d, &sources, FlushPolicy::Items(16), det());
+        for (i, &s) in sources.iter().enumerate() {
+            for v in 0..g.n() as VertexId {
+                if !res.dist[i][v as usize].is_finite() {
+                    continue;
+                }
+                let path = sssp::recover_path(&res.parents[i], s, v)
+                    .unwrap_or_else(|| panic!("lane {i}: no path to {v}"));
+                let w = sssp::path_weight(&g, &path).expect("edge-valid");
+                assert!((w - res.dist[i][v as usize]).abs() < 1e-3, "lane {i} v={v}");
+            }
+        }
+    }
+}

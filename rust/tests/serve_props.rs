@@ -1,0 +1,218 @@
+//! Query-serving property suite.
+//!
+//! The contract under test: the serve layer's three amortizations —
+//! landmark oracle, hot-source LRU cache, batched multi-source waves —
+//! are pure *latency* knobs. Every answered distance must equal the
+//! sequential Dijkstra oracle, every recovered path must be an edge-valid
+//! walk whose weight sum equals the reported distance, and toggling the
+//! oracle or cache may move hits and wave counts but never change an
+//! answer (covered-vs-uncovered parity). Properties sweep all 4 partition
+//! schemes × {1, 2, 4, 8} localities × random flush policies; the
+//! benchmark pin runs the acceptance shape (kron10 @ 8 localities, 1000
+//! queries) on both the simulator and the threaded runtime, including the
+//! vertex-cut regression (serve never calls `require_mirror_free`, so a
+//! mirrored cut must work).
+//!
+//! Environment knobs (see `testing::PropConfig::from_env`):
+//! `NWGRAPH_PROP_SEED` pins the base seed (the CI seed matrix);
+//! `NWGRAPH_PROP_CASES` shrinks case counts for fast local runs.
+
+use nwgraph_hpx::amt::{FlushPolicy, NetConfig, RuntimeKind, SimConfig};
+use nwgraph_hpx::graph::generators::{self, SplitMix64};
+use nwgraph_hpx::graph::{Csr, DistGraph, PartitionKind};
+use nwgraph_hpx::serve::{self, Answer, ServeParams};
+use nwgraph_hpx::testing::{forall, gen, PropConfig};
+
+fn det() -> SimConfig {
+    SimConfig::deterministic(NetConfig::default())
+}
+
+fn cfg(cases: u32) -> PropConfig {
+    PropConfig::from_env(cases, 0x5E27E5, 40)
+}
+
+const LOCALITIES: [u32; 4] = [1, 2, 4, 8];
+
+/// Same policy corners as the engine suite: the serving waves must answer
+/// correctly whatever flush policy drives the aggregator underneath.
+fn gen_policy(rng: &mut SplitMix64) -> FlushPolicy {
+    match rng.below(7) {
+        0 => FlushPolicy::Unbatched,
+        1 => FlushPolicy::Items(1 + rng.below(64) as usize),
+        2 => FlushPolicy::Bytes(8 + rng.below(1024) as usize),
+        3 => FlushPolicy::Adaptive,
+        4 => FlushPolicy::TimeWindow(rng.below(30)),
+        5 => FlushPolicy::LatencyAdaptive,
+        _ => FlushPolicy::Manual,
+    }
+}
+
+/// Random undirected graph with the pair-keyed symmetric metric the
+/// oracle's triangle bounds require.
+fn gen_metric_graph(rng: &mut SplitMix64, size: usize) -> Csr {
+    let g = gen::ugraph(rng, size);
+    generators::with_symmetric_random_weights(&g, 0.5, 9.5, rng.next_u64())
+}
+
+fn small_params(seed: u64) -> ServeParams {
+    ServeParams { queries: 48, landmarks: 4, cache: 8, batch: 4, oracle: true, seed }
+}
+
+#[test]
+fn prop_serve_answers_match_dijkstra_on_every_scheme() {
+    forall(
+        &cfg(6),
+        |rng, size| {
+            let gw = gen_metric_graph(rng, size);
+            // Occasionally route the waves through the threaded runtime —
+            // answers must not depend on the substrate either.
+            let rt =
+                if rng.below(4) == 0 { RuntimeKind::Threads } else { RuntimeKind::Sim };
+            (gw, gen_policy(rng), rng.next_u64(), rt)
+        },
+        |(gw, policy, seed, rt)| {
+            for kind in PartitionKind::all() {
+                for p in LOCALITIES {
+                    let dist = DistGraph::build_with(gw, kind.build(gw, p));
+                    let scfg = SimConfig { runtime: *rt, ..det() };
+                    let res = serve::run(gw, &dist, &small_params(*seed), *policy, scfg);
+                    serve::validate(gw, &res.queries, &res.answers).map_err(|e| {
+                        format!("{kind:?} p={p} {policy:?} {rt:?}: {e}")
+                    })?;
+                    let q = res.report.query;
+                    if q.queries != 48 || q.waves >= q.queries {
+                        return Err(format!("{kind:?} p={p}: no batching win: {q:?}"));
+                    }
+                    if q.qps <= 0.0 || q.p50_us <= 0.0 || q.p99_us < q.p50_us {
+                        return Err(format!("{kind:?} p={p}: bad latency stats: {q:?}"));
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Answers may differ only within the float envelope the engines already
+/// promise (paths may legitimately route differently between equally
+/// short walks; `serve::validate` checks the walks themselves).
+fn answers_close(a: &Answer, b: &Answer) -> bool {
+    let close_f = |x: f32, y: f32| {
+        (x.is_infinite() && y.is_infinite()) || (x - y).abs() < 1e-3
+    };
+    match (a, b) {
+        (Answer::Distance(x), Answer::Distance(y)) => close_f(*x, *y),
+        (Answer::Path { dist: x, path: px }, Answer::Path { dist: y, path: py }) => {
+            close_f(*x, *y) && px.is_some() == py.is_some()
+        }
+        (Answer::Rank(x), Answer::Rank(y)) => x.abs_diff(*y) <= 2,
+        _ => false,
+    }
+}
+
+#[test]
+fn prop_oracle_and_cache_hits_never_change_answers() {
+    forall(
+        &cfg(8),
+        |rng, size| {
+            let gw = gen_metric_graph(rng, size);
+            let kind = PartitionKind::all()[rng.below(4) as usize];
+            let p = LOCALITIES[rng.below(4) as usize];
+            (gw, kind, p, gen_policy(rng), rng.next_u64())
+        },
+        |(gw, kind, p, policy, seed)| {
+            let dist = DistGraph::build_with(gw, kind.build(gw, *p));
+            let base = small_params(*seed);
+            let reference = serve::run(gw, &dist, &base, *policy, det());
+            serve::validate(gw, &reference.queries, &reference.answers)
+                .map_err(|e| format!("reference {kind:?} p={p}: {e}"))?;
+            for variant in [
+                ServeParams { oracle: false, ..base.clone() },
+                ServeParams { cache: 0, ..base.clone() },
+                ServeParams { oracle: false, cache: 0, batch: 1, ..base.clone() },
+                ServeParams { landmarks: 1, cache: 2, ..base.clone() },
+            ] {
+                let res = serve::run(gw, &dist, &variant, *policy, det());
+                if res.queries != reference.queries {
+                    return Err(format!("{kind:?} p={p}: query streams diverge"));
+                }
+                for (i, (a, b)) in
+                    reference.answers.iter().zip(&res.answers).enumerate()
+                {
+                    if !answers_close(a, b) {
+                        return Err(format!(
+                            "{kind:?} p={p} {policy:?} query {i} {:?}: {a:?} vs {b:?} \
+                             under {variant:?}",
+                            res.queries[i]
+                        ));
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn serve_acceptance_on_benchmark_kron10() {
+    // The PR acceptance pin: 1000 queries on kron10 @ 8 localities answer
+    // correctly on both substrates with real covered traffic (oracle +
+    // cache hits > 0), a batching win (waves < queries), and a populated
+    // wall-clock latency distribution — on block *and* on a vertex cut
+    // that really mirrors (the regression for inheriting
+    // `require_mirror_free`, which serve must never call).
+    let seed = cfg(1).seed; // honors NWGRAPH_PROP_SEED via from_env
+    let g = generators::kron(10, 8, seed);
+    let gw = generators::with_symmetric_random_weights(&g, 1.0, 10.0, seed + 1);
+    let params = ServeParams {
+        queries: 1000,
+        landmarks: 8,
+        cache: 32,
+        batch: 16,
+        oracle: true,
+        seed: seed + 2,
+    };
+    for kind in [PartitionKind::Block, PartitionKind::VertexCut] {
+        let dist = DistGraph::build_with(&gw, kind.build(&gw, 8));
+        if kind == PartitionKind::VertexCut {
+            assert!(dist.has_mirrors(), "kron10@8 vertex cut should mirror");
+        }
+        for rt in [RuntimeKind::Sim, RuntimeKind::Threads] {
+            let scfg = SimConfig { runtime: rt, ..det() };
+            let res = serve::run(&gw, &dist, &params, FlushPolicy::Adaptive, scfg);
+            serve::validate(&gw, &res.queries, &res.answers)
+                .unwrap_or_else(|e| panic!("{kind:?} {rt:?}: {e}"));
+            let q = res.report.query;
+            assert_eq!(q.queries, 1000, "{kind:?} {rt:?}");
+            assert!(q.oracle_hits + q.cache_hits > 0, "{kind:?} {rt:?}: no hits: {q:?}");
+            assert!(q.cache_hits > 0, "{kind:?} {rt:?}: hot pool never hit: {q:?}");
+            assert!(q.waves > 0 && q.waves < q.queries, "{kind:?} {rt:?}: {q:?}");
+            assert!(
+                q.qps > 0.0 && q.p50_us > 0.0 && q.p99_us >= q.p50_us,
+                "{kind:?} {rt:?}: {q:?}"
+            );
+            assert!(res.report.wall_us > 0.0, "{kind:?} {rt:?}");
+        }
+    }
+}
+
+#[test]
+fn serve_report_merges_wave_traffic() {
+    // The serve report is the *sum* of its engine runs: a run with waves
+    // must show aggregator and interconnect traffic, and the query block
+    // must be stamped exactly once (queries == stream length).
+    let seed = cfg(1).seed;
+    let g = generators::kron(8, 6, seed);
+    let gw = generators::with_symmetric_random_weights(&g, 1.0, 10.0, seed + 1);
+    let dist = DistGraph::block(&gw, 4);
+    let res = serve::run(&gw, &dist, &small_params(seed + 2), FlushPolicy::Adaptive, det());
+    serve::validate(&gw, &res.queries, &res.answers).unwrap();
+    let r = &res.report;
+    assert!(r.query.waves > 0);
+    assert!(r.net.messages > 0, "waves produced no interconnect traffic");
+    assert!(r.events > 0);
+    assert!(r.makespan_us > 0.0);
+    assert_eq!(r.busy_us.len(), 4);
+    assert_eq!(r.query.queries as usize, res.queries.len());
+    assert!(r.partition.replication_factor >= 1.0);
+}
