@@ -28,6 +28,12 @@
 //!   hot-source LRU cache × wave batch width over {sim, threads}, every
 //!   answer set validated against sequential Dijkstra (hits and waves may
 //!   move, answers may not). Columns: hits, waves, qps, p50/p99 latency.
+//! * **A9** — memory-limit scale sweep: streamed kron ingestion (the
+//!   whole-graph CSR is never materialized) × {plain, compressed} shard
+//!   storage × {block, vertex_cut} at 8 localities, reporting bytes/edge,
+//!   per-locality peak builder bytes, build time, and bfs/pagerank/sssp
+//!   MTEPS, with compressed-vs-plain answer parity asserted per cell.
+//!   `BENCH_LARGE=1` extends the sweep to kron18.
 //!
 //! `cargo bench --bench ablations`
 
@@ -128,4 +134,9 @@ fn main() {
     // for the serve layer (oracle/cache hits > 0, waves < queries, on
     // both substrates).
     print!("{}", experiment::ablation_query_serving(&cfg6).expect("A8 failed").render());
+
+    // A9: memory-limit scale sweep — the acceptance point for compressed
+    // shard storage and streaming ingestion (BENCH_LARGE=1 adds kron18).
+    let large = std::env::var("BENCH_LARGE").map(|v| v == "1").unwrap_or(false);
+    print!("{}", experiment::ablation_scale_sweep(&cfg6, large).expect("A9 failed").render());
 }

@@ -165,7 +165,7 @@ impl DirOptBfsActor {
         let n_owned = shard.n_local();
         for &lu in &frontier {
             let u = shard.owned_ids[lu as usize];
-            for &t in shard.out_neighbors_local(lu as usize) {
+            for t in shard.row_locals(lu as usize) {
                 let t = t as usize;
                 if t < n_owned {
                     if self.set_parent(shard.owned_ids[t], u) {
@@ -201,7 +201,7 @@ impl DirOptBfsActor {
                 continue;
             }
             let v = self.shard.global_id(l);
-            for &u in self.shard.in_neighbors(l) {
+            for u in self.shard.in_neighbors_iter(l) {
                 let (w, b) = (u as usize / 64, u as usize % 64);
                 if self.global_frontier_bitmap[w] & (1 << b) != 0 {
                     if self.set_parent(v, u) {
@@ -369,6 +369,7 @@ pub fn run_with_params(
         .collect();
     let (actors, mut report) = crate::amt::run_actors(&cfg, actors);
     report.partition = dist.partition_stats();
+    report.mem = dist.mem_stats();
     let td = actors.iter().map(|a| a.td_rounds).max().unwrap_or(0);
     let bu = actors.iter().map(|a| a.bu_rounds).max().unwrap_or(0);
     (BfsResult { parents: parents.to_vec(), report }, td, bu)

@@ -118,6 +118,7 @@ pub(crate) fn collect<'a>(
     }
     let mut report = report;
     report.partition = dist.partition_stats();
+    report.mem = dist.mem_stats();
     PrResult { ranks, deltas, report }
 }
 

@@ -108,6 +108,80 @@ pub fn run_delta_with(
     to_result(engine::run_delta(SsspProgram { source }, dist_graph, delta, policy, cfg))
 }
 
+/// Asynchronous label-correcting SSSP straight from the shards — no
+/// whole-graph [`Csr`] required. This is the streaming-ingestion entry
+/// point ([`graph::stream`](crate::graph::stream) never materializes the
+/// global graph); the `g`-taking runners exist for callers that also hold
+/// the oracle graph and want the build-mismatch sanity check.
+pub fn run_async_dist(dist_graph: &DistGraph, source: VertexId, cfg: SimConfig) -> SsspResult {
+    run_async_dist_with(dist_graph, source, FlushPolicy::Adaptive, cfg)
+}
+
+/// [`run_async_dist`] with an explicit flush policy.
+pub fn run_async_dist_with(
+    dist_graph: &DistGraph,
+    source: VertexId,
+    policy: FlushPolicy,
+    cfg: SimConfig,
+) -> SsspResult {
+    to_result(engine::run_async(SsspProgram { source }, dist_graph, policy, cfg))
+}
+
+/// BSP Bellman-Ford SSSP straight from the shards (see [`run_async_dist`]).
+pub fn run_bsp_dist(dist_graph: &DistGraph, source: VertexId, cfg: SimConfig) -> SsspResult {
+    to_result(engine::run_bsp(SsspProgram { source }, dist_graph, cfg))
+}
+
+/// Delta-stepping SSSP straight from the shards, with Δ from
+/// [`auto_delta_dist`] (see [`run_async_dist`]).
+pub fn run_delta_dist(dist_graph: &DistGraph, source: VertexId, cfg: SimConfig) -> SsspResult {
+    let delta = auto_delta_dist(dist_graph);
+    run_delta_dist_with(dist_graph, source, delta, FlushPolicy::Adaptive, cfg)
+}
+
+/// [`run_delta_dist`] with an explicit Δ and flush policy.
+pub fn run_delta_dist_with(
+    dist_graph: &DistGraph,
+    source: VertexId,
+    delta: f32,
+    policy: FlushPolicy,
+    cfg: SimConfig,
+) -> SsspResult {
+    to_result(engine::run_delta(SsspProgram { source }, dist_graph, delta, policy, cfg))
+}
+
+/// [`auto_delta`] computed from the shards instead of a whole-graph
+/// [`Csr`]. Every homed edge lives in exactly one shard row (owned or
+/// ghost), so the weight sum — and therefore Δ — matches the
+/// materialized heuristic on the same graph (identical up to the f64
+/// summation order; the f32-rounded mean agrees in practice).
+pub fn auto_delta_dist(dist_graph: &DistGraph) -> f32 {
+    let (n, m) = (dist_graph.n(), dist_graph.m());
+    if n == 0 || m == 0 {
+        return f32::INFINITY;
+    }
+    let avg_deg = m as f32 / n as f32;
+    let avg_w = if dist_graph.is_weighted() {
+        let mut sum = 0.0f64;
+        for s in &dist_graph.shards {
+            for row in 0..s.n_rows() {
+                for (_, w) in s.row_edges(row) {
+                    sum += w as f64;
+                }
+            }
+        }
+        (sum / m as f64) as f32
+    } else {
+        1.0
+    };
+    let d = avg_w / avg_deg;
+    if d.is_finite() && d > 0.0 {
+        d
+    } else {
+        f32::INFINITY
+    }
+}
+
 /// Δ auto-tuning heuristic: `Δ = w̄ / d̄` (mean edge weight over mean
 /// degree) — the Meyer–Sanders `Θ(1/d̄)` rule scaled to the weight
 /// distribution. On GAP-style weights bounded away from zero this
@@ -296,6 +370,24 @@ mod tests {
             // Every reached non-source vertex was improved at least once.
             let reached = res.dist.iter().filter(|d| d.is_finite()).count() as u64;
             assert!(w.useful_relaxations >= reached - 1, "{w:?}, reached {reached}");
+        }
+    }
+
+    #[test]
+    fn dist_only_entries_match_csr_checked_entries() {
+        let g = generators::with_random_weights(&generators::kron(6, 5, 81), 1.0, 10.0, 82);
+        let want = dijkstra(&g, 0);
+        for kind in PartitionKind::all() {
+            let d = DistGraph::build_with(&g, kind.build(&g, 4));
+            let ad = auto_delta_dist(&d);
+            assert!((ad - auto_delta(&g)).abs() < 1e-4, "{kind:?}: {ad}");
+            for res in [
+                run_async_dist(&d, 0, det()),
+                run_bsp_dist(&d, 0, det()),
+                run_delta_dist(&d, 0, det()),
+            ] {
+                assert!(close(&res.dist, &want), "{kind:?}");
+            }
         }
     }
 

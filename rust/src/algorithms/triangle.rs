@@ -91,11 +91,14 @@ struct TriActor {
     /// Populated on locality 0 after the run.
     total: u64,
     phase: u8,
+    /// Row-decode scratch (reused; plain storage never touches it).
+    scratch: Vec<VertexId>,
 }
 
 impl TriActor {
-    fn local_intersect(&self, v_local: usize, ws: &[VertexId]) -> u64 {
-        let nv = self.shard.out_neighbors(v_local);
+    fn local_intersect(&mut self, v_local: usize, ws: &[VertexId]) -> u64 {
+        let TriActor { shard, scratch, .. } = self;
+        let nv = shard.out_neighbors_into(v_local, scratch);
         let mut c = 0u64;
         for &w in ws {
             if nv.binary_search(&w).is_ok() {
@@ -114,9 +117,11 @@ impl Actor for TriActor {
         let p = ctx.n_localities() as usize;
         // wedge enumeration: u owned, v > u, w > v both adjacent to u.
         let mut outgoing: Vec<Vec<(VertexId, Vec<VertexId>)>> = vec![Vec::new(); p];
-        for lu in 0..self.shard.n_local() {
-            let u = self.shard.global_id(lu);
-            let nu = self.shard.out_neighbors(lu);
+        let shard = Arc::clone(&self.shard);
+        let mut row: Vec<VertexId> = Vec::new();
+        for lu in 0..shard.n_local() {
+            let u = shard.global_id(lu);
+            let nu = shard.out_neighbors_into(lu, &mut row);
             for (i, &v) in nu.iter().enumerate() {
                 if v <= u {
                     continue;
@@ -127,7 +132,8 @@ impl Actor for TriActor {
                 }
                 let dst = self.dist.owner(v);
                 if dst == here {
-                    self.local_count += self.local_intersect(self.shard.local_index(v), &ws);
+                    let c = self.local_intersect(shard.local_index(v), &ws);
+                    self.local_count += c;
                 } else {
                     outgoing[dst as usize].push((v, ws));
                 }
@@ -146,7 +152,9 @@ impl Actor for TriActor {
         match msg {
             TriMsg::Queries(qs) => {
                 for (v, ws) in qs {
-                    self.local_count += self.local_intersect(self.shard.local_index(v), &ws);
+                    let l = self.shard.local_index(v);
+                    let c = self.local_intersect(l, &ws);
+                    self.local_count += c;
                 }
             }
             TriMsg::Partial(c) => {
@@ -183,10 +191,12 @@ pub fn run(dist: &DistGraph, cfg: SimConfig) -> TriangleResult {
             local_count: 0,
             total: 0,
             phase: 0,
+            scratch: Vec::new(),
         })
         .collect();
     let (actors, mut report) = crate::amt::run_actors(&cfg, actors);
     report.partition = dist.partition_stats();
+    report.mem = dist.mem_stats();
     TriangleResult { triangles: actors[0].total, report }
 }
 

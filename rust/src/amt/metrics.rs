@@ -99,6 +99,46 @@ impl QueryStats {
     }
 }
 
+/// Graph-storage footprint of the distributed graph a run executed on:
+/// what the shards cost in memory and what building them cost. Stamped by
+/// algorithm drivers from
+/// [`DistGraph::mem_stats`](crate::graph::DistGraph::mem_stats) next to
+/// [`SimReport::partition`] — the scoreboard for the `storage` key and
+/// the A9 scale-sweep ablation.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct MemStats {
+    /// Adjacency encoding (`plain` / `compressed`).
+    pub storage: &'static str,
+    /// Sum of shard heap bytes across localities (replication-weighted:
+    /// mirrored rows count at every holder).
+    pub total_shard_bytes: usize,
+    /// Largest single shard, bytes — the per-locality memory bound.
+    pub max_shard_bytes: usize,
+    /// `total_shard_bytes / m` over the global directed edge count.
+    pub bytes_per_edge: f64,
+    /// Peak transient builder bytes. On the materialized path this counts
+    /// the whole-graph CSR plus the full routing buffers (all resident at
+    /// the leader at once); on the streaming path it is the largest
+    /// *per-locality* transient (ingest bucket + routed edges), the
+    /// quantity that bounds a distributed-memory build.
+    pub peak_builder_bytes: usize,
+    /// Wall-clock build time of the distributed graph, ms.
+    pub build_ms: f64,
+}
+
+impl Default for MemStats {
+    fn default() -> Self {
+        MemStats {
+            storage: "plain",
+            total_shard_bytes: 0,
+            max_shard_bytes: 0,
+            bytes_per_edge: 0.0,
+            peak_builder_bytes: 0,
+            build_ms: 0.0,
+        }
+    }
+}
+
 /// Outcome of one simulated run: the modeled makespan plus the quantities
 /// the paper's analysis hinges on (per-locality busy time → load balance,
 /// barrier count → synchronization cost, traffic → communication overhead).
@@ -144,6 +184,10 @@ pub struct SimReport {
     /// [`serve`](crate::serve) front-end stamps it like drivers stamp
     /// [`SimReport::work`].
     pub query: QueryStats,
+    /// Graph-storage footprint of the distributed graph (defaults to
+    /// zeros; drivers stamp it from
+    /// [`DistGraph::mem_stats`](crate::graph::DistGraph::mem_stats)).
+    pub mem: MemStats,
     /// Host wall-clock for the whole run, us. For the simulator this is
     /// the cost of executing the simulation itself; for the threaded
     /// runtime it *is* the end-to-end time (`makespan_us == wall_us`).
@@ -293,6 +337,7 @@ mod tests {
             work: WorkStats::default(),
             partition: PartitionStats::default(),
             query: QueryStats::default(),
+            mem: MemStats::default(),
             wall_us: 0.0,
             phase_wall_us: vec![],
         };
@@ -317,6 +362,7 @@ mod tests {
             work: WorkStats::default(),
             partition: PartitionStats::default(),
             query: QueryStats::default(),
+            mem: MemStats::default(),
             wall_us: 0.0,
             phase_wall_us: vec![],
         };

@@ -609,6 +609,7 @@ impl SimRuntime {
             work: super::metrics::WorkStats::default(),
             partition: super::metrics::PartitionStats::default(),
             query: super::metrics::QueryStats::default(),
+            mem: super::metrics::MemStats::default(),
             wall_us,
             phase_wall_us: super::metrics::phase_segments(&phase_marks, wall_us),
         };

@@ -199,6 +199,7 @@ impl ThreadedRuntime {
             work: super::metrics::WorkStats::default(),
             partition: super::metrics::PartitionStats::default(),
             query: super::metrics::QueryStats::default(),
+            mem: super::metrics::MemStats::default(),
             wall_us,
             phase_wall_us: phase_segments(&g.phase_marks, wall_us),
         };

@@ -21,7 +21,7 @@ pub struct Args {
 }
 
 /// Boolean switches that take no value.
-const SWITCHES: &[&str] = &["help", "aggregate", "quiet", "validate", "json"];
+const SWITCHES: &[&str] = &["help", "aggregate", "quiet", "validate", "json", "large"];
 
 impl Args {
     /// Parse from raw tokens (without argv[0]).
@@ -112,10 +112,14 @@ COMMANDS:
                 A7 adaptive coalescing: static-adaptive vs latency vs time
                 windows x {block, vertex_cut} with observed-latency columns,
                 A8 query serving: oracle x cache x batch over {sim, threads}
-                with hits/waves/qps/latency columns);
+                with hits/waves/qps/latency columns,
+                A9 memory-limit scale sweep: streamed kron10..16 x
+                {plain, compressed} storage x {block, vertex_cut} with
+                bytes/edge, peak builder bytes, build time, and MTEPS
+                columns — --large extends it to kron18);
                 --json additionally writes machine-readable tables to
                 bench_out/*.json (--out-dir overrides the directory);
-                --only a4,a7,a8 runs a prefix-matched subset
+                --only a4,a7,a8,a9 runs a prefix-matched subset
     info        print graph statistics for the configured generator
     help        show this message
 
@@ -130,6 +134,12 @@ CONFIG OVERRIDES (key=value):
                   items:0/bytes:0 are rejected),
     sssp_delta (bucket width; 0 = auto w/d heuristic, inf = Bellman-Ford),
     partition (block|edge_balanced|hash|vertex_cut),
+    storage (plain|compressed — shard adjacency encoding; compressed packs
+             each sorted row as delta-varint bytes, decoded through a
+             reusable scratch buffer on the hot path),
+    ingest (materialize|stream — stream builds shards in one pass from the
+            generator's edge stream and never materializes the whole-graph
+            CSR; serve requires materialize),
     runtime (sim|threads — discrete-event simulator with the modeled
              interconnect, or one OS thread per locality with real queueing;
              both run the same engines and report wall-clock columns),
@@ -146,7 +156,8 @@ FLAGS:
     --out-dir <dir>    output directory for `ablations --json` (default bench_out)
     --json             also write ablation tables as JSON (ablations only)
     --only <list>      comma list of ablation stems to run, prefix-matched
-                       (e.g. --only a4,a7,a8; ablations only)
+                       (e.g. --only a4,a7,a8,a9; ablations only)
+    --large            extend the A9 scale sweep to kron18 (ablations only)
     --validate         validate results against the sequential oracle
 ";
 
@@ -179,6 +190,13 @@ mod tests {
         assert!(a.switch("json"));
         assert_eq!(a.flag("out-dir"), Some("results"));
         assert_eq!(a.overrides, vec!["scale=8"]);
+    }
+
+    #[test]
+    fn large_is_a_switch() {
+        let a = Args::parse(&toks("ablations --large --only a9")).unwrap();
+        assert!(a.switch("large"));
+        assert_eq!(a.flag("only"), Some("a9"));
     }
 
     #[test]

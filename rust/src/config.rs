@@ -8,8 +8,41 @@ use std::collections::BTreeMap;
 use std::path::Path;
 
 use crate::amt::{FlushPolicy, NetConfig, RuntimeKind};
-use crate::graph::PartitionKind;
+use crate::graph::{PartitionKind, StorageKind};
 use crate::Result;
+
+/// How the distributed graph is built (config key `ingest`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum IngestMode {
+    /// Build the whole-graph [`Csr`](crate::graph::Csr) on the leader,
+    /// then shard it — the classic path, and required when a sequential
+    /// oracle validates the run.
+    #[default]
+    Materialize,
+    /// One-pass streaming ingestion ([`graph::stream`](crate::graph::stream)):
+    /// shards are built straight from the edge stream and the global
+    /// graph is never materialized.
+    Stream,
+}
+
+impl IngestMode {
+    /// Parse the config spelling (`materialize` | `stream`).
+    pub fn parse(s: &str) -> Option<IngestMode> {
+        match s {
+            "materialize" | "materialized" => Some(IngestMode::Materialize),
+            "stream" | "streamed" => Some(IngestMode::Stream),
+            _ => None,
+        }
+    }
+
+    /// Config spelling of this mode.
+    pub fn name(&self) -> &'static str {
+        match self {
+            IngestMode::Materialize => "materialize",
+            IngestMode::Stream => "stream",
+        }
+    }
+}
 
 /// Full experiment configuration.
 #[derive(Debug, Clone)]
@@ -47,6 +80,10 @@ pub struct Config {
     /// Vertex/edge partition scheme
     /// (`block|edge_balanced|hash|vertex_cut`).
     pub partition: PartitionKind,
+    /// Shard adjacency storage (`plain|compressed`).
+    pub storage: StorageKind,
+    /// Graph build path (`materialize|stream`).
+    pub ingest: IngestMode,
     /// Execution substrate: the discrete-event simulator (`sim`, default)
     /// or one OS thread per locality with real wall-clock (`threads`).
     pub runtime: RuntimeKind,
@@ -81,6 +118,8 @@ impl Default for Config {
             flush_policy: FlushPolicy::Adaptive,
             sssp_delta: 0.0,
             partition: PartitionKind::Block,
+            storage: StorageKind::Plain,
+            ingest: IngestMode::Materialize,
             runtime: RuntimeKind::Sim,
             artifact_dir: "artifacts".into(),
             serve_queries: 1000,
@@ -146,6 +185,16 @@ impl Config {
                         anyhow::anyhow!(
                             "bad partition `{v}` (want block|edge_balanced|hash|vertex_cut)"
                         )
+                    })?;
+                }
+                "storage" => {
+                    c.storage = StorageKind::parse(v).ok_or_else(|| {
+                        anyhow::anyhow!("bad storage `{v}` (want plain|compressed)")
+                    })?;
+                }
+                "ingest" => {
+                    c.ingest = IngestMode::parse(v).ok_or_else(|| {
+                        anyhow::anyhow!("bad ingest `{v}` (want materialize|stream)")
                     })?;
                 }
                 "runtime" => {
@@ -283,6 +332,30 @@ mod tests {
         kv.insert("partition".into(), "diagonal".into());
         assert!(Config::from_kv(&kv).is_err());
         assert_eq!(Config::default().partition, PartitionKind::Block);
+    }
+
+    #[test]
+    fn storage_and_ingest_parse_and_reject() {
+        let mut kv = BTreeMap::new();
+        kv.insert("storage".into(), "compressed".into());
+        kv.insert("ingest".into(), "stream".into());
+        let c = Config::from_kv(&kv).unwrap();
+        assert_eq!(c.storage, StorageKind::Compressed);
+        assert_eq!(c.ingest, IngestMode::Stream);
+        kv.insert("storage".into(), "varint".into());
+        assert_eq!(Config::from_kv(&kv).unwrap().storage, StorageKind::Compressed);
+        kv.insert("storage".into(), "zip".into());
+        let err = Config::from_kv(&kv).unwrap_err().to_string();
+        assert!(err.contains("plain|compressed"), "{err}");
+        kv.insert("storage".into(), "plain".into());
+        kv.insert("ingest".into(), "mmap".into());
+        let err = Config::from_kv(&kv).unwrap_err().to_string();
+        assert!(err.contains("materialize|stream"), "{err}");
+        let d = Config::default();
+        assert_eq!(d.storage, StorageKind::Plain);
+        assert_eq!(d.ingest, IngestMode::Materialize);
+        assert_eq!(IngestMode::parse("materialized"), Some(IngestMode::Materialize));
+        assert_eq!(IngestMode::Stream.name(), "stream");
     }
 
     #[test]

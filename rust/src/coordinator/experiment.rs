@@ -816,6 +816,114 @@ pub fn ablation_query_serving(cfg: &Config) -> Result<Table> {
     Ok(table)
 }
 
+/// Ablation A9: memory-limit scale sweep. Streams kron graphs from
+/// `scale = 10` through `16` (`18` behind the CLI's `--large`) straight
+/// into shards — the whole-graph CSR is never materialized — under
+/// `{plain, compressed}` storage × `{block, vertex_cut}` partitioning,
+/// and reports the [`MemStats`](crate::amt::metrics::MemStats) axis
+/// (bytes/edge, per-locality peak builder bytes, build time) next to
+/// bfs-async / pagerank-bsp / sssp-delta throughput in MTEPS. Every cell
+/// runs under both storages and the answers are compared before the rows
+/// are emitted: compression may only change bytes, never results.
+pub fn ablation_scale_sweep(cfg: &Config, large: bool) -> Result<Table> {
+    let scales: &[u32] = if large { &[10, 12, 14, 16, 18] } else { &[10, 12, 14, 16] };
+    scale_sweep_over(cfg, scales)
+}
+
+/// [`ablation_scale_sweep`] over an explicit scale list (unit tests and
+/// benches shrink it to stay fast).
+pub fn scale_sweep_over(cfg: &Config, scales: &[u32]) -> Result<Table> {
+    use crate::algorithms::sssp;
+    use crate::graph::stream::{self, EdgeSource, WeightSpec};
+    use crate::graph::StorageKind;
+
+    let p = cfg.localities.iter().cloned().filter(|&x| x <= 8).max().unwrap_or(8);
+    let params = PrParams { alpha: cfg.alpha, iterations: cfg.iterations };
+    let mut table = Table::new(
+        format!(
+            "Ablation A9 — memory-limit scale sweep: streamed kron x storage x scheme \
+             ({} localities, degree {})",
+            p, cfg.degree
+        ),
+        &["scale", "scheme", "storage", "n", "m", "bytes/edge", "peak-MB", "build-ms",
+          "bfs-MTEPS", "pr-MTEPS", "sssp-MTEPS"],
+    );
+    for &scale in scales {
+        let src = EdgeSource::kron(scale, cfg.degree, cfg.seed);
+        for kind in [PartitionKind::Block, PartitionKind::VertexCut] {
+            // Parity gate: answers from the second (compressed) pass must
+            // equal the first (plain) pass bit-for-bit — the deterministic
+            // engines see identical logical rows either way.
+            let mut baseline: Option<(Vec<i64>, Vec<f32>, Vec<f32>)> = None;
+            for storage in [StorageKind::Plain, StorageKind::Compressed] {
+                let dist = stream::build_streamed(&src, kind, p, storage, None)?;
+                let mem = dist.mem_stats();
+                let m = dist.m();
+                let b =
+                    bfs::run_async_with(&dist, cfg.root, cfg.flush_policy, sim_cfg(cfg, false));
+                let pr = pagerank::run_bsp(&dist, params, sim_cfg(cfg, false));
+                // SSSP reads weights from the shards: an identically
+                // partitioned weighted build (pair-keyed weights, so the
+                // draw is stream-order independent).
+                let spec = WeightSpec { lo: 1.0, hi: 10.0, seed: cfg.seed + 1 };
+                let distw = stream::build_streamed(&src, kind, p, storage, Some(spec))?;
+                let delta = if cfg.sssp_delta > 0.0 {
+                    cfg.sssp_delta
+                } else {
+                    sssp::auto_delta_dist(&distw)
+                };
+                let s = sssp::run_delta_dist_with(
+                    &distw,
+                    cfg.root,
+                    delta,
+                    cfg.flush_policy,
+                    sim_cfg(cfg, false),
+                );
+                match &baseline {
+                    None => {
+                        baseline = Some((b.parents.clone(), pr.ranks.clone(), s.dist.clone()))
+                    }
+                    Some((bp, pp, sp)) => {
+                        anyhow::ensure!(
+                            &b.parents == bp,
+                            "A9: BFS parents differ plain vs compressed at kron{scale}/{}",
+                            kind.name()
+                        );
+                        anyhow::ensure!(
+                            pr.ranks.iter().zip(pp).all(|(a, w)| (a - w).abs() < 1e-6),
+                            "A9: PageRank ranks differ plain vs compressed at kron{scale}/{}",
+                            kind.name()
+                        );
+                        anyhow::ensure!(
+                            s.dist.iter().zip(sp).all(|(a, w)| {
+                                (a.is_infinite() && w.is_infinite()) || (a - w).abs() < 1e-6
+                            }),
+                            "A9: SSSP distances differ plain vs compressed at kron{scale}/{}",
+                            kind.name()
+                        );
+                    }
+                }
+                let mteps =
+                    |us: f64| if us > 0.0 { format!("{:.2}", m as f64 / us) } else { "-".into() };
+                table.row(vec![
+                    format!("kron{scale}"),
+                    kind.name().to_string(),
+                    mem.storage.to_string(),
+                    dist.n().to_string(),
+                    m.to_string(),
+                    format!("{:.2}", mem.bytes_per_edge),
+                    format!("{:.1}", mem.peak_builder_bytes as f64 / 1e6),
+                    format!("{:.1}", mem.build_ms),
+                    mteps(b.report.makespan_us),
+                    mteps(pr.report.makespan_us),
+                    mteps(s.report.makespan_us),
+                ]);
+            }
+        }
+    }
+    Ok(table)
+}
+
 /// Keep the fastest repetition per labelled row of an A6 sweep.
 fn keep_best(
     rows: &mut Vec<(&'static str, Option<SimReport>)>,

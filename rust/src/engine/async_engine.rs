@@ -403,6 +403,7 @@ pub fn run_async<P: VertexProgram>(
         report.work.merge(&a.work);
     }
     report.partition = dist.partition_stats();
+    report.mem = dist.mem_stats();
     finish(
         dist,
         actors.iter().map(|a| (&*a.shard, &a.state[..], &a.deltas[..])),

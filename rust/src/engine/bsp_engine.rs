@@ -434,6 +434,7 @@ pub fn run_bsp_with_executor<P: VertexProgram>(
         report.work.merge(&a.work);
     }
     report.partition = dist.partition_stats();
+    report.mem = dist.mem_stats();
     finish(
         dist,
         actors.iter().map(|a| (&*a.shard, &a.state[..], &a.deltas[..])),

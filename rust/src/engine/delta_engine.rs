@@ -547,6 +547,7 @@ pub fn run_delta<P: VertexProgram>(
         report.work.merge(&a.work);
     }
     report.partition = dist.partition_stats();
+    report.mem = dist.mem_stats();
     static NO_DELTAS: [f32; 0] = [];
     finish(
         dist,

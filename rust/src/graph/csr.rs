@@ -29,33 +29,42 @@ impl Csr {
              assume a NaN-free total order on distances)"
         );
         let n = el.n;
-        let mut degree = vec![0usize; n];
-        for &(u, _) in &el.edges {
-            degree[u as usize] += 1;
-        }
+        // Counting sort with the offsets array doubling as the scatter
+        // cursor: count into offsets[u+1], prefix-sum, scatter through
+        // offsets[u] (each row's cursor ends exactly one slot ahead),
+        // then shift the array back down — no cloned cursor array.
         let mut offsets = vec![0usize; n + 1];
+        for &(u, _) in &el.edges {
+            offsets[u as usize + 1] += 1;
+        }
         for u in 0..n {
-            offsets[u + 1] = offsets[u] + degree[u];
+            offsets[u + 1] += offsets[u];
         }
         let mut targets = vec![0 as VertexId; el.edges.len()];
         let mut weights = el.is_weighted().then(|| vec![0.0f32; el.edges.len()]);
-        let mut cursor = offsets.clone();
         for (i, &(u, v)) in el.edges.iter().enumerate() {
-            let at = cursor[u as usize];
+            let at = offsets[u as usize];
             targets[at] = v;
             if let Some(w) = weights.as_mut() {
                 w[at] = el.weights[i];
             }
-            cursor[u as usize] += 1;
+            offsets[u as usize] += 1;
         }
+        for u in (1..=n).rev() {
+            offsets[u] = offsets[u - 1];
+        }
+        offsets[0] = 0;
         // Sort each row for deterministic iteration + binary-searchable rows.
+        let mut scratch: Vec<(VertexId, f32)> = Vec::new();
         for u in 0..n {
             let r = offsets[u]..offsets[u + 1];
             if let Some(w) = weights.as_mut() {
-                let mut row: Vec<(VertexId, f32)> =
-                    targets[r.clone()].iter().cloned().zip(w[r.clone()].iter().cloned()).collect();
-                row.sort_by_key(|&(t, _)| t);
-                for (k, (t, wt)) in row.into_iter().enumerate() {
+                scratch.clear();
+                scratch.extend(
+                    targets[r.clone()].iter().cloned().zip(w[r.clone()].iter().cloned()),
+                );
+                scratch.sort_by_key(|&(t, _)| t);
+                for (k, &(t, wt)) in scratch.iter().enumerate() {
                     targets[r.start + k] = t;
                     w[r.start + k] = wt;
                 }
@@ -209,6 +218,34 @@ mod tests {
         let g = Csr::from_edge_list(&EdgeList::new(0));
         assert_eq!(g.n(), 0);
         assert_eq!(g.m(), 0);
+    }
+
+    #[test]
+    fn plain_bytes_per_edge_is_pinned() {
+        // Regression pin for the plain layout: 8 bytes per offset slot
+        // (n + 1 of them) + 4 bytes per target. path(9) has n=9, m=16.
+        use crate::graph::storage::AdjacencyStorage;
+        let g = crate::graph::generators::path(9);
+        assert_eq!((g.n(), g.m()), (9, 16));
+        assert_eq!(g.heap_bytes(), 10 * 8 + 16 * 4);
+        assert_eq!(g.heap_bytes() as f64 / g.m() as f64, 9.0);
+        // Weighted adds a parallel 4-byte array.
+        let gw = crate::graph::generators::with_random_weights(&g, 1.0, 2.0, 1);
+        assert_eq!(gw.heap_bytes(), 10 * 8 + 16 * 4 + 16 * 4);
+    }
+
+    #[test]
+    fn duplicate_weighted_edges_keep_input_order() {
+        // The single-cursor build + stable row sort must keep duplicate
+        // (u, v) entries in insertion order, like the cloned-cursor
+        // implementation it replaced.
+        let mut el = EdgeList::new(3);
+        el.push_weighted(0, 2, 9.0);
+        el.push_weighted(0, 1, 1.0);
+        el.push_weighted(0, 2, 5.0);
+        let g = Csr::from_edge_list(&el);
+        let row: Vec<_> = g.neighbors_weighted(0).collect();
+        assert_eq!(row, vec![(1, 1.0), (2, 9.0), (2, 5.0)]);
     }
 
     #[test]

@@ -14,10 +14,14 @@
 //!   ghost-index invariants in [`partition`](super::partition).
 //!
 //! Adjacency is stored per local row for exactly the edges the scheme
-//! homes here. Under 1-D schemes every edge lives with its source's
-//! master, so owned rows carry whole rows and ghost rows carry nothing.
-//! Under a vertex cut, ghost rows with locally homed out-edges are
-//! **mirrors**: the master's [`Shard::mirrors`] table lists them as
+//! homes here, behind [`AdjRows`] — either the historical flat arrays
+//! (`storage=plain`, with a zero-copy global-id view) or delta-varint
+//! compressed rows (`storage=compressed`, decoded through [`RowIter`] or
+//! a caller-owned scratch buffer; see [`storage`](super::storage)).
+//! Under 1-D schemes every edge lives with its source's master, so owned
+//! rows carry whole rows and ghost rows carry nothing. Under a vertex
+//! cut, ghost rows with locally homed out-edges are **mirrors**: the
+//! master's [`Shard::mirrors`] table lists them as
 //! `(locality, ghost-slot-at-that-locality)` pairs so an algorithm can
 //! scatter a master update straight into the destination's dense row
 //! space (gather-apply-scatter).
@@ -26,16 +30,25 @@
 //! ids, used by pull-style engines) and, on demand, a **masked-ELL**
 //! encoding of the in-adjacency ([`EllShard`]) with virtual-row splitting
 //! for the AOT kernel path.
+//!
+//! Construction funnels through one seam: both the materialized path
+//! ([`DistGraph::build_with_storage`], whole-graph [`Csr`] in hand) and
+//! the streaming path ([`stream`](super::stream), no global graph ever
+//! built) route per-locality edge triples into [`assemble_shard`], so
+//! the two paths produce byte-identical shards.
 
 use std::ops::Range;
 use std::sync::Arc;
+use std::time::Instant;
 
 use super::partition::PartitionScheme;
+use super::storage::{AdjRows, AdjRowsBuilder, AdjacencyStorage, RowIter, StorageKind};
 use super::{Csr, Partition1D, VertexId};
+use crate::amt::metrics::MemStats;
 use crate::amt::sim::LocalityId;
 
 /// One locality's shard. See the module docs for the row-space layout.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct Shard {
     /// Owning locality.
     pub locality: LocalityId,
@@ -51,24 +64,20 @@ pub struct Shard {
     pub ghost_owner: Vec<LocalityId>,
     /// Dense owned-row index of each ghost at its master (the wire index).
     pub ghost_master_index: Vec<u32>,
-    // Locally homed out-edges of owned rows; `out_targets` are global ids
-    // (ascending per row), `out_local` the parallel dense local rows.
-    out_offsets: Vec<usize>,
-    out_targets: Vec<VertexId>,
-    out_local: Vec<u32>,
+    // Locally homed out-edges of owned rows. Canonical per-entry value is
+    // the dense local target row; plain storage additionally keeps the
+    // parallel global-id view (ascending per row).
+    out_rows: AdjRows,
     out_weights: Vec<f32>, // empty when the graph is unweighted
     // Locally homed out-edges whose source is a ghost (mirror rows).
-    ghost_out_offsets: Vec<usize>,
-    ghost_out_targets: Vec<VertexId>,
-    ghost_out_local: Vec<u32>,
+    ghost_rows: AdjRows,
     ghost_out_weights: Vec<f32>,
     // Mirror table: per owned row, every other locality holding out-edges
     // of that vertex, as (locality, ghost slot there).
     mirror_offsets: Vec<usize>,
     mirror_entries: Vec<(LocalityId, u32)>,
-    // Full in-adjacency of owned rows (global ids).
-    in_offsets: Vec<usize>,
-    in_targets: Vec<VertexId>,
+    // Full in-adjacency of owned rows (canonical value = global id).
+    in_rows: AdjRows,
 }
 
 impl Shard {
@@ -85,6 +94,11 @@ impl Shard {
     /// Total local rows (owned + ghosts).
     pub fn n_rows(&self) -> usize {
         self.n_local() + self.n_ghosts()
+    }
+
+    /// Which adjacency encoding this shard uses.
+    pub fn storage(&self) -> StorageKind {
+        self.out_rows.kind()
     }
 
     /// Global id of any local row (owned or ghost).
@@ -118,26 +132,45 @@ impl Shard {
     }
 
     /// Out-neighbors (global ids, ascending) of the owned row `u` that
-    /// are homed at this shard. Under 1-D schemes this is the whole row.
-    pub fn out_neighbors(&self, u: usize) -> &[VertexId] {
-        &self.out_targets[self.out_offsets[u]..self.out_offsets[u + 1]]
+    /// are homed at this shard, as a slice. Plain storage returns its
+    /// backing array (ignoring `scratch`); compressed storage decodes
+    /// into `scratch` — callers own one scratch per hot loop and reuse
+    /// it across rows. The result is sorted, so binary search works
+    /// under either encoding.
+    pub fn out_neighbors_into<'a>(
+        &'a self,
+        u: usize,
+        scratch: &'a mut Vec<VertexId>,
+    ) -> &'a [VertexId] {
+        match self.out_rows.globals_slice(u) {
+            Some(s) => s,
+            None => {
+                scratch.clear();
+                scratch.extend(self.out_rows.iter_row(u).map(|t| self.global_of(t as usize)));
+                scratch
+            }
+        }
     }
 
-    /// Out-neighbors of owned row `u` as dense local rows (parallel to
-    /// [`Shard::out_neighbors`]).
-    pub fn out_neighbors_local(&self, u: usize) -> &[u32] {
-        &self.out_local[self.out_offsets[u]..self.out_offsets[u + 1]]
-    }
-
-    /// Locally homed out-neighbors of any local row, as dense local rows.
-    /// Owned rows read their row slice; ghost rows read their mirror
-    /// adjacency (empty unless this shard homes edges of that vertex).
-    pub fn row_neighbors_local(&self, row: usize) -> &[u32] {
+    /// Locally homed out-neighbors of any local row, as dense local rows
+    /// (streaming decode; parallel to the global view of
+    /// [`Shard::out_neighbors_into`] for owned rows). Owned rows read
+    /// their row; ghost rows read their mirror adjacency (empty unless
+    /// this shard homes edges of that vertex).
+    pub fn row_locals(&self, row: usize) -> RowIter<'_> {
         if row < self.n_local() {
-            self.out_neighbors_local(row)
+            self.out_rows.iter_row(row)
         } else {
-            let gi = row - self.n_local();
-            &self.ghost_out_local[self.ghost_out_offsets[gi]..self.ghost_out_offsets[gi + 1]]
+            self.ghost_rows.iter_row(row - self.n_local())
+        }
+    }
+
+    /// Locally homed out-edge count of any local row.
+    pub fn row_len(&self, row: usize) -> usize {
+        if row < self.n_local() {
+            self.out_rows.row_len(row)
+        } else {
+            self.ghost_rows.row_len(row - self.n_local())
         }
     }
 
@@ -145,20 +178,16 @@ impl Shard {
     /// `(dense local target row, weight)`; unweighted graphs yield unit
     /// weights (SSSP on them degenerates to hop counts).
     pub fn row_edges(&self, row: usize) -> impl Iterator<Item = (u32, f32)> + '_ {
-        let (locals, weights, range) = if row < self.n_local() {
-            let r = self.out_offsets[row]..self.out_offsets[row + 1];
-            (&self.out_local, &self.out_weights, r)
+        let (rows, weights, r) = if row < self.n_local() {
+            (&self.out_rows, &self.out_weights, row)
         } else {
-            let gi = row - self.n_local();
-            let r = self.ghost_out_offsets[gi]..self.ghost_out_offsets[gi + 1];
-            (&self.ghost_out_local, &self.ghost_out_weights, r)
+            (&self.ghost_rows, &self.ghost_out_weights, row - self.n_local())
         };
-        let w = (!weights.is_empty()).then_some(weights);
-        locals[range.clone()]
-            .iter()
-            .cloned()
+        let w = (!weights.is_empty()).then_some(weights.as_slice());
+        let start = if w.is_some() { rows.entry_start(r) } else { 0 };
+        rows.iter_row(r)
             .enumerate()
-            .map(move |(k, t)| (t, w.map(|w| w[range.start + k]).unwrap_or(1.0)))
+            .map(move |(k, t)| (t, w.map(|w| w[start + k]).unwrap_or(1.0)))
     }
 
     /// True when edge weights were carried over from the source graph.
@@ -178,20 +207,53 @@ impl Shard {
         !self.mirror_entries.is_empty()
     }
 
-    /// In-neighbors (global ids) of the owned vertex with local row `u` —
-    /// the *full* in-adjacency regardless of scheme.
-    pub fn in_neighbors(&self, u: usize) -> &[VertexId] {
-        &self.in_targets[self.in_offsets[u]..self.in_offsets[u + 1]]
+    /// In-neighbors (global ids, ascending) of the owned vertex with
+    /// local row `u` — the *full* in-adjacency regardless of scheme, as
+    /// a streaming decode (pull engines can break out early).
+    pub fn in_neighbors_iter(&self, u: usize) -> RowIter<'_> {
+        self.in_rows.iter_row(u)
+    }
+
+    /// In-neighbors of owned row `u` as a slice (zero-copy for plain
+    /// storage, decoded into `scratch` for compressed).
+    pub fn in_neighbors_into<'a>(
+        &'a self,
+        u: usize,
+        scratch: &'a mut Vec<VertexId>,
+    ) -> &'a [VertexId] {
+        self.in_rows.row(u, scratch)
+    }
+
+    /// In-degree of owned row `u`.
+    pub fn in_len(&self, u: usize) -> usize {
+        self.in_rows.row_len(u)
     }
 
     /// Locally homed out-edge count (owned + mirror rows).
     pub fn m_out(&self) -> usize {
-        self.out_targets.len() + self.ghost_out_targets.len()
+        self.out_rows.total_entries() + self.ghost_rows.total_entries()
     }
 
     /// Owned in-edge count.
     pub fn m_in(&self) -> usize {
-        self.in_targets.len()
+        self.in_rows.total_entries()
+    }
+
+    /// Heap bytes this shard holds (adjacency, weights, ghost/mirror
+    /// tables) — the per-locality cost [`MemStats`] aggregates.
+    pub fn heap_bytes(&self) -> usize {
+        use std::mem::size_of;
+        self.owned_ids.len() * 4
+            + self.out_degree.len() * 4
+            + self.ghost_global_ids.len() * 4
+            + self.ghost_owner.len() * size_of::<LocalityId>()
+            + self.ghost_master_index.len() * 4
+            + self.out_rows.heap_bytes()
+            + self.ghost_rows.heap_bytes()
+            + self.in_rows.heap_bytes()
+            + (self.out_weights.len() + self.ghost_out_weights.len()) * 4
+            + self.mirror_offsets.len() * size_of::<usize>()
+            + self.mirror_entries.len() * size_of::<(LocalityId, u32)>()
     }
 
     /// The owned set as a contiguous global range, when it is one (1-D
@@ -227,8 +289,9 @@ impl Shard {
         let mut row_map: Vec<u32> = Vec::new();
         let mut cols: Vec<i32> = Vec::new();
         let mut mask: Vec<f32> = Vec::new();
+        let mut scratch: Vec<VertexId> = Vec::new();
         for u in 0..n_local {
-            let nbrs = self.in_neighbors(u);
+            let nbrs = self.in_rows.row(u, &mut scratch);
             let chunks = if nbrs.is_empty() { 1 } else { nbrs.len().div_ceil(max_deg) };
             for c in 0..chunks {
                 row_map.push(u as u32);
@@ -254,6 +317,139 @@ impl Shard {
             mask.extend(std::iter::repeat(0.0).take(max_deg));
         }
         Some(EllShard { n_local, n_virtual, max_deg, n_rows_padded, cols, mask, row_map })
+    }
+}
+
+/// Build one locality's [`Shard`] from its routed edges. This is the
+/// construction seam both ingestion paths share:
+///
+/// * `homed` — the locally homed out-edges as `(src, tgt, weight)`
+///   triples in `(src asc, tgt asc)` order (unit weights when
+///   `!weighted`);
+/// * `in_pairs` — the full in-adjacency of the owned set as
+///   `(dst, src)` pairs sorted ascending.
+///
+/// The materialized and streaming builders produce these in identical
+/// order, so shards are deeply equal across ingestion modes.
+pub(crate) fn assemble_shard(
+    l: LocalityId,
+    owned_ids: Vec<VertexId>,
+    out_degree: Vec<u32>,
+    scheme: &dyn PartitionScheme,
+    homed: &[(VertexId, VertexId, f32)],
+    in_pairs: &[(VertexId, VertexId)],
+    weighted: bool,
+    kind: StorageKind,
+) -> Shard {
+    // Ghosts: every non-owned endpoint of a locally homed edge.
+    let mut ghost: Vec<VertexId> = Vec::new();
+    for &(u, v, _) in homed {
+        if scheme.owner(u) != l {
+            ghost.push(u);
+        }
+        if scheme.owner(v) != l {
+            ghost.push(v);
+        }
+    }
+    ghost.sort_unstable();
+    ghost.dedup();
+    let ghost_owner: Vec<LocalityId> = ghost.iter().map(|&v| scheme.owner(v)).collect();
+    let ghost_master_index: Vec<u32> =
+        ghost.iter().map(|&v| scheme.master_index(v) as u32).collect();
+    let n_owned = owned_ids.len();
+    let row_of = |v: VertexId| -> u32 {
+        match owned_ids.binary_search(&v) {
+            Ok(i) => i as u32,
+            Err(_) => {
+                let gi =
+                    ghost.binary_search(&v).expect("edge endpoint neither owned nor ghost");
+                (n_owned + gi) as u32
+            }
+        }
+    };
+    // Group homed triples by source (they arrive source-ascending).
+    let mut groups: Vec<(VertexId, Range<usize>)> = Vec::new();
+    let mut i = 0;
+    while i < homed.len() {
+        let src = homed[i].0;
+        let mut j = i + 1;
+        while j < homed.len() && homed[j].0 == src {
+            j += 1;
+        }
+        groups.push((src, i..j));
+        i = j;
+    }
+    let emit = |ids: &[VertexId]| -> (AdjRows, Vec<f32>) {
+        let mut b = AdjRowsBuilder::new(kind, weighted, true);
+        let mut wts = Vec::new();
+        for &gid in ids {
+            if let Ok(k) = groups.binary_search_by_key(&gid, |x| x.0) {
+                for &(_, v, w) in &homed[groups[k].1.clone()] {
+                    b.push(row_of(v), v);
+                    if weighted {
+                        wts.push(w);
+                    }
+                }
+            }
+            b.end_row();
+        }
+        (b.finish(), wts)
+    };
+    let (out_rows, out_weights) = emit(&owned_ids);
+    let (ghost_rows, ghost_out_weights) = emit(&ghost);
+
+    // In-CSR of the owned set from the sorted (dst, src) pairs.
+    let mut b = AdjRowsBuilder::new(kind, false, false);
+    let mut i = 0;
+    for &gid in &owned_ids {
+        while i < in_pairs.len() && in_pairs[i].0 == gid {
+            b.push(in_pairs[i].1, in_pairs[i].1);
+            i += 1;
+        }
+        b.end_row();
+    }
+    debug_assert_eq!(i, in_pairs.len(), "in-pair dst not owned by this shard");
+    let in_rows = b.finish();
+
+    Shard {
+        locality: l,
+        owned_ids,
+        out_degree,
+        ghost_global_ids: ghost,
+        ghost_owner,
+        ghost_master_index,
+        out_rows,
+        out_weights,
+        ghost_rows,
+        ghost_out_weights,
+        mirror_offsets: Vec::new(),
+        mirror_entries: Vec::new(),
+        in_rows,
+    }
+}
+
+/// Second construction pass: the mirror table. A ghost row holding
+/// out-edges is a mirror; its master's row records (locality, ghost
+/// slot). Shared by both ingestion paths.
+pub(crate) fn finish_mirrors(shards: &mut [Shard], n: usize) {
+    let mut per_vertex: Vec<Vec<(LocalityId, u32)>> = vec![Vec::new(); n];
+    for s in shards.iter() {
+        for gi in 0..s.n_ghosts() {
+            if s.ghost_rows.row_len(gi) > 0 {
+                per_vertex[s.ghost_global_ids[gi] as usize].push((s.locality, gi as u32));
+            }
+        }
+    }
+    for s in shards.iter_mut() {
+        let mut offs = Vec::with_capacity(s.n_local() + 1);
+        let mut entries = Vec::new();
+        offs.push(0);
+        for &gid in &s.owned_ids {
+            entries.extend_from_slice(&per_vertex[gid as usize]);
+            offs.push(entries.len());
+        }
+        s.mirror_offsets = offs;
+        s.mirror_entries = entries;
     }
 }
 
@@ -307,6 +503,7 @@ pub struct DistGraph {
     m: usize,
     owned_counts: Vec<usize>,
     ghost_counts: Vec<usize>,
+    mem: MemStats,
 }
 
 impl DistGraph {
@@ -316,174 +513,96 @@ impl DistGraph {
         DistGraph::build_with(g, Arc::new(partition.clone()))
     }
 
-    /// Partition `g` according to any [`PartitionScheme`].
+    /// Partition `g` according to any [`PartitionScheme`] with plain
+    /// adjacency storage.
     pub fn build_with(g: &Csr, scheme: Arc<dyn PartitionScheme>) -> Self {
+        DistGraph::build_with_storage(g, scheme, StorageKind::Plain)
+    }
+
+    /// Partition `g` according to any [`PartitionScheme`], storing shard
+    /// adjacency as `kind`. This is the materialized path: the whole
+    /// graph is in memory, so [`MemStats::peak_builder_bytes`] counts the
+    /// CSR plus the full routing buffers. The streaming path
+    /// ([`stream::build_streamed`](super::stream::build_streamed)) never
+    /// holds those.
+    pub fn build_with_storage(
+        g: &Csr,
+        scheme: Arc<dyn PartitionScheme>,
+        kind: StorageKind,
+    ) -> Self {
+        let started = Instant::now();
         assert_eq!(g.n(), scheme.n(), "scheme covers a different vertex count");
         let p = scheme.p();
         assert!(p > 0, "need at least one locality");
-        let t = g.transpose();
         let offsets = g.offsets();
         let targets = g.targets();
         let weights = g.weights();
+        let weighted = weights.is_some();
 
-        // Locally homed edges per locality as (src, global edge idx),
-        // already in (src asc, e asc) order.
-        let mut homed: Vec<Vec<(VertexId, u32)>> = vec![Vec::new(); p as usize];
+        // Route every edge: homed triples in (src asc, tgt asc) order per
+        // locality, and the transpose as (dst, src) pairs per dst-owner.
+        let mut homed: Vec<Vec<(VertexId, VertexId, f32)>> = vec![Vec::new(); p as usize];
+        let mut in_bufs: Vec<Vec<(VertexId, VertexId)>> = vec![Vec::new(); p as usize];
         for u in 0..g.n() {
             for e in offsets[u]..offsets[u + 1] {
-                homed[scheme.edge_home(u as VertexId, e) as usize]
-                    .push((u as VertexId, e as u32));
+                let v = targets[e];
+                let w = weights.map_or(1.0, |ws| ws[e]);
+                homed[scheme.edge_home(u as VertexId, e) as usize].push((u as VertexId, v, w));
+                in_bufs[scheme.owner(v) as usize].push((v, u as VertexId));
             }
         }
+        for b in &mut in_bufs {
+            b.sort_unstable();
+        }
+        let peak = g.heap_bytes()
+            + homed.iter().map(|h| h.len()).sum::<usize>()
+                * std::mem::size_of::<(VertexId, VertexId, f32)>()
+            + in_bufs.iter().map(|b| b.len()).sum::<usize>()
+                * std::mem::size_of::<(VertexId, VertexId)>();
 
         let mut shards: Vec<Shard> = Vec::with_capacity(p as usize);
         for l in 0..p {
             let owned_ids = scheme.owned_vertices(l);
-            let pairs = &homed[l as usize];
-            // Ghosts: every non-owned endpoint of a locally homed edge.
-            let mut ghost: Vec<VertexId> = Vec::new();
-            for &(u, e) in pairs {
-                if scheme.owner(u) != l {
-                    ghost.push(u);
-                }
-                let w = targets[e as usize];
-                if scheme.owner(w) != l {
-                    ghost.push(w);
-                }
-            }
-            ghost.sort_unstable();
-            ghost.dedup();
-            let ghost_owner: Vec<LocalityId> = ghost.iter().map(|&v| scheme.owner(v)).collect();
-            let ghost_master_index: Vec<u32> =
-                ghost.iter().map(|&v| scheme.master_index(v) as u32).collect();
-            let n_owned = owned_ids.len();
-            let row_of = |v: VertexId| -> u32 {
-                match owned_ids.binary_search(&v) {
-                    Ok(i) => i as u32,
-                    Err(_) => {
-                        let gi = ghost
-                            .binary_search(&v)
-                            .expect("edge endpoint neither owned nor ghost");
-                        (n_owned + gi) as u32
-                    }
-                }
-            };
-            // Group pairs by source for row assembly.
-            let mut groups: Vec<(VertexId, Range<usize>)> = Vec::new();
-            let mut i = 0;
-            while i < pairs.len() {
-                let src = pairs[i].0;
-                let mut j = i + 1;
-                while j < pairs.len() && pairs[j].0 == src {
-                    j += 1;
-                }
-                groups.push((src, i..j));
-                i = j;
-            }
-            let mut emit = |ids: &[VertexId],
-                            offs: &mut Vec<usize>,
-                            tgts: &mut Vec<VertexId>,
-                            locs: &mut Vec<u32>,
-                            wts: &mut Vec<f32>| {
-                for &gid in ids {
-                    if let Ok(k) = groups.binary_search_by_key(&gid, |x| x.0) {
-                        for &(_, e) in &pairs[groups[k].1.clone()] {
-                            let w = targets[e as usize];
-                            tgts.push(w);
-                            locs.push(row_of(w));
-                            if let Some(ws) = weights {
-                                wts.push(ws[e as usize]);
-                            }
-                        }
-                    }
-                    offs.push(tgts.len());
-                }
-            };
-            let mut out_offsets = vec![0usize];
-            let mut out_targets = Vec::new();
-            let mut out_local = Vec::new();
-            let mut out_weights = Vec::new();
-            emit(
-                &owned_ids,
-                &mut out_offsets,
-                &mut out_targets,
-                &mut out_local,
-                &mut out_weights,
-            );
-            let mut ghost_out_offsets = vec![0usize];
-            let mut ghost_out_targets = Vec::new();
-            let mut ghost_out_local = Vec::new();
-            let mut ghost_out_weights = Vec::new();
-            emit(
-                &ghost,
-                &mut ghost_out_offsets,
-                &mut ghost_out_targets,
-                &mut ghost_out_local,
-                &mut ghost_out_weights,
-            );
-
-            let mut in_offsets = Vec::with_capacity(n_owned + 1);
-            let mut in_targets = Vec::new();
-            in_offsets.push(0);
             let out_degree = owned_ids.iter().map(|&v| g.degree(v) as u32).collect();
-            for &v in &owned_ids {
-                in_targets.extend_from_slice(t.neighbors(v));
-                in_offsets.push(in_targets.len());
-            }
-            shards.push(Shard {
-                locality: l,
+            shards.push(assemble_shard(
+                l,
                 owned_ids,
                 out_degree,
-                ghost_global_ids: ghost,
-                ghost_owner,
-                ghost_master_index,
-                out_offsets,
-                out_targets,
-                out_local,
-                out_weights,
-                ghost_out_offsets,
-                ghost_out_targets,
-                ghost_out_local,
-                ghost_out_weights,
-                mirror_offsets: Vec::new(),
-                mirror_entries: Vec::new(),
-                in_offsets,
-                in_targets,
-            });
+                scheme.as_ref(),
+                &homed[l as usize],
+                &in_bufs[l as usize],
+                weighted,
+                kind,
+            ));
         }
+        finish_mirrors(&mut shards, g.n());
+        DistGraph::from_parts(scheme, shards, g.n(), g.m(), kind, peak, started)
+    }
 
-        // Second pass: the mirror table. A ghost row holding out-edges is
-        // a mirror; its master's row records (locality, ghost slot).
-        let mut per_vertex: Vec<Vec<(LocalityId, u32)>> = vec![Vec::new(); g.n()];
-        for s in &shards {
-            for gi in 0..s.n_ghosts() {
-                if s.ghost_out_offsets[gi + 1] > s.ghost_out_offsets[gi] {
-                    per_vertex[s.ghost_global_ids[gi] as usize].push((s.locality, gi as u32));
-                }
-            }
-        }
-        for s in &mut shards {
-            let mut offs = Vec::with_capacity(s.n_local() + 1);
-            let mut entries = Vec::new();
-            offs.push(0);
-            for &gid in &s.owned_ids {
-                entries.extend_from_slice(&per_vertex[gid as usize]);
-                offs.push(entries.len());
-            }
-            s.mirror_offsets = offs;
-            s.mirror_entries = entries;
-        }
-
-        let owned_counts = shards.iter().map(|s| s.n_local()).collect();
-        let ghost_counts = shards.iter().map(|s| s.n_ghosts()).collect();
-        DistGraph {
-            partition: scheme,
-            shards,
-            n: g.n(),
-            m: g.m(),
-            owned_counts,
-            ghost_counts,
-        }
+    /// Final wrap-up shared by both ingestion paths: per-locality counts
+    /// plus the [`MemStats`] block.
+    pub(crate) fn from_parts(
+        scheme: Arc<dyn PartitionScheme>,
+        shards: Vec<Shard>,
+        n: usize,
+        m: usize,
+        kind: StorageKind,
+        peak_builder_bytes: usize,
+        started: Instant,
+    ) -> Self {
+        let owned_counts = shards.iter().map(Shard::n_local).collect();
+        let ghost_counts = shards.iter().map(Shard::n_ghosts).collect();
+        let total_shard_bytes: usize = shards.iter().map(Shard::heap_bytes).sum();
+        let max_shard_bytes = shards.iter().map(Shard::heap_bytes).max().unwrap_or(0);
+        let mem = MemStats {
+            storage: kind.name(),
+            total_shard_bytes,
+            max_shard_bytes,
+            bytes_per_edge: if m == 0 { 0.0 } else { total_shard_bytes as f64 / m as f64 },
+            peak_builder_bytes,
+            build_ms: started.elapsed().as_secs_f64() * 1e3,
+        };
+        DistGraph { partition: scheme, shards, n, m, owned_counts, ghost_counts, mem }
     }
 
     /// Convenience: block partition over `p` localities.
@@ -534,6 +653,12 @@ impl DistGraph {
         self.shards.iter().any(|s| s.is_weighted())
     }
 
+    /// Storage footprint and build-cost stats, stamped into
+    /// [`SimReport::mem`](crate::amt::SimReport) by algorithm drivers.
+    pub fn mem_stats(&self) -> MemStats {
+        self.mem
+    }
+
     /// Partition-quality stats for [`SimReport`](crate::amt::SimReport):
     /// vertex/edge balance over the built shards plus the scheme's
     /// replication factor.
@@ -557,31 +682,44 @@ mod tests {
     use crate::graph::generators;
     use crate::graph::partition::PartitionKind;
 
+    const KINDS: [StorageKind; 2] = [StorageKind::Plain, StorageKind::Compressed];
+
     #[test]
     fn shards_cover_all_edges() {
         let g = generators::urand(8, 4, 2);
         for kind in PartitionKind::all() {
-            let d = DistGraph::build_with(&g, kind.build(&g, 4));
-            let out_total: usize = d.shards.iter().map(|s| s.m_out()).sum();
-            let in_total: usize = d.shards.iter().map(|s| s.m_in()).sum();
-            assert_eq!(out_total, g.m(), "{kind:?}");
-            assert_eq!(in_total, g.m(), "{kind:?}");
+            for storage in KINDS {
+                let d = DistGraph::build_with_storage(&g, kind.build(&g, 4), storage);
+                let out_total: usize = d.shards.iter().map(|s| s.m_out()).sum();
+                let in_total: usize = d.shards.iter().map(|s| s.m_in()).sum();
+                assert_eq!(out_total, g.m(), "{kind:?}/{storage:?}");
+                assert_eq!(in_total, g.m(), "{kind:?}/{storage:?}");
+            }
         }
     }
 
     #[test]
     fn shard_neighbors_match_global_graph() {
         let g = generators::kron(7, 4, 3);
-        let d = DistGraph::block(&g, 3);
-        for s in &d.shards {
-            for u in 0..s.n_local() {
-                let gu = s.global_id(u);
-                assert_eq!(s.out_neighbors(u), g.neighbors(gu));
-                assert_eq!(s.out_degree[u] as usize, g.degree(gu));
-                // The local-index view resolves back to the same globals.
-                let back: Vec<VertexId> =
-                    s.out_neighbors_local(u).iter().map(|&t| s.global_of(t as usize)).collect();
-                assert_eq!(back, g.neighbors(gu));
+        for storage in KINDS {
+            let d = DistGraph::build_with_storage(
+                &g,
+                Arc::new(Partition1D::block(g.n(), 3)),
+                storage,
+            );
+            let mut scratch = Vec::new();
+            for s in &d.shards {
+                assert_eq!(s.storage(), storage);
+                for u in 0..s.n_local() {
+                    let gu = s.global_id(u);
+                    assert_eq!(s.out_neighbors_into(u, &mut scratch), g.neighbors(gu));
+                    assert_eq!(s.out_degree[u] as usize, g.degree(gu));
+                    assert_eq!(s.row_len(u), g.degree(gu));
+                    // The local-index view resolves back to the same globals.
+                    let back: Vec<VertexId> =
+                        s.row_locals(u).map(|t| s.global_of(t as usize)).collect();
+                    assert_eq!(back, g.neighbors(gu));
+                }
             }
         }
     }
@@ -615,32 +753,38 @@ mod tests {
     #[test]
     fn mirror_tables_are_bidirectional() {
         let g = generators::kron(7, 6, 21);
-        let d = DistGraph::build_with(&g, PartitionKind::VertexCut.build(&g, 4));
-        let mut mirror_edges = 0usize;
-        for s in &d.shards {
-            for u in 0..s.n_local() {
-                for &(dst, gi) in s.mirrors(u) {
-                    let peer = &d.shards[dst as usize];
-                    // The mirror slot names the same global vertex and
-                    // really holds edges of it.
-                    assert_eq!(peer.ghost_global_ids[gi as usize], s.owned_ids[u]);
-                    let row = peer.n_local() + gi as usize;
-                    assert!(!peer.row_neighbors_local(row).is_empty());
+        for storage in KINDS {
+            let d = DistGraph::build_with_storage(
+                &g,
+                PartitionKind::VertexCut.build(&g, 4),
+                storage,
+            );
+            let mut mirror_edges = 0usize;
+            for s in &d.shards {
+                for u in 0..s.n_local() {
+                    for &(dst, gi) in s.mirrors(u) {
+                        let peer = &d.shards[dst as usize];
+                        // The mirror slot names the same global vertex and
+                        // really holds edges of it.
+                        assert_eq!(peer.ghost_global_ids[gi as usize], s.owned_ids[u]);
+                        let row = peer.n_local() + gi as usize;
+                        assert!(peer.row_len(row) > 0);
+                    }
+                }
+                for gi in 0..s.n_ghosts() {
+                    let row = s.n_local() + gi;
+                    if s.row_len(row) > 0 {
+                        mirror_edges += 1;
+                        // This mirror must be listed at its master.
+                        let owner = &d.shards[s.ghost_owner[gi] as usize];
+                        let mrow = s.ghost_master_index[gi] as usize;
+                        assert!(owner.mirrors(mrow).contains(&(s.locality, gi as u32)));
+                    }
                 }
             }
-            for gi in 0..s.n_ghosts() {
-                let row = s.n_local() + gi;
-                if !s.row_neighbors_local(row).is_empty() {
-                    mirror_edges += 1;
-                    // This mirror must be listed at its master.
-                    let owner = &d.shards[s.ghost_owner[gi] as usize];
-                    let mrow = s.ghost_master_index[gi] as usize;
-                    assert!(owner.mirrors(mrow).contains(&(s.locality, gi as u32)));
-                }
-            }
+            assert!(mirror_edges > 0, "kron@4 vertex cut should produce mirrors");
+            assert!(d.has_mirrors());
         }
-        assert!(mirror_edges > 0, "kron@4 vertex cut should produce mirrors");
-        assert!(d.has_mirrors());
         assert!(!DistGraph::block(&g, 4).has_mirrors());
     }
 
@@ -650,25 +794,27 @@ mod tests {
         // tgt) homed edges equals the graph's edge multiset.
         let g = generators::urand(6, 5, 33);
         for kind in PartitionKind::all() {
-            let d = DistGraph::build_with(&g, kind.build(&g, 3));
-            let mut got: Vec<(VertexId, VertexId)> = Vec::new();
-            for s in &d.shards {
-                for row in 0..s.n_rows() {
-                    let src = s.global_of(row);
-                    for &t in s.row_neighbors_local(row) {
-                        got.push((src, s.global_of(t as usize)));
+            for storage in KINDS {
+                let d = DistGraph::build_with_storage(&g, kind.build(&g, 3), storage);
+                let mut got: Vec<(VertexId, VertexId)> = Vec::new();
+                for s in &d.shards {
+                    for row in 0..s.n_rows() {
+                        let src = s.global_of(row);
+                        for t in s.row_locals(row) {
+                            got.push((src, s.global_of(t as usize)));
+                        }
                     }
                 }
-            }
-            got.sort_unstable();
-            let mut want: Vec<(VertexId, VertexId)> = Vec::new();
-            for u in 0..g.n() as VertexId {
-                for &v in g.neighbors(u) {
-                    want.push((u, v));
+                got.sort_unstable();
+                let mut want: Vec<(VertexId, VertexId)> = Vec::new();
+                for u in 0..g.n() as VertexId {
+                    for &v in g.neighbors(u) {
+                        want.push((u, v));
+                    }
                 }
+                want.sort_unstable();
+                assert_eq!(got, want, "{kind:?}/{storage:?}");
             }
-            want.sort_unstable();
-            assert_eq!(got, want, "{kind:?}");
         }
     }
 
@@ -676,37 +822,109 @@ mod tests {
     fn weighted_edges_survive_sharding() {
         let g = generators::with_random_weights(&generators::urand(6, 4, 5), 1.0, 9.0, 6);
         for kind in PartitionKind::all() {
-            let d = DistGraph::build_with(&g, kind.build(&g, 3));
-            assert!(d.is_weighted(), "{kind:?}");
-            let mut total = 0usize;
-            let mut sum = 0.0f64;
-            for s in &d.shards {
-                for row in 0..s.n_rows() {
-                    for (_, w) in s.row_edges(row) {
-                        assert!((1.0..9.0).contains(&w));
-                        total += 1;
-                        sum += w as f64;
+            for storage in KINDS {
+                let d = DistGraph::build_with_storage(&g, kind.build(&g, 3), storage);
+                assert!(d.is_weighted(), "{kind:?}/{storage:?}");
+                let mut total = 0usize;
+                let mut sum = 0.0f64;
+                for s in &d.shards {
+                    for row in 0..s.n_rows() {
+                        for (_, w) in s.row_edges(row) {
+                            assert!((1.0..9.0).contains(&w));
+                            total += 1;
+                            sum += w as f64;
+                        }
                     }
                 }
+                assert_eq!(total, g.m(), "{kind:?}/{storage:?}");
+                let want: f64 = (0..g.n() as VertexId)
+                    .flat_map(|u| {
+                        g.neighbors_weighted(u).map(|(_, w)| w as f64).collect::<Vec<_>>()
+                    })
+                    .sum();
+                assert!((sum - want).abs() < 1e-3, "{kind:?}/{storage:?}");
             }
-            assert_eq!(total, g.m(), "{kind:?}");
-            let want: f64 = (0..g.n() as VertexId)
-                .flat_map(|u| g.neighbors_weighted(u).map(|(_, w)| w as f64).collect::<Vec<_>>())
-                .sum();
-            assert!((sum - want).abs() < 1e-3, "{kind:?}");
         }
     }
 
     #[test]
     fn in_neighbors_are_the_transpose() {
         let g = generators::urand_directed(6, 4, 5);
-        let d = DistGraph::block(&g, 2);
         let t = g.transpose();
-        for s in &d.shards {
-            for u in 0..s.n_local() {
-                assert_eq!(s.in_neighbors(u), t.neighbors(s.global_id(u)));
+        for storage in KINDS {
+            let d = DistGraph::build_with_storage(
+                &g,
+                Arc::new(Partition1D::block(g.n(), 2)),
+                storage,
+            );
+            let mut scratch = Vec::new();
+            for s in &d.shards {
+                for u in 0..s.n_local() {
+                    let want = t.neighbors(s.global_id(u));
+                    assert_eq!(s.in_neighbors_into(u, &mut scratch), want);
+                    assert_eq!(s.in_neighbors_iter(u).collect::<Vec<_>>(), want);
+                    assert_eq!(s.in_len(u), want.len());
+                }
             }
         }
+    }
+
+    #[test]
+    fn row_iteration_is_storage_invariant() {
+        // Plain and compressed shards agree entry-for-entry on every row
+        // view, for every scheme (the in-file smoke test; the full
+        // matrix lives in tests/storage_props.rs).
+        let g = generators::kron(7, 6, 9);
+        for kind in PartitionKind::all() {
+            let scheme = kind.build(&g, 4);
+            let dp = DistGraph::build_with_storage(&g, scheme.clone(), StorageKind::Plain);
+            let dc = DistGraph::build_with_storage(&g, scheme, StorageKind::Compressed);
+            for (sp, sc) in dp.shards.iter().zip(&dc.shards) {
+                assert_eq!(sp.owned_ids, sc.owned_ids);
+                assert_eq!(sp.ghost_global_ids, sc.ghost_global_ids);
+                for row in 0..sp.n_rows() {
+                    assert_eq!(
+                        sp.row_locals(row).collect::<Vec<_>>(),
+                        sc.row_locals(row).collect::<Vec<_>>()
+                    );
+                    assert_eq!(
+                        sp.row_edges(row).collect::<Vec<_>>(),
+                        sc.row_edges(row).collect::<Vec<_>>()
+                    );
+                }
+                for u in 0..sp.n_local() {
+                    assert_eq!(
+                        sp.in_neighbors_iter(u).collect::<Vec<_>>(),
+                        sc.in_neighbors_iter(u).collect::<Vec<_>>()
+                    );
+                    assert_eq!(sp.mirrors(u), sc.mirrors(u));
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn mem_stats_report_compression() {
+        let g = generators::kron(10, 8, 7);
+        let scheme = Arc::new(Partition1D::block(g.n(), 4));
+        let dp = DistGraph::build_with_storage(&g, scheme.clone(), StorageKind::Plain);
+        let dc = DistGraph::build_with_storage(&g, scheme, StorageKind::Compressed);
+        let (pm, cm) = (dp.mem_stats(), dc.mem_stats());
+        assert_eq!(pm.storage, "plain");
+        assert_eq!(cm.storage, "compressed");
+        assert!(pm.bytes_per_edge > 0.0 && cm.bytes_per_edge > 0.0);
+        assert!(
+            cm.total_shard_bytes < pm.total_shard_bytes,
+            "compressed {} vs plain {}",
+            cm.total_shard_bytes,
+            pm.total_shard_bytes
+        );
+        assert!(pm.max_shard_bytes <= pm.total_shard_bytes);
+        assert!(pm.peak_builder_bytes > 0);
+        assert!(pm.build_ms >= 0.0);
+        // Shard totals agree with the per-shard accessor.
+        let sum: usize = dp.shards.iter().map(Shard::heap_bytes).sum();
+        assert_eq!(sum, pm.total_shard_bytes);
     }
 
     #[test]
@@ -759,8 +977,13 @@ mod tests {
                 }
             }
             let folded = ell.fold_rows(&virt);
+            let mut scratch = Vec::new();
             for u in 0..s.n_local() {
-                let want: f32 = s.in_neighbors(u).iter().map(|&v| contrib[v as usize]).sum();
+                let want: f32 = s
+                    .in_neighbors_into(u, &mut scratch)
+                    .iter()
+                    .map(|&v| contrib[v as usize])
+                    .sum();
                 assert!((folded[u] - want).abs() < 1e-4, "row {u}: {} vs {want}", folded[u]);
             }
         }

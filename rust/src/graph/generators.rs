@@ -43,56 +43,36 @@ impl SplitMix64 {
     }
 }
 
-/// Erdős–Rényi G(n, m) — the GAP "urand" model: `n = 2^scale` vertices,
-/// `degree * n` uniformly random directed edges, then symmetrized (GAP
-/// urand graphs are undirected), self loops and duplicates removed.
-pub fn urand(scale: u32, degree: usize, seed: u64) -> Csr {
+/// Raw urand sampling: emit the `degree * 2^scale` uniformly random
+/// directed pairs exactly as [`urand`]/[`urand_directed`] draw them
+/// (self loops included — callers filter). The streaming ingester
+/// ([`stream`](super::stream)) replays this without an [`EdgeList`].
+pub fn sample_urand(scale: u32, degree: usize, seed: u64, mut emit: impl FnMut(VertexId, VertexId)) {
     let n = 1usize << scale;
-    let m = n * degree;
     let mut rng = SplitMix64::new(seed);
-    let mut el = EdgeList::new(n);
-    el.edges.reserve(m);
-    for _ in 0..m {
+    for _ in 0..n * degree {
         let u = rng.below(n as u64) as VertexId;
         let v = rng.below(n as u64) as VertexId;
-        el.push(u, v);
+        emit(u, v);
     }
-    el.symmetrize();
-    Csr::from_edge_list(&el)
 }
 
-/// Directed Erdős–Rényi G(n, m) without symmetrization — used for PageRank
-/// inputs where direction matters.
-pub fn urand_directed(scale: u32, degree: usize, seed: u64) -> Csr {
+/// Raw RMAT sampling: emit the quadrant-descent pairs exactly as
+/// [`rmat`] draws them (self loops already dropped, duplicates kept).
+pub fn sample_rmat(
+    scale: u32,
+    degree: usize,
+    a: f64,
+    b: f64,
+    c: f64,
+    seed: u64,
+    mut emit: impl FnMut(VertexId, VertexId),
+) {
     let n = 1usize << scale;
-    let m = n * degree;
-    let mut rng = SplitMix64::new(seed);
-    let mut el = EdgeList::new(n);
-    el.edges.reserve(m);
-    for _ in 0..m {
-        let u = rng.below(n as u64) as VertexId;
-        let v = rng.below(n as u64) as VertexId;
-        if u != v {
-            el.push(u, v);
-        }
-    }
-    el.dedup();
-    Csr::from_edge_list(&el)
-}
-
-/// RMAT / Kronecker generator (GAP `kron`): recursive quadrant descent with
-/// probabilities `(a, b, c, d)`; the default (0.57, 0.19, 0.19, 0.05) is the
-/// Graph500 parameterization, producing the skewed degree distributions the
-/// paper's load-imbalance discussion targets.
-pub fn rmat(scale: u32, degree: usize, a: f64, b: f64, c: f64, seed: u64) -> Csr {
-    let n = 1usize << scale;
-    let m = n * degree;
     let d = 1.0 - a - b - c;
     assert!(d >= -1e-9, "rmat probabilities exceed 1");
     let mut rng = SplitMix64::new(seed);
-    let mut el = EdgeList::new(n);
-    el.edges.reserve(m);
-    for _ in 0..m {
+    for _ in 0..n * degree {
         let (mut u, mut v) = (0usize, 0usize);
         for _ in 0..scale {
             let r = rng.f64();
@@ -109,9 +89,47 @@ pub fn rmat(scale: u32, degree: usize, a: f64, b: f64, c: f64, seed: u64) -> Csr
             v = (v << 1) | dv;
         }
         if u != v {
-            el.push(u as VertexId, v as VertexId);
+            emit(u as VertexId, v as VertexId);
         }
     }
+}
+
+/// Erdős–Rényi G(n, m) — the GAP "urand" model: `n = 2^scale` vertices,
+/// `degree * n` uniformly random directed edges, then symmetrized (GAP
+/// urand graphs are undirected), self loops and duplicates removed.
+pub fn urand(scale: u32, degree: usize, seed: u64) -> Csr {
+    let n = 1usize << scale;
+    let mut el = EdgeList::new(n);
+    el.edges.reserve(n * degree);
+    sample_urand(scale, degree, seed, |u, v| el.push(u, v));
+    el.symmetrize();
+    Csr::from_edge_list(&el)
+}
+
+/// Directed Erdős–Rényi G(n, m) without symmetrization — used for PageRank
+/// inputs where direction matters.
+pub fn urand_directed(scale: u32, degree: usize, seed: u64) -> Csr {
+    let n = 1usize << scale;
+    let mut el = EdgeList::new(n);
+    el.edges.reserve(n * degree);
+    sample_urand(scale, degree, seed, |u, v| {
+        if u != v {
+            el.push(u, v);
+        }
+    });
+    el.dedup();
+    Csr::from_edge_list(&el)
+}
+
+/// RMAT / Kronecker generator (GAP `kron`): recursive quadrant descent with
+/// probabilities `(a, b, c, d)`; the default (0.57, 0.19, 0.19, 0.05) is the
+/// Graph500 parameterization, producing the skewed degree distributions the
+/// paper's load-imbalance discussion targets.
+pub fn rmat(scale: u32, degree: usize, a: f64, b: f64, c: f64, seed: u64) -> Csr {
+    let n = 1usize << scale;
+    let mut el = EdgeList::new(n);
+    el.edges.reserve(n * degree);
+    sample_rmat(scale, degree, a, b, c, seed, |u, v| el.push(u, v));
     el.symmetrize();
     Csr::from_edge_list(&el)
 }
@@ -221,16 +239,24 @@ pub fn with_symmetric_random_weights(g: &Csr, lo: f32, hi: f32, seed: u64) -> Cs
     let mut el = EdgeList::new(g.n());
     for u in 0..g.n() as VertexId {
         for &v in g.neighbors(u) {
-            let (a, b) = if u <= v { (u, v) } else { (v, u) };
-            // One independently-mixed draw per unordered pair: SplitMix64
-            // is a bijective mixer, so seeding with the pair key gives a
-            // deterministic, well-distributed weight.
-            let key = ((a as u64) << 32) | b as u64;
-            let mut rng = SplitMix64::new(seed ^ key.wrapping_mul(0x9E3779B97F4A7C15));
-            el.push_weighted(u, v, lo + (hi - lo) * rng.f64() as f32);
+            el.push_weighted(u, v, symmetric_weight(seed, lo, hi, u, v));
         }
     }
     Csr::from_edge_list(&el)
+}
+
+/// The pair-keyed weight draw behind [`with_symmetric_random_weights`]:
+/// order-independent (`w(u,v) == w(v,u)`) and a pure function of the
+/// pair, so the streaming ingester can stamp weights per edge without
+/// any shared sequence state.
+pub fn symmetric_weight(seed: u64, lo: f32, hi: f32, u: VertexId, v: VertexId) -> f32 {
+    let (a, b) = if u <= v { (u, v) } else { (v, u) };
+    // One independently-mixed draw per unordered pair: SplitMix64 is a
+    // bijective mixer, so seeding with the pair key gives a
+    // deterministic, well-distributed weight.
+    let key = ((a as u64) << 32) | b as u64;
+    let mut rng = SplitMix64::new(seed ^ key.wrapping_mul(0x9E3779B97F4A7C15));
+    lo + (hi - lo) * rng.f64() as f32
 }
 
 #[cfg(test)]

@@ -10,6 +10,9 @@
 //! [`VertexCut2D`]) and [`DistGraph`] carve a graph into per-locality
 //! shards (with ghost/mirror tables for vertex cuts) for the simulated
 //! runtime, and [`views`] provide NWGraph-style traversal ranges.
+//! [`storage`] makes shard adjacency pluggable (plain arrays or
+//! delta-varint compressed rows) and [`stream`] builds shards from an
+//! edge stream without ever materializing the global graph.
 
 pub mod builder;
 pub mod csr;
@@ -19,12 +22,16 @@ pub mod edge_list;
 pub mod generators;
 pub mod io;
 pub mod partition;
+pub mod storage;
+pub mod stream;
 pub mod views;
 
 pub use csr::Csr;
 pub use distributed::{DistGraph, EllShard, Shard};
 pub use edge_list::EdgeList;
 pub use partition::{Hash1D, Partition1D, PartitionKind, PartitionScheme, VertexCut2D};
+pub use storage::{AdjacencyStorage, CompressedCsr, StorageKind};
+pub use stream::EdgeSource;
 
 /// Vertex identifier (global index space).
 pub type VertexId = u32;

@@ -213,9 +213,25 @@ impl Partition1D {
     /// in integer arithmetic (`l * m / P`, no float rounding) and clamped
     /// monotone, so the result is always a valid cover.
     pub fn edge_balanced(g: &Csr, p: u32) -> Self {
-        let n = g.n();
-        let m = g.m();
-        let offsets = g.offsets();
+        Partition1D::edge_balanced_cuts(g.offsets(), g.n(), g.m(), p)
+    }
+
+    /// Edge-balanced cuts from a degree array alone — the streaming
+    /// ingester's entry point (it has per-vertex degrees but no CSR).
+    /// Identical cuts to [`Partition1D::edge_balanced`] on the same graph.
+    pub fn edge_balanced_from_degrees(degrees: &[u32], p: u32) -> Self {
+        let n = degrees.len();
+        let mut offsets = Vec::with_capacity(n + 1);
+        let mut acc = 0usize;
+        offsets.push(0);
+        for &d in degrees {
+            acc += d as usize;
+            offsets.push(acc);
+        }
+        Partition1D::edge_balanced_cuts(&offsets, n, acc, p)
+    }
+
+    fn edge_balanced_cuts(offsets: &[usize], n: usize, m: usize, p: u32) -> Self {
         let mut starts = Vec::with_capacity(p as usize + 1);
         starts.push(0);
         for l in 1..p as usize {
@@ -446,26 +462,48 @@ pub struct VertexCut2D {
 impl VertexCut2D {
     /// Build the greedy cut of `g` over `p` localities (`p <= 64`).
     pub fn new(g: &Csr, p: u32) -> Self {
-        assert!(p > 0, "need at least one locality");
-        assert!(p <= 64, "VertexCut2D supports at most 64 localities, got {p}");
-        let n = g.n();
-        let all_mask: u64 = u64::MAX >> (64 - p);
-        let cap = (g.m() / (8 * p as usize)).max(1);
-        let mut replicas = vec![0u64; n];
-        let mut load = vec![0usize; p as usize];
-        let mut edge_home = vec![0 as LocalityId; g.m()];
+        let degrees: Vec<u32> = (0..g.n()).map(|u| g.degree(u as VertexId) as u32).collect();
         let offsets = g.offsets();
         let targets = g.targets();
-        for u in 0..n {
-            let du = g.degree(u as VertexId);
-            for e in offsets[u]..offsets[u + 1] {
-                let v = targets[e] as usize;
+        VertexCut2D::from_parts(
+            g.n(),
+            p,
+            &degrees,
+            (0..g.n()).flat_map(|u| {
+                targets[offsets[u]..offsets[u + 1]].iter().map(move |&v| (u as VertexId, v))
+            }),
+        )
+    }
+
+    /// Build the greedy cut from per-vertex degrees and an edge stream in
+    /// global CSR order (`u` ascending, targets in row order) — the
+    /// streaming ingester's entry point. Identical construction to
+    /// [`VertexCut2D::new`] on the materialized graph.
+    pub fn from_parts(
+        n: usize,
+        p: u32,
+        degrees: &[u32],
+        edges: impl Iterator<Item = (VertexId, VertexId)>,
+    ) -> Self {
+        assert!(p > 0, "need at least one locality");
+        assert!(p <= 64, "VertexCut2D supports at most 64 localities, got {p}");
+        assert_eq!(degrees.len(), n);
+        let m: usize = degrees.iter().map(|&d| d as usize).sum();
+        let all_mask: u64 = u64::MAX >> (64 - p);
+        let cap = (m / (8 * p as usize)).max(1);
+        let mut replicas = vec![0u64; n];
+        let mut load = vec![0usize; p as usize];
+        let mut edge_home = vec![0 as LocalityId; m];
+        for (e, (gu, gv)) in edges.enumerate() {
+            {
+                let (u, v) = (gu as usize, gv as usize);
+                let du = degrees[u] as usize;
                 let (ru, rv) = (replicas[u], replicas[v]);
                 let both = ru & rv;
                 let cand = if both != 0 {
                     both
                 } else if ru != 0 && rv != 0 {
-                    if du >= g.degree(v as VertexId) {
+                    if du >= degrees[v] as usize {
                         ru
                     } else {
                         rv
@@ -651,6 +689,39 @@ mod tests {
         );
         let total: usize = (0..8).map(|l| bal.len_of(l)).sum();
         assert_eq!(total, g.n());
+    }
+
+    #[test]
+    fn degree_only_constructors_match_materialized() {
+        // The streaming entry points must produce the exact same schemes
+        // as their CSR-consuming twins.
+        let g = generators::kron(8, 6, 19);
+        let degrees: Vec<u32> = (0..g.n()).map(|u| g.degree(u as VertexId) as u32).collect();
+        for p in [1u32, 3, 8] {
+            assert_eq!(
+                Partition1D::edge_balanced(&g, p),
+                Partition1D::edge_balanced_from_degrees(&degrees, p)
+            );
+            let a = VertexCut2D::new(&g, p);
+            let offsets = g.offsets();
+            let targets = g.targets();
+            let b = VertexCut2D::from_parts(
+                g.n(),
+                p,
+                &degrees,
+                (0..g.n()).flat_map(|u| {
+                    targets[offsets[u]..offsets[u + 1]].iter().map(move |&v| (u as VertexId, v))
+                }),
+            );
+            for v in 0..g.n() as VertexId {
+                assert_eq!(a.owner(v), b.owner(v), "p={p} v={v}");
+                assert_eq!(a.master_index(v), b.master_index(v), "p={p} v={v}");
+            }
+            for e in 0..g.m() {
+                assert_eq!(a.edge_home(0, e), b.edge_home(0, e), "p={p} e={e}");
+            }
+            assert_eq!(a.replication_factor(), b.replication_factor());
+        }
     }
 
     #[test]

@@ -1,0 +1,685 @@
+//! Pluggable adjacency storage: plain arrays or delta-varint compressed
+//! rows.
+//!
+//! The memory wall the ROADMAP's "billion-edge scale" item targets is
+//! adjacency: plain CSR spends 4 bytes per edge on the target id (8 when
+//! a shard keeps both the global and the dense-local view) plus 8 bytes
+//! per row of `usize` offsets. Sorted rows compress well — consecutive
+//! targets are close, so delta + LEB128 varint encoding stores most
+//! entries in 1–2 bytes. [`AdjRows`] is the shared row container behind
+//! both [`Csr`] wrappers and [`Shard`](super::Shard) adjacency:
+//!
+//! * **Plain** keeps the historical flat arrays (zero-copy row slices);
+//! * **Compressed** stores each row as `[count][zigzag-delta varints...]`
+//!   over a shared byte buffer with 4-byte per-row byte offsets.
+//!
+//! Rows decode through [`RowIter`] (allocation-free streaming decode) or
+//! into a caller-owned scratch `Vec` (the decode-scratch contract: hot
+//! loops own one reusable buffer each, in the spirit of the pooled
+//! aggregator combiners). Zigzag encoding is used even for ascending
+//! rows so the same codec serves the shard's dense-local row view, which
+//! is *not* monotone (owned and ghost row indices interleave).
+//!
+//! [`AdjacencyStorage`] is the trait consumers iterate through without
+//! knowing the encoding; [`Csr`], [`AdjRows`], and [`CompressedCsr`]
+//! implement it.
+
+use super::{Csr, VertexId};
+
+/// Which adjacency encoding shards use — the `storage` config/CLI key.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum StorageKind {
+    /// Flat offset/target arrays (the historical layout).
+    #[default]
+    Plain,
+    /// Delta-encoded varint rows over a shared byte buffer.
+    Compressed,
+}
+
+impl StorageKind {
+    /// Parse a config/CLI spelling.
+    pub fn parse(s: &str) -> Option<StorageKind> {
+        match s {
+            "plain" => Some(StorageKind::Plain),
+            "compressed" | "varint" => Some(StorageKind::Compressed),
+            _ => None,
+        }
+    }
+
+    /// Config spelling of this kind.
+    pub fn name(&self) -> &'static str {
+        match self {
+            StorageKind::Plain => "plain",
+            StorageKind::Compressed => "compressed",
+        }
+    }
+}
+
+/// Append `v` as an LEB128 varint (7 bits per byte, high bit = continue).
+#[inline]
+pub fn write_varint(out: &mut Vec<u8>, mut v: u64) {
+    while v >= 0x80 {
+        out.push((v as u8 & 0x7f) | 0x80);
+        v >>= 7;
+    }
+    out.push(v as u8);
+}
+
+/// Read one LEB128 varint from the front of `bytes`, advancing the slice.
+#[inline]
+pub fn take_varint(bytes: &mut &[u8]) -> u64 {
+    let mut v = 0u64;
+    let mut shift = 0u32;
+    loop {
+        let b = bytes[0];
+        *bytes = &bytes[1..];
+        v |= u64::from(b & 0x7f) << shift;
+        if b < 0x80 {
+            return v;
+        }
+        shift += 7;
+        debug_assert!(shift < 64, "varint longer than 64 bits");
+    }
+}
+
+/// Zigzag-map a signed delta to an unsigned varint payload
+/// (`0, -1, 1, -2, ...` → `0, 1, 2, 3, ...`).
+#[inline]
+pub fn zigzag(v: i64) -> u64 {
+    ((v << 1) ^ (v >> 63)) as u64
+}
+
+/// Inverse of [`zigzag`].
+#[inline]
+pub fn unzigzag(v: u64) -> i64 {
+    ((v >> 1) as i64) ^ -((v & 1) as i64)
+}
+
+/// Streaming decoder over one adjacency row, for either encoding.
+/// Allocation-free; yields the row's stored values in order.
+#[derive(Debug, Clone)]
+pub enum RowIter<'a> {
+    /// Plain row: a slice walk.
+    Slice(std::slice::Iter<'a, u32>),
+    /// Compressed row: zigzag-delta varint decode.
+    Delta {
+        /// Remaining encoded bytes of this row.
+        bytes: &'a [u8],
+        /// Entries left to decode.
+        remaining: usize,
+        /// Running delta accumulator.
+        prev: i64,
+    },
+}
+
+impl<'a> Iterator for RowIter<'a> {
+    type Item = u32;
+
+    #[inline]
+    fn next(&mut self) -> Option<u32> {
+        match self {
+            RowIter::Slice(it) => it.next().copied(),
+            RowIter::Delta { bytes, remaining, prev } => {
+                if *remaining == 0 {
+                    return None;
+                }
+                *remaining -= 1;
+                *prev += unzigzag(take_varint(bytes));
+                debug_assert!(*prev >= 0 && *prev <= u32::MAX as i64);
+                Some(*prev as u32)
+            }
+        }
+    }
+
+    fn size_hint(&self) -> (usize, Option<usize>) {
+        let n = match self {
+            RowIter::Slice(it) => it.len(),
+            RowIter::Delta { remaining, .. } => *remaining,
+        };
+        (n, Some(n))
+    }
+}
+
+impl<'a> ExactSizeIterator for RowIter<'a> {}
+
+/// Row-oriented adjacency consumed without knowledge of the encoding.
+/// The scratch-taking [`AdjacencyStorage::row`] is zero-copy for plain
+/// storage and decodes into the caller's buffer for compressed storage —
+/// callers own one scratch per hot loop and reuse it across rows.
+pub trait AdjacencyStorage {
+    /// Number of rows.
+    fn n_rows(&self) -> usize;
+
+    /// Entry count of `row`.
+    fn row_len(&self, row: usize) -> usize;
+
+    /// Streaming decode of `row`.
+    fn iter_row(&self, row: usize) -> RowIter<'_>;
+
+    /// `row` as a slice: plain storage returns its backing slice
+    /// (ignoring `scratch`), compressed storage decodes into `scratch`.
+    fn row<'a>(&'a self, row: usize, scratch: &'a mut Vec<u32>) -> &'a [u32];
+
+    /// Total entries across all rows.
+    fn total_entries(&self) -> usize;
+
+    /// Bytes of heap this structure holds (by element count, not
+    /// capacity, so the number is deterministic).
+    fn heap_bytes(&self) -> usize;
+}
+
+/// The shared row container: one of the two encodings of
+/// [`StorageKind`]. Values are whatever the owner stores per entry —
+/// dense local rows for shard out-adjacency, global vertex ids for
+/// in-adjacency and whole-graph CSRs.
+#[derive(Debug, Clone, PartialEq)]
+pub enum AdjRows {
+    /// Flat arrays. `vals` is the canonical per-entry value; `globals`
+    /// optionally carries a parallel global-id view (the historical
+    /// shard layout keeps both so global reads stay zero-copy) and is
+    /// empty when the owner needs only one view.
+    Plain {
+        /// Row boundaries, `len == n_rows + 1`.
+        offsets: Vec<usize>,
+        /// Canonical entry values, row-major.
+        vals: Vec<u32>,
+        /// Optional parallel global-id view (empty when unused).
+        globals: Vec<VertexId>,
+    },
+    /// Per-row `[count varint][zigzag-delta varints...]` streams over one
+    /// byte buffer. An empty byte range is an empty row (no count byte).
+    Compressed {
+        /// Byte boundaries into `bytes`, `len == n_rows + 1`.
+        byte_offsets: Vec<u32>,
+        /// Encoded row streams.
+        bytes: Vec<u8>,
+        /// Entry boundaries, `len == n_rows + 1`; built only when the
+        /// owner indexes a parallel per-entry array (weights), else
+        /// empty.
+        entry_offsets: Vec<u32>,
+        /// Total entries across all rows.
+        total: usize,
+    },
+}
+
+impl AdjRows {
+    /// An empty container of the given kind.
+    pub fn empty(kind: StorageKind) -> AdjRows {
+        AdjRowsBuilder::new(kind, false, false).finish()
+    }
+
+    /// Which encoding this is.
+    pub fn kind(&self) -> StorageKind {
+        match self {
+            AdjRows::Plain { .. } => StorageKind::Plain,
+            AdjRows::Compressed { .. } => StorageKind::Compressed,
+        }
+    }
+
+    /// First entry index of `row` in a parallel per-entry array (weights).
+    /// Compressed rows must have been built with entry tracking.
+    #[inline]
+    pub fn entry_start(&self, row: usize) -> usize {
+        match self {
+            AdjRows::Plain { offsets, .. } => offsets[row],
+            AdjRows::Compressed { entry_offsets, .. } => {
+                debug_assert!(!entry_offsets.is_empty(), "built without entry tracking");
+                entry_offsets[row] as usize
+            }
+        }
+    }
+
+    /// The parallel global-id view of `row`, when the encoding keeps one
+    /// (plain dual layout only).
+    #[inline]
+    pub fn globals_slice(&self, row: usize) -> Option<&[VertexId]> {
+        match self {
+            AdjRows::Plain { offsets, globals, .. } if !globals.is_empty() => {
+                Some(&globals[offsets[row]..offsets[row + 1]])
+            }
+            _ => None,
+        }
+    }
+}
+
+impl AdjacencyStorage for AdjRows {
+    fn n_rows(&self) -> usize {
+        match self {
+            AdjRows::Plain { offsets, .. } => offsets.len() - 1,
+            AdjRows::Compressed { byte_offsets, .. } => byte_offsets.len() - 1,
+        }
+    }
+
+    fn row_len(&self, row: usize) -> usize {
+        match self {
+            AdjRows::Plain { offsets, .. } => offsets[row + 1] - offsets[row],
+            AdjRows::Compressed { byte_offsets, bytes, entry_offsets, .. } => {
+                if !entry_offsets.is_empty() {
+                    return (entry_offsets[row + 1] - entry_offsets[row]) as usize;
+                }
+                let mut b = &bytes[byte_offsets[row] as usize..byte_offsets[row + 1] as usize];
+                if b.is_empty() {
+                    0
+                } else {
+                    take_varint(&mut b) as usize
+                }
+            }
+        }
+    }
+
+    fn iter_row(&self, row: usize) -> RowIter<'_> {
+        match self {
+            AdjRows::Plain { offsets, vals, .. } => {
+                RowIter::Slice(vals[offsets[row]..offsets[row + 1]].iter())
+            }
+            AdjRows::Compressed { byte_offsets, bytes, .. } => {
+                let mut b = &bytes[byte_offsets[row] as usize..byte_offsets[row + 1] as usize];
+                let remaining = if b.is_empty() { 0 } else { take_varint(&mut b) as usize };
+                RowIter::Delta { bytes: b, remaining, prev: 0 }
+            }
+        }
+    }
+
+    fn row<'a>(&'a self, row: usize, scratch: &'a mut Vec<u32>) -> &'a [u32] {
+        match self {
+            AdjRows::Plain { offsets, vals, .. } => &vals[offsets[row]..offsets[row + 1]],
+            rows @ AdjRows::Compressed { .. } => {
+                scratch.clear();
+                scratch.extend(rows.iter_row(row));
+                scratch
+            }
+        }
+    }
+
+    fn total_entries(&self) -> usize {
+        match self {
+            AdjRows::Plain { vals, .. } => vals.len(),
+            AdjRows::Compressed { total, .. } => *total,
+        }
+    }
+
+    fn heap_bytes(&self) -> usize {
+        match self {
+            AdjRows::Plain { offsets, vals, globals } => {
+                offsets.len() * std::mem::size_of::<usize>() + (vals.len() + globals.len()) * 4
+            }
+            AdjRows::Compressed { byte_offsets, bytes, entry_offsets, .. } => {
+                (byte_offsets.len() + entry_offsets.len()) * 4 + bytes.len()
+            }
+        }
+    }
+}
+
+/// Incremental [`AdjRows`] builder: `push` entries, `end_row` after each
+/// row (including empty ones), `finish` when all rows are in.
+#[derive(Debug)]
+pub struct AdjRowsBuilder {
+    kind: StorageKind,
+    /// Track per-row entry offsets (needed when a parallel weight array
+    /// will be indexed against compressed rows).
+    track_entries: bool,
+    /// Keep the parallel global-id view (plain dual layout).
+    dual: bool,
+    offsets: Vec<usize>,
+    vals: Vec<u32>,
+    globals: Vec<VertexId>,
+    byte_offsets: Vec<u32>,
+    bytes: Vec<u8>,
+    entry_offsets: Vec<u32>,
+    pending: Vec<u32>,
+    total: usize,
+}
+
+impl AdjRowsBuilder {
+    /// New builder. `track_entries` records per-row entry offsets for
+    /// compressed rows (weights); `dual` keeps the parallel global view
+    /// for plain rows.
+    pub fn new(kind: StorageKind, track_entries: bool, dual: bool) -> AdjRowsBuilder {
+        AdjRowsBuilder {
+            kind,
+            track_entries,
+            dual,
+            offsets: vec![0],
+            vals: Vec::new(),
+            globals: Vec::new(),
+            byte_offsets: vec![0],
+            bytes: Vec::new(),
+            entry_offsets: vec![0],
+            pending: Vec::new(),
+            total: 0,
+        }
+    }
+
+    /// Append one entry to the current row. `global` feeds the plain
+    /// dual view and is ignored otherwise (pass `val` again when the
+    /// canonical value *is* the global id).
+    #[inline]
+    pub fn push(&mut self, val: u32, global: VertexId) {
+        match self.kind {
+            StorageKind::Plain => {
+                self.vals.push(val);
+                if self.dual {
+                    self.globals.push(global);
+                }
+            }
+            StorageKind::Compressed => self.pending.push(val),
+        }
+    }
+
+    /// Close the current row.
+    pub fn end_row(&mut self) {
+        match self.kind {
+            StorageKind::Plain => {
+                self.offsets.push(self.vals.len());
+                self.total = self.vals.len();
+            }
+            StorageKind::Compressed => {
+                if !self.pending.is_empty() {
+                    write_varint(&mut self.bytes, self.pending.len() as u64);
+                    let mut prev = 0i64;
+                    for &v in &self.pending {
+                        write_varint(&mut self.bytes, zigzag(v as i64 - prev));
+                        prev = v as i64;
+                    }
+                }
+                assert!(self.bytes.len() <= u32::MAX as usize, "compressed rows exceed 4 GiB");
+                self.byte_offsets.push(self.bytes.len() as u32);
+                self.total += self.pending.len();
+                if self.track_entries {
+                    self.entry_offsets.push(self.total as u32);
+                }
+                self.pending.clear();
+            }
+        }
+    }
+
+    /// Finalize into an [`AdjRows`].
+    pub fn finish(self) -> AdjRows {
+        debug_assert!(self.pending.is_empty(), "finish() before end_row()");
+        match self.kind {
+            StorageKind::Plain => AdjRows::Plain {
+                offsets: self.offsets,
+                vals: self.vals,
+                globals: self.globals,
+            },
+            StorageKind::Compressed => AdjRows::Compressed {
+                byte_offsets: self.byte_offsets,
+                bytes: self.bytes,
+                entry_offsets: if self.track_entries { self.entry_offsets } else { Vec::new() },
+                total: self.total,
+            },
+        }
+    }
+}
+
+impl AdjacencyStorage for Csr {
+    fn n_rows(&self) -> usize {
+        self.n()
+    }
+
+    fn row_len(&self, row: usize) -> usize {
+        self.degree(row as VertexId)
+    }
+
+    fn iter_row(&self, row: usize) -> RowIter<'_> {
+        RowIter::Slice(self.neighbors(row as VertexId).iter())
+    }
+
+    fn row<'a>(&'a self, row: usize, _scratch: &'a mut Vec<u32>) -> &'a [u32] {
+        self.neighbors(row as VertexId)
+    }
+
+    fn total_entries(&self) -> usize {
+        self.m()
+    }
+
+    fn heap_bytes(&self) -> usize {
+        self.offsets().len() * std::mem::size_of::<usize>()
+            + self.targets().len() * 4
+            + self.weights().map_or(0, |w| w.len() * 4)
+    }
+}
+
+/// A whole-graph CSR with delta-varint compressed rows — the sequential
+/// counterpart of a compressed [`Shard`](super::Shard); weights stay a
+/// parallel f32 array.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CompressedCsr {
+    rows: AdjRows,
+    weights: Option<Vec<f32>>,
+}
+
+impl CompressedCsr {
+    /// Compress an existing [`Csr`] (rows are already sorted, so deltas
+    /// are non-negative and small).
+    pub fn from_csr(g: &Csr) -> CompressedCsr {
+        let weighted = g.is_weighted();
+        let mut b = AdjRowsBuilder::new(StorageKind::Compressed, weighted, false);
+        for u in 0..g.n() {
+            for &v in g.neighbors(u as VertexId) {
+                b.push(v, v);
+            }
+            b.end_row();
+        }
+        CompressedCsr { rows: b.finish(), weights: g.weights().map(<[f32]>::to_vec) }
+    }
+
+    /// Vertex count.
+    pub fn n(&self) -> usize {
+        self.rows.n_rows()
+    }
+
+    /// Directed edge count.
+    pub fn m(&self) -> usize {
+        self.rows.total_entries()
+    }
+
+    /// True when edges carry weights.
+    pub fn is_weighted(&self) -> bool {
+        self.weights.is_some()
+    }
+
+    /// Out-degree of `u`.
+    pub fn degree(&self, u: VertexId) -> usize {
+        self.rows.row_len(u as usize)
+    }
+
+    /// Streaming decode of `u`'s sorted out-neighbors.
+    pub fn neighbors_iter(&self, u: VertexId) -> RowIter<'_> {
+        self.rows.iter_row(u as usize)
+    }
+
+    /// Out-neighbors of `u` decoded into `scratch`.
+    pub fn neighbors_into<'a>(&'a self, u: VertexId, scratch: &'a mut Vec<u32>) -> &'a [u32] {
+        self.rows.row(u as usize, scratch)
+    }
+
+    /// Out-neighbors of `u` with weights; unweighted graphs yield unit
+    /// weights.
+    pub fn neighbors_weighted(&self, u: VertexId) -> impl Iterator<Item = (VertexId, f32)> + '_ {
+        let start = if self.weights.is_some() { self.rows.entry_start(u as usize) } else { 0 };
+        let w = self.weights.as_deref();
+        self.rows
+            .iter_row(u as usize)
+            .enumerate()
+            .map(move |(k, t)| (t, w.map(|w| w[start + k]).unwrap_or(1.0)))
+    }
+}
+
+impl AdjacencyStorage for CompressedCsr {
+    fn n_rows(&self) -> usize {
+        self.rows.n_rows()
+    }
+
+    fn row_len(&self, row: usize) -> usize {
+        self.rows.row_len(row)
+    }
+
+    fn iter_row(&self, row: usize) -> RowIter<'_> {
+        self.rows.iter_row(row)
+    }
+
+    fn row<'a>(&'a self, row: usize, scratch: &'a mut Vec<u32>) -> &'a [u32] {
+        self.rows.row(row, scratch)
+    }
+
+    fn total_entries(&self) -> usize {
+        self.rows.total_entries()
+    }
+
+    fn heap_bytes(&self) -> usize {
+        self.rows.heap_bytes() + self.weights.as_ref().map_or(0, |w| w.len() * 4)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generators;
+
+    #[test]
+    fn varint_roundtrip() {
+        let mut buf = Vec::new();
+        let vals = [0u64, 1, 127, 128, 300, 16383, 16384, u32::MAX as u64, u64::MAX];
+        for &v in &vals {
+            write_varint(&mut buf, v);
+        }
+        let mut s = buf.as_slice();
+        for &v in &vals {
+            assert_eq!(take_varint(&mut s), v);
+        }
+        assert!(s.is_empty());
+    }
+
+    #[test]
+    fn zigzag_roundtrip() {
+        for v in [0i64, 1, -1, 2, -2, 1000, -1000, i32::MAX as i64, -(i32::MAX as i64)] {
+            assert_eq!(unzigzag(zigzag(v)), v);
+        }
+        // Small magnitudes map to small payloads (the point of zigzag).
+        assert_eq!(zigzag(0), 0);
+        assert_eq!(zigzag(-1), 1);
+        assert_eq!(zigzag(1), 2);
+    }
+
+    fn roundtrip_rows(kind: StorageKind, rows: &[Vec<u32>]) {
+        let mut b = AdjRowsBuilder::new(kind, true, false);
+        for row in rows {
+            for &v in row {
+                b.push(v, v);
+            }
+            b.end_row();
+        }
+        let a = b.finish();
+        assert_eq!(a.n_rows(), rows.len());
+        let total: usize = rows.iter().map(Vec::len).sum();
+        assert_eq!(a.total_entries(), total);
+        let mut scratch = Vec::new();
+        for (i, row) in rows.iter().enumerate() {
+            assert_eq!(a.row_len(i), row.len());
+            assert_eq!(a.iter_row(i).collect::<Vec<_>>(), *row);
+            assert_eq!(a.row(i, &mut scratch), row.as_slice());
+        }
+    }
+
+    #[test]
+    fn adj_rows_roundtrip_both_kinds() {
+        let rows = vec![
+            vec![1, 2, 3],
+            vec![],
+            vec![7],
+            vec![100, 5, 9000, 2], // non-monotone (dense-local view)
+            vec![],
+            (0..200).map(|i| i * 3).collect(),
+        ];
+        roundtrip_rows(StorageKind::Plain, &rows);
+        roundtrip_rows(StorageKind::Compressed, &rows);
+    }
+
+    #[test]
+    fn entry_offsets_index_parallel_arrays() {
+        let rows = [vec![4u32, 8], vec![], vec![1, 2, 3]];
+        let mut b = AdjRowsBuilder::new(StorageKind::Compressed, true, false);
+        for row in &rows {
+            for &v in row {
+                b.push(v, v);
+            }
+            b.end_row();
+        }
+        let a = b.finish();
+        assert_eq!(a.entry_start(0), 0);
+        assert_eq!(a.entry_start(1), 2);
+        assert_eq!(a.entry_start(2), 2);
+        assert_eq!(a.total_entries(), 5);
+    }
+
+    #[test]
+    fn plain_dual_view_keeps_globals() {
+        let mut b = AdjRowsBuilder::new(StorageKind::Plain, false, true);
+        b.push(3, 30);
+        b.push(1, 10);
+        b.end_row();
+        b.end_row(); // empty row
+        let a = b.finish();
+        assert_eq!(a.globals_slice(0), Some(&[30u32, 10][..]));
+        assert_eq!(a.globals_slice(1), Some(&[][..]));
+        assert_eq!(a.iter_row(0).collect::<Vec<_>>(), vec![3, 1]);
+    }
+
+    #[test]
+    fn compressed_csr_matches_plain() {
+        let g = generators::kron(8, 6, 5);
+        let c = CompressedCsr::from_csr(&g);
+        assert_eq!(c.n(), g.n());
+        assert_eq!(c.m(), g.m());
+        let mut scratch = Vec::new();
+        for u in 0..g.n() as VertexId {
+            assert_eq!(c.degree(u), g.degree(u));
+            assert_eq!(c.neighbors_into(u, &mut scratch), g.neighbors(u));
+            assert_eq!(c.neighbors_iter(u).collect::<Vec<_>>(), g.neighbors(u));
+        }
+    }
+
+    #[test]
+    fn compressed_csr_carries_weights() {
+        let g = generators::with_symmetric_random_weights(&generators::urand(7, 4, 3), 1.0, 9.0, 4);
+        let c = CompressedCsr::from_csr(&g);
+        assert!(c.is_weighted());
+        for u in 0..g.n() as VertexId {
+            let want: Vec<(VertexId, f32)> = g.neighbors_weighted(u).collect();
+            let got: Vec<(VertexId, f32)> = c.neighbors_weighted(u).collect();
+            assert_eq!(got, want);
+        }
+    }
+
+    #[test]
+    fn compressed_csr_is_smaller_on_sorted_rows() {
+        let g = generators::kron(10, 8, 7);
+        let c = CompressedCsr::from_csr(&g);
+        let (pb, cb) = (g.heap_bytes(), c.heap_bytes());
+        assert!(
+            (cb as f64) < 0.6 * pb as f64,
+            "compressed {cb} should be well under 60% of plain {pb}"
+        );
+    }
+
+    #[test]
+    fn storage_kind_parses() {
+        assert_eq!(StorageKind::parse("plain"), Some(StorageKind::Plain));
+        assert_eq!(StorageKind::parse("compressed"), Some(StorageKind::Compressed));
+        assert_eq!(StorageKind::parse("varint"), Some(StorageKind::Compressed));
+        assert_eq!(StorageKind::parse("zip"), None);
+        assert_eq!(StorageKind::default(), StorageKind::Plain);
+        assert_eq!(StorageKind::Compressed.name(), "compressed");
+    }
+
+    #[test]
+    fn empty_container_is_empty() {
+        for kind in [StorageKind::Plain, StorageKind::Compressed] {
+            let a = AdjRows::empty(kind);
+            assert_eq!(a.n_rows(), 0);
+            assert_eq!(a.total_entries(), 0);
+            assert_eq!(a.kind(), kind);
+        }
+    }
+}

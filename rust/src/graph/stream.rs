@@ -1,0 +1,509 @@
+//! Streaming shard construction: build a [`DistGraph`] from an edge
+//! stream without ever materializing the whole-graph [`EdgeList`] or
+//! [`Csr`](super::Csr).
+//!
+//! The materialized path ([`DistGraph::build_with_storage`]) needs the
+//! full CSR in one address space before it can route edges — that is the
+//! memory wall the scale sweep (ablation A9) measures. This module
+//! replays the same edge population straight from its *source* (the raw
+//! generator sampling, or an edge-list file) and routes it through the
+//! exact pipeline the materialized builder uses, so the resulting shards
+//! are **deeply equal** (`Shard: PartialEq`) to the materialized ones:
+//!
+//! 1. **Scatter**: raw pairs land in `p` ingest buckets keyed by the
+//!    block owner of the source vertex (contiguous ascending ranges, so
+//!    bucket concatenation is global CSR order). Symmetric sources emit
+//!    both directions and drop self loops — the streaming equivalent of
+//!    [`EdgeList::symmetrize`].
+//! 2. **Sort + dedup** per bucket (stable keep-first for file weights,
+//!    matching [`EdgeList::dedup`]); per-vertex degrees and the global
+//!    `m` accumulate here.
+//! 3. **Scheme build** from degrees alone:
+//!    [`Partition1D::edge_balanced_from_degrees`] and
+//!    [`VertexCut2D::from_parts`] are the streaming twins of the
+//!    CSR-consuming constructors (bit-identical schemes).
+//! 4. **Routing**: one pass over the buckets in order, tracking the
+//!    running global edge index so `edge_home(u, e)` sequences exactly
+//!    as on the materialized CSR; each bucket is dropped as it drains.
+//!    Synthetic weights are stamped here via the pair-keyed
+//!    [`symmetric_weight`] draw (a pure function of the endpoints, so no
+//!    sequential RNG state is needed —
+//!    [`with_random_weights`](super::generators::with_random_weights) is
+//!    sequence-dependent and deliberately *not* reproducible from a
+//!    stream).
+//! 5. **Assemble** per locality through the shared
+//!    [`assemble_shard`](super::distributed) seam.
+//!
+//! [`MemStats::peak_builder_bytes`](crate::amt::metrics::MemStats) here
+//! models distributed memory: the
+//! largest *per-locality* transient (ingest bucket + routed out/in
+//! buffers + the replicated degree array), not the leader-resident sum
+//! the materialized builder reports — the number the acceptance
+//! criterion compares.
+
+use std::path::PathBuf;
+use std::sync::Arc;
+use std::time::Instant;
+
+use super::distributed::{assemble_shard, finish_mirrors, DistGraph};
+use super::generators::{sample_rmat, sample_urand, symmetric_weight};
+use super::partition::{Hash1D, Partition1D, PartitionKind, PartitionScheme, VertexCut2D};
+use super::storage::StorageKind;
+use super::VertexId;
+use crate::amt::agas::BlockMap;
+use crate::Result;
+
+/// Where the edge stream comes from. Synthetic sources replay the raw
+/// generator sampling (`sample_urand` / `sample_rmat`), so a streamed
+/// build sees the exact edge population of the materialized generator
+/// with the same parameters.
+#[derive(Debug, Clone, PartialEq)]
+pub enum EdgeSource {
+    /// GAP urand: symmetrized Erdős–Rényi (matches [`generators::urand`](super::generators::urand)).
+    Urand {
+        /// `n = 2^scale` vertices.
+        scale: u32,
+        /// Average directed degree before symmetrization.
+        degree: usize,
+        /// PRNG seed.
+        seed: u64,
+    },
+    /// Directed Erdős–Rényi (matches [`generators::urand_directed`](super::generators::urand_directed)).
+    UrandDirected {
+        /// `n = 2^scale` vertices.
+        scale: u32,
+        /// Average degree.
+        degree: usize,
+        /// PRNG seed.
+        seed: u64,
+    },
+    /// Graph500 RMAT/Kronecker, symmetrized (matches [`generators::rmat`](super::generators::rmat) /
+    /// [`generators::kron`](super::generators::kron)).
+    Rmat {
+        /// `n = 2^scale` vertices.
+        scale: u32,
+        /// Average directed degree before symmetrization.
+        degree: usize,
+        /// Quadrant probability a.
+        a: f64,
+        /// Quadrant probability b.
+        b: f64,
+        /// Quadrant probability c.
+        c: f64,
+        /// PRNG seed.
+        seed: u64,
+    },
+    /// Whitespace edge-list file (`u v [w]` lines, `#`/`%` comments),
+    /// identical parsing to [`io::read_edge_list`](super::io::read_edge_list).
+    /// Read twice (vertex-count scan, then scatter) so the edge set is
+    /// never held whole; no dedup/symmetrization, matching the
+    /// materialized file path.
+    File(PathBuf),
+}
+
+impl EdgeSource {
+    /// Graph500-parameterized kron source (the A9 sweep input).
+    pub fn kron(scale: u32, degree: usize, seed: u64) -> EdgeSource {
+        EdgeSource::Rmat { scale, degree, a: 0.57, b: 0.19, c: 0.19, seed }
+    }
+
+    /// Map a config `generator` name to its streaming source.
+    pub fn from_generator(name: &str, scale: u32, degree: usize, seed: u64) -> Result<EdgeSource> {
+        Ok(match name {
+            "urand" => EdgeSource::Urand { scale, degree, seed },
+            "urand-directed" => EdgeSource::UrandDirected { scale, degree, seed },
+            "kron" => EdgeSource::kron(scale, degree, seed),
+            other => anyhow::bail!("unknown generator `{other}`"),
+        })
+    }
+
+    /// Both directions of every raw pair are ingested (and self loops
+    /// dropped) — the streaming [`EdgeList::symmetrize`].
+    fn symmetric(&self) -> bool {
+        matches!(self, EdgeSource::Urand { .. } | EdgeSource::Rmat { .. })
+    }
+
+    /// Whether duplicates are removed (synthetic sources dedup like their
+    /// generators; files keep duplicates like the materialized file path).
+    fn dedups(&self) -> bool {
+        !matches!(self, EdgeSource::File(_))
+    }
+}
+
+/// Pair-keyed synthetic weights stamped during routing — the streaming
+/// twin of
+/// [`with_symmetric_random_weights`](super::generators::with_symmetric_random_weights).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct WeightSpec {
+    /// Inclusive lower bound.
+    pub lo: f32,
+    /// Exclusive upper bound.
+    pub hi: f32,
+    /// Draw seed (pair-keyed, order-independent).
+    pub seed: u64,
+}
+
+#[derive(Default)]
+struct Bucket {
+    pairs: Vec<(VertexId, VertexId)>,
+    /// Parallel file-carried weights (empty otherwise).
+    weights: Vec<f32>,
+}
+
+impl Bucket {
+    fn bytes(&self) -> usize {
+        self.pairs.len() * std::mem::size_of::<(VertexId, VertexId)>() + self.weights.len() * 4
+    }
+}
+
+/// Build a [`DistGraph`] straight from `src` — the whole-graph
+/// `EdgeList`/`Csr` is never constructed. `weights` stamps pair-keyed
+/// synthetic weights on generator sources (rejected for files, which
+/// carry their own).
+pub fn build_streamed(
+    src: &EdgeSource,
+    kind: PartitionKind,
+    p: u32,
+    storage: StorageKind,
+    weights: Option<WeightSpec>,
+) -> Result<DistGraph> {
+    let started = Instant::now();
+    anyhow::ensure!(p > 0, "need at least one locality");
+    anyhow::ensure!(
+        weights.is_none() || !matches!(src, EdgeSource::File(_)),
+        "file sources carry their own weights; WeightSpec applies to generators"
+    );
+
+    // Stage 1: scatter raw pairs into per-locality ingest buckets keyed
+    // by the block owner of the source vertex.
+    let (n, mut buckets) = scatter(src, p)?;
+    let file_weighted = buckets.iter().any(|b| !b.weights.is_empty());
+    if file_weighted {
+        // A partially weighted file pads with 1.0, like read_edge_list.
+        for b in &mut buckets {
+            b.weights.resize(b.pairs.len(), 1.0);
+        }
+    }
+
+    // Stage 2: per-bucket sort (+ dedup keep-first), then degrees.
+    for b in &mut buckets {
+        if file_weighted {
+            let mut zipped: Vec<((VertexId, VertexId), f32)> =
+                b.pairs.iter().copied().zip(b.weights.iter().copied()).collect();
+            zipped.sort_by_key(|&(e, _)| e); // stable: duplicate order kept
+            if src.dedups() {
+                zipped.dedup_by_key(|&mut (e, _)| e);
+            }
+            b.pairs = zipped.iter().map(|&(e, _)| e).collect();
+            b.weights = zipped.iter().map(|&(_, w)| w).collect();
+        } else {
+            b.pairs.sort_unstable();
+            if src.dedups() {
+                b.pairs.dedup();
+            }
+        }
+    }
+    let mut degrees = vec![0u32; n];
+    for b in &buckets {
+        for &(u, _) in &b.pairs {
+            degrees[u as usize] += 1;
+        }
+    }
+    let m: usize = degrees.iter().map(|&d| d as usize).sum();
+
+    // Stage 3: the partition scheme, from degrees and (for the vertex
+    // cut) one read-only pass over the buckets in global CSR order.
+    let scheme: Arc<dyn PartitionScheme> = match kind {
+        PartitionKind::Block => Arc::new(Partition1D::block(n, p)),
+        PartitionKind::EdgeBalanced => Arc::new(Partition1D::edge_balanced_from_degrees(&degrees, p)),
+        PartitionKind::Hash => Arc::new(Hash1D::new(n, p)),
+        PartitionKind::VertexCut => Arc::new(VertexCut2D::from_parts(
+            n,
+            p,
+            &degrees,
+            buckets.iter().flat_map(|b| b.pairs.iter().copied()),
+        )),
+    };
+
+    // Stage 4: route every edge, draining buckets as they are consumed.
+    // The running global index makes `edge_home(u, e)` sequence exactly
+    // as on the materialized CSR (buckets concatenate in CSR order).
+    let weighted = weights.is_some() || file_weighted;
+    let mut homed: Vec<Vec<(VertexId, VertexId, f32)>> = vec![Vec::new(); p as usize];
+    let mut in_bufs: Vec<Vec<(VertexId, VertexId)>> = vec![Vec::new(); p as usize];
+    let bucket_bytes: Vec<usize> = buckets.iter().map(Bucket::bytes).collect();
+    let mut e = 0usize;
+    for b in &mut buckets {
+        let b = std::mem::take(b);
+        for (i, &(u, v)) in b.pairs.iter().enumerate() {
+            let w = if let Some(ws) = weights {
+                symmetric_weight(ws.seed, ws.lo, ws.hi, u, v)
+            } else if file_weighted {
+                b.weights[i]
+            } else {
+                1.0
+            };
+            homed[scheme.edge_home(u, e) as usize].push((u, v, w));
+            in_bufs[scheme.owner(v) as usize].push((v, u));
+            e += 1;
+        }
+    }
+    debug_assert_eq!(e, m);
+    for buf in &mut in_bufs {
+        buf.sort_unstable();
+    }
+    // Peak per-locality transient: ingest bucket + routed buffers + the
+    // replicated degree array (distributed-memory model; the
+    // materialized builder reports the leader-resident sum instead).
+    let peak = (0..p as usize)
+        .map(|l| {
+            bucket_bytes[l]
+                + homed[l].len() * std::mem::size_of::<(VertexId, VertexId, f32)>()
+                + in_bufs[l].len() * std::mem::size_of::<(VertexId, VertexId)>()
+        })
+        .max()
+        .unwrap_or(0)
+        + degrees.len() * 4;
+
+    // Stage 5: per-locality assembly through the shared seam.
+    let mut shards = Vec::with_capacity(p as usize);
+    for l in 0..p {
+        let owned_ids = scheme.owned_vertices(l);
+        let out_degree = owned_ids.iter().map(|&v| degrees[v as usize]).collect();
+        shards.push(assemble_shard(
+            l,
+            owned_ids,
+            out_degree,
+            scheme.as_ref(),
+            &homed[l as usize],
+            &in_bufs[l as usize],
+            weighted,
+            storage,
+        ));
+    }
+    finish_mirrors(&mut shards, n);
+    Ok(DistGraph::from_parts(scheme, shards, n, m, storage, peak, started))
+}
+
+/// Stage 1: raw pairs into block-keyed buckets. Returns `(n, buckets)`.
+fn scatter(src: &EdgeSource, p: u32) -> Result<(usize, Vec<Bucket>)> {
+    let mut buckets: Vec<Bucket> = (0..p).map(|_| Bucket::default()).collect();
+    match *src {
+        EdgeSource::Urand { scale, degree, seed } | EdgeSource::UrandDirected { scale, degree, seed } => {
+            let n = 1usize << scale;
+            let map = BlockMap::new(n, p);
+            let symmetric = src.symmetric();
+            sample_urand(scale, degree, seed, |u, v| {
+                if u != v {
+                    buckets[map.resolve(u as usize).locality as usize].pairs.push((u, v));
+                    if symmetric {
+                        buckets[map.resolve(v as usize).locality as usize].pairs.push((v, u));
+                    }
+                }
+            });
+            Ok((n, buckets))
+        }
+        EdgeSource::Rmat { scale, degree, a, b, c, seed } => {
+            let n = 1usize << scale;
+            let map = BlockMap::new(n, p);
+            sample_rmat(scale, degree, a, b, c, seed, |u, v| {
+                // sample_rmat already drops self loops.
+                buckets[map.resolve(u as usize).locality as usize].pairs.push((u, v));
+                buckets[map.resolve(v as usize).locality as usize].pairs.push((v, u));
+            });
+            Ok((n, buckets))
+        }
+        EdgeSource::File(ref path) => {
+            // Pass 1: vertex count only.
+            let mut n = 0usize;
+            for_each_file_edge(path, |u, v, _| {
+                n = n.max(u as usize + 1).max(v as usize + 1);
+                Ok(())
+            })?;
+            let map = BlockMap::new(n, p);
+            for_each_file_edge(path, |u, v, w| {
+                let b = &mut buckets[map.resolve(u as usize).locality as usize];
+                b.pairs.push((u, v));
+                if let Some(w) = w {
+                    b.weights.resize(b.pairs.len() - 1, 1.0);
+                    b.weights.push(w);
+                }
+                Ok(())
+            })?;
+            Ok((n, buckets))
+        }
+    }
+}
+
+/// Line-by-line edge-list parse shared by both file passes — the same
+/// grammar as [`io::read_edge_list`](super::io::read_edge_list), without
+/// ever holding the edge set.
+fn for_each_file_edge(
+    path: &PathBuf,
+    mut f: impl FnMut(VertexId, VertexId, Option<f32>) -> Result<()>,
+) -> Result<()> {
+    use std::io::{BufRead, BufReader};
+    let file = std::fs::File::open(path)?;
+    for (lineno, line) in BufReader::new(file).lines().enumerate() {
+        let line = line?;
+        let s = line.trim();
+        if s.is_empty() || s.starts_with('#') || s.starts_with('%') {
+            continue;
+        }
+        let mut it = s.split_whitespace();
+        let u: usize = it
+            .next()
+            .ok_or_else(|| anyhow::anyhow!("line {}: missing source", lineno + 1))?
+            .parse()?;
+        let v: usize = it
+            .next()
+            .ok_or_else(|| anyhow::anyhow!("line {}: missing target", lineno + 1))?
+            .parse()?;
+        let w: Option<f32> = it.next().map(|t| t.parse()).transpose()?;
+        f(u as VertexId, v as VertexId, w)?;
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::{generators, Csr, DistGraph};
+
+    fn materialized(g: &Csr, kind: PartitionKind, p: u32, storage: StorageKind) -> DistGraph {
+        DistGraph::build_with_storage(g, kind.build(g, p), storage)
+    }
+
+    fn assert_dist_eq(a: &DistGraph, b: &DistGraph, ctx: &str) {
+        assert_eq!(a.n(), b.n(), "{ctx}: n");
+        assert_eq!(a.m(), b.m(), "{ctx}: m");
+        assert_eq!(a.shards.len(), b.shards.len(), "{ctx}: p");
+        for (sa, sb) in a.shards.iter().zip(&b.shards) {
+            assert_eq!(sa, sb, "{ctx}: shard {} diverges", sa.locality);
+        }
+    }
+
+    #[test]
+    fn streamed_kron_equals_materialized_everywhere() {
+        let g = generators::kron(7, 6, 9);
+        let src = EdgeSource::kron(7, 6, 9);
+        for kind in PartitionKind::all() {
+            for storage in [StorageKind::Plain, StorageKind::Compressed] {
+                let want = materialized(&g, kind, 4, storage);
+                let got = build_streamed(&src, kind, 4, storage, None).unwrap();
+                assert_dist_eq(&got, &want, &format!("{kind:?}/{storage:?}"));
+            }
+        }
+    }
+
+    #[test]
+    fn streamed_urand_and_directed_equal_materialized() {
+        let gu = generators::urand(6, 4, 5);
+        let got = build_streamed(
+            &EdgeSource::Urand { scale: 6, degree: 4, seed: 5 },
+            PartitionKind::Block,
+            3,
+            StorageKind::Plain,
+            None,
+        )
+        .unwrap();
+        assert_dist_eq(&got, &materialized(&gu, PartitionKind::Block, 3, StorageKind::Plain), "urand");
+
+        let gd = generators::urand_directed(6, 4, 5);
+        let got = build_streamed(
+            &EdgeSource::UrandDirected { scale: 6, degree: 4, seed: 5 },
+            PartitionKind::EdgeBalanced,
+            3,
+            StorageKind::Compressed,
+            None,
+        )
+        .unwrap();
+        assert_dist_eq(
+            &got,
+            &materialized(&gd, PartitionKind::EdgeBalanced, 3, StorageKind::Compressed),
+            "urand-directed",
+        );
+    }
+
+    #[test]
+    fn streamed_symmetric_weights_equal_materialized() {
+        let g = generators::with_symmetric_random_weights(&generators::urand(6, 4, 7), 1.0, 10.0, 11);
+        let src = EdgeSource::Urand { scale: 6, degree: 4, seed: 7 };
+        let spec = WeightSpec { lo: 1.0, hi: 10.0, seed: 11 };
+        for kind in PartitionKind::all() {
+            let want = materialized(&g, kind, 4, StorageKind::Compressed);
+            let got = build_streamed(&src, kind, 4, StorageKind::Compressed, Some(spec)).unwrap();
+            assert_dist_eq(&got, &want, &format!("weighted/{kind:?}"));
+            assert!(got.is_weighted());
+        }
+    }
+
+    #[test]
+    fn streamed_peak_is_below_materialized_peak() {
+        let g = generators::kron(9, 8, 3);
+        let want = materialized(&g, PartitionKind::Block, 8, StorageKind::Compressed);
+        let got = build_streamed(
+            &EdgeSource::kron(9, 8, 3),
+            PartitionKind::Block,
+            8,
+            StorageKind::Compressed,
+            None,
+        )
+        .unwrap();
+        assert_dist_eq(&got, &want, "peak");
+        let (sp, mp) =
+            (got.mem_stats().peak_builder_bytes, want.mem_stats().peak_builder_bytes);
+        assert!(sp > 0 && mp > 0);
+        assert!(
+            sp < mp,
+            "streamed per-locality peak {sp} should undercut materialized leader peak {mp}"
+        );
+    }
+
+    #[test]
+    fn file_source_roundtrips() {
+        let g = generators::with_symmetric_random_weights(&generators::urand(5, 4, 13), 1.0, 5.0, 3);
+        let dir = std::env::temp_dir();
+        let path = dir.join(format!("nwgraph_stream_test_{}.el", std::process::id()));
+        {
+            let f = std::fs::File::create(&path).unwrap();
+            crate::graph::io::write_edge_list(&g, f).unwrap();
+        }
+        let got = build_streamed(
+            &EdgeSource::File(path.clone()),
+            PartitionKind::Block,
+            3,
+            StorageKind::Plain,
+            None,
+        )
+        .unwrap();
+        std::fs::remove_file(&path).ok();
+        // The materialized file path: read_edge_list -> Csr (no dedup).
+        let want = materialized(&g, PartitionKind::Block, 3, StorageKind::Plain);
+        assert_dist_eq(&got, &want, "file");
+        assert!(got.is_weighted());
+    }
+
+    #[test]
+    fn weight_spec_rejected_for_files() {
+        let err = build_streamed(
+            &EdgeSource::File(PathBuf::from("/nonexistent")),
+            PartitionKind::Block,
+            1,
+            StorageKind::Plain,
+            Some(WeightSpec { lo: 1.0, hi: 2.0, seed: 0 }),
+        )
+        .unwrap_err()
+        .to_string();
+        assert!(err.contains("WeightSpec"), "{err}");
+    }
+
+    #[test]
+    fn generator_names_map() {
+        assert_eq!(
+            EdgeSource::from_generator("kron", 5, 4, 1).unwrap(),
+            EdgeSource::kron(5, 4, 1)
+        );
+        assert!(EdgeSource::from_generator("mesh", 5, 4, 1).is_err());
+    }
+}

@@ -62,6 +62,15 @@ fn real_main() -> Result<()> {
                 pt.edge_imbalance,
                 pt.replication_factor,
             );
+            let mem = &res.report.mem;
+            println!(
+                "  mem[{}]: {:.2} B/edge shard-max={:.2}MB peak-build={:.2}MB build={:.1}ms",
+                mem.storage,
+                mem.bytes_per_edge,
+                mem.max_shard_bytes as f64 / 1e6,
+                mem.peak_builder_bytes as f64 / 1e6,
+                mem.build_ms,
+            );
             if validate {
                 println!("validation: OK");
             }
@@ -103,6 +112,15 @@ fn real_main() -> Result<()> {
                 pt.vertex_imbalance,
                 pt.edge_imbalance,
                 pt.replication_factor,
+            );
+            let mem = &res.report.mem;
+            println!(
+                "  mem[{}]: {:.2} B/edge shard-max={:.2}MB peak-build={:.2}MB build={:.1}ms",
+                mem.storage,
+                mem.bytes_per_edge,
+                mem.max_shard_bytes as f64 / 1e6,
+                mem.peak_builder_bytes as f64 / 1e6,
+                mem.build_ms,
             );
             if validate {
                 println!("validation: OK");
@@ -148,6 +166,15 @@ fn real_main() -> Result<()> {
                 pt.edge_imbalance,
                 pt.replication_factor,
             );
+            let mem = &res.report.mem;
+            println!(
+                "  mem[{}]: {:.2} B/edge shard-max={:.2}MB peak-build={:.2}MB build={:.1}ms",
+                mem.storage,
+                mem.bytes_per_edge,
+                mem.max_shard_bytes as f64 / 1e6,
+                mem.peak_builder_bytes as f64 / 1e6,
+                mem.build_ms,
+            );
             if validate {
                 println!("validation: OK");
             }
@@ -176,6 +203,15 @@ fn real_main() -> Result<()> {
                 pt.vertex_imbalance,
                 pt.edge_imbalance,
                 pt.replication_factor,
+            );
+            let mem = &res.report.mem;
+            println!(
+                "  mem[{}]: {:.2} B/edge shard-max={:.2}MB peak-build={:.2}MB build={:.1}ms",
+                mem.storage,
+                mem.bytes_per_edge,
+                mem.max_shard_bytes as f64 / 1e6,
+                mem.peak_builder_bytes as f64 / 1e6,
+                mem.build_ms,
             );
             if validate {
                 println!("validation: OK");
@@ -220,6 +256,15 @@ fn real_main() -> Result<()> {
                 pt.edge_imbalance,
                 pt.replication_factor,
             );
+            let mem = &res.report.mem;
+            println!(
+                "  mem[{}]: {:.2} B/edge shard-max={:.2}MB peak-build={:.2}MB build={:.1}ms",
+                mem.storage,
+                mem.bytes_per_edge,
+                mem.max_shard_bytes as f64 / 1e6,
+                mem.peak_builder_bytes as f64 / 1e6,
+                mem.build_ms,
+            );
             if validate {
                 println!("validation: OK");
             }
@@ -243,21 +288,26 @@ fn real_main() -> Result<()> {
         "ablations" => {
             // (file stem, runner) pairs so --json can name its outputs;
             // each table prints (and persists) as soon as it completes.
-            type Runner = fn(&Config) -> Result<nwgraph_hpx::coordinator::Table>;
-            let tables: [(&str, Runner); 8] = [
-                ("a1_aggregation", experiment::ablation_aggregation),
-                ("a2_chunking", experiment::ablation_adaptive_chunk),
-                ("a4_flush_policy", experiment::ablation_flush_policy),
-                ("a5_delta_stepping", experiment::ablation_delta_stepping),
-                ("a6_partition_schemes", experiment::ablation_partition_schemes),
-                ("a7_adaptive_coalescing", experiment::ablation_adaptive_coalescing),
-                ("a8_query_serving", experiment::ablation_query_serving),
-                ("extensions", experiment::extensions),
+            type Runner = Box<dyn Fn(&Config) -> Result<nwgraph_hpx::coordinator::Table>>;
+            let large = args.switch("large");
+            let tables: [(&str, Runner); 9] = [
+                ("a1_aggregation", Box::new(experiment::ablation_aggregation)),
+                ("a2_chunking", Box::new(experiment::ablation_adaptive_chunk)),
+                ("a4_flush_policy", Box::new(experiment::ablation_flush_policy)),
+                ("a5_delta_stepping", Box::new(experiment::ablation_delta_stepping)),
+                ("a6_partition_schemes", Box::new(experiment::ablation_partition_schemes)),
+                ("a7_adaptive_coalescing", Box::new(experiment::ablation_adaptive_coalescing)),
+                ("a8_query_serving", Box::new(experiment::ablation_query_serving)),
+                ("a9_scale_sweep", Box::new(move |c: &Config| {
+                    experiment::ablation_scale_sweep(c, large)
+                })),
+                ("extensions", Box::new(experiment::extensions)),
             ];
             let json = args.switch("json");
             let out_dir = args.flag("out-dir").unwrap_or("bench_out");
-            // --only a4,a7,a8: run the prefix-matched subset (CI baselines
-            // grab A4+A7+A8 without paying for the whole suite).
+            // --only a4,a7,a8,a9: run the prefix-matched subset (CI
+            // baselines grab A4+A7+A8+A9 without paying for the whole
+            // suite).
             let only: Option<Vec<&str>> =
                 args.flag("only").map(|s| s.split(',').map(str::trim).collect());
             if let Some(sel) = &only {
