@@ -34,6 +34,13 @@
 //!   per-locality peak builder bytes, build time, and bfs/pagerank/sssp
 //!   MTEPS, with compressed-vs-plain answer parity asserted per cell.
 //!   `BENCH_LARGE=1` extends the sweep to kron18.
+//! * **A10** — incremental re-convergence on kron10 at 8 localities:
+//!   seeded edge-update batches (0.1% / 1% / 10% of m, half inserts) ×
+//!   {block, vertex_cut} × {sim, threads}, SSSP re-converged from the
+//!   previous fixpoint vs a from-scratch run on the updated graph. Every
+//!   cell is validated against Dijkstra on the updated graph; batches
+//!   ≤ 1% must strictly beat the full recompute on relaxations and
+//!   envelopes under the deterministic sim substrate.
 //!
 //! `cargo bench --bench ablations`
 
@@ -139,4 +146,9 @@ fn main() {
     // shard storage and streaming ingestion (BENCH_LARGE=1 adds kron18).
     let large = std::env::var("BENCH_LARGE").map(|v| v == "1").unwrap_or(false);
     print!("{}", experiment::ablation_scale_sweep(&cfg6, large).expect("A9 failed").render());
+
+    // A10: incremental re-convergence on the same kron10 shape — the
+    // acceptance point for the dynamic-graph subsystem (incremental
+    // strictly cheaper than full recompute for small batches).
+    print!("{}", experiment::ablation_incremental(&cfg6).expect("A10 failed").render());
 }

@@ -81,4 +81,17 @@ impl VertexProgram for BfsProgram {
     fn priority(&self, msg: &Self::Msg) -> f32 {
         msg.1 as f32
     }
+
+    /// A level is derived through `src -> dst` when it is one deeper than
+    /// the source's — which covers the actual tree parent and every
+    /// equally good alternative (over-taint is harmless).
+    fn depends_on_edge(&self, src: &BfsState, dst: &BfsState, _w: f32) -> bool {
+        src.level != u32::MAX && dst.level == src.level.saturating_add(1)
+    }
+
+    /// Unvisited rows must never re-emit: `along_edge` on a `u32::MAX`
+    /// level would overflow.
+    fn can_emit(&self, state: &BfsState) -> bool {
+        state.level != u32::MAX
+    }
 }

@@ -74,6 +74,16 @@ impl VertexProgram for CcProgram {
         // Smaller labels first: winners propagate before losers re-flood.
         *msg as f32
     }
+
+    /// A label is derived through `src -> dst` when the two agree: min
+    /// labels flow along every intra-component edge, so a deletion taints
+    /// the whole (old) component reachable from it — exactly the region a
+    /// split could re-label. (`can_emit` keeps its `true` default: every
+    /// CC row, including one whose label is its own id, has a valid label
+    /// to re-offer at a taint frontier.)
+    fn depends_on_edge(&self, src: &VertexId, dst: &VertexId, _w: f32) -> bool {
+        src == dst
+    }
 }
 
 /// Result of a distributed CC run.

@@ -100,4 +100,12 @@ impl VertexProgram for PrProgram {
         state.acc = 0.0;
         delta
     }
+
+    /// Warm restart: keep the previous rank but refresh the
+    /// degree-derived field — carrying a stale `inv_deg` across an edge
+    /// insert/delete would mis-split the row's outgoing contribution
+    /// forever. `acc` resets; the first warm superstep rebuilds it.
+    fn rewarm(&self, prev: &PrState, _v: VertexId, out_degree: u32) -> PrState {
+        PrState { rank: prev.rank, acc: 0.0, inv_deg: 1.0 / out_degree.max(1) as f32 }
+    }
 }

@@ -73,4 +73,17 @@ impl VertexProgram for SsspProgram {
     fn priority(&self, msg: &f32) -> f32 {
         *msg
     }
+
+    /// A converged distance is justified through `src -> dst` exactly when
+    /// it equals `dist(src) + w` — and f32 equality is the right test,
+    /// because `dst`'s converged value *is* the f32 sum computed through
+    /// some such edge. The finite guard stops `INF == INF + w` from
+    /// tainting whole unreached regions.
+    fn depends_on_edge(&self, src: &f32, dst: &f32, w: f32) -> bool {
+        src.is_finite() && *dst == *src + w
+    }
+
+    fn can_emit(&self, state: &f32) -> bool {
+        state.is_finite()
+    }
 }

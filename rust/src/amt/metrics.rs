@@ -139,6 +139,71 @@ impl Default for MemStats {
     }
 }
 
+/// Dynamic-graph accounting for `mutate` runs: what an
+/// [`UpdateBatch`](crate::graph::mutation::UpdateBatch) did to the shards
+/// and what the incremental re-convergence that followed cost. Like
+/// [`WorkStats`], the runtimes know nothing about updates — this starts
+/// zeroed and [`engine::rerun_incremental`](crate::engine) /
+/// [`DistGraph::apply_updates`](crate::graph::DistGraph::apply_updates)
+/// stamp it after the run. The A10 ablation compares
+/// `reconverge_relaxations`/`reconverge_envelopes` against a full
+/// recompute of the same post-update graph.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct UpdateStats {
+    /// Operations carried by the batch (inserts + deletes as requested,
+    /// before no-op filtering).
+    pub batch_edges: u64,
+    /// Edge inserts actually applied (absent-edge inserts only).
+    pub applied: u64,
+    /// Edge deletes actually applied (present-edge deletes only).
+    pub retracted: u64,
+    /// Envelopes spent scatter-routing the batch to owning localities
+    /// through the aggregator.
+    pub route_envelopes: u64,
+    /// Routed edge-update items across those envelopes.
+    pub route_items: u64,
+    /// Vertices re-seeded into the wavefront for re-convergence.
+    pub reseeded: u64,
+    /// Vertices whose previous state was invalidated (reset to the cold
+    /// initial value) by the deletion dependency taint.
+    pub tainted: u64,
+    /// Relaxations executed by the incremental re-convergence run.
+    pub reconverge_relaxations: u64,
+    /// Envelopes shipped by the incremental re-convergence run.
+    pub reconverge_envelopes: u64,
+    /// Modeled makespan of the re-convergence run, us.
+    pub reconverge_makespan_us: f64,
+    /// Host wall-clock of the re-convergence run, us.
+    pub reconverge_wall_us: f64,
+}
+
+impl UpdateStats {
+    /// Accumulate another stats block into this one (report merging).
+    pub fn merge(&mut self, other: &UpdateStats) {
+        self.batch_edges += other.batch_edges;
+        self.applied += other.applied;
+        self.retracted += other.retracted;
+        self.route_envelopes += other.route_envelopes;
+        self.route_items += other.route_items;
+        self.reseeded += other.reseeded;
+        self.tainted += other.tainted;
+        self.reconverge_relaxations += other.reconverge_relaxations;
+        self.reconverge_envelopes += other.reconverge_envelopes;
+        self.reconverge_makespan_us += other.reconverge_makespan_us;
+        self.reconverge_wall_us += other.reconverge_wall_us;
+    }
+
+    /// Fraction of the batch that changed the graph (applied + retracted
+    /// over requested ops; an empty batch counts as 0).
+    pub fn effective_rate(&self) -> f64 {
+        if self.batch_edges == 0 {
+            0.0
+        } else {
+            (self.applied + self.retracted) as f64 / self.batch_edges as f64
+        }
+    }
+}
+
 /// Outcome of one simulated run: the modeled makespan plus the quantities
 /// the paper's analysis hinges on (per-locality busy time → load balance,
 /// barrier count → synchronization cost, traffic → communication overhead).
@@ -188,6 +253,12 @@ pub struct SimReport {
     /// zeros; drivers stamp it from
     /// [`DistGraph::mem_stats`](crate::graph::DistGraph::mem_stats)).
     pub mem: MemStats,
+    /// Dynamic-graph accounting. Zero for static runs; the `mutate`
+    /// driver stamps it from [`DistGraph::apply_updates`] routing stats
+    /// and the incremental re-convergence run.
+    ///
+    /// [`DistGraph::apply_updates`]: crate::graph::DistGraph::apply_updates
+    pub update: UpdateStats,
     /// Host wall-clock for the whole run, us. For the simulator this is
     /// the cost of executing the simulation itself; for the threaded
     /// runtime it *is* the end-to-end time (`makespan_us == wall_us`).
@@ -202,6 +273,33 @@ pub struct SimReport {
 }
 
 impl SimReport {
+    /// The single construction site: a zeroed report over `n_localities`.
+    /// Runtimes and drivers create a report here and stamp the blocks they
+    /// own afterwards, so a newly added stats block (like
+    /// [`SimReport::update`]) gets its zero default at every site instead
+    /// of a compile error — or worse, a silent omission — per literal.
+    pub fn new(n_localities: u32) -> SimReport {
+        SimReport {
+            n_localities,
+            makespan_us: 0.0,
+            busy_us: Vec::new(),
+            barriers: 0,
+            events: 0,
+            net: NetStats::default(),
+            per_locality_net: Vec::new(),
+            agg: AggStats::default(),
+            agg_master: AggStats::default(),
+            agg_mirror: AggStats::default(),
+            work: WorkStats::default(),
+            partition: PartitionStats::default(),
+            query: QueryStats::default(),
+            mem: MemStats::default(),
+            update: UpdateStats::default(),
+            wall_us: 0.0,
+            phase_wall_us: Vec::new(),
+        }
+    }
+
     /// Mean per-locality busy time, us.
     pub fn mean_busy_us(&self) -> f64 {
         if self.busy_us.is_empty() {
@@ -323,24 +421,9 @@ mod tests {
 
     #[test]
     fn report_load_imbalance() {
-        let r = SimReport {
-            n_localities: 2,
-            makespan_us: 100.0,
-            busy_us: vec![100.0, 50.0],
-            barriers: 0,
-            events: 0,
-            net: NetStats::default(),
-            per_locality_net: vec![],
-            agg: AggStats::default(),
-            agg_master: AggStats::default(),
-            agg_mirror: AggStats::default(),
-            work: WorkStats::default(),
-            partition: PartitionStats::default(),
-            query: QueryStats::default(),
-            mem: MemStats::default(),
-            wall_us: 0.0,
-            phase_wall_us: vec![],
-        };
+        let mut r = SimReport::new(2);
+        r.makespan_us = 100.0;
+        r.busy_us = vec![100.0, 50.0];
         assert!((r.mean_busy_us() - 75.0).abs() < 1e-12);
         assert!((r.load_imbalance() - 100.0 / 75.0).abs() < 1e-12);
         assert!((r.utilization() - 0.75).abs() < 1e-12);
@@ -348,26 +431,43 @@ mod tests {
 
     #[test]
     fn empty_report_is_balanced() {
-        let r = SimReport {
-            n_localities: 0,
-            makespan_us: 0.0,
-            busy_us: vec![],
-            barriers: 0,
-            events: 0,
-            net: NetStats::default(),
-            per_locality_net: vec![],
-            agg: AggStats::default(),
-            agg_master: AggStats::default(),
-            agg_mirror: AggStats::default(),
-            work: WorkStats::default(),
-            partition: PartitionStats::default(),
-            query: QueryStats::default(),
-            mem: MemStats::default(),
-            wall_us: 0.0,
-            phase_wall_us: vec![],
-        };
+        let r = SimReport::new(0);
         assert_eq!(r.load_imbalance(), 1.0);
         assert_eq!(r.utilization(), 1.0);
+    }
+
+    #[test]
+    fn new_report_is_zeroed() {
+        let r = SimReport::new(4);
+        assert_eq!(r.n_localities, 4);
+        assert_eq!(r.barriers, 0);
+        assert_eq!(r.work, WorkStats::default());
+        assert_eq!(r.update, UpdateStats::default());
+        assert!(r.busy_us.is_empty() && r.phase_wall_us.is_empty());
+    }
+
+    #[test]
+    fn update_stats_merge_and_rate() {
+        let mut u = UpdateStats::default();
+        assert_eq!(u.effective_rate(), 0.0);
+        u.merge(&UpdateStats {
+            batch_edges: 10,
+            applied: 4,
+            retracted: 2,
+            route_envelopes: 3,
+            route_items: 6,
+            reseeded: 5,
+            tainted: 1,
+            reconverge_relaxations: 100,
+            reconverge_envelopes: 7,
+            reconverge_makespan_us: 2.0,
+            reconverge_wall_us: 1.0,
+        });
+        u.merge(&UpdateStats { batch_edges: 10, applied: 2, ..UpdateStats::default() });
+        assert_eq!(u.batch_edges, 20);
+        assert_eq!(u.applied, 6);
+        assert_eq!(u.retracted, 2);
+        assert!((u.effective_rate() - 0.4).abs() < 1e-12);
     }
 
     #[test]

@@ -44,7 +44,7 @@ pub mod threads;
 pub use agas::{Agas, GlobalAddress};
 pub use aggregate::{AggStats, Aggregator, Batch, FlushPolicy, SlotSpace};
 pub use executor::{ChunkPolicy, Executor};
-pub use metrics::{PartitionStats, QueryStats, SimReport, WorkStats};
+pub use metrics::{PartitionStats, QueryStats, SimReport, UpdateStats, WorkStats};
 pub use net::{NetConfig, NetStats};
 pub use partitioned_vector::{AtomicLongVector, PartitionedVector};
 pub use sim::{Actor, Ctx, LocalityId, RuntimeKind, SimConfig, SimRuntime, SimTime};

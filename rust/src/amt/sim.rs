@@ -595,24 +595,15 @@ impl SimRuntime {
             total_net.merge(s);
         }
         let wall_us = run_start.elapsed().as_secs_f64() * 1e6;
-        let report = SimReport {
-            n_localities: n,
-            makespan_us: makespan,
-            busy_us: busy,
-            barriers: epoch,
-            events: events_processed,
-            net: total_net,
-            per_locality_net: net_stats,
-            agg: super::aggregate::AggStats::default(),
-            agg_master: super::aggregate::AggStats::default(),
-            agg_mirror: super::aggregate::AggStats::default(),
-            work: super::metrics::WorkStats::default(),
-            partition: super::metrics::PartitionStats::default(),
-            query: super::metrics::QueryStats::default(),
-            mem: super::metrics::MemStats::default(),
-            wall_us,
-            phase_wall_us: super::metrics::phase_segments(&phase_marks, wall_us),
-        };
+        let mut report = SimReport::new(n);
+        report.makespan_us = makespan;
+        report.busy_us = busy;
+        report.barriers = epoch;
+        report.events = events_processed;
+        report.net = total_net;
+        report.per_locality_net = net_stats;
+        report.wall_us = wall_us;
+        report.phase_wall_us = super::metrics::phase_segments(&phase_marks, wall_us);
         (actors, report)
     }
 }

@@ -185,24 +185,15 @@ impl ThreadedRuntime {
         for st in &g.net {
             total_net.merge(st);
         }
-        let report = SimReport {
-            n_localities: n,
-            makespan_us: wall_us,
-            busy_us: busy,
-            barriers: g.epoch,
-            events: g.events,
-            net: total_net,
-            per_locality_net: g.net,
-            agg: super::aggregate::AggStats::default(),
-            agg_master: super::aggregate::AggStats::default(),
-            agg_mirror: super::aggregate::AggStats::default(),
-            work: super::metrics::WorkStats::default(),
-            partition: super::metrics::PartitionStats::default(),
-            query: super::metrics::QueryStats::default(),
-            mem: super::metrics::MemStats::default(),
-            wall_us,
-            phase_wall_us: phase_segments(&g.phase_marks, wall_us),
-        };
+        let mut report = SimReport::new(n);
+        report.makespan_us = wall_us;
+        report.busy_us = busy;
+        report.barriers = g.epoch;
+        report.events = g.events;
+        report.net = total_net;
+        report.per_locality_net = g.net;
+        report.wall_us = wall_us;
+        report.phase_wall_us = phase_segments(&g.phase_marks, wall_us);
         (actors, report)
     }
 }

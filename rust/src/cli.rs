@@ -104,6 +104,13 @@ COMMANDS:
                 qps, and p50/p99 wall-clock latency; scheme-generic
                 (vertex cuts included); needs an undirected generator
                 (symmetric metric)
+    mutate      apply a seeded edge-update batch (inserts + deletes) to the
+                distributed graph through the aggregator scatter path, then
+                re-converge --algo sssp|bfs|cc|pagerank incrementally from
+                the previous fixpoint (deletion dependency taint + frontier
+                re-seeding; PageRank warm-restarts from its previous ranks
+                on BSP) and print the cost next to a full recompute;
+                batch shape comes from mutate_frac/mutate_inserts/mutate_seed
     fig1        regenerate Figure 1 (BFS speedup sweep, HPX vs Boost/BSP)
     fig2        regenerate Figure 2 (PageRank sweep, HPX naive/opt vs Boost/BSP)
     ablations   run the DESIGN.md ablation suite (A1 aggregation, A2 chunking,
@@ -116,10 +123,14 @@ COMMANDS:
                 A9 memory-limit scale sweep: streamed kron10..16 x
                 {plain, compressed} storage x {block, vertex_cut} with
                 bytes/edge, peak builder bytes, build time, and MTEPS
-                columns — --large extends it to kron18);
+                columns — --large extends it to kron18,
+                A10 incremental re-convergence: update-batch size x
+                {block, vertex_cut} x {sim, threads} with applied/tainted/
+                reseeded counters and incremental-vs-full relaxation,
+                envelope, and makespan columns);
                 --json additionally writes machine-readable tables to
                 bench_out/*.json (--out-dir overrides the directory);
-                --only a4,a7,a8,a9 runs a prefix-matched subset
+                --only a4,a7,a8,a9,a10 runs a prefix-matched subset
     info        print graph statistics for the configured generator
     help        show this message
 
@@ -145,18 +156,22 @@ CONFIG OVERRIDES (key=value):
              both run the same engines and report wall-clock columns),
     serve_queries, serve_landmarks, serve_cache (0 disables),
     serve_batch (>= 1), serve_oracle (true|false),
+    mutate_frac (update-batch size as a fraction of the edge count, in [0,1]),
+    mutate_inserts (insert share of the batch, in [0,1]; rest are deletes),
+    mutate_seed (batch RNG seed; 0 derives from seed),
     net.latency_us, net.bandwidth_gbps, net.send_cpu_us, net.recv_cpu_us,
     net.per_item_cpu_us, net.overhead_bytes, artifact_dir
 
 FLAGS:
     --config <file>    key=value config file (overrides applied after)
     --engine <name>    algorithm engine (see per-command lists above)
+    --algo <name>      algorithm for `mutate` (sssp|bfs|cc|pagerank; default sssp)
     --runtime <name>   execution substrate, sim|threads (same as runtime=)
     --out <file>       write the result table as CSV
     --out-dir <dir>    output directory for `ablations --json` (default bench_out)
     --json             also write ablation tables as JSON (ablations only)
     --only <list>      comma list of ablation stems to run, prefix-matched
-                       (e.g. --only a4,a7,a8,a9; ablations only)
+                       (e.g. --only a4,a7,a8,a9,a10; ablations only)
     --large            extend the A9 scale sweep to kron18 (ablations only)
     --validate         validate results against the sequential oracle
 ";

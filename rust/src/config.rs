@@ -99,6 +99,13 @@ pub struct Config {
     pub serve_batch: usize,
     /// Serve mode: master switch for the landmark oracle.
     pub serve_oracle: bool,
+    /// Mutate mode: update-batch size as a fraction of the graph's edge
+    /// pairs (`0` = empty batch).
+    pub mutate_frac: f64,
+    /// Mutate mode: share of the batch that is inserts (rest deletes).
+    pub mutate_inserts: f64,
+    /// Mutate mode: batch-generator seed (`0` = derive from `seed`).
+    pub mutate_seed: u64,
 }
 
 impl Default for Config {
@@ -127,6 +134,9 @@ impl Default for Config {
             serve_cache: 32,
             serve_batch: 16,
             serve_oracle: true,
+            mutate_frac: 0.01,
+            mutate_inserts: 0.5,
+            mutate_seed: 0,
         }
     }
 }
@@ -211,6 +221,23 @@ impl Config {
                     c.serve_batch = b;
                 }
                 "serve_oracle" => c.serve_oracle = v.parse()?,
+                "mutate_frac" => {
+                    let f: f64 = v.parse()?;
+                    anyhow::ensure!(
+                        (0.0..=1.0).contains(&f),
+                        "mutate_frac must be in [0, 1], got `{v}`"
+                    );
+                    c.mutate_frac = f;
+                }
+                "mutate_inserts" => {
+                    let f: f64 = v.parse()?;
+                    anyhow::ensure!(
+                        (0.0..=1.0).contains(&f),
+                        "mutate_inserts must be in [0, 1], got `{v}`"
+                    );
+                    c.mutate_inserts = f;
+                }
+                "mutate_seed" => c.mutate_seed = v.parse()?,
                 "net.latency_us" => c.net.latency_us = v.parse()?,
                 "net.bandwidth_gbps" => {
                     c.net.bandwidth_bytes_per_us = v.parse::<f64>()? * 1000.0
@@ -234,6 +261,12 @@ impl Config {
             "kron" => gen::kron(self.scale, self.degree, self.seed),
             other => anyhow::bail!("unknown generator `{other}`"),
         })
+    }
+
+    /// The update-batch generator seed: `mutate_seed`, or derived from
+    /// the graph seed when left at `0` so `seed=` alone moves everything.
+    pub fn effective_mutate_seed(&self) -> u64 {
+        if self.mutate_seed == 0 { self.seed.wrapping_add(3) } else { self.mutate_seed }
     }
 
     /// Graph name in GAP style (`urand14`, `kron16`, ...).
@@ -394,6 +427,28 @@ mod tests {
             (d.serve_queries, d.serve_landmarks, d.serve_cache, d.serve_batch, d.serve_oracle),
             (1000, 8, 32, 16, true)
         );
+    }
+
+    #[test]
+    fn mutate_keys_parse_and_reject() {
+        let mut kv = BTreeMap::new();
+        kv.insert("mutate_frac".into(), "0.05".into());
+        kv.insert("mutate_inserts".into(), "0.25".into());
+        kv.insert("mutate_seed".into(), "99".into());
+        let c = Config::from_kv(&kv).unwrap();
+        assert_eq!(c.mutate_frac, 0.05);
+        assert_eq!(c.mutate_inserts, 0.25);
+        assert_eq!(c.effective_mutate_seed(), 99);
+        kv.insert("mutate_frac".into(), "1.5".into());
+        let err = Config::from_kv(&kv).unwrap_err().to_string();
+        assert!(err.contains("mutate_frac"), "{err}");
+        kv.insert("mutate_frac".into(), "0.1".into());
+        kv.insert("mutate_inserts".into(), "-0.2".into());
+        let err = Config::from_kv(&kv).unwrap_err().to_string();
+        assert!(err.contains("mutate_inserts"), "{err}");
+        let d = Config::default();
+        assert_eq!((d.mutate_frac, d.mutate_inserts, d.mutate_seed), (0.01, 0.5, 0));
+        assert_eq!(d.effective_mutate_seed(), d.seed + 3, "0 derives from seed");
     }
 
     #[test]

@@ -924,6 +924,122 @@ pub fn scale_sweep_over(cfg: &Config, scales: &[u32]) -> Result<Table> {
     Ok(table)
 }
 
+/// Ablation A10: incremental re-convergence vs full recompute on a
+/// dynamic graph. Generates a seeded edge-update batch (half inserts,
+/// half deletes) at three sizes — 0.1%, 1%, and 10% of the edge count —
+/// applies it through [`DistGraph::apply_updates`]'s scatter path, and
+/// re-converges SSSP from the previous fixpoint
+/// ([`rerun_incremental`](crate::engine::rerun_incremental)) next to a
+/// from-scratch run on a fresh build of the updated graph, under
+/// `{block, vertex_cut}` × `{sim, threads}`. Every cell validates both
+/// answer sets against the Dijkstra oracle on the updated graph and
+/// cross-checks the shard-side applied count; under the deterministic
+/// `sim` substrate, batches ≤ 1% must beat the full recompute on *both*
+/// relaxations and envelopes — the dynamic-graph claim this table pins
+/// (threads rows re-validate answers under real queueing but skip the
+/// strict-win gate: arrival order perturbs label-correcting work counts).
+pub fn ablation_incremental(cfg: &Config) -> Result<Table> {
+    use crate::algorithms::sssp;
+    use crate::engine::{run_async, rerun_incremental, Reconverge};
+    use crate::graph::{generators, mutation};
+
+    let g = cfg.build_graph()?;
+    let gw = generators::with_random_weights(&g, 1.0, 10.0, cfg.seed + 1);
+    let p = cfg.localities.iter().cloned().filter(|&x| x <= 8).max().unwrap_or(8);
+    let symmetric = cfg.generator != "urand-directed";
+    let mut table = Table::new(
+        format!(
+            "Ablation A10 — incremental re-convergence vs full recompute (SSSP on {}, \
+             {} localities)",
+            cfg.graph_name(),
+            p
+        ),
+        &["runtime", "scheme", "frac", "applied", "retracted", "tainted", "reseeded",
+          "inc-relax", "full-relax", "inc-envs", "full-envs", "inc-time", "full-time"],
+    );
+    for (i, frac) in [0.001f64, 0.01, 0.1].into_iter().enumerate() {
+        let batch = mutation::generate_batch(
+            &gw,
+            frac,
+            0.5,
+            cfg.effective_mutate_seed() + i as u64,
+            symmetric,
+        );
+        let (g2w, applied, _) = mutation::apply_to_csr(&gw, &batch);
+        let want = sssp::dijkstra(&g2w, cfg.root);
+        let check = |label: String, got: &[f32]| -> Result<()> {
+            for (v, (a, b)) in got.iter().zip(&want).enumerate() {
+                anyhow::ensure!(
+                    (a.is_infinite() && b.is_infinite()) || (a - b).abs() < 1e-3,
+                    "A10: {label} diverges from the oracle at vertex {v} (frac {frac})"
+                );
+            }
+            Ok(())
+        };
+        for kind in [PartitionKind::Block, PartitionKind::VertexCut] {
+            for rt in [RuntimeKind::Sim, RuntimeKind::Threads] {
+                let scfg = SimConfig { runtime: rt, ..sim_cfg(cfg, false) };
+                let mut dist = DistGraph::build_with(&gw, kind.build(&gw, p));
+                let prog = sssp::SsspProgram { source: cfg.root };
+                let base = run_async(prog.clone(), &dist, cfg.flush_policy, scfg.clone());
+                let inc = rerun_incremental(
+                    prog.clone(),
+                    &mut dist,
+                    &base.states,
+                    &batch,
+                    Reconverge::Async(cfg.flush_policy),
+                    scfg.clone(),
+                );
+                let full = run_async(
+                    prog,
+                    &DistGraph::build_with(&g2w, kind.build(&g2w, p)),
+                    cfg.flush_policy,
+                    scfg,
+                );
+                check(format!("incremental {}/{}", rt.name(), kind.name()), &inc.states)?;
+                check(format!("full {}/{}", rt.name(), kind.name()), &full.states)?;
+                let u = &inc.report.update;
+                anyhow::ensure!(
+                    u.applied == applied,
+                    "A10: shard-side applied {} != oracle {} at frac {frac} on {}",
+                    u.applied,
+                    applied,
+                    kind.name()
+                );
+                if matches!(rt, RuntimeKind::Sim) && frac <= 0.01 {
+                    anyhow::ensure!(
+                        u.reconverge_relaxations < full.report.work.relaxations
+                            && u.reconverge_envelopes < full.report.net.envelopes,
+                        "A10: incremental must strictly beat the full recompute at \
+                         frac {frac} on {} (relax {} vs {}, envs {} vs {})",
+                        kind.name(),
+                        u.reconverge_relaxations,
+                        full.report.work.relaxations,
+                        u.reconverge_envelopes,
+                        full.report.net.envelopes,
+                    );
+                }
+                table.row(vec![
+                    rt.name().to_string(),
+                    kind.name().to_string(),
+                    format!("{}%", frac * 100.0),
+                    u.applied.to_string(),
+                    u.retracted.to_string(),
+                    u.tainted.to_string(),
+                    u.reseeded.to_string(),
+                    u.reconverge_relaxations.to_string(),
+                    full.report.work.relaxations.to_string(),
+                    u.reconverge_envelopes.to_string(),
+                    full.report.net.envelopes.to_string(),
+                    fmt_us(inc.report.makespan_us),
+                    fmt_us(full.report.makespan_us),
+                ]);
+            }
+        }
+    }
+    Ok(table)
+}
+
 /// Keep the fastest repetition per labelled row of an A6 sweep.
 fn keep_best(
     rows: &mut Vec<(&'static str, Option<SimReport>)>,

@@ -1,0 +1,450 @@
+//! Incremental re-convergence after an [`UpdateBatch`]: re-run a
+//! [`VertexProgram`] over the mutated graph from its previous fixpoint
+//! instead of from scratch.
+//!
+//! The contract comes in two halves, split by [`Mode`]:
+//!
+//! * **[`Mode::Converge`]** (BFS / SSSP / CC): the previous states are a
+//!   fixpoint of a *monotone* label-correcting fold, so after a mutation
+//!   they remain **achievable upper bounds** everywhere except where a
+//!   deletion broke a justification chain. [`plan_taint`] finds that
+//!   broken region on the *pre-update* graph: seed-taint the head of
+//!   every effectively deleted edge the program says it
+//!   [`depends_on_edge`] through, then propagate the taint along
+//!   dependency edges to closure. Tainted rows restart from the cold
+//!   [`VertexProgram::init`] value; everything else keeps its old state
+//!   via the [`Warm`] wrapper. Re-seeding then restarts the wavefront
+//!   from exactly three places — the program's original seeds inside the
+//!   taint region, untainted rows with a *post-update* edge into the
+//!   region (the taint frontier), and the sources of inserted edges —
+//!   and the ordinary engine flood does the rest. An empty batch plans
+//!   zero seeds and the engine terminates with zero relaxations.
+//! * **[`Mode::Iterate`]** (PageRank): there is no taint; the previous
+//!   ranks are simply a better starting vector than uniform. Every row
+//!   re-warms through [`VertexProgram::rewarm`] (which refreshes
+//!   degree-derived fields like `inv_deg`) and the engine runs its
+//!   normal fixed superstep count from there.
+//!
+//! No engine changes are needed: the engines already apply seeds
+//! unconditionally and expand the seeded row, so [`Warm`] expresses
+//! everything through the existing [`VertexProgram`] surface.
+
+use crate::amt::{FlushPolicy, SimConfig, UpdateStats};
+use crate::graph::mutation::{UpdateBatch, UpdateOp};
+use crate::graph::{DistGraph, VertexId};
+
+use super::{Mode, ProgramInfo, ProgramRun, VertexProgram};
+
+/// Which engine carries the re-convergence run.
+#[derive(Debug, Clone, Copy)]
+pub enum Reconverge {
+    /// Asynchronous label-correcting wavefront ([`run_async`](super::run_async)).
+    Async(FlushPolicy),
+    /// Bulk-synchronous supersteps ([`run_bsp`](super::run_bsp)) — the
+    /// only choice for [`Mode::Iterate`] programs.
+    Bsp,
+    /// Ordered bucket schedule ([`run_delta`](super::run_delta)).
+    Delta {
+        /// Bucket width.
+        delta: f32,
+        /// Flush policy for the light-phase combiners.
+        policy: FlushPolicy,
+    },
+}
+
+impl Reconverge {
+    /// The flush policy the update batch itself is routed under (BSP
+    /// drains at phase end, matching its engine idiom).
+    fn route_policy(&self) -> FlushPolicy {
+        match *self {
+            Reconverge::Async(p) | Reconverge::Delta { policy: p, .. } => p,
+            Reconverge::Bsp => FlushPolicy::Manual,
+        }
+    }
+}
+
+/// A [`VertexProgram`] wrapper that restarts `inner` from a previous
+/// run's states: untainted rows re-initialize to their old value
+/// (through [`VertexProgram::rewarm`]), tainted rows fall back to the
+/// cold `init`, and seeding is replaced by the re-convergence plan's
+/// reseed table. Everything else delegates.
+struct Warm<P: VertexProgram> {
+    inner: P,
+    /// Previous state per global vertex; `None` = tainted (cold restart).
+    prev: Vec<Option<P::State>>,
+    /// Reseed message per global vertex; `None` = starts inactive.
+    reseed: Vec<Option<P::Msg>>,
+}
+
+impl<P: VertexProgram> VertexProgram for Warm<P> {
+    type State = P::State;
+    type Msg = P::Msg;
+
+    fn info(&self) -> ProgramInfo {
+        self.inner.info()
+    }
+
+    fn init(&self, v: VertexId, out_degree: u32) -> P::State {
+        match &self.prev[v as usize] {
+            Some(s) => self.inner.rewarm(s, v, out_degree),
+            None => self.inner.init(v, out_degree),
+        }
+    }
+
+    fn seed(&self, v: VertexId) -> Option<P::Msg> {
+        self.reseed[v as usize].clone()
+    }
+
+    fn combine(acc: &mut P::Msg, new: P::Msg) {
+        P::combine(acc, new);
+    }
+
+    fn beats(&self, msg: &P::Msg, state: &P::State) -> bool {
+        self.inner.beats(msg, state)
+    }
+
+    fn apply(&self, state: &mut P::State, msg: P::Msg) -> bool {
+        self.inner.apply(state, msg)
+    }
+
+    fn signal(&self, state: &P::State) -> P::Msg {
+        self.inner.signal(state)
+    }
+
+    fn along_edge(&self, u: VertexId, sig: &P::Msg, w: f32) -> P::Msg {
+        self.inner.along_edge(u, sig, w)
+    }
+
+    fn priority(&self, msg: &P::Msg) -> f32 {
+        self.inner.priority(msg)
+    }
+
+    fn apply_mirror(&self, state: &mut P::State, msg: P::Msg) -> bool {
+        self.inner.apply_mirror(state, msg)
+    }
+
+    fn step_update(&self, state: &mut P::State) -> f32 {
+        self.inner.step_update(state)
+    }
+}
+
+/// Visit every (pre- or post-update) out-edge of global vertex `x`,
+/// wherever its row is homed, as `(target global id, weight)`.
+fn for_each_out_edge(dist: &DistGraph, x: VertexId, mut f: impl FnMut(VertexId, f32)) {
+    for s in &dist.shards {
+        if let Some(row) = s.row_of(x) {
+            for (t, w) in s.row_edges(row) {
+                f(s.global_of(t as usize), w);
+            }
+        }
+    }
+}
+
+/// Deletion invalidation on the *pre-update* graph: taint the head of
+/// every effective delete whose old states depended on the edge, then
+/// close the taint under [`VertexProgram::depends_on_edge`] along the old
+/// out-edges. Returns the taint bitmap (all-false when nothing fires).
+fn plan_taint<P: VertexProgram>(
+    prog: &P,
+    dist: &DistGraph,
+    prev: &[P::State],
+    batch: &UpdateBatch,
+) -> Vec<bool> {
+    let mut tainted = vec![false; dist.n()];
+    let mut work: Vec<VertexId> = Vec::new();
+    for op in &batch.ops {
+        if op.op != UpdateOp::Delete || tainted[op.dst as usize] {
+            continue;
+        }
+        // An ineffective delete (absent edge) finds no edge and taints
+        // nothing; duplicates are settled by the tainted check above.
+        let (u, v) = (op.src, op.dst);
+        let mut hit = false;
+        for_each_out_edge(dist, u, |t, w| {
+            if t == v && prog.depends_on_edge(&prev[u as usize], &prev[v as usize], w) {
+                hit = true;
+            }
+        });
+        if hit {
+            tainted[v as usize] = true;
+            work.push(v);
+        }
+    }
+    while let Some(x) = work.pop() {
+        for_each_out_edge(dist, x, |y, w| {
+            if !tainted[y as usize]
+                && prog.depends_on_edge(&prev[x as usize], &prev[y as usize], w)
+            {
+                tainted[y as usize] = true;
+                work.push(y);
+            }
+        });
+    }
+    tainted
+}
+
+/// Apply `batch` to `dist` and re-run `prog` incrementally from `prev`
+/// (the previous run's converged states, in global vertex order).
+///
+/// The returned run's states equal what a from-scratch run on the
+/// updated graph produces — exactly for `Converge` programs, and for
+/// `Iterate` programs up to the usual fixed-iteration tolerance against
+/// a warm-started oracle. [`SimReport::update`](crate::amt::SimReport)
+/// carries the batch/routing counters from
+/// [`DistGraph::apply_updates`] plus the re-convergence cost
+/// (relaxations, envelopes, makespan) for the incremental-vs-full
+/// comparison the A10 ablation makes.
+pub fn rerun_incremental<P: VertexProgram>(
+    prog: P,
+    dist: &mut DistGraph,
+    prev: &[P::State],
+    batch: &UpdateBatch,
+    how: Reconverge,
+    cfg: SimConfig,
+) -> ProgramRun<P::State> {
+    assert_eq!(prev.len(), dist.n(), "previous states must cover every vertex");
+    let converge = prog.info().mode == Mode::Converge;
+
+    // Phase 1 (pre-update graph): deletion dependency taint.
+    let tainted = if converge {
+        plan_taint(&prog, dist, prev, batch)
+    } else {
+        vec![false; dist.n()]
+    };
+
+    // Phase 2: mutate the shards, costing the scatter-routing.
+    let mut stats = dist.apply_updates(batch, how.route_policy(), &cfg.net);
+
+    // Phase 3 (post-update graph): warm states + reseeds.
+    let warm: Vec<Option<P::State>> = prev
+        .iter()
+        .zip(&tainted)
+        .map(|(s, &t)| (!t).then(|| s.clone()))
+        .collect();
+    let mut reseed: Vec<Option<P::Msg>> = vec![None; dist.n()];
+    if converge {
+        // (a) The program's own seeds inside the taint region.
+        for (v, &t) in tainted.iter().enumerate() {
+            if t {
+                reseed[v] = prog.seed(v as VertexId);
+            }
+        }
+        // (b) The taint frontier: untainted rows with a post-update edge
+        // into the region re-offer their (still valid) value.
+        for s in &dist.shards {
+            for row in 0..s.n_rows() {
+                let u = s.global_of(row) as usize;
+                if tainted[u] || !prog.can_emit(&prev[u]) {
+                    continue;
+                }
+                for t in s.row_locals(row) {
+                    if tainted[s.global_of(t as usize) as usize] {
+                        reseed[u] = Some(prog.signal(&prev[u]));
+                        break;
+                    }
+                }
+            }
+        }
+        // (c) Sources of inserted edges push their value across the new
+        // edge (tainted sources already restart cold and re-flood).
+        for op in &batch.ops {
+            let u = op.src as usize;
+            if op.op == UpdateOp::Insert && !tainted[u] && prog.can_emit(&prev[u]) {
+                reseed[u] = Some(prog.signal(&prev[u]));
+            }
+        }
+    }
+    stats.tainted = tainted.iter().filter(|&&t| t).count() as u64;
+    stats.reseeded = reseed.iter().filter(|r| r.is_some()).count() as u64;
+
+    // Phase 4: the ordinary engine flood, warm-started.
+    let warm_prog = Warm { inner: prog, prev: warm, reseed };
+    let mut run = match how {
+        Reconverge::Async(policy) => super::run_async(warm_prog, dist, policy, cfg),
+        Reconverge::Bsp => super::run_bsp(warm_prog, dist, cfg),
+        Reconverge::Delta { delta, policy } => {
+            super::run_delta(warm_prog, dist, delta, policy, cfg)
+        }
+    };
+    stats.reconverge_relaxations = run.report.work.relaxations;
+    stats.reconverge_envelopes = run.report.net.envelopes;
+    stats.reconverge_makespan_us = run.report.makespan_us;
+    stats.reconverge_wall_us = run.report.wall_us;
+    run.report.update = stats;
+    run
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algorithms::{bfs, cc, sssp};
+    use crate::amt::NetConfig;
+    use crate::graph::{generators, mutation, PartitionKind};
+
+    fn det() -> SimConfig {
+        SimConfig::deterministic(NetConfig::default())
+    }
+
+    #[test]
+    fn empty_batch_reconverges_for_free() {
+        let g = generators::with_random_weights(&generators::kron(7, 4, 5), 1.0, 10.0, 6);
+        let mut d = crate::graph::DistGraph::block(&g, 4);
+        let base = super::super::run_async(
+            sssp::SsspProgram { source: 0 },
+            &d,
+            FlushPolicy::Adaptive,
+            det(),
+        );
+        let run = rerun_incremental(
+            sssp::SsspProgram { source: 0 },
+            &mut d,
+            &base.states,
+            &UpdateBatch::new(),
+            Reconverge::Async(FlushPolicy::Adaptive),
+            det(),
+        );
+        assert_eq!(run.states, base.states);
+        let u = run.report.update;
+        assert_eq!(u.reconverge_relaxations, 0, "no seeds, no work");
+        assert_eq!((u.tainted, u.reseeded, u.applied, u.retracted), (0, 0, 0, 0));
+    }
+
+    #[test]
+    fn insert_only_batch_improves_without_taint() {
+        // A pure-insert batch must never taint: inserts only add better
+        // paths to a monotone program.
+        let g = generators::with_random_weights(&generators::urand(7, 4, 9), 1.0, 10.0, 2);
+        let mut d = crate::graph::DistGraph::block(&g, 4);
+        let base = super::super::run_async(
+            sssp::SsspProgram { source: 0 },
+            &d,
+            FlushPolicy::Adaptive,
+            det(),
+        );
+        let batch = mutation::generate_batch(&g, 0.1, 1.0, 17, true);
+        let (g2, _, _) = mutation::apply_to_csr(&g, &batch);
+        let run = rerun_incremental(
+            sssp::SsspProgram { source: 0 },
+            &mut d,
+            &base.states,
+            &batch,
+            Reconverge::Async(FlushPolicy::Adaptive),
+            det(),
+        );
+        assert_eq!(run.report.update.tainted, 0);
+        let want = sssp::dijkstra(&g2, 0);
+        for (v, (&got, &exp)) in run.states.iter().zip(&want).enumerate() {
+            assert!(
+                (got.is_infinite() && exp.is_infinite()) || (got - exp).abs() < 1e-3,
+                "v{v}: {got} vs {exp}"
+            );
+        }
+    }
+
+    #[test]
+    fn deletion_taint_recovers_exact_answers() {
+        // Delete-heavy batch across engines and schemes; answers must
+        // equal the from-scratch oracle on the updated graph.
+        let g = generators::with_random_weights(&generators::kron(7, 5, 31), 1.0, 10.0, 8);
+        let batch = mutation::generate_batch(&g, 0.1, 0.0, 23, true);
+        let (g2, _, retracted) = mutation::apply_to_csr(&g, &batch);
+        assert!(retracted > 0);
+        let want = sssp::dijkstra(&g2, 0);
+        for kind in [PartitionKind::Block, PartitionKind::VertexCut] {
+            let mut d = crate::graph::DistGraph::build_with(&g, kind.build(&g, 4));
+            let base = super::super::run_async(
+                sssp::SsspProgram { source: 0 },
+                &d,
+                FlushPolicy::Adaptive,
+                det(),
+            );
+            let run = rerun_incremental(
+                sssp::SsspProgram { source: 0 },
+                &mut d,
+                &base.states,
+                &batch,
+                Reconverge::Async(FlushPolicy::Adaptive),
+                det(),
+            );
+            assert!(run.report.update.tainted > 0, "{kind:?}: deletes must taint");
+            for (v, (&got, &exp)) in run.states.iter().zip(&want).enumerate() {
+                assert!(
+                    (got.is_infinite() && exp.is_infinite()) || (got - exp).abs() < 1e-3,
+                    "{kind:?} v{v}: {got} vs {exp}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn disconnecting_delete_unreaches_the_far_side() {
+        // path 0-1-2-3-4-5: delete 2-3 (both directions); BFS from 0 must
+        // report 3,4,5 unreached, CC must split the component.
+        let g = generators::path(6);
+        let mut batch = UpdateBatch::new();
+        batch.delete(2, 3);
+        batch.delete(3, 2);
+
+        let mut d = crate::graph::DistGraph::block(&g, 3);
+        let base =
+            super::super::run_async(bfs::BfsProgram { root: 0 }, &d, FlushPolicy::Adaptive, det());
+        let run = rerun_incremental(
+            bfs::BfsProgram { root: 0 },
+            &mut d,
+            &base.states,
+            &batch,
+            Reconverge::Async(FlushPolicy::Adaptive),
+            det(),
+        );
+        let levels: Vec<u32> = run.states.iter().map(|s| s.level).collect();
+        assert_eq!(levels, vec![0, 1, 2, u32::MAX, u32::MAX, u32::MAX]);
+
+        let mut d = crate::graph::DistGraph::block(&g, 3);
+        let base = super::super::run_async(cc::CcProgram, &d, FlushPolicy::Adaptive, det());
+        let run = rerun_incremental(
+            cc::CcProgram,
+            &mut d,
+            &base.states,
+            &batch,
+            Reconverge::Async(FlushPolicy::Adaptive),
+            det(),
+        );
+        assert_eq!(run.states, vec![0, 0, 0, 3, 3, 3]);
+    }
+
+    #[test]
+    fn incremental_beats_full_recompute_on_small_batches() {
+        let g = generators::with_random_weights(&generators::kron(9, 8, 3), 1.0, 10.0, 4);
+        let batch = mutation::generate_batch(&g, 0.005, 0.5, 29, true);
+        let (g2, _, _) = mutation::apply_to_csr(&g, &batch);
+        let mut d = crate::graph::DistGraph::block(&g, 8);
+        let base = super::super::run_async(
+            sssp::SsspProgram { source: 0 },
+            &d,
+            FlushPolicy::Adaptive,
+            det(),
+        );
+        let run = rerun_incremental(
+            sssp::SsspProgram { source: 0 },
+            &mut d,
+            &base.states,
+            &batch,
+            Reconverge::Async(FlushPolicy::Adaptive),
+            det(),
+        );
+        let full = super::super::run_async(
+            sssp::SsspProgram { source: 0 },
+            &crate::graph::DistGraph::block(&g2, 8),
+            FlushPolicy::Adaptive,
+            det(),
+        );
+        assert_eq!(run.states, full.states, "same fixpoint either way");
+        let u = run.report.update;
+        assert!(
+            u.reconverge_relaxations < full.report.work.relaxations,
+            "incremental {} vs full {}",
+            u.reconverge_relaxations,
+            full.report.work.relaxations
+        );
+    }
+}

@@ -25,15 +25,23 @@
 //! [`SimReport`](crate::amt::SimReport) stamping. A program contributes
 //! only the ~10 pure hooks of [`VertexProgram`]; see
 //! [`program`] and `ARCHITECTURE.md`.
+//!
+//! [`incremental`] layers dynamic graphs on top: after a
+//! [`DistGraph::apply_updates`](crate::graph::DistGraph::apply_updates)
+//! batch, [`rerun_incremental`] warm-starts any program on any of the
+//! three engines from its previous fixpoint, re-seeding only the
+//! invalidated region instead of recomputing from scratch.
 
 pub mod async_engine;
 pub mod bsp_engine;
 pub mod delta_engine;
+pub mod incremental;
 pub mod program;
 
 pub use async_engine::run_async;
 pub use bsp_engine::{run_bsp, run_bsp_with_executor};
 pub use delta_engine::run_delta;
+pub use incremental::{rerun_incremental, Reconverge};
 pub use program::{Mode, ProgramInfo, VertexProgram};
 
 use crate::amt::aggregate::Batch;

@@ -144,4 +144,37 @@ pub trait VertexProgram: Send + Sync + 'static {
     fn step_update(&self, _state: &mut Self::State) -> f32 {
         0.0
     }
+
+    // --- Incremental re-convergence hooks (dynamic graphs) ---------------
+    //
+    // Consumed by [`incremental`](crate::engine::incremental) when a
+    // program re-runs over a mutated graph from its previous fixpoint.
+    // Static runs never call them; the defaults are maximally
+    // conservative, so programs that ignore dynamic graphs stay correct.
+
+    /// Could `dst`'s converged value have been *derived through* the edge
+    /// `src --w--> dst`? Drives deletion invalidation: when the edge goes
+    /// away, every state whose justification chain may pass through it is
+    /// tainted and recomputed from scratch. Must never return false for a
+    /// real dependency (over-taint is only wasted work); the `true`
+    /// default taints everything reachable from a deleted edge.
+    fn depends_on_edge(&self, _src: &Self::State, _dst: &Self::State, _w: f32) -> bool {
+        true
+    }
+
+    /// May a warm row with this state re-emit its [`VertexProgram::signal`]
+    /// as a reseed? Guards frontier re-seeding: rows whose state encodes
+    /// "unreached" (infinite distance, unvisited level) have no signal to
+    /// offer — and BFS's `along_edge` would overflow on one.
+    fn can_emit(&self, _state: &Self::State) -> bool {
+        true
+    }
+
+    /// Rebuild a warm row's state from its previous converged value, given
+    /// the vertex's *post-update* global out-degree. The default carries
+    /// the old state over verbatim; degree-dependent programs (PageRank's
+    /// `inv_deg`) override it to refresh derived fields.
+    fn rewarm(&self, prev: &Self::State, _v: VertexId, _out_degree: u32) -> Self::State {
+        prev.clone()
+    }
 }

@@ -12,7 +12,9 @@
 //! runtime, and [`views`] provide NWGraph-style traversal ranges.
 //! [`storage`] makes shard adjacency pluggable (plain arrays or
 //! delta-varint compressed rows) and [`stream`] builds shards from an
-//! edge stream without ever materializing the global graph.
+//! edge stream without ever materializing the global graph. [`mutation`]
+//! adds dynamic-graph edge-update batches that
+//! [`DistGraph::apply_updates`] applies to the live shards.
 
 pub mod builder;
 pub mod csr;
@@ -21,6 +23,7 @@ pub mod distributed;
 pub mod edge_list;
 pub mod generators;
 pub mod io;
+pub mod mutation;
 pub mod partition;
 pub mod storage;
 pub mod stream;
@@ -29,6 +32,7 @@ pub mod views;
 pub use csr::Csr;
 pub use distributed::{DistGraph, EllShard, Shard};
 pub use edge_list::EdgeList;
+pub use mutation::{EdgeUpdate, UpdateBatch, UpdateOp};
 pub use partition::{Hash1D, Partition1D, PartitionKind, PartitionScheme, VertexCut2D};
 pub use storage::{AdjacencyStorage, CompressedCsr, StorageKind};
 pub use stream::EdgeSource;

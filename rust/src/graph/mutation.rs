@@ -1,0 +1,362 @@
+//! Edge-update batches for dynamic graphs.
+//!
+//! The paper's algorithms all run over a static partitioned graph; this
+//! module adds the vocabulary for *mutating* that graph after it has been
+//! distributed: an [`UpdateBatch`] of edge inserts/deletes, a seeded
+//! generator that derives realistic batches from an existing [`Csr`]
+//! (deletes sampled from live edges, inserts rejection-sampled from absent
+//! pairs), and a sequential oracle [`apply_to_csr`] whose semantics
+//! [`DistGraph::apply_updates`](super::DistGraph::apply_updates) must
+//! match exactly. The incremental re-convergence machinery in
+//! [`engine::incremental`](crate::engine::incremental) consumes both
+//! sides: the distributed apply mutates the shards in place, the oracle
+//! apply produces the reference graph that validation recomputes on.
+//!
+//! Semantics are **simple-graph, first-match**: inserting an edge that
+//! already exists is a no-op, deleting an edge that does not exist is a
+//! no-op, and deleting an edge that exists removes exactly one instance
+//! (the first in `(src, dst)`-sorted order). Ops inside a batch are
+//! applied in order, so `insert(u,v); delete(u,v)` on an absent edge nets
+//! to nothing and both count (one applied, one retracted).
+
+use std::collections::{HashMap, HashSet};
+
+use super::generators::{symmetric_weight, SplitMix64};
+use super::{Csr, EdgeList, VertexId};
+
+/// What a single [`EdgeUpdate`] does to the graph.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum UpdateOp {
+    /// Add the edge (no-op if it already exists).
+    Insert,
+    /// Remove one instance of the edge (no-op if absent).
+    Delete,
+}
+
+/// One directed edge insert or delete. `weight` is the weight a
+/// successful insert materializes on weighted graphs; it is ignored for
+/// deletes and on unweighted graphs (which store unit weights).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct EdgeUpdate {
+    pub src: VertexId,
+    pub dst: VertexId,
+    pub weight: f32,
+    pub op: UpdateOp,
+}
+
+/// An ordered batch of edge updates, applied atomically between two
+/// program runs. Order matters only for ops touching the same `(src,
+/// dst)` pair; the generator never emits such conflicts.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct UpdateBatch {
+    pub ops: Vec<EdgeUpdate>,
+}
+
+impl UpdateBatch {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn insert(&mut self, src: VertexId, dst: VertexId, weight: f32) {
+        self.ops.push(EdgeUpdate { src, dst, weight, op: UpdateOp::Insert });
+    }
+
+    pub fn delete(&mut self, src: VertexId, dst: VertexId) {
+        self.ops.push(EdgeUpdate { src, dst, weight: 1.0, op: UpdateOp::Delete });
+    }
+
+    pub fn len(&self) -> usize {
+        self.ops.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.ops.is_empty()
+    }
+}
+
+/// Map `(src, dst)` to how many instances the graph currently holds.
+fn edge_multiset(g: &Csr) -> HashMap<(VertexId, VertexId), u32> {
+    let mut m = HashMap::with_capacity(g.m());
+    for u in 0..g.n() as VertexId {
+        for &v in g.neighbors(u) {
+            *m.entry((u, v)).or_insert(0) += 1;
+        }
+    }
+    m
+}
+
+/// Derive a seeded update batch from `g`: roughly `frac * m` edge pairs
+/// (directed edges when `symmetric` is false, undirected pairs — emitted
+/// as both directions with equal weight — when true), an `insert_share`
+/// fraction of which are inserts of currently-absent non-loop pairs and
+/// the rest deletes of live edges. Deletes are sampled uniformly from the
+/// edge array; inserts are rejection-sampled from absent pairs, so dense
+/// graphs may yield fewer inserts than requested. Insert weights come
+/// from [`symmetric_weight`] in `[1, 10)` when `g` is weighted. `frac ==
+/// 0` yields an empty batch; any positive `frac` yields at least one
+/// pair when the graph has edges. Deletes are emitted before inserts and
+/// no pair appears twice, so the batch is order-insensitive.
+pub fn generate_batch(
+    g: &Csr,
+    frac: f64,
+    insert_share: f64,
+    seed: u64,
+    symmetric: bool,
+) -> UpdateBatch {
+    let n = g.n() as u64;
+    let m = g.m();
+    let mut batch = UpdateBatch::new();
+    if n < 2 || frac <= 0.0 {
+        return batch;
+    }
+    let pairs = if symmetric { m / 2 } else { m };
+    let target = ((frac * pairs as f64).round() as usize).max(1);
+    let n_inserts = ((insert_share.clamp(0.0, 1.0) * target as f64).round() as usize).min(target);
+    let n_deletes = target - n_inserts;
+
+    let mut rng = SplitMix64::new(seed);
+    let mut chosen: HashSet<(VertexId, VertexId)> = HashSet::with_capacity(target);
+    let offsets = g.offsets();
+    let src_of = |e: usize| -> VertexId {
+        // offsets is monotone with offsets[u] <= e < offsets[u + 1].
+        (offsets.partition_point(|&o| o <= e) - 1) as VertexId
+    };
+
+    let budget = 32 * target + 64;
+    let mut tries = 0;
+    while chosen.len() < n_deletes && m > 0 && tries < budget {
+        tries += 1;
+        let e = rng.below(m as u64) as usize;
+        let (mut u, mut v) = (src_of(e), g.targets()[e]);
+        if symmetric {
+            if u == v {
+                continue;
+            }
+            if u > v {
+                std::mem::swap(&mut u, &mut v);
+            }
+        }
+        if chosen.insert((u, v)) {
+            batch.delete(u, v);
+            if symmetric {
+                batch.delete(v, u);
+            }
+        }
+    }
+
+    let weighted = g.is_weighted();
+    let mut inserted = 0;
+    tries = 0;
+    while inserted < n_inserts && tries < budget {
+        tries += 1;
+        let (mut u, mut v) = (rng.below(n) as VertexId, rng.below(n) as VertexId);
+        if u == v {
+            continue;
+        }
+        if symmetric && u > v {
+            std::mem::swap(&mut u, &mut v);
+        }
+        if g.has_edge(u, v) || !chosen.insert((u, v)) {
+            continue;
+        }
+        let w = if weighted { symmetric_weight(seed ^ 0x9e3779b97f4a7c15, 1.0, 10.0, u, v) } else { 1.0 };
+        batch.insert(u, v, w);
+        if symmetric {
+            batch.insert(v, u, w);
+        }
+        inserted += 1;
+    }
+    batch
+}
+
+/// Sequential-oracle counterpart of
+/// [`DistGraph::apply_updates`](super::DistGraph::apply_updates): apply
+/// `batch` to a plain [`Csr`] and return `(updated, applied, retracted)`
+/// where `applied` counts effective inserts and `retracted` effective
+/// deletes. Validation rebuilds algorithm answers on the returned graph
+/// and cross-checks the counts against
+/// [`UpdateStats`](crate::amt::UpdateStats).
+pub fn apply_to_csr(g: &Csr, batch: &UpdateBatch) -> (Csr, u64, u64) {
+    let weighted = g.is_weighted();
+    let mut counts = edge_multiset(g);
+    let mut added: Vec<(VertexId, VertexId, f32)> = Vec::new();
+    // (src, dst) -> how many leading instances to drop when rebuilding.
+    let mut removed: HashMap<(VertexId, VertexId), u32> = HashMap::new();
+    let (mut applied, mut retracted) = (0u64, 0u64);
+
+    for op in &batch.ops {
+        let key = (op.src, op.dst);
+        let count = counts.entry(key).or_insert(0);
+        match op.op {
+            UpdateOp::Insert => {
+                if *count == 0 {
+                    *count = 1;
+                    added.push((op.src, op.dst, op.weight));
+                    applied += 1;
+                }
+            }
+            UpdateOp::Delete => {
+                if *count > 0 {
+                    *count -= 1;
+                    retracted += 1;
+                    // A delete may retract an edge added earlier in this
+                    // batch; cancel the pending add before recording a
+                    // removal against the original graph.
+                    if let Some(i) = added.iter().position(|&(u, v, _)| (u, v) == key) {
+                        added.remove(i);
+                    } else {
+                        *removed.entry(key).or_insert(0) += 1;
+                    }
+                }
+            }
+        }
+    }
+
+    let mut el = EdgeList::new(g.n());
+    for u in 0..g.n() as VertexId {
+        for (v, w) in g.neighbors_weighted(u) {
+            if let Some(k) = removed.get_mut(&(u, v)) {
+                if *k > 0 {
+                    *k -= 1;
+                    continue;
+                }
+            }
+            if weighted {
+                el.push_weighted(u, v, w);
+            } else {
+                el.push(u, v);
+            }
+        }
+    }
+    for (u, v, w) in added {
+        if weighted {
+            el.push_weighted(u, v, w);
+        } else {
+            el.push(u, v);
+        }
+    }
+    (Csr::from_edge_list(&el), applied, retracted)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generators;
+
+    fn edge_set(g: &Csr) -> HashSet<(VertexId, VertexId)> {
+        let mut s = HashSet::new();
+        for u in 0..g.n() as VertexId {
+            for &v in g.neighbors(u) {
+                s.insert((u, v));
+            }
+        }
+        s
+    }
+
+    #[test]
+    fn insert_and_delete_roundtrip() {
+        let g = generators::path(5);
+        let mut b = UpdateBatch::new();
+        b.insert(0, 4, 1.0);
+        b.delete(1, 2);
+        let (g2, applied, retracted) = apply_to_csr(&g, &b);
+        assert_eq!((applied, retracted), (1, 1));
+        assert_eq!(g2.m(), g.m());
+        assert!(g2.has_edge(0, 4));
+        assert!(!g2.has_edge(1, 2));
+        assert!(g2.has_edge(2, 1), "only the requested direction is removed");
+    }
+
+    #[test]
+    fn noop_ops_do_not_change_graph() {
+        let g = generators::cycle(6);
+        let mut b = UpdateBatch::new();
+        b.insert(0, 1, 1.0); // already present
+        b.delete(2, 5); // absent
+        let (g2, applied, retracted) = apply_to_csr(&g, &b);
+        assert_eq!((applied, retracted), (0, 0));
+        assert_eq!(edge_set(&g2), edge_set(&g));
+    }
+
+    #[test]
+    fn insert_then_delete_nets_to_nothing() {
+        let g = generators::path(4);
+        let mut b = UpdateBatch::new();
+        b.insert(0, 3, 2.5);
+        b.delete(0, 3);
+        let (g2, applied, retracted) = apply_to_csr(&g, &b);
+        assert_eq!((applied, retracted), (1, 1));
+        assert_eq!(edge_set(&g2), edge_set(&g));
+    }
+
+    #[test]
+    fn weighted_insert_keeps_weights() {
+        let g = generators::path(4);
+        let gw = generators::with_random_weights(&g, 1.0, 10.0, 7);
+        let mut b = UpdateBatch::new();
+        b.insert(0, 3, 4.25);
+        let (g2, applied, _) = apply_to_csr(&gw, &b);
+        assert_eq!(applied, 1);
+        assert!(g2.is_weighted());
+        let w = g2
+            .neighbors_weighted(0)
+            .find(|&(v, _)| v == 3)
+            .map(|(_, w)| w)
+            .unwrap();
+        assert_eq!(w, 4.25);
+        // untouched weights survive
+        let old: Vec<_> = gw.neighbors_weighted(1).collect();
+        let new: Vec<_> = g2.neighbors_weighted(1).collect();
+        assert_eq!(old, new);
+    }
+
+    #[test]
+    fn generated_batch_is_valid_and_seeded() {
+        let g = generators::urand(8, 4, 42);
+        let b1 = generate_batch(&g, 0.2, 0.5, 9, true);
+        let b2 = generate_batch(&g, 0.2, 0.5, 9, true);
+        assert_eq!(b1, b2, "same seed, same batch");
+        assert!(!b1.is_empty());
+        let mut seen = HashSet::new();
+        for op in &b1.ops {
+            assert_ne!(op.src, op.dst, "no self loops");
+            assert!(seen.insert((op.src, op.dst)), "no duplicate directed ops");
+            match op.op {
+                UpdateOp::Delete => assert!(g.has_edge(op.src, op.dst)),
+                UpdateOp::Insert => assert!(!g.has_edge(op.src, op.dst)),
+            }
+        }
+        // symmetric batches carry both directions of every pair
+        for op in &b1.ops {
+            assert!(seen.contains(&(op.dst, op.src)));
+        }
+        let b3 = generate_batch(&g, 0.2, 0.5, 10, true);
+        assert_ne!(b1, b3, "different seed, different batch");
+    }
+
+    #[test]
+    fn generated_batch_applies_cleanly() {
+        let g = generators::kron(6, 4, 11);
+        let b = generate_batch(&g, 0.1, 0.5, 3, true);
+        let (g2, applied, retracted) = apply_to_csr(&g, &b);
+        // every op in a generated batch is effective
+        assert_eq!(applied + retracted, b.len() as u64);
+        assert_eq!(g2.m(), g.m() + applied as usize - retracted as usize);
+    }
+
+    #[test]
+    fn zero_fraction_is_empty() {
+        let g = generators::urand(6, 3, 1);
+        assert!(generate_batch(&g, 0.0, 0.5, 1, true).is_empty());
+    }
+
+    #[test]
+    fn directed_batch_has_single_directions() {
+        let g = generators::urand_directed(8, 4, 5);
+        let b = generate_batch(&g, 0.2, 1.0, 2, false);
+        for op in &b.ops {
+            assert_eq!(op.op, UpdateOp::Insert);
+            assert!(!g.has_edge(op.src, op.dst));
+        }
+    }
+}

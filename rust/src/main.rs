@@ -269,6 +269,45 @@ fn real_main() -> Result<()> {
                 println!("validation: OK");
             }
         }
+        "mutate" => {
+            let algo = args.flag("algo").unwrap_or("sssp");
+            let p = args.flag_or("p", *cfg.localities.last().unwrap_or(&4))?;
+            let res = coordinator::run_mutate(&cfg, p, algo, validate)?;
+            let u = &res.report.update;
+            println!(
+                "mutate[{}] {} p={p}: batch={} applied={} retracted={} \
+                 (frac={} inserts={:.0}%)",
+                res.algo,
+                cfg.graph_name(),
+                u.batch_edges,
+                u.applied,
+                u.retracted,
+                cfg.mutate_frac,
+                cfg.mutate_inserts * 100.0,
+            );
+            println!(
+                "  routing: envelopes={} items={}  invalidation: tainted={} reseeded={}",
+                u.route_envelopes, u.route_items, u.tainted, u.reseeded,
+            );
+            println!(
+                "  incremental: relax={} envs={} makespan={} (wall {})",
+                u.reconverge_relaxations,
+                u.reconverge_envelopes,
+                fmt_us(u.reconverge_makespan_us),
+                fmt_us(u.reconverge_wall_us),
+            );
+            println!(
+                "  full rerun:  relax={} envs={} makespan={} (wall {})  relax saving={:.2}x",
+                res.full.work.relaxations,
+                res.full.net.envelopes,
+                fmt_us(res.full.makespan_us),
+                fmt_us(res.full.wall_us),
+                res.full.work.relaxations as f64 / u.reconverge_relaxations.max(1) as f64,
+            );
+            if validate {
+                println!("validation: OK");
+            }
+        }
         "fig1" => {
             let (table, _) = experiment::fig1_bfs(&cfg)?;
             print!("{}", table.render());
@@ -290,7 +329,7 @@ fn real_main() -> Result<()> {
             // each table prints (and persists) as soon as it completes.
             type Runner = Box<dyn Fn(&Config) -> Result<nwgraph_hpx::coordinator::Table>>;
             let large = args.switch("large");
-            let tables: [(&str, Runner); 9] = [
+            let tables: [(&str, Runner); 10] = [
                 ("a1_aggregation", Box::new(experiment::ablation_aggregation)),
                 ("a2_chunking", Box::new(experiment::ablation_adaptive_chunk)),
                 ("a4_flush_policy", Box::new(experiment::ablation_flush_policy)),
@@ -301,12 +340,13 @@ fn real_main() -> Result<()> {
                 ("a9_scale_sweep", Box::new(move |c: &Config| {
                     experiment::ablation_scale_sweep(c, large)
                 })),
+                ("a10_incremental", Box::new(experiment::ablation_incremental)),
                 ("extensions", Box::new(experiment::extensions)),
             ];
             let json = args.switch("json");
             let out_dir = args.flag("out-dir").unwrap_or("bench_out");
-            // --only a4,a7,a8,a9: run the prefix-matched subset (CI
-            // baselines grab A4+A7+A8+A9 without paying for the whole
+            // --only a4,a7,a8,a9,a10: run the prefix-matched subset (CI
+            // baselines grab A4+A7+A8+A9+A10 without paying for the whole
             // suite).
             let only: Option<Vec<&str>> =
                 args.flag("only").map(|s| s.split(',').map(str::trim).collect());

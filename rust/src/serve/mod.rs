@@ -257,6 +257,7 @@ pub(crate) fn merge_reports(into: &mut SimReport, other: &SimReport) {
     into.agg_master.merge(&other.agg_master);
     into.agg_mirror.merge(&other.agg_mirror);
     into.work.merge(&other.work);
+    into.update.merge(&other.update);
     into.wall_us += other.wall_us;
     into.phase_wall_us.extend_from_slice(&other.phase_wall_us);
 }
@@ -264,24 +265,10 @@ pub(crate) fn merge_reports(into: &mut SimReport, other: &SimReport) {
 /// A zeroed report for serve runs that never touched an engine (e.g. an
 /// all-covered stream with the oracle prebuilt elsewhere).
 fn empty_report(p: u32) -> SimReport {
-    SimReport {
-        n_localities: p,
-        makespan_us: 0.0,
-        busy_us: vec![0.0; p as usize],
-        barriers: 0,
-        events: 0,
-        net: Default::default(),
-        per_locality_net: vec![Default::default(); p as usize],
-        agg: Default::default(),
-        agg_master: Default::default(),
-        agg_mirror: Default::default(),
-        work: Default::default(),
-        partition: Default::default(),
-        query: QueryStats::default(),
-        mem: Default::default(),
-        wall_us: 0.0,
-        phase_wall_us: Vec::new(),
-    }
+    let mut r = SimReport::new(p);
+    r.busy_us = vec![0.0; p as usize];
+    r.per_locality_net = vec![Default::default(); p as usize];
+    r
 }
 
 /// Interpolation-free percentile of an ascending-sorted slice
