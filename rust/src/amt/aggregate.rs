@@ -72,6 +72,21 @@
 //! [`SimReport::agg`](super::metrics::SimReport) (and per-slot-space into
 //! `agg_master`/`agg_mirror`) so every experiment reports the
 //! naive-vs-aggregated axis without side channels.
+//!
+//! # Reliable delivery
+//!
+//! Under `reliability=acked` ([`Aggregator::with_reliability`]) the
+//! aggregator doubles as the end-to-end reliable-delivery layer the
+//! fault-injection harness ([`fault`](super::fault)) exercises: every
+//! sealed batch carries a per-`(source, destination, slot space)`
+//! sequence number and a delivery-trace token; the receiver's window
+//! ([`Aggregator::admit`]) rejects duplicates idempotently; an unacked
+//! envelope is retransmitted from [`Aggregator::poll`] with exponential
+//! backoff until [`RETRANSMIT_MAX_ATTEMPTS`] is exhausted (the give-up
+//! counter is the engines' failure detector for crashed destinations).
+//! With reliability off, none of this state exists: no sequence numbers,
+//! no extra tokens, [`Aggregator::admit`] is a constant `true` — the
+//! envelope-parity properties the suites pin are untouched.
 
 use super::net::NetConfig;
 use super::sim::{LocalityId, SimTime};
@@ -227,15 +242,20 @@ pub struct Batch<V> {
     /// Delivery-trace token under traced policies (see
     /// [`FlushPolicy::traced`]); the shipper passes it to
     /// [`Ctx::send_traced`](super::sim::Ctx::send_traced) and routes the
-    /// ack back to [`Aggregator::observe_ack`].
+    /// ack back to [`Aggregator::observe_ack`]. Always minted under
+    /// `reliability=acked` (the ack doubles as the delivery receipt).
     token: Option<u64>,
+    /// Per-`(source, destination, slot space)` sequence number under
+    /// `reliability=acked`; `None` with reliability off.
+    seq: Option<u64>,
 }
 
 impl<V> Batch<V> {
-    /// Serialized payload size (items x per-item wire bytes). The trace
+    /// Serialized payload size (items x per-item wire bytes, plus the
+    /// 8-byte sequence header under `reliability=acked`). The trace
     /// token is runtime bookkeeping, not payload.
     pub fn wire_bytes(&self) -> usize {
-        self.items.len() * self.item_bytes
+        self.items.len() * self.item_bytes + if self.seq.is_some() { 8 } else { 0 }
     }
 
     /// Number of folded items carried.
@@ -248,9 +268,16 @@ impl<V> Batch<V> {
         self.items.is_empty()
     }
 
-    /// Delivery-trace token, when the emitting policy is traced.
+    /// Delivery-trace token, when the emitting policy is traced or the
+    /// aggregator runs reliable delivery.
     pub fn token(&self) -> Option<u64> {
         self.token
+    }
+
+    /// Sequence number under `reliability=acked`; receivers feed it to
+    /// [`Aggregator::admit`] before applying the batch.
+    pub fn seq(&self) -> Option<u64> {
+        self.seq
     }
 
     /// Consume the batch, returning the item vector (e.g. to drain it and
@@ -425,6 +452,91 @@ const POOL_CAP: usize = 32;
 /// `limit` sentinel: no item-count threshold (drain/time-driven only).
 const NO_LIMIT: usize = usize::MAX;
 
+/// Initial retransmit timeout under `reliability=acked`, in simulated us;
+/// doubles per attempt (exponential backoff).
+pub const RETRANSMIT_RTO_US: f64 = 500.0;
+/// Retransmissions attempted before an unacked envelope is abandoned and
+/// counted as a give-up — the engines' failure detector for a crashed
+/// destination (a live peer on a lossy link acks well within the backoff
+/// schedule; a fail-stopped one never will).
+pub const RETRANSMIT_MAX_ATTEMPTS: u32 = 6;
+
+/// One sent-but-unacked envelope retained for retransmission.
+#[derive(Debug, Clone)]
+struct Outstanding<V> {
+    /// Trace token of the most recent transmission (acks for earlier
+    /// transmissions of the same envelope arrive as unknown tokens and
+    /// are ignored — the sequence number, not the token, is identity).
+    token: u64,
+    dst: LocalityId,
+    seq: u64,
+    items: Vec<(u32, V)>,
+    /// Simulated time after which [`Aggregator::poll`] resends.
+    deadline: SimTime,
+    /// Retransmissions performed so far.
+    attempt: u32,
+}
+
+/// Receive-side dedup window for one source locality: sequence numbers
+/// below `next_expected` (or parked in `ahead`) have been applied, so a
+/// second arrival is a duplicate and is rejected idempotently.
+#[derive(Debug, Clone, Default)]
+struct SeqWindow {
+    next_expected: u64,
+    ahead: std::collections::BTreeSet<u64>,
+}
+
+impl SeqWindow {
+    /// Returns true when `seq` is new (and records it), false when it is
+    /// a duplicate.
+    fn admit(&mut self, seq: u64) -> bool {
+        if seq < self.next_expected || self.ahead.contains(&seq) {
+            return false;
+        }
+        if seq == self.next_expected {
+            self.next_expected += 1;
+            while self.ahead.remove(&self.next_expected) {
+                self.next_expected += 1;
+            }
+        } else {
+            self.ahead.insert(seq);
+        }
+        true
+    }
+}
+
+/// Sender + receiver state for `reliability=acked`. Exists only when the
+/// aggregator was built [`Aggregator::with_reliability`]`(true)`; the
+/// fast path carries none of it.
+#[derive(Debug, Clone)]
+struct ReliableState<V> {
+    /// Next sequence number per destination locality.
+    next_seq: Vec<u64>,
+    /// Sent-but-unacked envelopes, retransmitted from [`Aggregator::poll`].
+    outstanding: Vec<Outstanding<V>>,
+    /// Per-source receive windows.
+    windows: Vec<SeqWindow>,
+    /// Envelopes resent after an ack timeout.
+    retransmits: u64,
+    /// Incoming duplicates rejected by [`Aggregator::admit`].
+    dedup_hits: u64,
+    /// Envelopes abandoned after [`RETRANSMIT_MAX_ATTEMPTS`].
+    give_ups: u64,
+}
+
+impl<V> ReliableState<V> {
+    fn new(n: usize) -> Self {
+        ReliableState {
+            next_seq: vec![0; n],
+            outstanding: Vec::new(),
+            windows: vec![SeqWindow::default(); n],
+            retransmits: 0,
+            dedup_hits: 0,
+            give_ups: 0,
+        }
+    }
+}
+
 /// Typed per-destination message combiner. See the module docs.
 pub struct Aggregator<V> {
     here: LocalityId,
@@ -455,6 +567,13 @@ pub struct Aggregator<V> {
     item_bytes: usize,
     fold: fn(&mut V, V),
     stats: AggStats,
+    /// Reliable-delivery state (`reliability=acked`); `None` keeps the
+    /// zero-fault fast path byte-identical.
+    reliable: Option<ReliableState<V>>,
+    /// Most recent simulated time seen (via [`Aggregator::accumulate`] /
+    /// [`Aggregator::poll`]); stamps retransmit deadlines for batches
+    /// sealed from clock-less paths like [`Aggregator::drain`].
+    clock: SimTime,
 }
 
 impl<V: Clone + Default> Aggregator<V> {
@@ -516,7 +635,45 @@ impl<V: Clone + Default> Aggregator<V> {
             item_bytes,
             fold,
             stats: AggStats::default(),
+            reliable: None,
+            clock: 0.0,
         }
+    }
+
+    /// Builder: turn on `reliability=acked` sequenced/acked delivery (see
+    /// the module docs). Every sealed batch then carries a sequence
+    /// number and a trace token, so callers must ship with
+    /// [`Ctx::send_traced`](super::sim::Ctx::send_traced) and uphold the
+    /// poll/timer contract ([`Aggregator::needs_clock`]) or unacked
+    /// envelopes would never retransmit. A no-op when `on` is false.
+    pub fn with_reliability(mut self, on: bool) -> Self {
+        if on {
+            self.reliable = Some(ReliableState::new(self.values.len()));
+        }
+        self
+    }
+
+    /// Whether this aggregator needs the poll/timer contract upheld
+    /// (call [`Aggregator::poll`] at handler/step boundaries and keep a
+    /// timer armed at [`Aggregator::next_deadline`]): true for a non-zero
+    /// time window and for reliable delivery's retransmit schedule.
+    pub fn needs_clock(&self) -> bool {
+        self.window_us.is_some() || self.reliable.is_some()
+    }
+
+    /// Reliable-delivery counters `(retransmits, dedup hits, give-ups)`;
+    /// zeros when reliability is off. Merged into
+    /// [`FaultStats`](super::metrics::FaultStats) by the engine drivers.
+    pub fn reliability_stats(&self) -> (u64, u64, u64) {
+        self.reliable
+            .as_ref()
+            .map_or((0, 0, 0), |r| (r.retransmits, r.dedup_hits, r.give_ups))
+    }
+
+    /// Per-destination `next_seq` cursors under reliable delivery (empty
+    /// vector otherwise); snapshotted into checkpoints as forensic state.
+    pub fn seq_cursors(&self) -> Vec<u64> {
+        self.reliable.as_ref().map_or(Vec::new(), |r| r.next_seq.clone())
     }
 
     /// Number of destinations (localities) configured.
@@ -574,6 +731,7 @@ impl<V: Clone + Default> Aggregator<V> {
         now: SimTime,
     ) -> Option<Batch<V>> {
         debug_assert_ne!(dst, self.here, "aggregate only remote sends");
+        self.clock = self.clock.max(now);
         self.stats.items += 1;
         if self.unbatched {
             // Unbatched fast path: no combiner state at all.
@@ -603,19 +761,58 @@ impl<V: Clone + Default> Aggregator<V> {
     }
 
     /// Stamp envelope-level accounting (and a trace token under traced
-    /// policies) onto an outgoing item vector.
+    /// policies or reliable delivery, plus a sequence number and a
+    /// retransmit-buffer entry under reliable delivery) onto an outgoing
+    /// item vector.
     fn seal(&mut self, dst: LocalityId, items: Vec<(u32, V)>) -> Batch<V> {
         self.stats.envelopes += 1;
         self.stats.sent_items += items.len() as u64;
-        let token = if self.traced {
+        let token = if self.traced || self.reliable.is_some() {
             let t = self.next_token;
             self.next_token += 1;
-            self.inflight.push((t, dst, items.len() as u32));
+            if self.traced {
+                self.inflight.push((t, dst, items.len() as u32));
+            }
             Some(t)
         } else {
             None
         };
-        Batch { items, item_bytes: self.item_bytes, token }
+        let seq = if let Some(r) = self.reliable.as_mut() {
+            let s = r.next_seq[dst as usize];
+            r.next_seq[dst as usize] += 1;
+            r.outstanding.push(Outstanding {
+                token: token.expect("reliable batches always carry a token"),
+                dst,
+                seq: s,
+                items: items.clone(),
+                deadline: self.clock + RETRANSMIT_RTO_US,
+                attempt: 0,
+            });
+            Some(s)
+        } else {
+            None
+        };
+        Batch { items, item_bytes: self.item_bytes, token, seq }
+    }
+
+    /// Receiver-side dedup: feed an incoming batch's source and
+    /// [`Batch::seq`] before applying it. Returns `false` for a
+    /// duplicate (apply nothing — the fold would double-count sums;
+    /// counted as a dedup hit), `true` otherwise. A constant `true` with
+    /// reliability off or for unsequenced batches, with zero state.
+    pub fn admit(&mut self, from: LocalityId, seq: Option<u64>) -> bool {
+        let Some(r) = self.reliable.as_mut() else {
+            return true;
+        };
+        let Some(seq) = seq else {
+            return true;
+        };
+        if r.windows[from as usize].admit(seq) {
+            true
+        } else {
+            r.dedup_hits += 1;
+            false
+        }
     }
 
     /// Take `dst`'s pending batch (no stats-class attribution).
@@ -672,36 +869,93 @@ impl<V: Clone + Default> Aggregator<V> {
     /// handler/step boundaries and from the timer armed at
     /// [`Aggregator::next_deadline`]; counted as policy flushes.
     pub fn poll(&mut self, now: SimTime) -> Vec<(LocalityId, Batch<V>)> {
-        let Some(w) = self.window_us else {
-            return Vec::new();
-        };
-        let (here, n) = (self.here, self.values.len() as LocalityId);
-        (0..n)
-            .filter(|&l| l != here)
-            .filter_map(|l| {
+        self.clock = self.clock.max(now);
+        let mut out = Vec::new();
+        if let Some(w) = self.window_us {
+            let (here, n) = (self.here, self.values.len() as LocalityId);
+            out.extend((0..n).filter(|&l| l != here).filter_map(|l| {
                 let d = l as usize;
                 if self.touched[d].is_empty() || now - self.oldest[d] < w {
                     return None;
                 }
                 self.stats.policy_flushes += 1;
                 self.take(l).map(|b| (l, b))
-            })
-            .collect()
+            }));
+        }
+        if self.reliable.is_some() {
+            self.retransmit_due(now, &mut out);
+        }
+        out
     }
 
-    /// Earliest time at which [`Aggregator::poll`] would flush something:
-    /// `min over pending destinations of (first touch + window)`. `None`
-    /// when nothing is pending or the policy has no time window. Callers
-    /// that buffer under a time window must keep a runtime timer armed
-    /// here, or pending items could outlive quiescence.
+    /// Resend every outstanding envelope whose ack timeout has expired as
+    /// of `now`: same sequence number (the receiver window makes the
+    /// redundant copy idempotent), fresh token, doubled deadline. An
+    /// envelope that has exhausted [`RETRANSMIT_MAX_ATTEMPTS`] is
+    /// abandoned and counted as a give-up — its destination is presumed
+    /// fail-stopped.
+    fn retransmit_due(&mut self, now: SimTime, out: &mut Vec<(LocalityId, Batch<V>)>) {
+        loop {
+            let r = self.reliable.as_mut().expect("caller checked");
+            let Some(i) = r.outstanding.iter().position(|o| o.deadline <= now) else {
+                return;
+            };
+            if r.outstanding[i].attempt >= RETRANSMIT_MAX_ATTEMPTS {
+                r.give_ups += 1;
+                r.outstanding.swap_remove(i);
+                continue;
+            }
+            let token = self.next_token;
+            self.next_token += 1;
+            let o = &mut r.outstanding[i];
+            o.attempt += 1;
+            o.deadline = now + RETRANSMIT_RTO_US * f64::from(1u32 << o.attempt.min(16));
+            o.token = token;
+            r.retransmits += 1;
+            let (dst, seq, items) = {
+                let o = &r.outstanding[i];
+                (o.dst, o.seq, o.items.clone())
+            };
+            self.stats.envelopes += 1;
+            self.stats.sent_items += items.len() as u64;
+            out.push((
+                dst,
+                Batch {
+                    items,
+                    item_bytes: self.item_bytes,
+                    token: Some(token),
+                    seq: Some(seq),
+                },
+            ));
+        }
+    }
+
+    /// Earliest time at which [`Aggregator::poll`] would emit something:
+    /// the minimum over pending destinations of (first touch + window)
+    /// and, under reliable delivery, over outstanding envelopes' ack
+    /// timeouts. `None` when nothing is pending. Callers for which
+    /// [`Aggregator::needs_clock`] is true must keep a runtime timer
+    /// armed here, or pending items / retransmits could outlive
+    /// quiescence.
     pub fn next_deadline(&self) -> Option<SimTime> {
-        let w = self.window_us?;
-        self.touched
-            .iter()
-            .enumerate()
-            .filter(|(d, t)| *d != self.here as usize && !t.is_empty())
-            .map(|(d, _)| self.oldest[d] + w)
-            .min_by(|a, b| a.total_cmp(b))
+        let window = self.window_us.and_then(|w| {
+            self.touched
+                .iter()
+                .enumerate()
+                .filter(|(d, t)| *d != self.here as usize && !t.is_empty())
+                .map(|(d, _)| self.oldest[d] + w)
+                .min_by(|a, b| a.total_cmp(b))
+        });
+        let retrans = self.reliable.as_ref().and_then(|r| {
+            r.outstanding
+                .iter()
+                .map(|o| o.deadline)
+                .min_by(|a, b| a.total_cmp(b))
+        });
+        match (window, retrans) {
+            (Some(a), Some(b)) => Some(a.min(b)),
+            (a, b) => a.or(b),
+        }
     }
 
     /// Feed one delivery observation back (the ack of a traced envelope):
@@ -711,18 +965,34 @@ impl<V: Clone + Default> Aggregator<V> {
     /// advances the destination's hill climber and adopts its new item
     /// threshold.
     pub fn observe_ack(&mut self, token: u64, sent: SimTime, delivered: SimTime) {
-        let Some(i) = self.inflight.iter().position(|e| e.0 == token) else {
-            debug_assert!(false, "ack for unknown token {token}");
-            return;
-        };
-        let (_, dst, items) = self.inflight.swap_remove(i);
-        let latency_us = (delivered - sent).max(0.0);
-        self.stats.acks += 1;
-        self.stats.ack_latency_ns += (latency_us * 1e3) as u64;
-        if let Some(t) = self.tuners.get_mut(dst as usize) {
-            t.observe(latency_us, items, self.base_items);
-            self.limit[dst as usize] = t.limit;
+        let mut known = false;
+        if let Some(i) = self.inflight.iter().position(|e| e.0 == token) {
+            let (_, dst, items) = self.inflight.swap_remove(i);
+            let latency_us = (delivered - sent).max(0.0);
+            self.stats.acks += 1;
+            self.stats.ack_latency_ns += (latency_us * 1e3) as u64;
+            if let Some(t) = self.tuners.get_mut(dst as usize) {
+                t.observe(latency_us, items, self.base_items);
+                self.limit[dst as usize] = t.limit;
+            }
+            known = true;
         }
+        // Reliable delivery: the ack is the receipt that settles the
+        // retransmit-buffer entry. Acks for superseded tokens (an earlier
+        // transmission of a since-retransmitted or already-settled
+        // envelope) are expected under faults and ignored.
+        let mut settled = None;
+        if let Some(r) = self.reliable.as_mut() {
+            if let Some(i) = r.outstanding.iter().position(|o| o.token == token) {
+                settled = Some(r.outstanding.swap_remove(i).items);
+            }
+            known = true;
+        }
+        if let Some(items) = settled {
+            self.recycle(items);
+        }
+        debug_assert!(known, "ack for unknown token {token}");
+        let _ = known;
     }
 
     /// The current item threshold for `dst` (`usize::MAX` = drain/time
@@ -1037,6 +1307,99 @@ mod tests {
         assert_eq!(s.pool_allocs, 1, "{s:?}");
         assert_eq!(s.pool_reuses, 9);
         assert!(s.pool_reuse_ratio() > 0.8);
+    }
+
+    #[test]
+    fn reliability_off_is_the_zero_cost_baseline() {
+        let counts = [4usize, 4];
+        let mut agg = agg_f32(&counts, 0, FlushPolicy::Items(2), &NetConfig::zero());
+        agg.accumulate(1, 0, 1.0, 0.0);
+        let b = agg.accumulate(1, 1, 1.0, 0.0).unwrap();
+        assert_eq!(b.seq(), None, "no sequence header with reliability off");
+        assert_eq!(b.wire_bytes(), 2 * 8, "no +8 header bytes");
+        assert!(!agg.needs_clock());
+        assert!(agg.admit(1, None), "admit is a constant true");
+        assert_eq!(agg.reliability_stats(), (0, 0, 0));
+    }
+
+    #[test]
+    fn reliable_batches_are_sequenced_and_settled_by_acks() {
+        let counts = [4usize, 4];
+        let mut agg = agg_f32(&counts, 0, FlushPolicy::Items(1), &NetConfig::zero())
+            .with_reliability(true);
+        assert!(agg.needs_clock(), "retransmit schedule needs the clock");
+        let b = agg.accumulate(1, 0, 1.0, 100.0).unwrap();
+        assert_eq!(b.seq(), Some(0));
+        let tok = b.token().expect("reliable batches always carry a token");
+        assert_eq!(b.wire_bytes(), 8 + 8, "payload + sequence header");
+        let b2 = agg.accumulate(1, 1, 1.0, 100.0).unwrap();
+        assert_eq!(b2.seq(), Some(1), "sequence numbers ascend per destination");
+        // Two unacked envelopes -> the earliest ack timeout is armed.
+        assert_eq!(agg.next_deadline(), Some(100.0 + RETRANSMIT_RTO_US));
+        agg.observe_ack(tok, 100.0, 101.0);
+        agg.observe_ack(b2.token().unwrap(), 100.0, 101.0);
+        assert_eq!(agg.next_deadline(), None, "all settled: nothing to retransmit");
+        assert_eq!(agg.reliability_stats(), (0, 0, 0));
+    }
+
+    #[test]
+    fn unacked_envelopes_retransmit_with_backoff_then_give_up() {
+        let counts = [4usize, 4];
+        let mut agg = agg_f32(&counts, 0, FlushPolicy::Items(1), &NetConfig::zero())
+            .with_reliability(true);
+        let b = agg.accumulate(1, 0, 2.5, 0.0).unwrap();
+        let first_tok = b.token().unwrap();
+        let mut resends = 0u32;
+        let mut last_deadline = 0.0;
+        while let Some(at) = agg.next_deadline() {
+            assert!(at > last_deadline, "backoff must push the deadline out");
+            last_deadline = at;
+            for (dst, rb) in agg.poll(at) {
+                assert_eq!(dst, 1);
+                assert_eq!(rb.seq(), Some(0), "retransmits reuse the sequence number");
+                assert_ne!(rb.token().unwrap(), first_tok, "fresh token per transmission");
+                assert_eq!(rb.items, vec![(0, 2.5)]);
+                resends += 1;
+            }
+        }
+        assert_eq!(resends, RETRANSMIT_MAX_ATTEMPTS);
+        let (retransmits, dedup, give_ups) = agg.reliability_stats();
+        assert_eq!(retransmits, u64::from(RETRANSMIT_MAX_ATTEMPTS));
+        assert_eq!(dedup, 0);
+        assert_eq!(give_ups, 1, "abandoned after the attempt budget: failure detected");
+    }
+
+    #[test]
+    fn late_ack_for_a_superseded_token_is_ignored() {
+        let counts = [4usize, 4];
+        let mut agg = agg_f32(&counts, 0, FlushPolicy::Items(1), &NetConfig::zero())
+            .with_reliability(true);
+        let b = agg.accumulate(1, 0, 1.0, 0.0).unwrap();
+        let old_tok = b.token().unwrap();
+        let resent = agg.poll(RETRANSMIT_RTO_US + 1.0);
+        assert_eq!(resent.len(), 1);
+        let new_tok = resent[0].1.token().unwrap();
+        // The original copy finally arrives and acks: superseded token.
+        agg.observe_ack(old_tok, 0.0, 900.0);
+        assert!(agg.next_deadline().is_some(), "entry still waits on the live token");
+        agg.observe_ack(new_tok, 0.0, 901.0);
+        assert_eq!(agg.next_deadline(), None);
+    }
+
+    #[test]
+    fn dedup_window_rejects_duplicates_and_handles_reordering() {
+        let counts = [4usize, 4];
+        let mut agg = agg_f32(&counts, 0, FlushPolicy::Items(1), &NetConfig::zero())
+            .with_reliability(true);
+        assert!(agg.admit(1, Some(0)), "first arrival");
+        assert!(!agg.admit(1, Some(0)), "duplicate rejected");
+        assert!(agg.admit(1, Some(2)), "out-of-order arrival is new");
+        assert!(agg.admit(1, Some(1)), "the gap fills in");
+        assert!(!agg.admit(1, Some(1)), "late duplicate of the gap-filler");
+        assert!(!agg.admit(1, Some(2)), "duplicate of the early arrival");
+        assert!(agg.admit(0, Some(0)), "windows are per source locality");
+        let (_, dedup_hits, _) = agg.reliability_stats();
+        assert_eq!(dedup_hits, 3);
     }
 
     #[test]

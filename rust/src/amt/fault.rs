@@ -1,0 +1,364 @@
+//! Fault model — seeded fault plans injected at the runtime wire seams.
+//!
+//! A [`FaultPlan`] describes *what* can go wrong on the wire: per-envelope
+//! drop/duplicate/extra-delay probabilities, one "locality L crashes at
+//! time T" event, and one straggler slowdown. Both runtimes consume the
+//! same plan at their single delivery seam — the simulator where
+//! `group_outbox` output is scheduled onto the wire, the threads runtime
+//! where dispatch effects push into destination inboxes — so a plan is
+//! substrate-portable by construction.
+//!
+//! [`FaultState`] is the per-run mutable companion: a splitmix64 stream
+//! seeded from the plan (decisions are a deterministic function of
+//! `(seed, envelope ordinal)`), crash flags, and injection counters that
+//! the runtimes stamp into [`FaultStats`](super::metrics::FaultStats)
+//! at teardown.
+//!
+//! Fault decisions apply to *data* envelopes only. Messages whose
+//! [`Message::fault_immune`](super::sim::Message::fault_immune) returns
+//! true (the engines' thin Count/Continue/Status control plane) ride a
+//! modeled-reliable channel: a grouped envelope mixing immune and
+//! faultable items is split at the seam and only the faultable part is
+//! subject to the plan. Runtime-internal events (acks, barrier
+//! bookkeeping, timers) are never faulted.
+
+use super::sim::LocalityId;
+
+/// Delivery-reliability mode for the aggregator layer.
+///
+/// `None` is the historical fast path: no sequence numbers, no
+/// retransmit buffers, no dedup state — envelope parity with every
+/// pre-fault PR is property-pinned. `Acked` turns on sequence-numbered
+/// envelopes with receiver dedup and ack-driven retransmit, which makes
+/// drop/duplicate faults survivable.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub enum Reliability {
+    #[default]
+    None,
+    Acked,
+}
+
+impl Reliability {
+    /// Parse the `reliability=none|acked` config value.
+    pub fn parse(s: &str) -> Result<Self, String> {
+        match s {
+            "none" => Ok(Reliability::None),
+            "acked" => Ok(Reliability::Acked),
+            other => Err(format!("unknown reliability '{other}' (none|acked)")),
+        }
+    }
+
+    pub fn is_acked(self) -> bool {
+        self == Reliability::Acked
+    }
+}
+
+/// Seeded description of the faults to inject into one run.
+#[derive(Clone, Debug, PartialEq)]
+pub struct FaultPlan {
+    /// Per-envelope drop probability in `[0, 1]`.
+    pub drop_p: f64,
+    /// Per-envelope duplication probability in `[0, 1]`.
+    pub dup_p: f64,
+    /// Upper bound on per-envelope extra delivery delay (µs); the drawn
+    /// delay is uniform in `[0, delay_us)`.
+    pub delay_us: f64,
+    /// `(locality, time_us)`: the locality fail-stops at that point of
+    /// the run (simulated time on the sim substrate, wall-clock elapsed
+    /// on the threads substrate).
+    pub crash: Option<(LocalityId, f64)>,
+    /// `(locality, factor)`: straggler — that locality's compute charges
+    /// are scaled by `factor` (sim substrate only; real threads already
+    /// exhibit genuine stragglers).
+    pub slow: Option<(LocalityId, f64)>,
+    /// Seed for the decision stream.
+    pub seed: u64,
+}
+
+impl Default for FaultPlan {
+    fn default() -> Self {
+        FaultPlan::none()
+    }
+}
+
+impl FaultPlan {
+    /// The no-fault plan: injection seams stay completely inert (no RNG
+    /// draws, no envelope splitting, no extra events).
+    pub fn none() -> Self {
+        FaultPlan {
+            drop_p: 0.0,
+            dup_p: 0.0,
+            delay_us: 0.0,
+            crash: None,
+            slow: None,
+            seed: 0,
+        }
+    }
+
+    /// True when the plan injects nothing at the delivery seams.
+    pub fn is_none(&self) -> bool {
+        self.drop_p == 0.0
+            && self.dup_p == 0.0
+            && self.delay_us == 0.0
+            && self.crash.is_none()
+            && self.slow.is_none()
+    }
+
+    /// Parse a `"L@T"` crash spec (locality `L` crashes at time `T` µs).
+    pub fn parse_crash(s: &str) -> Result<(LocalityId, f64), String> {
+        Self::parse_at(s).map_err(|e| format!("fault_crash: {e} (expected L@T, e.g. 2@500)"))
+    }
+
+    /// Parse a `"L@F"` straggler spec (locality `L` slowed by factor `F`).
+    pub fn parse_slow(s: &str) -> Result<(LocalityId, f64), String> {
+        let (l, f) = Self::parse_at(s)
+            .map_err(|e| format!("fault_slow: {e} (expected L@F, e.g. 2@4.0)"))?;
+        if f < 1.0 {
+            return Err(format!("fault_slow: factor {f} must be >= 1"));
+        }
+        Ok((l, f))
+    }
+
+    fn parse_at(s: &str) -> Result<(LocalityId, f64), String> {
+        let (l, t) = s
+            .split_once('@')
+            .ok_or_else(|| format!("missing '@' in '{s}'"))?;
+        let l: LocalityId = l
+            .trim()
+            .parse()
+            .map_err(|_| format!("bad locality in '{s}'"))?;
+        let t: f64 = t.trim().parse().map_err(|_| format!("bad value in '{s}'"))?;
+        if !t.is_finite() || t < 0.0 {
+            return Err(format!("value in '{s}' must be finite and >= 0"));
+        }
+        Ok((l, t))
+    }
+}
+
+/// splitmix64 — tiny, seedable, dependency-free; decision streams are a
+/// pure function of the plan seed.
+#[derive(Clone, Debug)]
+pub(crate) struct FaultRng(u64);
+
+impl FaultRng {
+    pub(crate) fn new(seed: u64) -> Self {
+        FaultRng(seed)
+    }
+
+    pub(crate) fn next_u64(&mut self) -> u64 {
+        self.0 = self.0.wrapping_add(0x9E37_79B9_7F4A_7C15);
+        let mut z = self.0;
+        z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+        z ^ (z >> 31)
+    }
+
+    /// Uniform in `[0, 1)`.
+    pub(crate) fn next_f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 / (1u64 << 53) as f64
+    }
+}
+
+/// One envelope's injection verdict.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct FaultDecision {
+    pub drop: bool,
+    pub dup: bool,
+    pub extra_delay_us: f64,
+}
+
+/// Per-run mutable fault state: the decision stream, crash flags, and
+/// injection counters. Lives as a run-loop local on the sim substrate
+/// and under the shared mutex on the threads substrate.
+#[derive(Clone, Debug)]
+pub struct FaultState {
+    plan: FaultPlan,
+    rng: FaultRng,
+    crashed: Vec<bool>,
+    /// Injection counters, stamped into `FaultStats` at teardown.
+    pub drops: u64,
+    pub dups: u64,
+    pub delays: u64,
+    pub crashes: u64,
+}
+
+impl FaultState {
+    pub fn new(plan: FaultPlan, n_localities: usize) -> Self {
+        let rng = FaultRng::new(plan.seed ^ 0xFA17_FA17_FA17_FA17);
+        FaultState {
+            plan,
+            rng,
+            crashed: vec![false; n_localities],
+            drops: 0,
+            dups: 0,
+            delays: 0,
+            crashes: 0,
+        }
+    }
+
+    /// True when any injection seam needs to do work; callers gate every
+    /// fault-path branch on this so a no-fault run stays byte-identical.
+    pub fn active(&self) -> bool {
+        !self.plan.is_none()
+    }
+
+    pub fn plan(&self) -> &FaultPlan {
+        &self.plan
+    }
+
+    /// Draw one envelope's verdict. Three draws are consumed regardless
+    /// of the outcome so the stream position depends only on the
+    /// envelope ordinal, not on earlier verdicts.
+    pub fn decide(&mut self) -> FaultDecision {
+        let drop = self.rng.next_f64() < self.plan.drop_p;
+        let dup = self.rng.next_f64() < self.plan.dup_p;
+        let delay_draw = self.rng.next_f64();
+        let extra_delay_us = if self.plan.delay_us > 0.0 {
+            delay_draw * self.plan.delay_us
+        } else {
+            0.0
+        };
+        if drop {
+            self.drops += 1;
+            // A dropped envelope is gone; it cannot also be duplicated
+            // or delayed.
+            return FaultDecision { drop: true, dup: false, extra_delay_us: 0.0 };
+        }
+        if dup {
+            self.dups += 1;
+        }
+        if extra_delay_us > 0.0 {
+            self.delays += 1;
+        }
+        FaultDecision { drop: false, dup, extra_delay_us }
+    }
+
+    /// The crash deadline for `l`, if the plan crashes it.
+    pub fn crash_time(&self, l: LocalityId) -> Option<f64> {
+        match self.plan.crash {
+            Some((c, t)) if c == l => Some(t),
+            _ => None,
+        }
+    }
+
+    /// Mark `l` fail-stopped; returns true the first time.
+    pub fn mark_crashed(&mut self, l: LocalityId) -> bool {
+        let i = l as usize;
+        if i < self.crashed.len() && !self.crashed[i] {
+            self.crashed[i] = true;
+            self.crashes += 1;
+            true
+        } else {
+            false
+        }
+    }
+
+    pub fn is_crashed(&self, l: LocalityId) -> bool {
+        self.crashed.get(l as usize).copied().unwrap_or(false)
+    }
+
+    pub fn any_crashed(&self) -> bool {
+        self.crashed.iter().any(|&c| c)
+    }
+
+    /// Indices of fail-stopped localities.
+    pub fn crashed_localities(&self) -> Vec<LocalityId> {
+        self.crashed
+            .iter()
+            .enumerate()
+            .filter_map(|(i, &c)| c.then_some(i as LocalityId))
+            .collect()
+    }
+
+    /// Compute-charge multiplier for `l` (straggler model; 1.0 default).
+    pub fn slow_factor(&self, l: LocalityId) -> f64 {
+        match self.plan.slow {
+            Some((s, f)) if s == l => f,
+            _ => 1.0,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn none_plan_is_inert() {
+        let p = FaultPlan::none();
+        assert!(p.is_none());
+        let st = FaultState::new(p, 4);
+        assert!(!st.active());
+        assert!(!st.any_crashed());
+    }
+
+    #[test]
+    fn decision_stream_is_deterministic() {
+        let plan = FaultPlan { drop_p: 0.3, dup_p: 0.3, delay_us: 50.0, seed: 7, ..FaultPlan::none() };
+        let mut a = FaultState::new(plan.clone(), 2);
+        let mut b = FaultState::new(plan, 2);
+        for _ in 0..256 {
+            let (da, db) = (a.decide(), b.decide());
+            assert_eq!(da.drop, db.drop);
+            assert_eq!(da.dup, db.dup);
+            assert_eq!(da.extra_delay_us, db.extra_delay_us);
+        }
+        assert_eq!(a.drops, b.drops);
+        assert_eq!(a.dups, b.dups);
+        assert_eq!(a.delays, b.delays);
+        assert!(a.drops > 0 && a.dups > 0 && a.delays > 0);
+    }
+
+    #[test]
+    fn zero_probabilities_never_fire() {
+        let plan = FaultPlan { crash: Some((1, 100.0)), seed: 3, ..FaultPlan::none() };
+        let mut st = FaultState::new(plan, 2);
+        assert!(st.active()); // crash makes the plan non-trivial
+        for _ in 0..128 {
+            let d = st.decide();
+            assert!(!d.drop && !d.dup && d.extra_delay_us == 0.0);
+        }
+        assert_eq!(st.drops + st.dups + st.delays, 0);
+    }
+
+    #[test]
+    fn crash_spec_parses() {
+        assert_eq!(FaultPlan::parse_crash("2@500").unwrap(), (2, 500.0));
+        assert_eq!(FaultPlan::parse_crash(" 0 @ 1.5 ").unwrap(), (0, 1.5));
+        assert!(FaultPlan::parse_crash("2").is_err());
+        assert!(FaultPlan::parse_crash("x@5").is_err());
+        assert!(FaultPlan::parse_crash("1@-3").is_err());
+        assert_eq!(FaultPlan::parse_slow("1@4.0").unwrap(), (1, 4.0));
+        assert!(FaultPlan::parse_slow("1@0.5").is_err());
+    }
+
+    #[test]
+    fn crash_bookkeeping() {
+        let plan = FaultPlan { crash: Some((1, 100.0)), ..FaultPlan::none() };
+        let mut st = FaultState::new(plan, 4);
+        assert_eq!(st.crash_time(1), Some(100.0));
+        assert_eq!(st.crash_time(0), None);
+        assert!(st.mark_crashed(1));
+        assert!(!st.mark_crashed(1)); // idempotent
+        assert!(st.is_crashed(1));
+        assert_eq!(st.crashes, 1);
+        assert_eq!(st.crashed_localities(), vec![1]);
+    }
+
+    #[test]
+    fn reliability_parses() {
+        assert_eq!(Reliability::parse("none").unwrap(), Reliability::None);
+        assert_eq!(Reliability::parse("acked").unwrap(), Reliability::Acked);
+        assert!(Reliability::parse("tcp").is_err());
+        assert!(Reliability::Acked.is_acked());
+        assert!(!Reliability::None.is_acked());
+    }
+
+    #[test]
+    fn slow_factor_targets_one_locality() {
+        let plan = FaultPlan { slow: Some((2, 4.0)), ..FaultPlan::none() };
+        let st = FaultState::new(plan, 4);
+        assert_eq!(st.slow_factor(2), 4.0);
+        assert_eq!(st.slow_factor(0), 1.0);
+    }
+}

@@ -3,6 +3,107 @@
 use super::aggregate::AggStats;
 use super::net::NetStats;
 
+/// Fault-injection and recovery accounting: what the seeded
+/// [`FaultPlan`](super::fault::FaultPlan) did to the wire, what the
+/// reliable-delivery layer did about it, and what checkpoint/restart
+/// recovery cost. The runtimes stamp the injection counters, the
+/// aggregators stamp the delivery counters (merged like [`AggStats`]),
+/// and the engine recovery wrapper stamps the checkpoint/restore block.
+/// All-zero for a fault-free `reliability=none` run by construction.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct FaultStats {
+    /// Envelopes dropped on the wire by the fault plan.
+    pub injected_drops: u64,
+    /// Envelopes duplicated on the wire by the fault plan.
+    pub injected_dups: u64,
+    /// Envelopes given extra delivery delay by the fault plan.
+    pub injected_delays: u64,
+    /// Localities fail-stopped by the fault plan.
+    pub crashes: u64,
+    /// Envelopes re-sent by the ack-driven retransmit layer.
+    pub retransmits: u64,
+    /// Duplicate envelopes suppressed by receiver-side dedup windows.
+    pub dedup_hits: u64,
+    /// Retransmit entries abandoned after the attempt cap (the failure
+    /// detector for crashed destinations).
+    pub give_ups: u64,
+    /// Per-locality state snapshots taken.
+    pub checkpoints: u64,
+    /// Crashed localities restored from a snapshot.
+    pub restores: u64,
+    /// Host wall-clock of the post-crash recovery run, us.
+    pub recovery_wall_us: f64,
+}
+
+impl FaultStats {
+    /// Accumulate another stats block into this one (report merging).
+    pub fn merge(&mut self, other: &FaultStats) {
+        self.injected_drops += other.injected_drops;
+        self.injected_dups += other.injected_dups;
+        self.injected_delays += other.injected_delays;
+        self.crashes += other.crashes;
+        self.retransmits += other.retransmits;
+        self.dedup_hits += other.dedup_hits;
+        self.give_ups += other.give_ups;
+        self.checkpoints += other.checkpoints;
+        self.restores += other.restores;
+        self.recovery_wall_us += other.recovery_wall_us;
+    }
+
+    /// True when nothing was injected and nothing was recovered — the
+    /// envelope-parity fast path.
+    pub fn is_quiet(&self) -> bool {
+        *self == FaultStats::default()
+    }
+}
+
+/// Structured diagnosis of a stalled run: which localities the barrier
+/// (or quiescence check) is still waiting on and what state was left in
+/// flight. Built by the simulator when its event heap drains with a
+/// partial barrier outstanding, and by the threads runtime's stall
+/// watchdog when no event has been processed for `stall_timeout_us`.
+/// Surfaced through `run_actors` as a panic whose message starts with
+/// `"deadlock:"` followed by this report's [`Display`](std::fmt::Display)
+/// rendering.
+#[derive(Debug, Clone, Default)]
+pub struct StallReport {
+    /// Localities that reached the barrier (or quiesced) and are waiting.
+    pub waiting: Vec<usize>,
+    /// Localities the barrier is still missing (crashed localities are
+    /// excluded from the quorum and never appear here).
+    pub missing: Vec<usize>,
+    /// Per-locality undelivered inbox/event depth.
+    pub inbox_depths: Vec<usize>,
+    /// Per-locality pending timer count.
+    pub pending_timers: Vec<usize>,
+    /// In-flight traced envelopes awaiting acks, per locality.
+    pub inflight_acks: Vec<usize>,
+    /// Undelivered message events (sim substrate's `messages_pending`).
+    pub messages_pending: u64,
+    /// Barrier epoch the run stalled in.
+    pub epoch: u64,
+}
+
+impl std::fmt::Display for StallReport {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        // The leading word is load-bearing: the partial-barrier tests pin
+        // the failure mode with `#[should_panic(expected = "deadlock")]`.
+        write!(
+            f,
+            "deadlock: localities {:?} waiting on a barrier {:?} never reached \
+             (epoch {}, {} message(s) pending; inbox depths {:?}, pending timers {:?}, \
+             in-flight acks {:?})",
+            self.waiting,
+            self.missing,
+            self.epoch,
+            self.messages_pending,
+            self.inbox_depths,
+            self.pending_timers,
+            self.inflight_acks,
+        )
+    }
+}
+
 /// Algorithm-level work accounting: how many edge relaxations (or other
 /// per-edge update proposals) an engine executed and how many of them
 /// actually improved state. The Firoz et al. "Anatomy" line of work shows
@@ -79,6 +180,12 @@ pub struct QueryStats {
     pub cache_hits: u64,
     /// Multi-source SSSP waves executed for the uncovered remainder.
     pub waves: u64,
+    /// Waves re-executed after a fault-suspect result (bounded to one
+    /// retry per window by the graceful-degradation path).
+    pub retries: u64,
+    /// Queries answered with landmark triangle-inequality *bounds*
+    /// (flagged approximate) because the exact wave missed its deadline.
+    pub degraded: u64,
     /// Queries per second of host wall-clock.
     pub qps: f64,
     /// Median per-query latency, us (wall-clock from arrival to answer).
@@ -167,6 +274,9 @@ pub struct UpdateStats {
     /// Vertices whose previous state was invalidated (reset to the cold
     /// initial value) by the deletion dependency taint.
     pub tainted: u64,
+    /// Re-convergences that fell back to a full cold recompute because
+    /// the deletion taint exceeded the `taint_cap` fraction of the graph.
+    pub fallbacks: u64,
     /// Relaxations executed by the incremental re-convergence run.
     pub reconverge_relaxations: u64,
     /// Envelopes shipped by the incremental re-convergence run.
@@ -187,6 +297,7 @@ impl UpdateStats {
         self.route_items += other.route_items;
         self.reseeded += other.reseeded;
         self.tainted += other.tainted;
+        self.fallbacks += other.fallbacks;
         self.reconverge_relaxations += other.reconverge_relaxations;
         self.reconverge_envelopes += other.reconverge_envelopes;
         self.reconverge_makespan_us += other.reconverge_makespan_us;
@@ -259,6 +370,12 @@ pub struct SimReport {
     ///
     /// [`DistGraph::apply_updates`]: crate::graph::DistGraph::apply_updates
     pub update: UpdateStats,
+    /// Fault-injection and recovery accounting. Zero unless a
+    /// [`FaultPlan`](super::fault::FaultPlan) or `reliability=acked` was
+    /// active: the runtimes stamp injections, the drivers merge the
+    /// aggregators' delivery counters, and the recovery wrapper stamps
+    /// checkpoints/restores.
+    pub fault: FaultStats,
     /// Host wall-clock for the whole run, us. For the simulator this is
     /// the cost of executing the simulation itself; for the threaded
     /// runtime it *is* the end-to-end time (`makespan_us == wall_us`).
@@ -295,6 +412,7 @@ impl SimReport {
             query: QueryStats::default(),
             mem: MemStats::default(),
             update: UpdateStats::default(),
+            fault: FaultStats::default(),
             wall_us: 0.0,
             phase_wall_us: Vec::new(),
         }
@@ -443,6 +561,7 @@ mod tests {
         assert_eq!(r.barriers, 0);
         assert_eq!(r.work, WorkStats::default());
         assert_eq!(r.update, UpdateStats::default());
+        assert!(r.fault.is_quiet());
         assert!(r.busy_us.is_empty() && r.phase_wall_us.is_empty());
     }
 
@@ -458,6 +577,7 @@ mod tests {
             route_items: 6,
             reseeded: 5,
             tainted: 1,
+            fallbacks: 0,
             reconverge_relaxations: 100,
             reconverge_envelopes: 7,
             reconverge_makespan_us: 2.0,
@@ -488,11 +608,42 @@ mod tests {
             oracle_hits: 30,
             cache_hits: 20,
             waves: 5,
+            retries: 0,
+            degraded: 0,
             qps: 1000.0,
             p50_us: 10.0,
             p99_us: 50.0,
         };
         assert!((q.hit_rate() - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn fault_stats_merge_and_quiet() {
+        let mut f = FaultStats::default();
+        assert!(f.is_quiet());
+        f.merge(&FaultStats { injected_drops: 3, retransmits: 4, ..FaultStats::default() });
+        f.merge(&FaultStats { injected_drops: 1, dedup_hits: 2, restores: 1, ..FaultStats::default() });
+        assert_eq!(f.injected_drops, 4);
+        assert_eq!(f.retransmits, 4);
+        assert_eq!(f.dedup_hits, 2);
+        assert_eq!(f.restores, 1);
+        assert!(!f.is_quiet());
+    }
+
+    #[test]
+    fn stall_report_display_starts_with_deadlock() {
+        let r = StallReport {
+            waiting: vec![0, 2],
+            missing: vec![1],
+            inbox_depths: vec![0, 3, 0],
+            pending_timers: vec![0, 0, 1],
+            inflight_acks: vec![0, 2, 0],
+            messages_pending: 3,
+            epoch: 5,
+        };
+        let s = r.to_string();
+        assert!(s.starts_with("deadlock:"), "{s}");
+        assert!(s.contains("[0, 2]") && s.contains("epoch 5"), "{s}");
     }
 
     #[test]

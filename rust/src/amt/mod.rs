@@ -30,11 +30,14 @@
 //!   [`FlushPolicy::Unbatched`] for ablations.
 //!
 //! [`agas`] and [`partitioned_vector`] round out the HPX surface the
-//! algorithms program against.
+//! algorithms program against. [`fault`] supplies the seeded fault plans
+//! both runtimes inject at their delivery seams, and the aggregate layer
+//! optionally runs `reliability=acked` sequenced/acked delivery on top.
 
 pub mod agas;
 pub mod aggregate;
 pub mod executor;
+pub mod fault;
 pub mod metrics;
 pub mod net;
 pub mod partitioned_vector;
@@ -44,7 +47,10 @@ pub mod threads;
 pub use agas::{Agas, GlobalAddress};
 pub use aggregate::{AggStats, Aggregator, Batch, FlushPolicy, SlotSpace};
 pub use executor::{ChunkPolicy, Executor};
-pub use metrics::{PartitionStats, QueryStats, SimReport, UpdateStats, WorkStats};
+pub use fault::{FaultPlan, FaultState, Reliability};
+pub use metrics::{
+    FaultStats, PartitionStats, QueryStats, SimReport, StallReport, UpdateStats, WorkStats,
+};
 pub use net::{NetConfig, NetStats};
 pub use partitioned_vector::{AtomicLongVector, PartitionedVector};
 pub use sim::{Actor, Ctx, LocalityId, RuntimeKind, SimConfig, SimRuntime, SimTime};

@@ -30,7 +30,8 @@ use std::cmp::Ordering;
 use std::collections::BinaryHeap;
 use std::time::Instant;
 
-use super::metrics::SimReport;
+use super::fault::{FaultPlan, FaultState, Reliability};
+use super::metrics::{SimReport, StallReport};
 use super::net::{NetConfig, NetStats};
 
 /// Identifies one simulated locality (paper: one cluster node).
@@ -40,8 +41,9 @@ pub type LocalityId = u32;
 pub type SimTime = f64;
 
 /// Wire-size trait for application messages; drives the bandwidth term of
-/// the network model.
-pub trait Message {
+/// the network model. `Clone` is required so the fault layer can put a
+/// duplicated copy of an envelope on the wire.
+pub trait Message: Clone {
     /// Serialized payload size in bytes.
     fn wire_bytes(&self) -> usize;
 
@@ -51,6 +53,15 @@ pub trait Message {
     /// work.
     fn item_count(&self) -> usize {
         1
+    }
+
+    /// True for thin control-plane messages (termination votes, barrier
+    /// verdicts) that ride a modeled-reliable channel: the fault plan
+    /// never drops, duplicates, or delays them. A grouped envelope mixing
+    /// immune and faultable items is split at the injection seam and only
+    /// the faultable part is subject to the plan. Default: faultable.
+    fn fault_immune(&self) -> bool {
+        false
     }
 }
 
@@ -157,6 +168,33 @@ pub struct SimConfig {
     pub coalesce_window_us: f64,
     /// Hard cap on processed events (runaway guard).
     pub max_events: u64,
+    /// Seeded wire/crash fault plan injected at the delivery seams.
+    /// [`FaultPlan::none`] (the default) keeps every seam inert — no RNG
+    /// draws, no envelope splitting, no extra events — so fault-free runs
+    /// keep exact envelope parity with the pre-fault substrate. A crash
+    /// spec naming a locality `>= n` is ignored (config sweeps may shrink
+    /// the locality count below the spec).
+    pub fault: FaultPlan,
+    /// Delivery guarantee of the aggregator layer. The runtimes ignore
+    /// this; the engines read it and enable sequence-numbered envelopes,
+    /// receiver dedup, and ack-driven retransmit under
+    /// [`Reliability::Acked`].
+    pub reliability: Reliability,
+    /// Threads-runtime stall watchdog: if no event is processed for this
+    /// many µs of wall-clock while the run is incomplete, fail with a
+    /// [`StallReport`] instead of hanging forever. `0` disables. The
+    /// simulator needs no watchdog — a stall is detected exactly when its
+    /// event heap drains with a partial barrier outstanding.
+    pub stall_timeout_us: f64,
+    /// Engine checkpoint cadence: handled events per locality (Converge
+    /// programs) or supersteps (Iterate programs) between snapshots.
+    /// `0` = checkpoint only when the fault plan schedules a crash, at
+    /// the engines' default cadence.
+    pub checkpoint_every: u64,
+    /// Incremental re-convergence taint cap: when deletion taint exceeds
+    /// this fraction of the graph, `rerun_incremental` falls back to a
+    /// full cold recompute instead of warm re-seeding.
+    pub taint_cap: f64,
 }
 
 impl Default for SimConfig {
@@ -170,6 +208,11 @@ impl Default for SimConfig {
             aggregate_sends: false,
             coalesce_window_us: 0.0,
             max_events: u64::MAX,
+            fault: FaultPlan::none(),
+            reliability: Reliability::None,
+            stall_timeout_us: 0.0,
+            checkpoint_every: 0,
+            taint_cap: 0.5,
         }
     }
 }
@@ -204,6 +247,8 @@ enum Payload<M> {
     Ack { token: u64, sent: SimTime, delivered: SimTime },
     /// A [`Ctx::set_timer`] deadline arrived.
     Timer,
+    /// The fault plan fail-stops the event's locality at this time.
+    Crash,
 }
 
 struct Event<M> {
@@ -357,11 +402,59 @@ impl SimRuntime {
             (Vec<A::Msg>, AckReqs),
         > = std::collections::HashMap::new();
         let coalesce = self.cfg.coalesce_window_us > 0.0;
+        // Fault injection: the per-run decision stream plus crash flags.
+        // Every fault branch below is gated on `fault_active`, so a
+        // `FaultPlan::none` run takes exactly the historical event
+        // sequence (no RNG draws, no envelope splitting, no extra events).
+        let mut fault = FaultState::new(self.cfg.fault.clone(), n as usize);
+        let fault_active = fault.active();
 
         for l in 0..n {
             heap.push(Event { time: 0.0, seq, dst: l, payload: Payload::Start });
             seq += 1;
             messages_pending += 1;
+        }
+        if let Some((cl, ct)) = self.cfg.fault.crash {
+            if cl < n {
+                // Deliberately not counted in `messages_pending`: a
+                // pending crash must not hold barriers open; the non-empty
+                // heap keeps the run alive until it fires.
+                heap.push(Event { time: ct, seq, dst: cl, payload: Payload::Crash });
+                seq += 1;
+            }
+        }
+
+        // Barrier completion: every live locality waiting + network
+        // drained. Crashed localities are excluded from the quorum and
+        // from delivery; at least one live locality must be waiting.
+        macro_rules! barrier_check {
+            () => {
+                if messages_pending == 0
+                    && waiting.iter().any(|w| *w)
+                    && waiting
+                        .iter()
+                        .enumerate()
+                        .all(|(i, w)| *w || fault.is_crashed(i as LocalityId))
+                {
+                    epoch += 1;
+                    phase_marks.push(run_start.elapsed().as_secs_f64() * 1e6);
+                    let fire = avail.iter().cloned().fold(0.0_f64, f64::max) + barrier_cost;
+                    for d in 0..n {
+                        if fault.is_crashed(d) {
+                            continue;
+                        }
+                        waiting[d as usize] = false;
+                        avail[d as usize] = fire;
+                        heap.push(Event {
+                            time: fire,
+                            seq,
+                            dst: d,
+                            payload: Payload::BarrierDone { epoch },
+                        });
+                        seq += 1;
+                    }
+                }
+            };
         }
 
         while let Some(ev) = heap.pop() {
@@ -374,6 +467,35 @@ impl SimRuntime {
             let l = ev.dst as usize;
             let start = if ev.time > avail[l] { ev.time } else { avail[l] };
 
+            // A fail-stopped locality neither sends nor receives: events
+            // destined to it are discarded as they pop (their in-flight
+            // count released), which is what starves the sender-side
+            // retransmit layer into its give-up failure detector.
+            if fault_active && fault.is_crashed(ev.dst) {
+                match ev.payload {
+                    Payload::BarrierDone { .. } | Payload::Crash => {}
+                    Payload::Flush { to } => {
+                        messages_pending -= 1;
+                        pending.remove(&(ev.dst, to));
+                    }
+                    _ => messages_pending -= 1,
+                }
+                barrier_check!();
+                continue;
+            }
+
+            // Fail-stop: mark the locality dead and drop its barrier
+            // participation and queued parcels; everything else headed its
+            // way is discarded above as it pops.
+            if let Payload::Crash = ev.payload {
+                if fault.mark_crashed(ev.dst) {
+                    waiting[l] = false;
+                    pending.retain(|(src, _), _| *src != ev.dst);
+                }
+                barrier_check!();
+                continue;
+            }
+
             // Coalescing flush: not an actor handler — take the buffer,
             // charge the sender's send CPU, put one envelope on the wire.
             if let Payload::Flush { to } = ev.payload {
@@ -381,42 +503,35 @@ impl SimRuntime {
                 let (items, acks) = pending.remove(&(ev.dst, to)).unwrap_or_default();
                 if !items.is_empty() {
                     let n_items: usize = items.iter().map(|m| m.item_count()).sum();
-                    let payload_bytes: usize = items.iter().map(|m| m.wire_bytes()).sum();
                     let scpu = self.cfg.net.send_cpu(n_items);
-                    let wire = self.cfg.net.wire_us(payload_bytes);
-                    let st = &mut net_stats[l];
-                    st.envelopes += 1;
-                    st.messages += n_items as u64;
-                    st.payload_bytes += payload_bytes as u64;
-                    st.wire_us += wire;
                     avail[l] = start + scpu;
                     busy[l] += scpu;
-                    heap.push(Event {
-                        time: avail[l] + wire,
-                        seq,
-                        dst: to,
-                        payload: Payload::Envelope { from: ev.dst, items, acks },
-                    });
-                    seq += 1;
-                    messages_pending += 1;
-                }
-                // Barrier check below still applies after a flush.
-                if messages_pending == 0 && waiting.iter().all(|w| *w) {
-                    epoch += 1;
-                    phase_marks.push(run_start.elapsed().as_secs_f64() * 1e6);
-                    let fire = avail.iter().cloned().fold(0.0_f64, f64::max) + barrier_cost;
-                    for d in 0..n {
-                        waiting[d as usize] = false;
-                        avail[d as usize] = fire;
+                    let deliveries = if fault_active {
+                        fault_deliveries(&mut fault, items, acks)
+                    } else {
+                        vec![(items, acks, 0.0)]
+                    };
+                    for (items, acks, extra) in deliveries {
+                        let n_items: usize = items.iter().map(|m| m.item_count()).sum();
+                        let payload_bytes: usize = items.iter().map(|m| m.wire_bytes()).sum();
+                        let wire = self.cfg.net.wire_us(payload_bytes);
+                        let st = &mut net_stats[l];
+                        st.envelopes += 1;
+                        st.messages += n_items as u64;
+                        st.payload_bytes += payload_bytes as u64;
+                        st.wire_us += wire;
                         heap.push(Event {
-                            time: fire,
+                            time: avail[l] + wire + extra,
                             seq,
-                            dst: d,
-                            payload: Payload::BarrierDone { epoch },
+                            dst: to,
+                            payload: Payload::Envelope { from: ev.dst, items, acks },
                         });
                         seq += 1;
+                        messages_pending += 1;
                     }
                 }
+                // Barrier check below still applies after a flush.
+                barrier_check!();
                 continue;
             }
 
@@ -473,7 +588,7 @@ impl SimRuntime {
                     messages_pending -= 1;
                     actors[l].on_timer(&mut ctx);
                 }
-                Payload::Flush { .. } => unreachable!("handled above"),
+                Payload::Flush { .. } | Payload::Crash => unreachable!("handled above"),
             }
             let measured = if self.cfg.measure_compute {
                 wall.elapsed().as_secs_f64() * 1e6 * self.cfg.compute_scale
@@ -488,6 +603,10 @@ impl SimRuntime {
             waiting[l] = barrier_requested;
 
             let mut charge = measured + explicit + recv_charge;
+            if fault_active {
+                // Straggler model: scale this locality's handler compute.
+                charge *= fault.slow_factor(ev.dst);
+            }
 
             // Dispatch outbox: aggregate per destination if configured.
             // Traced sends stamp the handler-start time as their send time.
@@ -527,24 +646,32 @@ impl SimRuntime {
                     }
                     continue;
                 }
-                let payload_bytes: usize = items.iter().map(|m| m.wire_bytes()).sum();
                 let scpu = self.cfg.net.send_cpu(n_items);
                 send_cpu_total += scpu;
                 let depart = depart_base + charge + send_cpu_total;
-                let wire = self.cfg.net.wire_us(payload_bytes);
-                let st = &mut net_stats[l];
-                st.envelopes += 1;
-                st.messages += n_items as u64;
-                st.payload_bytes += payload_bytes as u64;
-                st.wire_us += wire;
-                heap.push(Event {
-                    time: depart + wire,
-                    seq,
-                    dst,
-                    payload: Payload::Envelope { from: ev.dst, items, acks },
-                });
-                seq += 1;
-                messages_pending += 1;
+                let deliveries = if fault_active {
+                    fault_deliveries(&mut fault, items, acks)
+                } else {
+                    vec![(items, acks, 0.0)]
+                };
+                for (items, acks, extra) in deliveries {
+                    let n_items: usize = items.iter().map(|m| m.item_count()).sum();
+                    let payload_bytes: usize = items.iter().map(|m| m.wire_bytes()).sum();
+                    let wire = self.cfg.net.wire_us(payload_bytes);
+                    let st = &mut net_stats[l];
+                    st.envelopes += 1;
+                    st.messages += n_items as u64;
+                    st.payload_bytes += payload_bytes as u64;
+                    st.wire_us += wire;
+                    heap.push(Event {
+                        time: depart + wire + extra,
+                        seq,
+                        dst,
+                        payload: Payload::Envelope { from: ev.dst, items, acks },
+                    });
+                    seq += 1;
+                    messages_pending += 1;
+                }
             }
             charge += send_cpu_total;
             // Arm requested timers (absolute times; already clamped to
@@ -558,36 +685,36 @@ impl SimRuntime {
             avail[l] = start + charge;
             busy[l] += charge;
 
-            // Barrier completion: everyone waiting + network drained.
-            if messages_pending == 0 && waiting.iter().all(|w| *w) {
-                epoch += 1;
-                phase_marks.push(run_start.elapsed().as_secs_f64() * 1e6);
-                let fire = avail.iter().cloned().fold(0.0_f64, f64::max) + barrier_cost;
-                for d in 0..n {
-                    waiting[d as usize] = false;
-                    avail[d as usize] = fire;
-                    heap.push(Event {
-                        time: fire,
-                        seq,
-                        dst: d,
-                        payload: Payload::BarrierDone { epoch },
-                    });
-                    seq += 1;
-                }
-            }
+            barrier_check!();
         }
 
-        let stuck: Vec<_> = waiting
+        let stuck: Vec<usize> = waiting
             .iter()
             .enumerate()
             .filter(|(_, w)| **w)
             .map(|(i, _)| i)
             .collect();
-        assert!(
-            stuck.is_empty(),
-            "deadlock: localities {stuck:?} waiting on a barrier that can never \
-             complete (not all localities requested one)"
-        );
+        if !stuck.is_empty() {
+            let missing: Vec<usize> = waiting
+                .iter()
+                .enumerate()
+                .filter(|(i, w)| !**w && !fault.is_crashed(*i as LocalityId))
+                .map(|(i, _)| i)
+                .collect();
+            let report = StallReport {
+                waiting: stuck,
+                missing,
+                // The event heap has drained, so nothing is queued or
+                // armed anywhere; the sim holds no per-locality ack state
+                // (the aggregators own the in-flight tables).
+                inbox_depths: vec![0; n as usize],
+                pending_timers: vec![0; n as usize],
+                inflight_acks: vec![0; n as usize],
+                messages_pending,
+                epoch,
+            };
+            panic!("{report}");
+        }
 
         let makespan = avail.iter().cloned().fold(0.0_f64, f64::max);
         let mut total_net = NetStats::default();
@@ -604,8 +731,49 @@ impl SimRuntime {
         report.per_locality_net = net_stats;
         report.wall_us = wall_us;
         report.phase_wall_us = super::metrics::phase_segments(&phase_marks, wall_us);
+        report.fault.injected_drops = fault.drops;
+        report.fault.injected_dups = fault.dups;
+        report.fault.injected_delays = fault.delays;
+        report.fault.crashes = fault.crashes;
         (actors, report)
     }
+}
+
+/// Apply the fault plan to one wire-bound envelope. Immune control items
+/// (see [`Message::fault_immune`]) are split off and always delivered;
+/// the faultable remainder is dropped, duplicated (the copy carries no
+/// ack requests — each traced token is acked at most once), and/or
+/// delayed per the plan's decision stream. Returns the deliveries to
+/// schedule as `(items, acks, extra_delay_us)`.
+#[allow(clippy::type_complexity)]
+pub(crate) fn fault_deliveries<M: Message>(
+    fault: &mut FaultState,
+    items: Vec<M>,
+    acks: AckReqs,
+) -> Vec<(Vec<M>, AckReqs, f64)> {
+    let (immune, faultable): (Vec<M>, Vec<M>) =
+        items.into_iter().partition(|m| m.fault_immune());
+    let mut out = Vec::new();
+    if !immune.is_empty() {
+        out.push((immune, AckReqs::new(), 0.0));
+    }
+    if faultable.is_empty() {
+        // All-immune envelope: no decision drawn (the stream position
+        // depends only on faultable-envelope ordinals). Ack requests, if
+        // any, ride the reliable part.
+        if let Some(first) = out.first_mut() {
+            first.1 = acks;
+        }
+        return out;
+    }
+    let d = fault.decide();
+    if !d.drop {
+        if d.dup {
+            out.push((faultable.clone(), AckReqs::new(), d.extra_delay_us));
+        }
+        out.push((faultable, acks, d.extra_delay_us));
+    }
+    out
 }
 
 #[allow(clippy::type_complexity)]
@@ -961,5 +1129,153 @@ mod tests {
         assert_eq!(actors[0].seen, 3);
         assert_eq!(report.net.messages, 0, "self-sends must not hit the network");
         assert_eq!(report.makespan_us, 0.0);
+    }
+
+    use crate::amt::fault::FaultPlan;
+
+    #[test]
+    fn fault_drop_loses_the_envelope() {
+        let cfg = SimConfig {
+            fault: FaultPlan { drop_p: 1.0, seed: 11, ..FaultPlan::none() },
+            ..SimConfig::deterministic(NetConfig::zero())
+        };
+        let actors = (0..2).map(|_| RingActor { hops_left: 1, received: 0 }).collect();
+        let (actors, report) = SimRuntime::new(cfg).run(actors);
+        assert_eq!(actors[1].received, 0, "certain drop must lose the ping");
+        assert_eq!(report.fault.injected_drops, 1);
+        assert_eq!(report.fault.injected_dups, 0);
+    }
+
+    #[test]
+    fn fault_dup_delivers_twice() {
+        let cfg = SimConfig {
+            fault: FaultPlan { dup_p: 1.0, seed: 11, ..FaultPlan::none() },
+            ..SimConfig::deterministic(NetConfig::zero())
+        };
+        let actors = (0..2).map(|_| RingActor { hops_left: 1, received: 0 }).collect();
+        let (actors, report) = SimRuntime::new(cfg).run(actors);
+        assert_eq!(actors[1].received, 2, "certain dup must deliver twice");
+        assert_eq!(report.fault.injected_dups, 1);
+        assert_eq!(report.net.envelopes, 2, "the duplicate is real traffic");
+    }
+
+    #[test]
+    fn fault_delay_postpones_delivery() {
+        let base = SimConfig {
+            fault: FaultPlan::none(),
+            ..SimConfig::deterministic(NetConfig { latency_us: 10.0, ..NetConfig::zero() })
+        };
+        let actors = |_: &SimConfig| (0..2).map(|_| RingActor { hops_left: 1, received: 0 }).collect();
+        let (_, clean) = SimRuntime::new(base.clone()).run(actors(&base));
+        let delayed_cfg = SimConfig {
+            fault: FaultPlan { delay_us: 500.0, seed: 5, ..FaultPlan::none() },
+            ..base
+        };
+        let (a, delayed) = SimRuntime::new(delayed_cfg.clone()).run(actors(&delayed_cfg));
+        assert_eq!(a[1].received, 1, "delay must not lose the ping");
+        assert_eq!(delayed.fault.injected_delays, 1);
+        assert!(
+            delayed.makespan_us > clean.makespan_us,
+            "extra delay must show in the makespan: {} vs {}",
+            delayed.makespan_us,
+            clean.makespan_us
+        );
+    }
+
+    #[test]
+    fn crash_excludes_locality_from_barrier_quorum() {
+        // Both localities request barriers every round; locality 1 crashes
+        // after the first round's requests are in. The run must wind down
+        // through the remaining rounds on locality 0 alone instead of
+        // deadlocking or waiting on the dead locality.
+        let cfg = SimConfig {
+            barrier_latency_us: Some(7.0),
+            fault: FaultPlan { crash: Some((1, 0.5)), ..FaultPlan::none() },
+            ..SimConfig::deterministic(NetConfig::zero())
+        };
+        let actors = (0..2).map(|_| BspActor { rounds: 4 }).collect();
+        let (_, report) = SimRuntime::new(cfg).run(actors);
+        assert_eq!(report.fault.crashes, 1);
+        assert_eq!(report.barriers, 4, "surviving locality finishes all rounds");
+    }
+
+    #[test]
+    fn crash_spec_beyond_locality_count_is_ignored() {
+        let cfg = SimConfig {
+            fault: FaultPlan { crash: Some((9, 1.0)), ..FaultPlan::none() },
+            ..SimConfig::deterministic(NetConfig::zero())
+        };
+        let actors = (0..2).map(|_| RingActor { hops_left: 2, received: 0 }).collect();
+        let (actors, report) = SimRuntime::new(cfg).run(actors);
+        assert_eq!(actors.iter().map(|a| a.received).sum::<u32>(), 2);
+        assert_eq!(report.fault.crashes, 0);
+    }
+
+    #[test]
+    fn immune_control_items_survive_certain_drop() {
+        // One grouped envelope carries an immune control item and a
+        // faultable data item; under a certain-drop plan the envelope is
+        // split at the seam and only the data part is lost.
+        #[derive(Clone)]
+        enum CtlOrData {
+            Ctl,
+            Data,
+        }
+        impl Message for CtlOrData {
+            fn wire_bytes(&self) -> usize {
+                4
+            }
+            fn fault_immune(&self) -> bool {
+                matches!(self, CtlOrData::Ctl)
+            }
+        }
+        #[derive(Default)]
+        struct Mixed {
+            ctl: u32,
+            data: u32,
+        }
+        impl Actor for Mixed {
+            type Msg = CtlOrData;
+            fn on_start(&mut self, ctx: &mut Ctx<CtlOrData>) {
+                if ctx.locality() == 0 {
+                    ctx.send(1, CtlOrData::Ctl);
+                    ctx.send(1, CtlOrData::Data);
+                }
+            }
+            fn on_message(&mut self, _: &mut Ctx<CtlOrData>, _: LocalityId, m: CtlOrData) {
+                match m {
+                    CtlOrData::Ctl => self.ctl += 1,
+                    CtlOrData::Data => self.data += 1,
+                }
+            }
+        }
+        let cfg = SimConfig {
+            aggregate_sends: true,
+            fault: FaultPlan { drop_p: 1.0, seed: 2, ..FaultPlan::none() },
+            ..SimConfig::deterministic(NetConfig::zero())
+        };
+        let (actors, report) = SimRuntime::new(cfg).run(vec![Mixed::default(), Mixed::default()]);
+        assert_eq!(actors[1].ctl, 1, "control plane is modeled reliable");
+        assert_eq!(actors[1].data, 0, "data item rides the faultable part");
+        assert_eq!(report.fault.injected_drops, 1);
+    }
+
+    #[test]
+    fn straggler_slowdown_scales_charges() {
+        struct Busy;
+        impl Actor for Busy {
+            type Msg = Nothing;
+            fn on_start(&mut self, ctx: &mut Ctx<Nothing>) {
+                ctx.charge_us(100.0);
+            }
+            fn on_message(&mut self, _: &mut Ctx<Nothing>, _: LocalityId, _: Nothing) {}
+        }
+        let cfg = SimConfig {
+            fault: FaultPlan { slow: Some((1, 4.0)), ..FaultPlan::none() },
+            ..SimConfig::deterministic(NetConfig::zero())
+        };
+        let (_, report) = SimRuntime::new(cfg).run(vec![Busy, Busy]);
+        assert!((report.busy_us[0] - 100.0).abs() < 1e-9);
+        assert!((report.busy_us[1] - 400.0).abs() < 1e-9, "{}", report.busy_us[1]);
     }
 }

@@ -29,6 +29,14 @@
 //!   latency — actual inter-thread queueing delay, which is what lets the
 //!   latency-adaptive flush policy be validated against real queueing
 //!   instead of the cost model (ablation A7).
+//! * **faults** — an armed [`FaultPlan`](super::fault::FaultPlan) routes
+//!   wire envelopes through the same drop/duplicate/delay decisions as
+//!   the simulator (one shared seam, [`fault_deliveries`]); crash
+//!   deadlines and injected delays are read as host wall-us. A crashed
+//!   locality fail-stops: its queued work vanishes and survivors exclude
+//!   it from barrier quorum. `stall_timeout_us` arms a watchdog that
+//!   turns a silent hang into a structured
+//!   [`StallReport`](super::metrics::StallReport) panic.
 //!
 //! What is *not* reproduced: the modeled interconnect. `NetConfig`
 //! latencies, explicit [`Ctx::charge_us`] charges, and
@@ -41,9 +49,12 @@ use std::collections::VecDeque;
 use std::sync::{Condvar, Mutex};
 use std::time::{Duration, Instant};
 
-use super::metrics::{phase_segments, SimReport};
+use super::fault::FaultState;
+use super::metrics::{phase_segments, SimReport, StallReport};
 use super::net::NetStats;
-use super::sim::{group_outbox, AckReqs, Actor, Ctx, LocalityId, Message, SimConfig, SimTime};
+use super::sim::{
+    fault_deliveries, group_outbox, AckReqs, Actor, Ctx, LocalityId, Message, SimConfig, SimTime,
+};
 
 /// One inbox entry. Envelopes carry the batched items plus any ack
 /// requests stamped by [`group_outbox`]; `Barrier` fan-out entries are
@@ -72,23 +83,68 @@ struct Shared<M> {
     epoch: u64,
     events: u64,
     done: bool,
-    /// Localities stuck on a partial barrier at quiescence (deadlock).
-    stuck: Vec<usize>,
-    /// Fatal condition raised by a worker (runaway guard).
+    /// Fatal condition raised by a worker (runaway guard, deadlock at
+    /// quiescence, stall watchdog). Panicked on the main thread after
+    /// join so the caller sees one clean message.
     error: Option<String>,
     net: Vec<NetStats>,
     /// Wall-us marks at each barrier completion (per-phase reporting).
     phase_marks: Vec<f64>,
+    /// Injected-fault bookkeeping shared by every worker: one RNG stream,
+    /// one crash ledger, so both runtimes share the [`fault`](super::fault)
+    /// surface. Inert (no draws, no branches taken) when the plan is none.
+    fault: FaultState,
+    /// Envelopes held back by injected extra delay:
+    /// `(release wall-us, dst, delivery)`. Counted as in-flight traffic —
+    /// they hold barriers and quiescence open until released.
+    delayed: Vec<(f64, usize, Delivery<M>)>,
+    /// Wall-us of the most recent handler completion; the stall watchdog
+    /// measures silence from here.
+    last_event_us: f64,
 }
 
 impl<M> Shared<M> {
     /// Nothing in flight anywhere: no queued delivery, no mid-handler
-    /// worker, no armed timer. The threaded equivalent of the simulator's
-    /// `messages_pending == 0` with an empty event heap.
+    /// worker, no armed timer, no delayed envelope awaiting release. The
+    /// threaded equivalent of the simulator's `messages_pending == 0`
+    /// with an empty event heap.
     fn quiesced(&self) -> bool {
         self.active == 0
             && self.inboxes.iter().all(|q| q.is_empty())
             && self.timers.iter().all(|t| t.is_empty())
+            && self.delayed.is_empty()
+    }
+
+    /// Snapshot the stuck system for a structured deadlock/stall
+    /// diagnosis instead of a bare panic or an indefinite hang.
+    fn stall_report(&self) -> StallReport {
+        let is_ack = |d: &Delivery<M>| matches!(d, Delivery::Ack { .. });
+        StallReport {
+            waiting: self
+                .waiting
+                .iter()
+                .enumerate()
+                .filter(|(_, w)| **w)
+                .map(|(i, _)| i)
+                .collect(),
+            missing: self
+                .waiting
+                .iter()
+                .enumerate()
+                .filter(|(i, w)| !**w && !self.fault.is_crashed(*i as LocalityId))
+                .map(|(i, _)| i)
+                .collect(),
+            inbox_depths: self.inboxes.iter().map(|q| q.len()).collect(),
+            pending_timers: self.timers.iter().map(|t| t.len()).collect(),
+            inflight_acks: self
+                .inboxes
+                .iter()
+                .map(|q| q.iter().filter(|d| is_ack(d)).count())
+                .collect(),
+            messages_pending: self.inboxes.iter().map(|q| q.len() as u64).sum::<u64>()
+                + self.delayed.len() as u64,
+            epoch: self.epoch,
+        }
     }
 }
 
@@ -118,8 +174,9 @@ pub struct ThreadedRuntime {
 
 impl ThreadedRuntime {
     /// Create a runtime with the given configuration. Only
-    /// `aggregate_sends` and `max_events` are consulted; the modeled
-    /// interconnect fields are cost-model-only (see module docs).
+    /// `aggregate_sends`, `max_events`, `fault` (crash times and injected
+    /// delays read as wall-us), and `stall_timeout_us` are consulted; the
+    /// modeled interconnect fields are cost-model-only (see module docs).
     pub fn new(cfg: SimConfig) -> Self {
         ThreadedRuntime { cfg }
     }
@@ -144,10 +201,12 @@ impl ThreadedRuntime {
             epoch: 0,
             events: 0,
             done: false,
-            stuck: Vec::new(),
             error: None,
             net: vec![NetStats::default(); n as usize],
             phase_marks: Vec::new(),
+            fault: FaultState::new(self.cfg.fault.clone(), n as usize),
+            delayed: Vec::new(),
+            last_event_us: 0.0,
         });
         let cv = Condvar::new();
 
@@ -173,12 +232,6 @@ impl ThreadedRuntime {
         if let Some(e) = g.error {
             panic!("{e}");
         }
-        assert!(
-            g.stuck.is_empty(),
-            "deadlock: localities {:?} waiting on a barrier that can never \
-             complete (not all localities requested one)",
-            g.stuck
-        );
 
         let wall_us = run_start.elapsed().as_secs_f64() * 1e6;
         let mut total_net = NetStats::default();
@@ -194,6 +247,10 @@ impl ThreadedRuntime {
         report.per_locality_net = g.net;
         report.wall_us = wall_us;
         report.phase_wall_us = phase_segments(&g.phase_marks, wall_us);
+        report.fault.injected_drops = g.fault.drops;
+        report.fault.injected_dups = g.fault.dups;
+        report.fault.injected_delays = g.fault.delays;
+        report.fault.crashes = g.fault.crashes;
         (actors, report)
     }
 }
@@ -218,10 +275,55 @@ where
     A: Actor,
 {
     let mut busy_us = 0.0;
+    // Fail-stop deadline for *this* locality, if the plan names it.
+    let crash_at: Option<f64> = cfg
+        .fault
+        .crash
+        .filter(|&(cl, _)| cl as usize == l)
+        .map(|(_, t)| t);
     let mut g = shared.lock().unwrap();
     loop {
         if g.done {
             return busy_us;
+        }
+
+        // 0. Fail-stop: wall-clock crash deadline reached? The locality
+        // vanishes — queued work, timers, and any barrier vote are
+        // discarded, and this worker exits. Survivors exclude it from
+        // barrier quorum and quiescence from here on.
+        if let Some(at) = crash_at {
+            if !g.fault.is_crashed(l as LocalityId) && elapsed_us(t0) >= at {
+                g.fault.mark_crashed(l as LocalityId);
+                g.inboxes[l].clear();
+                g.timers[l].clear();
+                g.waiting[l] = false;
+                g.delayed.retain(|&(_, dst, _)| dst != l);
+                cv.notify_all();
+                return busy_us;
+            }
+        }
+
+        // 0b. Release injected-delay envelopes whose hold has expired.
+        // Any worker may promote; destinations that crashed meanwhile
+        // lose the envelope on the wire.
+        if !g.delayed.is_empty() {
+            let now = elapsed_us(t0);
+            let mut i = 0;
+            let mut promoted = false;
+            while i < g.delayed.len() {
+                if g.delayed[i].0 <= now {
+                    let (_, dst, d) = g.delayed.swap_remove(i);
+                    if !g.fault.is_crashed(dst as LocalityId) {
+                        g.inboxes[dst].push_back(d);
+                    }
+                    promoted = true;
+                } else {
+                    i += 1;
+                }
+            }
+            if promoted {
+                cv.notify_all();
+            }
         }
 
         // 1. A due timer? (Timers fire on their owning worker.)
@@ -264,14 +366,45 @@ where
             continue;
         }
 
+        // 2b. Stall watchdog: the run is neither finished nor quiesced,
+        // yet no handler has completed for the configured window.
+        // Surface a structured report instead of hanging forever.
+        if cfg.stall_timeout_us > 0.0 && !g.quiesced() {
+            let now = elapsed_us(t0);
+            if now - g.last_event_us >= cfg.stall_timeout_us {
+                let report = g.stall_report();
+                g.error.get_or_insert_with(|| report.to_string());
+                g.done = true;
+                cv.notify_all();
+                return busy_us;
+            }
+        }
+
         // 3. Nothing runnable here — is the whole system terminal?
+        // Crashed localities are outside the barrier quorum: they will
+        // never vote, and holding the epoch for them would wedge every
+        // survivor.
         if g.quiesced() {
-            if g.waiting.iter().all(|w| *w) {
-                // Barrier completion: everyone waiting + network drained.
+            let live_waiting = g
+                .waiting
+                .iter()
+                .enumerate()
+                .any(|(i, w)| *w && !g.fault.is_crashed(i as LocalityId));
+            let quorum = g
+                .waiting
+                .iter()
+                .enumerate()
+                .all(|(i, w)| *w || g.fault.is_crashed(i as LocalityId));
+            if live_waiting && quorum {
+                // Barrier completion: every live locality waiting +
+                // network drained. Crashed localities get no fan-out.
                 g.epoch += 1;
                 let epoch = g.epoch;
                 g.phase_marks.push(elapsed_us(t0));
                 for d in 0..n as usize {
+                    if g.fault.is_crashed(d as LocalityId) {
+                        continue;
+                    }
                     g.waiting[d] = false;
                     g.inboxes[d].push_back(Delivery::Barrier { epoch });
                 }
@@ -280,15 +413,10 @@ where
             }
             if g.waiting.iter().any(|w| *w) {
                 // Partial barrier with nothing left to deliver: the same
-                // deadlock the simulator asserts on. Recorded here,
+                // deadlock the simulator reports. Recorded here,
                 // panicked on the main thread after join.
-                g.stuck = g
-                    .waiting
-                    .iter()
-                    .enumerate()
-                    .filter(|(_, w)| **w)
-                    .map(|(i, _)| i)
-                    .collect();
+                let report = g.stall_report();
+                g.error.get_or_insert_with(|| report.to_string());
                 g.done = true;
                 cv.notify_all();
                 return busy_us;
@@ -298,8 +426,19 @@ where
             return busy_us;
         }
 
-        // 4. Park until notified, or until our earliest timer is due.
-        let next = g.timers[l].iter().cloned().fold(f64::INFINITY, f64::min);
+        // 4. Park until notified, or until the earliest of: our next
+        // timer, the next delayed-envelope release, our crash deadline,
+        // or the next stall-watchdog check.
+        let mut next = g.timers[l].iter().cloned().fold(f64::INFINITY, f64::min);
+        if let Some(at) = crash_at {
+            if !g.fault.is_crashed(l as LocalityId) {
+                next = next.min(at);
+            }
+        }
+        next = next.min(g.delayed.iter().map(|d| d.0).fold(f64::INFINITY, f64::min));
+        if cfg.stall_timeout_us > 0.0 {
+            next = next.min(g.last_event_us + cfg.stall_timeout_us);
+        }
         if next.is_finite() {
             let wait = (next - elapsed_us(t0)).max(0.0);
             let (g2, _) = cv
@@ -360,6 +499,7 @@ where
     let mut g = shared.lock().unwrap();
     g.waiting[l] = barrier_requested;
     g.events += 1;
+    g.last_event_us = elapsed_us(t0);
     if g.events > cfg.max_events && g.error.is_none() {
         g.error = Some(format!(
             "threaded run exceeded max_events={} (runaway?)",
@@ -368,30 +508,54 @@ where
         g.done = true;
     }
     // Ack the envelope we just consumed: real send-to-handler-start
-    // latency, receiver-side queueing included (the A7 signal).
+    // latency, receiver-side queueing included (the A7 signal). A sender
+    // that crashed since is past caring.
     if let Some((from, acks)) = envelope_acks {
-        for (token, sent) in acks {
-            g.inboxes[from as usize]
-                .push_back(Delivery::Ack { token, sent, delivered: now });
+        if !g.fault.is_crashed(from) {
+            for (token, sent) in acks {
+                g.inboxes[from as usize]
+                    .push_back(Delivery::Ack { token, sent, delivered: now });
+            }
         }
     }
     // Outbox fan-out. Same grouping as the simulator (envelope counts
     // agree); traced sends stamp the handler-start time. Self-sends skip
     // the network accounting, exactly like the simulator's local spawns.
+    // Under an active fault plan, wire envelopes pass through the same
+    // `fault_deliveries` seam the simulator uses (drop / duplicate /
+    // extra delay); the fault-free path is untouched — no RNG draws, no
+    // envelope splitting.
+    let fault_on = g.fault.active();
     for (dst, items, acks) in group_outbox(outbox, cfg.aggregate_sends, now) {
-        if dst as usize != l {
+        let du = dst as usize;
+        if du == l {
+            g.inboxes[du].push_back(Delivery::Envelope { from: l as LocalityId, items, acks });
+            continue;
+        }
+        if g.fault.is_crashed(dst) {
+            // Fail-stopped destination: the traffic (and any ack
+            // requests riding it) vanishes on the wire.
+            continue;
+        }
+        let deliveries = if fault_on {
+            fault_deliveries(&mut g.fault, items, acks)
+        } else {
+            vec![(items, acks, 0.0)]
+        };
+        for (items, acks, extra) in deliveries {
             let n_items: usize = items.iter().map(|m| m.item_count()).sum();
             let payload_bytes: usize = items.iter().map(|m| m.wire_bytes()).sum();
             let st = &mut g.net[l];
             st.envelopes += 1;
             st.messages += n_items as u64;
             st.payload_bytes += payload_bytes as u64;
+            let env = Delivery::Envelope { from: l as LocalityId, items, acks };
+            if extra > 0.0 {
+                g.delayed.push((now + extra, du, env));
+            } else {
+                g.inboxes[du].push_back(env);
+            }
         }
-        g.inboxes[dst as usize].push_back(Delivery::Envelope {
-            from: l as LocalityId,
-            items,
-            acks,
-        });
     }
     for at in timers {
         g.timers[l].push(at);
@@ -652,5 +816,122 @@ mod tests {
         }
         let cfg = SimConfig { max_events: 1000, ..threads_cfg() };
         ThreadedRuntime::new(cfg).run(vec![Bouncer, Bouncer]);
+    }
+
+    use super::super::fault::FaultPlan;
+
+    fn fault_cfg(plan: FaultPlan) -> SimConfig {
+        SimConfig { fault: plan, ..threads_cfg() }
+    }
+
+    #[test]
+    fn fault_drop_loses_the_envelope_on_threads() {
+        let plan = FaultPlan { drop_p: 1.0, seed: 11, ..FaultPlan::none() };
+        let actors = (0..2).map(|_| RingActor { hops_left: 1, received: 0 }).collect();
+        let (actors, report) = ThreadedRuntime::new(fault_cfg(plan)).run(actors);
+        let total: u32 = actors.iter().map(|a| a.received).sum();
+        assert_eq!(total, 0, "certain drop: the ping never arrives");
+        assert_eq!(report.fault.injected_drops, 1);
+    }
+
+    #[test]
+    fn fault_dup_delivers_twice_on_threads() {
+        let plan = FaultPlan { dup_p: 1.0, seed: 7, ..FaultPlan::none() };
+        let actors = (0..2).map(|_| RingActor { hops_left: 1, received: 0 }).collect();
+        let (actors, report) = ThreadedRuntime::new(fault_cfg(plan)).run(actors);
+        let total: u32 = actors.iter().map(|a| a.received).sum();
+        assert_eq!(total, 2, "certain duplication: the ping arrives twice");
+        assert_eq!(report.fault.injected_dups, 1);
+        assert_eq!(report.net.envelopes, 2, "the duplicate is real traffic");
+    }
+
+    #[test]
+    fn fault_delay_holds_then_releases_on_threads() {
+        let plan = FaultPlan { delay_us: 5_000.0, seed: 5, ..FaultPlan::none() };
+        let actors = (0..2).map(|_| RingActor { hops_left: 1, received: 0 }).collect();
+        let (actors, report) = ThreadedRuntime::new(fault_cfg(plan)).run(actors);
+        let total: u32 = actors.iter().map(|a| a.received).sum();
+        assert_eq!(total, 1, "delayed, not lost");
+        assert_eq!(report.fault.injected_delays, 1);
+        assert!(report.wall_us >= 5_000.0, "the hold is real wall time: {}", report.wall_us);
+    }
+
+    #[test]
+    fn wall_clock_crash_stops_the_locality_and_run_completes() {
+        // An otherwise-endless ping-pong: only the fail-stop of locality 1
+        // lets the run quiesce.
+        struct Bouncer {
+            got: u32,
+        }
+        impl Actor for Bouncer {
+            type Msg = Ping;
+            fn on_start(&mut self, ctx: &mut Ctx<Ping>) {
+                if ctx.locality() == 0 {
+                    ctx.send(1, Ping(0));
+                }
+            }
+            fn on_message(&mut self, ctx: &mut Ctx<Ping>, from: LocalityId, msg: Ping) {
+                self.got += 1;
+                ctx.send(from, msg);
+            }
+        }
+        let plan = FaultPlan { crash: Some((1, 10_000.0)), ..FaultPlan::none() };
+        let actors = (0..2).map(|_| Bouncer { got: 0 }).collect();
+        let (actors, report) = ThreadedRuntime::new(fault_cfg(plan)).run(actors);
+        assert_eq!(report.fault.crashes, 1);
+        assert!(actors[0].got > 0, "traffic flowed before the crash");
+    }
+
+    #[test]
+    fn crash_excludes_locality_from_threaded_barrier_quorum() {
+        // Locality 1 requests barriers forever and fail-stops at 10ms;
+        // locality 0 keeps the BSP loop going until 25ms of wall clock.
+        // Without quorum exclusion the first post-crash barrier would
+        // wedge; with it, locality 0 finishes its rounds solo.
+        struct TimedBsp {
+            stop_at: f64,
+        }
+        impl Actor for TimedBsp {
+            type Msg = Nothing;
+            fn on_start(&mut self, ctx: &mut Ctx<Nothing>) {
+                ctx.request_barrier();
+            }
+            fn on_message(&mut self, _: &mut Ctx<Nothing>, _: LocalityId, _: Nothing) {}
+            fn on_barrier(&mut self, ctx: &mut Ctx<Nothing>, _: u64) {
+                if ctx.now() < self.stop_at {
+                    ctx.request_barrier();
+                }
+            }
+        }
+        let plan = FaultPlan { crash: Some((1, 10_000.0)), ..FaultPlan::none() };
+        let actors = vec![
+            TimedBsp { stop_at: 25_000.0 },
+            TimedBsp { stop_at: f64::INFINITY },
+        ];
+        let (_, report) = ThreadedRuntime::new(fault_cfg(plan)).run(actors);
+        assert_eq!(report.fault.crashes, 1);
+        assert!(report.barriers > 0, "barriers completed before and after the crash");
+    }
+
+    #[test]
+    #[should_panic(expected = "deadlock")]
+    fn stall_watchdog_reports_instead_of_hanging() {
+        // Locality 0 arms a timer a minute out and everyone requests a
+        // barrier: quiescence is held open, the barrier cannot complete,
+        // and without the watchdog the run would sit there for a minute.
+        struct FarTimer;
+        impl Actor for FarTimer {
+            type Msg = Nothing;
+            fn on_start(&mut self, ctx: &mut Ctx<Nothing>) {
+                if ctx.locality() == 0 {
+                    ctx.set_timer(ctx.now() + 60_000_000.0);
+                }
+                ctx.request_barrier();
+            }
+            fn on_message(&mut self, _: &mut Ctx<Nothing>, _: LocalityId, _: Nothing) {}
+            fn on_timer(&mut self, _: &mut Ctx<Nothing>) {}
+        }
+        let cfg = SimConfig { stall_timeout_us: 30_000.0, ..threads_cfg() };
+        ThreadedRuntime::new(cfg).run(vec![FarTimer, FarTimer]);
     }
 }

@@ -127,10 +127,15 @@ COMMANDS:
                 A10 incremental re-convergence: update-batch size x
                 {block, vertex_cut} x {sim, threads} with applied/tainted/
                 reseeded counters and incremental-vs-full relaxation,
-                envelope, and makespan columns);
+                envelope, and makespan columns,
+                A11 fault injection: {none, drop+dup, drop+dup+crash} x
+                reliability x {bfs-async, sssp-delta, pagerank-bsp} over
+                {sim, threads}, every cell oracle-validated, with
+                drops/retransmits/dedup/crashes/restores/checkpoint
+                columns);
                 --json additionally writes machine-readable tables to
                 bench_out/*.json (--out-dir overrides the directory);
-                --only a4,a7,a8,a9,a10 runs a prefix-matched subset
+                --only a4,a7,a8,a9,a10,a11 runs a prefix-matched subset
     info        print graph statistics for the configured generator
     help        show this message
 
@@ -156,9 +161,26 @@ CONFIG OVERRIDES (key=value):
              both run the same engines and report wall-clock columns),
     serve_queries, serve_landmarks, serve_cache (0 disables),
     serve_batch (>= 1), serve_oracle (true|false),
+    serve_deadline_us (per-window latency budget in wall-clock us; past it
+                       uncovered queries degrade to flagged landmark
+                       bounds instead of waving; 0 = no deadline),
     mutate_frac (update-batch size as a fraction of the edge count, in [0,1]),
     mutate_inserts (insert share of the batch, in [0,1]; rest are deletes),
     mutate_seed (batch RNG seed; 0 derives from seed),
+    fault_drop, fault_dup (per-envelope probabilities in [0,1]),
+    fault_delay_us (extra per-envelope delivery delay bound),
+    fault_crash (L@T: locality L fail-stops at time T us; recovery restores
+                 it from its last checkpoint and re-converges warm),
+    fault_slow (L@F: locality L's compute charges scale by F >= 1; sim only),
+    fault_seed (decision-stream seed),
+    reliability (none|acked — acked turns on sequence-numbered envelopes,
+                 receiver dedup, and ack-driven retransmit; none keeps the
+                 historical zero-overhead fast path),
+    checkpoint_every (engine progress ticks between snapshots; 0 =
+                      checkpoint only when a crash is planned),
+    stall_timeout_us (threads-runtime deadlock watchdog; 0 disables),
+    taint_cap (deletion-taint fraction above which incremental reconverge
+               falls back to full recompute, in [0,1]; 0 never falls back),
     net.latency_us, net.bandwidth_gbps, net.send_cpu_us, net.recv_cpu_us,
     net.per_item_cpu_us, net.overhead_bytes, artifact_dir
 
@@ -171,7 +193,7 @@ FLAGS:
     --out-dir <dir>    output directory for `ablations --json` (default bench_out)
     --json             also write ablation tables as JSON (ablations only)
     --only <list>      comma list of ablation stems to run, prefix-matched
-                       (e.g. --only a4,a7,a8,a9,a10; ablations only)
+                       (e.g. --only a4,a7,a8,a9,a10,a11; ablations only)
     --large            extend the A9 scale sweep to kron18 (ablations only)
     --validate         validate results against the sequential oracle
 ";

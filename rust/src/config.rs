@@ -7,7 +7,7 @@
 use std::collections::BTreeMap;
 use std::path::Path;
 
-use crate::amt::{FlushPolicy, NetConfig, RuntimeKind};
+use crate::amt::{FaultPlan, FlushPolicy, NetConfig, Reliability, RuntimeKind};
 use crate::graph::{PartitionKind, StorageKind};
 use crate::Result;
 
@@ -99,6 +99,9 @@ pub struct Config {
     pub serve_batch: usize,
     /// Serve mode: master switch for the landmark oracle.
     pub serve_oracle: bool,
+    /// Serve mode: per-window deadline in host wall-clock µs (`0` = no
+    /// deadline; see `serve::ServeParams::deadline_us`).
+    pub serve_deadline_us: f64,
     /// Mutate mode: update-batch size as a fraction of the graph's edge
     /// pairs (`0` = empty batch).
     pub mutate_frac: f64,
@@ -106,6 +109,27 @@ pub struct Config {
     pub mutate_inserts: f64,
     /// Mutate mode: batch-generator seed (`0` = derive from `seed`).
     pub mutate_seed: u64,
+    /// Fault-injection plan (keys `fault_drop`, `fault_dup`,
+    /// `fault_delay_us`, `fault_crash`, `fault_slow`, `fault_seed`).
+    /// Defaults to [`FaultPlan::none`]: the injector is compiled out of
+    /// the hot path and envelope traces are bit-identical to a
+    /// fault-free build.
+    pub fault: FaultPlan,
+    /// Message-delivery contract (`none` | `acked`). `acked` turns on
+    /// sequence-numbered envelopes, receiver dedup, and ack-driven
+    /// retransmit in every aggregator.
+    pub reliability: Reliability,
+    /// Checkpoint cadence in engine progress ticks (`0` = only when a
+    /// crash is planned, at the default cadence).
+    pub checkpoint_every: u64,
+    /// Threads-runtime stall watchdog: barrier wait time before a
+    /// [`StallReport`](crate::amt::metrics::StallReport) is raised
+    /// (`0` = watchdog disabled).
+    pub stall_timeout_us: f64,
+    /// Incremental-update taint cap: when a deletion taints more than
+    /// this fraction of vertices, fall back to full recompute (`0`
+    /// disables the fallback).
+    pub taint_cap: f64,
 }
 
 impl Default for Config {
@@ -134,9 +158,15 @@ impl Default for Config {
             serve_cache: 32,
             serve_batch: 16,
             serve_oracle: true,
+            serve_deadline_us: 0.0,
             mutate_frac: 0.01,
             mutate_inserts: 0.5,
             mutate_seed: 0,
+            fault: FaultPlan::none(),
+            reliability: Reliability::None,
+            checkpoint_every: 0,
+            stall_timeout_us: 0.0,
+            taint_cap: 0.5,
         }
     }
 }
@@ -221,6 +251,14 @@ impl Config {
                     c.serve_batch = b;
                 }
                 "serve_oracle" => c.serve_oracle = v.parse()?,
+                "serve_deadline_us" => {
+                    let d: f64 = v.parse()?;
+                    anyhow::ensure!(
+                        d >= 0.0 && !d.is_nan(),
+                        "serve_deadline_us must be >= 0 (0 = none), got `{v}`"
+                    );
+                    c.serve_deadline_us = d;
+                }
                 "mutate_frac" => {
                     let f: f64 = v.parse()?;
                     anyhow::ensure!(
@@ -238,6 +276,64 @@ impl Config {
                     c.mutate_inserts = f;
                 }
                 "mutate_seed" => c.mutate_seed = v.parse()?,
+                "fault_drop" => {
+                    let p: f64 = v.parse()?;
+                    anyhow::ensure!(
+                        (0.0..=1.0).contains(&p),
+                        "fault_drop must be in [0, 1], got `{v}`"
+                    );
+                    c.fault.drop_p = p;
+                }
+                "fault_dup" => {
+                    let p: f64 = v.parse()?;
+                    anyhow::ensure!(
+                        (0.0..=1.0).contains(&p),
+                        "fault_dup must be in [0, 1], got `{v}`"
+                    );
+                    c.fault.dup_p = p;
+                }
+                "fault_delay_us" => {
+                    let d: f64 = v.parse()?;
+                    anyhow::ensure!(
+                        d >= 0.0 && !d.is_nan(),
+                        "fault_delay_us must be >= 0, got `{v}`"
+                    );
+                    c.fault.delay_us = d;
+                }
+                "fault_crash" => {
+                    c.fault.crash = Some(
+                        FaultPlan::parse_crash(v)
+                            .map_err(|e| anyhow::anyhow!("bad fault_crash: {e}"))?,
+                    );
+                }
+                "fault_slow" => {
+                    c.fault.slow = Some(
+                        FaultPlan::parse_slow(v)
+                            .map_err(|e| anyhow::anyhow!("bad fault_slow: {e}"))?,
+                    );
+                }
+                "fault_seed" => c.fault.seed = v.parse()?,
+                "reliability" => {
+                    c.reliability = Reliability::parse(v)
+                        .map_err(|e| anyhow::anyhow!("bad reliability: {e}"))?;
+                }
+                "checkpoint_every" => c.checkpoint_every = v.parse()?,
+                "stall_timeout_us" => {
+                    let t: f64 = v.parse()?;
+                    anyhow::ensure!(
+                        t >= 0.0 && !t.is_nan(),
+                        "stall_timeout_us must be >= 0 (0 = no watchdog), got `{v}`"
+                    );
+                    c.stall_timeout_us = t;
+                }
+                "taint_cap" => {
+                    let f: f64 = v.parse()?;
+                    anyhow::ensure!(
+                        (0.0..=1.0).contains(&f),
+                        "taint_cap must be in [0, 1] (0 = never fall back), got `{v}`"
+                    );
+                    c.taint_cap = f;
+                }
                 "net.latency_us" => c.net.latency_us = v.parse()?,
                 "net.bandwidth_gbps" => {
                     c.net.bandwidth_bytes_per_us = v.parse::<f64>()? * 1000.0
@@ -449,6 +545,65 @@ mod tests {
         let d = Config::default();
         assert_eq!((d.mutate_frac, d.mutate_inserts, d.mutate_seed), (0.01, 0.5, 0));
         assert_eq!(d.effective_mutate_seed(), d.seed + 3, "0 derives from seed");
+    }
+
+    #[test]
+    fn fault_keys_parse_and_reject() {
+        let mut kv = BTreeMap::new();
+        kv.insert("fault_drop".into(), "0.05".into());
+        kv.insert("fault_dup".into(), "0.02".into());
+        kv.insert("fault_delay_us".into(), "12.5".into());
+        kv.insert("fault_crash".into(), "1@800".into());
+        kv.insert("fault_slow".into(), "2@3.5".into());
+        kv.insert("fault_seed".into(), "77".into());
+        kv.insert("reliability".into(), "acked".into());
+        kv.insert("checkpoint_every".into(), "32".into());
+        kv.insert("stall_timeout_us".into(), "5000".into());
+        kv.insert("taint_cap".into(), "0.25".into());
+        let c = Config::from_kv(&kv).unwrap();
+        assert_eq!(c.fault.drop_p, 0.05);
+        assert_eq!(c.fault.dup_p, 0.02);
+        assert_eq!(c.fault.delay_us, 12.5);
+        assert_eq!(c.fault.crash, Some((1, 800.0)));
+        assert_eq!(c.fault.slow, Some((2, 3.5)));
+        assert_eq!(c.fault.seed, 77);
+        assert!(!c.fault.is_none());
+        assert_eq!(c.reliability, Reliability::Acked);
+        assert_eq!(c.checkpoint_every, 32);
+        assert_eq!(c.stall_timeout_us, 5000.0);
+        assert_eq!(c.taint_cap, 0.25);
+
+        kv.insert("fault_drop".into(), "1.5".into());
+        let err = Config::from_kv(&kv).unwrap_err().to_string();
+        assert!(err.contains("fault_drop"), "{err}");
+        kv.insert("fault_drop".into(), "0".into());
+        kv.insert("fault_crash".into(), "oops".into());
+        let err = Config::from_kv(&kv).unwrap_err().to_string();
+        assert!(err.contains("fault_crash"), "{err}");
+        kv.insert("fault_crash".into(), "0@100".into());
+        kv.insert("reliability".into(), "tcp".into());
+        let err = Config::from_kv(&kv).unwrap_err().to_string();
+        assert!(err.contains("reliability"), "{err}");
+        kv.insert("reliability".into(), "none".into());
+        kv.insert("taint_cap".into(), "2".into());
+        let err = Config::from_kv(&kv).unwrap_err().to_string();
+        assert!(err.contains("taint_cap"), "{err}");
+
+        let d = Config::default();
+        assert!(d.fault.is_none(), "defaults are fault-free");
+        assert_eq!(d.reliability, Reliability::None);
+        assert_eq!((d.checkpoint_every, d.stall_timeout_us, d.taint_cap), (0, 0.0, 0.5));
+        assert_eq!(d.serve_deadline_us, 0.0);
+    }
+
+    #[test]
+    fn serve_deadline_parses_and_rejects() {
+        let mut kv = BTreeMap::new();
+        kv.insert("serve_deadline_us".into(), "2500".into());
+        assert_eq!(Config::from_kv(&kv).unwrap().serve_deadline_us, 2500.0);
+        kv.insert("serve_deadline_us".into(), "-1".into());
+        let err = Config::from_kv(&kv).unwrap_err().to_string();
+        assert!(err.contains("serve_deadline_us"), "{err}");
     }
 
     #[test]

@@ -786,6 +786,7 @@ pub fn ablation_query_serving(cfg: &Config) -> Result<Table> {
                 cache,
                 batch,
                 oracle,
+                deadline_us: cfg.serve_deadline_us,
                 seed: cfg.seed + 2,
             };
             let res = serve::run(&gw, &dist, &params, cfg.flush_policy, scfg.clone());
@@ -1037,6 +1038,170 @@ pub fn ablation_incremental(cfg: &Config) -> Result<Table> {
             }
         }
     }
+    Ok(table)
+}
+
+/// Ablation A11: fault injection × reliability. Sweeps three fault
+/// schemes — none (the parity baseline), drop/dup/delay under
+/// `reliability=acked`, and drop/dup plus a mid-run fail-stop crash with
+/// checkpoint/restart recovery — over `{sim, threads}` ×
+/// `{bfs-async, sssp-delta, pagerank-bsp}` at the largest locality count
+/// ≤ 8. Every cell validates its answers against the sequential oracle:
+/// the robustness claim this table pins is that injected faults cost
+/// retransmits, dedups, and recovery time but never correctness. The
+/// crash time is calibrated per cell from the fault-free baseline (half
+/// its makespan on `sim`, half its wall time on `threads`) so the
+/// fail-stop lands mid-run. On the deterministic `sim` substrate the
+/// faulty rows must show nonzero injected drops and retransmits, and the
+/// crash rows nonzero crashes and restores — injection and recovery
+/// actually happened, the run did not just luck into a quiet schedule.
+pub fn ablation_fault_injection(cfg: &Config) -> Result<Table> {
+    use crate::algorithms::sssp;
+    use crate::amt::{FaultPlan, Reliability};
+    use crate::graph::generators;
+
+    let g = cfg.build_graph()?;
+    let gw = generators::with_random_weights(&g, 1.0, 10.0, cfg.seed + 1);
+    let p = cfg.localities.iter().cloned().filter(|&x| (2..=8).contains(&x)).max().unwrap_or(4);
+    let params = PrParams { alpha: cfg.alpha, iterations: cfg.iterations };
+    let delta = if cfg.sssp_delta > 0.0 { cfg.sssp_delta } else { sssp::auto_delta(&gw) };
+    let bfs_want = bfs::sequential::distances(&g, cfg.root);
+    let pr_want = pagerank::sequential::pagerank(&g, params);
+    let sssp_want = sssp::dijkstra(&gw, cfg.root);
+    let dist = DistGraph::build_with(&g, cfg.partition.build(&g, p));
+    let distw = DistGraph::build_with(&gw, cfg.partition.build(&gw, p));
+    let chaos = FaultPlan {
+        drop_p: 0.05,
+        dup_p: 0.05,
+        delay_us: 5.0,
+        crash: None,
+        slow: None,
+        seed: cfg.seed.wrapping_mul(31).wrapping_add(7),
+    };
+
+    let mut table = Table::new(
+        format!(
+            "Ablation A11 — fault injection x reliability on {} ({} localities)",
+            cfg.graph_name(),
+            p
+        ),
+        &["runtime", "algorithm", "faults", "reliability", "time", "wall", "drops", "dups",
+          "retransmits", "dedup", "crashes", "restores", "ckpts", "recovery-wall"],
+    );
+    // Totals over the deterministic sim rows; asserted nonzero below.
+    let (mut sim_drops, mut sim_retransmits, mut sim_crashes, mut sim_restores) =
+        (0u64, 0u64, 0u64, 0u64);
+    for rt in [RuntimeKind::Sim, RuntimeKind::Threads] {
+        for algo in ["bfs-async", "sssp-delta", "pagerank-bsp"] {
+            let mut baseline_us = 0.0f64;
+            for (fname, fault, reliability) in [
+                ("none", FaultPlan::none(), Reliability::None),
+                ("drop+dup", chaos.clone(), Reliability::Acked),
+                ("drop+dup+crash", chaos.clone(), Reliability::Acked),
+            ] {
+                let mut fault = fault;
+                if fname == "drop+dup+crash" {
+                    // Fail-stop the last locality halfway through the
+                    // fault-free baseline (simulated time on sim,
+                    // wall-clock on threads).
+                    fault.crash = Some((p - 1, (baseline_us * 0.5).max(1.0)));
+                }
+                let scfg = SimConfig {
+                    runtime: rt,
+                    fault,
+                    reliability,
+                    ..sim_cfg(cfg, false)
+                };
+                let report = match algo {
+                    "bfs-async" => {
+                        let r = bfs::run_async_with(&dist, cfg.root, cfg.flush_policy, scfg);
+                        let lv = bfs::tree_levels(cfg.root, &r.parents);
+                        anyhow::ensure!(
+                            lv == bfs_want,
+                            "A11: BFS levels diverge under {} / {fname}",
+                            rt.name()
+                        );
+                        r.report
+                    }
+                    "sssp-delta" => {
+                        let r = sssp::run_delta_with(
+                            &gw,
+                            &distw,
+                            cfg.root,
+                            delta,
+                            cfg.flush_policy,
+                            scfg,
+                        );
+                        let ok = r.dist.iter().zip(&sssp_want).all(|(a, b)| {
+                            (a.is_infinite() && b.is_infinite()) || (a - b).abs() < 1e-3
+                        });
+                        anyhow::ensure!(
+                            ok,
+                            "A11: delta SSSP diverges under {} / {fname}",
+                            rt.name()
+                        );
+                        r.report
+                    }
+                    "pagerank-bsp" => {
+                        let r = pagerank::run_bsp(&dist, params, scfg);
+                        let diff = pagerank::max_abs_diff(&r.ranks, &pr_want);
+                        anyhow::ensure!(
+                            diff < 1e-3,
+                            "A11: PageRank diverges under {} / {fname} ({diff})",
+                            rt.name()
+                        );
+                        r.report
+                    }
+                    _ => unreachable!(),
+                };
+                if fname == "none" {
+                    baseline_us = if rt == RuntimeKind::Sim {
+                        report.makespan_us
+                    } else {
+                        report.wall_us
+                    };
+                    anyhow::ensure!(
+                        report.fault.is_quiet(),
+                        "A11: fault counters moved on the fault-free baseline ({} / {algo})",
+                        rt.name()
+                    );
+                }
+                let f = &report.fault;
+                if rt == RuntimeKind::Sim {
+                    sim_drops += f.injected_drops;
+                    sim_retransmits += f.retransmits;
+                    sim_crashes += f.crashes;
+                    sim_restores += f.restores;
+                }
+                table.row(vec![
+                    rt.name().to_string(),
+                    algo.to_string(),
+                    fname.to_string(),
+                    if reliability.is_acked() { "acked" } else { "none" }.to_string(),
+                    fmt_us(report.makespan_us),
+                    fmt_us(report.wall_us),
+                    f.injected_drops.to_string(),
+                    f.injected_dups.to_string(),
+                    f.retransmits.to_string(),
+                    f.dedup_hits.to_string(),
+                    f.crashes.to_string(),
+                    f.restores.to_string(),
+                    f.checkpoints.to_string(),
+                    fmt_us(f.recovery_wall_us),
+                ]);
+            }
+        }
+    }
+    anyhow::ensure!(
+        sim_drops > 0 && sim_retransmits > 0,
+        "A11: the sim chaos rows injected no drops ({sim_drops}) or never \
+         retransmitted ({sim_retransmits}) — the fault plan is not reaching the wire"
+    );
+    anyhow::ensure!(
+        sim_crashes > 0 && sim_restores > 0,
+        "A11: the sim crash rows never crashed ({sim_crashes}) or never restored \
+         ({sim_restores}) — the fail-stop is not landing mid-run"
+    );
     Ok(table)
 }
 

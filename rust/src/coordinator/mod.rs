@@ -104,6 +104,11 @@ fn sim(cfg: &Config) -> SimConfig {
         net: cfg.net.clone(),
         aggregate_sends: cfg.aggregate,
         runtime: cfg.runtime,
+        fault: cfg.fault.clone(),
+        reliability: cfg.reliability,
+        checkpoint_every: cfg.checkpoint_every,
+        stall_timeout_us: cfg.stall_timeout_us,
+        taint_cap: cfg.taint_cap,
         ..SimConfig::default()
     }
 }
@@ -273,6 +278,7 @@ pub fn run_serve(
         cache: cfg.serve_cache,
         batch: cfg.serve_batch,
         oracle: cfg.serve_oracle,
+        deadline_us: cfg.serve_deadline_us,
         seed: cfg.seed + 2,
     };
     let res = serve::run(&gw, &dist, &params, cfg.flush_policy, sim(cfg));
@@ -667,6 +673,22 @@ mod tests {
         let table = experiment::ablation_incremental(&cfg).unwrap();
         // 3 fractions x {block, vertex_cut} x {sim, threads}.
         assert_eq!(table.rows.len(), 12);
+    }
+
+    #[test]
+    fn ablation_fault_injection_validates_and_recovers() {
+        // The assertions live inside the ablation: every cell must match
+        // its sequential oracle, the sim chaos rows must show injected
+        // drops + retransmits, and the sim crash rows crashes + restores.
+        let mut cfg = tiny_cfg();
+        cfg.generator = "kron".into();
+        cfg.scale = 8;
+        cfg.degree = 8;
+        cfg.localities = vec![4];
+        cfg.iterations = 8;
+        let table = experiment::ablation_fault_injection(&cfg).unwrap();
+        // 2 runtimes x 3 algorithms x 3 fault schemes.
+        assert_eq!(table.rows.len(), 18);
     }
 
     #[test]

@@ -23,12 +23,15 @@ use std::sync::Arc;
 
 use crate::amt::aggregate::{Aggregator, FlushPolicy, SlotSpace};
 use crate::amt::sim::{Actor, Ctx, LocalityId, SimConfig, SimTime};
-use crate::amt::WorkStats;
+use crate::amt::{SimReport, WorkStats};
 use crate::graph::{DistGraph, Shard};
 
+use super::checkpoint::Checkpoint;
+use super::incremental::{recovery_converge, recovery_iterate};
 use super::program::{Mode, VertexProgram};
 use super::{
-    finish, init_states, ship, untag_token, EngineMsg, ProgramRun, SPACE_MASTER, SPACE_MIRROR,
+    absorb_recovery, finish, init_states, recovered_states, seed_checkpoint, ship, untag_token,
+    EngineMsg, ProgramRun, SPACE_MASTER, SPACE_MIRROR,
 };
 
 /// Pending wavefront entry: apply `msg` to `row` when popped. Min-ordered
@@ -78,8 +81,15 @@ struct AsyncActor<P: VertexProgram> {
     /// armed at the earliest flush deadline so buffered traffic can never
     /// outlive quiescence (or a superstep barrier).
     windowed: bool,
+    /// The combiners need a clock at handler boundaries: time-window
+    /// flushes and/or `reliability=acked` retransmit deadlines. Implied
+    /// by `windowed`; also true for reliable runs under drain policies.
+    clocked: bool,
     /// Earliest outstanding timer deadline (None = no timer armed).
     timer_at: Option<SimTime>,
+    /// Crash/restart snapshot store; `None` when neither a crash is
+    /// planned nor `checkpoint_every` set (zero overhead).
+    ckpt: Option<Checkpoint<P::State>>,
 }
 
 impl<P: VertexProgram> AsyncActor<P> {
@@ -182,19 +192,34 @@ impl<P: VertexProgram> AsyncActor<P> {
     /// destinations ship, the rest keep buffering across handlers — and a
     /// runtime timer is kept armed at the earliest remaining deadline,
     /// which holds quiescence/barriers open until the window flushes.
+    /// Reliable runs poll even under drain policies: `poll` is also where
+    /// overdue unacked envelopes retransmit, and the armed timer is what
+    /// keeps the run alive (not quiesced) until every ack lands or the
+    /// retransmit layer gives a destination up.
     fn flush_boundary(&mut self, ctx: &mut Ctx<EngineMsg<P::Msg>>) {
         if !self.windowed {
             self.drain(ctx);
-            return;
         }
-        let now = ctx.now();
-        for (dst, b) in self.agg.poll(now) {
-            ship(ctx, dst, b, SPACE_MASTER, EngineMsg::ToMaster);
+        if self.clocked {
+            let now = ctx.now();
+            for (dst, b) in self.agg.poll(now) {
+                ship(ctx, dst, b, SPACE_MASTER, EngineMsg::ToMaster);
+            }
+            for (dst, b) in self.mirror_agg.poll(now) {
+                ship(ctx, dst, b, SPACE_MIRROR, EngineMsg::ToMirror);
+            }
+            self.arm_timer(ctx);
         }
-        for (dst, b) in self.mirror_agg.poll(now) {
-            ship(ctx, dst, b, SPACE_MIRROR, EngineMsg::ToMirror);
+    }
+
+    /// Converge checkpoint cadence: one handled event. (Iterate snapshots
+    /// at barriers instead — see [`Actor::on_barrier`].)
+    fn ckpt_tick(&mut self) {
+        let n_owned = self.shard.n_local();
+        if let Some(c) = &mut self.ckpt {
+            let cursors = self.agg.seq_cursors();
+            c.tick(&self.state[..n_owned], 0, cursors);
         }
-        self.arm_timer(ctx);
     }
 
     /// Keep a timer armed at the earliest pending flush deadline.
@@ -255,10 +280,18 @@ impl<P: VertexProgram> Actor for AsyncActor<P> {
         }
     }
 
-    fn on_message(&mut self, ctx: &mut Ctx<Self::Msg>, _from: LocalityId, msg: Self::Msg) {
+    fn on_message(&mut self, ctx: &mut Ctx<Self::Msg>, from: LocalityId, msg: Self::Msg) {
         let n_owned = self.shard.n_local();
         match (msg, self.mode) {
             (EngineMsg::ToMaster(b), Mode::Converge) => {
+                // A retransmit the original beat here is a duplicate:
+                // reject by sequence, but still run the flush boundary so
+                // the retransmit timer stays armed.
+                if !self.agg.admit(from, b.seq()) {
+                    self.agg.recycle(b.into_items());
+                    self.flush_boundary(ctx);
+                    return;
+                }
                 let mut items = b.into_items();
                 for (idx, m) in items.drain(..) {
                     self.push(idx as usize, m);
@@ -266,8 +299,14 @@ impl<P: VertexProgram> Actor for AsyncActor<P> {
                 self.agg.recycle(items);
                 self.relax(ctx);
                 self.flush_boundary(ctx);
+                self.ckpt_tick();
             }
             (EngineMsg::ToMirror(b), Mode::Converge) => {
+                if !self.mirror_agg.admit(from, b.seq()) {
+                    self.mirror_agg.recycle(b.into_items());
+                    self.flush_boundary(ctx);
+                    return;
+                }
                 // The value came *from* the master: install it directly
                 // (no echo back) and expand the locally homed edges.
                 let mut items = b.into_items();
@@ -280,9 +319,17 @@ impl<P: VertexProgram> Actor for AsyncActor<P> {
                 self.mirror_agg.recycle(items);
                 self.relax(ctx);
                 self.flush_boundary(ctx);
+                self.ckpt_tick();
             }
             (EngineMsg::ToMaster(b), Mode::Iterate(_)) => {
+                if !self.agg.admit(from, b.seq()) {
+                    self.agg.recycle(b.into_items());
+                    return;
+                }
                 // Applied on arrival — overlap, not at-barrier batching.
+                // Iterate folds are *not* idempotent (rank contributions
+                // sum), which is exactly why the dedup window above is
+                // load-bearing under faults.
                 let mut items = b.into_items();
                 for (idx, m) in items.drain(..) {
                     let _ = self.prog.apply(&mut self.state[idx as usize], m);
@@ -290,6 +337,10 @@ impl<P: VertexProgram> Actor for AsyncActor<P> {
                 self.agg.recycle(items);
             }
             (EngineMsg::ToMirror(b), Mode::Iterate(_)) => {
+                if !self.mirror_agg.admit(from, b.seq()) {
+                    self.mirror_agg.recycle(b.into_items());
+                    return;
+                }
                 // Expand our share of the mirrored rows now; the resulting
                 // master-bound traffic must land inside this superstep —
                 // directly, or via the armed window timer the iteration
@@ -302,7 +353,7 @@ impl<P: VertexProgram> Actor for AsyncActor<P> {
                     }
                 }
                 self.mirror_agg.recycle(items);
-                if self.windowed {
+                if self.clocked {
                     self.flush_boundary(ctx);
                 } else {
                     for (dst, b) in self.agg.drain() {
@@ -342,6 +393,13 @@ impl<P: VertexProgram> Actor for AsyncActor<P> {
             }
             self.deltas.push(delta);
             self.iter += 1;
+            if let Some(c) = &mut self.ckpt {
+                // Iterate state is not monotone: keep the superstep
+                // history so recovery can roll every locality back to
+                // the crashed locality's epoch.
+                let cursors = self.agg.seq_cursors();
+                c.epoch_mark(&self.state[..self.shard.n_local()], u64::from(self.iter), cursors);
+            }
             if self.iter < n {
                 self.iteration_phase(ctx);
             }
@@ -349,61 +407,147 @@ impl<P: VertexProgram> Actor for AsyncActor<P> {
     }
 }
 
-/// Run `prog` on the asynchronous engine over `dist` with the given
-/// combiner flush policy.
-pub fn run_async<P: VertexProgram>(
-    prog: P,
+/// One engine execution, no recovery: build the actors, run them on the
+/// configured substrate, merge per-actor accounting. Split out of
+/// [`run_async`] so the crash-recovery re-run can reuse it without
+/// recursing (the recovery program is a `Warm<P>` wrapper — a recursive
+/// driver would monomorphize forever).
+fn run_async_core<P: VertexProgram>(
+    prog: &Arc<P>,
     dist: &DistGraph,
     policy: FlushPolicy,
-    cfg: SimConfig,
-) -> ProgramRun<P::State> {
+    cfg: &SimConfig,
+) -> (Vec<AsyncActor<P>>, SimReport) {
     let info = prog.info();
-    let prog = Arc::new(prog);
+    let reliable = cfg.reliability.is_acked();
     let actors: Vec<AsyncActor<P>> = dist
         .shards
         .iter()
-        .map(|s| AsyncActor {
-            prog: Arc::clone(&prog),
-            shard: Arc::new(s.clone()),
-            mode: info.mode,
-            state: init_states(&*prog, s),
-            agg: Aggregator::new(
-                dist.owned_counts(),
-                s.locality,
-                SlotSpace::Master,
-                policy,
-                &cfg.net,
-                info.item_bytes,
-                P::combine,
-            ),
-            mirror_agg: Aggregator::new(
-                dist.ghost_counts(),
-                s.locality,
-                SlotSpace::Mirror,
-                policy,
-                &cfg.net,
-                info.item_bytes,
-                P::combine,
-            ),
-            heap: BinaryHeap::new(),
-            seq: 0,
-            iter: 0,
-            deltas: Vec::new(),
-            work: WorkStats::default(),
-            windowed: policy.time_window_us().is_some(),
-            timer_at: None,
+        .map(|s| {
+            let state = init_states(&**prog, s);
+            let ckpt = seed_checkpoint(cfg, info.mode, s.n_local(), &state);
+            AsyncActor {
+                prog: Arc::clone(prog),
+                shard: Arc::new(s.clone()),
+                mode: info.mode,
+                state,
+                agg: Aggregator::new(
+                    dist.owned_counts(),
+                    s.locality,
+                    SlotSpace::Master,
+                    policy,
+                    &cfg.net,
+                    info.item_bytes,
+                    P::combine,
+                )
+                .with_reliability(reliable),
+                mirror_agg: Aggregator::new(
+                    dist.ghost_counts(),
+                    s.locality,
+                    SlotSpace::Mirror,
+                    policy,
+                    &cfg.net,
+                    info.item_bytes,
+                    P::combine,
+                )
+                .with_reliability(reliable),
+                heap: BinaryHeap::new(),
+                seq: 0,
+                iter: 0,
+                deltas: Vec::new(),
+                work: WorkStats::default(),
+                windowed: policy.time_window_us().is_some(),
+                clocked: policy.time_window_us().is_some() || reliable,
+                timer_at: None,
+                ckpt,
+            }
         })
         .collect();
-    let (actors, mut report) = crate::amt::run_actors(&cfg, actors);
+    let (actors, mut report) = crate::amt::run_actors(cfg, actors);
     for a in &actors {
         report.agg.merge(a.agg.stats());
         report.agg.merge(a.mirror_agg.stats());
         report.agg_master.merge(a.agg.stats());
         report.agg_mirror.merge(a.mirror_agg.stats());
         report.work.merge(&a.work);
+        for (rtx, dedup, gu) in [a.agg.reliability_stats(), a.mirror_agg.reliability_stats()] {
+            report.fault.retransmits += rtx;
+            report.fault.dedup_hits += dedup;
+            report.fault.give_ups += gu;
+        }
+        if let Some(c) = &a.ckpt {
+            report.fault.checkpoints += c.taken();
+        }
     }
     report.partition = dist.partition_stats();
     report.mem = dist.mem_stats();
+    (actors, report)
+}
+
+/// Run `prog` on the asynchronous engine over `dist` with the given
+/// combiner flush policy. When the configured fault plan fail-stops a
+/// locality mid-run, the engine restores it from its last checkpoint
+/// and re-runs warm to the exact answer (see
+/// [`checkpoint`](super::checkpoint) for the per-mode recovery story).
+pub fn run_async<P: VertexProgram>(
+    prog: P,
+    dist: &DistGraph,
+    policy: FlushPolicy,
+    cfg: SimConfig,
+) -> ProgramRun<P::State> {
+    let prog = Arc::new(prog);
+    let (actors, mut report) = run_async_core(&prog, dist, policy, &cfg);
+    if let Some((crash_l, _)) = cfg.fault.crash {
+        if report.fault.crashes > 0 {
+            let mut rcfg = cfg.clone();
+            rcfg.fault.crash = None; // the restarted locality does not re-crash
+            let parts = || actors.iter().map(|a| (&*a.shard, &a.state[..], a.ckpt.as_ref()));
+            match prog.info().mode {
+                Mode::Converge => {
+                    let recovered = recovered_states(dist, parts(), crash_l, None);
+                    let warm = Arc::new(recovery_converge(&prog, recovered));
+                    let (ractors, rreport) = run_async_core(&warm, dist, policy, &rcfg);
+                    absorb_recovery(&mut report, &rreport);
+                    return finish(
+                        dist,
+                        ractors.iter().map(|a| (&*a.shard, &a.state[..], &a.deltas[..])),
+                        report,
+                    );
+                }
+                Mode::Iterate(n) => {
+                    // Roll every locality back to the crashed locality's
+                    // last completed superstep and replay the tail.
+                    let e = actors
+                        .iter()
+                        .find(|a| a.shard.locality == crash_l)
+                        .and_then(|a| a.ckpt.as_ref())
+                        .and_then(|c| c.latest())
+                        .map_or(0, |s| s.epoch);
+                    let recovered = recovered_states(dist, parts(), crash_l, Some(e));
+                    let remaining = n.saturating_sub(e as u32);
+                    let warm = Arc::new(recovery_iterate(&prog, recovered, remaining));
+                    let (ractors, rreport) = run_async_core(&warm, dist, policy, &rcfg);
+                    absorb_recovery(&mut report, &rreport);
+                    let mut run = finish(
+                        dist,
+                        ractors.iter().map(|a| (&*a.shard, &a.state[..], &a.deltas[..])),
+                        report,
+                    );
+                    // Supersteps before the rollback epoch happened once,
+                    // in the primary run: splice their deltas in front.
+                    let mut head = vec![0.0f32; e as usize];
+                    for a in &actors {
+                        for (i, d) in a.deltas.iter().take(e as usize).enumerate() {
+                            head[i] += d;
+                        }
+                    }
+                    head.extend(run.deltas.iter().copied());
+                    run.deltas = head;
+                    return run;
+                }
+            }
+        }
+    }
     finish(
         dist,
         actors.iter().map(|a| (&*a.shard, &a.state[..], &a.deltas[..])),

@@ -30,11 +30,16 @@ use std::sync::Arc;
 use crate::amt::aggregate::{Aggregator, FlushPolicy, SlotSpace};
 use crate::amt::executor::{ChunkPolicy, Executor};
 use crate::amt::sim::{Actor, Ctx, LocalityId, SimConfig, SimTime};
-use crate::amt::WorkStats;
+use crate::amt::{SimReport, WorkStats};
 use crate::graph::{DistGraph, Shard};
 
+use super::checkpoint::Checkpoint;
+use super::incremental::{recovery_converge, recovery_iterate};
 use super::program::{Mode, VertexProgram};
-use super::{finish, init_states, ship, EngineMsg, ProgramRun, SPACE_MASTER, SPACE_MIRROR};
+use super::{
+    absorb_recovery, finish, init_states, recovered_states, seed_checkpoint, ship, untag_token,
+    EngineMsg, ProgramRun, SPACE_MASTER, SPACE_MIRROR,
+};
 
 #[derive(PartialEq)]
 enum Phase {
@@ -68,6 +73,18 @@ struct BspActor<P: VertexProgram> {
     executor: Option<Arc<Executor>>,
     chunk_policy: ChunkPolicy,
     work: WorkStats,
+    /// `reliability=acked`: poll the combiners for retransmit deadlines
+    /// at flush points and keep a timer armed (a pending timer holds the
+    /// superstep barrier open until every ack lands or a destination is
+    /// given up).
+    reliable: bool,
+    /// A crash is planned this run, so partial termination votes are
+    /// expected (the quorum excludes the failed locality).
+    crash_armed: bool,
+    /// Earliest outstanding timer deadline (None = no timer armed).
+    timer_at: Option<SimTime>,
+    /// Crash/restart snapshot store (see [`seed_checkpoint`]).
+    ckpt: Option<Checkpoint<P::State>>,
 }
 
 impl<P: VertexProgram> BspActor<P> {
@@ -146,9 +163,46 @@ impl<P: VertexProgram> BspActor<P> {
             // cascade is expanded and counted there.
             activity += 1;
         }
+        self.poll_reliable(ctx);
         ctx.send(0, EngineMsg::Count(activity));
         self.phase = Phase::AfterWork;
         ctx.request_barrier();
+    }
+
+    /// Reliable-delivery flush point: retransmit overdue unacked
+    /// envelopes and keep a timer armed at the earliest deadline. No-op
+    /// under `reliability=none` (exact envelope parity).
+    fn poll_reliable(&mut self, ctx: &mut Ctx<EngineMsg<P::Msg>>) {
+        if !self.reliable {
+            return;
+        }
+        let now = ctx.now();
+        for (dst, b) in self.agg.poll(now) {
+            ship(ctx, dst, b, SPACE_MASTER, EngineMsg::ToMaster);
+        }
+        for (dst, b) in self.mirror_agg.poll(now) {
+            ship(ctx, dst, b, SPACE_MIRROR, EngineMsg::ToMirror);
+        }
+        let next = match (self.agg.next_deadline(), self.mirror_agg.next_deadline()) {
+            (Some(a), Some(b)) => Some(a.min(b)),
+            (a, b) => a.or(b),
+        };
+        if let Some(t) = next {
+            let t = t.max(now);
+            if self.timer_at.is_none_or(|cur| t < cur) {
+                ctx.set_timer(t);
+                self.timer_at = Some(t);
+            }
+        }
+    }
+
+    /// Converge checkpoint cadence: one completed superstep.
+    fn ckpt_tick(&mut self) {
+        let n_owned = self.shard.n_local();
+        if let Some(c) = &mut self.ckpt {
+            let cursors = self.agg.seq_cursors();
+            c.tick(&self.state[..n_owned], 0, cursors);
+        }
     }
 
     /// One Iterate superstep: every owned row scatters to its mirrors and
@@ -171,6 +225,7 @@ impl<P: VertexProgram> BspActor<P> {
         for (dst, b) in self.agg.drain() {
             ship(ctx, dst, b, SPACE_MASTER, EngineMsg::ToMaster);
         }
+        self.poll_reliable(ctx);
         ctx.request_barrier();
     }
 
@@ -266,16 +321,27 @@ impl<P: VertexProgram> Actor for BspActor<P> {
         }
     }
 
-    fn on_message(&mut self, ctx: &mut Ctx<Self::Msg>, _from: LocalityId, msg: Self::Msg) {
+    fn on_message(&mut self, ctx: &mut Ctx<Self::Msg>, from: LocalityId, msg: Self::Msg) {
         let n_owned = self.shard.n_local();
         match msg {
             EngineMsg::ToMaster(b) => {
+                // Reject retransmit duplicates by sequence: BSP inboxes
+                // apply unconditionally at the barrier, so a duplicated
+                // batch would double-fold (fatal for Iterate sums).
+                if !self.agg.admit(from, b.seq()) {
+                    self.agg.recycle(b.into_items());
+                    return;
+                }
                 let mut items = b.into_items();
                 self.inbox.append(&mut items);
                 self.agg.recycle(items);
             }
             EngineMsg::ToMirror(b) => match self.mode {
                 Mode::Converge => {
+                    if !self.mirror_agg.admit(from, b.seq()) {
+                        self.mirror_agg.recycle(b.into_items());
+                        return;
+                    }
                     // Install and re-activate: the mirror's share of the
                     // row expands next superstep (the sender counted the
                     // scatter, so that superstep is guaranteed to run).
@@ -289,6 +355,10 @@ impl<P: VertexProgram> Actor for BspActor<P> {
                     self.mirror_agg.recycle(items);
                 }
                 Mode::Iterate(_) => {
+                    if !self.mirror_agg.admit(from, b.seq()) {
+                        self.mirror_agg.recycle(b.into_items());
+                        return;
+                    }
                     // Expand inside the handler so the replicated traffic
                     // lands in this superstep (the barrier waits for
                     // network quiescence).
@@ -304,6 +374,7 @@ impl<P: VertexProgram> Actor for BspActor<P> {
                     for (dst, b) in self.agg.drain() {
                         ship(ctx, dst, b, SPACE_MASTER, EngineMsg::ToMaster);
                     }
+                    self.poll_reliable(ctx);
                 }
             },
             EngineMsg::Count(c) => {
@@ -327,8 +398,15 @@ impl<P: VertexProgram> Actor for BspActor<P> {
                             self.pending_activity += 1;
                         }
                     }
+                    self.ckpt_tick();
                     if ctx.locality() == 0 {
-                        debug_assert_eq!(self.counts_seen, ctx.n_localities());
+                        // A crashed locality's vote never arrives (the
+                        // runtime's barrier quorum excludes it), so the
+                        // exact-count invariant only holds fault-free.
+                        debug_assert!(
+                            self.crash_armed || self.counts_seen == ctx.n_localities(),
+                            "missing termination votes without a crash"
+                        );
                         let go = self.counts_sum > 0;
                         self.counts_sum = 0;
                         self.counts_seen = 0;
@@ -356,11 +434,35 @@ impl<P: VertexProgram> Actor for BspActor<P> {
                 let delta = self.step_all();
                 self.deltas.push(delta);
                 self.iter += 1;
+                if let Some(c) = &mut self.ckpt {
+                    let cursors = self.agg.seq_cursors();
+                    c.epoch_mark(&self.state[..self.shard.n_local()], u64::from(self.iter), cursors);
+                }
                 if self.iter < n {
                     self.iterate_round(ctx);
                 }
             }
         }
+    }
+
+    fn on_ack(
+        &mut self,
+        _ctx: &mut Ctx<Self::Msg>,
+        token: u64,
+        sent: SimTime,
+        delivered: SimTime,
+    ) {
+        let (tok, space) = untag_token(token);
+        match space {
+            SPACE_MASTER => self.agg.observe_ack(tok, sent, delivered),
+            SPACE_MIRROR => self.mirror_agg.observe_ack(tok, sent, delivered),
+            _ => unreachable!("heavy-space ack on the BSP engine"),
+        }
+    }
+
+    fn on_timer(&mut self, ctx: &mut Ctx<Self::Msg>) {
+        self.timer_at = None;
+        self.poll_reliable(ctx);
     }
 }
 
@@ -373,8 +475,94 @@ pub fn run_bsp<P: VertexProgram>(
     run_bsp_with_executor(prog, dist, cfg, None, ChunkPolicy::Sequential)
 }
 
+/// One BSP execution, no recovery (see
+/// [`run_async_core`](super::async_engine)'s note on why recovery cannot
+/// recurse through the public driver).
+fn run_bsp_core<P: VertexProgram>(
+    prog: &Arc<P>,
+    dist: &DistGraph,
+    cfg: &SimConfig,
+    executor: &Option<Arc<Executor>>,
+    chunk_policy: ChunkPolicy,
+) -> (Vec<BspActor<P>>, SimReport) {
+    let info = prog.info();
+    let reliable = cfg.reliability.is_acked();
+    let actors: Vec<BspActor<P>> = dist
+        .shards
+        .iter()
+        .map(|s| {
+            let state = init_states(&**prog, s);
+            let ckpt = seed_checkpoint(cfg, info.mode, s.n_local(), &state);
+            BspActor {
+                prog: Arc::clone(prog),
+                shard: Arc::new(s.clone()),
+                mode: info.mode,
+                state,
+                active: Vec::new(),
+                in_active: vec![false; s.n_rows()],
+                inbox: Vec::new(),
+                counts_seen: 0,
+                counts_sum: 0,
+                pending_activity: 0,
+                continue_flag: false,
+                phase: Phase::AfterWork,
+                agg: Aggregator::new(
+                    dist.owned_counts(),
+                    s.locality,
+                    SlotSpace::Master,
+                    FlushPolicy::Manual,
+                    &cfg.net,
+                    info.item_bytes,
+                    P::combine,
+                )
+                .with_reliability(reliable),
+                mirror_agg: Aggregator::new(
+                    dist.ghost_counts(),
+                    s.locality,
+                    SlotSpace::Mirror,
+                    FlushPolicy::Manual,
+                    &cfg.net,
+                    info.item_bytes,
+                    P::combine,
+                )
+                .with_reliability(reliable),
+                iter: 0,
+                deltas: Vec::new(),
+                executor: executor.clone(),
+                chunk_policy,
+                work: WorkStats::default(),
+                reliable,
+                crash_armed: cfg.fault.crash.is_some(),
+                timer_at: None,
+                ckpt,
+            }
+        })
+        .collect();
+    let (actors, mut report) = crate::amt::run_actors(cfg, actors);
+    for a in &actors {
+        report.agg.merge(a.agg.stats());
+        report.agg.merge(a.mirror_agg.stats());
+        report.agg_master.merge(a.agg.stats());
+        report.agg_mirror.merge(a.mirror_agg.stats());
+        report.work.merge(&a.work);
+        for (rtx, dedup, gu) in [a.agg.reliability_stats(), a.mirror_agg.reliability_stats()] {
+            report.fault.retransmits += rtx;
+            report.fault.dedup_hits += dedup;
+            report.fault.give_ups += gu;
+        }
+        if let Some(c) = &a.ckpt {
+            report.fault.checkpoints += c.taken();
+        }
+    }
+    report.partition = dist.partition_stats();
+    report.mem = dist.mem_stats();
+    (actors, report)
+}
+
 /// Run `prog` on the BSP engine with an intra-locality executor for the
-/// Iterate-mode update loop.
+/// Iterate-mode update loop. When the configured fault plan fail-stops a
+/// locality mid-run, the engine restores it from its last checkpoint and
+/// re-runs warm (see [`checkpoint`](super::checkpoint)).
 pub fn run_bsp_with_executor<P: VertexProgram>(
     prog: P,
     dist: &DistGraph,
@@ -382,59 +570,57 @@ pub fn run_bsp_with_executor<P: VertexProgram>(
     executor: Option<Arc<Executor>>,
     chunk_policy: ChunkPolicy,
 ) -> ProgramRun<P::State> {
-    let info = prog.info();
     let prog = Arc::new(prog);
-    let actors: Vec<BspActor<P>> = dist
-        .shards
-        .iter()
-        .map(|s| BspActor {
-            prog: Arc::clone(&prog),
-            shard: Arc::new(s.clone()),
-            mode: info.mode,
-            state: init_states(&*prog, s),
-            active: Vec::new(),
-            in_active: vec![false; s.n_rows()],
-            inbox: Vec::new(),
-            counts_seen: 0,
-            counts_sum: 0,
-            pending_activity: 0,
-            continue_flag: false,
-            phase: Phase::AfterWork,
-            agg: Aggregator::new(
-                dist.owned_counts(),
-                s.locality,
-                SlotSpace::Master,
-                FlushPolicy::Manual,
-                &cfg.net,
-                info.item_bytes,
-                P::combine,
-            ),
-            mirror_agg: Aggregator::new(
-                dist.ghost_counts(),
-                s.locality,
-                SlotSpace::Mirror,
-                FlushPolicy::Manual,
-                &cfg.net,
-                info.item_bytes,
-                P::combine,
-            ),
-            iter: 0,
-            deltas: Vec::new(),
-            executor: executor.clone(),
-            chunk_policy,
-            work: WorkStats::default(),
-        })
-        .collect();
-    let (actors, mut report) = crate::amt::run_actors(&cfg, actors);
-    for a in &actors {
-        report.agg.merge(a.agg.stats());
-        report.agg.merge(a.mirror_agg.stats());
-        report.agg_master.merge(a.agg.stats());
-        report.agg_mirror.merge(a.mirror_agg.stats());
-        report.work.merge(&a.work);
+    let (actors, mut report) = run_bsp_core(&prog, dist, &cfg, &executor, chunk_policy);
+    if let Some((crash_l, _)) = cfg.fault.crash {
+        if report.fault.crashes > 0 {
+            let mut rcfg = cfg.clone();
+            rcfg.fault.crash = None; // the restarted locality does not re-crash
+            let parts = || actors.iter().map(|a| (&*a.shard, &a.state[..], a.ckpt.as_ref()));
+            match prog.info().mode {
+                Mode::Converge => {
+                    let recovered = recovered_states(dist, parts(), crash_l, None);
+                    let warm = Arc::new(recovery_converge(&prog, recovered));
+                    let (ractors, rreport) =
+                        run_bsp_core(&warm, dist, &rcfg, &executor, chunk_policy);
+                    absorb_recovery(&mut report, &rreport);
+                    return finish(
+                        dist,
+                        ractors.iter().map(|a| (&*a.shard, &a.state[..], &a.deltas[..])),
+                        report,
+                    );
+                }
+                Mode::Iterate(n) => {
+                    let e = actors
+                        .iter()
+                        .find(|a| a.shard.locality == crash_l)
+                        .and_then(|a| a.ckpt.as_ref())
+                        .and_then(|c| c.latest())
+                        .map_or(0, |s| s.epoch);
+                    let recovered = recovered_states(dist, parts(), crash_l, Some(e));
+                    let remaining = n.saturating_sub(e as u32);
+                    let warm = Arc::new(recovery_iterate(&prog, recovered, remaining));
+                    let (ractors, rreport) =
+                        run_bsp_core(&warm, dist, &rcfg, &executor, chunk_policy);
+                    absorb_recovery(&mut report, &rreport);
+                    let mut run = finish(
+                        dist,
+                        ractors.iter().map(|a| (&*a.shard, &a.state[..], &a.deltas[..])),
+                        report,
+                    );
+                    let mut head = vec![0.0f32; e as usize];
+                    for a in &actors {
+                        for (i, d) in a.deltas.iter().take(e as usize).enumerate() {
+                            head[i] += d;
+                        }
+                    }
+                    head.extend(run.deltas.iter().copied());
+                    run.deltas = head;
+                    return run;
+                }
+            }
+        }
     }
-    report.partition = dist.partition_stats();
-    report.mem = dist.mem_stats();
     finish(
         dist,
         actors.iter().map(|a| (&*a.shard, &a.state[..], &a.deltas[..])),

@@ -1,0 +1,164 @@
+//! Per-locality checkpointing for crash/restart recovery.
+//!
+//! Each engine actor owns one [`Checkpoint`] when a crash is planned (or
+//! `checkpoint_every` is set) and snapshots its **owned** rows so a
+//! fail-stopped locality can be restored without recomputing the world:
+//!
+//! * **[`Mode::Converge`](super::Mode) engines** snapshot on an
+//!   event-count cadence ([`Checkpoint::tick`]): every `checkpoint_every`
+//!   handled events the latest consistent owned-row vector replaces the
+//!   previous snapshot (plus one seed snapshot at `on_start`, so a
+//!   crash before the first cadence tick still restores to the initial
+//!   states). Label-correcting programs are monotone, so *any* achieved
+//!   state vector is a valid restart point — re-seeding the frontier
+//!   from it re-floods forward to the exact fixpoint.
+//! * **[`Mode::Iterate`](super::Mode) engines** snapshot at superstep
+//!   boundaries ([`Checkpoint::epoch_mark`]) and keep the history:
+//!   value-iteration state is *not* monotone, so recovery rolls every
+//!   locality back to the crashed locality's last epoch and replays the
+//!   remaining supersteps ([`Checkpoint::at_or_before`]).
+//!
+//! Cadences are event/epoch-driven on purpose: a periodic *timer* would
+//! hold the runtime's quiescence detection open forever (a pending timer
+//! is in-flight work), so a timer-based checkpointer could never let a
+//! run terminate.
+//!
+//! Snapshots also record the reliable-delivery sequence cursors
+//! ([`Aggregator::seq_cursors`](crate::amt::Aggregator::seq_cursors)) —
+//! forensic state for the recovery report; the restarted run re-opens
+//! fresh sequence spaces rather than resuming old ones, since its peers'
+//! receive windows are rebuilt along with it.
+
+/// Snapshot cadence used when a crash is planned but `checkpoint_every`
+/// was left at 0 (events between Converge snapshots).
+pub const DEFAULT_CHECKPOINT_EVERY: u64 = 64;
+
+/// One captured restart point.
+#[derive(Debug, Clone)]
+pub struct Snapshot<S> {
+    /// Owned-row states at capture, in shard row order.
+    pub states: Vec<S>,
+    /// Barrier epoch (Iterate: superstep boundary) at capture.
+    pub epoch: u64,
+    /// Reliable-delivery `next_seq` cursors at capture (empty when
+    /// `reliability=none`); forensic, not replayed.
+    pub seq_cursors: Vec<u64>,
+}
+
+/// Per-locality snapshot store. See the module docs for the two cadences.
+#[derive(Debug, Clone)]
+pub struct Checkpoint<S> {
+    every: u64,
+    ticks: u64,
+    taken: u64,
+    /// Converge: the single most recent snapshot.
+    latest: Option<Snapshot<S>>,
+    /// Iterate: one snapshot per marked epoch, ascending.
+    history: Vec<Snapshot<S>>,
+}
+
+impl<S: Clone> Checkpoint<S> {
+    /// A store snapshotting every `every` handled events (Converge
+    /// cadence); `every == 0` selects [`DEFAULT_CHECKPOINT_EVERY`].
+    pub fn new(every: u64) -> Self {
+        Checkpoint {
+            every: if every == 0 { DEFAULT_CHECKPOINT_EVERY } else { every },
+            ticks: 0,
+            taken: 0,
+            latest: None,
+            history: Vec::new(),
+        }
+    }
+
+    /// Seed the store with the initial states (call from `on_start`), so
+    /// a crash before the first cadence tick still has a restart point.
+    pub fn seed(&mut self, states: &[S], seq_cursors: Vec<u64>) {
+        self.taken += 1;
+        self.latest = Some(Snapshot { states: states.to_vec(), epoch: 0, seq_cursors });
+    }
+
+    /// Converge cadence: count one handled event; when the cadence fires,
+    /// capture `states` as the new latest snapshot. Returns whether a
+    /// snapshot was taken (callers only build `states`' cursor vector
+    /// lazily if they need to — pass it every time, it is cheap).
+    pub fn tick(&mut self, states: &[S], epoch: u64, seq_cursors: Vec<u64>) -> bool {
+        self.ticks += 1;
+        if self.ticks < self.every {
+            return false;
+        }
+        self.ticks = 0;
+        self.taken += 1;
+        self.latest = Some(Snapshot { states: states.to_vec(), epoch, seq_cursors });
+        true
+    }
+
+    /// Iterate cadence: capture a superstep boundary into the history.
+    pub fn epoch_mark(&mut self, states: &[S], epoch: u64, seq_cursors: Vec<u64>) {
+        self.taken += 1;
+        self.history.push(Snapshot { states: states.to_vec(), epoch, seq_cursors });
+    }
+
+    /// Most recent snapshot (Converge restart point).
+    pub fn latest(&self) -> Option<&Snapshot<S>> {
+        self.latest.as_ref().or(self.history.last())
+    }
+
+    /// Latest history snapshot at or before `epoch` (Iterate rollback
+    /// point: every locality rolls to the *crashed* locality's epoch).
+    pub fn at_or_before(&self, epoch: u64) -> Option<&Snapshot<S>> {
+        self.history.iter().rev().find(|s| s.epoch <= epoch)
+    }
+
+    /// Snapshots captured so far (reported as
+    /// [`FaultStats::checkpoints`](crate::amt::FaultStats)).
+    pub fn taken(&self) -> u64 {
+        self.taken
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn converge_cadence_keeps_the_latest() {
+        let mut cp: Checkpoint<u32> = Checkpoint::new(3);
+        cp.seed(&[9, 9], Vec::new());
+        assert_eq!(cp.latest().unwrap().states, vec![9, 9]);
+        assert!(!cp.tick(&[1, 1], 0, Vec::new()));
+        assert!(!cp.tick(&[2, 2], 0, Vec::new()));
+        assert!(cp.tick(&[3, 3], 0, Vec::new()), "cadence fires on the 3rd event");
+        assert_eq!(cp.latest().unwrap().states, vec![3, 3]);
+        assert!(!cp.tick(&[4, 4], 1, Vec::new()), "counter reset");
+        assert_eq!(cp.taken(), 2);
+    }
+
+    #[test]
+    fn zero_cadence_selects_the_default() {
+        let mut cp: Checkpoint<u32> = Checkpoint::new(0);
+        for i in 0..DEFAULT_CHECKPOINT_EVERY - 1 {
+            assert!(!cp.tick(&[i as u32], 0, Vec::new()));
+        }
+        assert!(cp.tick(&[7], 0, Vec::new()));
+    }
+
+    #[test]
+    fn iterate_history_rolls_back_to_an_epoch() {
+        let mut cp: Checkpoint<f32> = Checkpoint::new(1);
+        cp.epoch_mark(&[0.0], 0, Vec::new());
+        cp.epoch_mark(&[1.0], 1, Vec::new());
+        cp.epoch_mark(&[2.0], 2, Vec::new());
+        assert_eq!(cp.at_or_before(1).unwrap().states, vec![1.0]);
+        assert_eq!(cp.at_or_before(5).unwrap().states, vec![2.0]);
+        assert_eq!(cp.at_or_before(2).unwrap().epoch, 2);
+        assert_eq!(cp.latest().unwrap().epoch, 2, "history feeds latest() too");
+        assert_eq!(cp.taken(), 3);
+    }
+
+    #[test]
+    fn seq_cursors_ride_along() {
+        let mut cp: Checkpoint<u32> = Checkpoint::new(1);
+        assert!(cp.tick(&[1], 0, vec![4, 0, 9]));
+        assert_eq!(cp.latest().unwrap().seq_cursors, vec![4, 0, 9]);
+    }
+}

@@ -44,13 +44,15 @@ use std::sync::Arc;
 
 use crate::amt::aggregate::{Aggregator, FlushPolicy, SlotSpace};
 use crate::amt::sim::{Actor, Ctx, LocalityId, SimConfig, SimTime};
-use crate::amt::WorkStats;
+use crate::amt::{SimReport, WorkStats};
 use crate::graph::{DistGraph, Shard};
 
+use super::checkpoint::Checkpoint;
+use super::incremental::recovery_converge;
 use super::program::{Mode, VertexProgram};
 use super::{
-    finish, init_states, ship, untag_token, EngineMsg, ProgramRun, SPACE_HEAVY, SPACE_MASTER,
-    SPACE_MIRROR,
+    absorb_recovery, finish, init_states, recovered_states, seed_checkpoint, ship, untag_token,
+    EngineMsg, ProgramRun, SPACE_HEAVY, SPACE_MASTER, SPACE_MIRROR,
 };
 
 /// `in_bucket` sentinel: the row is not queued in any bucket.
@@ -152,8 +154,15 @@ struct DeltaActor<P: VertexProgram> {
     /// unconditional), with a timer armed at the earliest deadline so the
     /// vote barrier waits buffered relaxations out.
     windowed: bool,
+    /// The combiners need a clock at flush points: time windows and/or
+    /// `reliability=acked` retransmit deadlines (implied by `windowed`).
+    clocked: bool,
+    /// A crash is planned this run, so partial vote rounds are expected.
+    crash_armed: bool,
     /// Earliest outstanding timer deadline (None = no timer armed).
     timer_at: Option<SimTime>,
+    /// Crash/restart snapshot store (see [`seed_checkpoint`]).
+    ckpt: Option<Checkpoint<P::State>>,
 }
 
 impl<P: VertexProgram> DeltaActor<P> {
@@ -261,6 +270,9 @@ impl<P: VertexProgram> DeltaActor<P> {
         // Unconditional drain before the vote barrier, under every policy
         // (time windows included): votes must see settled local state.
         self.drain(ctx);
+        if self.clocked {
+            self.poll_clocked(ctx);
+        }
         self.step = Step::AwaitVote;
         ctx.request_barrier();
     }
@@ -282,12 +294,21 @@ impl<P: VertexProgram> DeltaActor<P> {
     /// only and keep a timer armed at the earliest remaining deadline.
     /// Timers count as in-flight work, so the vote barrier cannot complete
     /// until every windowed buffer has shipped and been applied: every
-    /// locality still votes on complete post-round state.
+    /// locality still votes on complete post-round state. Reliable runs
+    /// poll under drain policies too — `poll` is where overdue unacked
+    /// envelopes retransmit.
     fn flush_boundary(&mut self, ctx: &mut Ctx<EngineMsg<P::Msg>>) {
         if !self.windowed {
             self.drain(ctx);
-            return;
         }
+        if self.clocked {
+            self.poll_clocked(ctx);
+        }
+    }
+
+    /// Poll all three combiners (window flushes + retransmits) and keep a
+    /// timer armed at the earliest remaining deadline.
+    fn poll_clocked(&mut self, ctx: &mut Ctx<EngineMsg<P::Msg>>) {
         let now = ctx.now();
         for (dst, b) in self.agg.poll(now) {
             ship(ctx, dst, b, SPACE_MASTER, EngineMsg::ToMaster);
@@ -314,6 +335,15 @@ impl<P: VertexProgram> DeltaActor<P> {
             }
         }
     }
+
+    /// Converge checkpoint cadence: one completed vote round.
+    fn ckpt_tick(&mut self) {
+        let n_owned = self.shard.n_local();
+        if let Some(c) = &mut self.ckpt {
+            let cursors = self.agg.seq_cursors();
+            c.tick(&self.state[..n_owned], 0, cursors);
+        }
+    }
 }
 
 impl<P: VertexProgram> Actor for DeltaActor<P> {
@@ -331,13 +361,18 @@ impl<P: VertexProgram> Actor for DeltaActor<P> {
         self.work_round(ctx);
     }
 
-    fn on_message(&mut self, ctx: &mut Ctx<Self::Msg>, _from: LocalityId, msg: Self::Msg) {
+    fn on_message(&mut self, ctx: &mut Ctx<Self::Msg>, from: LocalityId, msg: Self::Msg) {
         let n_owned = self.shard.n_local();
         match msg {
             // Relaxations apply eagerly: by the time the vote barrier
             // fires the network has drained, so every locality votes on
             // the complete post-round state.
             EngineMsg::ToMaster(b) => {
+                if !self.agg.admit(from, b.seq()) {
+                    self.agg.recycle(b.into_items());
+                    self.flush_boundary(ctx);
+                    return;
+                }
                 let mut items = b.into_items();
                 for (lv, m) in items.drain(..) {
                     let lv = lv as usize;
@@ -358,6 +393,11 @@ impl<P: VertexProgram> Actor for DeltaActor<P> {
             // cascade completes before the vote barrier (quiescence, which
             // also waits out any armed window timer).
             EngineMsg::ToMirror(b) => {
+                if !self.mirror_agg.admit(from, b.seq()) {
+                    self.mirror_agg.recycle(b.into_items());
+                    self.flush_boundary(ctx);
+                    return;
+                }
                 let mut items = b.into_items();
                 for (gi, m) in items.drain(..) {
                     let row = n_owned + gi as usize;
@@ -370,8 +410,14 @@ impl<P: VertexProgram> Actor for DeltaActor<P> {
                 self.flush_boundary(ctx);
             }
             // Heavy expansion on the master's behalf: exactly once per
-            // settlement, at the settled signal.
+            // settlement, at the settled signal. Duplicates are rejected
+            // by sequence — a replayed heavy expansion would relax twice.
             EngineMsg::ToMirrorHeavy(b) => {
+                if !self.heavy_agg.admit(from, b.seq()) {
+                    self.heavy_agg.recycle(b.into_items());
+                    self.flush_boundary(ctx);
+                    return;
+                }
                 let mut items = b.into_items();
                 for (gi, m) in items.drain(..) {
                     let row = n_owned + gi as usize;
@@ -418,6 +464,7 @@ impl<P: VertexProgram> Actor for DeltaActor<P> {
     fn on_barrier(&mut self, ctx: &mut Ctx<Self::Msg>, _epoch: u64) {
         match self.step {
             Step::AwaitVote => {
+                self.ckpt_tick();
                 // Drop stale bucket entries so emptiness votes are exact.
                 let in_bucket = &self.in_bucket;
                 self.buckets.retain(|&b, v| {
@@ -437,7 +484,12 @@ impl<P: VertexProgram> Actor for DeltaActor<P> {
             Step::AwaitDecision => {
                 // All P votes are in; every locality folds them with the
                 // same pure function and reaches the identical verdict.
-                debug_assert_eq!(self.votes_seen, ctx.n_localities());
+                // (A crashed locality's vote never arrives; survivors
+                // still agree because they fold the same subset.)
+                debug_assert!(
+                    self.crash_armed || self.votes_seen == ctx.n_localities(),
+                    "missing bucket votes without a crash"
+                );
                 let nonempty = self.votes_nonempty;
                 let min_b = self.votes_min;
                 self.votes_seen = 0;
@@ -466,10 +518,113 @@ impl<P: VertexProgram> Actor for DeltaActor<P> {
     }
 }
 
+/// One bucket-schedule execution, no recovery (see
+/// [`run_async_core`](super::async_engine)'s note on why recovery cannot
+/// recurse through the public driver).
+fn run_delta_core<P: VertexProgram>(
+    prog: &Arc<P>,
+    dist: &DistGraph,
+    delta: f32,
+    policy: FlushPolicy,
+    cfg: &SimConfig,
+) -> (Vec<DeltaActor<P>>, SimReport) {
+    let info = prog.info();
+    let reliable = cfg.reliability.is_acked();
+    let actors: Vec<DeltaActor<P>> = dist
+        .shards
+        .iter()
+        .map(|s| {
+            let state = init_states(&**prog, s);
+            let ckpt = seed_checkpoint(cfg, info.mode, s.n_local(), &state);
+            DeltaActor {
+                prog: Arc::clone(prog),
+                edges: SplitEdges::build(s, delta),
+                shard: Arc::new(s.clone()),
+                delta,
+                state,
+                buckets: BTreeMap::new(),
+                in_bucket: vec![NOT_QUEUED; s.n_local()],
+                req: Vec::new(),
+                in_req: vec![false; s.n_local()],
+                current: 0,
+                phase: LightHeavy::Light,
+                step: Step::AwaitVote,
+                votes_nonempty: false,
+                votes_min: None,
+                votes_seen: 0,
+                agg: Aggregator::new(
+                    dist.owned_counts(),
+                    s.locality,
+                    SlotSpace::Master,
+                    policy,
+                    &cfg.net,
+                    info.item_bytes,
+                    P::combine,
+                )
+                .with_reliability(reliable),
+                mirror_agg: Aggregator::new(
+                    dist.ghost_counts(),
+                    s.locality,
+                    SlotSpace::Mirror,
+                    policy,
+                    &cfg.net,
+                    info.item_bytes,
+                    P::combine,
+                )
+                .with_reliability(reliable),
+                heavy_agg: Aggregator::new(
+                    dist.ghost_counts(),
+                    s.locality,
+                    SlotSpace::Mirror,
+                    policy,
+                    &cfg.net,
+                    info.item_bytes,
+                    P::combine,
+                )
+                .with_reliability(reliable),
+                work: WorkStats::default(),
+                windowed: policy.time_window_us().is_some(),
+                clocked: policy.time_window_us().is_some() || reliable,
+                crash_armed: cfg.fault.crash.is_some(),
+                timer_at: None,
+                ckpt,
+            }
+        })
+        .collect();
+    let (actors, mut report) = crate::amt::run_actors(cfg, actors);
+    for a in &actors {
+        report.agg.merge(a.agg.stats());
+        report.agg.merge(a.mirror_agg.stats());
+        report.agg.merge(a.heavy_agg.stats());
+        report.agg_master.merge(a.agg.stats());
+        report.agg_mirror.merge(a.mirror_agg.stats());
+        report.agg_mirror.merge(a.heavy_agg.stats());
+        report.work.merge(&a.work);
+        for (rtx, dedup, gu) in [
+            a.agg.reliability_stats(),
+            a.mirror_agg.reliability_stats(),
+            a.heavy_agg.reliability_stats(),
+        ] {
+            report.fault.retransmits += rtx;
+            report.fault.dedup_hits += dedup;
+            report.fault.give_ups += gu;
+        }
+        if let Some(c) = &a.ckpt {
+            report.fault.checkpoints += c.taken();
+        }
+    }
+    report.partition = dist.partition_stats();
+    report.mem = dist.mem_stats();
+    (actors, report)
+}
+
 /// Run `prog` on the ordered bucket engine over `dist` with bucket width
 /// `delta` (must be positive; `f32::INFINITY` ≡ one bucket ≡ the BSP
 /// schedule). Requires [`ProgramInfo::ordered`](super::ProgramInfo);
-/// supports every partition scheme, including vertex cuts.
+/// supports every partition scheme, including vertex cuts. When the
+/// configured fault plan fail-stops a locality mid-run, the engine
+/// restores it from its last checkpoint and re-runs warm (see
+/// [`checkpoint`](super::checkpoint)).
 pub fn run_delta<P: VertexProgram>(
     prog: P,
     dist: &DistGraph,
@@ -485,70 +640,28 @@ pub fn run_delta<P: VertexProgram>(
         info.name
     );
     let prog = Arc::new(prog);
-    let actors: Vec<DeltaActor<P>> = dist
-        .shards
-        .iter()
-        .map(|s| DeltaActor {
-            prog: Arc::clone(&prog),
-            edges: SplitEdges::build(s, delta),
-            shard: Arc::new(s.clone()),
-            delta,
-            state: init_states(&*prog, s),
-            buckets: BTreeMap::new(),
-            in_bucket: vec![NOT_QUEUED; s.n_local()],
-            req: Vec::new(),
-            in_req: vec![false; s.n_local()],
-            current: 0,
-            phase: LightHeavy::Light,
-            step: Step::AwaitVote,
-            votes_nonempty: false,
-            votes_min: None,
-            votes_seen: 0,
-            agg: Aggregator::new(
-                dist.owned_counts(),
-                s.locality,
-                SlotSpace::Master,
-                policy,
-                &cfg.net,
-                info.item_bytes,
-                P::combine,
-            ),
-            mirror_agg: Aggregator::new(
-                dist.ghost_counts(),
-                s.locality,
-                SlotSpace::Mirror,
-                policy,
-                &cfg.net,
-                info.item_bytes,
-                P::combine,
-            ),
-            heavy_agg: Aggregator::new(
-                dist.ghost_counts(),
-                s.locality,
-                SlotSpace::Mirror,
-                policy,
-                &cfg.net,
-                info.item_bytes,
-                P::combine,
-            ),
-            work: WorkStats::default(),
-            windowed: policy.time_window_us().is_some(),
-            timer_at: None,
-        })
-        .collect();
-    let (actors, mut report) = crate::amt::run_actors(&cfg, actors);
-    for a in &actors {
-        report.agg.merge(a.agg.stats());
-        report.agg.merge(a.mirror_agg.stats());
-        report.agg.merge(a.heavy_agg.stats());
-        report.agg_master.merge(a.agg.stats());
-        report.agg_mirror.merge(a.mirror_agg.stats());
-        report.agg_mirror.merge(a.heavy_agg.stats());
-        report.work.merge(&a.work);
-    }
-    report.partition = dist.partition_stats();
-    report.mem = dist.mem_stats();
+    let (actors, mut report) = run_delta_core(&prog, dist, delta, policy, &cfg);
     static NO_DELTAS: [f32; 0] = [];
+    if let Some((crash_l, _)) = cfg.fault.crash {
+        if report.fault.crashes > 0 {
+            let mut rcfg = cfg.clone();
+            rcfg.fault.crash = None; // the restarted locality does not re-crash
+            let recovered = recovered_states(
+                dist,
+                actors.iter().map(|a| (&*a.shard, &a.state[..], a.ckpt.as_ref())),
+                crash_l,
+                None,
+            );
+            let warm = Arc::new(recovery_converge(&prog, recovered));
+            let (ractors, rreport) = run_delta_core(&warm, dist, delta, policy, &rcfg);
+            absorb_recovery(&mut report, &rreport);
+            return finish(
+                dist,
+                ractors.iter().map(|a| (&*a.shard, &a.state[..], &NO_DELTAS[..])),
+                report,
+            );
+        }
+    }
     finish(
         dist,
         actors.iter().map(|a| (&*a.shard, &a.state[..], &NO_DELTAS[..])),

@@ -28,6 +28,15 @@
 //! No engine changes are needed: the engines already apply seeds
 //! unconditionally and expand the seeded row, so [`Warm`] expresses
 //! everything through the existing [`VertexProgram`] surface.
+//!
+//! One escape hatch: when the deletion taint swallows more than
+//! [`SimConfig::taint_cap`] of the graph (hub deletions), the warm
+//! re-flood would redo essentially all the work *plus* the taint-closure
+//! walk, so [`rerun_incremental`] falls back to a cold from-scratch run
+//! on the mutated graph and reports it in
+//! [`UpdateStats::fallbacks`](crate::amt::UpdateStats).
+
+use std::sync::Arc;
 
 use crate::amt::{FlushPolicy, SimConfig, UpdateStats};
 use crate::graph::mutation::{UpdateBatch, UpdateOp};
@@ -68,12 +77,21 @@ impl Reconverge {
 /// (through [`VertexProgram::rewarm`]), tainted rows fall back to the
 /// cold `init`, and seeding is replaced by the re-convergence plan's
 /// reseed table. Everything else delegates.
-struct Warm<P: VertexProgram> {
-    inner: P,
+///
+/// The engines reuse this wrapper for crash recovery (see
+/// [`recovery_converge`] / [`recovery_iterate`]): a restarted run is
+/// just a warm re-run whose "previous states" are the survivors' live
+/// rows plus the crashed locality's last checkpoint.
+pub(crate) struct Warm<P: VertexProgram> {
+    pub(crate) inner: Arc<P>,
     /// Previous state per global vertex; `None` = tainted (cold restart).
-    prev: Vec<Option<P::State>>,
+    pub(crate) prev: Vec<Option<P::State>>,
     /// Reseed message per global vertex; `None` = starts inactive.
-    reseed: Vec<Option<P::Msg>>,
+    pub(crate) reseed: Vec<Option<P::Msg>>,
+    /// [`Mode::Iterate`] override: run this many supersteps instead of
+    /// the program's full count (crash recovery replays only the tail
+    /// after the rollback epoch). `None` delegates to `inner`.
+    pub(crate) iterations: Option<u32>,
 }
 
 impl<P: VertexProgram> VertexProgram for Warm<P> {
@@ -81,7 +99,12 @@ impl<P: VertexProgram> VertexProgram for Warm<P> {
     type Msg = P::Msg;
 
     fn info(&self) -> ProgramInfo {
-        self.inner.info()
+        let mut info = self.inner.info();
+        if let Some(n) = self.iterations {
+            debug_assert!(matches!(info.mode, Mode::Iterate(_)));
+            info.mode = Mode::Iterate(n);
+        }
+        info
     }
 
     fn init(&self, v: VertexId, out_degree: u32) -> P::State {
@@ -125,6 +148,51 @@ impl<P: VertexProgram> VertexProgram for Warm<P> {
 
     fn step_update(&self, state: &mut P::State) -> f32 {
         self.inner.step_update(state)
+    }
+}
+
+/// Build the [`Warm`] wrapper that restarts a crashed
+/// [`Mode::Converge`] run from recovered global states (survivors'
+/// live rows + the crashed locality's last checkpoint). Every row keeps
+/// its recovered value; the frontier is re-seeded from the program's
+/// original seeds plus every row that still has a value to offer —
+/// monotone re-flooding from an achievable state vector reaches the
+/// exact fixpoint, and the re-flood prunes itself wherever neighbors
+/// already hold the folded answer.
+pub(crate) fn recovery_converge<P: VertexProgram>(
+    prog: &Arc<P>,
+    recovered: Vec<P::State>,
+) -> Warm<P> {
+    let reseed = recovered
+        .iter()
+        .enumerate()
+        .map(|(v, s)| {
+            prog.seed(v as VertexId)
+                .or_else(|| prog.can_emit(s).then(|| prog.signal(s)))
+        })
+        .collect();
+    Warm {
+        inner: Arc::clone(prog),
+        prev: recovered.into_iter().map(Some).collect(),
+        reseed,
+        iterations: None,
+    }
+}
+
+/// Build the [`Warm`] wrapper that restarts a crashed
+/// [`Mode::Iterate`] run: every locality rolled back to the crashed
+/// locality's epoch, replaying only the `remaining` supersteps.
+pub(crate) fn recovery_iterate<P: VertexProgram>(
+    prog: &Arc<P>,
+    recovered: Vec<P::State>,
+    remaining: u32,
+) -> Warm<P> {
+    let n = recovered.len();
+    Warm {
+        inner: Arc::clone(prog),
+        prev: recovered.into_iter().map(Some).collect(),
+        reseed: vec![None; n],
+        iterations: Some(remaining),
     }
 }
 
@@ -257,13 +325,31 @@ pub fn rerun_incremental<P: VertexProgram>(
     stats.tainted = tainted.iter().filter(|&&t| t).count() as u64;
     stats.reseeded = reseed.iter().filter(|r| r.is_some()).count() as u64;
 
-    // Phase 4: the ordinary engine flood, warm-started.
-    let warm_prog = Warm { inner: prog, prev: warm, reseed };
-    let mut run = match how {
-        Reconverge::Async(policy) => super::run_async(warm_prog, dist, policy, cfg),
-        Reconverge::Bsp => super::run_bsp(warm_prog, dist, cfg),
-        Reconverge::Delta { delta, policy } => {
-            super::run_delta(warm_prog, dist, delta, policy, cfg)
+    // Phase 4: the ordinary engine flood, warm-started — unless the
+    // taint swallowed most of the graph. Past `taint_cap` (fraction of
+    // vertices), re-flooding the invalidated region costs as much as
+    // recomputing from scratch while still paying the taint-closure
+    // walk, so fall back to a cold run on the (already mutated) graph.
+    let fallback = converge
+        && cfg.taint_cap > 0.0
+        && stats.tainted as f64 > cfg.taint_cap * dist.n() as f64;
+    let mut run = if fallback {
+        stats.fallbacks = 1;
+        match how {
+            Reconverge::Async(policy) => super::run_async(prog, dist, policy, cfg),
+            Reconverge::Bsp => super::run_bsp(prog, dist, cfg),
+            Reconverge::Delta { delta, policy } => {
+                super::run_delta(prog, dist, delta, policy, cfg)
+            }
+        }
+    } else {
+        let warm_prog = Warm { inner: Arc::new(prog), prev: warm, reseed, iterations: None };
+        match how {
+            Reconverge::Async(policy) => super::run_async(warm_prog, dist, policy, cfg),
+            Reconverge::Bsp => super::run_bsp(warm_prog, dist, cfg),
+            Reconverge::Delta { delta, policy } => {
+                super::run_delta(warm_prog, dist, delta, policy, cfg)
+            }
         }
     };
     stats.reconverge_relaxations = run.report.work.relaxations;
@@ -410,6 +496,46 @@ mod tests {
             det(),
         );
         assert_eq!(run.states, vec![0, 0, 0, 3, 3, 3]);
+    }
+
+    #[test]
+    fn hub_delete_past_the_taint_cap_falls_back_to_full_recompute() {
+        // Severing the path right behind the root taints (almost) the
+        // whole graph — a warm re-flood would redo all the work *plus*
+        // the taint walk, so the cap must route to a cold run; raising
+        // the cap out of reach must keep the warm path. Both answers
+        // must match the from-scratch oracle.
+        let g = generators::path(24);
+        let mut batch = UpdateBatch::new();
+        batch.delete(1, 2);
+        batch.delete(2, 1);
+        let mut want = vec![u32::MAX; 24];
+        (want[0], want[1]) = (0, 1);
+
+        for (cap, expect_fallback) in [(0.5, 1u64), (1.0, 0u64)] {
+            let mut d = crate::graph::DistGraph::block(&g, 4);
+            let base = super::super::run_async(
+                bfs::BfsProgram { root: 0 },
+                &d,
+                FlushPolicy::Adaptive,
+                det(),
+            );
+            let mut cfg = det();
+            cfg.taint_cap = cap;
+            let run = rerun_incremental(
+                bfs::BfsProgram { root: 0 },
+                &mut d,
+                &base.states,
+                &batch,
+                Reconverge::Async(FlushPolicy::Adaptive),
+                cfg,
+            );
+            let u = run.report.update;
+            assert_eq!(u.fallbacks, expect_fallback, "cap {cap}: tainted {}", u.tainted);
+            assert_eq!(u.tainted, 22, "cap {cap}: everything behind the cut is tainted");
+            let levels: Vec<u32> = run.states.iter().map(|s| s.level).collect();
+            assert_eq!(levels, want, "cap {cap}");
+        }
     }
 
     #[test]

@@ -34,20 +34,24 @@
 
 pub mod async_engine;
 pub mod bsp_engine;
+pub mod checkpoint;
 pub mod delta_engine;
 pub mod incremental;
 pub mod program;
 
 pub use async_engine::run_async;
 pub use bsp_engine::{run_bsp, run_bsp_with_executor};
+pub use checkpoint::Checkpoint;
 pub use delta_engine::run_delta;
 pub use incremental::{rerun_incremental, Reconverge};
 pub use program::{Mode, ProgramInfo, VertexProgram};
 
 use crate::amt::aggregate::Batch;
-use crate::amt::sim::{Ctx, Message};
-use crate::amt::SimReport;
+use crate::amt::sim::{Ctx, Message, SimConfig};
+use crate::amt::{LocalityId, SimReport};
 use crate::graph::{DistGraph, Shard};
+
+use checkpoint::Checkpoint;
 
 /// Outcome of one engine run, before the algorithm driver projects its
 /// result type out of the per-vertex states.
@@ -123,6 +127,19 @@ impl<M> Message for EngineMsg<M> {
             _ => 1,
         }
     }
+
+    /// Control traffic (termination votes, superstep verdicts, bucket
+    /// status) is exempt from injected faults: the harness models a lossy
+    /// *data* plane, while these few tiny messages stand in for HPX's
+    /// reliable collectives. Losing one would wedge a protocol rather
+    /// than corrupt an answer, which is a different (and uninteresting)
+    /// failure mode — see ARCHITECTURE.md, "Fault model & recovery".
+    fn fault_immune(&self) -> bool {
+        matches!(
+            self,
+            EngineMsg::Count(_) | EngineMsg::Continue(_) | EngineMsg::Status { .. }
+        )
+    }
 }
 
 /// Trace-token tags: an engine holds several [`Aggregator`]s (master /
@@ -161,6 +178,95 @@ pub(crate) fn ship<M>(
         }
         None => ctx.send(dst, wrap(b)),
     }
+}
+
+/// Build one actor's [`Checkpoint`] store when the run needs one (a
+/// crash is planned, or an explicit `checkpoint_every` cadence is set),
+/// pre-seeded with the initial owned rows so a crash at any time — even
+/// before the first handler — has a restart point. `None` otherwise:
+/// fault-free runs pay nothing.
+pub(crate) fn seed_checkpoint<S: Clone>(
+    cfg: &SimConfig,
+    mode: Mode,
+    n_owned: usize,
+    states: &[S],
+) -> Option<Checkpoint<S>> {
+    if cfg.fault.crash.is_none() && cfg.checkpoint_every == 0 {
+        return None;
+    }
+    let mut c = Checkpoint::new(cfg.checkpoint_every);
+    match mode {
+        Mode::Converge => c.seed(&states[..n_owned], Vec::new()),
+        Mode::Iterate(_) => c.epoch_mark(&states[..n_owned], 0, Vec::new()),
+    }
+    Some(c)
+}
+
+/// Assemble the global restart state vector after a crash: the crashed
+/// locality contributes its last snapshot, survivors contribute their
+/// live owned rows (Converge — any achieved vector is a valid monotone
+/// restart point) or their snapshot at the rollback epoch (Iterate —
+/// every locality rolls back to `rollback_epoch`, the crashed
+/// locality's last completed superstep).
+pub(crate) fn recovered_states<'a, S: Clone + 'a>(
+    dist: &DistGraph,
+    parts: impl Iterator<Item = (&'a Shard, &'a [S], Option<&'a Checkpoint<S>>)>,
+    crash_l: LocalityId,
+    rollback_epoch: Option<u64>,
+) -> Vec<S> {
+    let mut global: Vec<Option<S>> = vec![None; dist.n()];
+    for (shard, live, ckpt) in parts {
+        let snapshot = if shard.locality == crash_l {
+            Some(
+                ckpt.expect("crash planned => checkpointing armed")
+                    .latest()
+                    .expect("checkpoint stores are pre-seeded"),
+            )
+        } else {
+            rollback_epoch.map(|e| {
+                ckpt.expect("crash planned => checkpointing armed")
+                    .at_or_before(e)
+                    .expect("epoch 0 is always marked")
+            })
+        };
+        let owned: &[S] = match snapshot {
+            Some(s) => &s.states[..],
+            None => &live[..shard.n_local()],
+        };
+        for (i, &gid) in shard.owned_ids.iter().enumerate() {
+            global[gid as usize] = Some(owned[i].clone());
+        }
+    }
+    global
+        .into_iter()
+        .map(|s| s.expect("vertex not owned by any shard"))
+        .collect()
+}
+
+/// Fold a post-crash recovery run's report into the primary run's:
+/// additive costs accumulate (the user paid for both runs), the fault
+/// block records the restore, and the recovery run's host wall-clock is
+/// kept separately as [`FaultStats::recovery_wall_us`](crate::amt::FaultStats).
+pub(crate) fn absorb_recovery(base: &mut SimReport, r: &SimReport) {
+    base.makespan_us += r.makespan_us;
+    base.wall_us += r.wall_us;
+    base.events += r.events;
+    base.barriers += r.barriers;
+    for (b, x) in base.busy_us.iter_mut().zip(&r.busy_us) {
+        *b += x;
+    }
+    base.net.merge(&r.net);
+    for (b, x) in base.per_locality_net.iter_mut().zip(&r.per_locality_net) {
+        b.merge(x);
+    }
+    base.agg.merge(&r.agg);
+    base.agg_master.merge(&r.agg_master);
+    base.agg_mirror.merge(&r.agg_mirror);
+    base.work.merge(&r.work);
+    base.fault.merge(&r.fault);
+    base.phase_wall_us.extend(r.phase_wall_us.iter().copied());
+    base.fault.restores += 1;
+    base.fault.recovery_wall_us = r.wall_us;
 }
 
 /// Initial per-row states for one shard: owned rows get their global

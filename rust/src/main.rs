@@ -19,6 +19,33 @@ fn main() {
     }
 }
 
+/// Print the `fault:` summary line when the run had anything to say —
+/// a fault plan or reliability was configured, or a counter is nonzero.
+/// Fault-free `reliability=none` runs stay silent (and all-zero by
+/// construction, which the line makes observable when forced on).
+fn print_fault(cfg: &Config, r: &nwgraph_hpx::amt::SimReport) {
+    use nwgraph_hpx::amt::Reliability;
+    if cfg.fault.is_none() && cfg.reliability == Reliability::None && r.fault.is_quiet() {
+        return;
+    }
+    let f = &r.fault;
+    println!(
+        "  fault[{}]: drops={} dups={} delays={} retransmits={} dedup={} give-ups={} \
+         crashes={} restores={} ckpts={} recovery-wall={}",
+        if cfg.reliability.is_acked() { "acked" } else { "none" },
+        f.injected_drops,
+        f.injected_dups,
+        f.injected_delays,
+        f.retransmits,
+        f.dedup_hits,
+        f.give_ups,
+        f.crashes,
+        f.restores,
+        f.checkpoints,
+        fmt_us(f.recovery_wall_us),
+    );
+}
+
 fn real_main() -> Result<()> {
     let args = Args::from_env()?;
     if args.command.is_empty() || args.command == "help" || args.switch("help") {
@@ -71,6 +98,7 @@ fn real_main() -> Result<()> {
                 mem.peak_builder_bytes as f64 / 1e6,
                 mem.build_ms,
             );
+            print_fault(&cfg, &res.report);
             if validate {
                 println!("validation: OK");
             }
@@ -122,6 +150,7 @@ fn real_main() -> Result<()> {
                 mem.peak_builder_bytes as f64 / 1e6,
                 mem.build_ms,
             );
+            print_fault(&cfg, &res.report);
             if validate {
                 println!("validation: OK");
             }
@@ -175,6 +204,7 @@ fn real_main() -> Result<()> {
                 mem.peak_builder_bytes as f64 / 1e6,
                 mem.build_ms,
             );
+            print_fault(&cfg, &res.report);
             if validate {
                 println!("validation: OK");
             }
@@ -213,6 +243,7 @@ fn real_main() -> Result<()> {
                 mem.peak_builder_bytes as f64 / 1e6,
                 mem.build_ms,
             );
+            print_fault(&cfg, &res.report);
             if validate {
                 println!("validation: OK");
             }
@@ -265,6 +296,7 @@ fn real_main() -> Result<()> {
                 mem.peak_builder_bytes as f64 / 1e6,
                 mem.build_ms,
             );
+            print_fault(&cfg, &res.report);
             if validate {
                 println!("validation: OK");
             }
@@ -304,6 +336,7 @@ fn real_main() -> Result<()> {
                 fmt_us(res.full.wall_us),
                 res.full.work.relaxations as f64 / u.reconverge_relaxations.max(1) as f64,
             );
+            print_fault(&cfg, &res.report);
             if validate {
                 println!("validation: OK");
             }
@@ -329,7 +362,7 @@ fn real_main() -> Result<()> {
             // each table prints (and persists) as soon as it completes.
             type Runner = Box<dyn Fn(&Config) -> Result<nwgraph_hpx::coordinator::Table>>;
             let large = args.switch("large");
-            let tables: [(&str, Runner); 10] = [
+            let tables: [(&str, Runner); 11] = [
                 ("a1_aggregation", Box::new(experiment::ablation_aggregation)),
                 ("a2_chunking", Box::new(experiment::ablation_adaptive_chunk)),
                 ("a4_flush_policy", Box::new(experiment::ablation_flush_policy)),
@@ -341,13 +374,14 @@ fn real_main() -> Result<()> {
                     experiment::ablation_scale_sweep(c, large)
                 })),
                 ("a10_incremental", Box::new(experiment::ablation_incremental)),
+                ("a11_fault_injection", Box::new(experiment::ablation_fault_injection)),
                 ("extensions", Box::new(experiment::extensions)),
             ];
             let json = args.switch("json");
             let out_dir = args.flag("out-dir").unwrap_or("bench_out");
-            // --only a4,a7,a8,a9,a10: run the prefix-matched subset (CI
-            // baselines grab A4+A7+A8+A9+A10 without paying for the whole
-            // suite).
+            // --only a4,a7,a8,a9,a10,a11: run the prefix-matched subset
+            // (CI baselines grab A4+A7+A8+A9+A10+A11 without paying for
+            // the whole suite).
             let only: Option<Vec<&str>> =
                 args.flag("only").map(|s| s.split(',').map(str::trim).collect());
             if let Some(sel) = &only {

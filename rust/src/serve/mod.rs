@@ -17,7 +17,12 @@
 //!
 //! Every path is exact: an oracle or cache hit never changes an answer,
 //! only its latency (the covered-vs-uncovered parity property in
-//! `tests/serve_props.rs`). Results carry
+//! `tests/serve_props.rs`). The one deliberate exception is **graceful
+//! degradation** under overload or faults: when a window misses its
+//! [`ServeParams::deadline_us`] (or a wave stays fault-suspect past its
+//! one bounded retry), the remaining queries answer with landmark
+//! triangle-inequality *bounds* — always flagged as [`Answer::Approx`],
+//! never silently passed off as exact. Results carry
 //! [`QueryStats`](crate::amt::QueryStats) in the run's
 //! [`SimReport`] — hits, waves, qps, and the wall-clock latency
 //! distribution (real end-to-end time under `runtime=threads`).
@@ -55,13 +60,26 @@ pub struct ServeParams {
     pub batch: usize,
     /// Master switch for the landmark oracle (tables + covered answers).
     pub oracle: bool,
+    /// Per-window latency deadline in host wall-clock µs (`0` = none).
+    /// Once a window has spent its deadline, no further exact waves are
+    /// launched for it; the remaining uncovered queries degrade to
+    /// landmark triangle-inequality bounds ([`Answer::Approx`]).
+    pub deadline_us: f64,
     /// Stream seed (query endpoints and kinds).
     pub seed: u64,
 }
 
 impl Default for ServeParams {
     fn default() -> Self {
-        ServeParams { queries: 1000, landmarks: 8, cache: 32, batch: 16, oracle: true, seed: 42 }
+        ServeParams {
+            queries: 1000,
+            landmarks: 8,
+            cache: 32,
+            batch: 16,
+            oracle: true,
+            deadline_us: 0.0,
+            seed: 42,
+        }
     }
 }
 
@@ -103,6 +121,19 @@ pub enum Answer {
     },
     /// Number of vertices strictly closer to `s` than `t`.
     Rank(u32),
+    /// Degraded answer: landmark triangle-inequality *bounds* on
+    /// `d(s, t)` instead of the exact value, returned when the query's
+    /// window missed its deadline (or its wave stayed fault-suspect past
+    /// the bounded retry). Always flagged — callers can tell an
+    /// approximation from an exact answer by the variant alone. `hi` is
+    /// `f32::INFINITY` when the pair is proven disconnected or no
+    /// landmark covers it.
+    Approx {
+        /// Lower bound on `d(s, t)`.
+        lo: f32,
+        /// Upper bound on `d(s, t)`.
+        hi: f32,
+    },
 }
 
 /// Outcome of one serve run.
@@ -212,6 +243,14 @@ fn answer_from_tree(q: &Query, tree: &SourceTree) -> Answer {
         },
         QueryKind::Rank => Answer::Rank(rank_of(&tree.dist, q.t)),
     }
+}
+
+/// Fault detector for one wave result: every source must see itself at
+/// distance zero. A source that lost its own seed (dropped envelopes
+/// under `reliability=none`, an unrecovered crash) fails this check and
+/// the wave is re-run once before its queries degrade.
+fn wave_sane(srcs: &[VertexId], dist: &[Vec<f32>]) -> bool {
+    srcs.iter().zip(dist).all(|(&s, d)| d[s as usize] == 0.0)
 }
 
 fn answer_from_oracle(oracle: &LandmarkOracle, q: &Query) -> Option<Answer> {
@@ -353,15 +392,34 @@ pub fn run(
         // the round's source set.
         let mut round_trees: HashMap<VertexId, Rc<SourceTree>> = HashMap::new();
         for src_chunk in uncovered.chunks(batch) {
-            let res = run_wave(g, dist_graph, src_chunk, policy, cfg.clone());
+            // Graceful degradation: launching another exact wave past the
+            // window's deadline would blow the latency target for every
+            // query queued behind it. Stop waving; the remainder degrades
+            // to landmark bounds below.
+            if params.deadline_us > 0.0
+                && round_t0.elapsed().as_secs_f64() * 1e6 >= params.deadline_us
+            {
+                break;
+            }
+            let mut res = run_wave(g, dist_graph, src_chunk, policy, cfg.clone());
             stats.waves += 1;
             merge_reports(&mut report, &res.report);
-            for ((&s, dist), parents) in
-                src_chunk.iter().zip(res.dist).zip(res.parents)
-            {
-                let tree = Rc::new(SourceTree { dist, parents });
-                cache.insert(s, tree.clone());
-                round_trees.insert(s, tree);
+            // Fault-suspect result: one bounded retry, then give up and
+            // let the chunk's queries degrade.
+            if !wave_sane(src_chunk, &res.dist) {
+                stats.retries += 1;
+                res = run_wave(g, dist_graph, src_chunk, policy, cfg.clone());
+                stats.waves += 1;
+                merge_reports(&mut report, &res.report);
+            }
+            if wave_sane(src_chunk, &res.dist) {
+                for ((&s, dist), parents) in
+                    src_chunk.iter().zip(res.dist).zip(res.parents)
+                {
+                    let tree = Rc::new(SourceTree { dist, parents });
+                    cache.insert(s, tree.clone());
+                    round_trees.insert(s, tree);
+                }
             }
             // Answer every pending query this wave unblocked, stamping
             // its latency now (arrival → answer, real wall-clock).
@@ -374,6 +432,19 @@ pub fn run(
                     answers[idx] = Some(answer_from_tree(q, tree));
                     latencies_us[idx] = round_t0.elapsed().as_secs_f64() * 1e6;
                 }
+            }
+        }
+        // Degraded path: whatever the deadline (or a twice-unsane wave)
+        // left unanswered gets landmark triangle-inequality bounds,
+        // flagged approximate. With no landmarks the bounds are the
+        // vacuous `[0, +inf)` — still honest, still flagged.
+        for &idx in &pending {
+            if answers[idx].is_none() {
+                let q = &queries[idx];
+                let (lo, hi) = oracle.bounds(q.s, q.t);
+                answers[idx] = Some(Answer::Approx { lo, hi });
+                latencies_us[idx] = round_t0.elapsed().as_secs_f64() * 1e6;
+                stats.degraded += 1;
             }
         }
     }
@@ -436,6 +507,22 @@ pub fn validate(g: &Csr, queries: &[Query], answers: &[Answer]) -> Result<()> {
                     }
                 }
             }
+            Answer::Approx { lo, hi } => {
+                // A degraded answer never claims exactness; its contract
+                // is the bound sandwich around the true distance.
+                anyhow::ensure!(lo <= hi, "query {q:?}: inverted bounds [{lo}, {hi}]");
+                if wd.is_finite() {
+                    anyhow::ensure!(
+                        *lo <= wd + 1e-2 && *hi >= wd - 1e-2,
+                        "query {q:?}: oracle {wd} outside bounds [{lo}, {hi}]"
+                    );
+                } else {
+                    anyhow::ensure!(
+                        hi.is_infinite(),
+                        "query {q:?}: finite upper bound {hi} on an unreachable pair"
+                    );
+                }
+            }
             Answer::Rank(got) => {
                 // Strict-less counting is float-sensitive near ties, so
                 // bracket the oracle rank with a ±5e-3 margin.
@@ -478,7 +565,52 @@ mod tests {
     }
 
     fn small_params() -> ServeParams {
-        ServeParams { queries: 64, landmarks: 4, cache: 8, batch: 4, oracle: true, seed: 7 }
+        ServeParams {
+            queries: 64,
+            landmarks: 4,
+            cache: 8,
+            batch: 4,
+            oracle: true,
+            deadline_us: 0.0,
+            seed: 7,
+        }
+    }
+
+    #[test]
+    fn missed_deadline_degrades_to_flagged_bounds() {
+        let g = serve_graph(7, 3);
+        let d = DistGraph::block(&g, 4);
+        // A one-femtosecond budget: every window is over-deadline before
+        // its first wave, so all uncovered queries must degrade.
+        let params = ServeParams { deadline_us: 1e-9, ..small_params() };
+        let res = run(&g, &d, &params, FlushPolicy::Adaptive, det());
+        // Degraded answers still validate: the bound sandwich is checked
+        // against the sequential Dijkstra oracle.
+        validate(&g, &res.queries, &res.answers).unwrap();
+        let q = res.report.query;
+        assert!(q.degraded > 0, "nothing degraded: {q:?}");
+        assert_eq!(
+            q.degraded as usize,
+            res.answers.iter().filter(|a| matches!(a, Answer::Approx { .. })).count(),
+            "degraded count must equal flagged answers"
+        );
+        // Covered queries stay exact even under the deadline: the oracle
+        // and cache answer before the budget check ever runs.
+        assert_eq!(q.oracle_hits + q.cache_hits + q.degraded, q.queries, "{q:?}");
+        // No deadline → no degradation on the same stream.
+        let exact = run(&g, &d, &small_params(), FlushPolicy::Adaptive, det());
+        assert_eq!(exact.report.query.degraded, 0);
+        assert!(exact.answers.iter().all(|a| !matches!(a, Answer::Approx { .. })));
+    }
+
+    #[test]
+    fn wave_sanity_detector() {
+        // Sources must see themselves at distance zero; anything else is
+        // fault-suspect and triggers the bounded retry.
+        assert!(wave_sane(&[0, 2], &[vec![0.0, 5.0, 9.0], vec![3.0, 1.0, 0.0]]));
+        assert!(!wave_sane(&[0], &[vec![0.5, 0.0]]));
+        assert!(!wave_sane(&[1], &[vec![0.0, f32::INFINITY]]));
+        assert!(wave_sane(&[], &[]));
     }
 
     #[test]
